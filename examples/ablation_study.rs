@@ -1,0 +1,66 @@
+//! §IV-B robustness ablations: the paper's sensitivity claims for
+//! Algorithm 2's hyper-parameters, plus the EASGD (related work [57])
+//! comparison.
+//!
+//! Paper claims reproduced:
+//! * "almost the same final test accuracy with p_init from 2 to 5";
+//!   p_init = 8 degrades 0.5% ~ 1.0%.
+//! * robust to K_s from 500 to 1500 (of 4000).
+//! * the 0.7/1.3 thresholds need only be "slightly" off 1 — we sweep the
+//!   band width as the design-choice ablation DESIGN.md §4 calls out.
+//!
+//! ```text
+//! cargo run --release --example ablation_study -- [--quick] [--out results]
+//! ```
+
+use adpsgd::cli::Args;
+use adpsgd::figures::ablation::ablation;
+use adpsgd::figures::{cifar_base, googlenet_role, Scale, Sink};
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env(&["quick"])?;
+    let scale = Scale::from_flag(args.flag("quick"));
+    let sink = Sink::new(args.get("out"), false);
+
+    let mut base = cifar_base(scale);
+    googlenet_role(&mut base, scale);
+    let a = ablation(&base, scale, &sink)?;
+
+    println!("shape checks:");
+    let small: Vec<f64> =
+        a.p_init.iter().filter(|r| !r.label.contains('8')).map(|r| r.best_acc).collect();
+    let spread =
+        small.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            - small.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!(
+        "  p_init 2..5 accuracies within a point:  spread {:.4} -> {}",
+        spread,
+        ok(spread < 0.02)
+    );
+    let ks_spread = a.k_s.iter().map(|r| r.best_acc).fold(f64::NEG_INFINITY, f64::max)
+        - a.k_s.iter().map(|r| r.best_acc).fold(f64::INFINITY, f64::min);
+    println!(
+        "  K_s sweep accuracies within a point:    spread {:.4} -> {}",
+        ks_spread,
+        ok(ks_spread < 0.02)
+    );
+    let adp = a.easgd.last().unwrap();
+    let best_easgd =
+        a.easgd[..a.easgd.len() - 1].iter().map(|r| r.best_acc).fold(f64::NEG_INFINITY, f64::max);
+    println!(
+        "  ADPSGD >= best EASGD accuracy:          {:.4} vs {:.4} -> {}",
+        adp.best_acc,
+        best_easgd,
+        ok(adp.best_acc >= best_easgd - 0.01)
+    );
+    Ok(())
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "OK"
+    } else {
+        "MISMATCH"
+    }
+}

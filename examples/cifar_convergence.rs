@@ -1,0 +1,92 @@
+//! Figures 4, 5 + Table I: the CIFAR-geometry convergence comparison of
+//! FULLSGD / CPSGD(p=8) / ADPSGD / QSGD on the compute-heavy
+//! (GoogLeNet-role) and communication-heavy (VGG16-role) workloads,
+//! plus the 4c/5c computation/communication split at both bandwidths.
+//!
+//! ```text
+//! cargo run --release --example cifar_convergence -- [--quick] [--out results]
+//! cargo run --release --example cifar_convergence -- --table1 [--quick]
+//! ```
+
+use adpsgd::cli::Args;
+use adpsgd::figures::convergence::{convergence, time_split, Role};
+use adpsgd::figures::{cifar_base, googlenet_role, table1::table1, Scale, Sink};
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env(&["quick", "table1"])?;
+    let scale = Scale::from_flag(args.flag("quick"));
+    let sink = Sink::new(args.get("out"), false);
+
+    if args.flag("table1") {
+        let mut base = cifar_base(scale);
+        googlenet_role(&mut base, scale);
+        let t = table1(&base, scale, &sink)?;
+        let adp = t.get("ADPSGD");
+        let cps = t.get("CPSGD");
+        let small = t.get("SMALL_BATCH");
+        println!("shape checks:");
+        println!(
+            "  ADPSGD >= CPSGD best-sweep acc:   {:.4} vs {:.4} -> {}",
+            adp.best_acc,
+            cps.best_acc,
+            ok(adp.best_acc >= cps.best_acc - 0.01)
+        );
+        println!(
+            "  SMALL_BATCH is the ceiling:       {:.4} -> {}",
+            small.best_acc,
+            ok(small.best_acc + 0.02 >= adp.best_acc)
+        );
+        return Ok(());
+    }
+
+    for role in [Role::GoogLeNet, Role::Vgg16] {
+        let conv = convergence(role, scale, &sink)?;
+        let rows = time_split(&conv, &sink);
+
+        let full = conv.fullsgd();
+        let adp = conv.adpsgd();
+        let cps = conv.cpsgd();
+        let qsgd = conv.qsgd();
+        println!("shape checks ({}):", role.figure());
+        println!(
+            "  ADPSGD loss <= CPSGD loss:        {:.4} vs {:.4} -> {}",
+            adp.final_train_loss,
+            cps.final_train_loss,
+            ok(adp.final_train_loss <= cps.final_train_loss * 1.1)
+        );
+        println!(
+            "  ADPSGD acc >= CPSGD acc:          {:.4} vs {:.4} -> {}",
+            adp.best_eval_acc,
+            cps.best_eval_acc,
+            ok(adp.best_eval_acc >= cps.best_eval_acc - 0.01)
+        );
+        println!(
+            "  ADPSGD wire ~ 1/2 of QSGD:        {:.1} MB vs {:.1} MB -> {}",
+            adp.ledger.total_wire_bytes() as f64 / 1e6,
+            qsgd.ledger.total_wire_bytes() as f64 / 1e6,
+            ok(adp.ledger.total_wire_bytes() < qsgd.ledger.total_wire_bytes())
+        );
+        let (a100, a10) = (rows[2].comm_100g, rows[2].comm_10g);
+        let (f100, f10) = (rows[0].comm_100g, rows[0].comm_10g);
+        println!(
+            "  ADPSGD comm < FULLSGD comm:       @100G {:.2}s<{:.2}s, @10G {:.2}s<{:.2}s -> {}",
+            a100,
+            f100,
+            a10,
+            f10,
+            ok(a100 < f100 && a10 < f10)
+        );
+        let _ = full;
+        println!();
+    }
+    Ok(())
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "OK"
+    } else {
+        "MISMATCH"
+    }
+}

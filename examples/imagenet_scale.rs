@@ -1,0 +1,61 @@
+//! Figures 7 + 8: the ImageNet-geometry experiments — gradual-warmup LR
+//! schedule (linear-scaling rule), periodic averaging engaged only after
+//! the warmup epochs, K_s = 0.2K — on the ResNet50-role (compute-heavy)
+//! and AlexNet-role (comm-heavy) workloads.
+//!
+//! ```text
+//! cargo run --release --example imagenet_scale -- [--quick] [--out results]
+//! ```
+
+use adpsgd::cli::Args;
+use adpsgd::figures::convergence::{convergence, time_split, Role};
+use adpsgd::figures::{Scale, Sink};
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env(&["quick"])?;
+    let scale = Scale::from_flag(args.flag("quick"));
+    let sink = Sink::new(args.get("out"), false);
+
+    for role in [Role::ResNet50, Role::AlexNet] {
+        let conv = convergence(role, scale, &sink)?;
+        let rows = time_split(&conv, &sink);
+
+        let adp = conv.adpsgd();
+        let cps = conv.cpsgd();
+
+        // paper headline: 1.27x (ResNet50) / up to 1.95x (10G) speedups
+        let s100 = (rows[0].compute_secs + rows[0].comm_100g)
+            / (rows[2].compute_secs + rows[2].comm_100g).max(1e-12);
+        let s10 = (rows[0].compute_secs + rows[0].comm_10g)
+            / (rows[2].compute_secs + rows[2].comm_10g).max(1e-12);
+        println!("shape checks ({}):", role.figure());
+        println!(
+            "  ADPSGD speedup vs FULLSGD:        {:.2}x @100G, {:.2}x @10G -> {}",
+            s100,
+            s10,
+            ok(s100 > 1.0 && s10 > s100)
+        );
+        println!(
+            "  ADPSGD acc >= CPSGD acc:          {:.4} vs {:.4}          -> {}",
+            adp.best_eval_acc,
+            cps.best_eval_acc,
+            ok(adp.best_eval_acc >= cps.best_eval_acc - 0.01)
+        );
+        println!(
+            "  warmup keeps p̄ moderate:          p̄ = {:.2}               -> {}",
+            adp.avg_period,
+            ok(adp.avg_period > 1.0)
+        );
+        println!();
+    }
+    Ok(())
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "OK"
+    } else {
+        "MISMATCH"
+    }
+}

@@ -1,0 +1,127 @@
+"""AOT pipeline: lower every model preset's surface to HLO text artifacts.
+
+This is the ONLY place python runs in the system; after `make artifacts`
+the rust binary is self-contained.  Interchange is HLO **text**, not a
+serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (what the published `xla` 0.1.6
+crate links) rejects (`proto.id() <= INT_MAX`); the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (default ../artifacts):
+    <preset>.<fn>.hlo.txt   for fn in init/step/grad/apply/eval/sq_dev/qsgd
+    manifest.json           shapes + param counts the rust runtime needs
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--presets a,b]
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_zoo
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side always unwraps a tuple, regardless of arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_model(m: model_zoo.Model):
+    """Returns {fn_name: (hlo_text, [arg_specs])}."""
+    w = m.w_spec()
+    x = m.x_spec()
+    y = m.y_spec()
+    f32 = jnp.float32
+    i32 = jnp.int32
+    scalar_f = jax.ShapeDtypeStruct((), f32)
+    scalar_i = jax.ShapeDtypeStruct((), i32)
+
+    entries = {
+        "init": (m.init, [scalar_i]),
+        "step": (m.step, [w, w, x, y, scalar_f]),
+        "grad": (m.grad, [w, x, y]),
+        "apply": (m.apply, [w, w, w, scalar_f]),
+        "eval": (m.eval, [w, x, y]),
+        "sq_dev": (m.sq_dev, [w, w]),
+        "qsgd": (m.qsgd, [w, w]),
+    }
+    out = {}
+    for name, (fn, specs) in entries.items():
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        out[name] = (text, specs)
+        print(
+            f"    {name:7s} {len(text)/1024:9.1f} KiB  {time.time()-t0:6.2f}s",
+            file=sys.stderr,
+        )
+    return out
+
+
+def build(out_dir: str, presets):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "hlo": "text", "models": {}}
+    for pname in presets:
+        m = model_zoo.get(pname)
+        print(f"[aot] lowering {pname} (P={m.n_params})", file=sys.stderr)
+        lowered = lower_model(m)
+        files = {}
+        fn_specs = {}
+        for fn_name, (text, specs) in lowered.items():
+            fname = f"{pname}.{fn_name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            files[fn_name] = fname
+            fn_specs[fn_name] = [_spec_json(s) for s in specs]
+        entry = {
+            "kind": m.kind,
+            "param_count": m.n_params,
+            "momentum": m.momentum,
+            "qsgd_levels": m.qsgd_levels,
+            "batch": m.cfg.batch,
+            "x": _spec_json(m.x_spec()),
+            "y": _spec_json(m.y_spec()),
+            "files": files,
+            "args": fn_specs,
+        }
+        if m.kind == "lm":
+            entry["vocab"] = m.cfg.vocab
+            entry["seq"] = m.cfg.seq
+        else:
+            entry["classes"] = m.cfg.classes
+            entry["input_dim"] = m.x_spec().shape[1]
+        manifest["models"][pname] = entry
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote manifest with {len(manifest['models'])} models", file=sys.stderr)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--presets",
+        default=",".join(model_zoo.PRESETS),
+        help="comma-separated preset names",
+    )
+    args = ap.parse_args()
+    build(args.out, [p for p in args.presets.split(",") if p])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Blocked Pallas layernorm — the transformer's per-token normalization.
+
+TPU mapping (DESIGN.md §2): one grid step normalizes a (block_rows, d)
+tile held in VMEM; the feature dimension stays resident so mean/var are
+single-pass row reductions (the CUDA version does this with a warp
+shuffle tree; on TPU the VPU reduces lanes directly).  Forward *and*
+backward run through Pallas kernels via a custom VJP, so the layernorm
+sits on the AOT hot path in both directions — only the (cheap, batch-
+reduction) parameter gradients fall back to jnp sums.
+
+interpret=True everywhere: see matmul.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+EPS = 1e-5
+
+
+def _ln_fwd_kernel(x_ref, s_ref, b_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    xhat = (x - mu) * jax.lax.rsqrt(var + EPS)
+    o_ref[...] = xhat * s_ref[...] + b_ref[...]
+
+
+def _ln_bwd_kernel(x_ref, s_ref, g_ref, dx_ref):
+    """dx for layernorm: recomputes mu/var from x (cheaper than saving
+    them: one extra VPU pass vs. two more HBM streams)."""
+    x = x_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    s = s_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + EPS)
+    xhat = (x - mu) * inv
+    gs = g * s
+    m1 = jnp.mean(gs, axis=-1, keepdims=True)
+    m2 = jnp.mean(gs * xhat, axis=-1, keepdims=True)
+    dx_ref[...] = inv * (gs - m1 - xhat * m2)
+
+
+def _pick_rows(n, pref):
+    if n >= pref:
+        return pref
+    b = 1
+    while b * 2 <= n:
+        b *= 2
+    return b
+
+
+def _pad_rows(x, rows):
+    pr = rows - x.shape[0]
+    if pr == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def _ln_fwd(x, s, b, block_rows=DEFAULT_BLOCK_ROWS):
+    n, d = x.shape
+    br = _pick_rows(n, block_rows)
+    np_ = (n + br - 1) // br * br
+    x_p = _pad_rows(x.astype(jnp.float32), np_)
+    out = pl.pallas_call(
+        _ln_fwd_kernel,
+        grid=(np_ // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, d), jnp.float32),
+        interpret=True,
+    )(x_p, s.astype(jnp.float32), b.astype(jnp.float32))
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def _ln_bwd_dx(x, s, g, block_rows=DEFAULT_BLOCK_ROWS):
+    n, d = x.shape
+    br = _pick_rows(n, block_rows)
+    np_ = (n + br - 1) // br * br
+    x_p = _pad_rows(x.astype(jnp.float32), np_)
+    g_p = _pad_rows(g.astype(jnp.float32), np_)
+    dx = pl.pallas_call(
+        _ln_bwd_kernel,
+        grid=(np_ // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, d), jnp.float32),
+        interpret=True,
+    )(x_p, s.astype(jnp.float32), g_p)
+    return dx[:n]
+
+
+@jax.custom_vjp
+def layernorm(x, s, b):
+    """y = (x - mean) * rsqrt(var + eps) * s + b over the last axis.
+
+    `x: [rows, d]`, `s/b: [d]`.  Differentiable; fwd and dx-bwd are
+    Pallas kernels, parameter grads are jnp batch reductions.
+    """
+    return _ln_fwd(x, s, b)
+
+
+def _layernorm_fwd(x, s, b):
+    return _ln_fwd(x, s, b), (x, s)
+
+
+def _layernorm_bwd(res, g):
+    x, s = res
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    xhat = (xf - mu) * jax.lax.rsqrt(var + EPS)
+    gf = g.astype(jnp.float32)
+    ds = jnp.sum(gf * xhat, axis=0)
+    db = jnp.sum(gf, axis=0)
+    dx = _ln_bwd_dx(x, s, g)
+    return dx.astype(x.dtype), ds.astype(s.dtype), db.astype(s.dtype)
+
+
+layernorm.defvjp(_layernorm_fwd, _layernorm_bwd)

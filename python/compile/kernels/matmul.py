@@ -1,0 +1,124 @@
+"""Blocked Pallas matmul — the MXU-shaped compute hot-spot of the L2 models.
+
+TPU mapping of the paper's GPU kernels (DESIGN.md §2): where the CUDA
+implementation tiles for shared memory per threadblock, we express the
+HBM↔VMEM schedule with a (M/bm, N/bn, K/bk) grid and BlockSpecs.  The
+MXU wants 128×128 tiles; the K loop is the innermost grid dimension and
+accumulates into the f32 output block (classic systolic-array feeding
+pattern).
+
+All pallas_call sites use interpret=True: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode lowers to plain HLO that
+the rust runtime runs.  Block-shape choices still encode the real-TPU
+schedule; §Perf estimates VMEM/MXU numbers from them.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile. For small problems we shrink to the problem size so the
+# interpret-mode kernel does not waste work on padding.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (bm, bn) output tile; grid dim 2 walks the K blocks."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def _pick_block(dim, pref):
+    """Largest power-of-two tile <= pref that keeps padding small."""
+    if dim >= pref:
+        return pref
+    b = 1
+    while b * 2 <= dim:
+        b *= 2
+    return b
+
+
+def _pad_to(x, rows, cols):
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a, b, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """C[M,N] = A[M,K] @ B[K,N] via the blocked Pallas kernel.
+
+    Accepts arbitrary (M, K, N); pads up to tile multiples and slices the
+    result back (padding contributes zeros to the accumulation).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    mp = (m + bm - 1) // bm * bm
+    np_ = (n + bn - 1) // bn * bn
+    kp = (k + bk - 1) // bk * bk
+    a_p = _pad_to(a.astype(jnp.float32), mp, kp)
+    b_p = _pad_to(b.astype(jnp.float32), kp, np_)
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+# Pallas kernels have no AD rule; give the matmul a custom VJP whose
+# backward pass is *also* the Pallas kernel, so both fwd and bwd of every
+# dense layer in the L2 models run through the blocked kernel.
+@jax.custom_vjp
+def matmul_ad(a, b):
+    return matmul(a, b)
+
+
+def _matmul_ad_fwd(a, b):
+    return matmul(a, b), (a, b)
+
+
+def _matmul_ad_bwd(res, g):
+    a, b = res
+    da = matmul(g, b.T)
+    db = matmul(a.T, g)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+matmul_ad.defvjp(_matmul_ad_fwd, _matmul_ad_bwd)
+
+
+def linear(x, w, b=None):
+    """Dense layer y = x @ w (+ b) routed through the Pallas matmul
+    (differentiable: custom VJP above).
+
+    The L2 models call this for every projection so the kernel sits on the
+    AOT-compiled hot path — forward and backward.
+    """
+    y = matmul_ad(x, w)
+    if b is not None:
+        y = y + b
+    return y

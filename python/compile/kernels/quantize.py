@@ -1,0 +1,60 @@
+"""QSGD stochastic quantize+dequantize as a blocked Pallas kernel.
+
+The paper's comparator (§IV, QSGD with 8-bit levels).  The convergence-
+relevant part of QSGD is the *information loss* of the quantizer; byte
+accounting (4x compression at 8 bits, parameter-server routing) lives in
+the rust `quant`/`netsim` modules.  This kernel applies
+
+    x_hat = sign(x) * ||bucket||_2 * floor(|x|/||bucket||_2 * s + u) / s
+
+bucket-by-bucket, with the caller supplying u ~ U[0,1) (randomness stays
+outside the kernel so the AOT artifact is a pure function and the rust
+side controls seeds).
+
+Bucket == block: each grid program owns exactly one quantization bucket,
+computes its 2-norm in VMEM and rounds in the same pass — one HBM read
+of x and u, one write of x_hat.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BUCKET = 512
+
+
+def _qsgd_kernel(x_ref, u_ref, o_ref, *, s):
+    x = x_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(x * x))
+    scaled = jnp.where(norm > 0.0, jnp.abs(x) / norm * s, 0.0)
+    level = jnp.floor(scaled + u)
+    o_ref[...] = jnp.sign(x) * norm * level / s
+
+
+@functools.partial(jax.jit, static_argnames=("num_levels", "bucket_size"))
+def qsgd_quantize_dequant(x, u, num_levels=255, bucket_size=DEFAULT_BUCKET):
+    """Quantize-dequantize flat f32[P] with s=num_levels per bucket."""
+    (p,) = x.shape
+    assert u.shape == (p,)
+    bs = min(bucket_size, p)
+    pp = (p + bs - 1) // bs * bs
+    pad = pp - p
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        u = jnp.pad(u, (0, pad))
+
+    out = pl.pallas_call(
+        functools.partial(_qsgd_kernel, s=float(num_levels)),
+        grid=(pp // bs,),
+        in_specs=[
+            pl.BlockSpec((bs,), lambda i: (i,)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pp,), jnp.float32),
+        interpret=True,
+    )(x, u)
+    return out[:p]

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function here is the *definition of correctness* for the matching
+Pallas kernel: pytest sweeps shapes/dtypes with hypothesis and asserts
+allclose between kernel and oracle. Keep these boring and obviously
+right — no tiling, no tricks.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(a, b):
+    """C = A @ B with f32 accumulation."""
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def fused_momentum_update(w, m, g, lr, mu):
+    """Momentum-SGD fused update (PyTorch convention, as the paper uses):
+
+        m' = mu * m + g
+        w' = w - lr * m'
+    """
+    m_new = mu * m + g
+    w_new = w - lr * m_new
+    return w_new, m_new
+
+
+def sq_deviation(a, b):
+    """||a - b||^2 as a scalar f32."""
+    d = (a - b).astype(jnp.float32)
+    return jnp.sum(d * d)
+
+
+def layernorm(x, s, b, eps=1e-5):
+    """y = (x - mean) * rsqrt(var + eps) * s + b over the last axis."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    return (xf - mu) * (1.0 / jnp.sqrt(var + eps)) * s + b
+
+
+def qsgd_quantize_dequant(x, u, num_levels, bucket_size):
+    """QSGD (Alistarh et al. 2017) stochastic quantization, fused with
+    dequantization (models the information loss of transmitting the
+    quantized gradient; byte accounting lives in the rust `quant` module).
+
+    Per bucket of `bucket_size` elements:
+        norm  = ||x_bucket||_2
+        level = floor(|x|/norm * s + u)   (u ~ U[0,1) supplied by caller)
+        x_hat = sign(x) * norm * level / s
+    Buckets with zero norm dequantize to zero.
+    """
+    s = float(num_levels)
+    n = x.shape[0]
+    assert n % bucket_size == 0, "caller pads to a bucket multiple"
+    xb = x.reshape(-1, bucket_size).astype(jnp.float32)
+    ub = u.reshape(-1, bucket_size).astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(xb * xb, axis=1, keepdims=True))
+    scaled = jnp.where(norm > 0.0, jnp.abs(xb) / norm * s, 0.0)
+    level = jnp.floor(scaled + ub)
+    xq = jnp.sign(xb) * norm * level / s
+    return xq.reshape(n)

@@ -1,0 +1,56 @@
+"""Blocked squared-deviation reduction — the S_k statistic of Algorithm 2.
+
+After each synchronization the coordinator needs
+
+    S_k = (1/n) * sum_i || w_bar - w_i ||^2
+
+per node, i.e. a full-vector ||a - b||^2.  The GPU original is a grid
+reduction with shared-memory trees; the TPU restatement is a 1-D grid
+whose programs each reduce one VMEM-resident tile and accumulate into a
+single (1, 1) output block (the output BlockSpec maps every program to
+block (0, 0), so the accumulation is sequential over the grid — the
+standard Pallas reduction idiom).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8192
+
+
+def _sq_dev_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    d = a_ref[...].astype(jnp.float32) - b_ref[...].astype(jnp.float32)
+    o_ref[0, 0] += jnp.sum(d * d)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def sq_deviation(a, b, block=BLOCK):
+    """||a - b||^2 -> scalar f32, via the blocked Pallas reduction."""
+    (p,) = a.shape
+    assert b.shape == (p,)
+    blk = min(block, p)
+    pp = (p + blk - 1) // blk * blk
+    pad = pp - p
+    if pad:  # zero padding contributes 0 to the sum
+        a = jnp.pad(a, (0, pad))
+        b = jnp.pad(b, (0, pad))
+
+    out = pl.pallas_call(
+        _sq_dev_kernel,
+        grid=(pp // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return out[0, 0]

@@ -1,0 +1,405 @@
+"""Layer-2: the model zoo, written as pure functions over a FLAT f32[P]
+parameter vector.
+
+The coordinator (rust L3) never sees parameter structure: a node's state
+is (w: f32[P], m: f32[P]) and every model exposes the same AOT surface,
+so periodic parameter averaging is elementwise vector math on the rust
+side — exactly the algebra of the paper's Algorithms 1/2.
+
+AOT surface per model preset (lowered by aot.py):
+
+    init (seed: i32[])                          -> w0: f32[P]
+    step (w, m, x, y, lr)                       -> (w', m', loss)   local SGD step
+    grad (w, x, y)                              -> (g, loss)        for QSGD/FULLSGD grad exchange
+    apply(w, m, g, lr)                          -> (w', m')         fused momentum update
+    eval (w, x, y)                              -> (loss, acc)
+    sq_dev(a: f32[P], b: f32[P])                -> f32[]            S_k statistic
+    qsgd (g: f32[P], u: f32[P])                 -> f32[P]           quantize-dequant
+
+Dense projections route through the Pallas blocked matmul (fwd + bwd via
+its custom VJP); the update uses the fused Pallas kernel; sq_dev/qsgd are
+the Pallas reduction/quantizer kernels. Python never runs at train time:
+these lower once to artifacts/*.hlo.txt.
+
+Models:
+    mlp   — plain MLP classifier (presets straddle compute- vs comm-bound)
+    cnn   — small conv net on synthetic CIFAR-like images
+    txf   — decoder-only transformer char-LM (the end-to-end driver)
+"""
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_update, quantize, sq_deviation
+from .kernels.layernorm import layernorm as pallas_layernorm
+from .kernels.matmul import linear
+
+# --------------------------------------------------------------------------
+# flat parameter plumbing
+# --------------------------------------------------------------------------
+
+
+def param_count(specs):
+    n = 0
+    for _, shape in specs:
+        sz = 1
+        for d in shape:
+            sz *= d
+        n += sz
+    return n
+
+
+def unflatten(w, specs):
+    """Flat f32[P] -> dict name->array (static offsets; jit-friendly)."""
+    out = {}
+    off = 0
+    for name, shape in specs:
+        sz = 1
+        for d in shape:
+            sz *= d
+        out[name] = w[off : off + sz].reshape(shape)
+        off += sz
+    return out
+
+
+def flatten(tree, specs):
+    """dict -> flat f32[P] in spec order."""
+    return jnp.concatenate([tree[name].reshape(-1) for name, _ in specs])
+
+
+def _init_dense(key, shape, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    if len(shape) == 4:  # HWIO conv
+        fan_in = shape[0] * shape[1] * shape[2]
+    s = scale if scale is not None else (2.0 / fan_in) ** 0.5
+    return jax.random.normal(key, shape) * s
+
+
+# --------------------------------------------------------------------------
+# model configs
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MlpConfig:
+    input_dim: int = 256
+    hidden: int = 128
+    depth: int = 2  # number of hidden layers
+    classes: int = 10
+    batch: int = 32
+
+
+@dataclass(frozen=True)
+class CnnConfig:
+    image: int = 16  # square side
+    channels: int = 3
+    widths: tuple = (8, 16)  # conv channel widths, pool/2 after each
+    classes: int = 10
+    batch: int = 32
+
+
+@dataclass(frozen=True)
+class TxfConfig:
+    vocab: int = 96
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    seq: int = 64
+    batch: int = 8
+    ff_mult: int = 4
+
+
+# --------------------------------------------------------------------------
+# MLP classifier
+# --------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: MlpConfig):
+    specs = []
+    dims = [cfg.input_dim] + [cfg.hidden] * cfg.depth + [cfg.classes]
+    for i in range(len(dims) - 1):
+        specs.append((f"w{i}", (dims[i], dims[i + 1])))
+        specs.append((f"b{i}", (dims[i + 1],)))
+    return specs
+
+
+def mlp_logits(p, x, cfg: MlpConfig):
+    h = x
+    n_layers = cfg.depth + 1
+    for i in range(n_layers):
+        h = linear(h, p[f"w{i}"], p[f"b{i}"])
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def mlp_init_tree(key, cfg: MlpConfig):
+    specs = mlp_specs(cfg)
+    tree = {}
+    for name, shape in specs:
+        key, sub = jax.random.split(key)
+        tree[name] = (
+            _init_dense(sub, shape) if name.startswith("w") else jnp.zeros(shape)
+        )
+    return tree
+
+
+# --------------------------------------------------------------------------
+# small CNN
+# --------------------------------------------------------------------------
+
+
+def cnn_specs(cfg: CnnConfig):
+    specs = []
+    cin = cfg.channels
+    side = cfg.image
+    for i, w in enumerate(cfg.widths):
+        specs.append((f"conv{i}", (3, 3, cin, w)))  # HWIO
+        specs.append((f"cb{i}", (w,)))
+        cin = w
+        side //= 2
+    flat = side * side * cin
+    specs.append(("head_w", (flat, cfg.classes)))
+    specs.append(("head_b", (cfg.classes,)))
+    return specs
+
+
+def cnn_logits(p, x, cfg: CnnConfig):
+    b = x.shape[0]
+    h = x.reshape(b, cfg.image, cfg.image, cfg.channels)
+    for i in range(len(cfg.widths)):
+        h = jax.lax.conv_general_dilated(
+            h,
+            p[f"conv{i}"],
+            window_strides=(1, 1),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        h = jax.nn.relu(h + p[f"cb{i}"])
+        h = jax.lax.reduce_window(
+            h, 0.0, jax.lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        ) / 4.0
+    h = h.reshape(b, -1)
+    return linear(h, p["head_w"], p["head_b"])
+
+
+def cnn_init_tree(key, cfg: CnnConfig):
+    tree = {}
+    for name, shape in cnn_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.startswith("conv") or name.endswith("_w"):
+            tree[name] = _init_dense(sub, shape)
+        else:
+            tree[name] = jnp.zeros(shape)
+    return tree
+
+
+# --------------------------------------------------------------------------
+# decoder-only transformer char-LM
+# --------------------------------------------------------------------------
+
+
+def txf_specs(cfg: TxfConfig):
+    d, ff = cfg.d_model, cfg.ff_mult * cfg.d_model
+    specs = [("tok_emb", (cfg.vocab, d)), ("pos_emb", (cfg.seq, d))]
+    for i in range(cfg.n_layers):
+        specs += [
+            (f"l{i}.ln1_s", (d,)),
+            (f"l{i}.ln1_b", (d,)),
+            (f"l{i}.qkv", (d, 3 * d)),
+            (f"l{i}.proj", (d, d)),
+            (f"l{i}.ln2_s", (d,)),
+            (f"l{i}.ln2_b", (d,)),
+            (f"l{i}.ff1", (d, ff)),
+            (f"l{i}.ff1_b", (ff,)),
+            (f"l{i}.ff2", (ff, d)),
+            (f"l{i}.ff2_b", (d,)),
+        ]
+    specs += [("lnf_s", (d,)), ("lnf_b", (d,))]
+    # output head tied to tok_emb (keeps P down; standard for small LMs)
+    return specs
+
+
+def _layernorm(x, s, b):
+    """Layernorm over the last axis, routed through the Pallas kernel
+    (fwd + dx-bwd run as blocked kernels; see kernels/layernorm.py)."""
+    shape = x.shape
+    y = pallas_layernorm(x.reshape(-1, shape[-1]), s, b)
+    return y.reshape(shape)
+
+
+def txf_logits(p, x, cfg: TxfConfig):
+    b, s = x.shape
+    d, nh = cfg.d_model, cfg.n_heads
+    hd = d // nh
+    h = p["tok_emb"][x] + p["pos_emb"][None, :s, :]
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    neg = jnp.float32(-1e9)
+    for i in range(cfg.n_layers):
+        # --- attention
+        hin = _layernorm(h, p[f"l{i}.ln1_s"], p[f"l{i}.ln1_b"])
+        qkv = linear(hin.reshape(b * s, d), p[f"l{i}.qkv"]).reshape(b, s, 3, nh, hd)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]  # [b,s,nh,hd]
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (hd**0.5)
+        att = jnp.where(mask[None, None] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b * s, d)
+        h = h + linear(out, p[f"l{i}.proj"]).reshape(b, s, d)
+        # --- mlp
+        hin = _layernorm(h, p[f"l{i}.ln2_s"], p[f"l{i}.ln2_b"])
+        ff = jax.nn.gelu(
+            linear(hin.reshape(b * s, d), p[f"l{i}.ff1"], p[f"l{i}.ff1_b"])
+        )
+        h = h + linear(ff, p[f"l{i}.ff2"], p[f"l{i}.ff2_b"]).reshape(b, s, d)
+    h = _layernorm(h, p["lnf_s"], p["lnf_b"])
+    logits = linear(h.reshape(b * s, d), p["tok_emb"].T).reshape(b, s, cfg.vocab)
+    return logits
+
+
+def txf_init_tree(key, cfg: TxfConfig):
+    tree = {}
+    for name, shape in txf_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("_s"):
+            tree[name] = jnp.ones(shape)
+        elif name.endswith("_b") or name.endswith(".ff1_b") or name.endswith(".ff2_b"):
+            tree[name] = jnp.zeros(shape)
+        elif "emb" in name:
+            tree[name] = jax.random.normal(sub, shape) * 0.02
+        else:
+            tree[name] = _init_dense(sub, shape)
+    return tree
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+
+def _xent(logits, y):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def _accuracy(logits, y):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Model: uniform AOT surface
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Model:
+    """One AOT-able model preset. `kind` is "class" (x f32[B,Din], y i32[B])
+    or "lm" (x i32[B,S], y i32[B,S])."""
+
+    name: str
+    kind: str
+    cfg: object
+    specs: list = field(hash=False)
+    logits_fn: object = field(hash=False)
+    init_fn: object = field(hash=False)
+    momentum: float = 0.9
+    qsgd_levels: int = 255
+
+    @property
+    def n_params(self):
+        return param_count(self.specs)
+
+    # ---- batch example shapes (for lowering + manifest)
+    def x_spec(self):
+        if self.kind == "class":
+            c = self.cfg
+            din = (
+                c.input_dim
+                if isinstance(c, MlpConfig)
+                else c.image * c.image * c.channels
+            )
+            return jax.ShapeDtypeStruct((c.batch, din), jnp.float32)
+        return jax.ShapeDtypeStruct((self.cfg.batch, self.cfg.seq), jnp.int32)
+
+    def y_spec(self):
+        if self.kind == "class":
+            return jax.ShapeDtypeStruct((self.cfg.batch,), jnp.int32)
+        return jax.ShapeDtypeStruct((self.cfg.batch, self.cfg.seq), jnp.int32)
+
+    def w_spec(self):
+        return jax.ShapeDtypeStruct((self.n_params,), jnp.float32)
+
+    def scalar_spec(self, dtype=jnp.float32):
+        return jax.ShapeDtypeStruct((), dtype)
+
+    # ---- the AOT functions ------------------------------------------------
+    def loss(self, w, x, y):
+        p = unflatten(w, self.specs)
+        return _xent(self.logits_fn(p, x, self.cfg), y)
+
+    def init(self, seed):
+        key = jax.random.PRNGKey(seed)
+        return flatten(self.init_fn(key, self.cfg), self.specs)
+
+    def grad(self, w, x, y):
+        loss, g = jax.value_and_grad(self.loss)(w, x, y)
+        return g, loss
+
+    def apply(self, w, m, g, lr):
+        return fused_update.fused_momentum_update(w, m, g, lr, mu=self.momentum)
+
+    def step(self, w, m, x, y, lr):
+        g, loss = self.grad(w, x, y)
+        w2, m2 = self.apply(w, m, g, lr)
+        return w2, m2, loss
+
+    def eval(self, w, x, y):
+        p = unflatten(w, self.specs)
+        logits = self.logits_fn(p, x, self.cfg)
+        return _xent(logits, y), _accuracy(logits, y)
+
+    def sq_dev(self, a, b):
+        return sq_deviation.sq_deviation(a, b)
+
+    def qsgd(self, g, u):
+        return quantize.qsgd_quantize_dequant(g, u, num_levels=self.qsgd_levels)
+
+
+def _mk_mlp(name, **kw):
+    cfg = MlpConfig(**kw)
+    return Model(name, "class", cfg, mlp_specs(cfg), mlp_logits, mlp_init_tree)
+
+
+def _mk_cnn(name, **kw):
+    cfg = CnnConfig(**kw)
+    return Model(name, "class", cfg, cnn_specs(cfg), cnn_logits, cnn_init_tree)
+
+
+def _mk_txf(name, **kw):
+    cfg = TxfConfig(**kw)
+    return Model(name, "lm", cfg, txf_specs(cfg), txf_logits, txf_init_tree)
+
+
+# The preset zoo. `mlp_small`/`cnn_small` are compute-bound stand-ins
+# (GoogLeNet role); `mlp_wide` is param-heavy / comm-bound (VGG16 role);
+# `txf_*` drive the end-to-end LM example. See DESIGN.md §1.
+PRESETS = {
+    "mlp_small": _mk_mlp("mlp_small", input_dim=256, hidden=128, depth=2, batch=32),
+    "mlp_wide": _mk_mlp("mlp_wide", input_dim=512, hidden=1024, depth=2, batch=32),
+    "cnn_small": _mk_cnn("cnn_small", image=16, channels=3, widths=(8, 16), batch=32),
+    "txf_tiny": _mk_txf(
+        "txf_tiny", vocab=96, d_model=64, n_layers=2, n_heads=4, seq=64, batch=8
+    ),
+    "txf_small": _mk_txf(
+        "txf_small", vocab=96, d_model=256, n_layers=4, n_heads=8, seq=128, batch=8
+    ),
+}
+
+
+def get(name: str) -> Model:
+    if name not in PRESETS:
+        raise KeyError(f"unknown model preset {name!r}; have {sorted(PRESETS)}")
+    return PRESETS[name]

@@ -1,0 +1,246 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-tile-multiples, the padding
+paths) and dtypes; assert_allclose against compile.kernels.ref.  This is
+the CORE correctness signal for the compute layer: the same kernels are
+baked into the AOT artifacts the rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_update, layernorm, matmul, quantize, ref, sq_deviation
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 140),
+    k=st.integers(1, 140),
+    n=st.integers(1, 140),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = _rand(k1, (m, k))
+    b = _rand(k2, (k, n))
+    got = matmul.matmul(a, b)
+    want = ref.matmul(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes_accumulate_f32(dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a = _rand(k1, (64, 96), dtype)
+    b = _rand(k2, (96, 32), dtype)
+    got = matmul.matmul(a, b)
+    assert got.dtype == jnp.float32
+    want = ref.matmul(a, b)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize(
+    "shape",
+    [(1, 1, 1), (128, 128, 128), (256, 64, 128), (129, 130, 131), (3, 300, 7)],
+)
+def test_matmul_tile_boundaries(shape):
+    m, k, n = shape
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    a = _rand(k1, (m, k))
+    b = _rand(k2, (k, n))
+    np.testing.assert_allclose(
+        matmul.matmul(a, b), ref.matmul(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_linear_bias():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    x, w, b = _rand(k1, (17, 33)), _rand(k2, (33, 9)), _rand(k3, (9,))
+    np.testing.assert_allclose(
+        matmul.linear(x, w, b), ref.matmul(x, w) + b, rtol=1e-4, atol=1e-4
+    )
+
+
+# --------------------------------------------------------- fused update
+
+
+@settings(**SETTINGS)
+@given(
+    p=st.integers(1, 40000),
+    lr=st.floats(1e-4, 1.0),
+    mu=st.sampled_from([0.0, 0.5, 0.9, 0.99]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_update_matches_ref(p, lr, mu, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    w, m, g = _rand(k1, (p,)), _rand(k2, (p,)), _rand(k3, (p,))
+    wn, mn = fused_update.fused_momentum_update(w, m, g, lr, mu=mu)
+    wr, mr = ref.fused_momentum_update(w, m, g, lr, mu)
+    np.testing.assert_allclose(mn, mr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(wn, wr, rtol=1e-5, atol=1e-6)
+
+
+def test_fused_update_zero_momentum_is_plain_sgd():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    w, g = _rand(k1, (1000,)), _rand(k2, (1000,))
+    m = jnp.zeros(1000)
+    wn, mn = fused_update.fused_momentum_update(w, m, g, 0.1, mu=0.0)
+    np.testing.assert_allclose(wn, w - 0.1 * g, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(mn, g, rtol=1e-6)
+
+
+def test_fused_update_block_boundary_exact():
+    # p exactly at / around the block size exercises both padded and
+    # unpadded paths.
+    for p in [fused_update.BLOCK - 1, fused_update.BLOCK, fused_update.BLOCK + 1]:
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(p), 3)
+        w, m, g = _rand(k1, (p,)), _rand(k2, (p,)), _rand(k3, (p,))
+        wn, mn = fused_update.fused_momentum_update(w, m, g, 0.05, mu=0.9)
+        wr, mr = ref.fused_momentum_update(w, m, g, 0.05, 0.9)
+        np.testing.assert_allclose(wn, wr, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(mn, mr, rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------- sq deviation
+
+
+@settings(**SETTINGS)
+@given(p=st.integers(1, 50000), seed=st.integers(0, 2**31 - 1))
+def test_sq_deviation_matches_ref(p, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a, b = _rand(k1, (p,)), _rand(k2, (p,))
+    got = sq_deviation.sq_deviation(a, b)
+    want = ref.sq_deviation(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_sq_deviation_identical_is_zero():
+    a = _rand(jax.random.PRNGKey(0), (12345,))
+    assert float(sq_deviation.sq_deviation(a, a)) == 0.0
+
+
+def test_sq_deviation_known_value():
+    a = jnp.ones(100)
+    b = jnp.zeros(100)
+    np.testing.assert_allclose(float(sq_deviation.sq_deviation(a, b)), 100.0)
+
+
+# ------------------------------------------------------------ layernorm
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 300),
+    d=st.integers(2, 256),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_matches_ref(rows, d, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(k1, (rows, d), scale=3.0)
+    s = 1.0 + 0.1 * _rand(k2, (d,))
+    b = 0.1 * _rand(k3, (d,))
+    got = layernorm.layernorm(x, s, b)
+    want = ref.layernorm(x, s, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_layernorm_output_is_normalized():
+    x = _rand(jax.random.PRNGKey(2), (64, 128), scale=10.0)
+    y = layernorm.layernorm(x, jnp.ones(128), jnp.zeros(128))
+    np.testing.assert_allclose(jnp.mean(y, axis=-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(jnp.std(y, axis=-1), 1.0, atol=1e-3)
+
+
+def test_layernorm_grad_matches_jnp_autodiff():
+    """The custom VJP (Pallas bwd kernel) must agree with jax autodiff of
+    the pure-jnp oracle — for dx, ds, and db."""
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(9), 4)
+    x = _rand(k1, (37, 48), scale=2.0)
+    s = 1.0 + 0.1 * _rand(k2, (48,))
+    b = 0.1 * _rand(k3, (48,))
+    ct = _rand(k4, (37, 48))
+
+    def loss_kernel(x, s, b):
+        return jnp.sum(layernorm.layernorm(x, s, b) * ct)
+
+    def loss_ref(x, s, b):
+        return jnp.sum(ref.layernorm(x, s, b) * ct)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, s, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, s, b)
+    for got, want, name in zip(gk, gr, ["dx", "ds", "db"]):
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4, err_msg=name)
+
+
+def test_layernorm_block_boundaries():
+    for rows in [
+        layernorm.DEFAULT_BLOCK_ROWS - 1,
+        layernorm.DEFAULT_BLOCK_ROWS,
+        layernorm.DEFAULT_BLOCK_ROWS + 1,
+    ]:
+        x = _rand(jax.random.PRNGKey(rows), (rows, 32))
+        got = layernorm.layernorm(x, jnp.ones(32), jnp.zeros(32))
+        want = ref.layernorm(x, jnp.ones(32), jnp.zeros(32))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------- qsgd
+
+
+@settings(**SETTINGS)
+@given(
+    p=st.integers(1, 8192),
+    levels=st.sampled_from([3, 15, 255]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qsgd_matches_ref_on_bucket_multiples(p, levels, seed):
+    bs = quantize.DEFAULT_BUCKET
+    p = max(1, p // bs * bs) if p >= bs else p  # kernel shrinks bucket to p
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = _rand(k1, (p,))
+    u = jax.random.uniform(k2, (p,))
+    got = quantize.qsgd_quantize_dequant(x, u, levels, bs)
+    want = ref.qsgd_quantize_dequant(x, u, levels, min(bs, p))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_qsgd_unbiased_in_expectation():
+    # E_u[Q(x)] = x for the stochastic rounding scheme: average over many
+    # uniforms converges to x.
+    x = _rand(jax.random.PRNGKey(0), (512,))
+    acc = jnp.zeros_like(x)
+    trials = 200
+    for i in range(trials):
+        u = jax.random.uniform(jax.random.PRNGKey(1000 + i), (512,))
+        acc = acc + quantize.qsgd_quantize_dequant(x, u, 255, 512)
+    # rounding step = ||x||/s ~= 0.089 here; mean-of-200 std ~= 0.003
+    np.testing.assert_allclose(acc / trials, x, atol=0.02)
+
+
+def test_qsgd_error_shrinks_with_levels():
+    x = _rand(jax.random.PRNGKey(5), (2048,))
+    u = jax.random.uniform(jax.random.PRNGKey(6), (2048,))
+    errs = []
+    for s in [3, 15, 255]:
+        q = quantize.qsgd_quantize_dequant(x, u, s, 512)
+        errs.append(float(jnp.sum((q - x) ** 2)))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_qsgd_zero_vector_stays_zero():
+    x = jnp.zeros(1024)
+    u = jax.random.uniform(jax.random.PRNGKey(0), (1024,))
+    q = quantize.qsgd_quantize_dequant(x, u, 255, 512)
+    np.testing.assert_allclose(q, x)

@@ -1,0 +1,165 @@
+"""L2 invariants: flat-param plumbing, shapes, training signal, AOT surface."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as zoo
+from compile.model import MlpConfig, flatten, mlp_specs, param_count, unflatten
+
+ALL_PRESETS = sorted(zoo.PRESETS)
+
+
+def _batch(m, seed=0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    if m.kind == "class":
+        x = jax.random.normal(kx, m.x_spec().shape)
+        y = jax.random.randint(ky, m.y_spec().shape, 0, m.cfg.classes)
+    else:
+        x = jax.random.randint(kx, m.x_spec().shape, 0, m.cfg.vocab)
+        y = jax.random.randint(ky, m.y_spec().shape, 0, m.cfg.vocab)
+    return x, y
+
+
+# ------------------------------------------------------------- flattening
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.integers(2, 64),
+    h=st.integers(2, 64),
+    depth=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flatten_unflatten_roundtrip(d, h, depth, seed):
+    cfg = MlpConfig(input_dim=d, hidden=h, depth=depth)
+    specs = mlp_specs(cfg)
+    w = jax.random.normal(jax.random.PRNGKey(seed), (param_count(specs),))
+    tree = unflatten(w, specs)
+    w2 = flatten(tree, specs)
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(w2))
+
+
+def test_param_count_matches_manual():
+    cfg = MlpConfig(input_dim=10, hidden=4, depth=1, classes=3)
+    # 10*4 + 4 + 4*3 + 3
+    assert param_count(mlp_specs(cfg)) == 59
+
+
+# ----------------------------------------------------------- per-preset
+
+
+@pytest.mark.parametrize("name", ALL_PRESETS)
+def test_init_shape_and_determinism(name):
+    m = zoo.get(name)
+    w0 = m.init(7)
+    w1 = m.init(7)
+    w2 = m.init(8)
+    assert w0.shape == (m.n_params,)
+    np.testing.assert_array_equal(np.asarray(w0), np.asarray(w1))
+    assert not np.allclose(np.asarray(w0), np.asarray(w2))
+    assert np.all(np.isfinite(np.asarray(w0)))
+
+
+@pytest.mark.parametrize("name", ALL_PRESETS)
+def test_step_decreases_loss_on_fixed_batch(name):
+    m = zoo.get(name)
+    w = m.init(0)
+    mom = jnp.zeros_like(w)
+    x, y = _batch(m)
+    step = jax.jit(m.step)
+    w1, mom1, loss0 = step(w, mom, x, y, 0.05)
+    loss_prev = loss0
+    for _ in range(8):
+        w1, mom1, loss_prev = step(w1, mom1, x, y, 0.05)
+    assert float(loss_prev) < float(loss0)
+    assert np.all(np.isfinite(np.asarray(w1)))
+
+
+@pytest.mark.parametrize("name", ALL_PRESETS)
+def test_step_equals_grad_plus_apply(name):
+    """The fused `step` artifact must equal the two-phase grad+apply path
+    (what the QSGD/FULLSGD coordinator modes use)."""
+    m = zoo.get(name)
+    w = m.init(3)
+    mom = jax.random.normal(jax.random.PRNGKey(4), w.shape) * 0.01
+    x, y = _batch(m, seed=5)
+    w_s, m_s, loss_s = jax.jit(m.step)(w, mom, x, y, 0.1)
+    g, loss_g = jax.jit(m.grad)(w, x, y)
+    w_a, m_a = jax.jit(m.apply)(w, mom, g, 0.1)
+    np.testing.assert_allclose(float(loss_s), float(loss_g), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(w_s), np.asarray(w_a), rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(m_s), np.asarray(m_a), rtol=1e-5, atol=1e-7)
+
+
+@pytest.mark.parametrize("name", ALL_PRESETS)
+def test_eval_matches_loss(name):
+    m = zoo.get(name)
+    w = m.init(1)
+    x, y = _batch(m, seed=2)
+    loss_e, acc = jax.jit(m.eval)(w, x, y)
+    _, loss_g = jax.jit(m.grad)(w, x, y)
+    np.testing.assert_allclose(float(loss_e), float(loss_g), rtol=1e-5)
+    assert 0.0 <= float(acc) <= 1.0
+
+
+def test_grad_matches_finite_difference():
+    m = zoo.get("mlp_small")
+    w = m.init(0) * 0.5
+    x, y = _batch(m, seed=1)
+    g, _ = jax.jit(m.grad)(w, x, y)
+    # probe a few random coordinates
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, m.n_params, size=6)
+    eps = 1e-3
+    w_np = np.asarray(w, dtype=np.float64)
+    for i in idx:
+        wp, wm = w_np.copy(), w_np.copy()
+        wp[i] += eps
+        wm[i] -= eps
+        lp = float(m.loss(jnp.asarray(wp, jnp.float32), x, y))
+        lm = float(m.loss(jnp.asarray(wm, jnp.float32), x, y))
+        fd = (lp - lm) / (2 * eps)
+        assert abs(fd - float(g[i])) < 5e-2 * max(1.0, abs(fd)), (i, fd, float(g[i]))
+
+
+def test_momentum_is_local_state():
+    """Averaging w but keeping m local (the paper's scheme) must be
+    expressible: apply with explicitly averaged w, untouched m."""
+    m = zoo.get("mlp_small")
+    w_a, w_b = m.init(0), m.init(1)
+    mom = jnp.ones(m.n_params) * 0.1
+    w_bar = (w_a + w_b) / 2
+    g = jnp.zeros(m.n_params)
+    w2, m2 = jax.jit(m.apply)(w_bar, mom, g, 0.1)
+    # zero grad: w unchanged except momentum decay effect
+    np.testing.assert_allclose(
+        np.asarray(w2), np.asarray(w_bar - 0.1 * 0.9 * mom), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(np.asarray(m2), np.asarray(0.9 * mom), rtol=1e-6)
+
+
+def test_sq_dev_surface():
+    m = zoo.get("mlp_small")
+    a = m.init(0)
+    b = m.init(1)
+    got = float(jax.jit(m.sq_dev)(a, b))
+    want = float(jnp.sum((a - b) ** 2))
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_txf_causality():
+    """Future tokens must not influence past logits."""
+    m = zoo.get("txf_tiny")
+    w = m.init(0)
+    x, _ = _batch(m, seed=3)
+    p = zoo.unflatten(w, m.specs)
+    logits = zoo.txf_logits(p, x, m.cfg)
+    x2 = x.at[:, -1].set((x[:, -1] + 1) % m.cfg.vocab)
+    logits2 = zoo.txf_logits(p, x2, m.cfg)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, :-1]), np.asarray(logits2[:, :-1]), atol=1e-5
+    )
+    assert not np.allclose(np.asarray(logits[:, -1]), np.asarray(logits2[:, -1]))

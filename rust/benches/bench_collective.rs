@@ -1,0 +1,91 @@
+//! Collective benchmarks: the in-process ring allreduce that implements
+//! the paper's parameter averaging, across node counts and payload sizes
+//! (paper geometry: 16 nodes, 6.8M-138M f32 parameters).
+
+use adpsgd::collective::Comm;
+use adpsgd::util::bench::Runner;
+use adpsgd::util::rng::Rng;
+use std::sync::Arc;
+
+/// Run `rounds` allreduces over `n` worker threads, timing rank 0's view.
+fn allreduce_secs(n: usize, len: usize, rounds: usize) -> f64 {
+    let comm = Arc::new(Comm::new(n, len));
+    let elapsed = Arc::new(std::sync::Mutex::new(0.0f64));
+    std::thread::scope(|scope| {
+        for rank in 0..n {
+            let comm = Arc::clone(&comm);
+            let elapsed = Arc::clone(&elapsed);
+            scope.spawn(move || {
+                let mut buf = vec![0.0f32; len];
+                Rng::new(rank as u64, 7).fill_normal(&mut buf, 1.0);
+                comm.barrier();
+                let t = std::time::Instant::now();
+                for _ in 0..rounds {
+                    comm.allreduce_mean(rank, &mut buf);
+                }
+                if rank == 0 {
+                    *elapsed.lock().unwrap() = t.elapsed().as_secs_f64();
+                }
+            });
+        }
+    });
+    let v = *elapsed.lock().unwrap();
+    v
+}
+
+fn main() {
+    let fast = std::env::var("ADPSGD_BENCH_FAST").is_ok();
+    let rounds = if fast { 3 } else { 20 };
+    println!("\n== bench group: collective (custom timing; {rounds} rounds each) ==");
+
+    for &n in &[2usize, 4, 8, 16] {
+        for &len in &[64 * 1024usize, 1 << 20, 6_800_000] {
+            let secs = allreduce_secs(n, len, rounds);
+            let per = secs / rounds as f64;
+            let gbps = (len * 4 * n) as f64 / per / 1e9;
+            println!(
+                "collective/allreduce_mean/n{n}/{:>4}k   {:>9.3} ms/op   {:>7.2} GB/s aggregate",
+                len >> 10,
+                per * 1e3,
+                gbps
+            );
+        }
+    }
+
+    // scalar allreduce (the S_k exchange) — latency-bound: fixed-round
+    // all-rank timing (a Runner-style calibrated loop would deadlock the
+    // barrier, so this uses the same scheme as the vector benches)
+    let srounds = if fast { 200 } else { 5_000 };
+    for &n in &[2usize, 8, 16] {
+        let comm = Arc::new(Comm::new(n, 1));
+        let elapsed = Arc::new(std::sync::Mutex::new(0.0f64));
+        std::thread::scope(|scope| {
+            for rank in 0..n {
+                let comm = Arc::clone(&comm);
+                let elapsed = Arc::clone(&elapsed);
+                scope.spawn(move || {
+                    comm.barrier();
+                    let t = std::time::Instant::now();
+                    for i in 0..srounds {
+                        comm.allreduce_scalar_sum(rank, (rank + i) as f64);
+                    }
+                    if rank == 0 {
+                        *elapsed.lock().unwrap() = t.elapsed().as_secs_f64();
+                    }
+                });
+            }
+        });
+        let per = *elapsed.lock().unwrap() / srounds as f64;
+        println!("collective/scalar_allreduce/n{n:<2}          {:>9.3} µs/op", per * 1e6);
+    }
+
+    // single-rank fast path through the Runner harness (no barriers)
+    let mut r = Runner::from_env("collective");
+    let solo = Comm::new(1, 1 << 20);
+    let mut buf = vec![1.0f32; 1 << 20];
+    r.bench("allreduce_mean/n1-noop", move || {
+        solo.allreduce_mean(0, &mut buf);
+        buf[0]
+    });
+    r.finish();
+}

@@ -1,0 +1,105 @@
+//! End-to-end figure benchmarks — one timed quick-scale regeneration per
+//! paper table/figure, exercising the full coordinator stack (workers,
+//! collectives, period control, ledger).  These are the "one bench per
+//! paper table" harnesses; `cargo bench` prints each figure's
+//! regeneration wall-time and its key reproduced numbers.
+
+use adpsgd::figures::convergence::{convergence, time_split, Role};
+use adpsgd::figures::{
+    cifar_base, decreasing::decreasing_study, googlenet_role, speedup::fig6, table1::table1,
+    variance::{fig1, fig2_fig3},
+    vgg_role, Scale, Sink,
+};
+use std::time::Instant;
+
+fn timed<T>(name: &str, f: impl FnOnce() -> anyhow::Result<T>) -> Option<T> {
+    let t = Instant::now();
+    match f() {
+        Ok(v) => {
+            println!("figures/{name:<28} regenerated in {:>8.2?}", t.elapsed());
+            Some(v)
+        }
+        Err(e) => {
+            println!("figures/{name:<28} FAILED: {e}");
+            None
+        }
+    }
+}
+
+fn main() {
+    let scale = Scale::Quick;
+    let sink = Sink::new(None, true);
+    println!("\n== bench group: figures (quick-scale end-to-end regeneration) ==");
+
+    timed("fig1_cpsgd_variance", || fig1(scale, &sink)).map(|f| {
+        println!("    -> {} periods, {} V_t points each", f.rows.len(), f.rows[0].v_t.points.len());
+    });
+
+    timed("fig2_fig3_adpsgd_variance", || fig2_fig3(scale, &sink)).map(|f| {
+        println!(
+            "    -> ADPSGD {} syncs (p̄ {:.2}) vs CPSGD-8 {} syncs",
+            f.adpsgd.syncs, f.adpsgd.avg_period, f.cpsgd8.syncs
+        );
+    });
+
+    for role in [Role::GoogLeNet, Role::Vgg16, Role::ResNet50, Role::AlexNet] {
+        timed(&format!("{}_convergence", role.figure().replace(' ', "").to_lowercase()), || {
+            let c = convergence(role, scale, &sink)?;
+            let rows = time_split(&c, &sink);
+            Ok((c, rows))
+        })
+        .map(|(c, rows)| {
+            println!(
+                "    -> ADPSGD acc {:.3} vs CPSGD {:.3}; comm@10G {:.2}s vs FULL {:.2}s",
+                c.adpsgd().best_eval_acc,
+                c.cpsgd().best_eval_acc,
+                rows[2].comm_10g,
+                rows[0].comm_10g
+            );
+        });
+    }
+
+    timed("fig6_speedup", || {
+        let mut base = cifar_base(scale);
+        vgg_role(&mut base, scale);
+        base.iters = 320;
+        fig6("vgg-role", &base, scale, &sink)
+    })
+    .map(|f| {
+        let a = f.cell(adpsgd::period::Strategy::Adaptive, 16);
+        println!("    -> ADPSGD@16: {:.2}x @100G / {:.2}x @10G", a.speedup_100g, a.speedup_10g);
+    });
+
+    timed("table1_accuracy_sweep", || {
+        let mut base = cifar_base(scale);
+        googlenet_role(&mut base, scale);
+        base.iters = 240;
+        base.eval_every = 40;
+        table1(&base, scale, &sink)
+    })
+    .map(|t| {
+        println!(
+            "    -> ADPSGD {:.3} vs CPSGD-best {:.3} vs FULLSGD-best {:.3}",
+            t.get("ADPSGD").best_acc,
+            t.get("CPSGD").best_acc,
+            t.get("FULLSGD").best_acc
+        );
+    });
+
+    timed("sec5b_decreasing_period", || {
+        let mut base = cifar_base(scale);
+        googlenet_role(&mut base, scale);
+        decreasing_study(&base, &sink)
+    })
+    .map(|s| {
+        println!(
+            "    -> decreasing loss {:.4} vs ADPSGD {:.4} at {} vs {} syncs",
+            s.decreasing.final_train_loss,
+            s.adpsgd.final_train_loss,
+            s.decreasing.syncs,
+            s.adpsgd.syncs
+        );
+    });
+
+    println!("== figures done ==");
+}

@@ -1,0 +1,57 @@
+//! QSGD quantizer benchmarks — the compression cost the paper's §VI
+//! argues can defeat the saved bandwidth on fast links.  Reported per
+//! gradient size so the netsim crossover analysis in EXPERIMENTS.md can
+//! cite measured encode+decode cost vs modeled wire-time savings.
+
+use adpsgd::quant::{decode, encode, quantize_inplace, QsgdConfig};
+use adpsgd::util::bench::Runner;
+use adpsgd::util::rng::Rng;
+
+fn main() {
+    let mut r = Runner::from_env("quant");
+    let cfg = QsgdConfig::default();
+
+    for &n in &[64 * 1024usize, 1 << 20, 6_800_000] {
+        let tag = if n >= 1 << 20 { format!("{}M", n >> 20) } else { format!("{}k", n >> 10) };
+        let mut g = vec![0.0f32; n];
+        Rng::new(3, 0).fill_normal(&mut g, 0.01);
+        let bytes = (n * 4) as u64;
+
+        {
+            let g = g.clone();
+            let mut rng = Rng::new(11, 0);
+            r.bench_bytes(&format!("encode/{tag}"), bytes, move || encode(&g, &cfg, &mut rng));
+        }
+        {
+            let mut rng = Rng::new(11, 0);
+            let enc = encode(&g, &cfg, &mut rng);
+            let mut out = vec![0.0f32; n];
+            r.bench_bytes(&format!("decode/{tag}"), bytes, move || {
+                decode(&enc, &mut out);
+                out[0]
+            });
+        }
+        {
+            let mut buf = g.clone();
+            let mut rng = Rng::new(11, 0);
+            r.bench_bytes(&format!("quantize_inplace/{tag}"), bytes, move || {
+                quantize_inplace(&mut buf, &cfg, &mut rng)
+            });
+        }
+    }
+
+    // bucket-size sensitivity at 1M params
+    let n = 1 << 20;
+    let mut g = vec![0.0f32; n];
+    Rng::new(5, 0).fill_normal(&mut g, 0.01);
+    for bucket in [128usize, 512, 2048, 8192] {
+        let qcfg = QsgdConfig { levels: 255, bucket };
+        let mut buf = g.clone();
+        let mut rng = Rng::new(13, 0);
+        r.bench(&format!("quantize_inplace/bucket{bucket}"), move || {
+            quantize_inplace(&mut buf, &qcfg, &mut rng)
+        });
+    }
+
+    r.finish();
+}

@@ -1,0 +1,66 @@
+//! PJRT runtime benchmarks: latency of the AOT HLO executables (init /
+//! step / grad / eval) for every model in the artifact manifest — the
+//! product-path compute cost on this host.
+//!
+//! Requires `make artifacts`.  Exits cleanly with a notice if artifacts
+//! are absent (e.g., a fresh checkout before the python build step).
+
+use adpsgd::data::{CharCorpus, DatasetHandle, NodeSource, SynthClass};
+use adpsgd::runtime::{EngineFns, HloEngine, Manifest};
+use adpsgd::util::bench::Runner;
+use std::sync::Arc;
+
+fn main() {
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            println!("bench_runtime: skipping ({e}); run `make artifacts` first");
+            return;
+        }
+    };
+
+    let fast = std::env::var("ADPSGD_BENCH_FAST").is_ok();
+    let mut r = Runner::from_env("runtime");
+
+    for (name, spec) in &manifest.models {
+        // the big models dominate the window; skip them in fast mode
+        if fast && spec.param_count > 300_000 {
+            continue;
+        }
+        let engine = match HloEngine::load(&manifest, name, EngineFns::all()) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("runtime/{name}: load failed: {e}");
+                continue;
+            }
+        };
+        let n = engine.n_params();
+
+        let dataset = if spec.kind == "lm" {
+            DatasetHandle::Text(Arc::new(CharCorpus::generate(1, 1 << 14)))
+        } else {
+            let dim = *spec.x_shape.last().unwrap();
+            DatasetHandle::Class(Arc::new(SynthClass::new(1, dim, spec.classes.max(2), 1.0, 0.0)))
+        };
+        let mut source = NodeSource::new(dataset, 1, 0, spec.batch, spec.seq);
+        let batch = source.next_batch();
+
+        let mut w = engine.init(42).unwrap();
+        let mut m = vec![0.0f32; n];
+        let mut g = vec![0.0f32; n];
+
+        r.bench(&format!("{name}/step ({n}p)"), || {
+            engine.step(&mut w, &mut m, &batch, 1e-4).unwrap()
+        });
+        r.bench(&format!("{name}/grad"), || engine.grad(&w, &batch, &mut g).unwrap());
+        r.bench(&format!("{name}/apply"), || {
+            engine.apply(&mut w, &mut m, &g, 1e-5).unwrap();
+            w[0]
+        });
+        r.bench(&format!("{name}/eval"), || engine.eval(&w, &batch).unwrap());
+        let w2 = w.clone();
+        r.bench(&format!("{name}/sq_dev"), || engine.sq_dev(&w, &w2).unwrap());
+    }
+
+    r.finish();
+}

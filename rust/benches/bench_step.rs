@@ -1,0 +1,49 @@
+//! Per-step engine benchmarks: the local SGD step (forward + backward +
+//! fused momentum update) for every native workload, at both figure
+//! geometries.  These are the compute numbers the Fig 4c/5c/6 time
+//! models calibrate against.
+
+use adpsgd::config::WorkloadConfig;
+use adpsgd::coordinator::engine::{Engine, NativeEngine};
+use adpsgd::data::SynthClass;
+use adpsgd::util::bench::Runner;
+use adpsgd::util::rng::Rng;
+use adpsgd::workload::build;
+
+fn main() {
+    let mut r = Runner::from_env("step");
+
+    for (name, dim, hidden, batch) in [
+        ("mlp", 128usize, 64usize, 32usize),
+        ("mlp", 256, 128, 128),
+        ("mlp_deep", 256, 192, 128),
+        ("mlp_wide", 256, 256, 128),
+        ("logreg", 256, 0, 128),
+        ("quadratic", 1024, 0, 128),
+    ] {
+        let mut wcfg = WorkloadConfig::default();
+        wcfg.input_dim = dim;
+        wcfg.hidden = hidden.max(1);
+        let wl = build(name, &wcfg).unwrap();
+        let n_params = wl.n_params();
+        let mut engine = NativeEngine::new(wl, 0.9);
+
+        let ds = SynthClass::new(42, dim, 10, 1.0, 0.05);
+        let mut rng = Rng::new(7, 0);
+        let batch_data = ds.sample(&mut rng, batch);
+
+        let mut w = engine.init(42).unwrap();
+        let mut m = vec![0.0f32; n_params];
+        let tag = format!("{name}/d{dim}h{hidden}b{batch} ({n_params}p)");
+        r.bench(&format!("step/{tag}"), || {
+            engine.step(&mut w, &mut m, &batch_data, 1e-4).unwrap()
+        });
+
+        let mut g = vec![0.0f32; n_params];
+        r.bench(&format!("grad/{tag}"), || engine.grad(&w, &batch_data, &mut g).unwrap());
+
+        r.bench(&format!("eval/{tag}"), || engine.eval(&w, &batch_data).unwrap());
+    }
+
+    r.finish();
+}

@@ -1,0 +1,74 @@
+//! Tensor-algebra micro-benchmarks — the coordinator's parameter hot
+//! path (momentum update, squared deviation, allreduce arithmetic) at
+//! the paper's model sizes (GoogLeNet ≈ 6.8M params, VGG16 ≈ 138M is
+//! benchmarked at 32M to keep the window short).
+
+use adpsgd::tensor;
+use adpsgd::util::bench::Runner;
+use adpsgd::util::rng::Rng;
+
+fn vec_of(n: usize, seed: u64) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    Rng::new(seed, 0).fill_normal(&mut v, 1.0);
+    v
+}
+
+/// §Perf baseline: the pre-optimization serial-f64 reduction (kept here
+/// so `cargo bench` shows the before/after delta of the chunked-lane
+/// rewrite directly).
+fn sq_deviation_naive(a: &[f32], b: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (*x - *y) as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+fn main() {
+    let mut r = Runner::from_env("tensor");
+
+    for &n in &[64 * 1024usize, 1 << 20, 6_800_000, 32 << 20] {
+        let tag = if n >= 1 << 20 { format!("{}M", n >> 20) } else { format!("{}k", n >> 10) };
+        let x = vec_of(n, 1);
+        let y0 = vec_of(n, 2);
+        let bytes = (n * 4) as u64;
+
+        let mut y = y0.clone();
+        r.bench_bytes(&format!("axpy/{tag}"), 2 * bytes, || {
+            tensor::axpy(&mut y, 0.5, &x);
+            y[0]
+        });
+
+        r.bench_bytes(&format!("sq_norm/{tag}"), bytes, || tensor::sq_norm(&x));
+
+        r.bench_bytes(&format!("sq_deviation/{tag}"), 2 * bytes, || {
+            tensor::sq_deviation(&x, &y0)
+        });
+
+        r.bench_bytes(&format!("sq_deviation_naive/{tag}"), 2 * bytes, || {
+            sq_deviation_naive(&x, &y0)
+        });
+
+        let mut w = y0.clone();
+        let mut m = vec![0.0f32; n];
+        let g = x.clone();
+        r.bench_bytes(&format!("momentum_update/{tag}"), 4 * bytes, || {
+            tensor::momentum_update(&mut w, &mut m, &g, 1e-6, 0.9);
+            w[0]
+        });
+
+        r.bench_bytes(&format!("dot/{tag}"), 2 * bytes, || tensor::dot(&x, &y0));
+    }
+
+    // param_variance across 16 node rows — the Var[W_k] instrumentation
+    let n = 1 << 18;
+    let rows_data: Vec<Vec<f32>> = (0..16).map(|i| vec_of(n, 100 + i)).collect();
+    let rows: Vec<&[f32]> = rows_data.iter().map(|v| v.as_slice()).collect();
+    let mut scratch = vec![0.0f32; n];
+    r.bench_bytes("param_variance/16x256k", (16 * n * 4) as u64, || {
+        tensor::param_variance(&rows, &mut scratch)
+    });
+
+    r.finish();
+}

@@ -1,0 +1,317 @@
+//! The paper's convergence theory as executable math.
+//!
+//! §II-B/§III derive, for periodic parameter averaging SGD on an
+//! L-smooth objective with gradient-variance bound σ², the convergence
+//! bound (equation 8):
+//!
+//! ```text
+//!  E[ Σ γₖ/Σγⱼ ‖∇f(w̄ₖ)‖² ]  ≤  2(f(w₀)−f*)/Σγₖ                 (opt term)
+//!                             + L² · Σ γₖ·Var[Wₖ]/Σγⱼ            (variance term)
+//!                             + (Σγₖ²/Σγₖ) · Lσ²/M               (noise term)
+//! ```
+//!
+//! with the variance term bounded per (10) for a constant period p:
+//!
+//! ```text
+//!  Σ γₖVar[Wₖ]/Σγⱼ  ≤  γ²np·C₁/(1−3γ²np²L²)
+//!                     + 3γ²np²/(1−3γ²np²L²) · avg‖∇f‖²
+//! ```
+//!
+//! This module evaluates those bounds for arbitrary piecewise
+//! (γ, p) schedules — the calculator behind the paper's §III-A argument
+//! that strategy-1 (small p early) dominates strategy-2 (small p late)
+//! at identical communication cost, and behind ADPSGD's (13)–(15)
+//! condition `Var[Wₖ] ≤ γₖC₂/M` that preserves the O(1/√(MK)) rate.
+
+use crate::config::LrSchedule;
+use crate::optim::lr_at;
+
+/// Problem-level constants the paper's analysis assumes.
+#[derive(Debug, Clone, Copy)]
+pub struct Assumptions {
+    /// Lipschitz-smoothness constant L
+    pub l: f64,
+    /// per-sample stochastic-gradient variance bound σ²
+    pub sigma2: f64,
+    /// total mini-batch size M = n·B
+    pub m: usize,
+    /// node count n
+    pub n: usize,
+    /// initial optimality gap f(w₀) − f(w*)
+    pub f0_gap: f64,
+    /// stand-in for the running average of ‖∇f‖² in (10) — decays over
+    /// training; we evaluate it per segment via `grad_decay`
+    pub grad_sq0: f64,
+    /// multiplicative decay of `grad_sq0` per segment of the schedule
+    pub grad_decay: f64,
+}
+
+impl Default for Assumptions {
+    fn default() -> Self {
+        Assumptions {
+            l: 1.0,
+            sigma2: 1.0,
+            m: 512,
+            n: 16,
+            f0_gap: 1.0,
+            grad_sq0: 1.0,
+            grad_decay: 0.2,
+        }
+    }
+}
+
+/// One segment of a piecewise training schedule: `len` iterations at
+/// learning rate `gamma` with averaging period `p`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Segment {
+    pub len: usize,
+    pub gamma: f64,
+    pub p: usize,
+}
+
+/// Build segments from an `LrSchedule` and a piecewise period schedule
+/// ("(start, p)" pairs) over `k_total` iterations, splitting at every
+/// boundary of either schedule.
+pub fn segments(
+    lr: &LrSchedule,
+    lr0: f32,
+    periods: &[(usize, usize)],
+    k_total: usize,
+) -> Vec<Segment> {
+    assert!(!periods.is_empty() && periods[0].0 == 0);
+    let mut cuts: Vec<usize> = vec![0, k_total];
+    if let LrSchedule::StepDecay { boundaries, .. } | LrSchedule::Warmup { boundaries, .. } = lr {
+        cuts.extend(boundaries.iter().copied().filter(|&b| b < k_total));
+    }
+    cuts.extend(periods.iter().map(|s| s.0).filter(|&b| b < k_total));
+    cuts.sort_unstable();
+    cuts.dedup();
+
+    let period_at = |k: usize| -> usize {
+        let mut p = periods[0].1;
+        for &(start, pp) in periods {
+            if k >= start {
+                p = pp;
+            }
+        }
+        p
+    };
+
+    cuts.windows(2)
+        .map(|w| Segment {
+            len: w[1] - w[0],
+            gamma: lr_at(lr, lr0, w[0]) as f64,
+            p: period_at(w[0]),
+        })
+        .collect()
+}
+
+/// Equation (10)'s bound on the γ-weighted average parameter variance
+/// for one constant-(γ, p) segment.  Returns `None` when the bound's
+/// denominator is non-positive (the analysis requires 3γ²np²L² < 1 —
+/// the "proper averaging period" condition of [23]).
+pub fn variance_bound_segment(a: &Assumptions, s: &Segment, grad_sq: f64) -> Option<f64> {
+    if s.p <= 1 {
+        return Some(0.0); // full communication: Var[W_k] = 0
+    }
+    let g2 = s.gamma * s.gamma;
+    let np = a.n as f64 * s.p as f64;
+    let np2 = a.n as f64 * (s.p as f64) * (s.p as f64);
+    let denom = 1.0 - 3.0 * g2 * np2 * a.l * a.l;
+    if denom <= 0.0 {
+        return None;
+    }
+    // C₁ is "a constant that depends on the variance of stochastic
+    // gradients" — σ²/M per local step is the natural scale.
+    let c1 = a.sigma2 / a.m as f64;
+    Some((g2 * np * c1) / denom + (3.0 * g2 * np2 / denom) * grad_sq)
+}
+
+/// The three terms of equation (8) for a piecewise schedule, plus the
+/// communication cost (number of synchronizations).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Bound {
+    pub opt_term: f64,
+    pub variance_term: f64,
+    pub noise_term: f64,
+    pub syncs: usize,
+}
+
+impl Bound {
+    pub fn total(&self) -> f64 {
+        self.opt_term + self.variance_term + self.noise_term
+    }
+}
+
+/// Evaluate (8) with per-segment variance bounds (10).  `None` if any
+/// segment violates the proper-period condition.
+pub fn convergence_bound(a: &Assumptions, segs: &[Segment]) -> Option<Bound> {
+    let sum_gamma: f64 = segs.iter().map(|s| s.gamma * s.len as f64).sum();
+    let sum_gamma2: f64 = segs.iter().map(|s| s.gamma * s.gamma * s.len as f64).sum();
+    assert!(sum_gamma > 0.0);
+
+    let mut variance_term = 0.0;
+    let mut syncs = 0usize;
+    let mut grad_sq = a.grad_sq0;
+    for s in segs {
+        let weight = s.gamma * s.len as f64 / sum_gamma;
+        let vbound = variance_bound_segment(a, s, grad_sq)?;
+        variance_term += a.l * a.l * weight * vbound;
+        syncs += s.len / s.p.max(1);
+        grad_sq *= a.grad_decay;
+    }
+
+    Some(Bound {
+        opt_term: 2.0 * a.f0_gap / sum_gamma,
+        variance_term,
+        noise_term: (sum_gamma2 / sum_gamma) * a.l * a.sigma2 / a.m as f64,
+        syncs,
+    })
+}
+
+/// ADPSGD's variance term under condition (13), `Var[Wₖ] ≤ γₖ·C₂/M`:
+/// equation (14)'s `(Σγₖ²/Σγₖ)·L²C₂/M` — same asymptotic order as the
+/// noise term, i.e. O(1/√(MK)) under γ ∝ √(M/K).
+pub fn adaptive_variance_term(a: &Assumptions, segs: &[Segment], c2: f64) -> f64 {
+    let sum_gamma: f64 = segs.iter().map(|s| s.gamma * s.len as f64).sum();
+    let sum_gamma2: f64 = segs.iter().map(|s| s.gamma * s.gamma * s.len as f64).sum();
+    (sum_gamma2 / sum_gamma) * a.l * a.l * c2 / a.m as f64
+}
+
+/// The paper's §III-A worked example: four period strategies on the
+/// CIFAR schedule (lr 0.1, ×0.1 at k=2000,3000 of 4000).  Returns
+/// (label, bound, syncs) rows.
+pub fn section3a_strategies(a: &Assumptions) -> Vec<(String, Option<Bound>, usize)> {
+    let lr = LrSchedule::StepDecay { boundaries: vec![2000, 3000], factor: 0.1 };
+    let k = 4000;
+    let cases: Vec<(&str, Vec<(usize, usize)>)> = vec![
+        ("strategy-1 (4 then 8)", vec![(0, 4), (2000, 8)]),
+        ("strategy-2 (8 then 4)", vec![(0, 8), (2000, 4)]),
+        ("strategy-3 (8 const)", vec![(0, 8)]),
+        ("strategy-4 (5 const)", vec![(0, 5)]),
+    ];
+    cases
+        .into_iter()
+        .map(|(label, periods)| {
+            let segs = segments(&lr, 0.1, &periods, k);
+            let bound = convergence_bound(a, &segs);
+            let syncs = bound.map(|b| b.syncs).unwrap_or(0);
+            (label.to_string(), bound, syncs)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assumptions() -> Assumptions {
+        // L small enough that the proper-period condition 3γ²np²L² < 1
+        // holds for the paper's (γ=0.1, n=16, p≤8) geometry
+        Assumptions { l: 0.1, ..Default::default() }
+    }
+
+    #[test]
+    fn segments_split_at_all_boundaries() {
+        let lr = LrSchedule::StepDecay { boundaries: vec![2000, 3000], factor: 0.1 };
+        let segs = segments(&lr, 0.1, &[(0, 4), (2500, 8)], 4000);
+        let lens: Vec<usize> = segs.iter().map(|s| s.len).collect();
+        assert_eq!(lens, vec![2000, 500, 500, 1000]);
+        assert_eq!(segs[0].p, 4);
+        assert_eq!(segs[1].p, 4);
+        assert_eq!(segs[2].p, 8);
+        assert!((segs[1].gamma - 0.01).abs() < 1e-6); // f32 lr slack
+        assert_eq!(segs.iter().map(|s| s.len).sum::<usize>(), 4000);
+    }
+
+    #[test]
+    fn variance_bound_monotone_in_p() {
+        let a = assumptions();
+        let mk = |p| Segment { len: 1000, gamma: 0.01, p };
+        let mut prev = 0.0;
+        for p in [1usize, 2, 4, 8, 16] {
+            let v = variance_bound_segment(&a, &mk(p), 1.0).unwrap();
+            assert!(v >= prev, "bound must grow with p: {v} at p={p}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn improper_period_rejected() {
+        // 3γ²np²L² ≥ 1 ⇒ the analysis breaks down ⇒ None
+        let a = Assumptions { l: 10.0, ..assumptions() };
+        let s = Segment { len: 100, gamma: 0.1, p: 64 };
+        assert!(variance_bound_segment(&a, &s, 1.0).is_none());
+    }
+
+    #[test]
+    fn paper_section3a_ordering() {
+        // the paper's argument: at equal communication, strategy-1
+        // (small p early) beats strategy-2 (small p late); and
+        // strategy-1 beats strategy-4 with *less* communication
+        let rows = section3a_strategies(&assumptions());
+        let get = |label: &str| {
+            rows.iter()
+                .find(|(l, _, _)| l.starts_with(label))
+                .map(|(_, b, s)| (b.unwrap(), *s))
+                .unwrap()
+        };
+        let (s1, c1) = get("strategy-1");
+        let (s2, c2) = get("strategy-2");
+        let (s3, c3) = get("strategy-3");
+        let (s4, c4) = get("strategy-4");
+        assert_eq!(c1, 750, "paper: 2000/4 + 2000/8");
+        assert_eq!(c2, 750);
+        assert_eq!(c3, 500);
+        assert_eq!(c4, 800);
+        assert!(
+            s1.variance_term < s2.variance_term,
+            "strategy-1 {} must beat strategy-2 {}",
+            s1.variance_term,
+            s2.variance_term
+        );
+        assert!(s1.variance_term < s3.variance_term);
+        assert!(
+            s1.variance_term < s4.variance_term && c1 < c4,
+            "strategy-1 beats strategy-4 with less communication"
+        );
+        // opt and noise terms identical across strategies (same γ path)
+        assert!((s1.opt_term - s2.opt_term).abs() < 1e-15);
+        assert!((s1.noise_term - s2.noise_term).abs() < 1e-15);
+    }
+
+    #[test]
+    fn adaptive_term_is_noise_order() {
+        // (14): with Var ≤ γC₂/M the variance term has the same γ²-sum
+        // structure as the noise term — the O(1/√(MK)) preservation
+        let a = assumptions();
+        let lr = LrSchedule::StepDecay { boundaries: vec![2000, 3000], factor: 0.1 };
+        let segs = segments(&lr, 0.1, &[(0, 4)], 4000);
+        let v = adaptive_variance_term(&a, &segs, 1.0);
+        let b = convergence_bound(&a, &segs).unwrap();
+        // same structural factor Σγ²/Σγ:
+        let ratio = v / b.noise_term;
+        let expect = a.l * 1.0 / a.sigma2; // L²C₂/M ÷ Lσ²/M = L·C₂/σ²
+        assert!((ratio - expect).abs() < 1e-12, "{ratio} vs {expect}");
+    }
+
+    #[test]
+    fn noise_term_scales_inverse_m() {
+        let mut a = assumptions();
+        let lr = LrSchedule::Const;
+        let segs = segments(&lr, 0.05, &[(0, 4)], 1000);
+        let b1 = convergence_bound(&a, &segs).unwrap();
+        a.m *= 4;
+        let b2 = convergence_bound(&a, &segs).unwrap();
+        assert!((b1.noise_term / b2.noise_term - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn full_communication_has_zero_variance_term() {
+        let a = assumptions();
+        let segs = segments(&LrSchedule::Const, 0.05, &[(0, 1)], 1000);
+        let b = convergence_bound(&a, &segs).unwrap();
+        assert_eq!(b.variance_term, 0.0);
+        assert_eq!(b.syncs, 1000);
+    }
+}

@@ -1,0 +1,204 @@
+//! Checkpointing: binary snapshots of the (averaged) model parameters.
+//!
+//! The coordinator writes a snapshot of the post-synchronization mean
+//! parameters every `checkpoint_every` iterations (leader only — after a
+//! sync all nodes hold the same w), and any run can warm-start from a
+//! snapshot via `init_from`.  Momentum is deliberately *not* restored:
+//! it is node-local state (the paper averages only parameters), and a
+//! warm start is a new trajectory.
+//!
+//! Format (little-endian): magic `ADPK`, version u32, iter u64,
+//! n_params u64, loss f64, then n f32 parameters, then a u64 xor
+//! checksum of the payload words.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 4] = b"ADPK";
+const VERSION: u32 = 1;
+
+/// One parameter snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub iter: u64,
+    pub loss: f64,
+    pub w: Vec<f32>,
+}
+
+fn checksum(w: &[f32]) -> u64 {
+    let mut acc = 0xD1B54A32D192ED03u64;
+    for (i, v) in w.iter().enumerate() {
+        acc ^= (v.to_bits() as u64).rotate_left((i % 63) as u32);
+        acc = acc.wrapping_mul(0x9E3779B97F4A7C15);
+    }
+    acc
+}
+
+impl Checkpoint {
+    pub fn new(iter: u64, loss: f64, w: Vec<f32>) -> Self {
+        Checkpoint { iter, loss, w }
+    }
+
+    /// Canonical file name for iteration `iter` under `dir`.
+    pub fn path_for(dir: &Path, iter: u64) -> PathBuf {
+        dir.join(format!("ckpt_{iter:010}.adpk"))
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        // write to a temp file then rename: a crash never leaves a
+        // half-written "latest" checkpoint
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(
+                std::fs::File::create(&tmp)
+                    .with_context(|| format!("creating {}", tmp.display()))?,
+            );
+            f.write_all(MAGIC)?;
+            f.write_all(&VERSION.to_le_bytes())?;
+            f.write_all(&self.iter.to_le_bytes())?;
+            f.write_all(&(self.w.len() as u64).to_le_bytes())?;
+            f.write_all(&self.loss.to_le_bytes())?;
+            for v in &self.w {
+                f.write_all(&v.to_le_bytes())?;
+            }
+            f.write_all(&checksum(&self.w).to_le_bytes())?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: not an adpsgd checkpoint (bad magic)", path.display());
+        }
+        let mut b4 = [0u8; 4];
+        let mut b8 = [0u8; 8];
+        f.read_exact(&mut b4)?;
+        let version = u32::from_le_bytes(b4);
+        if version != VERSION {
+            bail!("{}: unsupported checkpoint version {version}", path.display());
+        }
+        f.read_exact(&mut b8)?;
+        let iter = u64::from_le_bytes(b8);
+        f.read_exact(&mut b8)?;
+        let n = u64::from_le_bytes(b8) as usize;
+        if n > (1usize << 33) {
+            bail!("{}: implausible parameter count {n}", path.display());
+        }
+        f.read_exact(&mut b8)?;
+        let loss = f64::from_le_bytes(b8);
+        let mut w = vec![0.0f32; n];
+        let mut buf = vec![0u8; n * 4];
+        f.read_exact(&mut buf)?;
+        for (i, c) in buf.chunks_exact(4).enumerate() {
+            w[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        f.read_exact(&mut b8)?;
+        let want = u64::from_le_bytes(b8);
+        let got = checksum(&w);
+        if want != got {
+            bail!("{}: checksum mismatch (corrupt checkpoint)", path.display());
+        }
+        Ok(Checkpoint { iter, loss, w })
+    }
+
+    /// Latest checkpoint (by iteration) in a directory, if any.
+    pub fn latest(dir: &Path) -> Result<Option<PathBuf>> {
+        if !dir.exists() {
+            return Ok(None);
+        }
+        let mut best: Option<(u64, PathBuf)> = None;
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+            let Some(iter_str) = name.strip_prefix("ckpt_").and_then(|s| s.strip_suffix(".adpk"))
+            else {
+                continue;
+            };
+            if let Ok(iter) = iter_str.parse::<u64>() {
+                if best.as_ref().map(|(b, _)| iter > *b).unwrap_or(true) {
+                    best = Some((iter, path));
+                }
+            }
+        }
+        Ok(best.map(|(_, p)| p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("adpsgd_ckpt_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let dir = tmpdir("rt");
+        let w: Vec<f32> = (0..1000).map(|i| (i as f32).sin()).collect();
+        let ck = Checkpoint::new(42, 0.123, w);
+        let path = Checkpoint::path_for(&dir, ck.iter);
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let dir = tmpdir("corrupt");
+        let ck = Checkpoint::new(1, 0.0, vec![1.0; 64]);
+        let path = Checkpoint::path_for(&dir, 1);
+        ck.save(&path).unwrap();
+        // flip one byte mid-payload
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let dir = tmpdir("magic");
+        let path = dir.join("ckpt_0000000001.adpk");
+        std::fs::write(&path, b"NOPE-not-a-checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).unwrap_err().to_string().contains("magic"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn latest_picks_highest_iter() {
+        let dir = tmpdir("latest");
+        for iter in [5u64, 900, 37] {
+            Checkpoint::new(iter, 0.0, vec![0.5; 8])
+                .save(&Checkpoint::path_for(&dir, iter))
+                .unwrap();
+        }
+        let latest = Checkpoint::latest(&dir).unwrap().unwrap();
+        assert!(latest.to_str().unwrap().contains("0000000900"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn latest_empty_dir_is_none() {
+        let dir = tmpdir("empty");
+        assert!(Checkpoint::latest(&dir).unwrap().is_none());
+        assert!(Checkpoint::latest(Path::new("/no/such/dir")).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

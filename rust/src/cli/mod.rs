@@ -1,0 +1,141 @@
+//! Tiny CLI argument parser (clap is not in the offline registry).
+//!
+//! Grammar used by the launcher and every example:
+//!
+//! ```text
+//! prog [subcommand] [--flag] [--key value] [--key=value] [positional...]
+//! ```
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// declared flag names (so `--flag value` is not misparsed)
+    #[allow(dead_code)]
+    bool_flags: Vec<&'static str>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]).  `bool_flags` lists
+    /// options that take no value.
+    pub fn parse_env(bool_flags: &[&'static str]) -> Result<Args> {
+        Self::parse(std::env::args().skip(1).collect(), bool_flags)
+    }
+
+    pub fn parse(argv: Vec<String>, bool_flags: &[&'static str]) -> Result<Args> {
+        let mut out = Args { bool_flags: bool_flags.to_vec(), ..Default::default() };
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    let Some(v) = argv.get(i + 1) else {
+                        bail!("option --{body} expects a value");
+                    };
+                    out.options.insert(body.to_string(), v.clone());
+                    i += 1;
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() && out.options.is_empty()
+            {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    /// All `--set key=value` style config overrides: collects every
+    /// option whose key contains a '.' (dotted config path).
+    pub fn config_overrides(&self) -> Vec<(String, String)> {
+        self.options
+            .iter()
+            .filter(|(k, _)| k.contains('.'))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(
+            argv(&["train", "--config", "c.toml", "--verbose", "--nodes=8", "extra"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("config"), Some("c.toml"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("nodes"), Some("8"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(argv(&["--config"]), &[]).is_err());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(argv(&["--n=4", "--f", "2.5"]), &[]).unwrap();
+        assert_eq!(a.get_usize("n", 1).unwrap(), 4);
+        assert_eq!(a.get_f64("f", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_usize("absent", 7).unwrap(), 7);
+        assert!(a.get_usize("f", 0).is_err());
+    }
+
+    #[test]
+    fn dotted_overrides() {
+        let a = Args::parse(argv(&["--sync.period=8", "--net.bandwidth_gbps", "10"]), &[]).unwrap();
+        let ov = a.config_overrides();
+        assert_eq!(ov.len(), 2);
+        assert!(ov.contains(&("sync.period".into(), "8".into())));
+    }
+}

@@ -1,0 +1,456 @@
+//! In-process collectives across worker threads.
+//!
+//! The simulated cluster's "nodes" are OS threads in one address space,
+//! so collectives move real data between real threads — the shared-
+//! memory analogue of NCCL's ring allreduce:
+//!
+//! 1. **publish** — every rank copies its vector into its slot
+//! 2. **reduce-scatter** — rank r averages chunk r across all slots
+//!    (fixed rank order, so float summation is deterministic regardless
+//!    of thread scheduling)
+//! 3. **allgather** — every rank copies the full averaged vector back
+//!
+//! Three barriers separate the phases; chunk writes in phase 2 are
+//! disjoint by construction, which is what makes the single shared
+//! result buffer sound (see `SharedVec`).
+//!
+//! **Failure handling**: a worker that hits an error mid-run calls
+//! [`Comm::poison`]; every rank blocked in (or arriving at) a collective
+//! then returns [`CommError::Poisoned`] instead of deadlocking — the
+//! in-process analogue of NCCL's communicator abort.  The barrier is a
+//! custom Mutex+Condvar generation barrier because `std::sync::Barrier`
+//! cannot be interrupted.
+//!
+//! Wall-clock *modeling* of the same exchange on a real network lives in
+//! [`crate::netsim`]; this module is the data plane.
+
+use std::cell::UnsafeCell;
+use std::sync::{Condvar, Mutex};
+
+/// A collective failed because some rank aborted the communicator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Poisoned;
+
+impl std::fmt::Display for Poisoned {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("communicator poisoned: a peer rank failed")
+    }
+}
+
+impl std::error::Error for Poisoned {}
+
+/// Interruptible generation barrier.
+struct AbortableBarrier {
+    n: usize,
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+}
+
+#[derive(Debug)]
+struct BarrierState {
+    count: usize,
+    generation: u64,
+    poisoned: bool,
+}
+
+impl AbortableBarrier {
+    fn new(n: usize) -> Self {
+        AbortableBarrier {
+            n,
+            state: Mutex::new(BarrierState { count: 0, generation: 0, poisoned: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn wait(&self) -> Result<(), Poisoned> {
+        let mut s = self.state.lock().unwrap();
+        if s.poisoned {
+            return Err(Poisoned);
+        }
+        s.count += 1;
+        if s.count == self.n {
+            s.count = 0;
+            s.generation = s.generation.wrapping_add(1);
+            self.cv.notify_all();
+            return Ok(());
+        }
+        let gen = s.generation;
+        while s.generation == gen && !s.poisoned {
+            s = self.cv.wait(s).unwrap();
+        }
+        if s.poisoned {
+            Err(Poisoned)
+        } else {
+            Ok(())
+        }
+    }
+
+    fn poison(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.poisoned = true;
+        self.cv.notify_all();
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.state.lock().unwrap().poisoned
+    }
+}
+
+/// Shared f32 buffer written in disjoint chunks between barriers.
+///
+/// Safety contract: phase-2 writers each own a disjoint index range
+/// (rank-derived), and barriers order every write before any phase-3
+/// read.  No two threads ever touch the same element between barriers.
+struct SharedVec(UnsafeCell<Vec<f32>>);
+
+// SAFETY: see the contract above — disjoint writes + barrier ordering.
+unsafe impl Sync for SharedVec {}
+
+impl SharedVec {
+    fn new(n: usize) -> Self {
+        SharedVec(UnsafeCell::new(vec![0.0; n]))
+    }
+
+    /// SAFETY: caller must hold a disjoint range per thread (phase 2).
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slice_mut(&self, lo: usize, hi: usize) -> &mut [f32] {
+        let v: *mut Vec<f32> = self.0.get();
+        &mut (unsafe { &mut *v })[lo..hi]
+    }
+
+    /// SAFETY: caller must be in a read-only phase (after the write
+    /// barrier, before the reuse barrier).
+    unsafe fn slice(&self) -> &[f32] {
+        let v: *const Vec<f32> = self.0.get();
+        unsafe { &*v }
+    }
+}
+
+/// A communicator for `n` ranks over vectors of length `len`.
+pub struct Comm {
+    n: usize,
+    len: usize,
+    slots: Vec<Mutex<Vec<f32>>>,
+    result: SharedVec,
+    scalars: Vec<Mutex<f64>>,
+    barrier: AbortableBarrier,
+}
+
+impl Comm {
+    pub fn new(n: usize, len: usize) -> Self {
+        assert!(n >= 1);
+        Comm {
+            n,
+            len,
+            slots: (0..n).map(|_| Mutex::new(vec![0.0; len])).collect(),
+            result: SharedVec::new(len),
+            scalars: (0..n).map(|_| Mutex::new(0.0)).collect(),
+            barrier: AbortableBarrier::new(n),
+        }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    /// Abort the communicator: every rank blocked in (or arriving at) a
+    /// collective returns `Err(Poisoned)`.  Idempotent.
+    pub fn poison(&self) {
+        self.barrier.poison();
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.barrier.is_poisoned()
+    }
+
+    /// Block until all ranks arrive (or the communicator is poisoned).
+    pub fn barrier(&self) -> Result<(), Poisoned> {
+        if self.n > 1 {
+            self.barrier.wait()
+        } else {
+            Ok(())
+        }
+    }
+
+    fn chunk(&self, rank: usize) -> (usize, usize) {
+        let lo = rank * self.len / self.n;
+        let hi = (rank + 1) * self.len / self.n;
+        (lo, hi)
+    }
+
+    /// Average `buf` elementwise across all ranks (every rank must call
+    /// with an equal-length buffer; all receive the mean).
+    ///
+    /// Deterministic: the reduction order per element is rank order, so
+    /// results are bit-identical across runs and thread schedules.
+    pub fn allreduce_mean(&self, rank: usize, buf: &mut [f32]) -> Result<(), Poisoned> {
+        assert_eq!(buf.len(), self.len);
+        assert!(rank < self.n);
+        if self.n == 1 {
+            return Ok(());
+        }
+        // phase 1: publish
+        self.slots[rank].lock().unwrap().copy_from_slice(buf);
+        self.barrier()?;
+        // phase 2: reduce-scatter my chunk (deterministic rank order)
+        let (lo, hi) = self.chunk(rank);
+        if lo < hi {
+            // SAFETY: [lo, hi) is disjoint per rank; barriers order phases.
+            let out = unsafe { self.result.slice_mut(lo, hi) };
+            let inv = 1.0 / self.n as f32;
+            let first = self.slots[0].lock().unwrap();
+            out.copy_from_slice(&first[lo..hi]);
+            drop(first);
+            for r in 1..self.n {
+                let slot = self.slots[r].lock().unwrap();
+                for (o, v) in out.iter_mut().zip(&slot[lo..hi]) {
+                    *o += *v;
+                }
+            }
+            for o in out.iter_mut() {
+                *o *= inv;
+            }
+        }
+        self.barrier()?;
+        // phase 3: allgather
+        // SAFETY: writes finished at the barrier above; next mutation
+        // happens only after the final barrier below.
+        buf.copy_from_slice(unsafe { self.result.slice() });
+        self.barrier()?;
+        Ok(())
+    }
+
+    /// Sum a scalar across ranks (used for the S_k statistic and loss
+    /// aggregation).  Deterministic (rank-ordered sum).
+    pub fn allreduce_scalar_sum(&self, rank: usize, v: f64) -> Result<f64, Poisoned> {
+        if self.n == 1 {
+            return Ok(v);
+        }
+        *self.scalars[rank].lock().unwrap() = v;
+        self.barrier()?;
+        let mut acc = 0.0;
+        for s in &self.scalars {
+            acc += *s.lock().unwrap();
+        }
+        self.barrier()?;
+        Ok(acc)
+    }
+
+    /// Rank 0's value wins; everyone receives it (parameter broadcast at
+    /// init so all nodes start from the same w₀, as the paper requires).
+    pub fn broadcast(&self, rank: usize, buf: &mut [f32]) -> Result<(), Poisoned> {
+        assert_eq!(buf.len(), self.len);
+        if self.n == 1 {
+            return Ok(());
+        }
+        if rank == 0 {
+            self.slots[0].lock().unwrap().copy_from_slice(buf);
+        }
+        self.barrier()?;
+        if rank != 0 {
+            buf.copy_from_slice(&self.slots[0].lock().unwrap());
+        }
+        self.barrier()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn run_ranks<F>(n: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                let f = Arc::clone(&f);
+                std::thread::spawn(move || f(r))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn allreduce_mean_correct() {
+        let n = 4;
+        let len = 1000;
+        let comm = Arc::new(Comm::new(n, len));
+        let outputs: Arc<Vec<Mutex<Vec<f32>>>> =
+            Arc::new((0..n).map(|_| Mutex::new(vec![])).collect());
+        {
+            let comm = Arc::clone(&comm);
+            let outputs = Arc::clone(&outputs);
+            run_ranks(n, move |rank| {
+                let mut buf: Vec<f32> = (0..len).map(|i| (rank * len + i) as f32).collect();
+                comm.allreduce_mean(rank, &mut buf).unwrap();
+                *outputs[rank].lock().unwrap() = buf;
+            });
+        }
+        // expected mean of rank*len + i over ranks = i + len*(n-1)/2
+        let expect: Vec<f32> = (0..len).map(|i| i as f32 + len as f32 * 1.5).collect();
+        for r in 0..n {
+            let got = outputs[r].lock().unwrap();
+            assert_eq!(&*got, &expect, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn repeated_allreduce_deterministic() {
+        let n = 8;
+        let len = 4097; // non-divisible chunks
+        let run = || {
+            let comm = Arc::new(Comm::new(n, len));
+            let out: Arc<Mutex<Vec<f32>>> = Arc::new(Mutex::new(vec![]));
+            let out2 = Arc::clone(&out);
+            let comm2 = Arc::clone(&comm);
+            run_ranks(n, move |rank| {
+                let mut rng = Rng::new(123, rank as u64);
+                let mut buf = vec![0.0f32; len];
+                rng.fill_normal(&mut buf, 1.0);
+                for _ in 0..3 {
+                    comm2.allreduce_mean(rank, &mut buf).unwrap();
+                }
+                if rank == 0 {
+                    *out2.lock().unwrap() = buf;
+                }
+            });
+            let v = out.lock().unwrap().clone();
+            v
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "allreduce must be bit-deterministic");
+    }
+
+    #[test]
+    fn all_ranks_agree_after_allreduce() {
+        let n = 5;
+        let len = 333;
+        let comm = Arc::new(Comm::new(n, len));
+        let outputs: Arc<Vec<Mutex<Vec<f32>>>> =
+            Arc::new((0..n).map(|_| Mutex::new(vec![])).collect());
+        {
+            let comm = Arc::clone(&comm);
+            let outputs = Arc::clone(&outputs);
+            run_ranks(n, move |rank| {
+                let mut rng = Rng::new(7, rank as u64);
+                let mut buf = vec![0.0f32; len];
+                rng.fill_normal(&mut buf, 2.0);
+                comm.allreduce_mean(rank, &mut buf).unwrap();
+                *outputs[rank].lock().unwrap() = buf;
+            });
+        }
+        let first = outputs[0].lock().unwrap().clone();
+        for r in 1..n {
+            assert_eq!(*outputs[r].lock().unwrap(), first);
+        }
+    }
+
+    #[test]
+    fn scalar_sum_and_broadcast() {
+        let n = 6;
+        let comm = Arc::new(Comm::new(n, 8));
+        let sums: Arc<Vec<Mutex<f64>>> = Arc::new((0..n).map(|_| Mutex::new(0.0)).collect());
+        {
+            let comm = Arc::clone(&comm);
+            let sums = Arc::clone(&sums);
+            run_ranks(n, move |rank| {
+                let s = comm.allreduce_scalar_sum(rank, (rank + 1) as f64).unwrap();
+                *sums[rank].lock().unwrap() = s;
+                let mut buf = vec![rank as f32; 8];
+                comm.broadcast(rank, &mut buf).unwrap();
+                assert!(buf.iter().all(|&v| v == 0.0), "rank {rank} got {buf:?}");
+            });
+        }
+        for r in 0..n {
+            assert_eq!(*sums[r].lock().unwrap(), 21.0);
+        }
+    }
+
+    #[test]
+    fn single_rank_is_noop() {
+        let comm = Comm::new(1, 4);
+        let mut buf = vec![1.0, 2.0, 3.0, 4.0];
+        comm.allreduce_mean(0, &mut buf).unwrap();
+        assert_eq!(buf, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(comm.allreduce_scalar_sum(0, 5.0).unwrap(), 5.0);
+    }
+
+    #[test]
+    fn sequential_scalar_rounds_do_not_interfere() {
+        let n = 3;
+        let comm = Arc::new(Comm::new(n, 1));
+        let ok = Arc::new(Mutex::new(true));
+        {
+            let comm = Arc::clone(&comm);
+            let ok = Arc::clone(&ok);
+            run_ranks(n, move |rank| {
+                for round in 0..50u64 {
+                    let s = comm.allreduce_scalar_sum(rank, (round + rank as u64) as f64).unwrap();
+                    let expect = (3 * round + 3) as f64; // sum over ranks 0..3 of round+rank
+                    if (s - expect).abs() > 1e-12 {
+                        *ok.lock().unwrap() = false;
+                    }
+                }
+            });
+        }
+        assert!(*ok.lock().unwrap());
+    }
+
+    #[test]
+    fn poison_unblocks_waiting_ranks() {
+        // rank 1 never joins the collective; rank 2 poisons after a
+        // delay; rank 0 must return Err instead of hanging forever.
+        let n = 3;
+        let comm = Arc::new(Comm::new(n, 64));
+        let results: Arc<Vec<Mutex<Option<Result<(), Poisoned>>>>> =
+            Arc::new((0..n).map(|_| Mutex::new(None)).collect());
+        {
+            let comm = Arc::clone(&comm);
+            let results = Arc::clone(&results);
+            run_ranks(n, move |rank| {
+                match rank {
+                    0 => {
+                        let mut buf = vec![1.0f32; 64];
+                        let r = comm.allreduce_mean(0, &mut buf);
+                        *results[0].lock().unwrap() = Some(r);
+                    }
+                    1 => { /* failed node: never participates */ }
+                    _ => {
+                        std::thread::sleep(std::time::Duration::from_millis(50));
+                        comm.poison();
+                        *results[2].lock().unwrap() = Some(Err(Poisoned));
+                    }
+                }
+            });
+        }
+        assert_eq!(*results[0].lock().unwrap(), Some(Err(Poisoned)));
+        assert!(comm.is_poisoned());
+    }
+
+    #[test]
+    fn poisoned_comm_rejects_new_collectives() {
+        let comm = Comm::new(2, 4);
+        comm.poison();
+        let mut buf = vec![0.0f32; 4];
+        assert_eq!(comm.allreduce_mean(0, &mut buf), Err(Poisoned));
+        assert_eq!(comm.allreduce_scalar_sum(1, 1.0), Err(Poisoned));
+        assert_eq!(comm.broadcast(0, &mut buf), Err(Poisoned));
+    }
+
+    #[test]
+    fn poison_is_idempotent_and_sticky() {
+        let comm = Comm::new(2, 1);
+        comm.poison();
+        comm.poison();
+        assert!(comm.is_poisoned());
+        assert_eq!(comm.barrier(), Err(Poisoned));
+    }
+}

@@ -1,0 +1,565 @@
+//! Typed experiment configuration + TOML loading/validation.
+//!
+//! Every run of the system — examples, benches, the `adpsgd` launcher —
+//! is described by an [`ExperimentConfig`].  Configs can be built in
+//! code, loaded from a TOML file, or patched by `--key=value` CLI
+//! overrides (see [`crate::cli`]).
+
+pub mod toml;
+
+use crate::period::Strategy;
+use anyhow::{anyhow, bail, Context, Result};
+use toml::{TomlDoc, TomlValue};
+
+/// Which compute backend executes the local SGD step.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Backend {
+    /// Pure-rust workload (fast; used for the statistics figures).
+    Native(String),
+    /// AOT-compiled HLO executed via PJRT (the product path).
+    Hlo(String),
+}
+
+impl Default for Backend {
+    fn default() -> Self {
+        Backend::Native("mlp".into())
+    }
+}
+
+/// Learning-rate schedule (paper §IV: step decay for CIFAR, gradual
+/// warmup + step decay for ImageNet).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LrSchedule {
+    Const,
+    /// lr0 scaled by `factor` at each boundary iteration.
+    StepDecay { boundaries: Vec<usize>, factor: f32 },
+    /// Linear ramp from lr0/warmup_factor to lr0 over `warmup_iters`,
+    /// then step decay.
+    Warmup { warmup_iters: usize, warmup_factor: f32, boundaries: Vec<usize>, factor: f32 },
+}
+
+impl Default for LrSchedule {
+    fn default() -> Self {
+        LrSchedule::StepDecay { boundaries: vec![2000, 3000], factor: 0.1 }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptimConfig {
+    pub lr0: f32,
+    pub momentum: f32,
+    pub schedule: LrSchedule,
+}
+
+impl Default for OptimConfig {
+    fn default() -> Self {
+        OptimConfig { lr0: 0.1, momentum: 0.9, schedule: LrSchedule::default() }
+    }
+}
+
+/// Synchronization strategy configuration (the paper's knobs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyncConfig {
+    pub strategy: Strategy,
+    /// CPSGD period (also the fallback/logging initial period).
+    pub period: usize,
+    /// ADPSGD: p_init after the warmup epoch (paper: 4).
+    pub p_init: usize,
+    /// ADPSGD: iterations with p=1 before Algorithm 2 engages (paper:
+    /// "averaging period of 1 for the first epoch").
+    pub warmup_iters: usize,
+    /// ADPSGD: C2-sampling horizon K_s, as a fraction of total iters
+    /// (paper: K_s = 0.25K CIFAR, 0.2K ImageNet).
+    pub ks_frac: f64,
+    /// ADPSGD thresholds (paper: 0.7 / 1.3).
+    pub low: f64,
+    pub high: f64,
+    /// Decreasing-period strawman (§V-B): period before/after the switch.
+    pub dec_first: usize,
+    pub dec_second: usize,
+    /// QSGD: quantization levels (paper: 8 bits -> 255) and bucket size.
+    pub qsgd_levels: u32,
+    pub qsgd_bucket: usize,
+    /// Piecewise schedule spec ("0:4,2000:8") for [`Strategy::Piecewise`].
+    pub piecewise: String,
+    /// EASGD elastic coefficient α (fraction each node moves toward the
+    /// mean at a sync; 1.0 degenerates to CPSGD).
+    pub easgd_alpha: f64,
+    /// Top-k sparsification: fraction of gradient components kept.
+    pub topk_frac: f64,
+}
+
+impl Default for SyncConfig {
+    fn default() -> Self {
+        SyncConfig {
+            strategy: Strategy::Adaptive,
+            period: 8,
+            p_init: 4,
+            warmup_iters: 0,
+            ks_frac: 0.25,
+            low: 0.7,
+            high: 1.3,
+            dec_first: 20,
+            dec_second: 5,
+            qsgd_levels: 255,
+            qsgd_bucket: 512,
+            piecewise: "0:4,2000:8".into(),
+            easgd_alpha: 0.5,
+            topk_frac: 0.03125,
+        }
+    }
+}
+
+/// Network cost-model configuration (see [`crate::netsim`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetConfig {
+    pub bandwidth_gbps: f64,
+    pub latency_us: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig { bandwidth_gbps: 100.0, latency_us: 2.0 }
+    }
+}
+
+impl NetConfig {
+    pub fn infiniband_100g() -> Self {
+        NetConfig { bandwidth_gbps: 100.0, latency_us: 2.0 }
+    }
+    /// Paper's throttled-cloud setting (trickle to 5Gbps up/down).
+    pub fn ethernet_10g() -> Self {
+        NetConfig { bandwidth_gbps: 10.0, latency_us: 25.0 }
+    }
+}
+
+/// Workload/data configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    pub backend: Backend,
+    /// synthetic classification: input dim / classes / difficulty
+    pub input_dim: usize,
+    pub classes: usize,
+    pub hidden: usize,
+    pub noise: f32,
+    pub label_noise: f32,
+    /// held-out evaluation batches
+    pub eval_batches: usize,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            backend: Backend::default(),
+            input_dim: 256,
+            classes: 10,
+            hidden: 128,
+            noise: 1.0,
+            label_noise: 0.05,
+            eval_batches: 16,
+        }
+    }
+}
+
+/// Top-level experiment description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub seed: u64,
+    /// number of simulated nodes (paper: up to 16)
+    pub nodes: usize,
+    /// total iterations K
+    pub iters: usize,
+    /// per-node mini-batch size (paper: 128)
+    pub batch_per_node: usize,
+    pub eval_every: usize,
+    /// record Var[W_k] every this many iterations (0 = off). This is
+    /// measurement instrumentation (not charged to the comm ledger).
+    pub variance_every: usize,
+    pub threads: usize,
+    pub workload: WorkloadConfig,
+    pub optim: OptimConfig,
+    pub sync: SyncConfig,
+    pub net: NetConfig,
+    /// directory with AOT artifacts (HLO backend)
+    pub artifacts_dir: String,
+    /// write a parameter snapshot every this many iterations (0 = off)
+    pub checkpoint_every: usize,
+    /// where snapshots go (created on demand)
+    pub checkpoint_dir: String,
+    /// warm-start parameters from this checkpoint file (or a directory,
+    /// in which case the latest snapshot is used)
+    pub init_from: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "experiment".into(),
+            seed: 42,
+            nodes: 16,
+            iters: 4000,
+            batch_per_node: 32,
+            eval_every: 200,
+            variance_every: 0,
+            threads: 0,
+            workload: WorkloadConfig::default(),
+            optim: OptimConfig::default(),
+            sync: SyncConfig::default(),
+            net: NetConfig::default(),
+            artifacts_dir: "artifacts".into(),
+            checkpoint_every: 0,
+            checkpoint_dir: "checkpoints".into(),
+            init_from: String::new(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Total mini-batch M = nodes * batch_per_node (paper: 16*128 = 2048).
+    pub fn total_batch(&self) -> usize {
+        self.nodes * self.batch_per_node
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes == 0 {
+            bail!("nodes must be >= 1");
+        }
+        if self.iters == 0 {
+            bail!("iters must be >= 1");
+        }
+        if self.batch_per_node == 0 {
+            bail!("batch_per_node must be >= 1");
+        }
+        if !(self.optim.lr0 > 0.0) {
+            bail!("lr0 must be positive");
+        }
+        if !(0.0..1.0).contains(&self.optim.momentum) {
+            bail!("momentum must be in [0, 1)");
+        }
+        let s = &self.sync;
+        if s.period == 0 || s.p_init == 0 {
+            bail!("periods must be >= 1");
+        }
+        if !(s.low < 1.0 && s.high > 1.0) {
+            bail!("adaptive thresholds must straddle 1.0 (low < 1 < high)");
+        }
+        if !(0.0..=1.0).contains(&s.ks_frac) {
+            bail!("ks_frac must be in [0, 1]");
+        }
+        if s.qsgd_levels == 0 || s.qsgd_bucket == 0 {
+            bail!("qsgd parameters must be >= 1");
+        }
+        if s.strategy == Strategy::Piecewise {
+            crate::period::Piecewise::parse(&s.piecewise)
+                .map_err(|e| anyhow!("sync.piecewise: {e}"))?;
+        }
+        if !(0.0 < s.easgd_alpha && s.easgd_alpha <= 1.0) {
+            bail!("easgd_alpha must be in (0, 1]");
+        }
+        if !(0.0 < s.topk_frac && s.topk_frac <= 1.0) {
+            bail!("topk_frac must be in (0, 1]");
+        }
+        if self.net.bandwidth_gbps <= 0.0 || self.net.latency_us < 0.0 {
+            bail!("network parameters must be positive");
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML file, then apply `overrides` ("key=value" pairs,
+    /// dotted keys matching the TOML schema).
+    pub fn from_file(path: &str, overrides: &[(String, String)]) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let mut doc = TomlDoc::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        for (k, v) in overrides {
+            let val = toml::TomlDoc::parse(&format!("x = {v}"))
+                .ok()
+                .and_then(|d| d.get("x").cloned())
+                .unwrap_or_else(|| TomlValue::Str(v.clone()));
+            doc.entries.insert(k.clone(), val);
+        }
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+        let known = Self::known_keys();
+        for key in doc.entries.keys() {
+            if !known.contains(&key.as_str()) {
+                bail!("unknown config key {key:?} (known: {known:?})");
+            }
+        }
+        let gs = |k: &str| doc.get(k).and_then(TomlValue::as_str).map(str::to_string);
+        let gi = |k: &str| doc.get(k).and_then(TomlValue::as_i64);
+        let gf = |k: &str| doc.get(k).and_then(TomlValue::as_f64);
+
+        if let Some(v) = gs("name") {
+            cfg.name = v;
+        }
+        if let Some(v) = gi("seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = gi("nodes") {
+            cfg.nodes = v as usize;
+        }
+        if let Some(v) = gi("iters") {
+            cfg.iters = v as usize;
+        }
+        if let Some(v) = gi("batch_per_node") {
+            cfg.batch_per_node = v as usize;
+        }
+        if let Some(v) = gi("eval_every") {
+            cfg.eval_every = v as usize;
+        }
+        if let Some(v) = gi("variance_every") {
+            cfg.variance_every = v as usize;
+        }
+        if let Some(v) = gi("threads") {
+            cfg.threads = v as usize;
+        }
+        if let Some(v) = gs("artifacts_dir") {
+            cfg.artifacts_dir = v;
+        }
+        if let Some(v) = gi("checkpoint_every") {
+            cfg.checkpoint_every = v as usize;
+        }
+        if let Some(v) = gs("checkpoint_dir") {
+            cfg.checkpoint_dir = v;
+        }
+        if let Some(v) = gs("init_from") {
+            cfg.init_from = v;
+        }
+
+        // workload
+        if let Some(b) = gs("workload.backend") {
+            let name = gs("workload.model").unwrap_or_else(|| "mlp".into());
+            cfg.workload.backend = match b.as_str() {
+                "native" => Backend::Native(name),
+                "hlo" => Backend::Hlo(name),
+                other => bail!("workload.backend must be native|hlo, got {other:?}"),
+            };
+        }
+        if let Some(v) = gi("workload.input_dim") {
+            cfg.workload.input_dim = v as usize;
+        }
+        if let Some(v) = gi("workload.classes") {
+            cfg.workload.classes = v as usize;
+        }
+        if let Some(v) = gi("workload.hidden") {
+            cfg.workload.hidden = v as usize;
+        }
+        if let Some(v) = gf("workload.noise") {
+            cfg.workload.noise = v as f32;
+        }
+        if let Some(v) = gf("workload.label_noise") {
+            cfg.workload.label_noise = v as f32;
+        }
+        if let Some(v) = gi("workload.eval_batches") {
+            cfg.workload.eval_batches = v as usize;
+        }
+
+        // optim
+        if let Some(v) = gf("optim.lr0") {
+            cfg.optim.lr0 = v as f32;
+        }
+        if let Some(v) = gf("optim.momentum") {
+            cfg.optim.momentum = v as f32;
+        }
+        if let Some(v) = gs("optim.schedule") {
+            let boundaries: Vec<usize> = doc
+                .get("optim.boundaries")
+                .and_then(TomlValue::as_arr)
+                .map(|a| a.iter().filter_map(|x| x.as_i64().map(|i| i as usize)).collect())
+                .unwrap_or_else(|| vec![2000, 3000]);
+            let factor = gf("optim.factor").unwrap_or(0.1) as f32;
+            cfg.optim.schedule = match v.as_str() {
+                "const" => LrSchedule::Const,
+                "step" => LrSchedule::StepDecay { boundaries, factor },
+                "warmup" => LrSchedule::Warmup {
+                    warmup_iters: gi("optim.warmup_iters").unwrap_or(0) as usize,
+                    warmup_factor: gf("optim.warmup_factor").unwrap_or(8.0) as f32,
+                    boundaries,
+                    factor,
+                },
+                other => bail!("optim.schedule must be const|step|warmup, got {other:?}"),
+            };
+        }
+
+        // sync
+        if let Some(v) = gs("sync.strategy") {
+            cfg.sync.strategy = v.parse()?;
+        }
+        if let Some(v) = gi("sync.period") {
+            cfg.sync.period = v as usize;
+        }
+        if let Some(v) = gi("sync.p_init") {
+            cfg.sync.p_init = v as usize;
+        }
+        if let Some(v) = gi("sync.warmup_iters") {
+            cfg.sync.warmup_iters = v as usize;
+        }
+        if let Some(v) = gf("sync.ks_frac") {
+            cfg.sync.ks_frac = v;
+        }
+        if let Some(v) = gf("sync.low") {
+            cfg.sync.low = v;
+        }
+        if let Some(v) = gf("sync.high") {
+            cfg.sync.high = v;
+        }
+        if let Some(v) = gi("sync.dec_first") {
+            cfg.sync.dec_first = v as usize;
+        }
+        if let Some(v) = gi("sync.dec_second") {
+            cfg.sync.dec_second = v as usize;
+        }
+        if let Some(v) = gi("sync.qsgd_levels") {
+            cfg.sync.qsgd_levels = v as u32;
+        }
+        if let Some(v) = gi("sync.qsgd_bucket") {
+            cfg.sync.qsgd_bucket = v as usize;
+        }
+        if let Some(v) = gs("sync.piecewise") {
+            cfg.sync.piecewise = v;
+        }
+        if let Some(v) = gf("sync.easgd_alpha") {
+            cfg.sync.easgd_alpha = v;
+        }
+        if let Some(v) = gf("sync.topk_frac") {
+            cfg.sync.topk_frac = v;
+        }
+
+        // net
+        if let Some(v) = gf("net.bandwidth_gbps") {
+            cfg.net.bandwidth_gbps = v;
+        }
+        if let Some(v) = gf("net.latency_us") {
+            cfg.net.latency_us = v;
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn known_keys() -> Vec<&'static str> {
+        vec![
+            "name",
+            "seed",
+            "nodes",
+            "iters",
+            "batch_per_node",
+            "eval_every",
+            "variance_every",
+            "threads",
+            "artifacts_dir",
+            "checkpoint_every",
+            "checkpoint_dir",
+            "init_from",
+            "workload.backend",
+            "workload.model",
+            "workload.input_dim",
+            "workload.classes",
+            "workload.hidden",
+            "workload.noise",
+            "workload.label_noise",
+            "workload.eval_batches",
+            "optim.lr0",
+            "optim.momentum",
+            "optim.schedule",
+            "optim.boundaries",
+            "optim.factor",
+            "optim.warmup_iters",
+            "optim.warmup_factor",
+            "sync.strategy",
+            "sync.period",
+            "sync.p_init",
+            "sync.warmup_iters",
+            "sync.ks_frac",
+            "sync.low",
+            "sync.high",
+            "sync.dec_first",
+            "sync.dec_second",
+            "sync.qsgd_levels",
+            "sync.qsgd_bucket",
+            "sync.piecewise",
+            "sync.easgd_alpha",
+            "sync.topk_frac",
+            "net.bandwidth_gbps",
+            "net.latency_us",
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_full_document() {
+        let doc = TomlDoc::parse(
+            r#"
+name = "fig4"
+nodes = 16
+iters = 4000
+batch_per_node = 128
+
+[workload]
+backend = "native"
+model = "mlp"
+input_dim = 256
+
+[optim]
+lr0 = 0.1
+schedule = "step"
+boundaries = [2000, 3000]
+factor = 0.1
+
+[sync]
+strategy = "adaptive"
+p_init = 4
+ks_frac = 0.25
+
+[net]
+bandwidth_gbps = 10.0
+latency_us = 25.0
+"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.name, "fig4");
+        assert_eq!(cfg.total_batch(), 2048);
+        assert_eq!(cfg.sync.strategy, Strategy::Adaptive);
+        assert_eq!(cfg.net.bandwidth_gbps, 10.0);
+        match &cfg.optim.schedule {
+            LrSchedule::StepDecay { boundaries, .. } => assert_eq!(boundaries, &[2000, 3000]),
+            other => panic!("wrong schedule {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let doc = TomlDoc::parse("tpyo = 1").unwrap();
+        let err = ExperimentConfig::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("unknown config key"), "{err}");
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        let doc = TomlDoc::parse("nodes = 0").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+        let doc = TomlDoc::parse("[sync]\nlow = 1.5").unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn hlo_backend_parses() {
+        let doc = TomlDoc::parse("[workload]\nbackend = \"hlo\"\nmodel = \"mlp_small\"").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.workload.backend, Backend::Hlo("mlp_small".into()));
+    }
+}

@@ -1,0 +1,276 @@
+//! TOML-subset parser (the `toml`/`serde` crates are not in the offline
+//! registry).  Supports what experiment configs need:
+//!
+//! * `[table]` and `[dotted.table]` headers
+//! * `key = value` with string / integer / float / bool / array values
+//! * dotted keys (`sync.period = 8`), comments, blank lines
+//!
+//! Unsupported (rejected, never silently misparsed): inline tables,
+//! multi-line strings, array-of-tables, datetimes.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Flat document: fully-qualified dotted key -> value.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut prefix = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            let err = |msg: &str| TomlError { line: ln + 1, msg: msg.to_string() };
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                if line.starts_with("[[") {
+                    return Err(err("array-of-tables is not supported"));
+                }
+                let name = rest.strip_suffix(']').ok_or_else(|| err("missing ']'"))?.trim();
+                if name.is_empty() || !valid_key_path(name) {
+                    return Err(err("invalid table name"));
+                }
+                prefix = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| err("expected 'key = value'"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() || !valid_key_path(key) {
+                return Err(err("invalid key"));
+            }
+            let val = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+            let full = if prefix.is_empty() { key.to_string() } else { format!("{prefix}.{key}") };
+            if doc.entries.insert(full.clone(), val).is_some() {
+                return Err(err(&format!("duplicate key {full:?}")));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    /// All keys under a dotted prefix (for unknown-key validation).
+    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> {
+        self.entries.keys().filter_map(move |k| {
+            if prefix.is_empty() {
+                Some(k.as_str())
+            } else {
+                k.strip_prefix(prefix).and_then(|r| r.strip_prefix('.')).map(|_| k.as_str())
+            }
+        })
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn valid_key_path(k: &str) -> bool {
+    k.split('.').all(|part| {
+        !part.is_empty()
+            && part.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+    })
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest.find('"').ok_or("unterminated string")?;
+        if !rest[end + 1..].trim().is_empty() {
+            return Err("trailing characters after string".into());
+        }
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let mut vals = Vec::new();
+        let inner = inner.trim();
+        if !inner.is_empty() {
+            for item in split_top_level(inner) {
+                vals.push(parse_value(item.trim())?);
+            }
+        }
+        return Ok(TomlValue::Arr(vals));
+    }
+    // number: underscores allowed
+    let clean: String = s.chars().filter(|&c| c != '_').collect();
+    if clean.contains('.') || clean.contains('e') || clean.contains('E') {
+        clean.parse::<f64>().map(TomlValue::Float).map_err(|_| format!("bad float {s:?}"))
+    } else {
+        clean.parse::<i64>().map(TomlValue::Int).map_err(|_| format!("bad value {s:?}"))
+    }
+}
+
+/// Split an array body on top-level commas (no nested arrays-of-arrays
+/// needed for configs, but handle them anyway).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < s.len() {
+        out.push(&s[start..]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_document() {
+        let doc = TomlDoc::parse(
+            r#"
+# experiment
+name = "fig1"
+seed = 42
+lr = 0.1
+flag = true
+
+[sync]
+strategy = "adaptive"
+p_init = 4
+
+[net.link]
+bandwidth_gbps = 100.0
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str(), Some("fig1"));
+        assert_eq!(doc.get("seed").unwrap().as_i64(), Some(42));
+        assert_eq!(doc.get("lr").unwrap().as_f64(), Some(0.1));
+        assert_eq!(doc.get("flag").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("sync.strategy").unwrap().as_str(), Some("adaptive"));
+        assert_eq!(doc.get("sync.p_init").unwrap().as_i64(), Some(4));
+        assert_eq!(doc.get("net.link.bandwidth_gbps").unwrap().as_f64(), Some(100.0));
+    }
+
+    #[test]
+    fn arrays_and_underscored_numbers() {
+        let doc = TomlDoc::parse("bounds = [2_000, 3_000]\nfs = [0.1, 0.2]").unwrap();
+        let a = doc.get("bounds").unwrap().as_arr().unwrap();
+        assert_eq!(a[0].as_i64(), Some(2000));
+        assert_eq!(a[1].as_i64(), Some(3000));
+        assert_eq!(doc.get("fs").unwrap().as_arr().unwrap()[1].as_f64(), Some(0.2));
+    }
+
+    #[test]
+    fn dotted_keys() {
+        let doc = TomlDoc::parse("sync.period = 8").unwrap();
+        assert_eq!(doc.get("sync.period").unwrap().as_i64(), Some(8));
+    }
+
+    #[test]
+    fn comments_inside_strings() {
+        let doc = TomlDoc::parse("s = \"a#b\" # real comment").unwrap();
+        assert_eq!(doc.get("s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("k =").is_err());
+        assert!(TomlDoc::parse("k = nope").is_err());
+        assert!(TomlDoc::parse("a = 1\na = 2").is_err());
+        assert!(TomlDoc::parse("[[t]]").is_err());
+    }
+
+    #[test]
+    fn duplicate_across_tables_rejected() {
+        assert!(TomlDoc::parse("[a]\nb = 1\n[a]\nb = 2").is_err());
+    }
+}

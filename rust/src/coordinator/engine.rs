@@ -1,0 +1,278 @@
+//! The per-node compute engine abstraction.
+//!
+//! A worker needs five operations; both backends provide them:
+//! * [`NativeEngine`] — pure-rust workloads (fast statistics runs)
+//! * [`HloAdapter`] — AOT HLO via PJRT (the product path; constructed
+//!   inside the worker thread because `xla` handles are not `Send`)
+
+use crate::config::{Backend, ExperimentConfig};
+use crate::data::Batch;
+use crate::runtime::{EngineFns, HloEngine, Manifest};
+use crate::util::rng::Rng;
+use crate::workload::Workload;
+use anyhow::Result;
+
+pub trait Engine {
+    fn n_params(&self) -> usize;
+    fn init(&mut self, seed: u64) -> Result<Vec<f32>>;
+    /// Local fused step: updates (w, m) in place, returns batch loss.
+    fn step(&mut self, w: &mut [f32], m: &mut [f32], batch: &Batch, lr: f32) -> Result<f32>;
+    /// Gradient only (for FULLSGD/QSGD exchange), into `g`; returns loss.
+    fn grad(&mut self, w: &[f32], batch: &Batch, g: &mut [f32]) -> Result<f32>;
+    /// Apply a (possibly averaged) gradient with the fused momentum rule.
+    fn apply(&mut self, w: &mut [f32], m: &mut [f32], g: &[f32], lr: f32) -> Result<()>;
+    fn eval(&mut self, w: &[f32], batch: &Batch) -> Result<(f32, f32)>;
+}
+
+/// Pure-rust backend.
+pub struct NativeEngine {
+    wl: Box<dyn Workload>,
+    momentum: f32,
+    scratch_g: Vec<f32>,
+}
+
+impl NativeEngine {
+    pub fn new(wl: Box<dyn Workload>, momentum: f32) -> Self {
+        let n = wl.n_params();
+        NativeEngine { wl, momentum, scratch_g: vec![0.0; n] }
+    }
+}
+
+impl Engine for NativeEngine {
+    fn n_params(&self) -> usize {
+        self.wl.n_params()
+    }
+
+    fn init(&mut self, seed: u64) -> Result<Vec<f32>> {
+        let mut w = vec![0.0; self.wl.n_params()];
+        self.wl.init(&mut Rng::new(seed, 0x1217), &mut w);
+        Ok(w)
+    }
+
+    fn step(&mut self, w: &mut [f32], m: &mut [f32], batch: &Batch, lr: f32) -> Result<f32> {
+        let loss = self.wl.loss_grad(w, batch, &mut self.scratch_g);
+        crate::tensor::momentum_update(w, m, &self.scratch_g, lr, self.momentum);
+        Ok(loss)
+    }
+
+    fn grad(&mut self, w: &[f32], batch: &Batch, g: &mut [f32]) -> Result<f32> {
+        Ok(self.wl.loss_grad(w, batch, g))
+    }
+
+    fn apply(&mut self, w: &mut [f32], m: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
+        crate::tensor::momentum_update(w, m, g, lr, self.momentum);
+        Ok(())
+    }
+
+    fn eval(&mut self, w: &[f32], batch: &Batch) -> Result<(f32, f32)> {
+        Ok(self.wl.eval(w, batch))
+    }
+}
+
+/// HLO/PJRT backend (thin adapter over [`HloEngine`]).
+pub struct HloAdapter {
+    engine: HloEngine,
+}
+
+impl Engine for HloAdapter {
+    fn n_params(&self) -> usize {
+        self.engine.n_params()
+    }
+
+    fn init(&mut self, seed: u64) -> Result<Vec<f32>> {
+        self.engine.init(seed as i32)
+    }
+
+    fn step(&mut self, w: &mut [f32], m: &mut [f32], batch: &Batch, lr: f32) -> Result<f32> {
+        self.engine.step(w, m, batch, lr)
+    }
+
+    fn grad(&mut self, w: &[f32], batch: &Batch, g: &mut [f32]) -> Result<f32> {
+        self.engine.grad(w, batch, g)
+    }
+
+    fn apply(&mut self, w: &mut [f32], m: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
+        self.engine.apply(w, m, g, lr)
+    }
+
+    fn eval(&mut self, w: &[f32], batch: &Batch) -> Result<(f32, f32)> {
+        self.engine.eval(w, batch)
+    }
+}
+
+/// Failure-injection wrapper: behaves as `inner` until `fail_at` steps
+/// have executed on the designated rank, then errors — used by the chaos
+/// tests to prove a mid-run node failure aborts the whole cluster
+/// cleanly (communicator poisoning) instead of deadlocking the barrier.
+///
+/// Enabled via the native workload name `failing:<rank>:<step>` (the
+/// inner model is the standard MLP).
+pub struct FailingEngine {
+    inner: NativeEngine,
+    rank: usize,
+    fail_rank: usize,
+    fail_at: usize,
+    steps: usize,
+}
+
+impl Engine for FailingEngine {
+    fn n_params(&self) -> usize {
+        self.inner.n_params()
+    }
+
+    fn init(&mut self, seed: u64) -> Result<Vec<f32>> {
+        self.inner.init(seed)
+    }
+
+    fn step(&mut self, w: &mut [f32], m: &mut [f32], batch: &Batch, lr: f32) -> Result<f32> {
+        self.steps += 1;
+        if self.rank == self.fail_rank && self.steps >= self.fail_at {
+            anyhow::bail!(
+                "injected failure: node {} died at step {} (chaos test)",
+                self.rank,
+                self.steps
+            );
+        }
+        self.inner.step(w, m, batch, lr)
+    }
+
+    fn grad(&mut self, w: &[f32], batch: &Batch, g: &mut [f32]) -> Result<f32> {
+        self.steps += 1;
+        if self.rank == self.fail_rank && self.steps >= self.fail_at {
+            anyhow::bail!(
+                "injected failure: node {} died at step {} (chaos test)",
+                self.rank,
+                self.steps
+            );
+        }
+        self.inner.grad(w, batch, g)
+    }
+
+    fn apply(&mut self, w: &mut [f32], m: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
+        self.inner.apply(w, m, g, lr)
+    }
+
+    fn eval(&mut self, w: &[f32], batch: &Batch) -> Result<(f32, f32)> {
+        self.inner.eval(w, batch)
+    }
+}
+
+/// Parse "failing:<rank>:<step>" (both default to 1:10).
+fn parse_failing(name: &str) -> Option<(usize, usize)> {
+    let rest = name.strip_prefix("failing")?;
+    if rest.is_empty() {
+        return Some((1, 10));
+    }
+    let mut it = rest.strip_prefix(':')?.split(':');
+    let rank = it.next()?.parse().ok()?;
+    let step = it.next().and_then(|s| s.parse().ok()).unwrap_or(10);
+    Some((rank, step))
+}
+
+/// Builds one engine per worker, *inside* the worker thread.
+pub type EngineFactory = Box<dyn Fn(usize) -> Result<Box<dyn Engine>> + Send + Sync>;
+
+/// Construct the engine factory for a config.  For the HLO backend the
+/// manifest is loaded once up front (cheap, shared); each worker then
+/// compiles its own executables on its own PJRT client.
+pub fn factory(cfg: &ExperimentConfig) -> Result<EngineFactory> {
+    let momentum = cfg.optim.momentum;
+    let needs_grad = matches!(
+        cfg.sync.strategy,
+        crate::period::Strategy::Full
+            | crate::period::Strategy::Qsgd
+            | crate::period::Strategy::TopK
+    );
+    match &cfg.workload.backend {
+        Backend::Native(name) if name.starts_with("failing") => {
+            let (fail_rank, fail_at) = parse_failing(name)
+                .ok_or_else(|| anyhow::anyhow!("bad failure spec {name:?}"))?;
+            let wcfg = cfg.workload.clone();
+            crate::workload::build("mlp", &wcfg)?; // validate now
+            Ok(Box::new(move |rank| {
+                let wl = crate::workload::build("mlp", &wcfg)?;
+                Ok(Box::new(FailingEngine {
+                    inner: NativeEngine::new(wl, momentum),
+                    rank,
+                    fail_rank,
+                    fail_at,
+                    steps: 0,
+                }) as Box<dyn Engine>)
+            }))
+        }
+        Backend::Native(name) => {
+            let wl = crate::workload::build(name, &cfg.workload)?; // validate now
+            drop(wl);
+            let name = name.clone();
+            let wcfg = cfg.workload.clone();
+            Ok(Box::new(move |_node| {
+                let wl = crate::workload::build(&name, &wcfg)?;
+                Ok(Box::new(NativeEngine::new(wl, momentum)) as Box<dyn Engine>)
+            }))
+        }
+        Backend::Hlo(model) => {
+            let manifest = Manifest::load(&cfg.artifacts_dir)?;
+            manifest.get(model)?; // validate now
+            let model = model.clone();
+            let fns = EngineFns {
+                step: true,
+                grad_apply: needs_grad,
+                eval: true,
+                sq_dev: false,
+                qsgd: false,
+            };
+            Ok(Box::new(move |_node| {
+                let engine = HloEngine::load(&manifest, &model, fns)?;
+                Ok(Box::new(HloAdapter { engine }) as Box<dyn Engine>)
+            }))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthClass;
+
+    #[test]
+    fn native_engine_step_equals_grad_plus_apply() {
+        let cfg = ExperimentConfig::default();
+        let f = factory(&cfg).unwrap();
+        let mut e1 = f(0).unwrap();
+        let mut e2 = f(1).unwrap();
+        let n = e1.n_params();
+        let d = SynthClass::new(1, cfg.workload.input_dim, cfg.workload.classes, 1.0, 0.0);
+        let batch = d.sample(&mut Rng::new(3, 0), 8);
+        let w0 = e1.init(7).unwrap();
+        let m0 = vec![0.01f32; n];
+
+        let mut w_s = w0.clone();
+        let mut m_s = m0.clone();
+        let loss_s = e1.step(&mut w_s, &mut m_s, &batch, 0.1).unwrap();
+
+        let mut g = vec![0.0; n];
+        let loss_g = e2.grad(&w0, &batch, &mut g).unwrap();
+        let mut w_a = w0.clone();
+        let mut m_a = m0.clone();
+        e2.apply(&mut w_a, &mut m_a, &g, 0.1).unwrap();
+
+        assert_eq!(loss_s, loss_g);
+        assert_eq!(w_s, w_a);
+        assert_eq!(m_s, m_a);
+    }
+
+    #[test]
+    fn factory_rejects_unknown_workload() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.backend = Backend::Native("bogus".into());
+        assert!(factory(&cfg).is_err());
+    }
+
+    #[test]
+    fn factory_rejects_missing_artifacts() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.backend = Backend::Hlo("mlp_small".into());
+        cfg.artifacts_dir = "/nonexistent".into();
+        assert!(factory(&cfg).is_err());
+    }
+}

@@ -1,0 +1,756 @@
+//! The distributed-training coordinator: leader + n worker nodes running
+//! the paper's Algorithms 1/2 (and the FULLSGD/QSGD baselines) in
+//! lockstep BSP over real threads and real collectives.
+//!
+//! Execution model
+//! ---------------
+//! Each simulated node is an OS thread owning its parameters `w_i`,
+//! momentum `m_i` (momentum is **node-local**, as in the paper — only
+//! parameters are averaged), RNG stream, data stream, and compute engine
+//! (native workload or PJRT-executed HLO).  Synchronization uses
+//! [`crate::collective::Comm`]; the per-sync wall-clock cost on the
+//! paper's testbed is charged to a [`crate::netsim::CommLedger`].
+//!
+//! Period control is *replicated*: every node holds an identical
+//! [`PeriodController`] fed identical `(k, S_k, γ_k)` feedback (S_k is
+//! agreed via a scalar allreduce), so all replicas take identical sync
+//! decisions without a central scheduler — exactly the decentralized
+//! structure of Algorithm 2.
+
+pub mod engine;
+
+use crate::collective::Comm;
+use crate::config::ExperimentConfig;
+use crate::data::{Batch, CharCorpus, DatasetHandle, NodeSource, SynthClass};
+use crate::metrics::Recorder;
+use crate::netsim::{CommKind, CommLedger, NetModel};
+use crate::optim::lr_at;
+use crate::period::Strategy;
+use crate::quant::QsgdConfig;
+use crate::util::rng::Rng;
+use crate::util::timer::Timer;
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::Arc;
+
+/// Everything a finished run reports (curves + summary numbers).
+#[derive(Debug)]
+pub struct RunReport {
+    pub name: String,
+    pub strategy: Strategy,
+    pub nodes: usize,
+    pub iters: usize,
+    pub n_params: usize,
+    /// tail-mean of the (node-averaged) train loss
+    pub final_train_loss: f64,
+    pub min_train_loss: f64,
+    pub best_eval_acc: f64,
+    pub final_eval_acc: f64,
+    pub final_eval_loss: f64,
+    /// number of collective parameter/gradient exchanges
+    pub syncs: u64,
+    /// iters / syncs — the effective averaging period
+    pub avg_period: f64,
+    /// max over nodes of measured per-node compute time
+    pub compute_secs: f64,
+    /// measured wall-clock of the whole run (this host)
+    pub wall_secs: f64,
+    pub ledger: CommLedger,
+    pub recorder: Recorder,
+}
+
+impl RunReport {
+    /// Modeled execution time on the paper's testbed under `net`:
+    /// per-node compute + modeled communication.
+    pub fn modeled_total_secs(&self, net: &NetModel) -> f64 {
+        self.compute_secs + self.ledger.modeled_secs(net)
+    }
+
+    /// Machine-readable run summary (optionally with every recorded
+    /// series) — `adpsgd run --json`, CI diffing, notebooks.
+    pub fn to_json(&self, with_series: bool) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut pairs = vec![
+            ("name", Json::str(self.name.clone())),
+            ("strategy", Json::str(self.strategy.to_string())),
+            ("nodes", Json::num(self.nodes as f64)),
+            ("iters", Json::num(self.iters as f64)),
+            ("n_params", Json::num(self.n_params as f64)),
+            ("final_train_loss", Json::num(self.final_train_loss)),
+            ("min_train_loss", Json::num(self.min_train_loss)),
+            ("best_eval_acc", Json::num(self.best_eval_acc)),
+            ("final_eval_acc", Json::num(self.final_eval_acc)),
+            ("final_eval_loss", Json::num(self.final_eval_loss)),
+            ("syncs", Json::num(self.syncs as f64)),
+            ("avg_period", Json::num(self.avg_period)),
+            ("compute_secs", Json::num(self.compute_secs)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("wire_bytes", Json::num(self.ledger.total_wire_bytes() as f64)),
+            ("comm_secs_model", Json::num(self.ledger.total_secs())),
+        ];
+        if with_series {
+            let series = Json::Obj(
+                self.recorder
+                    .series
+                    .iter()
+                    .map(|(name, s)| {
+                        let pts = Json::Arr(
+                            s.points
+                                .iter()
+                                .map(|(x, y)| Json::Arr(vec![Json::num(*x), Json::num(*y)]))
+                                .collect(),
+                        );
+                        (name.clone(), pts)
+                    })
+                    .collect(),
+            );
+            pairs.push(("series", series));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn one_line(&self) -> String {
+        format!(
+            "{:<10} loss={:.4} acc={:.4} syncs={} p̄={:.2} compute={} comm(model)={}",
+            self.strategy.to_string(),
+            self.final_train_loss,
+            self.best_eval_acc,
+            self.syncs,
+            self.avg_period,
+            crate::util::fmt::secs(self.compute_secs),
+            crate::util::fmt::secs(self.ledger.total_secs()),
+        )
+    }
+}
+
+/// What a single worker thread hands back.
+struct WorkerOut {
+    compute_secs: f64,
+    /// rank 0 only
+    recorder: Option<Recorder>,
+    ledger: Option<CommLedger>,
+}
+
+pub struct Trainer {
+    cfg: ExperimentConfig,
+}
+
+impl Trainer {
+    pub fn new(cfg: ExperimentConfig) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Trainer { cfg })
+    }
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// Build the (train-kind, eval) dataset handle and the per-node
+    /// batch geometry.  For HLO models the AOT artifacts fix the batch
+    /// shape, so `batch_per_node` is taken from the manifest.
+    fn dataset(&self) -> Result<(DatasetHandle, usize, usize)> {
+        let w = &self.cfg.workload;
+        match &w.backend {
+            crate::config::Backend::Native(_) => {
+                let ds = SynthClass::new(self.cfg.seed, w.input_dim, w.classes, w.noise, w.label_noise);
+                Ok((DatasetHandle::Class(Arc::new(ds)), self.cfg.batch_per_node, 0))
+            }
+            crate::config::Backend::Hlo(model) => {
+                let man = crate::runtime::Manifest::load(&self.cfg.artifacts_dir)?;
+                let spec = man.get(model)?;
+                if spec.kind == "lm" {
+                    let corpus = CharCorpus::generate(self.cfg.seed, 1 << 16);
+                    Ok((DatasetHandle::Text(Arc::new(corpus)), spec.batch, spec.seq))
+                } else {
+                    let dim = *spec.x_shape.last().unwrap();
+                    let classes = spec.classes.max(2);
+                    let ds = SynthClass::new(self.cfg.seed, dim, classes, w.noise, w.label_noise);
+                    Ok((DatasetHandle::Class(Arc::new(ds)), spec.batch, 0))
+                }
+            }
+        }
+    }
+
+    /// Run the experiment to completion.
+    pub fn run(&self) -> Result<RunReport> {
+        let cfg = &self.cfg;
+        let factory = engine::factory(cfg).context("building engine factory")?;
+        let (dataset, batch, seq) = self.dataset()?;
+        let wall = std::time::Instant::now();
+
+        // n_params probe (cheap for native; for HLO reads the manifest)
+        let n_params = match &cfg.workload.backend {
+            crate::config::Backend::Native(name) => {
+                crate::workload::build(name, &cfg.workload)?.n_params()
+            }
+            crate::config::Backend::Hlo(model) => {
+                crate::runtime::Manifest::load(&cfg.artifacts_dir)?.get(model)?.param_count
+            }
+        };
+
+        let comm = Arc::new(Comm::new(cfg.nodes, n_params));
+        let mut outs: Vec<Option<WorkerOut>> = (0..cfg.nodes).map(|_| None).collect();
+
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::new();
+            for (rank, slot) in outs.iter_mut().enumerate() {
+                let comm = Arc::clone(&comm);
+                let dataset = dataset.clone();
+                let factory = &factory;
+                let cfg = &self.cfg;
+                handles.push((
+                    slot,
+                    scope.spawn(move || -> Result<WorkerOut> {
+                        // catch_unwind so a panicking worker still
+                        // poisons the communicator — otherwise peers
+                        // would block forever at the next barrier
+                        let comm2 = Arc::clone(&comm);
+                        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            move || {
+                                worker_loop(
+                                    cfg, rank, n_params, batch, seq, dataset, comm2, factory,
+                                )
+                            },
+                        ))
+                        .unwrap_or_else(|p| {
+                            let msg = p
+                                .downcast_ref::<String>()
+                                .map(|s| s.as_str())
+                                .or_else(|| p.downcast_ref::<&str>().copied())
+                                .unwrap_or("<non-string panic>");
+                            Err(anyhow!("node {rank} panicked: {msg}"))
+                        });
+                        if out.is_err() {
+                            comm.poison();
+                        }
+                        out
+                    }),
+                ));
+            }
+            // join all workers; report the most informative error (a
+            // real failure beats the Poisoned errors it triggered)
+            let mut first_real: Option<anyhow::Error> = None;
+            let mut first_poisoned: Option<anyhow::Error> = None;
+            for (slot, h) in handles {
+                match h.join().map_err(|e| anyhow!("worker join failed: {e:?}")) {
+                    Ok(Ok(out)) => *slot = Some(out),
+                    Ok(Err(e)) => {
+                        let is_poison = e.is::<crate::collective::Poisoned>()
+                            || format!("{e:#}").contains("poisoned");
+                        if is_poison {
+                            first_poisoned.get_or_insert(e);
+                        } else {
+                            first_real.get_or_insert(e);
+                        }
+                    }
+                    Err(e) => {
+                        first_real.get_or_insert(e);
+                    }
+                }
+            }
+            if let Some(e) = first_real.or(first_poisoned) {
+                return Err(e.context("worker failed"));
+            }
+            Ok(())
+        })?;
+
+        let wall_secs = wall.elapsed().as_secs_f64();
+        let compute_secs = outs
+            .iter()
+            .map(|o| o.as_ref().unwrap().compute_secs)
+            .fold(0.0f64, f64::max);
+        let rank0 = outs[0].take().unwrap();
+        let recorder = rank0.recorder.unwrap();
+        let ledger = rank0.ledger.unwrap();
+
+        let loss_series = recorder.get("train_loss");
+        let final_train_loss = loss_series.and_then(|s| s.tail_mean(10)).unwrap_or(f64::NAN);
+        let min_train_loss = loss_series.and_then(|s| s.min_y()).unwrap_or(f64::NAN);
+        let acc = recorder.get("eval_acc");
+        let best_eval_acc = acc.and_then(|s| s.max_y()).unwrap_or(f64::NAN);
+        let final_eval_acc = acc.and_then(|s| s.last_y()).unwrap_or(f64::NAN);
+        let final_eval_loss =
+            recorder.get("eval_loss").and_then(|s| s.last_y()).unwrap_or(f64::NAN);
+        let syncs = ledger.syncs;
+        let avg_period =
+            if syncs > 0 { cfg.iters as f64 / syncs as f64 } else { f64::INFINITY };
+
+        Ok(RunReport {
+            name: cfg.name.clone(),
+            strategy: cfg.sync.strategy,
+            nodes: cfg.nodes,
+            iters: cfg.iters,
+            n_params,
+            final_train_loss,
+            min_train_loss,
+            best_eval_acc,
+            final_eval_acc,
+            final_eval_loss,
+            syncs,
+            avg_period,
+            compute_secs,
+            wall_secs,
+            ledger,
+            recorder,
+        })
+    }
+}
+
+/// How often the (instrumentation-only) mean train loss is agreed.
+const LOSS_EVERY: usize = 10;
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    cfg: &ExperimentConfig,
+    rank: usize,
+    n_params: usize,
+    batch_per_node: usize,
+    seq: usize,
+    dataset: DatasetHandle,
+    comm: Arc<Comm>,
+    factory: &engine::EngineFactory,
+) -> Result<WorkerOut> {
+    let n = cfg.nodes;
+    let is_leader = rank == 0;
+    let net = NetModel::new(&cfg.net);
+    let mut ledger = CommLedger::new(n);
+    let mut recorder = Recorder::new();
+
+    // --- engine construction + cluster health check -----------------------
+    let engine_res = factory(rank);
+    let healthy = comm.allreduce_scalar_sum(rank, if engine_res.is_ok() { 0.0 } else { 1.0 })?;
+    if healthy > 0.0 {
+        return match engine_res {
+            Err(e) => Err(e).context(format!("node {rank}: engine construction")),
+            Ok(_) => bail!("node {rank}: peer failed during engine construction"),
+        };
+    }
+    let mut engine = engine_res.unwrap();
+    debug_assert_eq!(engine.n_params(), n_params);
+
+    // --- shared initial point (paper: all nodes start from w_0) -----------
+    let mut w = if cfg.init_from.is_empty() {
+        engine.init(cfg.seed)?
+    } else {
+        // warm start: all nodes load the same snapshot
+        let p = std::path::Path::new(&cfg.init_from);
+        let file = if p.is_dir() {
+            crate::checkpoint::Checkpoint::latest(p)?
+                .ok_or_else(|| anyhow!("no checkpoints in {}", p.display()))?
+        } else {
+            p.to_path_buf()
+        };
+        let ck = crate::checkpoint::Checkpoint::load(&file)?;
+        if ck.w.len() != n_params {
+            bail!(
+                "checkpoint {} has {} params, model has {n_params}",
+                file.display(),
+                ck.w.len()
+            );
+        }
+        ck.w
+    };
+    comm.broadcast(rank, &mut w)?;
+    let mut m = vec![0.0f32; n_params];
+    let mut w_pre = vec![0.0f32; n_params];
+    let mut g = vec![0.0f32; n_params];
+
+    let mut source = NodeSource::new(dataset.clone(), cfg.seed, rank as u64, batch_per_node, seq);
+    // held-out stream for evaluation (leader only uses it)
+    let mut eval_source =
+        NodeSource::new(dataset, cfg.seed ^ 0xEA11, 0xE0 + rank as u64, batch_per_node, seq);
+
+    let mut controller = crate::period::build(cfg);
+    let grad_mode = controller.is_none(); // Full / Qsgd / TopK
+    let qsgd = if cfg.sync.strategy == Strategy::Qsgd {
+        Some(QsgdConfig { levels: cfg.sync.qsgd_levels, bucket: cfg.sync.qsgd_bucket })
+    } else {
+        None
+    };
+    let mut topk = if cfg.sync.strategy == Strategy::TopK {
+        Some((
+            crate::sparse::TopKConfig { keep_frac: cfg.sync.topk_frac },
+            crate::sparse::Residual::new(n_params),
+        ))
+    } else {
+        None
+    };
+    let mut qrng = Rng::new(cfg.seed ^ 0x9569D, rank as u64);
+
+    let mut compute = Timer::new();
+    let mut loss_acc = 0.0f64; // local loss accumulated between recordings
+    let mut loss_cnt = 0u32;
+    // pre-averaging variance of a sync that happened this iteration —
+    // the variance probe must report it instead of the (trivially zero)
+    // post-averaging deviation
+    let mut sync_var: Option<f64> = None;
+
+    for k in 0..cfg.iters {
+        let lr = lr_at(&cfg.optim.schedule, cfg.optim.lr0, k);
+        let batch = source.next_batch();
+
+        if grad_mode {
+            // ---------------- FULLSGD / QSGD: gradient exchange ------------
+            let loss = compute.time(|| engine.grad(&w, &batch, &mut g))?;
+            loss_acc += loss as f64;
+            loss_cnt += 1;
+            if let Some(qcfg) = &qsgd {
+                let wire = compute.time(|| crate::quant::quantize_inplace(&mut g, qcfg, &mut qrng));
+                ledger.record(&net, CommKind::QuantAllgather, n, wire);
+            } else if let Some((tcfg, res)) = topk.as_mut() {
+                let wire = compute.time(|| crate::sparse::sparsify_inplace(&mut g, res, tcfg));
+                ledger.record(&net, CommKind::SparsePs, n, wire);
+            } else {
+                ledger.record(&net, CommKind::GradAllreduce, n, (n_params * 4) as u64);
+            }
+            comm.allreduce_mean(rank, &mut g)?;
+            compute.time(|| engine.apply(&mut w, &mut m, &g, lr))?;
+        } else {
+            // ---------------- periodic parameter averaging -----------------
+            let loss = compute.time(|| engine.step(&mut w, &mut m, &batch, lr))?;
+            loss_acc += loss as f64;
+            loss_cnt += 1;
+            let ctrl = controller.as_mut().unwrap();
+            sync_var = None;
+            if ctrl.should_sync(k) {
+                w_pre.copy_from_slice(&w);
+                ledger.record(&net, CommKind::ParamAvg, n, (n_params * 4) as u64);
+                comm.allreduce_mean(rank, &mut w)?;
+                // S_k = (1/n) sum_i ||w_bar - w_i||^2  (Algorithm 2 line 11)
+                let dev = crate::tensor::sq_deviation(&w, &w_pre);
+                let s_k = comm.allreduce_scalar_sum(rank, dev)? / n as f64;
+                sync_var = Some(s_k);
+                if cfg.sync.strategy == Strategy::Easgd && cfg.sync.easgd_alpha < 1.0 {
+                    // elastic pull (EASGD, paper [57]): instead of
+                    // adopting the mean, move α of the way toward it:
+                    //   w_i ← (1-α)·w_i + α·w̄   (α=1 is exactly CPSGD)
+                    let alpha = cfg.sync.easgd_alpha as f32;
+                    for (wi, &pre) in w.iter_mut().zip(w_pre.iter()) {
+                        *wi = pre + alpha * (*wi - pre);
+                    }
+                }
+                if cfg.sync.strategy == Strategy::Adaptive {
+                    // the paper's extra scalar exchange (only ADPSGD pays it)
+                    ledger.record(&net, CommKind::ScalarStat, n, 4);
+                }
+                ctrl.on_sync(k, s_k, lr);
+                if is_leader {
+                    recorder.push("s_k", k as f64, s_k);
+                    recorder.push("period", k as f64, ctrl.current_period() as f64);
+                    recorder.push("sync_at", k as f64, 1.0);
+                }
+            }
+        }
+
+        // ---------------- instrumentation (not charged to the ledger) -----
+        if (k + 1) % LOSS_EVERY == 0 || k + 1 == cfg.iters {
+            let mean_loss =
+                comm.allreduce_scalar_sum(rank, loss_acc / loss_cnt.max(1) as f64)? / n as f64;
+            if is_leader {
+                recorder.push("train_loss", k as f64, mean_loss);
+                recorder.push("lr", k as f64, lr as f64);
+            }
+            loss_acc = 0.0;
+            loss_cnt = 0;
+        }
+
+        let need_var = cfg.variance_every > 0 && (k + 1) % cfg.variance_every == 0 && !grad_mode;
+        let need_eval = cfg.eval_every > 0 && ((k + 1) % cfg.eval_every == 0 || k + 1 == cfg.iters);
+        if need_var || (need_eval && !grad_mode) {
+            // snapshot mean parameters without disturbing training state
+            w_pre.copy_from_slice(&w);
+            comm.allreduce_mean(rank, &mut w_pre)?;
+            if need_var {
+                // if this iteration synchronized, the live parameters are
+                // already averaged — report the pre-averaging variance S_k
+                let var = match sync_var {
+                    Some(s) => s,
+                    None => {
+                        let dev = crate::tensor::sq_deviation(&w_pre, &w);
+                        comm.allreduce_scalar_sum(rank, dev)? / n as f64
+                    }
+                };
+                if is_leader {
+                    recorder.push("var", k as f64, var);
+                }
+            }
+            if need_eval && is_leader {
+                let (l, a) = eval_model(engine.as_mut(), &w_pre, &mut eval_source, cfg)?;
+                recorder.push("eval_loss", k as f64, l);
+                recorder.push("eval_acc", k as f64, a);
+            }
+        } else if need_eval && grad_mode && is_leader {
+            // grad modes keep all nodes identical: evaluate local params
+            let (l, a) = eval_model(engine.as_mut(), &w, &mut eval_source, cfg)?;
+            recorder.push("eval_loss", k as f64, l);
+            recorder.push("eval_acc", k as f64, a);
+        }
+
+        // ---------------- checkpointing (leader; mean parameters) ---------
+        if cfg.checkpoint_every > 0 && (k + 1) % cfg.checkpoint_every == 0 {
+            // snapshot the averaged parameters without disturbing training
+            w_pre.copy_from_slice(&w);
+            comm.allreduce_mean(rank, &mut w_pre)?;
+            if is_leader {
+                let dir = std::path::Path::new(&cfg.checkpoint_dir);
+                let ck = crate::checkpoint::Checkpoint::new(
+                    (k + 1) as u64,
+                    loss_acc / loss_cnt.max(1) as f64,
+                    w_pre.clone(),
+                );
+                ck.save(&crate::checkpoint::Checkpoint::path_for(dir, (k + 1) as u64))
+                    .context("writing checkpoint")?;
+            }
+        }
+    }
+
+    Ok(WorkerOut {
+        compute_secs: compute.secs(),
+        recorder: is_leader.then_some(recorder),
+        ledger: is_leader.then_some(ledger),
+    })
+}
+
+fn eval_model(
+    engine: &mut dyn engine::Engine,
+    w: &[f32],
+    source: &mut NodeSource,
+    cfg: &ExperimentConfig,
+) -> Result<(f64, f64)> {
+    let nb = cfg.workload.eval_batches.max(1);
+    let (mut lsum, mut asum) = (0.0f64, 0.0f64);
+    for _ in 0..nb {
+        let b: Batch = source.next_batch();
+        let (l, a) = engine.eval(w, &b)?;
+        lsum += l as f64;
+        asum += a as f64;
+    }
+    Ok((lsum / nb as f64, asum / nb as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Backend;
+
+    fn quick_cfg(strategy: Strategy) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.nodes = 4;
+        cfg.iters = 120;
+        cfg.batch_per_node = 16;
+        cfg.eval_every = 60;
+        cfg.workload.backend = Backend::Native("mlp".into());
+        cfg.workload.input_dim = 32;
+        cfg.workload.hidden = 16;
+        cfg.workload.eval_batches = 4;
+        cfg.optim.schedule = crate::config::LrSchedule::Const;
+        cfg.optim.lr0 = 0.05;
+        cfg.sync.strategy = strategy;
+        cfg.sync.period = 4;
+        cfg.sync.p_init = 2;
+        cfg.sync.warmup_iters = 10;
+        cfg.sync.ks_frac = 0.25;
+        cfg
+    }
+
+    #[test]
+    fn cpsgd_sync_count_matches_period() {
+        let report = Trainer::new(quick_cfg(Strategy::Constant)).unwrap().run().unwrap();
+        assert_eq!(report.syncs, 30); // 120 / 4
+        assert!((report.avg_period - 4.0).abs() < 1e-9);
+        assert!(report.final_train_loss.is_finite());
+    }
+
+    #[test]
+    fn fullsgd_syncs_every_iteration() {
+        let report = Trainer::new(quick_cfg(Strategy::Full)).unwrap().run().unwrap();
+        assert_eq!(report.syncs, 120);
+        assert!(report.ledger.count(CommKind::GradAllreduce) == 120);
+    }
+
+    #[test]
+    fn qsgd_moves_fewer_bytes_than_fullsgd() {
+        let full = Trainer::new(quick_cfg(Strategy::Full)).unwrap().run().unwrap();
+        let qsgd = Trainer::new(quick_cfg(Strategy::Qsgd)).unwrap().run().unwrap();
+        let fb = full.ledger.total_wire_bytes() as f64;
+        let qb = qsgd.ledger.total_wire_bytes() as f64;
+        assert!(qb < fb / 2.0, "qsgd bytes {qb} vs full {fb}");
+        assert!(qsgd.final_train_loss.is_finite());
+    }
+
+    #[test]
+    fn adaptive_records_period_and_sk() {
+        let mut cfg = quick_cfg(Strategy::Adaptive);
+        cfg.variance_every = 10;
+        let report = Trainer::new(cfg).unwrap().run().unwrap();
+        assert!(report.recorder.get("s_k").is_some());
+        assert!(report.recorder.get("period").is_some());
+        assert!(report.recorder.get("var").is_some());
+        assert!(report.syncs > 0);
+        assert!(report.ledger.count(CommKind::ScalarStat) > 0);
+    }
+
+    #[test]
+    fn single_node_runs() {
+        let mut cfg = quick_cfg(Strategy::Constant);
+        cfg.nodes = 1;
+        let report = Trainer::new(cfg).unwrap().run().unwrap();
+        assert!(report.final_train_loss.is_finite());
+    }
+
+    #[test]
+    fn training_actually_learns() {
+        let mut cfg = quick_cfg(Strategy::Adaptive);
+        cfg.iters = 400;
+        cfg.workload.noise = 0.4;
+        let report = Trainer::new(cfg).unwrap().run().unwrap();
+        assert!(
+            report.best_eval_acc > 0.8,
+            "acc {} loss {}",
+            report.best_eval_acc,
+            report.final_train_loss
+        );
+        // loss decreased substantially from init (~ln 10 = 2.3)
+        assert!(report.final_train_loss < 1.0);
+    }
+
+    #[test]
+    fn piecewise_matches_paper_strategy1_budget() {
+        let mut cfg = quick_cfg(Strategy::Piecewise);
+        cfg.iters = 160;
+        cfg.sync.piecewise = "0:4,80:8".into();
+        let report = Trainer::new(cfg).unwrap().run().unwrap();
+        assert_eq!(report.syncs, 30); // 80/4 + 80/8
+    }
+
+    #[test]
+    fn easgd_trains_and_keeps_nodes_apart() {
+        let mut cfg = quick_cfg(Strategy::Easgd);
+        cfg.iters = 200;
+        cfg.variance_every = 10;
+        cfg.sync.period = 4;
+        cfg.sync.easgd_alpha = 0.5;
+        let easgd = Trainer::new(cfg).unwrap().run().unwrap();
+        assert!(easgd.final_train_loss.is_finite());
+        assert_eq!(easgd.syncs, 50);
+
+        // elastic (α=0.5) leaves residual spread after syncs: its mean
+        // variance exceeds CPSGD's at the same period
+        let mut ccfg = quick_cfg(Strategy::Constant);
+        ccfg.iters = 200;
+        ccfg.variance_every = 10;
+        ccfg.sync.period = 4;
+        let cpsgd = Trainer::new(ccfg).unwrap().run().unwrap();
+        let ev = easgd.recorder.get("var").unwrap().mean_y_in(20.0, 200.0).unwrap();
+        let cv = cpsgd.recorder.get("var").unwrap().mean_y_in(20.0, 200.0).unwrap();
+        assert!(ev > cv, "easgd var {ev:.3e} should exceed cpsgd var {cv:.3e}");
+    }
+
+    #[test]
+    fn easgd_alpha_one_equals_cpsgd() {
+        let mut ecfg = quick_cfg(Strategy::Easgd);
+        ecfg.sync.easgd_alpha = 1.0;
+        let e = Trainer::new(ecfg).unwrap().run().unwrap();
+        let c = Trainer::new(quick_cfg(Strategy::Constant)).unwrap().run().unwrap();
+        assert_eq!(e.final_train_loss, c.final_train_loss, "α=1 must reduce to CPSGD");
+    }
+
+    #[test]
+    fn injected_node_failure_aborts_cluster_cleanly() {
+        // chaos test: node 2 dies at step 15 mid-run; the run must
+        // return an error naming the failure (not deadlock, not panic)
+        let mut cfg = quick_cfg(Strategy::Adaptive);
+        cfg.workload.backend = Backend::Native("failing:2:15".into());
+        let start = std::time::Instant::now();
+        let err = Trainer::new(cfg).unwrap().run().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("injected failure"), "{msg}");
+        assert!(msg.contains("node 2"), "{msg}");
+        assert!(start.elapsed().as_secs() < 30, "must not hang");
+    }
+
+    #[test]
+    fn failure_at_first_step_also_clean() {
+        let mut cfg = quick_cfg(Strategy::Full);
+        cfg.workload.backend = Backend::Native("failing:0:1".into());
+        let err = Trainer::new(cfg).unwrap().run().unwrap_err();
+        assert!(format!("{err:#}").contains("injected failure"));
+    }
+
+    #[test]
+    fn topk_trains_with_tiny_wire_budget() {
+        let mut cfg = quick_cfg(Strategy::TopK);
+        cfg.iters = 300;
+        cfg.sync.topk_frac = 0.05;
+        let topk = Trainer::new(cfg).unwrap().run().unwrap();
+        let full = {
+            let mut c = quick_cfg(Strategy::Full);
+            c.iters = 300;
+            Trainer::new(c).unwrap().run().unwrap()
+        };
+        // error feedback keeps it learning
+        assert!(topk.best_eval_acc > 0.7, "topk acc {}", topk.best_eval_acc);
+        // ~0.05 * 2 (idx+val) = 10% of dense payload, PS-style wire
+        let ratio =
+            full.ledger.total_wire_bytes() as f64 / topk.ledger.total_wire_bytes() as f64;
+        assert!(ratio > 5.0, "wire ratio {ratio}");
+        assert_eq!(topk.ledger.count(CommKind::SparsePs), 300);
+    }
+
+    #[test]
+    fn checkpoint_and_warm_start() {
+        let dir = std::env::temp_dir().join(format!("adpsgd_coord_ckpt_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+
+        // cold run writes snapshots
+        let mut cfg = quick_cfg(Strategy::Adaptive);
+        cfg.iters = 200;
+        cfg.checkpoint_every = 100;
+        cfg.checkpoint_dir = dir.to_str().unwrap().into();
+        let cold = Trainer::new(cfg).unwrap().run().unwrap();
+        let latest = crate::checkpoint::Checkpoint::latest(&dir).unwrap().expect("snapshots");
+        let ck = crate::checkpoint::Checkpoint::load(&latest).unwrap();
+        assert_eq!(ck.iter, 200);
+        assert_eq!(ck.w.len(), cold.n_params);
+
+        // warm start resumes at roughly the cold run's final loss
+        let mut warm_cfg = quick_cfg(Strategy::Adaptive);
+        warm_cfg.iters = 40;
+        warm_cfg.init_from = dir.to_str().unwrap().into();
+        let warm = Trainer::new(warm_cfg).unwrap().run().unwrap();
+        let warm_first = warm.recorder.get("train_loss").unwrap().points[0].1;
+        let mut cold_cfg = quick_cfg(Strategy::Adaptive);
+        cold_cfg.iters = 40;
+        let cold2 = Trainer::new(cold_cfg).unwrap().run().unwrap();
+        let cold_first = cold2.recorder.get("train_loss").unwrap().points[0].1;
+        assert!(
+            warm_first < cold_first * 0.8,
+            "warm start should begin near trained loss: warm {warm_first} vs cold {cold_first}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn warm_start_param_mismatch_fails_cleanly() {
+        let dir = std::env::temp_dir().join(format!("adpsgd_mismatch_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        crate::checkpoint::Checkpoint::new(1, 0.0, vec![0.0; 17])
+            .save(&crate::checkpoint::Checkpoint::path_for(&dir, 1))
+            .unwrap();
+        let mut cfg = quick_cfg(Strategy::Constant);
+        cfg.init_from = dir.to_str().unwrap().into();
+        let err = Trainer::new(cfg).unwrap().run().unwrap_err();
+        assert!(format!("{err:#}").contains("params"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let r1 = Trainer::new(quick_cfg(Strategy::Adaptive)).unwrap().run().unwrap();
+        let r2 = Trainer::new(quick_cfg(Strategy::Adaptive)).unwrap().run().unwrap();
+        assert_eq!(r1.final_train_loss, r2.final_train_loss);
+        assert_eq!(r1.syncs, r2.syncs);
+        let s1 = r1.recorder.get("train_loss").unwrap();
+        let s2 = r2.recorder.get("train_loss").unwrap();
+        assert_eq!(s1.points, s2.points);
+    }
+}

@@ -1,0 +1,162 @@
+//! §IV-B robustness ablations — the paper's sensitivity claims:
+//!
+//! * "we achieve almost the same final test accuracy with p_init from 2
+//!   to 5 and K_s from 500 to 1500. When p_init is set to 8, the best
+//!   accuracy of ADPSGD decreases 0.5% ~ 1.0%."
+//! * the 0.7/1.3 thresholds "need values slightly smaller/greater than
+//!   1" — we sweep the band width as a design-choice ablation
+//!   (DESIGN.md §4 calls this out).
+//! * EASGD (related work [57]) vs ADPSGD at matched period — does the
+//!   elastic pull change the convergence/communication trade-off?
+
+use super::{run_strategy, Scale, Sink};
+use crate::config::ExperimentConfig;
+use crate::metrics::Table;
+use crate::period::Strategy;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub label: String,
+    pub best_acc: f64,
+    pub final_loss: f64,
+    pub syncs: u64,
+    pub avg_period: f64,
+}
+
+pub struct Ablation {
+    pub p_init: Vec<AblationRow>,
+    pub k_s: Vec<AblationRow>,
+    pub band: Vec<AblationRow>,
+    pub easgd: Vec<AblationRow>,
+}
+
+fn row(label: String, r: &crate::coordinator::RunReport) -> AblationRow {
+    AblationRow {
+        label,
+        best_acc: r.best_eval_acc,
+        final_loss: r.final_train_loss,
+        syncs: r.syncs,
+        avg_period: r.avg_period,
+    }
+}
+
+fn print_rows(sink: &Sink, title: &str, rows: &[AblationRow]) {
+    let mut t = Table::new(&["config", "best acc", "final loss", "syncs", "p̄"]);
+    for r in rows {
+        t.row(&[
+            r.label.clone(),
+            format!("{:.4}", r.best_acc),
+            format!("{:.4}", r.final_loss),
+            r.syncs.to_string(),
+            format!("{:.2}", r.avg_period),
+        ]);
+    }
+    sink.print(title);
+    sink.print(&t.render());
+}
+
+/// Run the full ablation suite on one base config.
+pub fn ablation(base: &ExperimentConfig, scale: Scale, sink: &Sink) -> Result<Ablation> {
+    // ---- p_init sweep (paper: 2..5 equivalent, 8 degrades) ------------
+    let p_inits: Vec<usize> = match scale {
+        Scale::Quick => vec![2, 4, 8],
+        Scale::Paper => vec![2, 3, 4, 5, 8],
+    };
+    let mut p_init = Vec::new();
+    for p in p_inits {
+        let mut cfg = base.clone();
+        cfg.sync.p_init = p;
+        let r = run_strategy(&cfg, Strategy::Adaptive, &format!("abl_pinit{p}"))?;
+        p_init.push(row(format!("p_init={p}"), &r));
+    }
+    print_rows(sink, "Ablation — ADPSGD p_init sensitivity (§IV-B)", &p_init);
+
+    // ---- K_s sweep (paper: 500..1500 of 4000 equivalent) --------------
+    let ks_fracs: Vec<f64> = match scale {
+        Scale::Quick => vec![0.125, 0.25, 0.375],
+        Scale::Paper => vec![0.125, 0.1875, 0.25, 0.3125, 0.375],
+    };
+    let mut k_s = Vec::new();
+    for f in ks_fracs {
+        let mut cfg = base.clone();
+        cfg.sync.ks_frac = f;
+        let r = run_strategy(&cfg, Strategy::Adaptive, &format!("abl_ks{f}"))?;
+        k_s.push(row(format!("K_s={:.0}", f * base.iters as f64), &r));
+    }
+    print_rows(sink, "Ablation — ADPSGD K_s sensitivity (§IV-B)", &k_s);
+
+    // ---- threshold-band sweep ------------------------------------------
+    let bands: Vec<(f64, f64)> = match scale {
+        Scale::Quick => vec![(0.9, 1.1), (0.7, 1.3), (0.4, 1.6)],
+        Scale::Paper => vec![(0.95, 1.05), (0.9, 1.1), (0.7, 1.3), (0.5, 1.5), (0.4, 1.6)],
+    };
+    let mut band = Vec::new();
+    for (lo, hi) in bands {
+        let mut cfg = base.clone();
+        cfg.sync.low = lo;
+        cfg.sync.high = hi;
+        let r = run_strategy(&cfg, Strategy::Adaptive, &format!("abl_band{lo}_{hi}"))?;
+        band.push(row(format!("[{lo},{hi}]"), &r));
+    }
+    print_rows(sink, "Ablation — Algorithm 2 threshold band (design choice)", &band);
+
+    // ---- EASGD comparison ----------------------------------------------
+    let mut easgd = Vec::new();
+    for alpha in [0.25, 0.5, 0.9] {
+        let mut cfg = base.clone();
+        cfg.sync.period = 8;
+        cfg.sync.easgd_alpha = alpha;
+        cfg.sync.warmup_iters = 0;
+        let r = run_strategy(&cfg, Strategy::Easgd, &format!("abl_easgd{alpha}"))?;
+        easgd.push(row(format!("EASGD α={alpha}"), &r));
+    }
+    {
+        let r = run_strategy(base, Strategy::Adaptive, "abl_easgd_adpsgd")?;
+        easgd.push(row("ADPSGD".into(), &r));
+    }
+    print_rows(sink, "Ablation — EASGD (related work [57]) vs ADPSGD", &easgd);
+
+    Ok(Ablation { p_init, k_s, band, easgd })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::{cifar_base, googlenet_role};
+
+    #[test]
+    fn ablation_reproduces_robustness_claims() {
+        let scale = Scale::Quick;
+        let mut base = cifar_base(scale);
+        googlenet_role(&mut base, scale);
+        base.iters = 280;
+        base.eval_every = 40;
+        if let crate::config::LrSchedule::StepDecay { boundaries, .. } = &mut base.optim.schedule {
+            *boundaries = vec![140, 210];
+        }
+        let a = ablation(&base, scale, &Sink::new(None, true)).unwrap();
+
+        // p_init 2..4 nearly equivalent (paper: "almost the same")
+        let accs: Vec<f64> = a.p_init.iter().map(|r| r.best_acc).collect();
+        let small_spread = (accs[0] - accs[1]).abs();
+        assert!(small_spread < 0.08, "p_init 2 vs 4 spread {small_spread}");
+
+        // K_s choices all converge (robustness claim)
+        for r in &a.k_s {
+            assert!(r.best_acc > 0.5, "{}: {}", r.label, r.best_acc);
+        }
+
+        // wider bands adapt less aggressively (same or more syncs is not
+        // required — but every band must converge)
+        for r in &a.band {
+            assert!(r.final_loss.is_finite(), "{}", r.label);
+        }
+
+        // EASGD variants converge; ADPSGD row exists
+        assert_eq!(a.easgd.len(), 4);
+        for r in &a.easgd {
+            assert!(r.best_acc > 0.4, "{}: {}", r.label, r.best_acc);
+        }
+    }
+}

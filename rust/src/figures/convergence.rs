@@ -1,0 +1,268 @@
+//! Figures 4, 5, 7, 8: convergence + execution-time comparisons of
+//! FULLSGD / CPSGD(p=8) / ADPSGD / QSGD.
+//!
+//! * Fig 4a/b, 5a/b — training loss + test accuracy on the CIFAR-geometry
+//!   workloads (GoogLeNet role = compute-heavy, VGG role = comm-heavy).
+//! * Fig 4c, 5c — computation/communication split at 100Gbps and 10Gbps.
+//! * Fig 7, 8 — the ImageNet-geometry runs (gradual-warmup LR schedule,
+//!   periodic averaging engaged only after warmup).
+
+use super::{cifar_base, googlenet_role, run_quartet, vgg_role, Scale, Sink};
+use crate::config::{ExperimentConfig, LrSchedule, NetConfig};
+use crate::coordinator::RunReport;
+use crate::metrics::Table;
+use crate::netsim::NetModel;
+use anyhow::Result;
+
+/// Which model "role" a convergence figure exercises.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Fig 4 (GoogLeNet): compute-heavy.
+    GoogLeNet,
+    /// Fig 5 (VGG16): parameter/communication-heavy.
+    Vgg16,
+    /// Fig 7 (ResNet50/ImageNet geometry): warmup LR schedule.
+    ResNet50,
+    /// Fig 8 (AlexNet/ImageNet geometry): warmup LR, comm-heavier.
+    AlexNet,
+}
+
+impl Role {
+    pub fn figure(self) -> &'static str {
+        match self {
+            Role::GoogLeNet => "Fig 4",
+            Role::Vgg16 => "Fig 5",
+            Role::ResNet50 => "Fig 7",
+            Role::AlexNet => "Fig 8",
+        }
+    }
+
+    pub fn is_imagenet(self) -> bool {
+        matches!(self, Role::ResNet50 | Role::AlexNet)
+    }
+}
+
+/// Build the experiment config for a role at a scale.
+pub fn role_config(role: Role, scale: Scale) -> ExperimentConfig {
+    let mut cfg = cifar_base(scale);
+    match role {
+        Role::GoogLeNet => googlenet_role(&mut cfg, scale),
+        Role::Vgg16 => vgg_role(&mut cfg, scale),
+        Role::ResNet50 | Role::AlexNet => {
+            // ImageNet geometry: more classes, warmup+step LR (§IV-C),
+            // periodic averaging only after warmup (warmup syncs as FULL
+            // ≈ our p=1 warmup window covering the LR ramp).
+            let k = cfg.iters;
+            if role == Role::ResNet50 {
+                googlenet_role(&mut cfg, scale);
+            } else {
+                vgg_role(&mut cfg, scale);
+            }
+            cfg.workload.classes = match scale {
+                Scale::Quick => 20,
+                Scale::Paper => 100,
+            };
+            let warmup = k * 8 / 90; // paper: 8 of 90 epochs
+            cfg.optim.schedule = LrSchedule::Warmup {
+                warmup_iters: warmup,
+                warmup_factor: 8.0,
+                boundaries: vec![k / 3, 2 * k / 3],
+                factor: 0.1,
+            };
+            cfg.sync.warmup_iters = warmup;
+            cfg.sync.ks_frac = 0.2; // paper: K_s = 0.2K on ImageNet
+        }
+    }
+    cfg
+}
+
+/// Result of one convergence figure: the four strategy runs, in the
+/// paper's order (FULLSGD, CPSGD, ADPSGD, QSGD).
+pub struct Convergence {
+    pub role: Role,
+    pub runs: Vec<RunReport>,
+    pub iters: usize,
+    /// the base config the quartet ran under (time_split calibrates
+    /// per-step compute from it)
+    pub cfg: ExperimentConfig,
+}
+
+impl Convergence {
+    pub fn get(&self, name: &str) -> &RunReport {
+        self.runs
+            .iter()
+            .find(|r| r.name == name)
+            .unwrap_or_else(|| panic!("run {name} missing"))
+    }
+
+    pub fn fullsgd(&self) -> &RunReport {
+        self.get("fullsgd")
+    }
+    pub fn cpsgd(&self) -> &RunReport {
+        self.get("cpsgd")
+    }
+    pub fn adpsgd(&self) -> &RunReport {
+        self.get("adpsgd")
+    }
+    pub fn qsgd(&self) -> &RunReport {
+        self.get("qsgd")
+    }
+}
+
+/// Run one convergence figure (4/5/7/8 a+b panels).
+pub fn convergence(role: Role, scale: Scale, sink: &Sink) -> Result<Convergence> {
+    let cfg = role_config(role, scale);
+    let runs = run_quartet(&cfg)?;
+    let tag = role.figure().replace(' ', "").to_lowercase();
+    for r in &runs {
+        sink.write(&format!("{tag}_{}", r.name), &r.recorder)?;
+    }
+
+    let mut t =
+        Table::new(&["version", "final loss", "min loss", "best acc", "syncs", "p̄", "wire GB"]);
+    for r in &runs {
+        t.row(&[
+            r.strategy.to_string(),
+            format!("{:.4}", r.final_train_loss),
+            format!("{:.4}", r.min_train_loss),
+            format!("{:.4}", r.best_eval_acc),
+            r.syncs.to_string(),
+            format!("{:.2}", r.avg_period),
+            format!("{:.3}", r.ledger.total_wire_bytes() as f64 / 1e9),
+        ]);
+    }
+    sink.print(&format!(
+        "{}a/b — {:?}-role convergence ({} nodes, K={})",
+        role.figure(),
+        role,
+        cfg.nodes,
+        cfg.iters
+    ));
+    sink.print(&t.render());
+
+    Ok(Convergence { role, runs, iters: cfg.iters, cfg })
+}
+
+/// One row of the time-split panel (Fig 4c/5c/7c/8c).
+pub struct TimeSplit {
+    pub version: String,
+    pub compute_secs: f64,
+    pub comm_100g: f64,
+    pub comm_10g: f64,
+}
+
+/// Fig 4c/5c/7c/8c: computation/communication split under both
+/// bandwidth presets, re-priced from the run ledgers.
+///
+/// Per-node compute is *calibrated* (single-node, contention-free run —
+/// on the paper's testbed every node computes on its own GPU in
+/// parallel) rather than read from the 16-threads-on-shared-cores
+/// training runs, whose per-thread timers include preemption.  The
+/// paper's Fig 4c shows near-identical computation bars across versions;
+/// ADPSGD's S_k overhead is <1% (§IV-B) and is charged as such.
+pub fn time_split(conv: &Convergence, sink: &Sink) -> Vec<TimeSplit> {
+    let fast = NetModel::new(&NetConfig::infiniband_100g());
+    let slow = NetModel::new(&NetConfig::ethernet_10g());
+    let per_step = crate::figures::speedup::calibrate_step_secs(&conv.cfg, 50)
+        .expect("calibration run failed");
+    let rows: Vec<TimeSplit> = conv
+        .runs
+        .iter()
+        .map(|r| {
+            // §IV-B: "it cost less than 1% of the original computation"
+            let overhead = match r.name.as_str() {
+                "adpsgd" => 1.01,
+                _ => 1.0,
+            };
+            TimeSplit {
+                version: r.strategy.to_string(),
+                compute_secs: per_step * conv.iters as f64 * overhead,
+                comm_100g: r.ledger.modeled_secs(&fast),
+                comm_10g: r.ledger.modeled_secs(&slow),
+            }
+        })
+        .collect();
+
+    let full = &rows[0];
+    let mut t = Table::new(&[
+        "version",
+        "compute",
+        "comm@100G",
+        "comm@10G",
+        "total@100G",
+        "total@10G",
+        "speedup@100G",
+        "speedup@10G",
+    ]);
+    for r in &rows {
+        let t100 = r.compute_secs + r.comm_100g;
+        let t10 = r.compute_secs + r.comm_10g;
+        let f100 = full.compute_secs + full.comm_100g;
+        let f10 = full.compute_secs + full.comm_10g;
+        t.row(&[
+            r.version.clone(),
+            crate::util::fmt::secs(r.compute_secs),
+            crate::util::fmt::secs(r.comm_100g),
+            crate::util::fmt::secs(r.comm_10g),
+            crate::util::fmt::secs(t100),
+            crate::util::fmt::secs(t10),
+            format!("{:.2}x", f100 / t100),
+            format!("{:.2}x", f10 / t10),
+        ]);
+    }
+    sink.print(&format!("{}c — computation/communication split", conv.role.figure()));
+    sink.print(&t.render());
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet() -> Sink {
+        Sink::new(None, true)
+    }
+
+    #[test]
+    fn fig4_convergence_ordering() {
+        let c = convergence(Role::GoogLeNet, Scale::Quick, &quiet()).unwrap();
+        assert_eq!(c.runs.len(), 4);
+        // every version actually trains
+        for r in &c.runs {
+            assert!(r.final_train_loss.is_finite());
+            assert!(r.best_eval_acc > 0.3, "{}: acc {}", r.name, r.best_eval_acc);
+        }
+        // ADPSGD communicates less than FULLSGD by ~p̄
+        assert!(c.adpsgd().syncs < c.fullsgd().syncs / 2);
+        // paper: ADPSGD wire bytes ≈ 1/2 of QSGD, 1/8 of FULLSGD
+        let aw = c.adpsgd().ledger.total_wire_bytes() as f64;
+        let fw = c.fullsgd().ledger.total_wire_bytes() as f64;
+        assert!(aw < fw / 3.0, "adpsgd wire {aw} vs full {fw}");
+    }
+
+    #[test]
+    fn fig4c_time_split_shapes() {
+        let c = convergence(Role::GoogLeNet, Scale::Quick, &quiet()).unwrap();
+        let rows = time_split(&c, &quiet());
+        let full = &rows[0];
+        let adp = &rows[2];
+        // ADPSGD strictly reduces modeled comm vs FULLSGD at both bands
+        assert!(adp.comm_100g < full.comm_100g);
+        assert!(adp.comm_10g < full.comm_10g);
+        // comm grows when bandwidth shrinks
+        for r in &rows {
+            assert!(r.comm_10g > r.comm_100g);
+        }
+    }
+
+    #[test]
+    fn fig7_imagenet_geometry_runs() {
+        let c = convergence(Role::ResNet50, Scale::Quick, &quiet()).unwrap();
+        for r in &c.runs {
+            assert!(r.final_train_loss.is_finite(), "{} diverged", r.name);
+        }
+        // warmup makes the first segment fully synchronous for ADPSGD:
+        // effective average period must stay modest but > 1
+        assert!(c.adpsgd().avg_period > 1.0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Table I: best test accuracy of SMALL_BATCH / ADPSGD / CPSGD(p sweep)
+//! / FULLSGD(γ₀ sweep) on the CIFAR-geometry workloads.
+//!
+//! Paper result: SMALL_BATCH highest, ADPSGD second, CPSGD's best sweep
+//! point below ADPSGD (while needing more communication), FULLSGD unable
+//! to close the large-batch generalization gap by raising γ₀.
+
+use super::{run_strategy, Scale, Sink};
+use crate::config::ExperimentConfig;
+use crate::coordinator::Trainer;
+use crate::metrics::Table;
+use crate::period::Strategy;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub version: String,
+    pub best_acc: f64,
+    /// the sweep point that achieved it ("p=7", "γ₀=0.3", "")
+    pub argmax: String,
+    pub syncs: u64,
+}
+
+pub struct Table1 {
+    pub rows: Vec<Table1Row>,
+}
+
+impl Table1 {
+    pub fn get(&self, version: &str) -> &Table1Row {
+        self.rows
+            .iter()
+            .find(|r| r.version == version)
+            .unwrap_or_else(|| panic!("row {version} missing"))
+    }
+}
+
+fn cpsgd_periods(scale: Scale) -> Vec<usize> {
+    match scale {
+        Scale::Quick => vec![2, 4, 8, 16],
+        Scale::Paper => (2..=16).collect(),
+    }
+}
+
+fn fullsgd_lrs(scale: Scale) -> Vec<f32> {
+    match scale {
+        Scale::Quick => vec![0.1, 0.2, 0.4, 0.8],
+        Scale::Paper => (1..=16).map(|i| i as f32 * 0.1).collect(),
+    }
+}
+
+/// Regenerate Table I for one base workload config.
+pub fn table1(base: &ExperimentConfig, scale: Scale, sink: &Sink) -> Result<Table1> {
+    let mut rows = Vec::new();
+
+    // (a) SMALL_BATCH: vanilla single-node SGD, same number of epochs ⇒
+    //     nodes× more iterations at 1/nodes the batch.
+    {
+        let mut cfg = base.clone();
+        let n = cfg.nodes;
+        cfg.nodes = 1;
+        cfg.iters = base.iters * n;
+        // keep the LR boundaries at the same epoch fractions
+        if let crate::config::LrSchedule::StepDecay { boundaries, .. } = &mut cfg.optim.schedule {
+            boundaries.iter_mut().for_each(|b| *b *= n);
+        }
+        cfg.eval_every = cfg.iters / 20;
+        cfg.sync.strategy = Strategy::Full;
+        cfg.name = "small_batch".into();
+        let rep = Trainer::new(cfg)?.run()?;
+        rows.push(Table1Row {
+            version: "SMALL_BATCH".into(),
+            best_acc: rep.best_eval_acc,
+            argmax: format!("B={}", base.batch_per_node),
+            syncs: 0,
+        });
+    }
+
+    // (b) ADPSGD at the paper's default knobs.
+    {
+        let rep = run_strategy(base, Strategy::Adaptive, "table1_adpsgd")?;
+        rows.push(Table1Row {
+            version: "ADPSGD".into(),
+            best_acc: rep.best_eval_acc,
+            argmax: format!("p̄={:.2}", rep.avg_period),
+            syncs: rep.syncs,
+        });
+    }
+
+    // (c) CPSGD: sweep p, report the best.
+    {
+        let mut best: Option<(usize, f64, u64)> = None;
+        for p in cpsgd_periods(scale) {
+            let mut cfg = base.clone();
+            cfg.sync.period = p;
+            cfg.sync.warmup_iters = 0;
+            let rep = run_strategy(&cfg, Strategy::Constant, &format!("table1_cpsgd_p{p}"))?;
+            if best.map(|(_, acc, _)| rep.best_eval_acc > acc).unwrap_or(true) {
+                best = Some((p, rep.best_eval_acc, rep.syncs));
+            }
+        }
+        let (p, acc, syncs) = best.unwrap();
+        rows.push(Table1Row {
+            version: "CPSGD".into(),
+            best_acc: acc,
+            argmax: format!("p={p}"),
+            syncs,
+        });
+    }
+
+    // (d) FULLSGD: sweep γ₀ (linear-scaling attempts), report the best.
+    {
+        let mut best: Option<(f32, f64)> = None;
+        for lr0 in fullsgd_lrs(scale) {
+            let mut cfg = base.clone();
+            cfg.optim.lr0 = lr0;
+            let rep = run_strategy(&cfg, Strategy::Full, &format!("table1_full_lr{lr0}"))?;
+            if rep.best_eval_acc.is_finite()
+                && best.map(|(_, acc)| rep.best_eval_acc > acc).unwrap_or(true)
+            {
+                best = Some((lr0, rep.best_eval_acc));
+            }
+        }
+        let (lr0, acc) = best.unwrap();
+        rows.push(Table1Row {
+            version: "FULLSGD".into(),
+            best_acc: acc,
+            argmax: format!("γ₀={lr0}"),
+            syncs: base.iters as u64,
+        });
+    }
+
+    let mut t = Table::new(&["version", "best acc", "argmax", "syncs"]);
+    for r in &rows {
+        t.row(&[
+            r.version.clone(),
+            format!("{:.4}", r.best_acc),
+            r.argmax.clone(),
+            r.syncs.to_string(),
+        ]);
+    }
+    sink.print("Table I — best test accuracy per version");
+    sink.print(&t.render());
+    Ok(Table1 { rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::{cifar_base, googlenet_role};
+
+    #[test]
+    fn table1_rows_and_sanity() {
+        let scale = Scale::Quick;
+        let mut base = cifar_base(scale);
+        googlenet_role(&mut base, scale);
+        base.iters = 240; // keep the sweep quick
+        base.eval_every = 40;
+        if let crate::config::LrSchedule::StepDecay { boundaries, .. } = &mut base.optim.schedule {
+            *boundaries = vec![120, 180];
+        }
+        let t = table1(&base, scale, &Sink::new(None, true)).unwrap();
+        assert_eq!(t.rows.len(), 4);
+        for r in &t.rows {
+            assert!(
+                r.best_acc.is_finite() && r.best_acc > 0.2,
+                "{}: acc {}",
+                r.version,
+                r.best_acc
+            );
+        }
+        // every version must clear random chance by a wide margin
+        let adp = t.get("ADPSGD");
+        assert!(adp.best_acc > 0.5, "ADPSGD acc {}", adp.best_acc);
+    }
+}

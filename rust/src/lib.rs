@@ -1,0 +1,64 @@
+//! # adpsgd — Adaptive Periodic Parameter Averaging SGD
+//!
+//! Production-shaped reproduction of *"Adaptive Periodic Averaging: A
+//! Practical Approach to Reducing Communication in Distributed Learning"*
+//! (Jiang & Agrawal, 2020).
+//!
+//! The paper's contribution is a coordination-layer scheduling algorithm:
+//! during distributed data-parallel SGD with periodic parameter averaging,
+//! pick the averaging period `p` **adaptively** so that the inter-node
+//! parameter variance `S_k` tracks `γ_k·C₂/M` (Algorithm 2 of the paper),
+//! rather than using a constant period (Algorithm 1).  This crate is the
+//! Layer-3 rust coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — worker/leader orchestration, period controllers,
+//!   in-process collectives, QSGD quantization, a network cost model that
+//!   reproduces the paper's 100Gbps/10Gbps wall-clock analysis, metrics,
+//!   config, CLI.
+//! * **L2 (python/compile/model.py, build-time only)** — the model zoo as
+//!   pure functions over flat `f32[P]` parameter vectors, AOT-lowered to
+//!   HLO text under `artifacts/`.
+//! * **L1 (python/compile/kernels/, build-time only)** — Pallas kernels
+//!   (blocked matmul, fused momentum update, squared-deviation reduction,
+//!   QSGD quantizer) baked into those artifacts.
+//!
+//! The [`runtime`] module loads the artifacts via the PJRT C API and
+//! executes them from the training hot path; python never runs at train
+//! time.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use adpsgd::config::ExperimentConfig;
+//! use adpsgd::coordinator::Trainer;
+//!
+//! let mut cfg = ExperimentConfig::default();
+//! cfg.nodes = 8;
+//! cfg.iters = 2_000;
+//! cfg.sync.strategy = adpsgd::period::Strategy::Adaptive;
+//! let report = Trainer::new(cfg).unwrap().run().unwrap();
+//! println!("final loss {:.4}", report.final_train_loss);
+//! ```
+
+pub mod analysis;
+pub mod checkpoint;
+pub mod cli;
+pub mod collective;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod figures;
+pub mod metrics;
+pub mod netsim;
+pub mod optim;
+pub mod period;
+pub mod quant;
+pub mod runtime;
+pub mod sparse;
+pub mod tensor;
+pub mod util;
+pub mod workload;
+
+pub use config::ExperimentConfig;
+pub use coordinator::{RunReport, Trainer};
+pub use period::Strategy;

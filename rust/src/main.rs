@@ -1,0 +1,185 @@
+//! `adpsgd` — the launcher.
+//!
+//! ```text
+//! adpsgd run      [--config exp.toml] [--sync.strategy=adpsgd] [--nodes 16] ...
+//! adpsgd figures  [--only fig1,fig4,...] [--quick] [--out results]
+//! adpsgd models   [--artifacts artifacts]
+//! adpsgd help
+//! ```
+//!
+//! `run` executes one experiment described by a TOML config plus dotted
+//! CLI overrides; `figures` regenerates every paper table/figure (see
+//! DESIGN.md §4); `models` lists the AOT artifacts the PJRT runtime can
+//! load.
+
+use adpsgd::cli::Args;
+use adpsgd::config::ExperimentConfig;
+use adpsgd::coordinator::Trainer;
+use adpsgd::figures::{self, Scale, Sink};
+use anyhow::{bail, Context, Result};
+
+const HELP: &str = "\
+adpsgd — Adaptive Periodic Parameter Averaging SGD (Jiang & Agrawal 2020)
+
+USAGE:
+    adpsgd run     [--config FILE] [--out DIR] [--json [--series]]
+                   [--key.subkey=value ...]
+    adpsgd figures [--only LIST] [--quick] [--out DIR]
+    adpsgd models  [--artifacts DIR]
+    adpsgd help
+
+RUN OVERRIDES (dotted keys mirror the TOML schema):
+    --nodes 16 --iters 4000 --batch_per_node 128 --seed 42
+    --sync.strategy {full|cpsgd|adpsgd|decreasing|qsgd}
+    --sync.period 8 --sync.p_init 4 --sync.ks_frac 0.25
+    --workload.backend {native|hlo} --workload.model mlp_small
+    --optim.lr0 0.1 --optim.schedule {const|step|warmup}
+    --net.bandwidth_gbps 100 --net.latency_us 2
+
+FIGURES:
+    --only fig1,fig2,fig4,fig5,fig6,fig7,fig8,table1,sec5b,ablation  (default: all)
+    --quick        shrink every axis (seconds instead of minutes)
+    --out DIR      write the CSV series behind each panel
+";
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::parse_env(&["quick", "quiet", "json", "series"])?;
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("models") => cmd_models(&args),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?} (try `adpsgd help`)"),
+    }
+}
+
+fn build_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut overrides = args.config_overrides();
+    // allow the common top-level keys without a dot, too
+    for k in ["name", "seed", "nodes", "iters", "batch_per_node", "eval_every", "variance_every"] {
+        if let Some(v) = args.get(k) {
+            overrides.push((k.to_string(), v.to_string()));
+        }
+    }
+    match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(path, &overrides),
+        None => {
+            // synthesize a TOML document from the overrides alone
+            let text = String::new();
+            let mut doc = adpsgd::config::toml::TomlDoc::parse(&text)
+                .map_err(|e| anyhow::anyhow!("internal: {e}"))?;
+            for (k, v) in &overrides {
+                let val = adpsgd::config::toml::TomlDoc::parse(&format!("x = {v}"))
+                    .ok()
+                    .and_then(|d| d.get("x").cloned())
+                    .unwrap_or(adpsgd::config::toml::TomlValue::Str(v.clone()));
+                doc.entries.insert(k.clone(), val);
+            }
+            ExperimentConfig::from_doc(&doc)
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let json_out = args.flag("json");
+    if !json_out {
+        println!(
+            "run: {} | {} nodes × {} iters | strategy {} | backend {:?}",
+            cfg.name, cfg.nodes, cfg.iters, cfg.sync.strategy, cfg.workload.backend
+        );
+    }
+    let report = Trainer::new(cfg)?.run().context("training run failed")?;
+    if json_out {
+        println!("{}", report.to_json(args.flag("series")).to_string_compact());
+    } else {
+        println!("{}", report.one_line());
+        println!("--- communication ledger ---\n{}", report.ledger.summary());
+    }
+    if let Some(dir) = args.get("out") {
+        let files = report.recorder.write_csvs(std::path::Path::new(dir), &report.name)?;
+        if !json_out {
+            println!("wrote {} series to {dir}/", files.len());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let scale = Scale::from_flag(args.flag("quick"));
+    let sink = Sink::new(args.get("out"), args.flag("quiet"));
+    let only: Vec<String> = args
+        .get("only")
+        .map(|s| s.split(',').map(|x| x.trim().to_string()).collect())
+        .unwrap_or_default();
+    let want = |name: &str| only.is_empty() || only.iter().any(|o| o == name);
+
+    if want("fig1") {
+        figures::variance::fig1(scale, &sink)?;
+    }
+    if want("fig2") || want("fig3") {
+        figures::variance::fig2_fig3(scale, &sink)?;
+    }
+    for (key, role) in [
+        ("fig4", figures::convergence::Role::GoogLeNet),
+        ("fig5", figures::convergence::Role::Vgg16),
+        ("fig7", figures::convergence::Role::ResNet50),
+        ("fig8", figures::convergence::Role::AlexNet),
+    ] {
+        if want(key) {
+            let conv = figures::convergence::convergence(role, scale, &sink)?;
+            figures::convergence::time_split(&conv, &sink);
+        }
+    }
+    if want("fig6") {
+        let mut g = figures::cifar_base(scale);
+        figures::googlenet_role(&mut g, scale);
+        figures::speedup::fig6("googlenet-role", &g, scale, &sink)?;
+        let mut v = figures::cifar_base(scale);
+        figures::vgg_role(&mut v, scale);
+        figures::speedup::fig6("vgg-role", &v, scale, &sink)?;
+    }
+    if want("table1") {
+        let mut base = figures::cifar_base(scale);
+        figures::googlenet_role(&mut base, scale);
+        figures::table1::table1(&base, scale, &sink)?;
+    }
+    if want("sec5b") {
+        let mut base = figures::cifar_base(scale);
+        figures::googlenet_role(&mut base, scale);
+        figures::decreasing::decreasing_study(&base, &sink)?;
+    }
+    if want("ablation") {
+        let mut base = figures::cifar_base(scale);
+        figures::googlenet_role(&mut base, scale);
+        figures::ablation::ablation(&base, scale, &sink)?;
+    }
+    Ok(())
+}
+
+fn cmd_models(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let man = adpsgd::runtime::Manifest::load(dir)?;
+    println!("{:<12} {:>10} {:>8} {:>6} kind", "model", "params", "batch", "files");
+    for (name, spec) in &man.models {
+        println!(
+            "{:<12} {:>10} {:>8} {:>6} {}",
+            name,
+            spec.param_count,
+            spec.batch,
+            spec.files.len(),
+            spec.kind
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,214 @@
+//! Run metrics: named time series + CSV/summary emission.
+//!
+//! Every curve in the paper's figures is a `Series` here; the figure
+//! harness writes them as CSV under `results/` and prints the rows the
+//! paper reports.
+
+pub mod plot;
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// One named (x, y) series, e.g. ("train_loss", iter -> loss).
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Series { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn last_y(&self) -> Option<f64> {
+        self.points.last().map(|p| p.1)
+    }
+
+    pub fn min_y(&self) -> Option<f64> {
+        self.points.iter().map(|p| p.1).min_by(|a, b| a.total_cmp(b))
+    }
+
+    pub fn max_y(&self) -> Option<f64> {
+        self.points.iter().map(|p| p.1).max_by(|a, b| a.total_cmp(b))
+    }
+
+    /// Mean of y over points with x in [x0, x1).
+    pub fn mean_y_in(&self, x0: f64, x1: f64) -> Option<f64> {
+        let pts: Vec<f64> =
+            self.points.iter().filter(|p| p.0 >= x0 && p.0 < x1).map(|p| p.1).collect();
+        if pts.is_empty() {
+            None
+        } else {
+            Some(pts.iter().sum::<f64>() / pts.len() as f64)
+        }
+    }
+
+    /// Tail mean (last `k` points) — a stable "final loss" readout.
+    pub fn tail_mean(&self, k: usize) -> Option<f64> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let n = self.points.len();
+        let s = n.saturating_sub(k);
+        let pts = &self.points[s..];
+        Some(pts.iter().map(|p| p.1).sum::<f64>() / pts.len() as f64)
+    }
+}
+
+/// A bag of series, keyed by name.
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    pub series: BTreeMap<String, Series>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, name: &str, x: f64, y: f64) {
+        self.series
+            .entry(name.to_string())
+            .or_insert_with(|| Series::new(name))
+            .push(x, y);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    /// Write one CSV per series: `<dir>/<prefix>.<series>.csv` with
+    /// header `x,y`.
+    pub fn write_csvs(&self, dir: &Path, prefix: &str) -> Result<Vec<std::path::PathBuf>> {
+        std::fs::create_dir_all(dir)?;
+        let mut written = Vec::new();
+        for (name, s) in &self.series {
+            let path = dir.join(format!("{prefix}.{name}.csv"));
+            let mut f = std::fs::File::create(&path)
+                .with_context(|| format!("creating {}", path.display()))?;
+            writeln!(f, "x,y")?;
+            for (x, y) in &s.points {
+                writeln!(f, "{x},{y}")?;
+            }
+            written.push(path);
+        }
+        Ok(written)
+    }
+
+    /// Merge another recorder's series under a name prefix (for
+    /// multi-run figure assembly: "adpsgd.train_loss" etc.).
+    pub fn merge_prefixed(&mut self, prefix: &str, other: &Recorder) {
+        for (name, s) in &other.series {
+            let full = format!("{prefix}.{name}");
+            let entry =
+                self.series.entry(full.clone()).or_insert_with(|| Series::new(full.clone()));
+            entry.points.extend_from_slice(&s.points);
+        }
+    }
+}
+
+/// Simple aligned-table printer for figure/bench output.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:>w$}  ", c, w = width[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &width));
+        out.push('\n');
+        out.push_str(&"-".repeat(width.iter().sum::<usize>() + 2 * ncol));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &width));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_stats() {
+        let mut s = Series::new("loss");
+        for i in 0..10 {
+            s.push(i as f64, (10 - i) as f64);
+        }
+        assert_eq!(s.last_y(), Some(1.0));
+        assert_eq!(s.min_y(), Some(1.0));
+        assert_eq!(s.max_y(), Some(10.0));
+        assert_eq!(s.mean_y_in(0.0, 2.0), Some(9.5));
+        assert_eq!(s.tail_mean(2), Some(1.5));
+    }
+
+    #[test]
+    fn recorder_csv_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("adpsgd_test_{}", std::process::id()));
+        let mut r = Recorder::new();
+        r.push("a", 0.0, 1.0);
+        r.push("a", 1.0, 2.0);
+        r.push("b", 0.0, -1.0);
+        let files = r.write_csvs(&dir, "run1").unwrap();
+        assert_eq!(files.len(), 2);
+        let text = std::fs::read_to_string(&files[0]).unwrap();
+        assert!(text.starts_with("x,y\n"));
+        assert!(text.contains("1,2"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_prefixed_namespaces() {
+        let mut a = Recorder::new();
+        let mut b = Recorder::new();
+        b.push("loss", 0.0, 3.0);
+        a.merge_prefixed("adpsgd", &b);
+        assert!(a.get("adpsgd.loss").is_some());
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["x".into(), "1.0".into()]);
+        t.row(&["longer".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("name"));
+        assert!(s.lines().count() == 4);
+    }
+}

@@ -1,0 +1,176 @@
+//! Terminal line plots for the figure examples — renders one or more
+//! [`Series`](crate::metrics::Series) as a braille-free ASCII chart so
+//! `cargo run --example variance_study` shows the paper's curves
+//! directly in the log, next to the CSVs it writes.
+
+use crate::metrics::Series;
+
+/// Plot configuration.
+#[derive(Debug, Clone)]
+pub struct PlotCfg {
+    pub width: usize,
+    pub height: usize,
+    /// log10-scale the y axis (variance plots span 6+ decades)
+    pub log_y: bool,
+    pub title: String,
+}
+
+impl Default for PlotCfg {
+    fn default() -> Self {
+        PlotCfg { width: 72, height: 16, log_y: false, title: String::new() }
+    }
+}
+
+const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@'];
+
+fn transform(y: f64, log_y: bool) -> Option<f64> {
+    if !y.is_finite() {
+        return None;
+    }
+    if log_y {
+        if y <= 0.0 {
+            None
+        } else {
+            Some(y.log10())
+        }
+    } else {
+        Some(y)
+    }
+}
+
+/// Render `series` (name, points) into an ASCII chart.
+pub fn render(series: &[&Series], cfg: &PlotCfg) -> String {
+    let (w, h) = (cfg.width.max(16), cfg.height.max(4));
+    // data ranges
+    let mut xmin = f64::INFINITY;
+    let mut xmax = f64::NEG_INFINITY;
+    let mut ymin = f64::INFINITY;
+    let mut ymax = f64::NEG_INFINITY;
+    for s in series {
+        for &(x, y) in &s.points {
+            let Some(ty) = transform(y, cfg.log_y) else { continue };
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+            ymin = ymin.min(ty);
+            ymax = ymax.max(ty);
+        }
+    }
+    if !(xmin.is_finite() && ymin.is_finite()) {
+        return format!("{} (no finite data)\n", cfg.title);
+    }
+    if (xmax - xmin).abs() < 1e-30 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-30 {
+        ymax = ymin + 1.0;
+    }
+
+    let mut grid = vec![vec![' '; w]; h];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in &s.points {
+            let Some(ty) = transform(y, cfg.log_y) else { continue };
+            let cx = ((x - xmin) / (xmax - xmin) * (w - 1) as f64).round() as usize;
+            let cy = ((ty - ymin) / (ymax - ymin) * (h - 1) as f64).round() as usize;
+            let r = h - 1 - cy.min(h - 1);
+            grid[r][cx.min(w - 1)] = mark;
+        }
+    }
+
+    let y_label = |v: f64| -> String {
+        let v = if cfg.log_y { 10f64.powf(v) } else { v };
+        format!("{v:>9.2e}")
+    };
+
+    let mut out = String::new();
+    if !cfg.title.is_empty() {
+        out.push_str(&format!("  {}\n", cfg.title));
+    }
+    for (r, rowv) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            y_label(ymax)
+        } else if r == h - 1 {
+            y_label(ymin)
+        } else {
+            " ".repeat(9)
+        };
+        out.push_str(&format!("{label} |"));
+        out.extend(rowv.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{} +{}\n", " ".repeat(9), "-".repeat(w)));
+    out.push_str(&format!("{}{:<12.6}{}{:>12.6}\n", " ".repeat(11), xmin, " ".repeat(w - 22), xmax));
+    // legend
+    out.push_str("          ");
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}", MARKS[si % MARKS.len()], s.name));
+    }
+    out.push('\n');
+    out
+}
+
+/// One-call helper: plot a recorder's series by name.
+pub fn plot_series(
+    rec: &crate::metrics::Recorder,
+    names: &[&str],
+    cfg: &PlotCfg,
+) -> String {
+    let series: Vec<&Series> = names.iter().filter_map(|n| rec.get(n)).collect();
+    if series.is_empty() {
+        return format!("{} (series not recorded: {names:?})\n", cfg.title);
+    }
+    render(&series, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(name: &str, f: impl Fn(f64) -> f64) -> Series {
+        let mut s = Series::new(name);
+        for i in 0..100 {
+            s.push(i as f64, f(i as f64));
+        }
+        s
+    }
+
+    #[test]
+    fn renders_linear_series() {
+        let s = mk("line", |x| x * 2.0);
+        let out = render(&[&s], &PlotCfg::default());
+        assert!(out.contains('*'));
+        assert!(out.lines().count() > 10);
+        assert!(out.contains("line"));
+    }
+
+    #[test]
+    fn log_scale_skips_nonpositive() {
+        let mut s = mk("decay", |x| (-x / 10.0).exp());
+        s.push(200.0, 0.0); // must be skipped, not crash
+        let out = render(&[&s], &PlotCfg { log_y: true, ..Default::default() });
+        assert!(out.contains('*'));
+    }
+
+    #[test]
+    fn multiple_series_get_distinct_marks() {
+        let a = mk("a", |x| x);
+        let b = mk("b", |x| 100.0 - x);
+        let out = render(&[&a, &b], &PlotCfg::default());
+        assert!(out.contains('*') && out.contains('o'));
+        assert!(out.contains("a") && out.contains("b"));
+    }
+
+    #[test]
+    fn empty_series_is_graceful() {
+        let s = Series::new("empty");
+        let out = render(&[&s], &PlotCfg::default());
+        assert!(out.contains("no finite data"));
+    }
+
+    #[test]
+    fn constant_series_no_div_by_zero() {
+        let s = mk("flat", |_| 5.0);
+        let out = render(&[&s], &PlotCfg::default());
+        assert!(out.contains('*'));
+    }
+}

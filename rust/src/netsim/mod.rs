@@ -1,0 +1,450 @@
+//! Network cost model — the substitution for the paper's 16-GPU
+//! 100Gbps-InfiniBand / throttled-10Gbps testbed (DESIGN.md §1).
+//!
+//! Wall-clock claims in the paper (Fig 4c/5c, 6, 7c, 8c) decompose into
+//! per-step compute time (which we *measure*) plus per-synchronization
+//! communication time (which we *model*).  The model is the standard
+//! α–β (latency–bandwidth) formulation:
+//!
+//! * ring allreduce of `B` bytes over `n` nodes
+//!   (Patarasuk & Yuan, the paper's [15]):
+//!   `t = 2(n−1)·α + 2·(n−1)/n · B / bw`
+//! * allgather (QSGD's compressed-gradient exchange; quantized grads
+//!   cannot ride a summing allreduce — paper §VI):
+//!   `t = (n−1)·α + (n−1)·B_q / bw`
+//! * scalar allreduce (the S_k exchange of Algorithm 2 — "a single
+//!   floating-point value"): `t = 2(n−1)·α + 2(n−1)/n · 4 / bw`
+//!
+//! A [`CommLedger`] accumulates modeled time + bytes per category so the
+//! figure harness can print the paper's computation/communication
+//! breakdowns under any bandwidth preset.
+
+use crate::config::NetConfig;
+
+/// One link/timing model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetModel {
+    /// effective per-node bandwidth, bytes/second
+    pub bw: f64,
+    /// per-message latency, seconds
+    pub alpha: f64,
+}
+
+impl NetModel {
+    pub fn new(cfg: &NetConfig) -> Self {
+        NetModel { bw: cfg.bandwidth_gbps * 1e9 / 8.0, alpha: cfg.latency_us * 1e-6 }
+    }
+
+    pub fn infiniband_100g() -> Self {
+        Self::new(&NetConfig::infiniband_100g())
+    }
+
+    pub fn ethernet_10g() -> Self {
+        Self::new(&NetConfig::ethernet_10g())
+    }
+
+    /// Ring allreduce of `bytes` over `n` nodes.
+    pub fn allreduce_time(&self, n: usize, bytes: u64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let nf = n as f64;
+        2.0 * (nf - 1.0) * self.alpha + 2.0 * (nf - 1.0) / nf * bytes as f64 / self.bw
+    }
+
+    /// Allgather: every node receives (n-1) remote chunks of `bytes`.
+    pub fn allgather_time(&self, n: usize, bytes: u64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let nf = n as f64;
+        (nf - 1.0) * self.alpha + (nf - 1.0) * bytes as f64 / self.bw
+    }
+
+    /// Parameter-server exchange of `bytes` per node (QSGD's model, paper
+    /// §VI: quantized gradients cannot ride a summing allreduce; each
+    /// node pushes its compressed gradient and pulls the aggregate —
+    /// bandwidth scales with the compressed size, but the latency is NOT
+    /// divided by the averaging period the way ADPSGD's is).
+    pub fn ps_exchange_time(&self, n: usize, bytes: u64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        2.0 * self.alpha + 2.0 * bytes as f64 / self.bw
+    }
+
+    /// Bytes a PS exchange puts on the wire per node (push + pull).
+    pub fn ps_exchange_wire_bytes(&self, n: usize, bytes: u64) -> u64 {
+        if n <= 1 {
+            return 0;
+        }
+        2 * bytes
+    }
+
+    /// The S_k scalar exchange (Algorithm 2 line 11).
+    pub fn scalar_allreduce_time(&self, n: usize) -> f64 {
+        self.allreduce_time(n, 4)
+    }
+
+    /// Bytes a ring allreduce puts on the wire per node.
+    pub fn allreduce_wire_bytes(&self, n: usize, bytes: u64) -> u64 {
+        if n <= 1 {
+            return 0;
+        }
+        (2.0 * (n as f64 - 1.0) / n as f64 * bytes as f64) as u64
+    }
+
+    pub fn allgather_wire_bytes(&self, n: usize, bytes: u64) -> u64 {
+        if n <= 1 {
+            return 0;
+        }
+        (n as u64 - 1) * bytes
+    }
+}
+
+// ------------------------------------------------------------- stragglers
+
+/// Inverse standard-normal CDF (Acklam's rational approximation,
+/// |ε| < 1.15e-9 — far below the modeling error here).
+pub fn inv_normal_cdf(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "p = {p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let p_low = 0.02425;
+    if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+/// Expected maximum of `n` iid standard normals (Blom's order-statistic
+/// approximation, accurate to ~1% for n ≥ 2; used by the heterogeneity
+/// model).
+pub fn e_max_normal(n: usize) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    inv_normal_cdf((nf - 0.375) / (nf + 0.25))
+}
+
+/// Per-node compute-time heterogeneity (stragglers).
+///
+/// Extension of the paper's wall-clock analysis: with BSP synchronization
+/// every `p` iterations, nodes wait for the slowest *sum of p steps*, not
+/// the slowest single step — so periodic averaging amortizes straggler
+/// noise by √p on top of saving bandwidth:
+///
+/// `T(K, p) = (K/p) · (p·μ + σ·√p·E[max of n normals])`
+#[derive(Debug, Clone, Copy)]
+pub struct ComputeModel {
+    /// mean per-step compute seconds μ
+    pub mu: f64,
+    /// per-step jitter σ (std-dev, seconds)
+    pub sigma: f64,
+}
+
+impl ComputeModel {
+    pub fn new(mu: f64, sigma: f64) -> Self {
+        assert!(mu > 0.0 && sigma >= 0.0);
+        ComputeModel { mu, sigma }
+    }
+
+    /// Expected compute wall-clock of `k` iterations over `n` nodes
+    /// synchronizing every `p` iterations (CLT across the p-step sums).
+    pub fn bsp_compute_secs(&self, k: usize, p: usize, n: usize) -> f64 {
+        if n <= 1 {
+            return k as f64 * self.mu;
+        }
+        let p = p.max(1);
+        let rounds = (k as f64 / p as f64).ceil();
+        let per_round = p as f64 * self.mu + self.sigma * (p as f64).sqrt() * e_max_normal(n);
+        rounds * per_round
+    }
+
+    /// Straggler *overhead* ratio vs perfectly homogeneous nodes.
+    pub fn straggler_overhead(&self, k: usize, p: usize, n: usize) -> f64 {
+        self.bsp_compute_secs(k, p, n) / (k as f64 * self.mu)
+    }
+}
+
+/// What kind of exchange a ledger entry records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CommKind {
+    /// Parameter averaging (Algorithms 1/2): ring allreduce of f32[P].
+    ParamAvg,
+    /// Full-gradient allreduce (FULLSGD).
+    GradAllreduce,
+    /// Quantized-gradient allgather (QSGD).
+    QuantAllgather,
+    /// Sparse top-k gradient exchange (PS-style, like QSGD).
+    SparsePs,
+    /// The S_k scalar exchange (ADPSGD only).
+    ScalarStat,
+}
+
+/// Accumulates modeled communication per category.
+///
+/// Stores `(count, wire bytes, secs-under-primary-net)` per kind, plus
+/// the node count, so [`CommLedger::modeled_secs`] can re-price the same
+/// exchanges under a *different* bandwidth preset (Fig 4c/5c/6 need both
+/// 100Gbps and 10Gbps from one run).
+#[derive(Debug, Clone, Default)]
+pub struct CommLedger {
+    pub n: usize,
+    pub syncs: u64,
+    totals: std::collections::BTreeMap<&'static str, (u64, u64, f64)>, // name -> (count, wire bytes, secs)
+}
+
+impl CommLedger {
+    pub fn new(n: usize) -> Self {
+        CommLedger { n, ..Self::default() }
+    }
+
+    fn kind_name(kind: CommKind) -> &'static str {
+        match kind {
+            CommKind::ParamAvg => "param_avg",
+            CommKind::GradAllreduce => "grad_allreduce",
+            CommKind::QuantAllgather => "quant_allgather",
+            CommKind::SparsePs => "sparse_ps",
+            CommKind::ScalarStat => "scalar_stat",
+        }
+    }
+
+    /// Record one exchange of `payload` bytes over `n` nodes under `net`.
+    /// Returns the modeled time for this exchange.
+    pub fn record(&mut self, net: &NetModel, kind: CommKind, n: usize, payload: u64) -> f64 {
+        let (wire, secs) = match kind {
+            CommKind::ParamAvg | CommKind::GradAllreduce => {
+                (net.allreduce_wire_bytes(n, payload), net.allreduce_time(n, payload))
+            }
+            CommKind::QuantAllgather | CommKind::SparsePs => {
+                (net.ps_exchange_wire_bytes(n, payload), net.ps_exchange_time(n, payload))
+            }
+            CommKind::ScalarStat => {
+                (net.allreduce_wire_bytes(n, 4), net.scalar_allreduce_time(n))
+            }
+        };
+        if matches!(
+            kind,
+            CommKind::ParamAvg
+                | CommKind::GradAllreduce
+                | CommKind::QuantAllgather
+                | CommKind::SparsePs
+        ) {
+            self.syncs += 1;
+        }
+        let e = self.totals.entry(Self::kind_name(kind)).or_insert((0, 0, 0.0));
+        e.0 += 1;
+        e.1 += wire;
+        e.2 += secs;
+        secs
+    }
+
+    /// Re-price all recorded exchanges under a different network model.
+    /// Wire bytes are bandwidth-independent; the latency term is
+    /// per-call and per-kind.
+    pub fn modeled_secs(&self, net: &NetModel) -> f64 {
+        if self.n <= 1 {
+            return 0.0;
+        }
+        let nf = self.n as f64;
+        let mut total = 0.0;
+        for (name, (count, wire, _)) in &self.totals {
+            let lat_per_call = match *name {
+                "quant_allgather" | "sparse_ps" => 2.0 * net.alpha,
+                _ => 2.0 * (nf - 1.0) * net.alpha,
+            };
+            total += *count as f64 * lat_per_call + *wire as f64 / net.bw;
+        }
+        total
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.totals.values().map(|(_, _, s)| *s).sum()
+    }
+
+    pub fn total_wire_bytes(&self) -> u64 {
+        self.totals.values().map(|(_, b, _)| *b).sum()
+    }
+
+    pub fn count(&self, kind: CommKind) -> u64 {
+        self.totals.get(Self::kind_name(kind)).map(|e| e.0).unwrap_or(0)
+    }
+
+    pub fn secs(&self, kind: CommKind) -> f64 {
+        self.totals.get(Self::kind_name(kind)).map(|e| e.2).unwrap_or(0.0)
+    }
+
+    pub fn bytes(&self, kind: CommKind) -> u64 {
+        self.totals.get(Self::kind_name(kind)).map(|e| e.1).unwrap_or(0)
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        for (name, (count, bytes, secs)) in &self.totals {
+            s.push_str(&format!(
+                "{name:16} count={count:6} wire={:>10} time={}\n",
+                crate::util::fmt::bytes(*bytes),
+                crate::util::fmt::secs(*secs),
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ib() -> NetModel {
+        NetModel::infiniband_100g()
+    }
+
+    #[test]
+    fn allreduce_time_formula() {
+        let net = NetModel { bw: 1e9, alpha: 1e-6 };
+        // n=4, 1e9 bytes: 2*3*1e-6 + 2*(3/4)*1.0 = 1.5 + eps
+        let t = net.allreduce_time(4, 1_000_000_000);
+        assert!((t - 1.500006).abs() < 1e-9, "{t}");
+        assert_eq!(net.allreduce_time(1, 1 << 30), 0.0);
+    }
+
+    #[test]
+    fn bandwidth_scaling() {
+        let fast = ib();
+        let slow = NetModel::ethernet_10g();
+        let t_fast = fast.allreduce_time(16, 100 << 20);
+        let t_slow = slow.allreduce_time(16, 100 << 20);
+        // 10x bandwidth gap dominates for large payloads
+        assert!(t_slow / t_fast > 8.0, "{t_slow} / {t_fast}");
+    }
+
+    #[test]
+    fn latency_dominates_scalar() {
+        let net = ib();
+        let t = net.scalar_allreduce_time(16);
+        // essentially 30 * alpha
+        assert!((t - 30.0 * net.alpha) / t < 0.01);
+    }
+
+    #[test]
+    fn allgather_more_expensive_than_allreduce_same_payload() {
+        let net = ib();
+        let b = 64 << 20;
+        assert!(net.allgather_time(16, b) > net.allreduce_time(16, b));
+    }
+
+    #[test]
+    fn ledger_accumulates() {
+        let net = ib();
+        let mut led = CommLedger::new(16);
+        let t1 = led.record(&net, CommKind::ParamAvg, 16, 4 * 1_000_000);
+        let _ = led.record(&net, CommKind::ParamAvg, 16, 4 * 1_000_000);
+        let _ = led.record(&net, CommKind::ScalarStat, 16, 4);
+        assert_eq!(led.syncs, 2);
+        assert_eq!(led.count(CommKind::ParamAvg), 2);
+        assert_eq!(led.count(CommKind::ScalarStat), 1);
+        assert!((led.secs(CommKind::ParamAvg) - 2.0 * t1).abs() < 1e-12);
+        assert!(led.total_secs() > 2.0 * t1);
+        assert!(led.total_wire_bytes() > 0);
+    }
+
+    #[test]
+    fn e_max_normal_monotone_and_sane() {
+        assert_eq!(e_max_normal(1), 0.0);
+        let mut prev = 0.0;
+        for n in [2usize, 4, 8, 16, 64, 256] {
+            let e = e_max_normal(n);
+            assert!(e > prev, "E[max] must grow with n: {e} at n={n}");
+            prev = e;
+        }
+        // known: E[max of 16 N(0,1)] ~ 1.766
+        assert!((e_max_normal(16) - 1.766).abs() < 0.15, "{}", e_max_normal(16));
+    }
+
+    #[test]
+    fn periodic_averaging_amortizes_stragglers() {
+        let cm = ComputeModel::new(1e-3, 2e-4);
+        let k = 4000;
+        let n = 16;
+        let t_full = cm.bsp_compute_secs(k, 1, n);
+        let t_p8 = cm.bsp_compute_secs(k, 8, n);
+        // p=8 must cut the straggler overhead by ~sqrt(8)
+        let ideal = k as f64 * cm.mu;
+        let ov_full = t_full - ideal;
+        let ov_p8 = t_p8 - ideal;
+        let ratio = ov_full / ov_p8;
+        assert!((ratio - 8f64.sqrt()).abs() < 0.3, "amortization ratio {ratio}");
+        // single node has no straggler penalty
+        assert_eq!(cm.bsp_compute_secs(k, 1, 1), ideal);
+        // overhead ratio > 1 whenever sigma > 0, n > 1
+        assert!(cm.straggler_overhead(k, 4, 8) > 1.0);
+    }
+
+    #[test]
+    fn qsgd_byte_advantage_matches_paper() {
+        // paper: QSGD 8-bit = 1/4 the data of FULLSGD; periodic averaging
+        // with p=8 = 1/8.  Check the ledger reproduces those ratios.
+        let net = ib();
+        let p_bytes = 4 * 6_800_000u64; // GoogLeNet-ish
+        let mut full = CommLedger::new(16);
+        let mut qsgd = CommLedger::new(16);
+        let mut adp = CommLedger::new(16);
+        for k in 0..80 {
+            full.record(&net, CommKind::GradAllreduce, 16, p_bytes);
+            qsgd.record(&net, CommKind::QuantAllgather, 16, p_bytes / 4);
+            if k % 8 == 0 {
+                adp.record(&net, CommKind::ParamAvg, 16, p_bytes);
+                adp.record(&net, CommKind::ScalarStat, 16, 4);
+            }
+        }
+        let fb = full.bytes(CommKind::GradAllreduce) as f64;
+        let ab = adp.bytes(CommKind::ParamAvg) as f64;
+        let qb = qsgd.bytes(CommKind::QuantAllgather) as f64;
+        assert!((fb / ab - 8.0).abs() < 0.2, "{}", fb / ab);
+        // paper §IV-B: QSGD data = 1/4 of FULLSGD = ~2x of ADPSGD(p~8)
+        assert!((fb / qb - 3.75).abs() < 0.5, "full/qsgd = {}", fb / qb);
+        assert!((qb / ab - 2.13).abs() < 0.5, "qsgd/adp = {}", qb / ab);
+        // QSGD saves bandwidth but not latency; with fast links its time
+        // advantage over FULLSGD is less than its byte advantage.
+        assert!(qsgd.total_secs() < full.total_secs());
+    }
+}

@@ -1,0 +1,110 @@
+//! Optimizer pieces: learning-rate schedules + (pure-rust) momentum SGD.
+//!
+//! The paper's experiments use two schedules:
+//! * CIFAR (§IV-B): γ₀ = 0.1, ×0.1 at epochs 80/120 of 160 — we express
+//!   boundaries in iterations (2000/3000 of 4000 in the figures).
+//! * ImageNet (§IV-C): gradual warmup (γ from 0.1 to 0.8 over 8 epochs)
+//!   then ×0.1 steps — the `Warmup` schedule.
+
+use crate::config::LrSchedule;
+
+/// Evaluate the schedule at iteration `k`.
+pub fn lr_at(schedule: &LrSchedule, lr0: f32, k: usize) -> f32 {
+    match schedule {
+        LrSchedule::Const => lr0,
+        LrSchedule::StepDecay { boundaries, factor } => {
+            let drops = boundaries.iter().filter(|&&b| k >= b).count() as i32;
+            lr0 * factor.powi(drops)
+        }
+        LrSchedule::Warmup { warmup_iters, warmup_factor, boundaries, factor } => {
+            let peak = lr0 * warmup_factor;
+            if k < *warmup_iters && *warmup_iters > 0 {
+                // linear ramp lr0 -> peak (paper: +0.1/epoch from 0.1 to 0.8)
+                let t = k as f32 / *warmup_iters as f32;
+                lr0 + (peak - lr0) * t
+            } else {
+                let drops = boundaries.iter().filter(|&&b| k >= b).count() as i32;
+                peak * factor.powi(drops)
+            }
+        }
+    }
+}
+
+/// Momentum-SGD state for the pure-rust workload path (the HLO path
+/// applies the fused Pallas kernel inside the `step` artifact instead).
+#[derive(Debug, Clone)]
+pub struct MomentumSgd {
+    pub momentum: f32,
+    pub velocity: Vec<f32>,
+}
+
+impl MomentumSgd {
+    pub fn new(n_params: usize, momentum: f32) -> Self {
+        MomentumSgd { momentum, velocity: vec![0.0; n_params] }
+    }
+
+    /// w -= lr * (mu * v + g);  v' = mu * v + g   (paper / PyTorch form).
+    pub fn step(&mut self, w: &mut [f32], g: &[f32], lr: f32) {
+        crate::tensor::momentum_update(w, &mut self.velocity, g, lr, self.momentum);
+    }
+
+    pub fn reset(&mut self) {
+        self.velocity.iter_mut().for_each(|v| *v = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_schedule() {
+        assert_eq!(lr_at(&LrSchedule::Const, 0.1, 0), 0.1);
+        assert_eq!(lr_at(&LrSchedule::Const, 0.1, 99999), 0.1);
+    }
+
+    #[test]
+    fn step_decay_paper_cifar() {
+        let s = LrSchedule::StepDecay { boundaries: vec![2000, 3000], factor: 0.1 };
+        assert!((lr_at(&s, 0.1, 0) - 0.1).abs() < 1e-9);
+        assert!((lr_at(&s, 0.1, 1999) - 0.1).abs() < 1e-9);
+        assert!((lr_at(&s, 0.1, 2000) - 0.01).abs() < 1e-9);
+        assert!((lr_at(&s, 0.1, 3000) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warmup_ramps_then_decays() {
+        let s = LrSchedule::Warmup {
+            warmup_iters: 100,
+            warmup_factor: 8.0,
+            boundaries: vec![300, 600],
+            factor: 0.1,
+        };
+        assert!((lr_at(&s, 0.1, 0) - 0.1).abs() < 1e-6);
+        let mid = lr_at(&s, 0.1, 50);
+        assert!(mid > 0.1 && mid < 0.8, "{mid}");
+        assert!((lr_at(&s, 0.1, 100) - 0.8).abs() < 1e-6);
+        assert!((lr_at(&s, 0.1, 300) - 0.08).abs() < 1e-6);
+        assert!((lr_at(&s, 0.1, 600) - 0.008).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_sgd_converges_on_quadratic() {
+        // minimize ||w||^2/2: g = w
+        let mut w = vec![1.0f32; 8];
+        let mut opt = MomentumSgd::new(8, 0.9);
+        for _ in 0..200 {
+            let g = w.clone();
+            opt.step(&mut w, &g, 0.05);
+        }
+        assert!(crate::tensor::sq_norm(&w) < 1e-6);
+    }
+
+    #[test]
+    fn momentum_zero_is_sgd() {
+        let mut w = vec![2.0f32];
+        let mut opt = MomentumSgd::new(1, 0.0);
+        opt.step(&mut w, &[1.0], 0.5);
+        assert!((w[0] - 1.5).abs() < 1e-7);
+    }
+}

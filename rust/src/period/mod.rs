@@ -1,0 +1,546 @@
+//! Averaging-period controllers — the paper's contribution lives here.
+//!
+//! * [`Constant`] — Algorithm 1 (CPSGD): sync every `p` iterations.
+//! * [`Adaptive`] — Algorithm 2 (ADPSGD): warmup epoch at p=1, then
+//!   p = p_init while sampling `C₂ = avg(S_k/γ_k)` for `k < K_s`, then
+//!   grow/shrink p by 1 to keep `S_k ≈ γ_k·C₂` within [0.7, 1.3]
+//!   thresholds.
+//! * [`Decreasing`] — the Wang & Joshi-style strawman the paper rebuts
+//!   in §V-B (large period first, small period later).
+//! * `Full` synchronization and QSGD are *modes* of the coordinator,
+//!   not period controllers (they exchange gradients every iteration).
+
+use anyhow::bail;
+
+/// Config-level strategy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// FULLSGD: gradient allreduce every iteration.
+    Full,
+    /// CPSGD: constant period (Algorithm 1).
+    Constant,
+    /// ADPSGD: adaptive period (Algorithm 2).
+    Adaptive,
+    /// §V-B strawman: decreasing period.
+    Decreasing,
+    /// QSGD: quantized gradient exchange every iteration.
+    Qsgd,
+    /// Explicit piecewise period schedule ("0:4,2000:8" — the paper's
+    /// §III-A strategy-1/2 experiments).
+    Piecewise,
+    /// EASGD (Zhang et al., the paper's [57]): periodic *elastic*
+    /// averaging — each node moves a fraction α toward the mean instead
+    /// of adopting it.
+    Easgd,
+    /// Top-k gradient sparsification with error feedback (Strom [12] /
+    /// Aji & Heafield [53] family, §VI): every iteration, compressed.
+    TopK,
+}
+
+impl std::str::FromStr for Strategy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "full" | "fullsgd" => Strategy::Full,
+            "constant" | "cpsgd" => Strategy::Constant,
+            "adaptive" | "adpsgd" => Strategy::Adaptive,
+            "decreasing" => Strategy::Decreasing,
+            "qsgd" => Strategy::Qsgd,
+            "piecewise" => Strategy::Piecewise,
+            "easgd" => Strategy::Easgd,
+            "topk" => Strategy::TopK,
+            other => bail!(
+                "unknown strategy {other:?} \
+                 (full|constant|adaptive|decreasing|qsgd|piecewise|easgd|topk)"
+            ),
+        })
+    }
+}
+
+impl std::fmt::Display for Strategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Strategy::Full => "FULLSGD",
+            Strategy::Constant => "CPSGD",
+            Strategy::Adaptive => "ADPSGD",
+            Strategy::Decreasing => "DECREASING",
+            Strategy::Qsgd => "QSGD",
+            Strategy::Piecewise => "PIECEWISE",
+            Strategy::Easgd => "EASGD",
+            Strategy::TopK => "TOPK",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Decides, after each local update `k`, whether to synchronize now, and
+/// adapts from the post-sync feedback `(S_k, γ_k)`.
+pub trait PeriodController: Send {
+    /// Called after the local update of iteration `k` (0-based).
+    fn should_sync(&mut self, k: usize) -> bool;
+
+    /// Feedback after a synchronization at iteration `k`: the measured
+    /// parameter variance `S_k` and the learning rate in effect.
+    fn on_sync(&mut self, k: usize, s_k: f64, lr: f32);
+
+    /// Current period (for logging / Fig 3).
+    fn current_period(&self) -> usize;
+
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------- constant
+
+/// Algorithm 1: sync every `p` iterations.
+#[derive(Debug, Clone)]
+pub struct Constant {
+    p: usize,
+    cnt: usize,
+}
+
+impl Constant {
+    pub fn new(p: usize) -> Self {
+        assert!(p >= 1);
+        Constant { p, cnt: 0 }
+    }
+}
+
+impl PeriodController for Constant {
+    fn should_sync(&mut self, _k: usize) -> bool {
+        self.cnt += 1;
+        if self.cnt == self.p {
+            self.cnt = 0;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn on_sync(&mut self, _k: usize, _s_k: f64, _lr: f32) {}
+
+    fn current_period(&self) -> usize {
+        self.p
+    }
+
+    fn name(&self) -> &'static str {
+        "constant"
+    }
+}
+
+// ---------------------------------------------------------------- adaptive
+
+/// Algorithm 2 (ADPSGD).
+///
+/// State machine:
+/// 1. `k < warmup_iters`: p = 1 ("averaging period of 1 for the first
+///    epoch", §IV-B) — avoids the large initial variance of Fig 1.
+/// 2. `k < k_s`: p = p_init; every sync accumulates the running average
+///    `C₂ ← avg(S_k / γ_k)` (line 14).
+/// 3. after sampling: if `S_k < low·γ_k·C₂` then p += 1; if
+///    `S_k > high·γ_k·C₂` then p = max(1, p−1) (lines 16–19).
+#[derive(Debug, Clone)]
+pub struct Adaptive {
+    pub p_init: usize,
+    pub warmup_iters: usize,
+    pub k_s: usize,
+    pub low: f64,
+    pub high: f64,
+    p: usize,
+    cnt: usize,
+    c2: f64,
+    c2_samples: u64,
+}
+
+impl Adaptive {
+    pub fn new(p_init: usize, warmup_iters: usize, k_s: usize, low: f64, high: f64) -> Self {
+        assert!(p_init >= 1 && low < 1.0 && high > 1.0);
+        Adaptive { p_init, warmup_iters, k_s, low, high, p: p_init, cnt: 0, c2: 0.0, c2_samples: 0 }
+    }
+
+    /// The sampled C₂ (for tests / introspection).
+    pub fn c2(&self) -> f64 {
+        self.c2
+    }
+}
+
+impl PeriodController for Adaptive {
+    fn should_sync(&mut self, k: usize) -> bool {
+        if k < self.warmup_iters {
+            // warmup epoch: p = 1, counter stays reset
+            self.cnt = 0;
+            return true;
+        }
+        self.cnt += 1;
+        if self.cnt >= self.p {
+            self.cnt = 0;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn on_sync(&mut self, k: usize, s_k: f64, lr: f32) {
+        if k < self.warmup_iters {
+            return; // warmup syncs don't train C2 (p=1 variance is tiny)
+        }
+        let gamma = lr as f64;
+        if gamma <= 0.0 {
+            return;
+        }
+        if k < self.k_s {
+            // RUNNINGAVERAGE(C2, S_k / gamma_k)  (Algorithm 2 line 14)
+            self.c2_samples += 1;
+            self.c2 += (s_k / gamma - self.c2) / self.c2_samples as f64;
+            return;
+        }
+        if self.c2_samples == 0 {
+            // never sampled (k_s <= warmup); fall back to first observation
+            self.c2 = s_k / gamma;
+            self.c2_samples = 1;
+            return;
+        }
+        let target = gamma * self.c2;
+        if s_k < self.low * target {
+            self.p += 1; // line 17
+        } else if s_k > self.high * target {
+            self.p = (self.p - 1).max(1); // line 19
+        }
+    }
+
+    fn current_period(&self) -> usize {
+        self.p
+    }
+
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+}
+
+// -------------------------------------------------------------- decreasing
+
+/// §V-B strawman: period `first` for the first half of training, then
+/// `second` (paper: 20 then 5, same comm budget as CPSGD p=8).
+#[derive(Debug, Clone)]
+pub struct Decreasing {
+    pub first: usize,
+    pub second: usize,
+    pub switch_at: usize,
+    cnt: usize,
+}
+
+impl Decreasing {
+    pub fn new(first: usize, second: usize, switch_at: usize) -> Self {
+        assert!(first >= 1 && second >= 1);
+        Decreasing { first, second, switch_at, cnt: 0 }
+    }
+
+    fn period_at(&self, k: usize) -> usize {
+        if k < self.switch_at {
+            self.first
+        } else {
+            self.second
+        }
+    }
+}
+
+impl PeriodController for Decreasing {
+    fn should_sync(&mut self, k: usize) -> bool {
+        self.cnt += 1;
+        if self.cnt >= self.period_at(k) {
+            self.cnt = 0;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn on_sync(&mut self, _k: usize, _s_k: f64, _lr: f32) {}
+
+    fn current_period(&self) -> usize {
+        // report the phase-1 period until the switch; callers log per-k
+        self.first
+    }
+
+    fn name(&self) -> &'static str {
+        "decreasing"
+    }
+}
+
+// --------------------------------------------------------------- piecewise
+
+/// Explicit piecewise-constant schedule: a sorted list of
+/// `(start_iter, period)` segments.  This is how the paper's §III-A
+/// strategy-1 ("p=4 for the first 2000 iterations, then p=8") and
+/// strategy-2 are expressed, and how external schedules (e.g. tuned
+/// offline) plug in.
+#[derive(Debug, Clone)]
+pub struct Piecewise {
+    /// (start_iter, period), sorted by start_iter, first entry at 0
+    pub segments: Vec<(usize, usize)>,
+    cnt: usize,
+}
+
+impl Piecewise {
+    pub fn new(mut segments: Vec<(usize, usize)>) -> anyhow::Result<Self> {
+        if segments.is_empty() {
+            bail!("piecewise schedule needs at least one segment");
+        }
+        segments.sort_by_key(|s| s.0);
+        if segments[0].0 != 0 {
+            bail!("piecewise schedule must start at iteration 0");
+        }
+        if segments.iter().any(|&(_, p)| p == 0) {
+            bail!("piecewise periods must be >= 1");
+        }
+        if segments.windows(2).any(|w| w[0].0 == w[1].0) {
+            bail!("duplicate piecewise segment start");
+        }
+        Ok(Piecewise { segments, cnt: 0 })
+    }
+
+    /// Parse "0:4,2000:8" (iter:period pairs).
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let mut segs = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, p) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("bad segment {part:?} (want iter:period)"))?;
+            segs.push((k.trim().parse::<usize>()?, p.trim().parse::<usize>()?));
+        }
+        Self::new(segs)
+    }
+
+    fn period_at(&self, k: usize) -> usize {
+        let mut p = self.segments[0].1;
+        for &(start, period) in &self.segments {
+            if k >= start {
+                p = period;
+            } else {
+                break;
+            }
+        }
+        p
+    }
+}
+
+impl PeriodController for Piecewise {
+    fn should_sync(&mut self, k: usize) -> bool {
+        self.cnt += 1;
+        if self.cnt >= self.period_at(k) {
+            self.cnt = 0;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn on_sync(&mut self, _k: usize, _s_k: f64, _lr: f32) {}
+
+    fn current_period(&self) -> usize {
+        self.segments[0].1
+    }
+
+    fn name(&self) -> &'static str {
+        "piecewise"
+    }
+}
+
+/// Build the controller for a config (Full/Qsgd have no controller).
+pub fn build(
+    cfg: &crate::config::ExperimentConfig,
+) -> Option<Box<dyn PeriodController>> {
+    let s = &cfg.sync;
+    match s.strategy {
+        Strategy::Constant => Some(Box::new(Constant::new(s.period))),
+        Strategy::Adaptive => Some(Box::new(Adaptive::new(
+            s.p_init,
+            s.warmup_iters,
+            (s.ks_frac * cfg.iters as f64) as usize,
+            s.low,
+            s.high,
+        ))),
+        Strategy::Decreasing => {
+            Some(Box::new(Decreasing::new(s.dec_first, s.dec_second, cfg.iters / 2)))
+        }
+        Strategy::Piecewise => Some(Box::new(
+            Piecewise::parse(&s.piecewise).expect("validated piecewise schedule"),
+        )),
+        // EASGD syncs on a constant period; the elastic pull happens in
+        // the coordinator
+        Strategy::Easgd => Some(Box::new(Constant::new(s.period))),
+        Strategy::Full | Strategy::Qsgd | Strategy::TopK => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sync_points(ctrl: &mut dyn PeriodController, iters: usize) -> Vec<usize> {
+        (0..iters).filter(|&k| ctrl.should_sync(k)).collect()
+    }
+
+    #[test]
+    fn constant_period_sync_schedule() {
+        let mut c = Constant::new(4);
+        let pts = sync_points(&mut c, 16);
+        assert_eq!(pts, vec![3, 7, 11, 15]);
+    }
+
+    #[test]
+    fn constant_p1_syncs_every_iter() {
+        let mut c = Constant::new(1);
+        assert_eq!(sync_points(&mut c, 5).len(), 5);
+    }
+
+    #[test]
+    fn adaptive_warmup_syncs_every_iter() {
+        let mut a = Adaptive::new(4, 10, 100, 0.7, 1.3);
+        let pts = sync_points(&mut a, 10);
+        assert_eq!(pts.len(), 10, "warmup must sync every iteration");
+    }
+
+    #[test]
+    fn adaptive_samples_c2_then_grows_period() {
+        let mut a = Adaptive::new(4, 0, 40, 0.7, 1.3);
+        let lr = 0.1f32;
+        // sampling phase: S_k / lr = 2.0 -> C2 = 2.0
+        let mut k = 0;
+        while k < 40 {
+            if a.should_sync(k) {
+                a.on_sync(k, 0.2, lr);
+            }
+            k += 1;
+        }
+        assert!((a.c2() - 2.0).abs() < 1e-6); // f32 lr -> ~1e-8 slack
+        assert_eq!(a.current_period(), 4);
+        // post-sampling: tiny S_k -> period grows by 1 per sync
+        let mut grown = 0;
+        while k < 140 {
+            if a.should_sync(k) {
+                a.on_sync(k, 0.001, lr);
+                grown += 1;
+            }
+            k += 1;
+        }
+        assert!(a.current_period() > 4, "period should grow, got {}", a.current_period());
+        assert!(grown >= 2);
+    }
+
+    #[test]
+    fn adaptive_shrinks_on_large_variance() {
+        let mut a = Adaptive::new(6, 0, 12, 0.7, 1.3);
+        let lr = 0.1f32;
+        let mut k = 0;
+        while k < 12 {
+            if a.should_sync(k) {
+                a.on_sync(k, 0.1, lr); // C2 = 1.0
+            }
+            k += 1;
+        }
+        while k < 60 {
+            if a.should_sync(k) {
+                a.on_sync(k, 10.0, lr); // way above high threshold
+            }
+            k += 1;
+        }
+        assert_eq!(a.current_period(), 1, "period should shrink to 1");
+    }
+
+    #[test]
+    fn adaptive_holds_period_in_band() {
+        let mut a = Adaptive::new(5, 0, 10, 0.7, 1.3);
+        let lr = 0.1f32;
+        let mut k = 0;
+        while k < 10 {
+            if a.should_sync(k) {
+                a.on_sync(k, 0.05, lr); // C2 = 0.5
+            }
+            k += 1;
+        }
+        while k < 100 {
+            if a.should_sync(k) {
+                a.on_sync(k, 0.05, lr); // exactly at target -> inside band
+            }
+            k += 1;
+        }
+        assert_eq!(a.current_period(), 5, "in-band S_k must not change p");
+    }
+
+    #[test]
+    fn adaptive_period_never_below_one() {
+        let mut a = Adaptive::new(1, 0, 2, 0.7, 1.3);
+        let mut k = 0;
+        while k < 50 {
+            if a.should_sync(k) {
+                a.on_sync(k, 100.0, 0.1);
+            }
+            k += 1;
+        }
+        assert_eq!(a.current_period(), 1);
+    }
+
+    #[test]
+    fn decreasing_switches_period() {
+        let mut d = Decreasing::new(4, 2, 8);
+        let pts = sync_points(&mut d, 16);
+        assert_eq!(pts, vec![3, 7, 9, 11, 13, 15]);
+    }
+
+    #[test]
+    fn piecewise_parse_and_schedule() {
+        let mut p = Piecewise::parse("0:4, 2000:8").unwrap();
+        assert_eq!(p.segments, vec![(0, 4), (2000, 8)]);
+        let syncs = (0..4000).filter(|&k| p.should_sync(k)).count();
+        assert_eq!(syncs, 750, "paper §III-A strategy-1 budget");
+    }
+
+    #[test]
+    fn piecewise_rejects_bad_specs() {
+        assert!(Piecewise::parse("").is_err());
+        assert!(Piecewise::parse("5:4").is_err(), "must start at 0");
+        assert!(Piecewise::parse("0:0").is_err(), "period 0");
+        assert!(Piecewise::parse("0:4,0:8").is_err(), "duplicate start");
+        assert!(Piecewise::parse("0-4").is_err(), "bad separator");
+    }
+
+    #[test]
+    fn piecewise_single_segment_is_constant() {
+        let mut p = Piecewise::parse("0:5").unwrap();
+        let mut c = Constant::new(5);
+        for k in 0..200 {
+            assert_eq!(p.should_sync(k), c.should_sync(k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn strategy_parsing() {
+        assert_eq!("adpsgd".parse::<Strategy>().unwrap(), Strategy::Adaptive);
+        assert_eq!("cpsgd".parse::<Strategy>().unwrap(), Strategy::Constant);
+        assert_eq!("full".parse::<Strategy>().unwrap(), Strategy::Full);
+        assert_eq!("piecewise".parse::<Strategy>().unwrap(), Strategy::Piecewise);
+        assert_eq!("easgd".parse::<Strategy>().unwrap(), Strategy::Easgd);
+        assert!("nope".parse::<Strategy>().is_err());
+    }
+
+    #[test]
+    fn paper_communication_budget_example() {
+        // §III-A: strategy-1 (p=4 then p=8 over 4000 iters, switch at 2000)
+        // performs 750 syncs; CPSGD p=5 performs 800.
+        let mut s1_syncs = 0;
+        let mut inc = Decreasing::new(4, 8, 2000); // increasing period via Decreasing(first<second)
+        for k in 0..4000 {
+            if inc.should_sync(k) {
+                s1_syncs += 1;
+            }
+        }
+        assert_eq!(s1_syncs, 750);
+        let mut c5 = Constant::new(5);
+        let c5_syncs = (0..4000).filter(|&k| c5.should_sync(k)).count();
+        assert_eq!(c5_syncs, 800);
+    }
+}

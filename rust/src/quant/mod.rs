@@ -1,0 +1,240 @@
+//! QSGD gradient quantization (Alistarh et al. 2017) — the paper's
+//! compression baseline (§IV, "QSGD with 8 bits per component").
+//!
+//! Rust mirror of the L1 Pallas quantizer kernel with the full wire
+//! format: per-bucket f32 2-norm + one byte (sign ⊕ 7-bit level) per
+//! component at s = 127 levels, or the generic `levels <= 255` path used
+//! by the convergence experiments (level stored in a byte, sign packed
+//! separately).  `encode`/`decode` round-trip exactly; `quantize_inplace`
+//! is the hot-path fused quantize+dequantize used when only the
+//! information loss matters (the netsim ledger charges wire bytes).
+
+use crate::util::rng::Rng;
+
+/// Quantizer configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct QsgdConfig {
+    /// number of positive quantization levels s (8 bits -> 255 in the
+    /// paper's accounting; we default to the same)
+    pub levels: u32,
+    pub bucket: usize,
+}
+
+impl Default for QsgdConfig {
+    fn default() -> Self {
+        QsgdConfig { levels: 255, bucket: 512 }
+    }
+}
+
+/// Encoded representation of one vector.
+#[derive(Debug, Clone)]
+pub struct Encoded {
+    pub len: usize,
+    pub levels: u32,
+    pub bucket: usize,
+    /// per-bucket 2-norms
+    pub norms: Vec<f32>,
+    /// per-component quantization level (0..=levels)
+    pub qs: Vec<u8>,
+    /// per-component sign bits, packed
+    pub signs: Vec<u8>,
+}
+
+impl Encoded {
+    /// Bytes on the wire: norms (4B each) + one level byte per component
+    /// + packed sign bits.
+    pub fn wire_bytes(&self) -> u64 {
+        (self.norms.len() * 4 + self.qs.len() + self.signs.len()) as u64
+    }
+}
+
+fn bucket_norm(x: &[f32]) -> f32 {
+    (x.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>()).sqrt() as f32
+}
+
+/// Stochastically quantize `x` (QSGD): per bucket, level_i =
+/// floor(|x_i|/norm * s + u_i) with u ~ U[0,1).
+pub fn encode(x: &[f32], cfg: &QsgdConfig, rng: &mut Rng) -> Encoded {
+    assert!(cfg.levels >= 1 && cfg.levels <= 255);
+    let n = x.len();
+    let nbuckets = n.div_ceil(cfg.bucket);
+    let mut norms = Vec::with_capacity(nbuckets);
+    let mut qs = vec![0u8; n];
+    let mut signs = vec![0u8; n.div_ceil(8)];
+    let s = cfg.levels as f32;
+    for b in 0..nbuckets {
+        let lo = b * cfg.bucket;
+        let hi = (lo + cfg.bucket).min(n);
+        let norm = bucket_norm(&x[lo..hi]);
+        norms.push(norm);
+        if norm <= 0.0 {
+            continue;
+        }
+        for i in lo..hi {
+            let v = x[i];
+            if v < 0.0 {
+                signs[i / 8] |= 1 << (i % 8);
+            }
+            let scaled = v.abs() / norm * s;
+            let level = (scaled + rng.f32()).floor();
+            qs[i] = level.min(s) as u8; // clamp: |x| <= norm so level <= s
+        }
+    }
+    Encoded { len: n, levels: cfg.levels, bucket: cfg.bucket, norms, qs, signs }
+}
+
+/// Decode into `out` (len must match).
+pub fn decode(e: &Encoded, out: &mut [f32]) {
+    assert_eq!(out.len(), e.len);
+    let s = e.levels as f32;
+    for (b, &norm) in e.norms.iter().enumerate() {
+        let lo = b * e.bucket;
+        let hi = (lo + e.bucket).min(e.len);
+        for i in lo..hi {
+            let mut v = norm * e.qs[i] as f32 / s;
+            if e.signs[i / 8] >> (i % 8) & 1 == 1 {
+                v = -v;
+            }
+            out[i] = v;
+        }
+    }
+}
+
+/// Fused quantize+dequantize (hot path for convergence experiments).
+/// Returns the wire bytes the encoded form would occupy.
+pub fn quantize_inplace(x: &mut [f32], cfg: &QsgdConfig, rng: &mut Rng) -> u64 {
+    let n = x.len();
+    let nbuckets = n.div_ceil(cfg.bucket);
+    let s = cfg.levels as f32;
+    for b in 0..nbuckets {
+        let lo = b * cfg.bucket;
+        let hi = (lo + cfg.bucket).min(n);
+        let norm = bucket_norm(&x[lo..hi]);
+        if norm <= 0.0 {
+            continue;
+        }
+        let inv = norm / s;
+        for v in &mut x[lo..hi] {
+            let scaled = v.abs() / norm * s;
+            let level = (scaled + rng.f32()).floor().min(s);
+            *v = v.signum() * level * inv;
+        }
+    }
+    (nbuckets * 4 + n + n.div_ceil(8)) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        // per-component error <= norm/s
+        forall("qsgd-error-bound", 32, |g| {
+            let x = g.vec_normal(1..2000, 1.0);
+            let cfg = QsgdConfig { levels: 255, bucket: 512 };
+            let mut rng = Rng::new(g.seed, 99);
+            let e = encode(&x, &cfg, &mut rng);
+            let mut out = vec![0.0; x.len()];
+            decode(&e, &mut out);
+            for b in 0..x.len().div_ceil(cfg.bucket) {
+                let lo = b * cfg.bucket;
+                let hi = (lo + cfg.bucket).min(x.len());
+                let norm = bucket_norm(&x[lo..hi]);
+                let bound = norm / cfg.levels as f32 + 1e-6;
+                for i in lo..hi {
+                    assert!(
+                        (out[i] - x[i]).abs() <= bound,
+                        "i={i} err={} bound={bound}",
+                        (out[i] - x[i]).abs()
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn encode_decode_matches_inplace() {
+        forall("qsgd-enc-vs-inplace", 16, |g| {
+            let x = g.vec_normal(10..3000, 2.0);
+            let cfg = QsgdConfig { levels: 15, bucket: 128 };
+            let mut r1 = Rng::new(g.seed, 5);
+            let mut r2 = Rng::new(g.seed, 5);
+            let e = encode(&x, &cfg, &mut r1);
+            let mut dec = vec![0.0; x.len()];
+            decode(&e, &mut dec);
+            let mut inp = x.clone();
+            let bytes = quantize_inplace(&mut inp, &cfg, &mut r2);
+            assert_eq!(bytes, e.wire_bytes());
+            for i in 0..x.len() {
+                assert!((dec[i] - inp[i]).abs() < 1e-6, "i={i}: {} vs {}", dec[i], inp[i]);
+            }
+        });
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let mut gen_rng = Rng::new(1, 0);
+        let mut x = vec![0.0f32; 256];
+        gen_rng.fill_normal(&mut x, 1.0);
+        let cfg = QsgdConfig { levels: 255, bucket: 256 };
+        let mut acc = vec![0.0f64; 256];
+        let trials = 400;
+        let mut rng = Rng::new(7, 7);
+        for _ in 0..trials {
+            let mut q = x.clone();
+            quantize_inplace(&mut q, &cfg, &mut rng);
+            for i in 0..256 {
+                acc[i] += q[i] as f64;
+            }
+        }
+        let norm = bucket_norm(&x);
+        let step = norm / 255.0;
+        for i in 0..256 {
+            let mean = acc[i] / trials as f64;
+            assert!(
+                (mean - x[i] as f64).abs() < 4.0 * step as f64 / (trials as f64).sqrt() + 1e-3,
+                "i={i} mean={mean} x={}",
+                x[i]
+            );
+        }
+    }
+
+    #[test]
+    fn wire_bytes_quarter_of_f32() {
+        // paper: 8-bit QSGD sends ~1/4 the data of 32-bit gradients
+        let x = vec![1.0f32; 1 << 20];
+        let cfg = QsgdConfig::default();
+        let mut rng = Rng::new(0, 0);
+        let e = encode(&x, &cfg, &mut rng);
+        let full = (x.len() * 4) as f64;
+        let ratio = full / e.wire_bytes() as f64;
+        assert!(ratio > 3.0 && ratio < 4.0, "compression ratio {ratio}");
+    }
+
+    #[test]
+    fn zero_vector_roundtrips() {
+        let x = vec![0.0f32; 100];
+        let cfg = QsgdConfig { levels: 3, bucket: 32 };
+        let mut rng = Rng::new(0, 1);
+        let e = encode(&x, &cfg, &mut rng);
+        let mut out = vec![9.0; 100];
+        decode(&e, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn max_magnitude_maps_to_top_level() {
+        // single nonzero element: |x| == norm -> level == s exactly
+        let mut x = vec![0.0f32; 8];
+        x[3] = -2.5;
+        let cfg = QsgdConfig { levels: 7, bucket: 8 };
+        let mut rng = Rng::new(2, 2);
+        let e = encode(&x, &cfg, &mut rng);
+        assert_eq!(e.qs[3], 7);
+        let mut out = vec![0.0; 8];
+        decode(&e, &mut out);
+        assert!((out[3] + 2.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,334 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! training hot path.
+//!
+//! This is the rust half of the AOT bridge (see `python/compile/aot.py`):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`.  One [`HloEngine`] per worker thread — the `xla` crate's
+//! handles hold raw pointers and are not `Send`, so engines are
+//! constructed *inside* their thread by the coordinator's engine factory.
+//!
+//! Python never runs here: after `make artifacts` the binary is
+//! self-contained.
+
+use crate::data::Batch;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `artifacts/manifest.json` entry for one model preset.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    /// "class" or "lm"
+    pub kind: String,
+    pub param_count: usize,
+    pub momentum: f32,
+    pub qsgd_levels: u32,
+    pub batch: usize,
+    pub x_shape: Vec<usize>,
+    pub y_shape: Vec<usize>,
+    pub classes: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub files: BTreeMap<String, String>,
+}
+
+/// The artifact directory + its manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelSpec>,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    j.get("shape")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+        .ok_or_else(|| anyhow!("missing shape"))
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        if root.get("hlo").and_then(Json::as_str) != Some("text") {
+            bail!("manifest {}: expected hlo=\"text\"", path.display());
+        }
+        let mut models = BTreeMap::new();
+        let model_obj = root
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing models"))?;
+        for (name, m) in model_obj {
+            let files = m
+                .get("files")
+                .and_then(Json::as_obj)
+                .ok_or_else(|| anyhow!("model {name}: missing files"))?
+                .iter()
+                .map(|(k, v)| (k.clone(), v.as_str().unwrap_or_default().to_string()))
+                .collect();
+            let spec = ModelSpec {
+                name: name.clone(),
+                kind: m
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("model {name}: missing kind"))?
+                    .to_string(),
+                param_count: m
+                    .get("param_count")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("model {name}: missing param_count"))?,
+                momentum: m.get("momentum").and_then(Json::as_f64).unwrap_or(0.9) as f32,
+                qsgd_levels: m.get("qsgd_levels").and_then(Json::as_usize).unwrap_or(255) as u32,
+                batch: m.get("batch").and_then(Json::as_usize).unwrap_or(0),
+                x_shape: shape_of(m.get("x").ok_or_else(|| anyhow!("model {name}: missing x"))?)?,
+                y_shape: shape_of(m.get("y").ok_or_else(|| anyhow!("model {name}: missing y"))?)?,
+                classes: m.get("classes").and_then(Json::as_usize).unwrap_or(0),
+                vocab: m.get("vocab").and_then(Json::as_usize).unwrap_or(0),
+                seq: m.get("seq").and_then(Json::as_usize).unwrap_or(0),
+                files,
+            };
+            models.insert(name.clone(), spec);
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ModelSpec> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!("model {name:?} not in manifest (have: {:?})", self.models.keys())
+        })
+    }
+}
+
+/// Which executables to compile (compilation is per-thread; skip what a
+/// mode doesn't need).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EngineFns {
+    pub step: bool,
+    pub grad_apply: bool,
+    pub eval: bool,
+    pub sq_dev: bool,
+    pub qsgd: bool,
+}
+
+impl Default for EngineFns {
+    fn default() -> Self {
+        EngineFns { step: true, grad_apply: false, eval: true, sq_dev: false, qsgd: false }
+    }
+}
+
+impl EngineFns {
+    pub fn all() -> Self {
+        EngineFns { step: true, grad_apply: true, eval: true, sq_dev: true, qsgd: true }
+    }
+}
+
+/// A compiled model on a per-thread PJRT CPU client.
+pub struct HloEngine {
+    pub spec: ModelSpec,
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    step: Option<xla::PjRtLoadedExecutable>,
+    grad: Option<xla::PjRtLoadedExecutable>,
+    apply: Option<xla::PjRtLoadedExecutable>,
+    eval: Option<xla::PjRtLoadedExecutable>,
+    init: xla::PjRtLoadedExecutable,
+    sq_dev: Option<xla::PjRtLoadedExecutable>,
+    qsgd: Option<xla::PjRtLoadedExecutable>,
+}
+
+fn compile_one(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    file: &str,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path = dir.join(file);
+    let proto = xla::HloModuleProto::from_text_file(&path)
+        .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+}
+
+fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims).map_err(|e| anyhow!("{e:?}"))?)
+}
+
+fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims).map_err(|e| anyhow!("{e:?}"))?)
+}
+
+impl HloEngine {
+    /// Load + compile the selected functions for `model` from `manifest`.
+    pub fn load(manifest: &Manifest, model: &str, fns: EngineFns) -> Result<HloEngine> {
+        let spec = manifest.get(model)?.clone();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let dir = &manifest.dir;
+        let file = |key: &str| -> Result<&str> {
+            spec.files
+                .get(key)
+                .map(String::as_str)
+                .ok_or_else(|| anyhow!("model {model}: no {key} artifact"))
+        };
+        let maybe = |on: bool, key: &str| -> Result<Option<xla::PjRtLoadedExecutable>> {
+            if on {
+                Ok(Some(compile_one(&client, dir, file(key)?)?))
+            } else {
+                Ok(None)
+            }
+        };
+        let init = compile_one(&client, dir, file("init")?)?;
+        let step = maybe(fns.step, "step")?;
+        let grad = maybe(fns.grad_apply, "grad")?;
+        let apply = maybe(fns.grad_apply, "apply")?;
+        let eval = maybe(fns.eval, "eval")?;
+        let sq_dev = maybe(fns.sq_dev, "sq_dev")?;
+        let qsgd = maybe(fns.qsgd, "qsgd")?;
+        Ok(HloEngine { spec, client, step, grad, apply, eval, init, sq_dev, qsgd })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.spec.param_count
+    }
+
+    fn run(
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let out = exe.execute::<xla::Literal>(args).map_err(|e| anyhow!("execute: {e:?}"))?;
+        let mut lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        lit.decompose_tuple().map_err(|e| anyhow!("decompose: {e:?}"))
+    }
+
+    fn batch_literals(&self, batch: &Batch) -> Result<(xla::Literal, xla::Literal)> {
+        match (batch, self.spec.kind.as_str()) {
+            (Batch::Class { x, y, .. }, "class") => {
+                Ok((lit_f32(x, &self.spec.x_shape)?, lit_i32(y, &self.spec.y_shape)?))
+            }
+            (Batch::Lm { x, y, .. }, "lm") => {
+                Ok((lit_i32(x, &self.spec.x_shape)?, lit_i32(y, &self.spec.y_shape)?))
+            }
+            (b, k) => bail!("batch kind mismatch: model is {k:?}, batch is {b:?}"),
+        }
+    }
+
+    /// init(seed) -> w0
+    pub fn init(&self, seed: i32) -> Result<Vec<f32>> {
+        let outs = Self::run(&self.init, &[xla::Literal::scalar(seed)])?;
+        let w = outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        if w.len() != self.spec.param_count {
+            bail!("init returned {} params, manifest says {}", w.len(), self.spec.param_count);
+        }
+        Ok(w)
+    }
+
+    /// Fused local step: (w, m) updated in place; returns loss.
+    pub fn step(&self, w: &mut [f32], m: &mut [f32], batch: &Batch, lr: f32) -> Result<f32> {
+        let exe = self.step.as_ref().ok_or_else(|| anyhow!("step not compiled"))?;
+        let (xl, yl) = self.batch_literals(batch)?;
+        let p = self.spec.param_count;
+        let args = [
+            lit_f32(w, &[p])?,
+            lit_f32(m, &[p])?,
+            xl,
+            yl,
+            xla::Literal::scalar(lr),
+        ];
+        let outs = Self::run(exe, &args)?;
+        outs[0].copy_raw_to::<f32>(w).map_err(|e| anyhow!("{e:?}"))?;
+        outs[1].copy_raw_to::<f32>(m).map_err(|e| anyhow!("{e:?}"))?;
+        let loss = outs[2].get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(loss)
+    }
+
+    /// grad(w, batch) -> (g into `g`, loss)
+    pub fn grad(&self, w: &[f32], batch: &Batch, g: &mut [f32]) -> Result<f32> {
+        let exe = self.grad.as_ref().ok_or_else(|| anyhow!("grad not compiled"))?;
+        let (xl, yl) = self.batch_literals(batch)?;
+        let p = self.spec.param_count;
+        let outs = Self::run(exe, &[lit_f32(w, &[p])?, xl, yl])?;
+        outs[0].copy_raw_to::<f32>(g).map_err(|e| anyhow!("{e:?}"))?;
+        let loss = outs[1].get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(loss)
+    }
+
+    /// apply(w, m, g, lr): fused momentum update (the L1 Pallas kernel).
+    pub fn apply(&self, w: &mut [f32], m: &mut [f32], g: &[f32], lr: f32) -> Result<()> {
+        let exe = self.apply.as_ref().ok_or_else(|| anyhow!("apply not compiled"))?;
+        let p = self.spec.param_count;
+        let args = [lit_f32(w, &[p])?, lit_f32(m, &[p])?, lit_f32(g, &[p])?, xla::Literal::scalar(lr)];
+        let outs = Self::run(exe, &args)?;
+        outs[0].copy_raw_to::<f32>(w).map_err(|e| anyhow!("{e:?}"))?;
+        outs[1].copy_raw_to::<f32>(m).map_err(|e| anyhow!("{e:?}"))?;
+        Ok(())
+    }
+
+    /// eval(w, batch) -> (loss, accuracy)
+    pub fn eval(&self, w: &[f32], batch: &Batch) -> Result<(f32, f32)> {
+        let exe = self.eval.as_ref().ok_or_else(|| anyhow!("eval not compiled"))?;
+        let (xl, yl) = self.batch_literals(batch)?;
+        let p = self.spec.param_count;
+        let outs = Self::run(exe, &[lit_f32(w, &[p])?, xl, yl])?;
+        let loss = outs[0].get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let acc = outs[1].get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok((loss, acc))
+    }
+
+    /// sq_dev(a, b) -> ||a-b||^2 via the L1 Pallas reduction kernel.
+    pub fn sq_dev(&self, a: &[f32], b: &[f32]) -> Result<f64> {
+        let exe = self.sq_dev.as_ref().ok_or_else(|| anyhow!("sq_dev not compiled"))?;
+        let p = self.spec.param_count;
+        let outs = Self::run(exe, &[lit_f32(a, &[p])?, lit_f32(b, &[p])?])?;
+        Ok(outs[0].get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))? as f64)
+    }
+
+    /// qsgd(g, u) -> quantize-dequantized g (the L1 Pallas quantizer).
+    pub fn qsgd(&self, g: &mut [f32], u: &[f32]) -> Result<()> {
+        let exe = self.qsgd.as_ref().ok_or_else(|| anyhow!("qsgd not compiled"))?;
+        let p = self.spec.param_count;
+        let outs = Self::run(exe, &[lit_f32(g, &[p])?, lit_f32(u, &[p])?])?;
+        outs[0].copy_raw_to::<f32>(g).map_err(|e| anyhow!("{e:?}"))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse_shapes() {
+        let tmp = std::env::temp_dir().join(format!("adpsgd_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(
+            tmp.join("manifest.json"),
+            r#"{"format":1,"hlo":"text","models":{"m1":{
+                "kind":"class","param_count":10,"momentum":0.9,"qsgd_levels":255,
+                "batch":4,"classes":3,"input_dim":5,
+                "x":{"shape":[4,5],"dtype":"float32"},
+                "y":{"shape":[4],"dtype":"int32"},
+                "files":{"init":"m1.init.hlo.txt"},
+                "args":{}}}}"#,
+        )
+        .unwrap();
+        let man = Manifest::load(&tmp).unwrap();
+        let spec = man.get("m1").unwrap();
+        assert_eq!(spec.param_count, 10);
+        assert_eq!(spec.x_shape, vec![4, 5]);
+        assert_eq!(spec.kind, "class");
+        assert!(man.get("nope").is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err().to_string();
+        assert!(err.contains("manifest.json"), "{err}");
+    }
+}

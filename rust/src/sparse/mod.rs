@@ -1,0 +1,214 @@
+//! Top-k gradient sparsification — the *other* compression family the
+//! paper's §VI discusses (Strom [12]; Aji & Heafield [53]; Lin et al.
+//! "Deep Gradient Compression" [52]).
+//!
+//! Each node transmits only the k largest-magnitude gradient components
+//! (index + value); the untransmitted remainder accumulates locally in a
+//! *residual* and is added to the next step's gradient ("error
+//! feedback" — without it top-k provably stalls).  Like QSGD it saves
+//! bandwidth but not latency, and it cannot ride a summing allreduce, so
+//! the netsim charges the PS-style exchange.
+//!
+//! This gives the evaluation a second compression baseline alongside
+//! QSGD: ADPSGD's claim is against the whole compression family, not one
+//! member.
+
+/// Sparsifier configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct TopKConfig {
+    /// fraction of components kept (paper-family defaults: 0.01–0.1)
+    pub keep_frac: f64,
+}
+
+impl Default for TopKConfig {
+    fn default() -> Self {
+        TopKConfig { keep_frac: 0.03125 } // 1/32: 4B value + 4B index per kept
+    }
+}
+
+impl TopKConfig {
+    pub fn k_for(&self, n: usize) -> usize {
+        ((n as f64 * self.keep_frac).ceil() as usize).clamp(1, n)
+    }
+
+    /// Bytes on the wire for a vector of length `n`: (index + value) per
+    /// kept component.
+    pub fn wire_bytes(&self, n: usize) -> u64 {
+        (self.k_for(n) * 8) as u64
+    }
+}
+
+/// Error-feedback state: the accumulated untransmitted remainder.
+#[derive(Debug, Clone)]
+pub struct Residual {
+    pub r: Vec<f32>,
+}
+
+impl Residual {
+    pub fn new(n: usize) -> Self {
+        Residual { r: vec![0.0; n] }
+    }
+}
+
+/// Threshold of the k-th largest |x| via quickselect on a scratch copy
+/// (O(n) average; avoids a full sort of multi-million-element gradients).
+pub fn kth_magnitude(x: &[f32], k: usize) -> f32 {
+    assert!(k >= 1 && k <= x.len());
+    let mut mags: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+    let idx = mags.len() - k; // k-th largest = (n-k)-th smallest
+    let (_, kth, _) = mags.select_nth_unstable_by(idx, f32::total_cmp);
+    *kth
+}
+
+/// Sparsify `g` in place with error feedback:
+/// 1. `g += residual`
+/// 2. keep the k largest-|.| components of the sum, zero the rest
+/// 3. `residual = dropped components`
+///
+/// Returns the wire bytes of the transmitted sparse vector.  Ties at the
+/// threshold are broken by index order (deterministic), keeping exactly
+/// k components.
+pub fn sparsify_inplace(g: &mut [f32], res: &mut Residual, cfg: &TopKConfig) -> u64 {
+    let n = g.len();
+    assert_eq!(res.r.len(), n);
+    let k = cfg.k_for(n);
+    for (gi, ri) in g.iter_mut().zip(res.r.iter()) {
+        *gi += *ri;
+    }
+    let thr = kth_magnitude(g, k);
+    // strictly-greater components always ship (there are < k of them);
+    // boundary ties fill the remaining budget in index order
+    let greater = g.iter().filter(|v| v.abs() > thr).count();
+    let mut tie_budget = k - greater;
+    for (gi, ri) in g.iter_mut().zip(res.r.iter_mut()) {
+        let mag = gi.abs();
+        let keep = if mag > thr {
+            true
+        } else if mag == thr && tie_budget > 0 {
+            tie_budget -= 1;
+            true
+        } else {
+            false
+        };
+        if keep {
+            *ri = 0.0;
+        } else {
+            *ri = *gi;
+            *gi = 0.0;
+        }
+    }
+    cfg.wire_bytes(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        Rng::new(seed, 0).fill_normal(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn kth_magnitude_matches_sort() {
+        for seed in 0..8 {
+            let x = randvec(257, seed);
+            let mut sorted: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+            sorted.sort_by(f32::total_cmp);
+            for k in [1usize, 2, 17, 128, 257] {
+                let got = kth_magnitude(&x, k);
+                let want = sorted[sorted.len() - k];
+                assert_eq!(got, want, "seed {seed} k {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparsify_keeps_exactly_k() {
+        let cfg = TopKConfig { keep_frac: 0.1 };
+        let mut g = randvec(1000, 3);
+        let mut res = Residual::new(1000);
+        sparsify_inplace(&mut g, &mut res, &cfg);
+        let nz = g.iter().filter(|v| **v != 0.0).count();
+        assert_eq!(nz, cfg.k_for(1000));
+    }
+
+    #[test]
+    fn kept_plus_residual_is_lossless() {
+        // g_orig + r_old == g_sparse + r_new  (error feedback conserves mass)
+        let cfg = TopKConfig { keep_frac: 0.05 };
+        let g0 = randvec(512, 9);
+        let mut g = g0.clone();
+        let mut res = Residual::new(512);
+        res.r.copy_from_slice(&randvec(512, 10));
+        let r0 = res.r.clone();
+        sparsify_inplace(&mut g, &mut res, &cfg);
+        for i in 0..512 {
+            let total_before = g0[i] + r0[i];
+            let total_after = g[i] + res.r[i];
+            assert!(
+                (total_before - total_after).abs() < 1e-6,
+                "mass lost at {i}: {total_before} vs {total_after}"
+            );
+        }
+    }
+
+    #[test]
+    fn kept_components_are_the_largest() {
+        let cfg = TopKConfig { keep_frac: 0.02 };
+        let mut g = randvec(4096, 21);
+        let mut res = Residual::new(4096);
+        let summed = g.clone();
+        sparsify_inplace(&mut g, &mut res, &cfg);
+        let min_kept =
+            g.iter().filter(|v| **v != 0.0).map(|v| v.abs()).fold(f32::INFINITY, f32::min);
+        let max_dropped = summed
+            .iter()
+            .zip(g.iter())
+            .filter(|(_, gi)| **gi == 0.0)
+            .map(|(s, _)| s.abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            min_kept >= max_dropped,
+            "kept {min_kept} must dominate dropped {max_dropped}"
+        );
+    }
+
+    #[test]
+    fn residual_accumulates_small_components() {
+        // a component too small to win top-k while big gradients flow
+        // still gets through once they subside — the error-feedback
+        // guarantee (without the residual it would be lost forever)
+        let cfg = TopKConfig { keep_frac: 0.25 }; // k = 2 of 8
+        let n = 8;
+        let mut res = Residual::new(n);
+        // phase 1: indices 0,1 dominate; index 7 trickles 0.01/step
+        for _ in 0..30 {
+            let mut g: Vec<f32> =
+                (0..n).map(|i| if i < 2 { 1.0 } else if i == 7 { 0.01 } else { 0.0 }).collect();
+            sparsify_inplace(&mut g, &mut res, &cfg);
+            assert_eq!(g[7], 0.0, "small component must lose while big ones flow");
+        }
+        assert!((res.r[7] - 0.3).abs() < 1e-5, "residual accumulated: {}", res.r[7]);
+        // phase 2: gradients subside; the accumulated residual ships
+        let mut g = vec![0.0f32; n];
+        sparsify_inplace(&mut g, &mut res, &cfg);
+        assert!(
+            (g[7] - 0.3).abs() < 1e-5,
+            "residual must flush the small component: {}",
+            g[7]
+        );
+        assert_eq!(res.r[7], 0.0);
+    }
+
+    #[test]
+    fn wire_bytes_formula() {
+        let cfg = TopKConfig { keep_frac: 0.01 };
+        assert_eq!(cfg.wire_bytes(10_000), 100 * 8);
+        assert_eq!(cfg.k_for(10), 1); // ceil + clamp
+        let tiny = TopKConfig { keep_frac: 1e-9 };
+        assert_eq!(tiny.k_for(5), 1, "at least one component always ships");
+    }
+}

@@ -1,0 +1,243 @@
+//! Flat `f32` vector math — the coordinator's parameter algebra.
+//!
+//! Everything the paper's Algorithms 1/2 do outside the model step is
+//! elementwise vector work on flat parameter vectors: averaging,
+//! momentum updates (for the pure-rust workload path), the `S_k`
+//! squared-deviation statistic, norms.  Loops are written over fixed
+//! chunks so LLVM auto-vectorizes them; the chunked forms also keep the
+//! reductions deterministic regardless of thread count (summation order
+//! is fixed).
+
+/// y += a * x  (axpy).
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// y = a * y.
+pub fn scale(y: &mut [f32], a: f32) {
+    for yi in y.iter_mut() {
+        *yi *= a;
+    }
+}
+
+/// Reduction chunk: f32 math inside a chunk (8 independent lanes so
+/// LLVM vectorizes the reduction), f64 accumulation across chunks (so
+/// precision matches a plain f64 loop to ~1e-6 relative at 100M+
+/// elements).  4096 f32 = 16 KiB per input — L1-resident.
+const RCHUNK: usize = 4096;
+const LANES: usize = 8;
+
+#[inline]
+fn lanes_total(lanes: [f32; LANES]) -> f64 {
+    // fixed order: deterministic regardless of chunk boundaries
+    let mut t = 0.0f64;
+    for l in lanes {
+        t += l as f64;
+    }
+    t
+}
+
+/// Dot product: f32 lanes within chunks, f64 across chunks.
+/// Deterministic (fixed summation order) and auto-vectorizable.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (ca, cb) in a.chunks(RCHUNK).zip(b.chunks(RCHUNK)) {
+        let mut lanes = [0.0f32; LANES];
+        for (xa, xb) in ca.chunks_exact(LANES).zip(cb.chunks_exact(LANES)) {
+            for l in 0..LANES {
+                lanes[l] += xa[l] * xb[l];
+            }
+        }
+        let rem = ca.len() - ca.len() % LANES;
+        for i in rem..ca.len() {
+            lanes[i - rem] += ca[i] * cb[i];
+        }
+        acc += lanes_total(lanes);
+    }
+    acc
+}
+
+/// ||x||^2 (chunked-lane reduction; see [`dot`]).
+pub fn sq_norm(x: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for c in x.chunks(RCHUNK) {
+        let mut lanes = [0.0f32; LANES];
+        for xa in c.chunks_exact(LANES) {
+            for l in 0..LANES {
+                lanes[l] += xa[l] * xa[l];
+            }
+        }
+        let rem = c.len() - c.len() % LANES;
+        for i in rem..c.len() {
+            lanes[i - rem] += c[i] * c[i];
+        }
+        acc += lanes_total(lanes);
+    }
+    acc
+}
+
+/// ||a - b||^2 — the per-node S_k term (paper eq. 16 / Alg. 2 line 11).
+/// The coordinator calls this at every synchronization; chunked-lane
+/// reduction (see [`dot`]) keeps it at memory bandwidth.
+pub fn sq_deviation(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (ca, cb) in a.chunks(RCHUNK).zip(b.chunks(RCHUNK)) {
+        let mut lanes = [0.0f32; LANES];
+        for (xa, xb) in ca.chunks_exact(LANES).zip(cb.chunks_exact(LANES)) {
+            for l in 0..LANES {
+                let d = xa[l] - xb[l];
+                lanes[l] += d * d;
+            }
+        }
+        let rem = ca.len() - ca.len() % LANES;
+        for i in rem..ca.len() {
+            let d = ca[i] - cb[i];
+            lanes[i - rem] += d * d;
+        }
+        acc += lanes_total(lanes);
+    }
+    acc
+}
+
+/// out = mean of rows (each `rows[i]` same length).  The averaging step
+/// of Algorithm 1/2 line 10 when done leader-side.
+pub fn mean_rows(rows: &[&[f32]], out: &mut [f32]) {
+    let n = rows.len();
+    assert!(n > 0);
+    let inv = 1.0 / n as f32;
+    out.copy_from_slice(rows[0]);
+    for row in &rows[1..] {
+        debug_assert_eq!(row.len(), out.len());
+        for (o, v) in out.iter_mut().zip(*row) {
+            *o += *v;
+        }
+    }
+    scale(out, inv);
+}
+
+/// Variance of model parameters among nodes (paper eq. 7):
+/// `Var[W] = (1/n) Σ_i ||w_bar - w_i||^2`, with `w_bar` the row mean.
+/// Returns (variance, w_bar in `scratch`).
+pub fn param_variance(rows: &[&[f32]], scratch: &mut [f32]) -> f64 {
+    mean_rows(rows, scratch);
+    let mut acc = 0.0f64;
+    for row in rows {
+        acc += sq_deviation(scratch, row);
+    }
+    acc / rows.len() as f64
+}
+
+/// In-place elementwise add: y += x.
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    axpy(y, 1.0, x);
+}
+
+/// Fused momentum-SGD update (rust mirror of the L1 Pallas kernel, used
+/// by the pure-rust `workload` path):  m = mu*m + g;  w -= lr*m.
+pub fn momentum_update(w: &mut [f32], m: &mut [f32], g: &[f32], lr: f32, mu: f32) {
+    debug_assert_eq!(w.len(), m.len());
+    debug_assert_eq!(w.len(), g.len());
+    for ((wi, mi), gi) in w.iter_mut().zip(m.iter_mut()).zip(g) {
+        *mi = mu * *mi + gi;
+        *wi -= lr * *mi;
+    }
+}
+
+/// max |a_i - b_i|, for test assertions.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(&mut y, 2.0, &[10.0, 20.0, 30.0]);
+        assert_eq!(y, vec![21.0, 42.0, 63.0]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, vec![10.5, 21.0, 31.5]);
+    }
+
+    #[test]
+    fn dot_and_norms() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_eq!(sq_norm(&[3.0, 4.0]), 25.0);
+        assert_eq!(sq_deviation(&[1.0, 1.0], &[0.0, 0.0]), 2.0);
+    }
+
+    #[test]
+    fn mean_rows_basic() {
+        let r1 = [1.0, 2.0];
+        let r2 = [3.0, 6.0];
+        let mut out = [0.0; 2];
+        mean_rows(&[&r1, &r2], &mut out);
+        assert_eq!(out, [2.0, 4.0]);
+    }
+
+    #[test]
+    fn variance_zero_when_identical() {
+        let r = [0.5f32; 16];
+        let mut scratch = [0.0f32; 16];
+        let v = param_variance(&[&r, &r, &r], &mut scratch);
+        assert_eq!(v, 0.0);
+    }
+
+    #[test]
+    fn variance_known_value() {
+        // rows 0 and 2: mean 1, each deviates by 1 -> Var = (1+1)/2 = 1 per dim
+        let a = [0.0f32; 4];
+        let b = [2.0f32; 4];
+        let mut scratch = [0.0f32; 4];
+        let v = param_variance(&[&a, &b], &mut scratch);
+        assert_eq!(v, 4.0); // ||dev||^2 = 4 per row, averaged = 4
+    }
+
+    #[test]
+    fn momentum_update_matches_reference() {
+        forall("momentum-vs-ref", 32, |g| {
+            let n = g.usize_in(1..300);
+            let w0 = g.vec_normal(n..n + 1, 1.0);
+            let m0 = g.vec_normal(n..n + 1, 1.0);
+            let grad = g.vec_normal(n..n + 1, 1.0);
+            let (lr, mu) = (g.f32_in(0.001, 1.0), g.f32_in(0.0, 0.99));
+            let mut w = w0.clone();
+            let mut m = m0.clone();
+            momentum_update(&mut w, &mut m, &grad, lr, mu);
+            for i in 0..n {
+                let m_ref = mu * m0[i] + grad[i];
+                let w_ref = w0[i] - lr * m_ref;
+                assert!((m[i] - m_ref).abs() < 1e-5);
+                assert!((w[i] - w_ref).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn variance_invariant_under_common_shift() {
+        forall("var-shift-invariant", 24, |g| {
+            let n = g.usize_in(2..50);
+            let k = g.usize_in(2..6);
+            let rows: Vec<Vec<f32>> = (0..k).map(|_| g.vec_normal(n..n + 1, 1.0)).collect();
+            let shift = g.f32_in(-5.0, 5.0);
+            let shifted: Vec<Vec<f32>> =
+                rows.iter().map(|r| r.iter().map(|x| x + shift).collect()).collect();
+            let mut s1 = vec![0.0; n];
+            let mut s2 = vec![0.0; n];
+            let v1 = param_variance(&rows.iter().map(|r| r.as_slice()).collect::<Vec<_>>(), &mut s1);
+            let v2 = param_variance(
+                &shifted.iter().map(|r| r.as_slice()).collect::<Vec<_>>(),
+                &mut s2,
+            );
+            assert!((v1 - v2).abs() < 1e-3 * (1.0 + v1.abs()), "{v1} vs {v2}");
+        });
+    }
+}

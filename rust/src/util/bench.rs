@@ -1,0 +1,178 @@
+//! Micro-benchmark harness (criterion is not in the offline registry).
+//!
+//! Self-calibrating: each benchmark first estimates the per-iteration
+//! cost, then picks a repetition count targeting a fixed measurement
+//! window, runs several samples, and reports min/mean/p50 ns per
+//! iteration.  `cargo bench` binaries use `harness = false` and call
+//! [`Runner`] directly:
+//!
+//! ```no_run
+//! use adpsgd::util::bench::Runner;
+//! let mut r = Runner::from_env("tensor");
+//! let xs = vec![1.0f32; 1 << 16];
+//! r.bench("sq_norm/64k", || adpsgd::tensor::sq_norm(&xs));
+//! r.finish();
+//! ```
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>, // ns per iteration, one per sample
+    pub iters_per_sample: u64,
+}
+
+impl Measurement {
+    pub fn min_ns(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn p50_ns(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(f64::total_cmp);
+        s[s.len() / 2]
+    }
+
+    /// Relative spread (max-min)/mean — a noise indicator.
+    pub fn spread(&self) -> f64 {
+        let max = self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        (max - self.min_ns()) / self.mean_ns()
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark group runner.  Honors two env knobs:
+/// * `ADPSGD_BENCH_FAST=1` — shrink windows (CI smoke).
+/// * `ADPSGD_BENCH_FILTER=substr` — run matching benchmarks only.
+pub struct Runner {
+    group: String,
+    window: Duration,
+    samples: usize,
+    filter: Option<String>,
+    pub results: Vec<Measurement>,
+}
+
+impl Runner {
+    pub fn new(group: &str, window: Duration, samples: usize) -> Self {
+        println!("\n== bench group: {group} ==");
+        Runner { group: group.to_string(), window, samples, filter: None, results: Vec::new() }
+    }
+
+    /// Standard construction for `cargo bench` binaries.
+    pub fn from_env(group: &str) -> Self {
+        let fast = std::env::var("ADPSGD_BENCH_FAST").is_ok();
+        let (window, samples) =
+            if fast { (Duration::from_millis(20), 3) } else { (Duration::from_millis(250), 7) };
+        let mut r = Self::new(group, window, samples);
+        r.filter = std::env::var("ADPSGD_BENCH_FILTER").ok();
+        r
+    }
+
+    fn skip(&self, name: &str) -> bool {
+        self.filter.as_deref().map(|f| !name.contains(f)).unwrap_or(false)
+    }
+
+    /// Benchmark `f`, which returns a value (black-boxed to defeat DCE).
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> Option<&Measurement> {
+        if self.skip(name) {
+            return None;
+        }
+        // calibrate
+        let t0 = Instant::now();
+        black_box(f());
+        let once = t0.elapsed().max(Duration::from_nanos(20));
+        let iters = (self.window.as_nanos() / once.as_nanos()).clamp(1, 1_000_000_000) as u64;
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let m = Measurement { name: name.to_string(), samples, iters_per_sample: iters };
+        println!(
+            "{:<44} {:>12}/iter  (min {:>12}, {} iters x {} samples, spread {:.0}%)",
+            format!("{}/{}", self.group, m.name),
+            fmt_ns(m.p50_ns()),
+            fmt_ns(m.min_ns()),
+            m.iters_per_sample,
+            m.samples.len(),
+            m.spread() * 100.0
+        );
+        self.results.push(m);
+        self.results.last()
+    }
+
+    /// Benchmark with a derived throughput figure (bytes processed per
+    /// iteration → GB/s alongside time).
+    pub fn bench_bytes<T, F: FnMut() -> T>(&mut self, name: &str, bytes: u64, f: F) {
+        if let Some(m) = self.bench(name, f) {
+            let gbps = bytes as f64 / m.p50_ns();
+            println!("{:<44} {:>12.2} GB/s", format!("{}/{}", self.group, name), gbps);
+        }
+    }
+
+    /// Print the group footer. Returns the measurements for assertions.
+    pub fn finish(self) -> Vec<Measurement> {
+        println!("== {} done: {} benchmarks ==", self.group, self.results.len());
+        self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut r = Runner::new("test", Duration::from_millis(2), 2);
+        r.bench("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        let ms = r.finish();
+        assert_eq!(ms.len(), 1);
+        assert!(ms[0].min_ns() > 0.0);
+        assert!(ms[0].iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn ns_formatting() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut r = Runner::new("test", Duration::from_millis(1), 1);
+        r.filter = Some("match".into());
+        assert!(r.bench("other", || 1).is_none());
+        assert!(r.bench("match-this", || 1).is_some());
+        assert_eq!(r.finish().len(), 1);
+    }
+}

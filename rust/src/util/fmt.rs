@@ -1,0 +1,69 @@
+//! Human-readable formatting for metrics and bench output.
+
+/// Bytes -> "1.50 GiB" style.
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut x = n as f64;
+    let mut u = 0;
+    while x >= 1024.0 && u < UNITS.len() - 1 {
+        x /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{x:.2} {}", UNITS[u])
+    }
+}
+
+/// Seconds -> "1.23 s" / "45.6 ms" / "789 us".
+pub fn secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.1} us", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Count -> "1.2M" style.
+pub fn count(n: u64) -> String {
+    if n >= 1_000_000_000 {
+        format!("{:.2}B", n as f64 / 1e9)
+    } else if n >= 1_000_000 {
+        format!("{:.2}M", n as f64 / 1e6)
+    } else if n >= 10_000 {
+        format!("{:.1}k", n as f64 / 1e3)
+    } else {
+        n.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(2048), "2.00 KiB");
+        assert_eq!(bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn secs_units() {
+        assert_eq!(secs(2.5), "2.50 s");
+        assert_eq!(secs(0.0456), "45.60 ms");
+        assert_eq!(secs(12e-6), "12.0 us");
+    }
+
+    #[test]
+    fn count_units() {
+        assert_eq!(count(999), "999");
+        assert_eq!(count(1_500_000), "1.50M");
+        assert_eq!(count(25_000), "25.0k");
+    }
+}

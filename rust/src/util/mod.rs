@@ -1,0 +1,13 @@
+//! Substrate utilities built in-repo because the build is offline:
+//! a counter-based RNG, a minimal JSON parser (for `artifacts/manifest.json`),
+//! a property-testing micro-framework, timers and human formatting.
+
+pub mod bench;
+pub mod fmt;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;

@@ -1,0 +1,114 @@
+//! Property-testing micro-framework (proptest is not in the offline
+//! registry).  Runs a property over N randomized cases with per-case
+//! seeds; on failure, reports the failing seed so the case replays
+//! deterministically:
+//!
+//! ```no_run
+//! use adpsgd::util::prop::{forall, Gen};
+//! forall("vec-reverse-twice", 64, |g| {
+//!     let xs = g.vec_f32(0..100, -1.0, 1.0);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     assert_eq!(xs, ys);
+//! });
+//! ```
+
+use super::rng::Rng;
+use std::ops::Range;
+
+/// Per-case value generator (thin veneer over [`Rng`] with shape helpers).
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        assert!(r.start < r.end);
+        r.start + self.rng.below(r.end - r.start)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo)
+    }
+
+    pub fn vec_f32(&mut self, len: Range<usize>, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: Range<usize>, sigma: f32) -> Vec<f32> {
+        let n = self.usize_in(len);
+        let mut v = vec![0.0; n];
+        self.rng.fill_normal(&mut v, sigma);
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Run `prop` over `cases` randomized generations.  Panics (with the
+/// failing seed in the message) if any case panics.
+pub fn forall<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: u64, prop: F) {
+    // Env override lets a failing seed replay exactly:
+    //   ADPSGD_PROP_SEED=123 cargo test failing_test
+    let replay = std::env::var("ADPSGD_PROP_SEED").ok().and_then(|s| s.parse::<u64>().ok());
+    let seeds: Vec<u64> = match replay {
+        Some(s) => vec![s],
+        None => (0..cases).collect(),
+    };
+    for seed in seeds {
+        let mut g = Gen { rng: Rng::new(0xADD5_6D ^ seed, seed), seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at seed {seed} \
+                 (replay: ADPSGD_PROP_SEED={seed}): {msg}",
+                name = name,
+                seed = seed,
+                msg = msg
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_simple_property() {
+        forall("abs-nonneg", 32, |g| {
+            let x = g.f32_in(-5.0, 5.0);
+            assert!(x.abs() >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn reports_failing_seed() {
+        forall("always-fails", 4, |g| {
+            let x = g.f32_in(0.0, 1.0);
+            assert!(x < 0.0, "x = {x}");
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        forall("gen-ranges", 64, |g| {
+            let n = g.usize_in(3..10);
+            assert!((3..10).contains(&n));
+            let v = g.vec_f32(1..5, -2.0, 2.0);
+            assert!(!v.is_empty() && v.len() < 5);
+            assert!(v.iter().all(|x| (-2.0..2.0).contains(x)));
+        });
+    }
+}

@@ -1,0 +1,84 @@
+//! Wall-clock timing helpers used by the coordinator's metrics and the
+//! bench harnesses.
+
+use std::time::{Duration, Instant};
+
+/// Accumulating stopwatch: `start`/`stop` pairs add into a total.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    total: Duration,
+    started: Option<Instant>,
+    laps: u64,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Timer { total: Duration::ZERO, started: None, laps: 0 }
+    }
+
+    pub fn start(&mut self) {
+        debug_assert!(self.started.is_none(), "timer already running");
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.total += t0.elapsed();
+            self.laps += 1;
+        }
+    }
+
+    /// Time a closure, accumulating its duration.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.total.as_secs_f64()
+    }
+
+    pub fn laps(&self) -> u64 {
+        self.laps
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        if self.laps == 0 {
+            0.0
+        } else {
+            self.secs() / self.laps as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_laps() {
+        let mut t = Timer::new();
+        for _ in 0..3 {
+            t.time(|| std::thread::sleep(Duration::from_millis(2)));
+        }
+        assert_eq!(t.laps(), 3);
+        assert!(t.secs() >= 0.006);
+        assert!(t.mean_secs() >= 0.002);
+    }
+
+    #[test]
+    fn stop_without_start_is_noop() {
+        let mut t = Timer::new();
+        t.stop();
+        assert_eq!(t.laps(), 0);
+        assert_eq!(t.secs(), 0.0);
+    }
+}

@@ -1,0 +1,467 @@
+//! Pure-rust differentiable workloads.
+//!
+//! The statistics figures (Fig 1–3, Table I sweeps) need thousands of
+//! 16-node × 4000-iteration runs; executing those through PJRT would be
+//! needlessly slow and adds nothing — the paper's claims there are about
+//! the *coordination statistics*, not the model.  These workloads give
+//! the coordinator a fast in-process `grad`/`eval` with hand-written
+//! backprop.  The HLO/PJRT path ([`crate::runtime`]) is the product
+//! path and drives the end-to-end examples; both implement [`Engine`]
+//! (see [`crate::coordinator::engine`]).
+
+use crate::data::Batch;
+use crate::util::rng::Rng;
+
+/// A differentiable objective over a flat parameter vector.
+pub trait Workload: Send {
+    fn n_params(&self) -> usize;
+    /// Fill `w` with the initial point (all nodes then broadcast rank 0's).
+    fn init(&self, rng: &mut Rng, w: &mut [f32]);
+    /// Compute loss and gradient at `w` on `batch` (g is overwritten).
+    fn loss_grad(&mut self, w: &[f32], batch: &Batch, g: &mut [f32]) -> f32;
+    /// (loss, accuracy) on a batch.
+    fn eval(&mut self, w: &[f32], batch: &Batch) -> (f32, f32);
+    fn boxed_clone(&self) -> Box<dyn Workload>;
+}
+
+// ---------------------------------------------------------------------------
+// quadratic bowl (for clean invariant tests)
+// ---------------------------------------------------------------------------
+
+/// `f(w) = E_x 0.5 ||w - x||^2` over batch rows: the stochastic quadratic
+/// used in distributed-SGD analyses.  Optimum = data mean; gradient noise
+/// = batch-mean noise.  Accuracy is reported as 0.
+#[derive(Debug, Clone)]
+pub struct Quadratic {
+    pub dim: usize,
+}
+
+impl Workload for Quadratic {
+    fn n_params(&self) -> usize {
+        self.dim
+    }
+
+    fn init(&self, rng: &mut Rng, w: &mut [f32]) {
+        rng.fill_normal(w, 1.0);
+    }
+
+    fn loss_grad(&mut self, w: &[f32], batch: &Batch, g: &mut [f32]) -> f32 {
+        let Batch::Class { x, batch, dim, .. } = batch else {
+            panic!("Quadratic expects Class batches")
+        };
+        assert_eq!(*dim, self.dim);
+        // grad = w - mean_x ; loss = mean 0.5||w - x_b||^2
+        let inv = 1.0 / *batch as f32;
+        let mut loss = 0.0f64;
+        g.copy_from_slice(w);
+        for b in 0..*batch {
+            let row = &x[b * dim..(b + 1) * dim];
+            loss += 0.5 * crate::tensor::sq_deviation(w, row) * inv as f64;
+            for (gi, xi) in g.iter_mut().zip(row) {
+                *gi -= xi * inv;
+            }
+        }
+        loss as f32
+    }
+
+    fn eval(&mut self, w: &[f32], batch: &Batch) -> (f32, f32) {
+        let mut g = vec![0.0; self.dim];
+        (self.loss_grad(w, batch, &mut g), 0.0)
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Workload> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MLP classifier with manual backprop
+// ---------------------------------------------------------------------------
+
+/// Multi-layer perceptron: dims[0] -> relu(dims[1]) -> ... -> dims.last()
+/// with softmax cross-entropy.  `dims = [input, hidden..., classes]`.
+/// Parameter layout matches the python L2 `mlp` (per layer: W then b),
+/// so HLO and native runs of the same architecture are interchangeable.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub dims: Vec<usize>,
+    // scratch (per instance; workloads are per-thread)
+    acts: Vec<Vec<f32>>,   // activations per layer boundary
+    deltas: Vec<Vec<f32>>, // backprop deltas
+    batch_cap: usize,
+}
+
+impl Mlp {
+    pub fn new(dims: Vec<usize>) -> Self {
+        assert!(dims.len() >= 2);
+        Mlp { dims, acts: Vec::new(), deltas: Vec::new(), batch_cap: 0 }
+    }
+
+    /// GoogLeNet-role preset: compute-heavy relative to its size.
+    pub fn compute_bound(input_dim: usize, hidden: usize, classes: usize) -> Self {
+        Mlp::new(vec![input_dim, hidden, hidden, classes])
+    }
+
+    fn ensure_scratch(&mut self, batch: usize) {
+        if self.batch_cap >= batch && !self.acts.is_empty() {
+            return;
+        }
+        self.acts = self.dims.iter().map(|&d| vec![0.0; batch * d]).collect();
+        self.deltas = self.dims.iter().map(|&d| vec![0.0; batch * d]).collect();
+        self.batch_cap = batch;
+    }
+
+    fn layer_sizes(&self) -> Vec<(usize, usize)> {
+        self.dims.windows(2).map(|w| (w[0], w[1])).collect()
+    }
+
+    /// offsets of (W, b) per layer in the flat vector
+    fn offsets(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        let mut off = 0;
+        for (i, o) in self.layer_sizes() {
+            out.push((off, off + i * o));
+            off += i * o + o;
+        }
+        out
+    }
+
+    /// forward into self.acts; returns logits slice index
+    fn forward(&mut self, w: &[f32], x: &[f32], batch: usize) {
+        self.ensure_scratch(batch);
+        let sizes = self.layer_sizes();
+        let offs = self.offsets();
+        self.acts[0][..batch * self.dims[0]].copy_from_slice(x);
+        for (l, &(din, dout)) in sizes.iter().enumerate() {
+            let (w_off, b_off) = offs[l];
+            let wm = &w[w_off..w_off + din * dout];
+            let bm = &w[b_off..b_off + dout];
+            let last = l + 1 == sizes.len();
+            // split borrow: acts[l] input, acts[l+1] output
+            let (head, tail) = self.acts.split_at_mut(l + 1);
+            let input = &head[l][..batch * din];
+            let out = &mut tail[0][..batch * dout];
+            for b in 0..batch {
+                let xr = &input[b * din..(b + 1) * din];
+                let yr = &mut out[b * dout..(b + 1) * dout];
+                yr.copy_from_slice(bm);
+                // i-k-j loop, row-major W[din][dout]: autovectorizes
+                for (k, &xv) in xr.iter().enumerate() {
+                    if xv != 0.0 {
+                        let wrow = &wm[k * dout..(k + 1) * dout];
+                        for (yv, wv) in yr.iter_mut().zip(wrow) {
+                            *yv += xv * wv;
+                        }
+                    }
+                }
+                if !last {
+                    for v in yr.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// softmax-CE loss + dlogits (into deltas.last)
+    fn loss_and_dlogits(&mut self, y: &[i32], batch: usize) -> f32 {
+        let c = *self.dims.last().unwrap();
+        let l = self.dims.len() - 1;
+        let logits = &self.acts[l][..batch * c];
+        let dl = &mut self.deltas[l][..batch * c];
+        let mut loss = 0.0f64;
+        let invb = 1.0 / batch as f32;
+        for b in 0..batch {
+            let row = &logits[b * c..(b + 1) * c];
+            let drow = &mut dl[b * c..(b + 1) * c];
+            let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+            let mut z = 0.0f32;
+            for (d, &v) in drow.iter_mut().zip(row) {
+                *d = (v - mx).exp();
+                z += *d;
+            }
+            let yi = y[b] as usize;
+            loss += -(((row[yi] - mx) as f64) - (z as f64).ln());
+            for d in drow.iter_mut() {
+                *d = *d / z * invb;
+            }
+            drow[yi] -= invb;
+        }
+        (loss * invb as f64) as f32
+    }
+
+    fn backward(&mut self, w: &[f32], g: &mut [f32], batch: usize) {
+        let sizes = self.layer_sizes();
+        let offs = self.offsets();
+        g.iter_mut().for_each(|v| *v = 0.0);
+        for l in (0..sizes.len()).rev() {
+            let (din, dout) = sizes[l];
+            let (w_off, b_off) = offs[l];
+            // dW = act[l]^T @ delta[l+1]; db = sum delta; dact[l] = delta @ W^T
+            let (d_head, d_tail) = self.deltas.split_at_mut(l + 1);
+            let delta_out = &d_tail[0][..batch * dout];
+            let act_in = &self.acts[l][..batch * din];
+            {
+                let gw = &mut g[w_off..w_off + din * dout];
+                for b in 0..batch {
+                    let ar = &act_in[b * din..(b + 1) * din];
+                    let dr = &delta_out[b * dout..(b + 1) * dout];
+                    for (k, &av) in ar.iter().enumerate() {
+                        if av != 0.0 {
+                            let gr = &mut gw[k * dout..(k + 1) * dout];
+                            for (gv, dv) in gr.iter_mut().zip(dr) {
+                                *gv += av * dv;
+                            }
+                        }
+                    }
+                }
+            }
+            {
+                let gb = &mut g[b_off..b_off + dout];
+                for b in 0..batch {
+                    let dr = &delta_out[b * dout..(b + 1) * dout];
+                    for (gv, dv) in gb.iter_mut().zip(dr) {
+                        *gv += dv;
+                    }
+                }
+            }
+            if l > 0 {
+                let wm = &w[w_off..w_off + din * dout];
+                let delta_in = &mut d_head[l][..batch * din];
+                let act_in = &self.acts[l][..batch * din];
+                for b in 0..batch {
+                    let dr = &delta_out[b * dout..(b + 1) * dout];
+                    let di = &mut delta_in[b * din..(b + 1) * din];
+                    let ai = &act_in[b * din..(b + 1) * din];
+                    for k in 0..din {
+                        // relu mask: act==0 -> no grad
+                        if ai[k] > 0.0 {
+                            let wrow = &wm[k * dout..(k + 1) * dout];
+                            let mut acc = 0.0f32;
+                            for (wv, dv) in wrow.iter().zip(dr) {
+                                acc += wv * dv;
+                            }
+                            di[k] = acc;
+                        } else {
+                            di[k] = 0.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Workload for Mlp {
+    fn n_params(&self) -> usize {
+        self.layer_sizes().iter().map(|(i, o)| i * o + o).sum()
+    }
+
+    fn init(&self, rng: &mut Rng, w: &mut [f32]) {
+        let offs = self.offsets();
+        for (l, &(din, dout)) in self.layer_sizes().iter().enumerate() {
+            let (w_off, b_off) = offs[l];
+            let scale = (2.0 / din as f32).sqrt(); // He init (relu net)
+            rng.fill_normal(&mut w[w_off..w_off + din * dout], scale);
+            w[b_off..b_off + dout].iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+
+    fn loss_grad(&mut self, w: &[f32], batch: &Batch, g: &mut [f32]) -> f32 {
+        let Batch::Class { x, y, batch, dim } = batch else {
+            panic!("Mlp expects Class batches")
+        };
+        assert_eq!(*dim, self.dims[0]);
+        self.forward(w, x, *batch);
+        let loss = self.loss_and_dlogits(y, *batch);
+        self.backward(w, g, *batch);
+        loss
+    }
+
+    fn eval(&mut self, w: &[f32], batch: &Batch) -> (f32, f32) {
+        let Batch::Class { x, y, batch, dim } = batch else {
+            panic!("Mlp expects Class batches")
+        };
+        assert_eq!(*dim, self.dims[0]);
+        self.forward(w, x, *batch);
+        let c = *self.dims.last().unwrap();
+        let l = self.dims.len() - 1;
+        let logits = &self.acts[l][..batch * c];
+        let mut correct = 0usize;
+        let mut loss = 0.0f64;
+        for b in 0..*batch {
+            let row = &logits[b * c..(b + 1) * c];
+            let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+            let z: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
+            let yi = y[b] as usize;
+            loss += -(((row[yi] - mx) as f64) - (z as f64).ln());
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap();
+            if argmax == yi {
+                correct += 1;
+            }
+        }
+        ((loss / *batch as f64) as f32, correct as f32 / *batch as f32)
+    }
+
+    fn boxed_clone(&self) -> Box<dyn Workload> {
+        Box::new(Mlp::new(self.dims.clone()))
+    }
+}
+
+/// Softmax (multinomial logistic) regression: the `dims.len() == 2` MLP.
+pub fn logreg(input_dim: usize, classes: usize) -> Mlp {
+    Mlp::new(vec![input_dim, classes])
+}
+
+/// Build a named native workload.
+pub fn build(name: &str, cfg: &crate::config::WorkloadConfig) -> anyhow::Result<Box<dyn Workload>> {
+    Ok(match name {
+        "quadratic" => Box::new(Quadratic { dim: cfg.input_dim }),
+        "logreg" => Box::new(logreg(cfg.input_dim, cfg.classes)),
+        "mlp" => Box::new(Mlp::new(vec![cfg.input_dim, cfg.hidden, cfg.classes])),
+        // "failing[:rank:step]" is the chaos-test hook: same model as
+        // "mlp"; the error injection lives in the engine wrapper
+        n if n.starts_with("failing") => {
+            Box::new(Mlp::new(vec![cfg.input_dim, cfg.hidden, cfg.classes]))
+        }
+        "mlp_deep" => {
+            Box::new(Mlp::new(vec![cfg.input_dim, cfg.hidden, cfg.hidden, cfg.classes]))
+        }
+        // VGG16-role: parameter-heavy (comm-bound). hidden is widened.
+        "mlp_wide" => Box::new(Mlp::new(vec![cfg.input_dim, cfg.hidden * 8, cfg.classes])),
+        other => anyhow::bail!("unknown native workload {other:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthClass;
+    use crate::util::prop::forall;
+
+    fn fd_check(wl: &mut dyn Workload, batch: &Batch, probes: usize, seed: u64) {
+        let n = wl.n_params();
+        let mut w = vec![0.0f32; n];
+        wl.init(&mut Rng::new(seed, 0), &mut w);
+        let mut g = vec![0.0f32; n];
+        let loss0 = wl.loss_grad(&w, batch, &mut g);
+        assert!(loss0.is_finite());
+        let mut rng = Rng::new(seed, 1);
+        let eps = 1e-3f32;
+        for _ in 0..probes {
+            let i = rng.below(n);
+            let mut wp = w.clone();
+            wp[i] += eps;
+            let mut wm = w.clone();
+            wm[i] -= eps;
+            let mut scratch = vec![0.0f32; n];
+            let lp = wl.loss_grad(&wp, batch, &mut scratch);
+            let lm = wl.loss_grad(&wm, batch, &mut scratch);
+            let fd = (lp - lm) / (2.0 * eps);
+            let tol = 2e-2 * (1.0 + fd.abs());
+            assert!((fd - g[i]).abs() < tol, "param {i}: fd={fd} analytic={}", g[i]);
+        }
+    }
+
+    #[test]
+    fn quadratic_grad_matches_fd() {
+        let d = SynthClass::new(0, 16, 4, 1.0, 0.0);
+        let batch = d.sample(&mut Rng::new(1, 0), 8);
+        fd_check(&mut Quadratic { dim: 16 }, &batch, 8, 3);
+    }
+
+    #[test]
+    fn quadratic_converges_to_mean() {
+        let d = SynthClass::new(0, 8, 2, 0.1, 0.0);
+        let mut wl = Quadratic { dim: 8 };
+        let mut w = vec![5.0f32; 8];
+        let mut g = vec![0.0f32; 8];
+        let mut rng = Rng::new(2, 0);
+        for _ in 0..500 {
+            let b = d.sample(&mut rng, 32);
+            wl.loss_grad(&w, &b, &mut g);
+            crate::tensor::axpy(&mut w, -0.2, &g);
+        }
+        // optimum is the mixture mean; loss should be near its floor
+        let b = d.sample(&mut rng, 256);
+        let (loss, _) = wl.eval(&w, &b);
+        let mut w_bad = vec![5.0f32; 8];
+        let (loss_bad, _) = wl.eval(&mut w_bad, &b);
+        assert!(loss < loss_bad * 0.2, "loss {loss} vs {loss_bad}");
+    }
+
+    #[test]
+    fn mlp_grad_matches_fd() {
+        let d = SynthClass::new(5, 10, 3, 0.8, 0.0);
+        let batch = d.sample(&mut Rng::new(6, 0), 4);
+        fd_check(&mut Mlp::new(vec![10, 12, 3]), &batch, 12, 7);
+    }
+
+    #[test]
+    fn deep_mlp_grad_matches_fd() {
+        let d = SynthClass::new(8, 6, 3, 0.8, 0.0);
+        let batch = d.sample(&mut Rng::new(9, 0), 4);
+        fd_check(&mut Mlp::new(vec![6, 8, 8, 3]), &batch, 12, 11);
+    }
+
+    #[test]
+    fn logreg_grad_matches_fd() {
+        let d = SynthClass::new(1, 8, 4, 1.0, 0.0);
+        let batch = d.sample(&mut Rng::new(2, 0), 8);
+        fd_check(&mut logreg(8, 4), &batch, 8, 5);
+    }
+
+    #[test]
+    fn mlp_sgd_learns_synthetic_task() {
+        let d = SynthClass::new(3, 16, 4, 0.4, 0.0);
+        let mut wl = Mlp::new(vec![16, 32, 4]);
+        let n = wl.n_params();
+        let mut w = vec![0.0f32; n];
+        wl.init(&mut Rng::new(0, 0), &mut w);
+        let mut g = vec![0.0f32; n];
+        let mut opt = crate::optim::MomentumSgd::new(n, 0.9);
+        let mut rng = Rng::new(4, 0);
+        for _ in 0..300 {
+            let b = d.sample(&mut rng, 32);
+            wl.loss_grad(&w, &b, &mut g);
+            opt.step(&mut w, &g, 0.05);
+        }
+        let b = d.sample(&mut rng, 512);
+        let (loss, acc) = wl.eval(&w, &b);
+        assert!(acc > 0.9, "acc {acc} loss {loss}");
+    }
+
+    #[test]
+    fn param_count_matches_python_mlp_small() {
+        // python preset mlp_small: 256 -> 128 -> 128 -> 10 = 50698 params
+        let m = Mlp::new(vec![256, 128, 128, 10]);
+        assert_eq!(m.n_params(), 50698);
+    }
+
+    #[test]
+    fn grad_is_deterministic() {
+        forall("mlp-grad-deterministic", 8, |gen| {
+            let din = gen.usize_in(2..12);
+            let c = gen.usize_in(2..5);
+            let d = SynthClass::new(gen.seed, din, c, 1.0, 0.0);
+            let batch = d.sample(&mut Rng::new(gen.seed, 9), 4);
+            let mut wl = Mlp::new(vec![din, 6, c]);
+            let n = wl.n_params();
+            let mut w = vec![0.0f32; n];
+            wl.init(&mut Rng::new(gen.seed, 3), &mut w);
+            let mut g1 = vec![0.0f32; n];
+            let mut g2 = vec![0.0f32; n];
+            let l1 = wl.loss_grad(&w, &batch, &mut g1);
+            let l2 = wl.loss_grad(&w, &batch, &mut g2);
+            assert_eq!(l1, l2);
+            assert_eq!(g1, g2);
+        });
+    }
+}

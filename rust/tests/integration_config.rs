@@ -1,0 +1,187 @@
+//! Integration tests for the configuration pipeline: TOML file →
+//! overrides → validated `ExperimentConfig` → actual run; plus CLI
+//! parsing round-trips the launcher relies on.
+
+use adpsgd::cli::Args;
+use adpsgd::config::{Backend, ExperimentConfig, LrSchedule};
+use adpsgd::coordinator::Trainer;
+use adpsgd::period::Strategy;
+use std::io::Write;
+
+fn temp_file(name: &str, content: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("adpsgd_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    let mut f = std::fs::File::create(&path).unwrap();
+    f.write_all(content.as_bytes()).unwrap();
+    path
+}
+
+const FULL_TOML: &str = r#"
+name = "it_config"
+seed = 7
+nodes = 4
+iters = 120
+batch_per_node = 16
+eval_every = 60
+
+[workload]
+backend = "native"
+model = "mlp"
+input_dim = 32
+hidden = 16
+classes = 5
+noise = 0.8
+label_noise = 0.0
+eval_batches = 4
+
+[optim]
+lr0 = 0.05
+momentum = 0.9
+schedule = "step"
+boundaries = [60, 90]
+factor = 0.1
+
+[sync]
+strategy = "adpsgd"
+p_init = 2
+warmup_iters = 10
+ks_frac = 0.25
+low = 0.7
+high = 1.3
+
+[net]
+bandwidth_gbps = 10.0
+latency_us = 25.0
+"#;
+
+#[test]
+fn toml_file_to_run_end_to_end() {
+    let path = temp_file("full.toml", FULL_TOML);
+    let cfg = ExperimentConfig::from_file(path.to_str().unwrap(), &[]).unwrap();
+    assert_eq!(cfg.name, "it_config");
+    assert_eq!(cfg.nodes, 4);
+    assert_eq!(cfg.sync.strategy, Strategy::Adaptive);
+    assert_eq!(cfg.workload.classes, 5);
+    assert_eq!(cfg.net.bandwidth_gbps, 10.0);
+
+    let r = Trainer::new(cfg).unwrap().run().unwrap();
+    assert!(r.final_train_loss.is_finite());
+    assert!(r.best_eval_acc > 0.3);
+}
+
+#[test]
+fn overrides_beat_file_values() {
+    let path = temp_file("ovr.toml", FULL_TOML);
+    let overrides = vec![
+        ("nodes".to_string(), "2".to_string()),
+        ("sync.strategy".to_string(), "\"cpsgd\"".to_string()),
+        ("sync.period".to_string(), "6".to_string()),
+        ("optim.lr0".to_string(), "0.1".to_string()),
+    ];
+    let cfg = ExperimentConfig::from_file(path.to_str().unwrap(), &overrides).unwrap();
+    assert_eq!(cfg.nodes, 2);
+    assert_eq!(cfg.sync.strategy, Strategy::Constant);
+    assert_eq!(cfg.sync.period, 6);
+    assert!((cfg.optim.lr0 - 0.1).abs() < 1e-6);
+    // untouched keys keep file values
+    assert_eq!(cfg.iters, 120);
+}
+
+#[test]
+fn bare_string_override_is_accepted() {
+    // CLI passes raw values; the loader must handle unquoted strings too
+    let path = temp_file("raw.toml", FULL_TOML);
+    let overrides = vec![("sync.strategy".to_string(), "full".to_string())];
+    let cfg = ExperimentConfig::from_file(path.to_str().unwrap(), &overrides).unwrap();
+    assert_eq!(cfg.sync.strategy, Strategy::Full);
+}
+
+#[test]
+fn invalid_override_rejected() {
+    let path = temp_file("bad.toml", FULL_TOML);
+    let overrides = vec![("nodes".to_string(), "0".to_string())];
+    assert!(ExperimentConfig::from_file(path.to_str().unwrap(), &overrides).is_err());
+}
+
+#[test]
+fn missing_file_errors_with_path() {
+    let err = ExperimentConfig::from_file("/nonexistent/xyz.toml", &[]).unwrap_err();
+    assert!(format!("{err:#}").contains("xyz.toml"));
+}
+
+#[test]
+fn cli_args_to_overrides_roundtrip() {
+    let argv: Vec<String> = ["run", "--config", "exp.toml", "--sync.period=9", "--net.latency_us", "50"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let args = Args::parse(argv, &[]).unwrap();
+    assert_eq!(args.subcommand.as_deref(), Some("run"));
+    let ov = args.config_overrides();
+    assert!(ov.contains(&("sync.period".into(), "9".into())));
+    assert!(ov.contains(&("net.latency_us".into(), "50".into())));
+    // non-dotted options are not config overrides
+    assert!(!ov.iter().any(|(k, _)| k == "config"));
+}
+
+#[test]
+fn default_config_runs_hlo_backend_spec() {
+    // Backend::Hlo with a missing artifacts dir must fail *at run setup*
+    // with an actionable message, not panic mid-training.
+    let mut cfg = ExperimentConfig::default();
+    cfg.nodes = 2;
+    cfg.iters = 4;
+    cfg.workload.backend = Backend::Hlo("mlp_small".into());
+    cfg.artifacts_dir = "/definitely/not/here".into();
+    let err = Trainer::new(cfg).unwrap().run().unwrap_err();
+    assert!(format!("{err:#}").contains("make artifacts"), "{err:#}");
+}
+
+#[test]
+fn shipped_config_presets_parse_and_validate() {
+    for preset in
+        ["cifar_adpsgd", "imagenet_warmup", "e2e_transformer", "throttled_10g"]
+    {
+        let path = format!("configs/{preset}.toml");
+        let cfg = ExperimentConfig::from_file(&path, &[]).unwrap_or_else(|e| {
+            panic!("{path}: {e:#}");
+        });
+        cfg.validate().unwrap();
+    }
+}
+
+#[test]
+fn preset_runs_shortened() {
+    // the CIFAR preset actually executes when shortened via overrides
+    let overrides = vec![
+        ("iters".to_string(), "60".to_string()),
+        ("nodes".to_string(), "2".to_string()),
+        ("eval_every".to_string(), "30".to_string()),
+        ("optim.boundaries".to_string(), "[30, 45]".to_string()),
+        ("sync.warmup_iters".to_string(), "4".to_string()),
+    ];
+    let cfg = ExperimentConfig::from_file("configs/cifar_adpsgd.toml", &overrides).unwrap();
+    let r = Trainer::new(cfg).unwrap().run().unwrap();
+    assert!(r.final_train_loss.is_finite());
+}
+
+#[test]
+fn schedule_variants_validate() {
+    for schedule in [
+        LrSchedule::Const,
+        LrSchedule::StepDecay { boundaries: vec![10], factor: 0.5 },
+        LrSchedule::Warmup { warmup_iters: 5, warmup_factor: 4.0, boundaries: vec![20], factor: 0.1 },
+    ] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.nodes = 2;
+        cfg.iters = 30;
+        cfg.batch_per_node = 8;
+        cfg.workload.input_dim = 16;
+        cfg.workload.hidden = 8;
+        cfg.optim.schedule = schedule;
+        cfg.eval_every = 0;
+        let r = Trainer::new(cfg).unwrap().run().unwrap();
+        assert!(r.final_train_loss.is_finite());
+    }
+}

@@ -1,0 +1,211 @@
+//! Integration tests over the native (pure-rust) training path: the full
+//! coordinator — worker threads, collectives, period control, ledger —
+//! on every strategy, asserting the paper's qualitative claims at quick
+//! scale.
+
+use adpsgd::config::{Backend, ExperimentConfig, LrSchedule};
+use adpsgd::coordinator::Trainer;
+use adpsgd::netsim::{CommKind, NetModel};
+use adpsgd::period::Strategy;
+
+fn base(iters: usize, nodes: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.nodes = nodes;
+    cfg.iters = iters;
+    cfg.batch_per_node = 16;
+    cfg.eval_every = iters / 4;
+    cfg.workload.backend = Backend::Native("mlp".into());
+    cfg.workload.input_dim = 48;
+    cfg.workload.hidden = 24;
+    cfg.workload.eval_batches = 6;
+    cfg.optim.lr0 = 0.1;
+    cfg.optim.schedule =
+        LrSchedule::StepDecay { boundaries: vec![iters / 2, 3 * iters / 4], factor: 0.1 };
+    cfg.sync.warmup_iters = iters / 50;
+    cfg.sync.p_init = 3;
+    cfg
+}
+
+fn run(cfg: ExperimentConfig) -> adpsgd::coordinator::RunReport {
+    Trainer::new(cfg).unwrap().run().unwrap()
+}
+
+#[test]
+fn all_strategies_learn_the_task() {
+    for strategy in [
+        Strategy::Full,
+        Strategy::Constant,
+        Strategy::Adaptive,
+        Strategy::Decreasing,
+        Strategy::Qsgd,
+    ] {
+        let mut cfg = base(300, 4);
+        cfg.sync.strategy = strategy;
+        let r = run(cfg);
+        assert!(
+            r.best_eval_acc > 0.6,
+            "{strategy}: acc {} loss {}",
+            r.best_eval_acc,
+            r.final_train_loss
+        );
+        assert!(r.final_train_loss < 1.5, "{strategy}: loss {}", r.final_train_loss);
+    }
+}
+
+#[test]
+fn adpsgd_budget_beats_cpsgd_variance() {
+    // the paper's core claim at matched-or-less communication
+    let mut acfg = base(600, 8);
+    acfg.variance_every = 5;
+    acfg.sync.strategy = Strategy::Adaptive;
+    let adp = run(acfg);
+
+    let mut ccfg = base(600, 8);
+    ccfg.variance_every = 5;
+    ccfg.sync.strategy = Strategy::Constant;
+    ccfg.sync.period = 8;
+    ccfg.sync.warmup_iters = 0;
+    let cps = run(ccfg);
+
+    let avar = adp.recorder.get("var").unwrap();
+    let cvar = cps.recorder.get("var").unwrap();
+    // weighted-average variance (9): ADPSGD should be smaller overall
+    let a_mean = avar.mean_y_in(0.0, 600.0).unwrap();
+    let c_mean = cvar.mean_y_in(0.0, 600.0).unwrap();
+    assert!(a_mean < c_mean, "ADPSGD mean var {a_mean:.3e} vs CPSGD {c_mean:.3e}");
+}
+
+#[test]
+fn qsgd_quarter_bytes_of_fullsgd() {
+    let mut fcfg = base(200, 4);
+    fcfg.sync.strategy = Strategy::Full;
+    let full = run(fcfg);
+    let mut qcfg = base(200, 4);
+    qcfg.sync.strategy = Strategy::Qsgd;
+    let qsgd = run(qcfg);
+    let ratio =
+        full.ledger.total_wire_bytes() as f64 / qsgd.ledger.total_wire_bytes() as f64;
+    // paper: 8-bit QSGD = 1/4 the data — allgather vs allreduce wire
+    // accounting makes the realized ratio ~2-4x depending on n
+    assert!(ratio > 1.5, "full/qsgd byte ratio {ratio}");
+}
+
+#[test]
+fn warmup_epoch_syncs_every_iteration() {
+    let mut cfg = base(120, 4);
+    cfg.sync.strategy = Strategy::Adaptive;
+    cfg.sync.warmup_iters = 30;
+    let r = run(cfg);
+    let syncs = r.recorder.get("sync_at").unwrap();
+    let in_warmup = syncs.points.iter().filter(|p| p.0 < 30.0).count();
+    assert_eq!(in_warmup, 30, "warmup must sync at every iteration");
+}
+
+#[test]
+fn ledger_consistency_across_strategies() {
+    for (strategy, kind) in [
+        (Strategy::Full, CommKind::GradAllreduce),
+        (Strategy::Constant, CommKind::ParamAvg),
+        (Strategy::Adaptive, CommKind::ParamAvg),
+        (Strategy::Qsgd, CommKind::QuantAllgather),
+    ] {
+        let mut cfg = base(150, 4);
+        cfg.sync.strategy = strategy;
+        let r = run(cfg);
+        assert_eq!(r.ledger.count(kind), r.syncs, "{strategy}: ledger/sync mismatch");
+        assert!(r.ledger.bytes(kind) > 0);
+        assert!(r.ledger.secs(kind) > 0.0);
+        // re-pricing under a slower net increases modeled time
+        let fast = NetModel::infiniband_100g();
+        let slow = NetModel::ethernet_10g();
+        assert!(r.ledger.modeled_secs(&slow) > r.ledger.modeled_secs(&fast), "{strategy}");
+    }
+}
+
+#[test]
+fn variance_instrumentation_not_charged() {
+    // same run with and without variance probes must have identical
+    // communication ledgers (probes are measurement, not algorithm)
+    let mut c1 = base(150, 4);
+    c1.sync.strategy = Strategy::Constant;
+    c1.variance_every = 0;
+    let r1 = run(c1);
+    let mut c2 = base(150, 4);
+    c2.sync.strategy = Strategy::Constant;
+    c2.variance_every = 5;
+    let r2 = run(c2);
+    assert_eq!(r1.ledger.total_wire_bytes(), r2.ledger.total_wire_bytes());
+    assert_eq!(r1.syncs, r2.syncs);
+}
+
+#[test]
+fn node_counts_scale() {
+    for nodes in [1usize, 2, 3, 7, 16] {
+        let mut cfg = base(80, nodes);
+        cfg.sync.strategy = Strategy::Adaptive;
+        let r = run(cfg);
+        assert!(r.final_train_loss.is_finite(), "n={nodes}");
+        assert_eq!(r.nodes, nodes);
+    }
+}
+
+#[test]
+fn momentum_is_node_local() {
+    // With per-node momentum (as the paper specifies), CPSGD p=1 differs
+    // from FULLSGD: p=1 averages *parameters after* local momentum
+    // steps, FULLSGD averages *gradients before* the momentum step.
+    // They must both converge but produce different trajectories.
+    let mut c1 = base(100, 4);
+    c1.sync.strategy = Strategy::Constant;
+    c1.sync.period = 1;
+    c1.sync.warmup_iters = 0;
+    let r1 = run(c1);
+    let mut c2 = base(100, 4);
+    c2.sync.strategy = Strategy::Full;
+    let r2 = run(c2);
+    assert!(r1.final_train_loss.is_finite() && r2.final_train_loss.is_finite());
+    assert_ne!(
+        r1.final_train_loss, r2.final_train_loss,
+        "param-avg p=1 and grad-avg are different algorithms under momentum"
+    );
+}
+
+#[test]
+fn decreasing_matches_cpsgd8_budget_exactly() {
+    // paper §V-B: 20-then-5 with switch at half == p=8 budget
+    let mut dcfg = base(400, 4);
+    dcfg.sync.strategy = Strategy::Decreasing;
+    dcfg.sync.dec_first = 20;
+    dcfg.sync.dec_second = 5;
+    dcfg.sync.warmup_iters = 0;
+    let d = run(dcfg);
+    let mut ccfg = base(400, 4);
+    ccfg.sync.strategy = Strategy::Constant;
+    ccfg.sync.period = 8;
+    ccfg.sync.warmup_iters = 0;
+    let c = run(ccfg);
+    assert_eq!(d.syncs, c.syncs, "400/20*? + 200/5 == 400/8");
+}
+
+#[test]
+fn eval_accuracy_is_probability() {
+    let mut cfg = base(100, 2);
+    cfg.sync.strategy = Strategy::Adaptive;
+    let r = run(cfg);
+    let acc = r.recorder.get("eval_acc").unwrap();
+    for (_, a) in &acc.points {
+        assert!((0.0..=1.0).contains(a), "acc {a} out of range");
+    }
+}
+
+#[test]
+fn lr_schedule_recorded_matches_config() {
+    let mut cfg = base(200, 2);
+    cfg.sync.strategy = Strategy::Constant;
+    let r = run(cfg);
+    let lr = r.recorder.get("lr").unwrap();
+    let first = lr.points.first().unwrap().1;
+    let last = lr.last_y().unwrap();
+    assert!((first - 0.1).abs() < 1e-6);
+    assert!((last - 0.001).abs() < 1e-6, "after two 0.1x decays: {last}");
+}

@@ -1,0 +1,172 @@
+//! Integration tests over the HLO/PJRT product path: the coordinator
+//! training real AOT artifacts (built by `make artifacts`) end to end,
+//! plus runtime/native cross-checks.  All tests skip with a notice if
+//! the artifacts directory is missing so `cargo test` works on a fresh
+//! checkout before the python build step.
+
+use adpsgd::config::{Backend, ExperimentConfig, LrSchedule};
+use adpsgd::coordinator::Trainer;
+use adpsgd::data::{CharCorpus, DatasetHandle, NodeSource, SynthClass};
+use adpsgd::period::Strategy;
+use adpsgd::runtime::{EngineFns, HloEngine, Manifest};
+use std::sync::Arc;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            None
+        }
+    }
+}
+
+fn hlo_cfg(model: &str, strategy: Strategy, iters: usize, nodes: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = format!("it_{model}_{strategy}");
+    cfg.nodes = nodes;
+    cfg.iters = iters;
+    cfg.eval_every = iters / 2;
+    cfg.workload.backend = Backend::Hlo(model.into());
+    cfg.workload.eval_batches = 2;
+    cfg.optim.lr0 = 0.05;
+    cfg.optim.schedule = LrSchedule::Const;
+    cfg.sync.strategy = strategy;
+    cfg.sync.period = 4;
+    cfg.sync.p_init = 2;
+    cfg.sync.warmup_iters = 4;
+    cfg.sync.ks_frac = 0.2;
+    cfg
+}
+
+#[test]
+fn manifest_lists_models_with_required_fns() {
+    let Some(man) = manifest() else { return };
+    assert!(man.models.len() >= 3, "expected several model presets");
+    for (name, spec) in &man.models {
+        assert!(spec.param_count > 0, "{name}");
+        assert!(spec.batch > 0, "{name}");
+        for f in ["init", "step", "grad", "apply", "eval", "sq_dev"] {
+            assert!(spec.files.contains_key(f), "{name} missing {f} artifact");
+        }
+    }
+}
+
+#[test]
+fn hlo_engine_roundtrip_small_model() {
+    let Some(man) = manifest() else { return };
+    let engine = HloEngine::load(&man, "mlp_small", EngineFns::all()).unwrap();
+    let spec = man.get("mlp_small").unwrap();
+    let n = engine.n_params();
+    assert_eq!(n, spec.param_count);
+
+    let dim = *spec.x_shape.last().unwrap();
+    let ds = DatasetHandle::Class(Arc::new(SynthClass::new(7, dim, spec.classes, 0.6, 0.0)));
+    let mut src = NodeSource::new(ds, 7, 0, spec.batch, 0);
+    let batch = src.next_batch();
+
+    let mut w = engine.init(3).unwrap();
+    assert!(w.iter().all(|v| v.is_finite()));
+    let mut m = vec![0.0f32; n];
+
+    // step decreases loss over repeated batches
+    let mut losses = Vec::new();
+    for _ in 0..30 {
+        let b = src.next_batch();
+        losses.push(engine.step(&mut w, &mut m, &b, 0.05).unwrap());
+    }
+    let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let tail: f32 = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(tail < head, "loss should fall: {head} -> {tail}");
+
+    // grad+apply equals step (same batch, same state) — the two HLO
+    // entry points must implement the same update rule
+    let mut w1 = engine.init(3).unwrap();
+    let mut m1 = vec![0.0f32; n];
+    let l1 = engine.step(&mut w1, &mut m1, &batch, 0.05).unwrap();
+    let mut w2 = engine.init(3).unwrap();
+    let mut m2 = vec![0.0f32; n];
+    let mut g = vec![0.0f32; n];
+    let l2 = engine.grad(&w2, &batch, &mut g).unwrap();
+    engine.apply(&mut w2, &mut m2, &g, 0.05).unwrap();
+    assert!((l1 - l2).abs() < 1e-5, "losses {l1} vs {l2}");
+    let dmax = adpsgd::tensor::max_abs_diff(&w1, &w2);
+    assert!(dmax < 1e-5, "step vs grad+apply diverged: {dmax}");
+
+    // sq_dev kernel agrees with the rust hot path
+    let hlo = engine.sq_dev(&w1, &w).unwrap();
+    let native = adpsgd::tensor::sq_deviation(&w1, &w);
+    assert!((hlo - native).abs() <= 1e-4 * (1.0 + native.abs()), "{hlo} vs {native}");
+}
+
+#[test]
+fn hlo_eval_accuracy_in_range() {
+    let Some(man) = manifest() else { return };
+    let engine = HloEngine::load(&man, "mlp_small", EngineFns::all()).unwrap();
+    let spec = man.get("mlp_small").unwrap();
+    let dim = *spec.x_shape.last().unwrap();
+    let ds = DatasetHandle::Class(Arc::new(SynthClass::new(9, dim, spec.classes, 0.6, 0.0)));
+    let mut src = NodeSource::new(ds, 9, 0, spec.batch, 0);
+    let w = engine.init(1).unwrap();
+    let (loss, acc) = engine.eval(&w, &src.next_batch()).unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn coordinator_trains_hlo_mlp_with_adpsgd() {
+    let Some(_man) = manifest() else { return };
+    let cfg = hlo_cfg("mlp_small", Strategy::Adaptive, 40, 2);
+    let r = Trainer::new(cfg).unwrap().run().unwrap();
+    assert!(r.final_train_loss.is_finite());
+    assert!(r.syncs > 0);
+    let loss = r.recorder.get("train_loss").unwrap();
+    let first = loss.points.first().unwrap().1;
+    let last = loss.last_y().unwrap();
+    assert!(last < first, "HLO ADPSGD loss should fall: {first} -> {last}");
+}
+
+#[test]
+fn coordinator_trains_hlo_transformer_lm() {
+    let Some(man) = manifest() else { return };
+    if man.get("txf_tiny").is_err() {
+        eprintln!("skipping: txf_tiny not in manifest");
+        return;
+    }
+    let cfg = hlo_cfg("txf_tiny", Strategy::Adaptive, 30, 2);
+    let r = Trainer::new(cfg).unwrap().run().unwrap();
+    let loss = r.recorder.get("train_loss").unwrap();
+    let first = loss.points.first().unwrap().1;
+    let last = loss.last_y().unwrap();
+    assert!(last < first, "LM loss should fall: {first} -> {last}");
+}
+
+#[test]
+fn hlo_fullsgd_matches_qsgd_shape() {
+    let Some(_man) = manifest() else { return };
+    for strategy in [Strategy::Full, Strategy::Qsgd] {
+        let cfg = hlo_cfg("mlp_small", strategy, 20, 2);
+        let r = Trainer::new(cfg).unwrap().run().unwrap();
+        assert!(r.final_train_loss.is_finite(), "{strategy}");
+        assert_eq!(r.syncs, 20, "{strategy} syncs every iteration");
+    }
+}
+
+#[test]
+fn char_corpus_batches_are_valid_lm_batches() {
+    let corpus = CharCorpus::generate(5, 4096);
+    let ds = DatasetHandle::Text(Arc::new(corpus));
+    let mut src = NodeSource::new(ds, 5, 1, 4, 16);
+    for _ in 0..10 {
+        let b = src.next_batch();
+        match b {
+            adpsgd::data::Batch::Lm { x, y, batch, seq } => {
+                assert_eq!(x.len(), batch * seq);
+                assert_eq!(y.len(), batch * seq);
+                assert!(x.iter().all(|&t| t >= 0));
+                assert!(y.iter().all(|&t| t >= 0));
+            }
+            _ => panic!("expected LM batch"),
+        }
+    }
+}

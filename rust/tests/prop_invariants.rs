@@ -1,0 +1,261 @@
+//! Property-based tests on coordinator invariants (routing of sync
+//! decisions, batching geometry, state management) plus the numeric
+//! substrates, via the `util::prop` micro-framework.
+
+use adpsgd::period::{Adaptive, Constant, Decreasing, PeriodController};
+use adpsgd::quant::{decode, encode, QsgdConfig};
+use adpsgd::util::prop::{forall, Gen};
+use adpsgd::util::rng::Rng;
+use adpsgd::{netsim, tensor};
+
+// ------------------------------------------------------------ period control
+
+#[test]
+fn prop_constant_controller_exact_budget() {
+    forall("constant-budget", 64, |g: &mut Gen| {
+        let p = g.usize_in(1..20);
+        let iters = g.usize_in(1..2000);
+        let mut c = Constant::new(p);
+        let syncs = (0..iters).filter(|&k| c.should_sync(k)).count();
+        assert_eq!(syncs, iters / p, "p={p} iters={iters}");
+    });
+}
+
+#[test]
+fn prop_gap_between_syncs_equals_current_period() {
+    // the controller contract: after on_sync sets period p, the next
+    // sync happens exactly p local steps later (Algorithm 2's counter)
+    forall("adaptive-gap", 48, |g: &mut Gen| {
+        let p_init = g.usize_in(1..6);
+        let k_s = g.usize_in(0..50);
+        let mut a = Adaptive::new(p_init, 0, k_s, 0.7, 1.3);
+        let mut last_sync: Option<usize> = None;
+        let lr = 0.1f32;
+        for k in 0..600 {
+            let p_before = a.current_period();
+            if a.should_sync(k) {
+                if let Some(prev) = last_sync {
+                    assert_eq!(k - prev, p_before, "gap != period at k={k}");
+                }
+                last_sync = Some(k);
+                // random feedback drives the period up and down
+                let s_k = g.f32_in(0.0, 0.3) as f64;
+                a.on_sync(k, s_k, lr);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_adaptive_period_stays_positive_and_bounded() {
+    forall("adaptive-bounds", 48, |g: &mut Gen| {
+        let mut a = Adaptive::new(g.usize_in(1..8), g.usize_in(0..10), g.usize_in(0..40), 0.7, 1.3);
+        let mut syncs = 0usize;
+        for k in 0..2000 {
+            if a.should_sync(k) {
+                syncs += 1;
+                a.on_sync(k, g.f32_in(0.0, 1.0) as f64, g.f32_in(1e-4, 1.0));
+            }
+            let p = a.current_period();
+            assert!(p >= 1, "period must stay >= 1");
+            assert!(p <= 2 + syncs + a.p_init, "period can grow at most 1 per sync: {p}");
+        }
+        assert!(syncs >= 1);
+    });
+}
+
+#[test]
+fn prop_decreasing_budget_formula() {
+    forall("decreasing-budget", 48, |g: &mut Gen| {
+        let first = g.usize_in(1..30);
+        let second = g.usize_in(1..30);
+        let iters = 2 * g.usize_in(10..500);
+        let switch = iters / 2;
+        let mut d = Decreasing::new(first, second, switch);
+        let syncs = (0..iters).filter(|&k| d.should_sync(k)).count();
+        // counter resets only on sync; bound the drift to one period
+        let expect = switch / first + (iters - switch) / second;
+        let diff = (syncs as i64 - expect as i64).abs();
+        assert!(diff <= 1, "first={first} second={second} iters={iters}: {syncs} vs {expect}");
+    });
+}
+
+// ------------------------------------------------------------------- tensor
+
+#[test]
+fn prop_sq_deviation_symmetric_nonneg() {
+    forall("sq-dev-sym", 64, |g: &mut Gen| {
+        let a = g.vec_normal(1..4096, 2.0);
+        let b: Vec<f32> = a.iter().map(|x| x + g.f32_in(-1.0, 1.0)).collect();
+        let d1 = tensor::sq_deviation(&a, &b);
+        let d2 = tensor::sq_deviation(&b, &a);
+        assert!(d1 >= 0.0);
+        assert!((d1 - d2).abs() <= 1e-9 * (1.0 + d1), "{d1} vs {d2}");
+        assert_eq!(tensor::sq_deviation(&a, &a), 0.0);
+    });
+}
+
+#[test]
+fn prop_momentum_update_linear_in_lr() {
+    // with zero momentum state, the update is -lr * g exactly
+    forall("momentum-linear", 64, |g: &mut Gen| {
+        let w0 = g.vec_normal(1..1024, 1.0);
+        let grad: Vec<f32> = w0.iter().map(|_| g.f32_in(-1.0, 1.0)).collect();
+        let lr = g.f32_in(1e-4, 0.5);
+        let mut w = w0.clone();
+        let mut m = vec![0.0f32; w.len()];
+        tensor::momentum_update(&mut w, &mut m, &grad, lr, 0.9);
+        for i in 0..w.len() {
+            let expect = w0[i] - lr * grad[i];
+            assert!((w[i] - expect).abs() <= 1e-5 * (1.0 + expect.abs()));
+            assert_eq!(m[i], grad[i], "velocity after first step is g");
+        }
+    });
+}
+
+#[test]
+fn prop_param_variance_zero_iff_identical() {
+    forall("variance-zero", 48, |g: &mut Gen| {
+        let n = g.usize_in(1..512);
+        let rows_n = g.usize_in(1..8);
+        let base = g.vec_normal(n..n + 1, 1.0);
+        let rows_data: Vec<Vec<f32>> = (0..rows_n).map(|_| base.clone()).collect();
+        let rows: Vec<&[f32]> = rows_data.iter().map(|v| v.as_slice()).collect();
+        let mut scratch = vec![0.0f32; n];
+        // mean-of-identical-rows rounds in f32, so allow rounding dust
+        let var = tensor::param_variance(&rows, &mut scratch);
+        let scale = tensor::sq_norm(&base).max(1.0);
+        assert!(var <= 1e-12 * scale, "var {var} for identical rows (scale {scale})");
+    });
+}
+
+// --------------------------------------------------------------------- quant
+
+#[test]
+fn prop_qsgd_roundtrip_error_bound() {
+    // QSGD guarantee: |x_i - Q(x_i)| <= norm_bucket / levels
+    forall("qsgd-error", 48, |g: &mut Gen| {
+        let sigma = g.f32_in(0.01, 10.0);
+        let x = g.vec_normal(1..4096, sigma);
+        let cfg =
+            QsgdConfig { levels: [15, 63, 255][g.usize_in(0..3)], bucket: 1 << g.usize_in(4..11) };
+        let mut rng = Rng::new(g.seed, 99);
+        let enc = encode(&x, &cfg, &mut rng);
+        let mut out = vec![0.0f32; x.len()];
+        decode(&enc, &mut out);
+        for (bi, chunk) in x.chunks(cfg.bucket).enumerate() {
+            let norm = enc.norms[bi];
+            let tol = norm / cfg.levels as f32 + 1e-6;
+            for (j, &xi) in chunk.iter().enumerate() {
+                let yi = out[bi * cfg.bucket + j];
+                assert!(
+                    (xi - yi).abs() <= tol * 1.001,
+                    "bucket {bi} elem {j}: |{xi} - {yi}| > {tol}"
+                );
+                assert_eq!(xi.signum() * yi.signum() >= 0.0, true, "sign flip");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_qsgd_unbiased_in_expectation() {
+    // stochastic rounding: the mean decode over many seeds approaches x
+    forall("qsgd-unbiased", 8, |g: &mut Gen| {
+        let n = 256;
+        let x = g.vec_normal(n..n + 1, 1.0);
+        let cfg = QsgdConfig { levels: 7, bucket: 64 };
+        let mut acc = vec![0.0f64; n];
+        let trials = 400;
+        for t in 0..trials {
+            let mut rng = Rng::new(g.seed.wrapping_add(t), 5);
+            let enc = encode(&x, &cfg, &mut rng);
+            let mut out = vec![0.0f32; n];
+            decode(&enc, &mut out);
+            for i in 0..n {
+                acc[i] += out[i] as f64;
+            }
+        }
+        let norm = (x.iter().map(|v| (*v as f64).powi(2)).sum::<f64>()).sqrt();
+        let mut worst = 0.0f64;
+        for i in 0..n {
+            let mean = acc[i] / trials as f64;
+            worst = worst.max((mean - x[i] as f64).abs());
+        }
+        // per-bucket norm ~ sqrt(64); step = norm/7; MC error ~ step/sqrt(trials)*3
+        let step = norm / 2.0 / 7.0; // rough per-bucket scale
+        assert!(worst < step * 0.35, "bias {worst} vs step {step}");
+    });
+}
+
+#[test]
+fn prop_wire_bytes_shrink_with_levels() {
+    forall("qsgd-wire", 32, |g: &mut Gen| {
+        let x = g.vec_normal(64..4096, 1.0);
+        let mut rng = Rng::new(g.seed, 1);
+        let c8 = encode(&x, &QsgdConfig { levels: 255, bucket: 512 }, &mut rng);
+        // 8-bit QSGD wire size ~ n bytes + overhead < 4n (f32)
+        assert!(c8.wire_bytes() < (x.len() * 4) as u64 / 2, "{}", c8.wire_bytes());
+    });
+}
+
+// -------------------------------------------------------------------- netsim
+
+#[test]
+fn prop_netmodel_monotonicity() {
+    forall("netsim-monotone", 64, |g: &mut Gen| {
+        let net = netsim::NetModel { bw: g.f32_in(1e8, 1e11) as f64, alpha: g.f32_in(1e-7, 1e-4) as f64 };
+        let n = g.usize_in(2..64);
+        let b = g.usize_in(1..1 << 24) as u64;
+        // time grows with payload
+        assert!(net.allreduce_time(n, 2 * b) > net.allreduce_time(n, b));
+        // time grows with node count (latency term)
+        assert!(net.allreduce_time(n + 1, b) > net.allreduce_time(n, b) - 1e-12);
+        // wire bytes below 2x payload (ring optimality)
+        assert!(net.allreduce_wire_bytes(n, b) <= 2 * b);
+        // PS exchange independent of n
+        assert_eq!(net.ps_exchange_time(n, b), net.ps_exchange_time(n + 5, b));
+    });
+}
+
+// ----------------------------------------------------------------- collective
+
+#[test]
+fn prop_allreduce_mean_matches_serial() {
+    use adpsgd::collective::Comm;
+    use std::sync::Arc;
+    forall("allreduce-serial", 12, |g: &mut Gen| {
+        let n = g.usize_in(2..7);
+        let len = g.usize_in(1..2048);
+        let inputs: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal(len..len + 1, 1.0)).collect();
+        // serial reference in the same rank order (and with the same
+        // multiply-by-reciprocal rounding) the collective uses
+        let inv = 1.0f32 / n as f32;
+        let mut expect = vec![0.0f32; len];
+        for i in 0..len {
+            let mut acc = inputs[0][i];
+            for r in 1..n {
+                acc += inputs[r][i];
+            }
+            expect[i] = acc * inv;
+        }
+        let comm = Arc::new(Comm::new(n, len));
+        let results: Vec<std::sync::Mutex<Vec<f32>>> =
+            (0..n).map(|_| std::sync::Mutex::new(vec![])).collect();
+        std::thread::scope(|scope| {
+            for (rank, input) in inputs.iter().enumerate() {
+                let comm = Arc::clone(&comm);
+                let slot = &results[rank];
+                scope.spawn(move || {
+                    let mut buf = input.clone();
+                    comm.allreduce_mean(rank, &mut buf);
+                    *slot.lock().unwrap() = buf;
+                });
+            }
+        });
+        for r in 0..n {
+            let got = results[r].lock().unwrap();
+            assert_eq!(&*got, &expect, "rank {r} disagrees with serial reference");
+        }
+    });
+}
