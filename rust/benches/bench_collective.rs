@@ -1,27 +1,33 @@
-//! Collective benchmarks: the in-process ring allreduce that implements
-//! the paper's parameter averaging, across node counts and payload sizes
-//! (paper geometry: 16 nodes, 6.8M-138M f32 parameters).
+//! Collective benchmarks: flat (leader-serialized) vs ring
+//! (chunked-parallel) allreduce across node counts and payload sizes
+//! (paper geometry: 16 nodes, 6.8M–138M f32 parameters).
+//!
+//! Emits a machine-readable JSON summary line (`BENCH_COLLECTIVE_JSON
+//! {...}`) so the bench trajectory can be tracked across commits.  The
+//! headline number is the measured ring-over-flat speedup: at large
+//! `n_params` and node counts ring's per-rank chunk reduction
+//! parallelizes the work flat serializes on the leader.
 
-use adpsgd::collective::Comm;
+use adpsgd::collective::{build, Algo, Collective};
 use adpsgd::util::bench::Runner;
+use adpsgd::util::json::Json;
 use adpsgd::util::rng::Rng;
 use std::sync::Arc;
 
 /// Run `rounds` allreduces over `n` worker threads, timing rank 0's view.
-fn allreduce_secs(n: usize, len: usize, rounds: usize) -> f64 {
-    let comm = Arc::new(Comm::new(n, len));
+fn allreduce_secs(comm: &Arc<dyn Collective>, n: usize, len: usize, rounds: usize) -> f64 {
     let elapsed = Arc::new(std::sync::Mutex::new(0.0f64));
     std::thread::scope(|scope| {
         for rank in 0..n {
-            let comm = Arc::clone(&comm);
+            let comm = Arc::clone(comm);
             let elapsed = Arc::clone(&elapsed);
             scope.spawn(move || {
                 let mut buf = vec![0.0f32; len];
                 Rng::new(rank as u64, 7).fill_normal(&mut buf, 1.0);
-                comm.barrier();
+                let _ = comm.barrier();
                 let t = std::time::Instant::now();
                 for _ in 0..rounds {
-                    comm.allreduce_mean(rank, &mut buf);
+                    let _ = comm.allreduce_mean(rank, &mut buf);
                 }
                 if rank == 0 {
                     *elapsed.lock().unwrap() = t.elapsed().as_secs_f64();
@@ -35,20 +41,45 @@ fn allreduce_secs(n: usize, len: usize, rounds: usize) -> f64 {
 
 fn main() {
     let fast = std::env::var("ADPSGD_BENCH_FAST").is_ok();
-    let rounds = if fast { 3 } else { 20 };
-    println!("\n== bench group: collective (custom timing; {rounds} rounds each) ==");
+    println!("\n== bench group: collective (custom timing; flat vs ring) ==");
 
-    for &n in &[2usize, 4, 8, 16] {
-        for &len in &[64 * 1024usize, 1 << 20, 6_800_000] {
-            let secs = allreduce_secs(n, len, rounds);
-            let per = secs / rounds as f64;
-            let gbps = (len * 4 * n) as f64 / per / 1e9;
+    let mut rows = Vec::new();
+    for &n in &[2usize, 8, 16] {
+        for &len in &[10_000usize, 1_000_000, 10_000_000] {
+            if fast && len > 1_000_000 {
+                continue; // CI smoke: skip the ~GB allocations
+            }
+            let rounds = match (fast, len) {
+                (true, _) => 2,
+                (false, 10_000_000) => 3,
+                (false, _) => 10,
+            };
+            let mut per = std::collections::BTreeMap::new();
+            for algo in [Algo::Flat, Algo::Ring] {
+                let comm = build(algo, n, len);
+                let secs = allreduce_secs(&comm, n, len, rounds) / rounds as f64;
+                per.insert(algo.to_string(), secs);
+            }
+            let flat = per["flat"];
+            let ring = per["ring"];
+            let speedup = flat / ring;
+            let gbps = (len * 4 * n) as f64 / ring / 1e9;
             println!(
-                "collective/allreduce_mean/n{n}/{:>4}k   {:>9.3} ms/op   {:>7.2} GB/s aggregate",
-                len >> 10,
-                per * 1e3,
+                "collective/allreduce_mean/n{n:<2}/{:>8} params   flat {:>9.3} ms   ring {:>9.3} ms   ring speedup {:>5.2}x   {:>7.2} GB/s agg",
+                len,
+                flat * 1e3,
+                ring * 1e3,
+                speedup,
                 gbps
             );
+            rows.push(Json::obj(vec![
+                ("nodes", Json::num(n as f64)),
+                ("n_params", Json::num(len as f64)),
+                ("flat_secs_per_op", Json::num(flat)),
+                ("ring_secs_per_op", Json::num(ring)),
+                ("ring_speedup", Json::num(speedup)),
+                ("agg_gbps_ring", Json::num(gbps)),
+            ]));
         }
     }
 
@@ -57,17 +88,17 @@ fn main() {
     // barrier, so this uses the same scheme as the vector benches)
     let srounds = if fast { 200 } else { 5_000 };
     for &n in &[2usize, 8, 16] {
-        let comm = Arc::new(Comm::new(n, 1));
+        let comm = build(Algo::Ring, n, 1);
         let elapsed = Arc::new(std::sync::Mutex::new(0.0f64));
         std::thread::scope(|scope| {
             for rank in 0..n {
                 let comm = Arc::clone(&comm);
                 let elapsed = Arc::clone(&elapsed);
                 scope.spawn(move || {
-                    comm.barrier();
+                    let _ = comm.barrier();
                     let t = std::time::Instant::now();
                     for i in 0..srounds {
-                        comm.allreduce_scalar_sum(rank, (rank + i) as f64);
+                        let _ = comm.allreduce_scalar_sum(rank, (rank + i) as f64);
                     }
                     if rank == 0 {
                         *elapsed.lock().unwrap() = t.elapsed().as_secs_f64();
@@ -77,15 +108,27 @@ fn main() {
         });
         let per = *elapsed.lock().unwrap() / srounds as f64;
         println!("collective/scalar_allreduce/n{n:<2}          {:>9.3} µs/op", per * 1e6);
+        rows.push(Json::obj(vec![
+            ("nodes", Json::num(n as f64)),
+            ("n_params", Json::num(1.0)),
+            ("scalar_secs_per_op", Json::num(per)),
+        ]));
     }
 
     // single-rank fast path through the Runner harness (no barriers)
     let mut r = Runner::from_env("collective");
-    let solo = Comm::new(1, 1 << 20);
+    let solo = build(Algo::Ring, 1, 1 << 20);
     let mut buf = vec![1.0f32; 1 << 20];
     r.bench("allreduce_mean/n1-noop", move || {
-        solo.allreduce_mean(0, &mut buf);
+        let _ = solo.allreduce_mean(0, &mut buf);
         buf[0]
     });
     r.finish();
+
+    let summary = Json::obj(vec![
+        ("bench", Json::str("collective")),
+        ("fast", Json::Bool(fast)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    println!("BENCH_COLLECTIVE_JSON {}", summary.to_string_compact());
 }

@@ -5,9 +5,11 @@
 //! ```text
 //! cargo run --release --example quickstart
 //! cargo run --release --example quickstart -- --nodes 16 --iters 2000
+//! cargo run --release --example quickstart -- --collective flat
 //! ```
 
 use adpsgd::cli::Args;
+use adpsgd::collective::Algo;
 use adpsgd::config::{Backend, ExperimentConfig, LrSchedule, NetConfig};
 use adpsgd::metrics::Table;
 use adpsgd::netsim::NetModel;
@@ -19,6 +21,7 @@ fn main() -> Result<()> {
     let args = Args::parse_env(&["quick"])?; // --quick accepted (already quick)
     let nodes = args.get_usize("nodes", 8)?;
     let iters = args.get_usize("iters", if args.flag("quick") { 400 } else { 800 })?;
+    let collective: Algo = args.get_or("collective", "ring").parse()?;
 
     // 1. Describe the experiment. Everything is plain data — the same
     //    struct a TOML file or the `adpsgd run` launcher produces.
@@ -34,13 +37,15 @@ fn main() -> Result<()> {
     cfg.optim.schedule =
         LrSchedule::StepDecay { boundaries: vec![iters / 2, 3 * iters / 4], factor: 0.1 };
     cfg.sync.warmup_iters = iters / 100;
+    cfg.sync.collective = collective;
 
     println!(
-        "quickstart: {} nodes x {} iters, total batch {}, {} params\n",
+        "quickstart: {} nodes x {} iters, total batch {}, {} params, {} collective\n",
         nodes,
         iters,
         cfg.total_batch(),
-        "mlp(128-64-10)"
+        "mlp(128-64-10)",
+        collective
     );
 
     // 2. Run each strategy through the coordinator.

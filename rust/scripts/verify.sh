@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build + full test suite + one quickstart smoke run
+# under each collective algorithm.  Referenced from ROADMAP.md; CI and
+# pre-merge checks should run exactly this.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== verify: cargo build --release =="
+cargo build --release
+
+echo "== verify: cargo test -q =="
+cargo test -q
+
+for algo in flat ring; do
+    echo "== verify: quickstart smoke run (collective = ${algo}) =="
+    cargo run --release --example quickstart -- --quick --iters 200 --nodes 4 --collective "${algo}"
+done
+
+echo "== verify: OK =="

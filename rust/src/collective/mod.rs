@@ -1,31 +1,45 @@
-//! In-process collectives across worker threads.
+//! In-process collectives across worker threads, behind the pluggable
+//! [`Collective`] trait.
 //!
 //! The simulated cluster's "nodes" are OS threads in one address space,
-//! so collectives move real data between real threads — the shared-
-//! memory analogue of NCCL's ring allreduce:
+//! so collectives move real data between real threads.  Two algorithms
+//! implement the same contract:
 //!
-//! 1. **publish** — every rank copies its vector into its slot
-//! 2. **reduce-scatter** — rank r averages chunk r across all slots
-//!    (fixed rank order, so float summation is deterministic regardless
-//!    of thread scheduling)
-//! 3. **allgather** — every rank copies the full averaged vector back
+//! * [`FlatComm`] — the reference: after every rank publishes, the
+//!   leader (rank 0) reduces the **whole** buffer serially, then every
+//!   rank copies the result back.  Simple, and the baseline the
+//!   per-algorithm cost model prices as a serialized gather+broadcast.
+//! * [`RingComm`] — chunked reduce-scatter + all-gather, the
+//!   shared-memory analogue of NCCL's ring allreduce: rank `r` reduces
+//!   chunk `r`, so the reduction parallelizes across all ranks and the
+//!   measured `compute_secs`/`wall_secs` drop roughly by the node count
+//!   for large parameter vectors.
 //!
-//! Three barriers separate the phases; chunk writes in phase 2 are
-//! disjoint by construction, which is what makes the single shared
-//! result buffer sound (see `SharedVec`).
+//! Both reduce each element in **fixed rank order** (sum ranks 0..n,
+//! then multiply by 1/n), so the two algorithms produce bit-identical
+//! results and runs are deterministic regardless of thread scheduling —
+//! the property the coordinator's `deterministic_across_runs` test and
+//! the flat/ring equivalence property test pin down.
+//!
+//! Phases are separated by barriers; phase-2 chunk writes are disjoint
+//! by construction, which is what makes the single shared result buffer
+//! sound (see `SharedVec`).
 //!
 //! **Failure handling**: a worker that hits an error mid-run calls
-//! [`Comm::poison`]; every rank blocked in (or arriving at) a collective
-//! then returns [`CommError::Poisoned`] instead of deadlocking — the
+//! [`Collective::poison`]; every rank blocked in (or arriving at) a
+//! collective then returns [`Poisoned`] instead of deadlocking — the
 //! in-process analogue of NCCL's communicator abort.  The barrier is a
 //! custom Mutex+Condvar generation barrier because `std::sync::Barrier`
-//! cannot be interrupted.
+//! cannot be interrupted.  Poison semantics are identical across
+//! algorithms.
 //!
-//! Wall-clock *modeling* of the same exchange on a real network lives in
-//! [`crate::netsim`]; this module is the data plane.
+//! Wall-clock *modeling* of the same exchanges on a real network lives
+//! in [`crate::netsim`] (which prices flat and ring differently); this
+//! module is the data plane.  Selection is `cfg.sync.collective`
+//! ([`Algo`]), plumbed through [`build`].
 
 use std::cell::UnsafeCell;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// A collective failed because some rank aborted the communicator.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -38,6 +52,81 @@ impl std::fmt::Display for Poisoned {
 }
 
 impl std::error::Error for Poisoned {}
+
+/// Which allreduce algorithm a communicator (and the cost model) uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Algo {
+    /// Leader-serialized reduce + broadcast ([`FlatComm`]).
+    Flat,
+    /// Chunked reduce-scatter + all-gather ([`RingComm`]).
+    #[default]
+    Ring,
+}
+
+impl std::str::FromStr for Algo {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s {
+            "flat" => Algo::Flat,
+            "ring" => Algo::Ring,
+            other => anyhow::bail!("unknown collective {other:?} (flat|ring)"),
+        })
+    }
+}
+
+impl std::fmt::Display for Algo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Algo::Flat => "flat",
+            Algo::Ring => "ring",
+        })
+    }
+}
+
+/// The collective contract every communicator implements.  All methods
+/// are callable concurrently from `n` rank threads; every rank must
+/// participate in every collective call (BSP).
+pub trait Collective: Send + Sync {
+    fn n_ranks(&self) -> usize;
+
+    /// Which algorithm this communicator runs (for the cost model).
+    fn algo(&self) -> Algo;
+
+    /// Abort the communicator: every rank blocked in (or arriving at) a
+    /// collective returns `Err(Poisoned)`.  Idempotent and sticky.
+    fn poison(&self);
+
+    fn is_poisoned(&self) -> bool;
+
+    /// Block until all ranks arrive (or the communicator is poisoned).
+    fn barrier(&self) -> Result<(), Poisoned>;
+
+    /// Average `buf` elementwise across all ranks (every rank must call
+    /// with an equal-length buffer; all receive the mean).
+    ///
+    /// Deterministic: the reduction order per element is rank order, so
+    /// results are bit-identical across runs, thread schedules, and
+    /// algorithms.
+    fn allreduce_mean(&self, rank: usize, buf: &mut [f32]) -> Result<(), Poisoned>;
+
+    /// Sum a scalar across ranks (used for the S_k statistic and loss
+    /// aggregation).  Deterministic (rank-ordered sum).
+    fn allreduce_scalar_sum(&self, rank: usize, v: f64) -> Result<f64, Poisoned>;
+
+    /// Rank 0's value wins; everyone receives it (parameter broadcast at
+    /// init so all nodes start from the same w₀, as the paper requires).
+    fn broadcast(&self, rank: usize, buf: &mut [f32]) -> Result<(), Poisoned>;
+}
+
+/// Build the communicator selected by `algo`.
+pub fn build(algo: Algo, n: usize, len: usize) -> Arc<dyn Collective> {
+    match algo {
+        Algo::Flat => Arc::new(FlatComm::new(n, len)),
+        Algo::Ring => Arc::new(RingComm::new(n, len)),
+    }
+}
+
+// ------------------------------------------------------------ substrate
 
 /// Interruptible generation barrier.
 struct AbortableBarrier {
@@ -96,11 +185,12 @@ impl AbortableBarrier {
     }
 }
 
-/// Shared f32 buffer written in disjoint chunks between barriers.
+/// Shared f32 buffer written in disjoint ranges between barriers.
 ///
 /// Safety contract: phase-2 writers each own a disjoint index range
-/// (rank-derived), and barriers order every write before any phase-3
-/// read.  No two threads ever touch the same element between barriers.
+/// (rank-derived for ring, the leader's whole range for flat), and
+/// barriers order every write before any phase-3 read.  No two threads
+/// ever touch the same element between barriers.
 struct SharedVec(UnsafeCell<Vec<f32>>);
 
 // SAFETY: see the contract above — disjoint writes + barrier ordering.
@@ -126,8 +216,10 @@ impl SharedVec {
     }
 }
 
-/// A communicator for `n` ranks over vectors of length `len`.
-pub struct Comm {
+/// State + phase plumbing shared by both algorithms: publish slots, the
+/// shared result buffer, scalar slots, and the abortable barrier.  The
+/// algorithms differ only in who reduces which range in phase 2.
+struct Core {
     n: usize,
     len: usize,
     slots: Vec<Mutex<Vec<f32>>>,
@@ -136,10 +228,10 @@ pub struct Comm {
     barrier: AbortableBarrier,
 }
 
-impl Comm {
-    pub fn new(n: usize, len: usize) -> Self {
+impl Core {
+    fn new(n: usize, len: usize) -> Self {
         assert!(n >= 1);
-        Comm {
+        Core {
             n,
             len,
             slots: (0..n).map(|_| Mutex::new(vec![0.0; len])).collect(),
@@ -149,68 +241,61 @@ impl Comm {
         }
     }
 
-    pub fn n_ranks(&self) -> usize {
-        self.n
-    }
-
-    /// Abort the communicator: every rank blocked in (or arriving at) a
-    /// collective returns `Err(Poisoned)`.  Idempotent.
-    pub fn poison(&self) {
-        self.barrier.poison();
-    }
-
-    pub fn is_poisoned(&self) -> bool {
-        self.barrier.is_poisoned()
-    }
-
-    /// Block until all ranks arrive (or the communicator is poisoned).
-    pub fn barrier(&self) -> Result<(), Poisoned> {
+    fn barrier(&self) -> Result<(), Poisoned> {
         if self.n > 1 {
             self.barrier.wait()
+        } else if self.barrier.is_poisoned() {
+            Err(Poisoned)
         } else {
             Ok(())
         }
     }
 
-    fn chunk(&self, rank: usize) -> (usize, usize) {
-        let lo = rank * self.len / self.n;
-        let hi = (rank + 1) * self.len / self.n;
-        (lo, hi)
+    /// Reduce `[lo, hi)` of the result buffer from all slots in rank
+    /// order, then scale by 1/n.  Caller owns the range (phase 2).
+    fn reduce_range(&self, lo: usize, hi: usize) {
+        if lo >= hi {
+            return;
+        }
+        // SAFETY: [lo, hi) is owned by this thread; barriers order phases.
+        let out = unsafe { self.result.slice_mut(lo, hi) };
+        let inv = 1.0 / self.n as f32;
+        let first = self.slots[0].lock().unwrap();
+        out.copy_from_slice(&first[lo..hi]);
+        drop(first);
+        for r in 1..self.n {
+            let slot = self.slots[r].lock().unwrap();
+            for (o, v) in out.iter_mut().zip(&slot[lo..hi]) {
+                *o += *v;
+            }
+        }
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
     }
 
-    /// Average `buf` elementwise across all ranks (every rank must call
-    /// with an equal-length buffer; all receive the mean).
-    ///
-    /// Deterministic: the reduction order per element is rank order, so
-    /// results are bit-identical across runs and thread schedules.
-    pub fn allreduce_mean(&self, rank: usize, buf: &mut [f32]) -> Result<(), Poisoned> {
+    /// Full allreduce with the phase-2 reduction range given by
+    /// `range_for(rank)`.  Publish → reduce → gather, three barriers.
+    fn allreduce_mean(
+        &self,
+        rank: usize,
+        buf: &mut [f32],
+        range_for: impl Fn(usize) -> (usize, usize),
+    ) -> Result<(), Poisoned> {
         assert_eq!(buf.len(), self.len);
         assert!(rank < self.n);
         if self.n == 1 {
-            return Ok(());
+            // no peers to exchange with, but poison stays sticky even in
+            // the degenerate case (the trait contract: a poisoned
+            // communicator rejects every new collective)
+            return self.barrier();
         }
         // phase 1: publish
         self.slots[rank].lock().unwrap().copy_from_slice(buf);
         self.barrier()?;
-        // phase 2: reduce-scatter my chunk (deterministic rank order)
-        let (lo, hi) = self.chunk(rank);
-        if lo < hi {
-            // SAFETY: [lo, hi) is disjoint per rank; barriers order phases.
-            let out = unsafe { self.result.slice_mut(lo, hi) };
-            let inv = 1.0 / self.n as f32;
-            let first = self.slots[0].lock().unwrap();
-            out.copy_from_slice(&first[lo..hi]);
-            drop(first);
-            for r in 1..self.n {
-                let slot = self.slots[r].lock().unwrap();
-                for (o, v) in out.iter_mut().zip(&slot[lo..hi]) {
-                    *o += *v;
-                }
-            }
-            for o in out.iter_mut() {
-                *o *= inv;
-            }
-        }
+        // phase 2: reduce this rank's range (deterministic rank order)
+        let (lo, hi) = range_for(rank);
+        self.reduce_range(lo, hi);
         self.barrier()?;
         // phase 3: allgather
         // SAFETY: writes finished at the barrier above; next mutation
@@ -220,10 +305,9 @@ impl Comm {
         Ok(())
     }
 
-    /// Sum a scalar across ranks (used for the S_k statistic and loss
-    /// aggregation).  Deterministic (rank-ordered sum).
-    pub fn allreduce_scalar_sum(&self, rank: usize, v: f64) -> Result<f64, Poisoned> {
+    fn allreduce_scalar_sum(&self, rank: usize, v: f64) -> Result<f64, Poisoned> {
         if self.n == 1 {
+            self.barrier()?;
             return Ok(v);
         }
         *self.scalars[rank].lock().unwrap() = v;
@@ -236,12 +320,10 @@ impl Comm {
         Ok(acc)
     }
 
-    /// Rank 0's value wins; everyone receives it (parameter broadcast at
-    /// init so all nodes start from the same w₀, as the paper requires).
-    pub fn broadcast(&self, rank: usize, buf: &mut [f32]) -> Result<(), Poisoned> {
+    fn broadcast(&self, rank: usize, buf: &mut [f32]) -> Result<(), Poisoned> {
         assert_eq!(buf.len(), self.len);
         if self.n == 1 {
-            return Ok(());
+            return self.barrier();
         }
         if rank == 0 {
             self.slots[0].lock().unwrap().copy_from_slice(buf);
@@ -255,11 +337,120 @@ impl Comm {
     }
 }
 
+// ------------------------------------------------------------ FlatComm
+
+/// Reference communicator: the leader reduces the whole buffer serially.
+pub struct FlatComm {
+    core: Core,
+}
+
+impl FlatComm {
+    pub fn new(n: usize, len: usize) -> Self {
+        FlatComm { core: Core::new(n, len) }
+    }
+}
+
+impl Collective for FlatComm {
+    fn n_ranks(&self) -> usize {
+        self.core.n
+    }
+
+    fn algo(&self) -> Algo {
+        Algo::Flat
+    }
+
+    fn poison(&self) {
+        self.core.barrier.poison();
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.core.barrier.is_poisoned()
+    }
+
+    fn barrier(&self) -> Result<(), Poisoned> {
+        self.core.barrier()
+    }
+
+    fn allreduce_mean(&self, rank: usize, buf: &mut [f32]) -> Result<(), Poisoned> {
+        let len = self.core.len;
+        // rank 0 owns everything; other ranks reduce nothing
+        self.core
+            .allreduce_mean(rank, buf, |r| if r == 0 { (0, len) } else { (0, 0) })
+    }
+
+    fn allreduce_scalar_sum(&self, rank: usize, v: f64) -> Result<f64, Poisoned> {
+        self.core.allreduce_scalar_sum(rank, v)
+    }
+
+    fn broadcast(&self, rank: usize, buf: &mut [f32]) -> Result<(), Poisoned> {
+        self.core.broadcast(rank, buf)
+    }
+}
+
+// ------------------------------------------------------------ RingComm
+
+/// Chunked communicator: rank `r` reduces chunk `r`, in parallel.
+pub struct RingComm {
+    core: Core,
+}
+
+impl RingComm {
+    pub fn new(n: usize, len: usize) -> Self {
+        RingComm { core: Core::new(n, len) }
+    }
+
+    fn chunk(&self, rank: usize) -> (usize, usize) {
+        let lo = rank * self.core.len / self.core.n;
+        let hi = (rank + 1) * self.core.len / self.core.n;
+        (lo, hi)
+    }
+}
+
+impl Collective for RingComm {
+    fn n_ranks(&self) -> usize {
+        self.core.n
+    }
+
+    fn algo(&self) -> Algo {
+        Algo::Ring
+    }
+
+    fn poison(&self) {
+        self.core.barrier.poison();
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.core.barrier.is_poisoned()
+    }
+
+    fn barrier(&self) -> Result<(), Poisoned> {
+        self.core.barrier()
+    }
+
+    fn allreduce_mean(&self, rank: usize, buf: &mut [f32]) -> Result<(), Poisoned> {
+        self.core.allreduce_mean(rank, buf, |r| self.chunk(r))
+    }
+
+    fn allreduce_scalar_sum(&self, rank: usize, v: f64) -> Result<f64, Poisoned> {
+        self.core.allreduce_scalar_sum(rank, v)
+    }
+
+    fn broadcast(&self, rank: usize, buf: &mut [f32]) -> Result<(), Poisoned> {
+        self.core.broadcast(rank, buf)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
-    use std::sync::Arc;
+
+    fn both(n: usize, len: usize) -> Vec<Arc<dyn Collective>> {
+        vec![
+            Arc::new(FlatComm::new(n, len)) as Arc<dyn Collective>,
+            Arc::new(RingComm::new(n, len)),
+        ]
+    }
 
     fn run_ranks<F>(n: usize, f: F)
     where
@@ -278,26 +469,29 @@ mod tests {
     }
 
     #[test]
-    fn allreduce_mean_correct() {
+    fn allreduce_mean_correct_both_algos() {
         let n = 4;
         let len = 1000;
-        let comm = Arc::new(Comm::new(n, len));
-        let outputs: Arc<Vec<Mutex<Vec<f32>>>> =
-            Arc::new((0..n).map(|_| Mutex::new(vec![])).collect());
-        {
-            let comm = Arc::clone(&comm);
-            let outputs = Arc::clone(&outputs);
-            run_ranks(n, move |rank| {
-                let mut buf: Vec<f32> = (0..len).map(|i| (rank * len + i) as f32).collect();
-                comm.allreduce_mean(rank, &mut buf).unwrap();
-                *outputs[rank].lock().unwrap() = buf;
-            });
-        }
-        // expected mean of rank*len + i over ranks = i + len*(n-1)/2
-        let expect: Vec<f32> = (0..len).map(|i| i as f32 + len as f32 * 1.5).collect();
-        for r in 0..n {
-            let got = outputs[r].lock().unwrap();
-            assert_eq!(&*got, &expect, "rank {r}");
+        for comm in both(n, len) {
+            let outputs: Arc<Vec<Mutex<Vec<f32>>>> =
+                Arc::new((0..n).map(|_| Mutex::new(vec![])).collect());
+            {
+                let comm = Arc::clone(&comm);
+                let outputs = Arc::clone(&outputs);
+                run_ranks(n, move |rank| {
+                    let mut buf: Vec<f32> =
+                        (0..len).map(|i| (rank * len + i) as f32).collect();
+                    comm.allreduce_mean(rank, &mut buf).unwrap();
+                    *outputs[rank].lock().unwrap() = buf;
+                });
+            }
+            // expected mean of rank*len + i over ranks = i + len*(n-1)/2
+            let expect: Vec<f32> =
+                (0..len).map(|i| i as f32 + len as f32 * 1.5).collect();
+            for r in 0..n {
+                let got = outputs[r].lock().unwrap();
+                assert_eq!(&*got, &expect, "rank {r}");
+            }
         }
     }
 
@@ -305,8 +499,8 @@ mod tests {
     fn repeated_allreduce_deterministic() {
         let n = 8;
         let len = 4097; // non-divisible chunks
-        let run = || {
-            let comm = Arc::new(Comm::new(n, len));
+        let run = |algo: Algo| {
+            let comm = build(algo, n, len);
             let out: Arc<Mutex<Vec<f32>>> = Arc::new(Mutex::new(vec![]));
             let out2 = Arc::clone(&out);
             let comm2 = Arc::clone(&comm);
@@ -324,84 +518,94 @@ mod tests {
             let v = out.lock().unwrap().clone();
             v
         };
-        let a = run();
-        let b = run();
-        assert_eq!(a, b, "allreduce must be bit-deterministic");
+        let r1 = run(Algo::Ring);
+        let r2 = run(Algo::Ring);
+        assert_eq!(r1, r2, "allreduce must be bit-deterministic");
+        // and flat reduces in the same rank order -> bit-identical too
+        let f1 = run(Algo::Flat);
+        assert_eq!(r1, f1, "flat and ring must agree bitwise");
     }
 
     #[test]
     fn all_ranks_agree_after_allreduce() {
         let n = 5;
         let len = 333;
-        let comm = Arc::new(Comm::new(n, len));
-        let outputs: Arc<Vec<Mutex<Vec<f32>>>> =
-            Arc::new((0..n).map(|_| Mutex::new(vec![])).collect());
-        {
-            let comm = Arc::clone(&comm);
-            let outputs = Arc::clone(&outputs);
-            run_ranks(n, move |rank| {
-                let mut rng = Rng::new(7, rank as u64);
-                let mut buf = vec![0.0f32; len];
-                rng.fill_normal(&mut buf, 2.0);
-                comm.allreduce_mean(rank, &mut buf).unwrap();
-                *outputs[rank].lock().unwrap() = buf;
-            });
-        }
-        let first = outputs[0].lock().unwrap().clone();
-        for r in 1..n {
-            assert_eq!(*outputs[r].lock().unwrap(), first);
+        for comm in both(n, len) {
+            let outputs: Arc<Vec<Mutex<Vec<f32>>>> =
+                Arc::new((0..n).map(|_| Mutex::new(vec![])).collect());
+            {
+                let comm = Arc::clone(&comm);
+                let outputs = Arc::clone(&outputs);
+                run_ranks(n, move |rank| {
+                    let mut rng = Rng::new(7, rank as u64);
+                    let mut buf = vec![0.0f32; len];
+                    rng.fill_normal(&mut buf, 2.0);
+                    comm.allreduce_mean(rank, &mut buf).unwrap();
+                    *outputs[rank].lock().unwrap() = buf;
+                });
+            }
+            let first = outputs[0].lock().unwrap().clone();
+            for r in 1..n {
+                assert_eq!(*outputs[r].lock().unwrap(), first);
+            }
         }
     }
 
     #[test]
     fn scalar_sum_and_broadcast() {
         let n = 6;
-        let comm = Arc::new(Comm::new(n, 8));
-        let sums: Arc<Vec<Mutex<f64>>> = Arc::new((0..n).map(|_| Mutex::new(0.0)).collect());
-        {
-            let comm = Arc::clone(&comm);
-            let sums = Arc::clone(&sums);
-            run_ranks(n, move |rank| {
-                let s = comm.allreduce_scalar_sum(rank, (rank + 1) as f64).unwrap();
-                *sums[rank].lock().unwrap() = s;
-                let mut buf = vec![rank as f32; 8];
-                comm.broadcast(rank, &mut buf).unwrap();
-                assert!(buf.iter().all(|&v| v == 0.0), "rank {rank} got {buf:?}");
-            });
-        }
-        for r in 0..n {
-            assert_eq!(*sums[r].lock().unwrap(), 21.0);
+        for comm in both(n, 8) {
+            let sums: Arc<Vec<Mutex<f64>>> =
+                Arc::new((0..n).map(|_| Mutex::new(0.0)).collect());
+            {
+                let comm = Arc::clone(&comm);
+                let sums = Arc::clone(&sums);
+                run_ranks(n, move |rank| {
+                    let s = comm.allreduce_scalar_sum(rank, (rank + 1) as f64).unwrap();
+                    *sums[rank].lock().unwrap() = s;
+                    let mut buf = vec![rank as f32; 8];
+                    comm.broadcast(rank, &mut buf).unwrap();
+                    assert!(buf.iter().all(|&v| v == 0.0), "rank {rank} got {buf:?}");
+                });
+            }
+            for r in 0..n {
+                assert_eq!(*sums[r].lock().unwrap(), 21.0);
+            }
         }
     }
 
     #[test]
     fn single_rank_is_noop() {
-        let comm = Comm::new(1, 4);
-        let mut buf = vec![1.0, 2.0, 3.0, 4.0];
-        comm.allreduce_mean(0, &mut buf).unwrap();
-        assert_eq!(buf, vec![1.0, 2.0, 3.0, 4.0]);
-        assert_eq!(comm.allreduce_scalar_sum(0, 5.0).unwrap(), 5.0);
+        for comm in both(1, 4) {
+            let mut buf = vec![1.0, 2.0, 3.0, 4.0];
+            comm.allreduce_mean(0, &mut buf).unwrap();
+            assert_eq!(buf, vec![1.0, 2.0, 3.0, 4.0]);
+            assert_eq!(comm.allreduce_scalar_sum(0, 5.0).unwrap(), 5.0);
+        }
     }
 
     #[test]
     fn sequential_scalar_rounds_do_not_interfere() {
         let n = 3;
-        let comm = Arc::new(Comm::new(n, 1));
-        let ok = Arc::new(Mutex::new(true));
-        {
-            let comm = Arc::clone(&comm);
-            let ok = Arc::clone(&ok);
-            run_ranks(n, move |rank| {
-                for round in 0..50u64 {
-                    let s = comm.allreduce_scalar_sum(rank, (round + rank as u64) as f64).unwrap();
-                    let expect = (3 * round + 3) as f64; // sum over ranks 0..3 of round+rank
-                    if (s - expect).abs() > 1e-12 {
-                        *ok.lock().unwrap() = false;
+        for comm in both(n, 1) {
+            let ok = Arc::new(Mutex::new(true));
+            {
+                let comm = Arc::clone(&comm);
+                let ok = Arc::clone(&ok);
+                run_ranks(n, move |rank| {
+                    for round in 0..50u64 {
+                        let s = comm
+                            .allreduce_scalar_sum(rank, (round + rank as u64) as f64)
+                            .unwrap();
+                        let expect = (3 * round + 3) as f64; // sum over ranks 0..3 of round+rank
+                        if (s - expect).abs() > 1e-12 {
+                            *ok.lock().unwrap() = false;
+                        }
                     }
-                }
-            });
+                });
+            }
+            assert!(*ok.lock().unwrap());
         }
-        assert!(*ok.lock().unwrap());
     }
 
     #[test]
@@ -409,48 +613,70 @@ mod tests {
         // rank 1 never joins the collective; rank 2 poisons after a
         // delay; rank 0 must return Err instead of hanging forever.
         let n = 3;
-        let comm = Arc::new(Comm::new(n, 64));
-        let results: Arc<Vec<Mutex<Option<Result<(), Poisoned>>>>> =
-            Arc::new((0..n).map(|_| Mutex::new(None)).collect());
-        {
-            let comm = Arc::clone(&comm);
-            let results = Arc::clone(&results);
-            run_ranks(n, move |rank| {
-                match rank {
-                    0 => {
-                        let mut buf = vec![1.0f32; 64];
-                        let r = comm.allreduce_mean(0, &mut buf);
-                        *results[0].lock().unwrap() = Some(r);
+        for comm in both(n, 64) {
+            let results: Arc<Vec<Mutex<Option<Result<(), Poisoned>>>>> =
+                Arc::new((0..n).map(|_| Mutex::new(None)).collect());
+            {
+                let comm = Arc::clone(&comm);
+                let results = Arc::clone(&results);
+                run_ranks(n, move |rank| {
+                    match rank {
+                        0 => {
+                            let mut buf = vec![1.0f32; 64];
+                            let r = comm.allreduce_mean(0, &mut buf);
+                            *results[0].lock().unwrap() = Some(r);
+                        }
+                        1 => { /* failed node: never participates */ }
+                        _ => {
+                            std::thread::sleep(std::time::Duration::from_millis(50));
+                            comm.poison();
+                            *results[2].lock().unwrap() = Some(Err(Poisoned));
+                        }
                     }
-                    1 => { /* failed node: never participates */ }
-                    _ => {
-                        std::thread::sleep(std::time::Duration::from_millis(50));
-                        comm.poison();
-                        *results[2].lock().unwrap() = Some(Err(Poisoned));
-                    }
-                }
-            });
+                });
+            }
+            assert_eq!(*results[0].lock().unwrap(), Some(Err(Poisoned)));
+            assert!(comm.is_poisoned());
         }
-        assert_eq!(*results[0].lock().unwrap(), Some(Err(Poisoned)));
-        assert!(comm.is_poisoned());
     }
 
     #[test]
     fn poisoned_comm_rejects_new_collectives() {
-        let comm = Comm::new(2, 4);
-        comm.poison();
-        let mut buf = vec![0.0f32; 4];
-        assert_eq!(comm.allreduce_mean(0, &mut buf), Err(Poisoned));
-        assert_eq!(comm.allreduce_scalar_sum(1, 1.0), Err(Poisoned));
-        assert_eq!(comm.broadcast(0, &mut buf), Err(Poisoned));
+        for comm in both(2, 4) {
+            comm.poison();
+            let mut buf = vec![0.0f32; 4];
+            assert_eq!(comm.allreduce_mean(0, &mut buf), Err(Poisoned));
+            assert_eq!(comm.allreduce_scalar_sum(1, 1.0), Err(Poisoned));
+            assert_eq!(comm.broadcast(0, &mut buf), Err(Poisoned));
+        }
+        // poison stays sticky even in the degenerate single-rank case
+        for comm in both(1, 4) {
+            comm.poison();
+            let mut buf = vec![0.0f32; 4];
+            assert_eq!(comm.allreduce_mean(0, &mut buf), Err(Poisoned));
+            assert_eq!(comm.allreduce_scalar_sum(0, 1.0), Err(Poisoned));
+            assert_eq!(comm.broadcast(0, &mut buf), Err(Poisoned));
+        }
     }
 
     #[test]
     fn poison_is_idempotent_and_sticky() {
-        let comm = Comm::new(2, 1);
-        comm.poison();
-        comm.poison();
-        assert!(comm.is_poisoned());
-        assert_eq!(comm.barrier(), Err(Poisoned));
+        for comm in both(2, 1) {
+            comm.poison();
+            comm.poison();
+            assert!(comm.is_poisoned());
+            assert_eq!(comm.barrier(), Err(Poisoned));
+        }
+    }
+
+    #[test]
+    fn algo_parse_roundtrip() {
+        assert_eq!("flat".parse::<Algo>().unwrap(), Algo::Flat);
+        assert_eq!("ring".parse::<Algo>().unwrap(), Algo::Ring);
+        assert!("mesh".parse::<Algo>().is_err());
+        assert_eq!(Algo::Flat.to_string(), "flat");
+        assert_eq!(Algo::default(), Algo::Ring);
+        assert_eq!(build(Algo::Flat, 2, 4).algo(), Algo::Flat);
+        assert_eq!(build(Algo::Ring, 2, 4).algo(), Algo::Ring);
     }
 }

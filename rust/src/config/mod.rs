@@ -7,6 +7,7 @@
 
 pub mod toml;
 
+use crate::collective::Algo as CollectiveAlgo;
 use crate::period::Strategy;
 use anyhow::{anyhow, bail, Context, Result};
 use toml::{TomlDoc, TomlValue};
@@ -87,6 +88,11 @@ pub struct SyncConfig {
     pub easgd_alpha: f64,
     /// Top-k sparsification: fraction of gradient components kept.
     pub topk_frac: f64,
+    /// Which collective algorithm executes (and prices) the exchanges:
+    /// `ring` (chunked reduce-scatter + all-gather, the default) or
+    /// `flat` (leader-serialized reference).  Both produce bit-identical
+    /// reductions; they differ in measured and modeled wall-clock.
+    pub collective: CollectiveAlgo,
 }
 
 impl Default for SyncConfig {
@@ -106,6 +112,7 @@ impl Default for SyncConfig {
             piecewise: "0:4,2000:8".into(),
             easgd_alpha: 0.5,
             topk_frac: 0.03125,
+            collective: CollectiveAlgo::Ring,
         }
     }
 }
@@ -428,6 +435,9 @@ impl ExperimentConfig {
         if let Some(v) = gf("sync.topk_frac") {
             cfg.sync.topk_frac = v;
         }
+        if let Some(v) = gs("sync.collective") {
+            cfg.sync.collective = v.parse()?;
+        }
 
         // net
         if let Some(v) = gf("net.bandwidth_gbps") {
@@ -484,6 +494,7 @@ impl ExperimentConfig {
             "sync.piecewise",
             "sync.easgd_alpha",
             "sync.topk_frac",
+            "sync.collective",
             "net.bandwidth_gbps",
             "net.latency_us",
         ]
@@ -554,6 +565,18 @@ latency_us = 25.0
         assert!(ExperimentConfig::from_doc(&doc).is_err());
         let doc = TomlDoc::parse("[sync]\nlow = 1.5").unwrap();
         assert!(ExperimentConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn collective_knob_parses() {
+        let doc = TomlDoc::parse("[sync]\ncollective = \"flat\"").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.sync.collective, CollectiveAlgo::Flat);
+        // default is ring
+        assert_eq!(ExperimentConfig::default().sync.collective, CollectiveAlgo::Ring);
+        // unknown algorithms are rejected at parse time
+        let bad = TomlDoc::parse("[sync]\ncollective = \"mesh\"").unwrap();
+        assert!(ExperimentConfig::from_doc(&bad).is_err());
     }
 
     #[test]

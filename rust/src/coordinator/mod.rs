@@ -4,33 +4,45 @@
 //!
 //! Execution model
 //! ---------------
-//! Each simulated node is an OS thread owning its parameters `w_i`,
-//! momentum `m_i` (momentum is **node-local**, as in the paper — only
-//! parameters are averaged), RNG stream, data stream, and compute engine
-//! (native workload or PJRT-executed HLO).  Synchronization uses
-//! [`crate::collective::Comm`]; the per-sync wall-clock cost on the
-//! paper's testbed is charged to a [`crate::netsim::CommLedger`].
+//! Each simulated node is an OS thread owning a [`node::Node`]: its
+//! parameters `w_i`, momentum `m_i` (momentum is **node-local**, as in
+//! the paper — only parameters are averaged), RNG stream, data stream,
+//! and compute engine (native workload or PJRT-executed HLO).  The
+//! per-iteration synchronization behavior is a [`sync::SyncStep`]
+//! pipeline — period gate, optional payload transform
+//! (quantize/sparsify), collective exchange, S_k agreement, optional
+//! elastic pull, ledger charge — so every strategy is a composition of
+//! the same stages rather than a bespoke loop body.
+//!
+//! Synchronization runs over a pluggable
+//! [`crate::collective::Collective`] (`cfg.sync.collective` selects the
+//! chunked-parallel `ring` or the leader-serialized `flat`; both reduce
+//! bit-identically); the per-sync wall-clock cost on the paper's testbed
+//! is charged to a [`crate::netsim::CommLedger`], which prices the
+//! configured algorithm.
 //!
 //! Period control is *replicated*: every node holds an identical
-//! [`PeriodController`] fed identical `(k, S_k, γ_k)` feedback (S_k is
-//! agreed via a scalar allreduce), so all replicas take identical sync
-//! decisions without a central scheduler — exactly the decentralized
-//! structure of Algorithm 2.
+//! [`crate::period::PeriodController`] (inside its `SyncStep`) fed
+//! identical `(k, S_k, γ_k)` feedback (S_k is agreed via a scalar
+//! allreduce), so all replicas take identical sync decisions without a
+//! central scheduler — exactly the decentralized structure of
+//! Algorithm 2.
 
 pub mod engine;
+pub mod node;
+pub mod sync;
 
-use crate::collective::Comm;
+use crate::collective::{self, Collective};
 use crate::config::ExperimentConfig;
 use crate::data::{Batch, CharCorpus, DatasetHandle, NodeSource, SynthClass};
 use crate::metrics::Recorder;
 use crate::netsim::{CommKind, CommLedger, NetModel};
 use crate::optim::lr_at;
 use crate::period::Strategy;
-use crate::quant::QsgdConfig;
-use crate::util::rng::Rng;
-use crate::util::timer::Timer;
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
+use node::Node;
 use std::sync::Arc;
+use sync::{ExchangeMode, SyncStep};
 
 /// Everything a finished run reports (curves + summary numbers).
 #[derive(Debug)]
@@ -187,7 +199,8 @@ impl Trainer {
             }
         };
 
-        let comm = Arc::new(Comm::new(cfg.nodes, n_params));
+        let comm: Arc<dyn Collective> =
+            collective::build(cfg.sync.collective, cfg.nodes, n_params);
         let mut outs: Vec<Option<WorkerOut>> = (0..cfg.nodes).map(|_| None).collect();
 
         std::thread::scope(|scope| -> Result<()> {
@@ -306,79 +319,20 @@ fn worker_loop(
     batch_per_node: usize,
     seq: usize,
     dataset: DatasetHandle,
-    comm: Arc<Comm>,
+    comm: Arc<dyn Collective>,
     factory: &engine::EngineFactory,
 ) -> Result<WorkerOut> {
     let n = cfg.nodes;
     let is_leader = rank == 0;
     let net = NetModel::new(&cfg.net);
-    let mut ledger = CommLedger::new(n);
+    let mut ledger = CommLedger::with_algo(n, cfg.sync.collective);
     let mut recorder = Recorder::new();
 
-    // --- engine construction + cluster health check -----------------------
-    let engine_res = factory(rank);
-    let healthy = comm.allreduce_scalar_sum(rank, if engine_res.is_ok() { 0.0 } else { 1.0 })?;
-    if healthy > 0.0 {
-        return match engine_res {
-            Err(e) => Err(e).context(format!("node {rank}: engine construction")),
-            Ok(_) => bail!("node {rank}: peer failed during engine construction"),
-        };
-    }
-    let mut engine = engine_res.unwrap();
-    debug_assert_eq!(engine.n_params(), n_params);
+    let mut node =
+        Node::build(cfg, rank, n_params, batch_per_node, seq, dataset, comm.as_ref(), factory)?;
+    let mut step = SyncStep::build(cfg, n_params, rank);
+    let grad_mode = step.mode == ExchangeMode::Gradient;
 
-    // --- shared initial point (paper: all nodes start from w_0) -----------
-    let mut w = if cfg.init_from.is_empty() {
-        engine.init(cfg.seed)?
-    } else {
-        // warm start: all nodes load the same snapshot
-        let p = std::path::Path::new(&cfg.init_from);
-        let file = if p.is_dir() {
-            crate::checkpoint::Checkpoint::latest(p)?
-                .ok_or_else(|| anyhow!("no checkpoints in {}", p.display()))?
-        } else {
-            p.to_path_buf()
-        };
-        let ck = crate::checkpoint::Checkpoint::load(&file)?;
-        if ck.w.len() != n_params {
-            bail!(
-                "checkpoint {} has {} params, model has {n_params}",
-                file.display(),
-                ck.w.len()
-            );
-        }
-        ck.w
-    };
-    comm.broadcast(rank, &mut w)?;
-    let mut m = vec![0.0f32; n_params];
-    let mut w_pre = vec![0.0f32; n_params];
-    let mut g = vec![0.0f32; n_params];
-
-    let mut source = NodeSource::new(dataset.clone(), cfg.seed, rank as u64, batch_per_node, seq);
-    // held-out stream for evaluation (leader only uses it)
-    let mut eval_source =
-        NodeSource::new(dataset, cfg.seed ^ 0xEA11, 0xE0 + rank as u64, batch_per_node, seq);
-
-    let mut controller = crate::period::build(cfg);
-    let grad_mode = controller.is_none(); // Full / Qsgd / TopK
-    let qsgd = if cfg.sync.strategy == Strategy::Qsgd {
-        Some(QsgdConfig { levels: cfg.sync.qsgd_levels, bucket: cfg.sync.qsgd_bucket })
-    } else {
-        None
-    };
-    let mut topk = if cfg.sync.strategy == Strategy::TopK {
-        Some((
-            crate::sparse::TopKConfig { keep_frac: cfg.sync.topk_frac },
-            crate::sparse::Residual::new(n_params),
-        ))
-    } else {
-        None
-    };
-    let mut qrng = Rng::new(cfg.seed ^ 0x9569D, rank as u64);
-
-    let mut compute = Timer::new();
-    let mut loss_acc = 0.0f64; // local loss accumulated between recordings
-    let mut loss_cnt = 0u32;
     // pre-averaging variance of a sync that happened this iteration —
     // the variance probe must report it instead of the (trivially zero)
     // post-averaging deviation
@@ -386,57 +340,30 @@ fn worker_loop(
 
     for k in 0..cfg.iters {
         let lr = lr_at(&cfg.optim.schedule, cfg.optim.lr0, k);
-        let batch = source.next_batch();
+        let batch = node.source.next_batch();
 
-        if grad_mode {
-            // ---------------- FULLSGD / QSGD: gradient exchange ------------
-            let loss = compute.time(|| engine.grad(&w, &batch, &mut g))?;
-            loss_acc += loss as f64;
-            loss_cnt += 1;
-            if let Some(qcfg) = &qsgd {
-                let wire = compute.time(|| crate::quant::quantize_inplace(&mut g, qcfg, &mut qrng));
-                ledger.record(&net, CommKind::QuantAllgather, n, wire);
-            } else if let Some((tcfg, res)) = topk.as_mut() {
-                let wire = compute.time(|| crate::sparse::sparsify_inplace(&mut g, res, tcfg));
-                ledger.record(&net, CommKind::SparsePs, n, wire);
-            } else {
-                ledger.record(&net, CommKind::GradAllreduce, n, (n_params * 4) as u64);
+        match step.mode {
+            ExchangeMode::Gradient => {
+                // FULLSGD / QSGD / TopK: transform + exchange gradients,
+                // then apply the agreed gradient locally
+                node.grad_step(&batch)?;
+                step.exchange_grad(&mut node, comm.as_ref(), &net, &mut ledger)?;
+                node.apply_grad(lr)?;
             }
-            comm.allreduce_mean(rank, &mut g)?;
-            compute.time(|| engine.apply(&mut w, &mut m, &g, lr))?;
-        } else {
-            // ---------------- periodic parameter averaging -----------------
-            let loss = compute.time(|| engine.step(&mut w, &mut m, &batch, lr))?;
-            loss_acc += loss as f64;
-            loss_cnt += 1;
-            let ctrl = controller.as_mut().unwrap();
-            sync_var = None;
-            if ctrl.should_sync(k) {
-                w_pre.copy_from_slice(&w);
-                ledger.record(&net, CommKind::ParamAvg, n, (n_params * 4) as u64);
-                comm.allreduce_mean(rank, &mut w)?;
-                // S_k = (1/n) sum_i ||w_bar - w_i||^2  (Algorithm 2 line 11)
-                let dev = crate::tensor::sq_deviation(&w, &w_pre);
-                let s_k = comm.allreduce_scalar_sum(rank, dev)? / n as f64;
-                sync_var = Some(s_k);
-                if cfg.sync.strategy == Strategy::Easgd && cfg.sync.easgd_alpha < 1.0 {
-                    // elastic pull (EASGD, paper [57]): instead of
-                    // adopting the mean, move α of the way toward it:
-                    //   w_i ← (1-α)·w_i + α·w̄   (α=1 is exactly CPSGD)
-                    let alpha = cfg.sync.easgd_alpha as f32;
-                    for (wi, &pre) in w.iter_mut().zip(w_pre.iter()) {
-                        *wi = pre + alpha * (*wi - pre);
+            ExchangeMode::Parameters => {
+                // periodic parameter averaging: local step, then the
+                // gated sync pipeline (see sync.rs for the stage table)
+                node.local_step(&batch, lr)?;
+                sync_var = None;
+                if let Some(s_k) =
+                    step.maybe_sync_params(&mut node, comm.as_ref(), &net, &mut ledger, k, lr)?
+                {
+                    sync_var = Some(s_k);
+                    if is_leader {
+                        recorder.push("s_k", k as f64, s_k);
+                        recorder.push("period", k as f64, step.current_period() as f64);
+                        recorder.push("sync_at", k as f64, 1.0);
                     }
-                }
-                if cfg.sync.strategy == Strategy::Adaptive {
-                    // the paper's extra scalar exchange (only ADPSGD pays it)
-                    ledger.record(&net, CommKind::ScalarStat, n, 4);
-                }
-                ctrl.on_sync(k, s_k, lr);
-                if is_leader {
-                    recorder.push("s_k", k as f64, s_k);
-                    recorder.push("period", k as f64, ctrl.current_period() as f64);
-                    recorder.push("sync_at", k as f64, 1.0);
                 }
             }
         }
@@ -444,28 +371,27 @@ fn worker_loop(
         // ---------------- instrumentation (not charged to the ledger) -----
         if (k + 1) % LOSS_EVERY == 0 || k + 1 == cfg.iters {
             let mean_loss =
-                comm.allreduce_scalar_sum(rank, loss_acc / loss_cnt.max(1) as f64)? / n as f64;
+                comm.allreduce_scalar_sum(rank, node.mean_local_loss())? / n as f64;
             if is_leader {
                 recorder.push("train_loss", k as f64, mean_loss);
                 recorder.push("lr", k as f64, lr as f64);
             }
-            loss_acc = 0.0;
-            loss_cnt = 0;
+            node.reset_loss_window();
         }
 
         let need_var = cfg.variance_every > 0 && (k + 1) % cfg.variance_every == 0 && !grad_mode;
         let need_eval = cfg.eval_every > 0 && ((k + 1) % cfg.eval_every == 0 || k + 1 == cfg.iters);
         if need_var || (need_eval && !grad_mode) {
             // snapshot mean parameters without disturbing training state
-            w_pre.copy_from_slice(&w);
-            comm.allreduce_mean(rank, &mut w_pre)?;
+            node.w_pre.copy_from_slice(&node.w);
+            comm.allreduce_mean(rank, &mut node.w_pre)?;
             if need_var {
                 // if this iteration synchronized, the live parameters are
                 // already averaged — report the pre-averaging variance S_k
                 let var = match sync_var {
                     Some(s) => s,
                     None => {
-                        let dev = crate::tensor::sq_deviation(&w_pre, &w);
+                        let dev = crate::tensor::sq_deviation(&node.w_pre, &node.w);
                         comm.allreduce_scalar_sum(rank, dev)? / n as f64
                     }
                 };
@@ -474,13 +400,14 @@ fn worker_loop(
                 }
             }
             if need_eval && is_leader {
-                let (l, a) = eval_model(engine.as_mut(), &w_pre, &mut eval_source, cfg)?;
+                let (l, a) =
+                    eval_model(node.engine.as_mut(), &node.w_pre, &mut node.eval_source, cfg)?;
                 recorder.push("eval_loss", k as f64, l);
                 recorder.push("eval_acc", k as f64, a);
             }
         } else if need_eval && grad_mode && is_leader {
             // grad modes keep all nodes identical: evaluate local params
-            let (l, a) = eval_model(engine.as_mut(), &w, &mut eval_source, cfg)?;
+            let (l, a) = eval_model(node.engine.as_mut(), &node.w, &mut node.eval_source, cfg)?;
             recorder.push("eval_loss", k as f64, l);
             recorder.push("eval_acc", k as f64, a);
         }
@@ -488,14 +415,14 @@ fn worker_loop(
         // ---------------- checkpointing (leader; mean parameters) ---------
         if cfg.checkpoint_every > 0 && (k + 1) % cfg.checkpoint_every == 0 {
             // snapshot the averaged parameters without disturbing training
-            w_pre.copy_from_slice(&w);
-            comm.allreduce_mean(rank, &mut w_pre)?;
+            node.w_pre.copy_from_slice(&node.w);
+            comm.allreduce_mean(rank, &mut node.w_pre)?;
             if is_leader {
                 let dir = std::path::Path::new(&cfg.checkpoint_dir);
                 let ck = crate::checkpoint::Checkpoint::new(
                     (k + 1) as u64,
-                    loss_acc / loss_cnt.max(1) as f64,
-                    w_pre.clone(),
+                    node.mean_local_loss(),
+                    node.w_pre.clone(),
                 );
                 ck.save(&crate::checkpoint::Checkpoint::path_for(dir, (k + 1) as u64))
                     .context("writing checkpoint")?;
@@ -504,7 +431,7 @@ fn worker_loop(
     }
 
     Ok(WorkerOut {
-        compute_secs: compute.secs(),
+        compute_secs: node.compute.secs(),
         recorder: is_leader.then_some(recorder),
         ledger: is_leader.then_some(ledger),
     })
@@ -752,5 +679,42 @@ mod tests {
         let s1 = r1.recorder.get("train_loss").unwrap();
         let s2 = r2.recorder.get("train_loss").unwrap();
         assert_eq!(s1.points, s2.points);
+    }
+
+    #[test]
+    fn flat_and_ring_collectives_agree_across_strategies() {
+        // the full strategy matrix must be bit-identical under both
+        // collective algorithms (same rank-order reduction), while the
+        // cost model prices flat's leader serialization higher
+        use crate::collective::Algo;
+        let net = NetModel::infiniband_100g();
+        for strategy in [
+            Strategy::Full,
+            Strategy::Constant,
+            Strategy::Adaptive,
+            Strategy::Qsgd,
+            Strategy::TopK,
+            Strategy::Easgd,
+        ] {
+            let mut fcfg = quick_cfg(strategy);
+            fcfg.sync.collective = Algo::Flat;
+            let mut rcfg = quick_cfg(strategy);
+            rcfg.sync.collective = Algo::Ring;
+            let f = Trainer::new(fcfg).unwrap().run().unwrap();
+            let r = Trainer::new(rcfg).unwrap().run().unwrap();
+            assert_eq!(f.syncs, r.syncs, "{strategy}");
+            assert_eq!(f.avg_period, r.avg_period, "{strategy}");
+            assert_eq!(
+                f.final_train_loss, r.final_train_loss,
+                "{strategy}: loss under flat vs ring must be bit-identical"
+            );
+            let sf = f.recorder.get("train_loss").unwrap();
+            let sr = r.recorder.get("train_loss").unwrap();
+            assert_eq!(sf.points, sr.points, "{strategy}");
+            assert!(
+                f.ledger.modeled_secs(&net) >= r.ledger.modeled_secs(&net),
+                "{strategy}: flat must never model faster than ring"
+            );
+        }
     }
 }

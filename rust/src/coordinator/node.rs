@@ -1,0 +1,160 @@
+//! Per-worker node state: everything one simulated node owns.
+//!
+//! A [`Node`] bundles the parameter vector `w_i`, node-local momentum
+//! `m_i` (the paper averages only parameters), the gradient scratch, the
+//! pre-sync snapshot buffer, the node's data streams, its compute
+//! engine, and the compute stopwatch.  Construction performs the
+//! cluster-wide pieces of startup — the engine-health agreement and the
+//! shared-initial-point broadcast (all nodes start from rank 0's `w₀`,
+//! as the paper requires) — so the training loop proper only ever sees a
+//! healthy, initialized node.
+
+use super::engine::{Engine, EngineFactory};
+use crate::collective::Collective;
+use crate::config::ExperimentConfig;
+use crate::data::{Batch, DatasetHandle, NodeSource};
+use crate::util::timer::Timer;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One worker's complete training state.
+pub struct Node {
+    pub rank: usize,
+    /// cluster size (ranks in the collective)
+    pub n: usize,
+    pub engine: Box<dyn Engine>,
+    /// parameters w_i
+    pub w: Vec<f32>,
+    /// node-local momentum m_i
+    pub m: Vec<f32>,
+    /// scratch: pre-sync snapshot / mean-parameter probe buffer
+    pub w_pre: Vec<f32>,
+    /// gradient scratch (gradient-exchange modes)
+    pub g: Vec<f32>,
+    /// training batch stream (per-node RNG stream)
+    pub source: NodeSource,
+    /// held-out stream for evaluation (leader only consumes it)
+    pub eval_source: NodeSource,
+    /// accumulated local compute time (the figure models' numerator)
+    pub compute: Timer,
+    /// local loss accumulated since the last agreement window
+    pub loss_acc: f64,
+    pub loss_cnt: u32,
+}
+
+impl Node {
+    /// Construct this rank's node: build the engine (agreeing
+    /// cluster-wide that every peer succeeded), establish the shared
+    /// initial point, and open the data streams.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        cfg: &ExperimentConfig,
+        rank: usize,
+        n_params: usize,
+        batch_per_node: usize,
+        seq: usize,
+        dataset: DatasetHandle,
+        comm: &dyn Collective,
+        factory: &EngineFactory,
+    ) -> Result<Node> {
+        // --- engine construction + cluster health check ------------------
+        let engine_res = factory(rank);
+        let healthy =
+            comm.allreduce_scalar_sum(rank, if engine_res.is_ok() { 0.0 } else { 1.0 })?;
+        if healthy > 0.0 {
+            return match engine_res {
+                Err(e) => Err(e).context(format!("node {rank}: engine construction")),
+                Ok(_) => bail!("node {rank}: peer failed during engine construction"),
+            };
+        }
+        let mut engine = engine_res.unwrap();
+        debug_assert_eq!(engine.n_params(), n_params);
+
+        // --- shared initial point (paper: all nodes start from w_0) ------
+        let mut w = if cfg.init_from.is_empty() {
+            engine.init(cfg.seed)?
+        } else {
+            // warm start: all nodes load the same snapshot
+            let p = std::path::Path::new(&cfg.init_from);
+            let file = if p.is_dir() {
+                crate::checkpoint::Checkpoint::latest(p)?
+                    .ok_or_else(|| anyhow!("no checkpoints in {}", p.display()))?
+            } else {
+                p.to_path_buf()
+            };
+            let ck = crate::checkpoint::Checkpoint::load(&file)?;
+            if ck.w.len() != n_params {
+                bail!(
+                    "checkpoint {} has {} params, model has {n_params}",
+                    file.display(),
+                    ck.w.len()
+                );
+            }
+            ck.w
+        };
+        comm.broadcast(rank, &mut w)?;
+
+        let source =
+            NodeSource::new(dataset.clone(), cfg.seed, rank as u64, batch_per_node, seq);
+        let eval_source =
+            NodeSource::new(dataset, cfg.seed ^ 0xEA11, 0xE0 + rank as u64, batch_per_node, seq);
+
+        Ok(Node {
+            rank,
+            n: cfg.nodes,
+            engine,
+            w,
+            m: vec![0.0f32; n_params],
+            w_pre: vec![0.0f32; n_params],
+            g: vec![0.0f32; n_params],
+            source,
+            eval_source,
+            compute: Timer::new(),
+            loss_acc: 0.0,
+            loss_cnt: 0,
+        })
+    }
+
+    /// Local fused step (parameter-averaging modes): updates (w, m) in
+    /// place, timed as compute, loss accumulated for the agreement
+    /// window.
+    pub fn local_step(&mut self, batch: &Batch, lr: f32) -> Result<f32> {
+        self.compute.start();
+        let r = self.engine.step(&mut self.w, &mut self.m, batch, lr);
+        self.compute.stop();
+        let loss = r?;
+        self.loss_acc += loss as f64;
+        self.loss_cnt += 1;
+        Ok(loss)
+    }
+
+    /// Gradient-only step (gradient-exchange modes): fills `self.g`.
+    pub fn grad_step(&mut self, batch: &Batch) -> Result<f32> {
+        self.compute.start();
+        let r = self.engine.grad(&self.w, batch, &mut self.g);
+        self.compute.stop();
+        let loss = r?;
+        self.loss_acc += loss as f64;
+        self.loss_cnt += 1;
+        Ok(loss)
+    }
+
+    /// Apply the (averaged) gradient in `self.g` with the fused momentum
+    /// rule.
+    pub fn apply_grad(&mut self, lr: f32) -> Result<()> {
+        self.compute.start();
+        let r = self.engine.apply(&mut self.w, &mut self.m, &self.g, lr);
+        self.compute.stop();
+        r
+    }
+
+    /// Mean local loss over the current agreement window.
+    pub fn mean_local_loss(&self) -> f64 {
+        self.loss_acc / self.loss_cnt.max(1) as f64
+    }
+
+    /// Start a new loss-agreement window.
+    pub fn reset_loss_window(&mut self) {
+        self.loss_acc = 0.0;
+        self.loss_cnt = 0;
+    }
+}

@@ -1,0 +1,279 @@
+//! The synchronization pipeline: every strategy, decomposed into stages.
+//!
+//! The paper's strategies differ only in *which stages run*, never in
+//! the loop structure, so [`SyncStep`] composes them explicitly instead
+//! of the historical inlined `if`-chains:
+//!
+//! | stage            | FULLSGD | QSGD | TopK | CPSGD | ADPSGD | EASGD |
+//! |------------------|---------|------|------|-------|--------|-------|
+//! | period gate      |    —    |  —   |  —   |   ✓   |   ✓    |   ✓   |
+//! | payload transform|    —    | QSGD | top-k|   —   |   —    |   —   |
+//! | collective       |  grads  | grads| grads| params| params | params|
+//! | S_k agreement    |    —    |  —   |  —   |   ✓   |   ✓    |   ✓   |
+//! | elastic pull     |    —    |  —   |  —   |   —   |   —    |   ✓   |
+//! | extra ledger stat|    —    |  —   |  —   |   —   |  S_k   |   —   |
+//! | period feedback  |    —    |  —   |  —   | no-op |  Alg. 2| no-op |
+//!
+//! Gradient-mode strategies run [`SyncStep::exchange_grad`] every
+//! iteration; parameter-mode strategies run
+//! [`SyncStep::maybe_sync_params`], whose period gate is the
+//! [`PeriodController`].  Compression plugs in through the
+//! [`GradTransform`] hook (QSGD quantization and top-k sparsification
+//! both flow through it — there is no bespoke branch per codec), the
+//! collective through [`crate::collective::Collective`], and the cost
+//! through the [`CommLedger`], which prices the configured collective
+//! algorithm.  New strategies are new stage combinations, not new loop
+//! bodies.
+
+use super::node::Node;
+use crate::collective::{Collective, Poisoned};
+use crate::config::ExperimentConfig;
+use crate::netsim::{CommKind, CommLedger, NetModel};
+use crate::period::{PeriodController, Strategy};
+use crate::quant::QsgdConfig;
+use crate::sparse::{Residual, TopKConfig};
+use crate::util::rng::Rng;
+
+/// Whether a strategy exchanges gradients every iteration or parameters
+/// periodically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExchangeMode {
+    /// FULLSGD / QSGD / TopK: a (possibly compressed) gradient exchange
+    /// every iteration; the averaged gradient then drives the update.
+    Gradient,
+    /// CPSGD / ADPSGD / EASGD / schedules: local updates, with parameter
+    /// averaging when the period controller fires.
+    Parameters,
+}
+
+/// Lossy payload transform applied to the gradient before its exchange
+/// (the compression stage of the pipeline).  Implementations are
+/// node-local (they may carry residual/RNG state) and report the wire
+/// bytes their encoded form would occupy so the ledger can price the
+/// exchange.
+pub trait GradTransform: Send {
+    /// Compress `g` in place; returns the encoded wire bytes.
+    fn apply(&mut self, g: &mut [f32]) -> u64;
+    /// Ledger category the transformed exchange is charged as.
+    fn kind(&self) -> CommKind;
+}
+
+/// QSGD stochastic quantization (fused quantize+dequantize; see
+/// [`crate::quant`]).  Charged as a PS-style compressed allgather.
+pub struct QsgdTransform {
+    cfg: QsgdConfig,
+    rng: Rng,
+}
+
+impl GradTransform for QsgdTransform {
+    fn apply(&mut self, g: &mut [f32]) -> u64 {
+        crate::quant::quantize_inplace(g, &self.cfg, &mut self.rng)
+    }
+
+    fn kind(&self) -> CommKind {
+        CommKind::QuantAllgather
+    }
+}
+
+/// Top-k sparsification with error feedback (see [`crate::sparse`]).
+pub struct TopKTransform {
+    cfg: TopKConfig,
+    res: Residual,
+}
+
+impl GradTransform for TopKTransform {
+    fn apply(&mut self, g: &mut [f32]) -> u64 {
+        crate::sparse::sparsify_inplace(g, &mut self.res, &self.cfg)
+    }
+
+    fn kind(&self) -> CommKind {
+        CommKind::SparsePs
+    }
+}
+
+/// One node's synchronization pipeline: the stage composition for the
+/// configured strategy.  Replicated per worker (like the period
+/// controller) so all ranks take identical decisions without a central
+/// scheduler.
+pub struct SyncStep {
+    pub mode: ExchangeMode,
+    controller: Option<Box<dyn PeriodController>>,
+    transform: Option<Box<dyn GradTransform>>,
+    /// EASGD: move this fraction toward the mean instead of adopting it.
+    elastic_alpha: Option<f32>,
+    /// ADPSGD: charge the S_k scalar exchange to the ledger.
+    charge_scalar_stat: bool,
+}
+
+impl SyncStep {
+    /// Compose the pipeline for `cfg`'s strategy.  `rank` seeds the
+    /// quantizer's per-node RNG stream.
+    pub fn build(cfg: &ExperimentConfig, n_params: usize, rank: usize) -> SyncStep {
+        let controller = crate::period::build(cfg);
+        let mode = if controller.is_none() {
+            ExchangeMode::Gradient
+        } else {
+            ExchangeMode::Parameters
+        };
+        let transform: Option<Box<dyn GradTransform>> = match cfg.sync.strategy {
+            Strategy::Qsgd => Some(Box::new(QsgdTransform {
+                cfg: QsgdConfig { levels: cfg.sync.qsgd_levels, bucket: cfg.sync.qsgd_bucket },
+                rng: Rng::new(cfg.seed ^ 0x9569D, rank as u64),
+            })),
+            Strategy::TopK => Some(Box::new(TopKTransform {
+                cfg: TopKConfig { keep_frac: cfg.sync.topk_frac },
+                res: Residual::new(n_params),
+            })),
+            _ => None,
+        };
+        let elastic_alpha = (cfg.sync.strategy == Strategy::Easgd && cfg.sync.easgd_alpha < 1.0)
+            .then(|| cfg.sync.easgd_alpha as f32);
+        SyncStep {
+            mode,
+            controller,
+            transform,
+            elastic_alpha,
+            charge_scalar_stat: cfg.sync.strategy == Strategy::Adaptive,
+        }
+    }
+
+    /// Current averaging period (for the Fig 3 trajectory log).
+    pub fn current_period(&self) -> usize {
+        self.controller.as_ref().map(|c| c.current_period()).unwrap_or(1)
+    }
+
+    /// Gradient-mode chain: payload transform (timed as compute) →
+    /// ledger charge → collective exchange.  The averaged gradient lands
+    /// back in `node.g`.
+    pub fn exchange_grad(
+        &mut self,
+        node: &mut Node,
+        comm: &dyn Collective,
+        net: &NetModel,
+        ledger: &mut CommLedger,
+    ) -> Result<(), Poisoned> {
+        match self.transform.as_mut() {
+            Some(t) => {
+                node.compute.start();
+                let wire = t.apply(&mut node.g);
+                node.compute.stop();
+                ledger.record(net, t.kind(), node.n, wire);
+            }
+            None => {
+                ledger.record(net, CommKind::GradAllreduce, node.n, (node.g.len() * 4) as u64);
+            }
+        }
+        comm.allreduce_mean(node.rank, &mut node.g)
+    }
+
+    /// Parameter-mode chain: period gate → pre-sync snapshot → ledger
+    /// charge → collective exchange → S_k agreement → elastic pull →
+    /// extra ledger stat → period feedback.  Returns the agreed S_k when
+    /// a synchronization happened, `None` otherwise.
+    pub fn maybe_sync_params(
+        &mut self,
+        node: &mut Node,
+        comm: &dyn Collective,
+        net: &NetModel,
+        ledger: &mut CommLedger,
+        k: usize,
+        lr: f32,
+    ) -> Result<Option<f64>, Poisoned> {
+        let ctrl =
+            self.controller.as_mut().expect("parameter mode requires a period controller");
+        if !ctrl.should_sync(k) {
+            return Ok(None);
+        }
+        node.w_pre.copy_from_slice(&node.w);
+        ledger.record(net, CommKind::ParamAvg, node.n, (node.w.len() * 4) as u64);
+        comm.allreduce_mean(node.rank, &mut node.w)?;
+        // S_k = (1/n) sum_i ||w_bar - w_i||^2  (Algorithm 2 line 11)
+        let dev = crate::tensor::sq_deviation(&node.w, &node.w_pre);
+        let s_k = comm.allreduce_scalar_sum(node.rank, dev)? / node.n as f64;
+        if let Some(alpha) = self.elastic_alpha {
+            // EASGD (paper [57]): α of the way toward the mean (α=1 is
+            // exactly CPSGD and composes out of the pipeline entirely)
+            crate::tensor::elastic_pull(&mut node.w, &node.w_pre, alpha);
+        }
+        if self.charge_scalar_stat {
+            // the paper's extra scalar exchange (only ADPSGD pays it)
+            ledger.record(net, CommKind::ScalarStat, node.n, 4);
+        }
+        ctrl.on_sync(k, s_k, lr);
+        Ok(Some(s_k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_for(strategy: Strategy) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.sync.strategy = strategy;
+        cfg
+    }
+
+    #[test]
+    fn mode_per_strategy() {
+        for (s, mode) in [
+            (Strategy::Full, ExchangeMode::Gradient),
+            (Strategy::Qsgd, ExchangeMode::Gradient),
+            (Strategy::TopK, ExchangeMode::Gradient),
+            (Strategy::Constant, ExchangeMode::Parameters),
+            (Strategy::Adaptive, ExchangeMode::Parameters),
+            (Strategy::Easgd, ExchangeMode::Parameters),
+            (Strategy::Piecewise, ExchangeMode::Parameters),
+            (Strategy::Decreasing, ExchangeMode::Parameters),
+        ] {
+            let step = SyncStep::build(&cfg_for(s), 64, 0);
+            assert_eq!(step.mode, mode, "{s}");
+        }
+    }
+
+    #[test]
+    fn stage_composition_per_strategy() {
+        let full = SyncStep::build(&cfg_for(Strategy::Full), 64, 0);
+        assert!(full.transform.is_none() && full.controller.is_none());
+        assert!(!full.charge_scalar_stat && full.elastic_alpha.is_none());
+
+        let qsgd = SyncStep::build(&cfg_for(Strategy::Qsgd), 64, 0);
+        assert_eq!(qsgd.transform.as_ref().unwrap().kind(), CommKind::QuantAllgather);
+
+        let topk = SyncStep::build(&cfg_for(Strategy::TopK), 64, 0);
+        assert_eq!(topk.transform.as_ref().unwrap().kind(), CommKind::SparsePs);
+
+        let adp = SyncStep::build(&cfg_for(Strategy::Adaptive), 64, 0);
+        assert!(adp.charge_scalar_stat && adp.controller.is_some());
+
+        let mut ecfg = cfg_for(Strategy::Easgd);
+        ecfg.sync.easgd_alpha = 0.5;
+        let easgd = SyncStep::build(&ecfg, 64, 0);
+        assert_eq!(easgd.elastic_alpha, Some(0.5));
+
+        // α = 1 degenerates to CPSGD: the elastic stage composes away
+        ecfg.sync.easgd_alpha = 1.0;
+        let cpsgd_like = SyncStep::build(&ecfg, 64, 0);
+        assert_eq!(cpsgd_like.elastic_alpha, None);
+    }
+
+    #[test]
+    fn transforms_report_wire_bytes() {
+        let mut q = QsgdTransform {
+            cfg: QsgdConfig::default(),
+            rng: Rng::new(1, 0),
+        };
+        let mut g = vec![0.5f32; 4096];
+        let wire = q.apply(&mut g);
+        assert!(wire > 0 && wire < 4096 * 4, "compressed: {wire}");
+
+        let mut t = TopKTransform {
+            cfg: TopKConfig { keep_frac: 0.1 },
+            res: Residual::new(4096),
+        };
+        let mut g = vec![0.5f32; 4096];
+        let wire = t.apply(&mut g);
+        assert_eq!(wire, TopKConfig { keep_frac: 0.1 }.wire_bytes(4096));
+        assert_eq!(g.iter().filter(|v| **v != 0.0).count(), 410); // ceil(409.6)
+    }
+}

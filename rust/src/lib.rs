@@ -15,6 +15,32 @@
 //!   in-process collectives, QSGD quantization, a network cost model that
 //!   reproduces the paper's 100Gbps/10Gbps wall-clock analysis, metrics,
 //!   config, CLI.
+//!
+//! ## The synchronization subsystem
+//!
+//! Synchronization spans three pluggable layers:
+//!
+//! * **Data plane** — [`collective::Collective`], the communicator
+//!   trait, with two algorithms selected by `cfg.sync.collective`:
+//!   [`collective::RingComm`] (chunked reduce-scatter + all-gather;
+//!   every rank reduces its own chunk in parallel — the default) and
+//!   [`collective::FlatComm`] (leader-serialized reference).  Both
+//!   reduce in fixed rank order, so results are bit-identical across
+//!   algorithms and runs; both share abortable-barrier poison semantics
+//!   for clean cluster teardown on node failure.
+//! * **Pipeline** — [`coordinator::sync::SyncStep`], the per-node stage
+//!   composition (period gate → payload transform → collective exchange
+//!   → S_k agreement → elastic pull → ledger charge).  FULLSGD, CPSGD,
+//!   ADPSGD, QSGD, TopK, and EASGD are all stage combinations of this
+//!   one pipeline; compression codecs plug in through its
+//!   [`coordinator::sync::GradTransform`] hook.  Per-node state lives in
+//!   [`coordinator::node::Node`].
+//! * **Cost model** — [`netsim::NetModel`] prices each exchange **per
+//!   collective algorithm** (flat's gather+broadcast serializes `2(n−1)·B`
+//!   on the leader's link; ring pipelines `2(n−1)/n·B` per link), and
+//!   [`netsim::CommLedger`] accumulates those costs so
+//!   `RunReport::modeled_total_secs` reflects the configured algorithm
+//!   under any bandwidth preset.
 //! * **L2 (python/compile/model.py, build-time only)** — the model zoo as
 //!   pure functions over flat `f32[P]` parameter vectors, AOT-lowered to
 //!   HLO text under `artifacts/`.

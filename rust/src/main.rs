@@ -30,8 +30,10 @@ USAGE:
 
 RUN OVERRIDES (dotted keys mirror the TOML schema):
     --nodes 16 --iters 4000 --batch_per_node 128 --seed 42
-    --sync.strategy {full|cpsgd|adpsgd|decreasing|qsgd}
+    --sync.strategy {full|cpsgd|adpsgd|decreasing|qsgd|piecewise|easgd|topk}
     --sync.period 8 --sync.p_init 4 --sync.ks_frac 0.25
+    --sync.collective {ring|flat}   (allreduce algorithm: chunked-parallel
+                                     ring, or the leader-serialized flat)
     --workload.backend {native|hlo} --workload.model mlp_small
     --optim.lr0 0.1 --optim.schedule {const|step|warmup}
     --net.bandwidth_gbps 100 --net.latency_us 2

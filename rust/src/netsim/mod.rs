@@ -4,21 +4,30 @@
 //! Wall-clock claims in the paper (Fig 4c/5c, 6, 7c, 8c) decompose into
 //! per-step compute time (which we *measure*) plus per-synchronization
 //! communication time (which we *model*).  The model is the standard
-//! α–β (latency–bandwidth) formulation:
+//! α–β (latency–bandwidth) formulation, priced **per collective
+//! algorithm** ([`crate::collective::Algo`]):
 //!
-//! * ring allreduce of `B` bytes over `n` nodes
-//!   (Patarasuk & Yuan, the paper's [15]):
+//! * **ring** allreduce of `B` bytes over `n` nodes
+//!   (Patarasuk & Yuan, the paper's [15]) — the reduction is pipelined,
+//!   every link carries `2·(n−1)/n·B`:
 //!   `t = 2(n−1)·α + 2·(n−1)/n · B / bw`
+//! * **flat** allreduce — gather + broadcast serialized at the leader,
+//!   whose link (the bottleneck) carries `2·(n−1)·B`:
+//!   `t = 2(n−1)·α + 2·(n−1) · B / bw`  (no 1/n pipelining factor)
 //! * allgather (QSGD's compressed-gradient exchange; quantized grads
 //!   cannot ride a summing allreduce — paper §VI):
 //!   `t = (n−1)·α + (n−1)·B_q / bw`
 //! * scalar allreduce (the S_k exchange of Algorithm 2 — "a single
 //!   floating-point value"): `t = 2(n−1)·α + 2(n−1)/n · 4 / bw`
 //!
-//! A [`CommLedger`] accumulates modeled time + bytes per category so the
-//! figure harness can print the paper's computation/communication
-//! breakdowns under any bandwidth preset.
+//! A [`CommLedger`] accumulates modeled time + **bottleneck-link** bytes
+//! per category — so the same ledger re-prices under any bandwidth
+//! preset (`modeled_secs` = per-call latency + wire bytes / bw), and
+//! `modeled_total_secs` reflects the collective algorithm the run was
+//! configured with.  The ledger's algorithm comes from
+//! `cfg.sync.collective` via [`CommLedger::with_algo`].
 
+use crate::collective::Algo;
 use crate::config::NetConfig;
 
 /// One link/timing model.
@@ -50,6 +59,36 @@ impl NetModel {
         }
         let nf = n as f64;
         2.0 * (nf - 1.0) * self.alpha + 2.0 * (nf - 1.0) / nf * bytes as f64 / self.bw
+    }
+
+    /// Allreduce time under a specific collective algorithm: `Ring` is
+    /// pipelined ([`Self::allreduce_time`]); `Flat` serializes the full
+    /// gather+broadcast on the leader's link.
+    pub fn allreduce_time_with(&self, algo: Algo, n: usize, bytes: u64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        match algo {
+            Algo::Ring => self.allreduce_time(n, bytes),
+            Algo::Flat => {
+                let nf = n as f64;
+                2.0 * (nf - 1.0) * self.alpha + 2.0 * (nf - 1.0) * bytes as f64 / self.bw
+            }
+        }
+    }
+
+    /// Bottleneck-link bytes of an allreduce under `algo`: per-node link
+    /// for `Ring` (`2(n−1)/n·B`), the leader's link for `Flat`
+    /// (`2(n−1)·B`).  Time = latency + these bytes / bw, which is what
+    /// lets [`CommLedger::modeled_secs`] re-price algorithms uniformly.
+    pub fn allreduce_wire_bytes_with(&self, algo: Algo, n: usize, bytes: u64) -> u64 {
+        if n <= 1 {
+            return 0;
+        }
+        match algo {
+            Algo::Ring => self.allreduce_wire_bytes(n, bytes),
+            Algo::Flat => 2 * (n as u64 - 1) * bytes,
+        }
     }
 
     /// Allgather: every node receives (n-1) remote chunks of `bytes`.
@@ -230,12 +269,20 @@ pub enum CommKind {
 pub struct CommLedger {
     pub n: usize,
     pub syncs: u64,
+    /// the collective algorithm allreduce exchanges are priced as
+    pub algo: Algo,
     totals: std::collections::BTreeMap<&'static str, (u64, u64, f64)>, // name -> (count, wire bytes, secs)
 }
 
 impl CommLedger {
+    /// Ledger pricing allreduces with the default algorithm (ring).
     pub fn new(n: usize) -> Self {
         CommLedger { n, ..Self::default() }
+    }
+
+    /// Ledger pricing allreduces under a specific collective algorithm.
+    pub fn with_algo(n: usize, algo: Algo) -> Self {
+        CommLedger { n, algo, ..Self::default() }
     }
 
     fn kind_name(kind: CommKind) -> &'static str {
@@ -252,12 +299,15 @@ impl CommLedger {
     /// Returns the modeled time for this exchange.
     pub fn record(&mut self, net: &NetModel, kind: CommKind, n: usize, payload: u64) -> f64 {
         let (wire, secs) = match kind {
-            CommKind::ParamAvg | CommKind::GradAllreduce => {
-                (net.allreduce_wire_bytes(n, payload), net.allreduce_time(n, payload))
-            }
+            CommKind::ParamAvg | CommKind::GradAllreduce => (
+                net.allreduce_wire_bytes_with(self.algo, n, payload),
+                net.allreduce_time_with(self.algo, n, payload),
+            ),
             CommKind::QuantAllgather | CommKind::SparsePs => {
                 (net.ps_exchange_wire_bytes(n, payload), net.ps_exchange_time(n, payload))
             }
+            // 4-byte exchange: latency-bound, so the algorithm's
+            // bandwidth shape is irrelevant — always ring-priced
             CommKind::ScalarStat => {
                 (net.allreduce_wire_bytes(n, 4), net.scalar_allreduce_time(n))
             }
@@ -385,6 +435,44 @@ mod tests {
         assert!((led.secs(CommKind::ParamAvg) - 2.0 * t1).abs() < 1e-12);
         assert!(led.total_secs() > 2.0 * t1);
         assert!(led.total_wire_bytes() > 0);
+    }
+
+    #[test]
+    fn flat_pricing_slower_than_ring() {
+        let net = ib();
+        let b = 100 << 20;
+        let ring = net.allreduce_time_with(Algo::Ring, 16, b);
+        let flat = net.allreduce_time_with(Algo::Flat, 16, b);
+        assert!(flat > ring);
+        // the bandwidth term loses the 1/n pipelining factor: ratio -> n
+        assert!((flat / ring - 16.0).abs() < 1.0, "{}", flat / ring);
+        // ring pricing is the legacy default formula
+        assert_eq!(ring, net.allreduce_time(16, b));
+        // degenerate single node costs nothing under either algorithm
+        assert_eq!(net.allreduce_time_with(Algo::Flat, 1, b), 0.0);
+        assert_eq!(net.allreduce_wire_bytes_with(Algo::Flat, 1, b), 0);
+    }
+
+    #[test]
+    fn ledger_prices_per_algorithm() {
+        let net = ib();
+        let mut flat = CommLedger::with_algo(8, Algo::Flat);
+        let mut ring = CommLedger::with_algo(8, Algo::Ring);
+        let payload = 4 * 1_000_000;
+        flat.record(&net, CommKind::ParamAvg, 8, payload);
+        ring.record(&net, CommKind::ParamAvg, 8, payload);
+        assert!(flat.total_wire_bytes() > ring.total_wire_bytes());
+        assert!(flat.total_secs() > ring.total_secs());
+        // re-pricing under another bandwidth preserves the ordering
+        let slow = NetModel::ethernet_10g();
+        assert!(flat.modeled_secs(&slow) > ring.modeled_secs(&slow));
+        // both algorithms count the exchange as one sync
+        assert_eq!(flat.syncs, 1);
+        assert_eq!(ring.syncs, 1);
+        // the plain constructor defaults to ring pricing
+        let mut d = CommLedger::new(8);
+        d.record(&net, CommKind::ParamAvg, 8, payload);
+        assert_eq!(d.total_wire_bytes(), ring.total_wire_bytes());
     }
 
     #[test]

@@ -509,6 +509,30 @@ mod tests {
     }
 
     #[test]
+    fn piecewise_parse_error_paths() {
+        // empty / effectively-empty specs
+        assert!(Piecewise::parse("").is_err(), "empty spec");
+        assert!(Piecewise::parse("  ").is_err(), "whitespace-only spec");
+        assert!(Piecewise::parse(",,,").is_err(), "only separators");
+        // zero period anywhere in the schedule
+        assert!(Piecewise::parse("0:0").is_err(), "zero period");
+        assert!(Piecewise::parse("0:4,100:0").is_err(), "zero period later");
+        // non-monotonic switch points: duplicates are rejected ...
+        assert!(Piecewise::parse("0:4,0:8").is_err(), "duplicate switch point");
+        assert!(Piecewise::parse("0:4,50:2,50:8").is_err(), "later duplicate");
+        // ... while merely-unsorted input is normalized by sorting
+        let p = Piecewise::parse("2000:8,0:4").unwrap();
+        assert_eq!(p.segments, vec![(0, 4), (2000, 8)]);
+        // malformed numbers / separators
+        assert!(Piecewise::parse("0:abc").is_err(), "non-numeric period");
+        assert!(Piecewise::parse("-5:4").is_err(), "negative iteration");
+        assert!(Piecewise::parse("0:-4").is_err(), "negative period");
+        assert!(Piecewise::parse("0=4").is_err(), "wrong separator");
+        // must cover iteration 0
+        assert!(Piecewise::parse("5:4").is_err(), "first segment after 0");
+    }
+
+    #[test]
     fn piecewise_single_segment_is_constant() {
         let mut p = Piecewise::parse("0:5").unwrap();
         let mut c = Constant::new(5);

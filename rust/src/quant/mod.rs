@@ -8,6 +8,11 @@
 //! separately).  `encode`/`decode` round-trip exactly; `quantize_inplace`
 //! is the hot-path fused quantize+dequantize used when only the
 //! information loss matters (the netsim ledger charges wire bytes).
+//!
+//! In the coordinator this codec plugs into the synchronization pipeline
+//! as a [`crate::coordinator::sync::GradTransform`] — the same hook
+//! top-k sparsification uses — so QSGD is a stage composition, not a
+//! special-cased branch.
 
 use crate::util::rng::Rng;
 
@@ -23,6 +28,16 @@ pub struct QsgdConfig {
 impl Default for QsgdConfig {
     fn default() -> Self {
         QsgdConfig { levels: 255, bucket: 512 }
+    }
+}
+
+impl QsgdConfig {
+    /// Wire bytes the encoded form of a length-`n` vector occupies:
+    /// one f32 norm per bucket + one level byte per component + packed
+    /// sign bits.  (What [`Encoded::wire_bytes`] reports, without
+    /// materializing an encoding — used by the ledger pricing.)
+    pub fn wire_bytes(&self, n: usize) -> u64 {
+        (n.div_ceil(self.bucket) * 4 + n + n.div_ceil(8)) as u64
     }
 }
 
@@ -120,7 +135,7 @@ pub fn quantize_inplace(x: &mut [f32], cfg: &QsgdConfig, rng: &mut Rng) -> u64 {
             *v = v.signum() * level * inv;
         }
     }
-    (nbuckets * 4 + n + n.div_ceil(8)) as u64
+    cfg.wire_bytes(n)
 }
 
 #[cfg(test)]
@@ -198,6 +213,17 @@ mod tests {
                 "i={i} mean={mean} x={}",
                 x[i]
             );
+        }
+    }
+
+    #[test]
+    fn config_wire_bytes_matches_encoded() {
+        let cfg = QsgdConfig { levels: 63, bucket: 200 };
+        for n in [1usize, 199, 200, 201, 4096, 10_001] {
+            let x = vec![1.0f32; n];
+            let mut rng = Rng::new(3, 3);
+            let e = encode(&x, &cfg, &mut rng);
+            assert_eq!(cfg.wire_bytes(n), e.wire_bytes(), "n={n}");
         }
     }
 

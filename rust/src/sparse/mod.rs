@@ -12,6 +12,10 @@
 //! This gives the evaluation a second compression baseline alongside
 //! QSGD: ADPSGD's claim is against the whole compression family, not one
 //! member.
+//!
+//! Like QSGD, top-k enters the coordinator through the synchronization
+//! pipeline's [`crate::coordinator::sync::GradTransform`] hook (the
+//! residual state lives in the transform, one per node).
 
 /// Sparsifier configuration.
 #[derive(Debug, Clone, Copy)]

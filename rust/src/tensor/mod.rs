@@ -148,6 +148,19 @@ pub fn momentum_update(w: &mut [f32], m: &mut [f32], g: &[f32], lr: f32, mu: f32
     }
 }
 
+/// EASGD elastic pull (the paper's [57]): instead of adopting the mean,
+/// each node moves a fraction α of the way toward it,
+/// `w ← pre + α·(w − pre)`, where `w` currently holds the mean and
+/// `pre` the node's pre-averaging parameters.  α = 1 is exactly CPSGD;
+/// α = 0 ignores the sync entirely.  This is the elastic stage of the
+/// coordinator's `SyncStep` pipeline.
+pub fn elastic_pull(w: &mut [f32], pre: &[f32], alpha: f32) {
+    debug_assert_eq!(w.len(), pre.len());
+    for (wi, &p) in w.iter_mut().zip(pre) {
+        *wi = p + alpha * (*wi - p);
+    }
+}
+
 /// max |a_i - b_i|, for test assertions.
 pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
@@ -199,6 +212,23 @@ mod tests {
         let mut scratch = [0.0f32; 4];
         let v = param_variance(&[&a, &b], &mut scratch);
         assert_eq!(v, 4.0); // ||dev||^2 = 4 per row, averaged = 4
+    }
+
+    #[test]
+    fn elastic_pull_endpoints_and_midpoint() {
+        let pre = [1.0f32, 2.0, 3.0];
+        // α = 1: adopt the mean unchanged (CPSGD)
+        let mut w = [4.0f32, 6.0, 8.0];
+        elastic_pull(&mut w, &pre, 1.0);
+        assert_eq!(w, [4.0, 6.0, 8.0]);
+        // α = 0: keep the local parameters
+        let mut w = [4.0f32, 6.0, 8.0];
+        elastic_pull(&mut w, &pre, 0.0);
+        assert_eq!(w, [1.0, 2.0, 3.0]);
+        // α = 0.5: halfway
+        let mut w = [4.0f32, 6.0, 8.0];
+        elastic_pull(&mut w, &pre, 0.5);
+        assert_eq!(w, [2.5, 4.0, 5.5]);
     }
 
     #[test]

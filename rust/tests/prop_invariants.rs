@@ -220,16 +220,36 @@ fn prop_netmodel_monotonicity() {
 
 // ----------------------------------------------------------------- collective
 
+use adpsgd::collective::{build, Algo, Collective, Poisoned};
+use std::sync::Arc;
+
+/// Run one allreduce over `n` rank threads; returns every rank's result.
+fn allreduce_all_ranks(comm: &Arc<dyn Collective>, inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let n = inputs.len();
+    let results: Vec<std::sync::Mutex<Vec<f32>>> =
+        (0..n).map(|_| std::sync::Mutex::new(vec![])).collect();
+    std::thread::scope(|scope| {
+        for (rank, input) in inputs.iter().enumerate() {
+            let comm = Arc::clone(comm);
+            let slot = &results[rank];
+            scope.spawn(move || {
+                let mut buf = input.clone();
+                comm.allreduce_mean(rank, &mut buf).unwrap();
+                *slot.lock().unwrap() = buf;
+            });
+        }
+    });
+    results.into_iter().map(|m| m.into_inner().unwrap()).collect()
+}
+
 #[test]
 fn prop_allreduce_mean_matches_serial() {
-    use adpsgd::collective::Comm;
-    use std::sync::Arc;
     forall("allreduce-serial", 12, |g: &mut Gen| {
         let n = g.usize_in(2..7);
         let len = g.usize_in(1..2048);
         let inputs: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal(len..len + 1, 1.0)).collect();
         // serial reference in the same rank order (and with the same
-        // multiply-by-reciprocal rounding) the collective uses
+        // multiply-by-reciprocal rounding) the collectives use
         let inv = 1.0f32 / n as f32;
         let mut expect = vec![0.0f32; len];
         for i in 0..len {
@@ -239,23 +259,63 @@ fn prop_allreduce_mean_matches_serial() {
             }
             expect[i] = acc * inv;
         }
-        let comm = Arc::new(Comm::new(n, len));
-        let results: Vec<std::sync::Mutex<Vec<f32>>> =
-            (0..n).map(|_| std::sync::Mutex::new(vec![])).collect();
-        std::thread::scope(|scope| {
-            for (rank, input) in inputs.iter().enumerate() {
-                let comm = Arc::clone(&comm);
-                let slot = &results[rank];
-                scope.spawn(move || {
-                    let mut buf = input.clone();
-                    comm.allreduce_mean(rank, &mut buf);
-                    *slot.lock().unwrap() = buf;
-                });
+        for algo in [Algo::Flat, Algo::Ring] {
+            let comm = build(algo, n, len);
+            let results = allreduce_all_ranks(&comm, &inputs);
+            for (r, got) in results.iter().enumerate() {
+                assert_eq!(got, &expect, "{algo}: rank {r} disagrees with serial reference");
             }
-        });
+        }
+    });
+}
+
+#[test]
+fn prop_ring_and_flat_allreduce_agree() {
+    // the two algorithms must produce (bitwise-close, in fact identical)
+    // results for random rank counts and buffer lengths — including the
+    // n = 1 degenerate case where the collective is a no-op
+    forall("ring-flat-agree", 12, |g: &mut Gen| {
+        let n = g.usize_in(1..9);
+        let len = g.usize_in(1..4097);
+        let inputs: Vec<Vec<f32>> =
+            (0..n).map(|_| g.vec_normal(len..len + 1, 2.0)).collect();
+        let flat = allreduce_all_ranks(&build(Algo::Flat, n, len), &inputs);
+        let ring = allreduce_all_ranks(&build(Algo::Ring, n, len), &inputs);
         for r in 0..n {
-            let got = results[r].lock().unwrap();
-            assert_eq!(&*got, &expect, "rank {r} disagrees with serial reference");
+            let d = adpsgd::tensor::max_abs_diff(&flat[r], &ring[r]);
+            assert!(d <= 1e-5, "rank {r}: flat/ring diverged by {d}");
+            // stronger: fixed rank-order reduction makes them bit-equal
+            assert_eq!(flat[r], ring[r], "rank {r}: expected bit-identical results");
+        }
+        if n == 1 {
+            assert_eq!(flat[0], inputs[0], "n=1 must be a no-op");
+        }
+    });
+}
+
+#[test]
+fn prop_ring_and_flat_poison_behavior_identical() {
+    forall("ring-flat-poison", 8, |g: &mut Gen| {
+        let n = g.usize_in(2..6);
+        let len = g.usize_in(1..512);
+        for algo in [Algo::Flat, Algo::Ring] {
+            let comm = build(algo, n, len);
+            assert!(!comm.is_poisoned());
+            comm.poison();
+            comm.poison(); // idempotent
+            assert!(comm.is_poisoned(), "{algo}");
+            let mut buf = vec![0.0f32; len];
+            assert_eq!(comm.allreduce_mean(0, &mut buf), Err(Poisoned), "{algo}");
+            assert_eq!(comm.allreduce_scalar_sum(0, 1.0), Err(Poisoned), "{algo}");
+            assert_eq!(comm.broadcast(0, &mut buf), Err(Poisoned), "{algo}");
+            assert_eq!(comm.barrier(), Err(Poisoned), "{algo}");
+        }
+        // n = 1: collectives are no-ops and succeed under both algorithms
+        for algo in [Algo::Flat, Algo::Ring] {
+            let comm = build(algo, 1, len);
+            let mut buf = vec![1.0f32; len];
+            assert!(comm.allreduce_mean(0, &mut buf).is_ok(), "{algo}");
+            assert_eq!(comm.allreduce_scalar_sum(0, 2.5), Ok(2.5), "{algo}");
         }
     });
 }

@@ -1,0 +1,272 @@
+//! Offline, API-compatible subset of the `anyhow` crate (the registry is
+//! not reachable from this build environment, so the crate is vendored
+//! as a ~200-line reimplementation of the surface this repo uses):
+//!
+//! * [`Error`] — a context-carrying boxed error.  `Display` prints the
+//!   outermost context; `{:#}` prints the whole `context: ...: cause`
+//!   chain, exactly like upstream anyhow.
+//! * [`Result<T>`] — alias with `Error` as the default error type.
+//! * [`anyhow!`] / [`bail!`] / [`ensure!`] — format-style construction,
+//!   early return, checked condition.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//! * `Error::is::<E>()` / `Error::downcast_ref::<E>()` — walk the cause
+//!   chain (used to distinguish collective-poisoning errors from real
+//!   worker failures).
+//!
+//! Semantics intentionally mirror upstream where this repo depends on
+//! them; exotic upstream features (backtraces, dyn chains via
+//! `.chain()`) are omitted.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A dynamically typed error with a stack of human-readable context
+/// strings on top of a root cause.
+pub struct Error {
+    /// context frames, outermost first
+    context: Vec<String>,
+    root: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Root cause for errors built from a message (`anyhow!`, `Error::msg`).
+struct Message(String);
+
+impl fmt::Display for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Message {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for Message {}
+
+impl Error {
+    /// Construct from a displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { context: Vec::new(), root: Box::new(Message(m.to_string())) }
+    }
+
+    /// Construct from a concrete error value.
+    pub fn new<E: StdError + Send + Sync + 'static>(e: E) -> Error {
+        Error { context: Vec::new(), root: Box::new(e) }
+    }
+
+    /// Wrap with an additional (outermost) context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.context.insert(0, c.to_string());
+        self
+    }
+
+    fn chain_start(&self) -> &(dyn StdError + 'static) {
+        &*self.root
+    }
+
+    /// The lowest-level cause in the chain.
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        let mut cur = self.chain_start();
+        while let Some(next) = cur.source() {
+            cur = next;
+        }
+        cur
+    }
+
+    /// Is some error in the cause chain of type `E`?
+    pub fn is<E: StdError + 'static>(&self) -> bool {
+        self.downcast_ref::<E>().is_some()
+    }
+
+    /// First error of type `E` in the cause chain, if any.
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        let mut cur: Option<&(dyn StdError + 'static)> = Some(self.chain_start());
+        while let Some(e) = cur {
+            if let Some(hit) = e.downcast_ref::<E>() {
+                return Some(hit);
+            }
+            cur = e.source();
+        }
+        None
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: full "context: context: root: cause" chain
+            for c in &self.context {
+                write!(f, "{c}: ")?;
+            }
+            write!(f, "{}", self.root)?;
+            let mut src = self.root.source();
+            while let Some(s) = src {
+                write!(f, ": {s}")?;
+                src = s.source();
+            }
+            Ok(())
+        } else if let Some(c) = self.context.first() {
+            f.write_str(c)
+        } else {
+            write!(f, "{}", self.root)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // the full chain; what `unwrap()` panics print
+        write!(f, "{:#}", self)
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::new(e)
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+}
+
+/// `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// `if !cond { bail!(..) }`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                "condition failed: `{}`",
+                ::std::stringify!($cond)
+            ));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug, PartialEq)]
+    struct Leaf;
+    impl fmt::Display for Leaf {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("leaf failure")
+        }
+    }
+    impl StdError for Leaf {}
+
+    #[test]
+    fn display_outermost_alternate_full_chain() {
+        let e: Error = Error::new(Leaf).context("mid").context("outer");
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: leaf failure");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<i32> {
+            let v: i32 = "nope".parse()?;
+            Ok(v)
+        }
+        let e = inner().unwrap_err();
+        assert!(e.is::<std::num::ParseIntError>());
+    }
+
+    #[test]
+    fn downcast_survives_context() {
+        let e: Error = Error::new(Leaf).context("while working");
+        assert!(e.is::<Leaf>());
+        assert_eq!(e.downcast_ref::<Leaf>(), Some(&Leaf));
+        assert!(!e.is::<std::io::Error>());
+    }
+
+    #[test]
+    fn macros_and_option_context() {
+        let e = anyhow!("value was {}", 42);
+        assert_eq!(e.to_string(), "value was 42");
+        fn f() -> Result<()> {
+            bail!("boom {}", 1);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom 1");
+        let none: Option<u8> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn ensure_macro() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(-1).unwrap_err().to_string(), "x must be positive, got -1");
+        fn bare(x: i32) -> Result<()> {
+            ensure!(x > 0);
+            Ok(())
+        }
+        assert!(bare(0).unwrap_err().to_string().contains("x > 0"));
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: std::result::Result<(), Leaf> = Err(Leaf);
+        let e = r.with_context(|| format!("attempt {}", 3)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "attempt 3: leaf failure");
+    }
+}
