@@ -1,0 +1,101 @@
+//! Campaign-scheduler benchmark: the strategy × collective quartet sweep
+//! at quick scale, executed serially and with two concurrent runs.
+//!
+//! Emits a machine-readable summary line (`BENCH_CAMPAIGN_JSON {...}`)
+//! *and* writes it to `BENCH_campaign.json`, so the scheduler's
+//! throughput (runs/sec) and the sweep's total modeled communication
+//! accumulate as a perf trajectory across commits.  The headline
+//! numbers: runs/sec at each parallelism level and the parallel
+//! speedup (bounded-parallel scheduling overlaps whole coordinator
+//! clusters).
+
+use adpsgd::collective::Algo;
+use adpsgd::config::{ExperimentConfig, LrSchedule, StrategySpec};
+use adpsgd::experiment::{Campaign, CampaignReport};
+use adpsgd::period::Strategy;
+use adpsgd::util::json::Json;
+
+fn tiny_base(iters: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "bench_campaign".into();
+    cfg.nodes = 4;
+    cfg.iters = iters;
+    cfg.batch_per_node = 16;
+    cfg.eval_every = iters / 4;
+    cfg.workload.input_dim = 48;
+    cfg.workload.hidden = 24;
+    cfg.workload.eval_batches = 4;
+    cfg.optim.schedule = LrSchedule::Const;
+    cfg.optim.lr0 = 0.05;
+    cfg.sync.warmup_iters = 4;
+    cfg.sync.p_init = 2;
+    cfg.sync.period = 4;
+    cfg
+}
+
+fn quartet(base: &ExperimentConfig, parallelism: usize) -> Campaign {
+    Campaign::builder("bench", base.clone())
+        .strategy("full", StrategySpec::Full)
+        .strategy("cpsgd", base.sync.spec_of(Strategy::Constant))
+        .strategy("adpsgd", base.sync.spec_of(Strategy::Adaptive))
+        .strategy("qsgd", base.sync.spec_of(Strategy::Qsgd))
+        .collectives(&[Algo::Ring, Algo::Flat])
+        .parallelism(parallelism)
+        .build()
+        .expect("bench campaign builds")
+}
+
+fn report_line(tag: &str, r: &CampaignReport) {
+    println!(
+        "campaign/{tag:<24} {} runs in {:>8.2?} ({:.2} runs/sec)",
+        r.runs.len(),
+        std::time::Duration::from_secs_f64(r.wall_secs),
+        r.runs_per_sec()
+    );
+}
+
+fn main() {
+    let fast = std::env::var("ADPSGD_BENCH_FAST").is_ok();
+    let iters = if fast { 80 } else { 240 };
+    let base = tiny_base(iters);
+    println!("\n== bench group: campaign scheduler (quartet × {{ring,flat}}, {iters} iters) ==");
+
+    let serial = quartet(&base, 1).run().expect("serial campaign");
+    report_line("serial_p1", &serial);
+
+    let parallel = quartet(&base, 2).run().expect("parallel campaign");
+    report_line("parallel_p2", &parallel);
+
+    // determinism across scheduling levels is part of the contract
+    for (a, b) in serial.runs.iter().zip(&parallel.runs) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(
+            a.report.final_train_loss, b.report.final_train_loss,
+            "{}: parallel scheduling changed results",
+            a.label
+        );
+    }
+
+    let speedup = serial.wall_secs / parallel.wall_secs.max(1e-12);
+    println!("    -> parallel speedup {speedup:.2}x; total modeled comm {:.3}s", serial.total_modeled_comm_secs());
+
+    let summary = Json::obj(vec![
+        ("bench", Json::str("campaign_scheduler")),
+        ("iters", Json::num(iters as f64)),
+        ("runs", Json::num(serial.runs.len() as f64)),
+        ("wall_secs_p1", Json::num(serial.wall_secs)),
+        ("wall_secs_p2", Json::num(parallel.wall_secs)),
+        ("runs_per_sec_p1", Json::num(serial.runs_per_sec())),
+        ("runs_per_sec_p2", Json::num(parallel.runs_per_sec())),
+        ("parallel_speedup", Json::num(speedup)),
+        ("total_modeled_comm_secs", Json::num(serial.total_modeled_comm_secs())),
+        ("total_wire_bytes", Json::num(serial.total_wire_bytes() as f64)),
+    ]);
+    let line = summary.to_string_compact();
+    println!("BENCH_CAMPAIGN_JSON {line}");
+    if let Err(e) = std::fs::write("BENCH_campaign.json", &line) {
+        eprintln!("warning: could not write BENCH_campaign.json: {e}");
+    } else {
+        println!("wrote BENCH_campaign.json");
+    }
+}

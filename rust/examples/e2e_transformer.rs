@@ -16,9 +16,9 @@
 
 use adpsgd::cli::Args;
 use adpsgd::config::{Backend, ExperimentConfig, LrSchedule};
+use adpsgd::experiment::Experiment;
 use adpsgd::metrics::Table;
 use adpsgd::period::Strategy;
-use adpsgd::Trainer;
 use anyhow::{Context, Result};
 
 fn main() -> Result<()> {
@@ -56,7 +56,7 @@ fn main() -> Result<()> {
     for strategy in [Strategy::Adaptive, Strategy::Full] {
         let mut c = cfg.clone();
         c.sync.strategy = strategy;
-        let report = Trainer::new(c)?.run()?;
+        let report = Experiment::from_config(c)?.run()?;
 
         let loss = report.recorder.get("train_loss").context("loss series missing")?;
         let first = loss.points.first().map(|p| p.1).unwrap_or(f64::NAN);

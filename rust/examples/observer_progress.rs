@@ -1,0 +1,128 @@
+//! Session API tour: a custom [`RunObserver`] rendering live progress
+//! from the coordinator's typed event stream, plus a custom
+//! [`PeriodController`] injected past the registry.
+//!
+//! ```text
+//! cargo run --release --example observer_progress -- [--nodes 8] [--iters 600]
+//! cargo run --release --example observer_progress -- --controller cosine
+//! ```
+
+use adpsgd::cli::Args;
+use adpsgd::config::{LrSchedule, StrategySpec};
+use adpsgd::experiment::{Experiment, RunEvent, RunObserver};
+use adpsgd::period::PeriodController;
+use anyhow::Result;
+
+/// Prints one status line per loss-agreement window, straight off the
+/// event stream — no polling, no recorder post-processing.
+struct Progress {
+    iters: usize,
+    syncs: usize,
+    last_period: usize,
+}
+
+impl RunObserver for Progress {
+    fn on_event(&mut self, ev: &RunEvent<'_>) -> Result<()> {
+        match ev {
+            RunEvent::RunStart { cfg, n_params, resume_iter } => {
+                println!(
+                    "run {} | {} nodes × {} iters | {} params | resume@{}",
+                    cfg.name, cfg.nodes, cfg.iters, n_params, resume_iter
+                );
+            }
+            RunEvent::SyncDone { period, .. } => {
+                self.syncs += 1;
+                self.last_period = *period;
+            }
+            RunEvent::IterEnd { k, lr, loss: Some(loss) } => {
+                println!(
+                    "  k={k:>5}/{} loss={loss:.4} lr={lr:.4} syncs={} p={}",
+                    self.iters, self.syncs, self.last_period
+                );
+            }
+            RunEvent::EvalDone { k, loss, acc } => {
+                println!("  k={k:>5} eval: loss={loss:.4} acc={acc:.4}");
+            }
+            RunEvent::RunEnd { .. } => println!("done: {} syncs total", self.syncs),
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+/// A schedule the registry does not know: period follows a slow cosine
+/// between 2 and 10 — demonstrating that *any* `PeriodController` can
+/// drive the pipeline without touching the coordinator.
+struct CosinePeriod {
+    total: usize,
+    cnt: usize,
+    p: usize,
+}
+
+impl CosinePeriod {
+    fn new(total: usize) -> Self {
+        CosinePeriod { total, cnt: 0, p: 2 }
+    }
+}
+
+impl PeriodController for CosinePeriod {
+    fn should_sync(&mut self, k: usize) -> bool {
+        let phase = (k as f64 / self.total.max(1) as f64) * std::f64::consts::PI;
+        self.p = (6.0 - 4.0 * phase.cos()).round() as usize; // 2 -> 10
+        self.cnt += 1;
+        if self.cnt >= self.p.max(1) {
+            self.cnt = 0;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn on_sync(&mut self, _k: usize, _s_k: f64, _lr: f32) {}
+
+    fn current_period(&self) -> usize {
+        self.p
+    }
+
+    fn name(&self) -> &'static str {
+        "cosine"
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env(&[])?;
+    let nodes = args.get_usize("nodes", 8)?;
+    let iters = args.get_usize("iters", 600)?;
+    let use_cosine = args.get("controller") == Some("cosine");
+
+    let mut builder = Experiment::builder()
+        .name("observer_demo")
+        .nodes(nodes)
+        .iters(iters)
+        .batch_per_node(16)
+        .eval_every(iters / 4)
+        .strategy(StrategySpec::Adaptive {
+            p_init: 4,
+            warmup_iters: iters / 50,
+            ks_frac: 0.25,
+            low: 0.7,
+            high: 1.3,
+        })
+        .configure(|c| {
+            c.workload.input_dim = 64;
+            c.workload.hidden = 32;
+            c.optim.schedule = LrSchedule::Const;
+        })
+        .observer(Box::new(Progress { iters, syncs: 0, last_period: 0 }));
+    if use_cosine {
+        println!("using the injected cosine period controller\n");
+        builder = builder.period_controller(move || Box::new(CosinePeriod::new(iters)));
+    }
+
+    let report = builder.build()?.run()?;
+    println!(
+        "\nfinal: loss={:.4} acc={:.4} syncs={} p̄={:.2}",
+        report.final_train_loss, report.best_eval_acc, report.syncs, report.avg_period
+    );
+    Ok(())
+}

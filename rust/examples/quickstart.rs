@@ -2,6 +2,9 @@
 //! paper's four strategies and print the convergence/communication
 //! comparison — the 60-second tour of the public API.
 //!
+//! The four-strategy sweep is one declarative [`Campaign`]: a strategy
+//! axis over typed specs, executed through the session API.
+//!
 //! ```text
 //! cargo run --release --example quickstart
 //! cargo run --release --example quickstart -- --nodes 16 --iters 2000
@@ -10,11 +13,11 @@
 
 use adpsgd::cli::Args;
 use adpsgd::collective::Algo;
-use adpsgd::config::{Backend, ExperimentConfig, LrSchedule, NetConfig};
+use adpsgd::config::{Backend, ExperimentConfig, LrSchedule, NetConfig, StrategySpec};
+use adpsgd::experiment::Campaign;
 use adpsgd::metrics::Table;
 use adpsgd::netsim::NetModel;
 use adpsgd::period::Strategy;
-use adpsgd::Trainer;
 use anyhow::Result;
 
 fn main() -> Result<()> {
@@ -48,7 +51,17 @@ fn main() -> Result<()> {
         collective
     );
 
-    // 2. Run each strategy through the coordinator.
+    // 2. Declare the four-strategy sweep as a campaign.  Each strategy
+    //    carries exactly its own typed knobs, projected from the base.
+    let report = Campaign::builder("quickstart", cfg.clone())
+        .strategy("FULLSGD", StrategySpec::Full)
+        .strategy("CPSGD", cfg.sync.spec_of(Strategy::Constant))
+        .strategy("ADPSGD", cfg.sync.spec_of(Strategy::Adaptive))
+        .strategy("QSGD", cfg.sync.spec_of(Strategy::Qsgd))
+        .build()?
+        .run()?;
+
+    // 3. Re-price each run's comm ledger under both bandwidth presets.
     let fast = NetModel::new(&NetConfig::infiniband_100g());
     let slow = NetModel::new(&NetConfig::ethernet_10g());
     let mut table = Table::new(&[
@@ -65,26 +78,20 @@ fn main() -> Result<()> {
     // paper's Fig 4c shows near-equal computation bars), so model the
     // totals from one common compute baseline instead of per-run thread-
     // contention noise on this host.
-    let mut common_compute: Option<f64> = None;
+    let compute = report.get("FULLSGD").compute_secs;
     let mut full_totals: Option<(f64, f64)> = None;
-    for strategy in [Strategy::Full, Strategy::Constant, Strategy::Adaptive, Strategy::Qsgd] {
-        let mut c = cfg.clone();
-        c.sync.strategy = strategy;
-        let report = Trainer::new(c)?.run()?;
-        let compute = *common_compute.get_or_insert(report.compute_secs);
-        let t100 = compute + report.ledger.modeled_secs(&fast);
-        let t10 = compute + report.ledger.modeled_secs(&slow);
-        if strategy == Strategy::Full {
-            full_totals = Some((t100, t10));
-        }
-        let (f100, f10) = full_totals.unwrap();
+    for run in &report.runs {
+        let r = &run.report;
+        let t100 = compute + r.ledger.modeled_secs(&fast);
+        let t10 = compute + r.ledger.modeled_secs(&slow);
+        let (f100, f10) = *full_totals.get_or_insert((t100, t10));
         table.row(&[
-            strategy.to_string(),
-            format!("{:.4}", report.final_train_loss),
-            format!("{:.4}", report.best_eval_acc),
-            report.syncs.to_string(),
-            format!("{:.2}", report.avg_period),
-            format!("{:.2}", report.ledger.total_wire_bytes() as f64 / 1e6),
+            run.label.clone(),
+            format!("{:.4}", r.final_train_loss),
+            format!("{:.4}", r.best_eval_acc),
+            r.syncs.to_string(),
+            format!("{:.2}", r.avg_period),
+            format!("{:.2}", r.ledger.total_wire_bytes() as f64 / 1e6),
             format!("{} ({:.2}x)", adpsgd::util::fmt::secs(t100), f100 / t100),
             format!("{} ({:.2}x)", adpsgd::util::fmt::secs(t10), f10 / t10),
         ]);

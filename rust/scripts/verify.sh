@@ -1,12 +1,17 @@
 #!/usr/bin/env bash
-# Tier-1 verification: build + full test suite + one quickstart smoke run
-# under each collective algorithm.  Referenced from ROADMAP.md; CI and
-# pre-merge checks should run exactly this.
+# Tier-1 verification: build + full test suite + examples build + one
+# quickstart smoke run under each collective algorithm + a campaign
+# smoke sweep (strategy × collective) + the campaign-scheduler bench
+# (emits BENCH_campaign.json for the perf trajectory).  Referenced from
+# ROADMAP.md; CI and pre-merge checks should run exactly this.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 echo "== verify: cargo build --release =="
 cargo build --release
+
+echo "== verify: cargo build --release --examples =="
+cargo build --release --examples
 
 echo "== verify: cargo test -q =="
 cargo test -q
@@ -15,5 +20,11 @@ for algo in flat ring; do
     echo "== verify: quickstart smoke run (collective = ${algo}) =="
     cargo run --release --example quickstart -- --quick --iters 200 --nodes 4 --collective "${algo}"
 done
+
+echo "== verify: campaign smoke sweep (strategy x collective) =="
+cargo run --release -- campaign --quick --name verify_campaign --parallel 2 --out /tmp/adpsgd_verify
+
+echo "== verify: campaign scheduler bench (fast) =="
+ADPSGD_BENCH_FAST=1 cargo bench --bench bench_campaign
 
 echo "== verify: OK =="

@@ -86,6 +86,13 @@ impl Args {
 
     /// All `--set key=value` style config overrides: collects every
     /// option whose key contains a '.' (dotted config path).
+    ///
+    /// Application is strict: when these overrides are applied
+    /// (`ExperimentConfig::from_file` / `from_overrides` /
+    /// `apply_overrides`), keys that are unknown, or that name a
+    /// strategy knob not belonging to the configured `sync.strategy`
+    /// (e.g. `--sync.qsgd_levels` under `strategy=adpsgd`), are rejected
+    /// with the list of valid keys — never silently ignored.
     pub fn config_overrides(&self) -> Vec<(String, String)> {
         self.options
             .iter()

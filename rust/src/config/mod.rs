@@ -4,8 +4,27 @@
 //! is described by an [`ExperimentConfig`].  Configs can be built in
 //! code, loaded from a TOML file, or patched by `--key=value` CLI
 //! overrides (see [`crate::cli`]).
+//!
+//! Strategy knobs have two forms:
+//!
+//! * **typed / nested (canonical)** — `[sync.<strategy>]` tables whose
+//!   keys are exactly the knobs that strategy consumes (see
+//!   [`spec::StrategySpec`]); the same keys work as dotted CLI
+//!   overrides (`--sync.adaptive.p_init=4`).
+//! * **legacy flat** — the historical `[sync]` keys (`sync.p_init`,
+//!   `sync.qsgd_levels`, …).  They keep loading through a compat layer
+//!   (with a one-time deprecation note on stderr), and nested keys win
+//!   when both are present.
+//!
+//! CLI overrides are checked against the *chosen* strategy: a knob that
+//! belongs to a different strategy (`--sync.qsgd_levels` under
+//! `sync.strategy = adaptive`) is an error that lists the valid keys,
+//! instead of being silently absorbed into an unused field.
 
+pub mod spec;
 pub mod toml;
+
+pub use spec::StrategySpec;
 
 use crate::collective::Algo as CollectiveAlgo;
 use crate::period::Strategy;
@@ -270,30 +289,157 @@ impl ExperimentConfig {
         if self.net.bandwidth_gbps <= 0.0 || self.net.latency_us < 0.0 {
             bail!("network parameters must be positive");
         }
+        // per-strategy half: the typed spec validates its own knobs
+        self.sync.spec().validate()?;
         Ok(())
     }
 
+    /// Parse an override value the way TOML would, falling back to a
+    /// bare string (CLI users don't quote strategy names).
+    pub(crate) fn parse_override_value(v: &str) -> TomlValue {
+        toml::TomlDoc::parse(&format!("x = {v}"))
+            .ok()
+            .and_then(|d| d.get("x").cloned())
+            .unwrap_or_else(|| TomlValue::Str(v.to_string()))
+    }
+
     /// Load from a TOML file, then apply `overrides` ("key=value" pairs,
-    /// dotted keys matching the TOML schema).
+    /// dotted keys matching the TOML schema).  Override keys are
+    /// strictly checked against the chosen strategy's knob set.
     pub fn from_file(path: &str, overrides: &[(String, String)]) -> Result<Self> {
+        let cfg = Self::from_file_lenient(path, overrides)?;
+        Self::check_override_keys(&[cfg.sync.strategy], overrides)?;
+        Ok(cfg)
+    }
+
+    /// [`Self::from_file`] without the per-strategy override check — for
+    /// callers that sweep several strategies (`adpsgd campaign`) and
+    /// validate overrides against the whole swept set themselves via
+    /// [`Self::check_override_keys`].
+    pub fn from_file_lenient(path: &str, overrides: &[(String, String)]) -> Result<Self> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
         let mut doc = TomlDoc::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
         for (k, v) in overrides {
-            let val = toml::TomlDoc::parse(&format!("x = {v}"))
-                .ok()
-                .and_then(|d| d.get("x").cloned())
-                .unwrap_or_else(|| TomlValue::Str(v.clone()));
-            doc.entries.insert(k.clone(), val);
+            doc.entries.insert(k.clone(), Self::parse_override_value(v));
         }
         Self::from_doc(&doc)
     }
 
+    /// Build a config from dotted overrides alone (no file) — what
+    /// `adpsgd run` does when `--config` is absent.
+    pub fn from_overrides(overrides: &[(String, String)]) -> Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_overrides(overrides)?;
+        Ok(cfg)
+    }
+
+    /// Apply dotted overrides on top of this config (strictly checked
+    /// against the chosen strategy), then re-validate.
+    pub fn apply_overrides(&mut self, overrides: &[(String, String)]) -> Result<()> {
+        self.apply_overrides_lenient(overrides)?;
+        Self::check_override_keys(&[self.sync.strategy], overrides)
+    }
+
+    /// [`Self::apply_overrides`] without the per-strategy check (see
+    /// [`Self::from_file_lenient`]).
+    pub fn apply_overrides_lenient(&mut self, overrides: &[(String, String)]) -> Result<()> {
+        let mut doc = TomlDoc::default();
+        for (k, v) in overrides {
+            doc.entries.insert(k.clone(), Self::parse_override_value(v));
+        }
+        self.apply_doc(&doc)?;
+        self.validate()
+    }
+
+    /// Reject override keys that are unknown or belong to a strategy
+    /// outside `strategies` (one entry for a single run; the swept set
+    /// for a campaign), listing the valid key set.
+    pub fn check_override_keys(
+        strategies: &[Strategy],
+        overrides: &[(String, String)],
+    ) -> Result<()> {
+        let snames: Vec<&str> =
+            strategies.iter().map(|s| spec::canonical_name(*s)).collect();
+        let sdesc = if snames.len() == 1 {
+            format!("sync.strategy = {}", snames[0])
+        } else {
+            format!("the swept strategies are {{{}}}", snames.join(", "))
+        };
+        let valid_desc = || -> String {
+            strategies.iter().map(|s| spec::describe_keys(*s)).collect::<Vec<_>>().join("; ")
+        };
+        for (k, _) in overrides {
+            let Some(rest) = k.strip_prefix("sync.") else { continue };
+            if rest == "strategy" || rest == "collective" {
+                continue;
+            }
+            if let Some((table, key)) = rest.split_once('.') {
+                let Some(tkind) = spec::kind_for_table(table) else {
+                    // defense for standalone callers; the doc-level
+                    // known-key check usually rejects these first
+                    bail!(
+                        "override --{k}: unknown strategy table \"sync.{table}\" \
+                         (strategies: full|constant|adaptive|decreasing|qsgd|piecewise|easgd|topk)"
+                    );
+                };
+                if !strategies.contains(&tkind) {
+                    bail!(
+                        "override --{k} configures strategy {}, but {sdesc}; \
+                         valid sync keys: {}",
+                        spec::canonical_name(tkind),
+                        valid_desc()
+                    );
+                }
+                if !spec::nested_keys(tkind).contains(&key) {
+                    bail!(
+                        "override --{k}: {} has no knob {key:?}; valid sync keys: {}",
+                        spec::canonical_name(tkind),
+                        valid_desc()
+                    );
+                }
+            } else if !strategies.iter().any(|s| spec::legacy_fields(*s).contains(&rest)) {
+                let owners: Vec<&str> = spec::ALL_STRATEGIES
+                    .into_iter()
+                    .filter(|s| spec::legacy_fields(*s).contains(&rest))
+                    .map(spec::canonical_name)
+                    .collect();
+                if owners.is_empty() {
+                    // not a strategy knob at all (unknown keys are
+                    // rejected earlier by the known-key check)
+                    continue;
+                }
+                bail!(
+                    "override --{k} is a {} knob, but {sdesc}; valid sync keys: {}",
+                    owners.join("/"),
+                    valid_desc()
+                );
+            }
+        }
+        Ok(())
+    }
+
     pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
         let mut cfg = ExperimentConfig::default();
+        cfg.apply_doc(doc)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply a parsed document onto this config (no validation) — the
+    /// shared core of [`Self::from_doc`], [`Self::from_file`], and the
+    /// experiment builder's dotted `set()` overrides.
+    pub(crate) fn apply_doc(&mut self, doc: &TomlDoc) -> Result<()> {
+        let cfg = self;
         let known = Self::known_keys();
         for key in doc.entries.keys() {
-            if !known.contains(&key.as_str()) {
-                bail!("unknown config key {key:?} (known: {known:?})");
+            if !known.iter().any(|k| k == key) {
+                bail!(
+                    "unknown config key {key:?} (top-level: name seed nodes iters \
+                     batch_per_node eval_every variance_every threads artifacts_dir \
+                     checkpoint_every checkpoint_dir init_from; sections: workload optim \
+                     sync net; per-strategy tables: [sync.<strategy>] — \
+                     run `adpsgd help` for the schema)"
+                );
             }
         }
         let gs = |k: &str| doc.get(k).and_then(TomlValue::as_str).map(str::to_string);
@@ -447,12 +593,64 @@ impl ExperimentConfig {
             cfg.net.latency_us = v;
         }
 
-        cfg.validate()?;
-        Ok(cfg)
+        // nested per-strategy tables: every [sync.<strategy>] table is
+        // applied onto the flat carrier, so tables for strategies not
+        // currently chosen still configure those strategies' knobs for
+        // campaign sweeps (read back via `SyncConfig::spec_of`).  The
+        // chosen strategy's effective knobs (its flat keys overlaid with
+        // its own table) are captured first and re-applied last, so a
+        // foreign table can never leak into the chosen strategy through
+        // a shared carrier field like `period`.  The one remaining
+        // carrier limitation: two *non-chosen* strategies that share a
+        // flat field (constant/easgd both store `period`) overwrite each
+        // other, last table wins.
+        let chosen = cfg.sync.strategy;
+        let overlay = |sp: &mut spec::StrategySpec,
+                       kind: Strategy|
+         -> Result<()> {
+            for table in spec::table_names(kind) {
+                for key in spec::nested_keys(kind) {
+                    if let Some(v) = doc.get(&format!("sync.{table}.{key}")) {
+                        sp.set_nested(key, v)?;
+                    }
+                }
+            }
+            Ok(())
+        };
+        let mut chosen_sp = cfg.sync.spec();
+        for kind in spec::ALL_STRATEGIES.into_iter().filter(|k| *k != chosen) {
+            let mut sp = cfg.sync.spec_of(kind);
+            overlay(&mut sp, kind)?;
+            sp.apply_knobs_to(&mut cfg.sync);
+        }
+        overlay(&mut chosen_sp, chosen)?;
+        chosen_sp.apply_knobs_to(&mut cfg.sync);
+
+        // legacy flat strategy knobs still load — note it once
+        let legacy_used = doc.entries.keys().any(|k| {
+            k.strip_prefix("sync.").is_some_and(|f| {
+                !f.contains('.')
+                    && spec::ALL_STRATEGIES
+                        .into_iter()
+                        .any(|s| spec::legacy_fields(s).contains(&f))
+            })
+        });
+        if legacy_used {
+            static NOTE: std::sync::Once = std::sync::Once::new();
+            NOTE.call_once(|| {
+                eprintln!(
+                    "note: flat [sync] strategy keys (sync.p_init, sync.qsgd_levels, ...) are \
+                     deprecated; prefer [sync.<strategy>] tables (e.g. [sync.adaptive]). \
+                     Legacy keys keep loading."
+                );
+            });
+        }
+
+        Ok(())
     }
 
-    fn known_keys() -> Vec<&'static str> {
-        vec![
+    fn known_keys() -> Vec<String> {
+        let mut keys: Vec<String> = [
             "name",
             "seed",
             "nodes",
@@ -498,6 +696,17 @@ impl ExperimentConfig {
             "net.bandwidth_gbps",
             "net.latency_us",
         ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        for kind in spec::ALL_STRATEGIES {
+            for table in spec::table_names(kind) {
+                for key in spec::nested_keys(kind) {
+                    keys.push(format!("sync.{table}.{key}"));
+                }
+            }
+        }
+        keys
     }
 }
 
@@ -584,5 +793,106 @@ latency_us = 25.0
         let doc = TomlDoc::parse("[workload]\nbackend = \"hlo\"\nmodel = \"mlp_small\"").unwrap();
         let cfg = ExperimentConfig::from_doc(&doc).unwrap();
         assert_eq!(cfg.workload.backend, Backend::Hlo("mlp_small".into()));
+    }
+
+    #[test]
+    fn nested_strategy_table_parses_and_beats_flat() {
+        let doc = TomlDoc::parse(
+            "[sync]\nstrategy = \"adaptive\"\np_init = 2\n\n[sync.adaptive]\np_init = 6\nks_frac = 0.2",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.sync.p_init, 6, "nested key must win over flat");
+        assert_eq!(cfg.sync.ks_frac, 0.2);
+        assert_eq!(
+            cfg.sync.spec(),
+            StrategySpec::Adaptive { p_init: 6, warmup_iters: 0, ks_frac: 0.2, low: 0.7, high: 1.3 }
+        );
+    }
+
+    #[test]
+    fn nested_table_alias_accepted() {
+        let doc =
+            TomlDoc::parse("[sync]\nstrategy = \"adpsgd\"\n\n[sync.adpsgd]\np_init = 9").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.sync.p_init, 9);
+    }
+
+    #[test]
+    fn foreign_nested_table_configures_that_strategy_for_sweeps() {
+        // a file may carry tables for strategies not currently chosen
+        // (sweep bases): the knobs are stored and spec_of projects them,
+        // so a campaign sweeping qsgd sees levels = 15 — not a silently
+        // dropped table
+        let doc = TomlDoc::parse(
+            "[sync]\nstrategy = \"constant\"\nperiod = 5\n\n[sync.qsgd]\nlevels = 15",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.sync.strategy, Strategy::Constant);
+        assert_eq!(cfg.sync.period, 5);
+        assert_eq!(cfg.sync.qsgd_levels, 15);
+        assert_eq!(
+            cfg.sync.spec_of(Strategy::Qsgd),
+            StrategySpec::Qsgd { levels: 15, bucket: SyncConfig::default().qsgd_bucket }
+        );
+    }
+
+    #[test]
+    fn chosen_strategy_nested_table_wins_shared_fields() {
+        // constant and easgd share the flat `period` carrier: the chosen
+        // strategy's table is applied last and wins
+        let doc = TomlDoc::parse(
+            "[sync]\nstrategy = \"constant\"\n\n[sync.constant]\nperiod = 5\n\n[sync.easgd]\nperiod = 9\nalpha = 0.5",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.sync.period, 5, "chosen strategy's period must win");
+        assert_eq!(cfg.sync.easgd_alpha, 0.5);
+    }
+
+    #[test]
+    fn foreign_table_cannot_leak_into_chosen_strategy_flat_knobs() {
+        // chosen constant configured via the flat key only; a sweep-base
+        // [sync.easgd] table must not rewrite the chosen run's period
+        let doc = TomlDoc::parse(
+            "[sync]\nstrategy = \"constant\"\nperiod = 8\n\n[sync.easgd]\nperiod = 9\nalpha = 0.5",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.sync.period, 8, "foreign easgd table must not leak into CPSGD");
+        assert_eq!(cfg.sync.easgd_alpha, 0.5, "easgd's own (unshared) knob is stored");
+    }
+
+    #[test]
+    fn mismatched_override_is_rejected_with_key_list() {
+        let overrides = vec![("sync.qsgd_levels".to_string(), "15".to_string())];
+        let err = ExperimentConfig::from_overrides(&overrides).unwrap_err().to_string();
+        assert!(err.contains("qsgd knob"), "{err}");
+        assert!(err.contains("sync.adaptive.p_init"), "must list valid keys: {err}");
+
+        let overrides = vec![("sync.qsgd.levels".to_string(), "15".to_string())];
+        let err = ExperimentConfig::from_overrides(&overrides).unwrap_err().to_string();
+        assert!(err.contains("sync.strategy = adaptive"), "{err}");
+    }
+
+    #[test]
+    fn matching_override_accepted_nested_and_flat() {
+        let overrides = vec![
+            ("sync.strategy".to_string(), "qsgd".to_string()),
+            ("sync.qsgd.levels".to_string(), "15".to_string()),
+            ("sync.qsgd_bucket".to_string(), "128".to_string()),
+        ];
+        let cfg = ExperimentConfig::from_overrides(&overrides).unwrap();
+        assert_eq!(cfg.sync.strategy, Strategy::Qsgd);
+        assert_eq!(cfg.sync.qsgd_levels, 15);
+        assert_eq!(cfg.sync.qsgd_bucket, 128);
+    }
+
+    #[test]
+    fn unknown_strategy_table_override_rejected() {
+        let overrides = vec![("sync.mesh.levels".to_string(), "15".to_string())];
+        let err = ExperimentConfig::from_overrides(&overrides).unwrap_err().to_string();
+        assert!(err.contains("unknown"), "{err}");
     }
 }

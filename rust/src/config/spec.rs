@@ -1,0 +1,463 @@
+//! Typed, per-strategy experiment knobs — the tagged replacement for the
+//! flat `[sync]` knob-soup.
+//!
+//! A [`StrategySpec`] carries exactly the knobs its strategy consumes:
+//! `Adaptive { p_init, warmup_iters, ks_frac, low, high }` cannot be
+//! configured with QSGD quantization levels, and a misplaced knob is a
+//! *structural* impossibility rather than a silently-ignored field.
+//!
+//! Three representations round-trip through this module:
+//!
+//! * **typed** — the enum itself, what [`crate::experiment::Experiment`]
+//!   and [`crate::experiment::Campaign`] consume;
+//! * **nested TOML** — `[sync.<strategy>]` tables
+//!   (`[sync.adaptive]\np_init = 4`), the canonical file format, also
+//!   reachable as dotted CLI overrides (`--sync.adaptive.p_init=4`);
+//! * **legacy flat** — the historical `[sync]` keys (`sync.p_init`,
+//!   `sync.qsgd_levels`, …), kept loading by the compat layer in
+//!   [`super::ExperimentConfig::from_doc`] with a one-time deprecation
+//!   note.
+//!
+//! The flat [`super::SyncConfig`] struct remains the storage carrier (a
+//! lot of call sites patch it directly); [`SyncConfig::spec`] projects
+//! flat → typed and [`StrategySpec::apply_to`] writes typed → flat, so
+//! the two views cannot drift per-strategy.
+
+use super::toml::TomlValue;
+use super::SyncConfig;
+use crate::period::Strategy;
+use anyhow::{bail, Result};
+
+/// Every strategy kind, in canonical order (used to enumerate key sets).
+pub const ALL_STRATEGIES: [Strategy; 8] = [
+    Strategy::Full,
+    Strategy::Constant,
+    Strategy::Adaptive,
+    Strategy::Decreasing,
+    Strategy::Qsgd,
+    Strategy::Piecewise,
+    Strategy::Easgd,
+    Strategy::TopK,
+];
+
+/// Accepted `[sync.<name>]` table names per strategy (first = canonical;
+/// the rest are the same aliases `Strategy::from_str` accepts).
+pub fn table_names(kind: Strategy) -> &'static [&'static str] {
+    match kind {
+        Strategy::Full => &["full", "fullsgd"],
+        Strategy::Constant => &["constant", "cpsgd"],
+        Strategy::Adaptive => &["adaptive", "adpsgd"],
+        Strategy::Decreasing => &["decreasing"],
+        Strategy::Qsgd => &["qsgd"],
+        Strategy::Piecewise => &["piecewise"],
+        Strategy::Easgd => &["easgd"],
+        Strategy::TopK => &["topk"],
+    }
+}
+
+/// Canonical table/spec name for a strategy kind.
+pub fn canonical_name(kind: Strategy) -> &'static str {
+    table_names(kind)[0]
+}
+
+/// Strategy kind for a `[sync.<table>]` name, if it is one.
+pub fn kind_for_table(table: &str) -> Option<Strategy> {
+    ALL_STRATEGIES.into_iter().find(|k| table_names(*k).contains(&table))
+}
+
+/// Nested (`sync.<strategy>.<key>`) knob names per strategy.
+pub fn nested_keys(kind: Strategy) -> &'static [&'static str] {
+    match kind {
+        Strategy::Full => &[],
+        Strategy::Constant => &["period"],
+        Strategy::Adaptive => &["p_init", "warmup_iters", "ks_frac", "low", "high"],
+        Strategy::Decreasing => &["first", "second"],
+        Strategy::Qsgd => &["levels", "bucket"],
+        Strategy::Piecewise => &["schedule"],
+        Strategy::Easgd => &["period", "alpha"],
+        Strategy::TopK => &["frac"],
+    }
+}
+
+/// Legacy flat (`sync.<field>`) knob names a strategy consumes.
+pub fn legacy_fields(kind: Strategy) -> &'static [&'static str] {
+    match kind {
+        Strategy::Full => &[],
+        Strategy::Constant => &["period"],
+        Strategy::Adaptive => &["p_init", "warmup_iters", "ks_frac", "low", "high"],
+        Strategy::Decreasing => &["dec_first", "dec_second"],
+        Strategy::Qsgd => &["qsgd_levels", "qsgd_bucket"],
+        Strategy::Piecewise => &["piecewise"],
+        Strategy::Easgd => &["period", "easgd_alpha"],
+        Strategy::TopK => &["topk_frac"],
+    }
+}
+
+/// Human-readable list of the sync keys valid under `kind`, for error
+/// messages ("valid sync keys for adaptive: …").
+pub fn describe_keys(kind: Strategy) -> String {
+    let name = canonical_name(kind);
+    let nested: Vec<String> =
+        nested_keys(kind).iter().map(|k| format!("sync.{name}.{k}")).collect();
+    let legacy: Vec<String> =
+        legacy_fields(kind).iter().map(|k| format!("sync.{k}")).collect();
+    let mut parts = vec!["sync.strategy".to_string(), "sync.collective".to_string()];
+    parts.extend(nested);
+    let mut s = parts.join(", ");
+    if !legacy.is_empty() {
+        s.push_str(&format!(" (legacy flat: {})", legacy.join(", ")));
+    }
+    s
+}
+
+/// A synchronization strategy plus exactly the knobs it consumes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StrategySpec {
+    /// FULLSGD: gradient allreduce every iteration. No knobs.
+    Full,
+    /// CPSGD (Algorithm 1): parameter averaging every `period` iters.
+    Constant { period: usize },
+    /// ADPSGD (Algorithm 2): warmup epoch at p=1, C₂ sampled for
+    /// `ks_frac·K` iterations, then p adapted inside `[low, high]`.
+    Adaptive { p_init: usize, warmup_iters: usize, ks_frac: f64, low: f64, high: f64 },
+    /// §V-B strawman: period `first` for the first half of training,
+    /// then `second`.
+    Decreasing { first: usize, second: usize },
+    /// QSGD: stochastic quantization to `levels` per `bucket`-sized
+    /// bucket, exchanged every iteration.
+    Qsgd { levels: u32, bucket: usize },
+    /// Explicit piecewise period schedule ("0:4,2000:8").
+    Piecewise { schedule: String },
+    /// EASGD: elastic averaging every `period` iters, each node moving
+    /// `alpha` of the way toward the mean.
+    Easgd { period: usize, alpha: f64 },
+    /// Top-k sparsification with error feedback, keeping `frac` of the
+    /// gradient components.
+    TopK { frac: f64 },
+}
+
+impl StrategySpec {
+    pub fn kind(&self) -> Strategy {
+        match self {
+            StrategySpec::Full => Strategy::Full,
+            StrategySpec::Constant { .. } => Strategy::Constant,
+            StrategySpec::Adaptive { .. } => Strategy::Adaptive,
+            StrategySpec::Decreasing { .. } => Strategy::Decreasing,
+            StrategySpec::Qsgd { .. } => Strategy::Qsgd,
+            StrategySpec::Piecewise { .. } => Strategy::Piecewise,
+            StrategySpec::Easgd { .. } => Strategy::Easgd,
+            StrategySpec::TopK { .. } => Strategy::TopK,
+        }
+    }
+
+    /// Canonical name ("adaptive", "qsgd", …): the `[sync.<name>]` table
+    /// and the period-controller registry key.
+    pub fn name(&self) -> &'static str {
+        canonical_name(self.kind())
+    }
+
+    /// The spec a strategy gets when nothing is configured (the knob
+    /// defaults of [`SyncConfig::default`]).
+    pub fn default_of(kind: Strategy) -> StrategySpec {
+        SyncConfig::default().spec_of(kind)
+    }
+
+    /// Whether this strategy exchanges gradients every iteration (no
+    /// period controller) rather than averaging parameters periodically.
+    pub fn is_gradient_mode(&self) -> bool {
+        matches!(
+            self,
+            StrategySpec::Full | StrategySpec::Qsgd { .. } | StrategySpec::TopK { .. }
+        )
+    }
+
+    /// Validate this spec's own knobs (the per-strategy half of
+    /// [`super::ExperimentConfig::validate`]).
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            StrategySpec::Full => {}
+            StrategySpec::Constant { period } => {
+                if *period == 0 {
+                    bail!("constant: period must be >= 1");
+                }
+            }
+            StrategySpec::Adaptive { p_init, ks_frac, low, high, .. } => {
+                if *p_init == 0 {
+                    bail!("adaptive: p_init must be >= 1");
+                }
+                if !(*low < 1.0 && *high > 1.0) {
+                    bail!("adaptive: thresholds must straddle 1.0 (low < 1 < high)");
+                }
+                if !(0.0..=1.0).contains(ks_frac) {
+                    bail!("adaptive: ks_frac must be in [0, 1]");
+                }
+            }
+            StrategySpec::Decreasing { first, second } => {
+                if *first == 0 || *second == 0 {
+                    bail!("decreasing: periods must be >= 1");
+                }
+            }
+            StrategySpec::Qsgd { levels, bucket } => {
+                if *levels == 0 || *bucket == 0 {
+                    bail!("qsgd: levels and bucket must be >= 1");
+                }
+            }
+            StrategySpec::Piecewise { schedule } => {
+                crate::period::Piecewise::parse(schedule)
+                    .map_err(|e| anyhow::anyhow!("piecewise schedule: {e}"))?;
+            }
+            StrategySpec::Easgd { period, alpha } => {
+                if *period == 0 {
+                    bail!("easgd: period must be >= 1");
+                }
+                if !(0.0 < *alpha && *alpha <= 1.0) {
+                    bail!("easgd: alpha must be in (0, 1]");
+                }
+            }
+            StrategySpec::TopK { frac } => {
+                if !(0.0 < *frac && *frac <= 1.0) {
+                    bail!("topk: frac must be in (0, 1]");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Write this spec into the flat carrier: sets the strategy tag and
+    /// the fields this strategy consumes, leaving unrelated knobs alone.
+    pub fn apply_to(&self, sync: &mut SyncConfig) {
+        sync.strategy = self.kind();
+        self.apply_knobs_to(sync);
+    }
+
+    /// Write only this spec's knobs into the flat carrier *without*
+    /// switching the strategy tag — how `[sync.<strategy>]` tables for
+    /// strategies other than the chosen one are stored, so campaign
+    /// sweeps (`SyncConfig::spec_of`) pick them up.
+    pub fn apply_knobs_to(&self, sync: &mut SyncConfig) {
+        match self {
+            StrategySpec::Full => {}
+            StrategySpec::Constant { period } => sync.period = *period,
+            StrategySpec::Adaptive { p_init, warmup_iters, ks_frac, low, high } => {
+                sync.p_init = *p_init;
+                sync.warmup_iters = *warmup_iters;
+                sync.ks_frac = *ks_frac;
+                sync.low = *low;
+                sync.high = *high;
+            }
+            StrategySpec::Decreasing { first, second } => {
+                sync.dec_first = *first;
+                sync.dec_second = *second;
+            }
+            StrategySpec::Qsgd { levels, bucket } => {
+                sync.qsgd_levels = *levels;
+                sync.qsgd_bucket = *bucket;
+            }
+            StrategySpec::Piecewise { schedule } => sync.piecewise = schedule.clone(),
+            StrategySpec::Easgd { period, alpha } => {
+                sync.period = *period;
+                sync.easgd_alpha = *alpha;
+            }
+            StrategySpec::TopK { frac } => sync.topk_frac = *frac,
+        }
+    }
+
+    /// Set one nested knob from a TOML value (`sync.<name>.<key>`).
+    pub fn set_nested(&mut self, key: &str, val: &TomlValue) -> Result<()> {
+        let name = self.name();
+        let vu = |v: &TomlValue| -> Result<usize> {
+            v.as_i64()
+                .filter(|i| *i >= 0)
+                .map(|i| i as usize)
+                .ok_or_else(|| anyhow::anyhow!("sync.{name}.{key}: expected a non-negative integer"))
+        };
+        let vf = |v: &TomlValue| -> Result<f64> {
+            v.as_f64().ok_or_else(|| anyhow::anyhow!("sync.{name}.{key}: expected a number"))
+        };
+        let vs = |v: &TomlValue| -> Result<String> {
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("sync.{name}.{key}: expected a string"))
+        };
+        match (self, key) {
+            (StrategySpec::Constant { period }, "period") => *period = vu(val)?,
+            (StrategySpec::Adaptive { p_init, .. }, "p_init") => *p_init = vu(val)?,
+            (StrategySpec::Adaptive { warmup_iters, .. }, "warmup_iters") => {
+                *warmup_iters = vu(val)?
+            }
+            (StrategySpec::Adaptive { ks_frac, .. }, "ks_frac") => *ks_frac = vf(val)?,
+            (StrategySpec::Adaptive { low, .. }, "low") => *low = vf(val)?,
+            (StrategySpec::Adaptive { high, .. }, "high") => *high = vf(val)?,
+            (StrategySpec::Decreasing { first, .. }, "first") => *first = vu(val)?,
+            (StrategySpec::Decreasing { second, .. }, "second") => *second = vu(val)?,
+            (StrategySpec::Qsgd { levels, .. }, "levels") => {
+                *levels = u32::try_from(vu(val)?)
+                    .map_err(|_| anyhow::anyhow!("sync.qsgd.levels: value out of range for u32"))?
+            }
+            (StrategySpec::Qsgd { bucket, .. }, "bucket") => *bucket = vu(val)?,
+            (StrategySpec::Piecewise { schedule }, "schedule") => *schedule = vs(val)?,
+            (StrategySpec::Easgd { period, .. }, "period") => *period = vu(val)?,
+            (StrategySpec::Easgd { alpha, .. }, "alpha") => *alpha = vf(val)?,
+            (StrategySpec::TopK { frac }, "frac") => *frac = vf(val)?,
+            (spec, _) => bail!(
+                "sync.{}.{key} is not a knob of strategy {} (valid: {})",
+                spec.name(),
+                spec.name(),
+                nested_keys(spec.kind()).join(", ")
+            ),
+        }
+        Ok(())
+    }
+
+    /// Render the canonical nested-TOML form:
+    ///
+    /// ```text
+    /// [sync]
+    /// strategy = "adaptive"
+    ///
+    /// [sync.adaptive]
+    /// p_init = 4
+    /// ...
+    /// ```
+    pub fn to_toml(&self) -> String {
+        let name = self.name();
+        let mut out = format!("[sync]\nstrategy = \"{name}\"\n");
+        let body = match self {
+            StrategySpec::Full => String::new(),
+            StrategySpec::Constant { period } => format!("period = {period}\n"),
+            StrategySpec::Adaptive { p_init, warmup_iters, ks_frac, low, high } => format!(
+                "p_init = {p_init}\nwarmup_iters = {warmup_iters}\nks_frac = {ks_frac}\nlow = {low}\nhigh = {high}\n"
+            ),
+            StrategySpec::Decreasing { first, second } => {
+                format!("first = {first}\nsecond = {second}\n")
+            }
+            StrategySpec::Qsgd { levels, bucket } => {
+                format!("levels = {levels}\nbucket = {bucket}\n")
+            }
+            StrategySpec::Piecewise { schedule } => format!("schedule = \"{schedule}\"\n"),
+            StrategySpec::Easgd { period, alpha } => {
+                format!("period = {period}\nalpha = {alpha}\n")
+            }
+            StrategySpec::TopK { frac } => format!("frac = {frac}\n"),
+        };
+        if !body.is_empty() {
+            out.push_str(&format!("\n[sync.{name}]\n{body}"));
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for StrategySpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl SyncConfig {
+    /// The typed spec of the *configured* strategy.
+    pub fn spec(&self) -> StrategySpec {
+        self.spec_of(self.strategy)
+    }
+
+    /// Project the flat knobs into the typed spec of an arbitrary
+    /// strategy kind (what that strategy *would* run with under this
+    /// config) — how campaigns derive per-strategy specs from one base.
+    pub fn spec_of(&self, kind: Strategy) -> StrategySpec {
+        match kind {
+            Strategy::Full => StrategySpec::Full,
+            Strategy::Constant => StrategySpec::Constant { period: self.period },
+            Strategy::Adaptive => StrategySpec::Adaptive {
+                p_init: self.p_init,
+                warmup_iters: self.warmup_iters,
+                ks_frac: self.ks_frac,
+                low: self.low,
+                high: self.high,
+            },
+            Strategy::Decreasing => {
+                StrategySpec::Decreasing { first: self.dec_first, second: self.dec_second }
+            }
+            Strategy::Qsgd => {
+                StrategySpec::Qsgd { levels: self.qsgd_levels, bucket: self.qsgd_bucket }
+            }
+            Strategy::Piecewise => StrategySpec::Piecewise { schedule: self.piecewise.clone() },
+            Strategy::Easgd => {
+                StrategySpec::Easgd { period: self.period, alpha: self.easgd_alpha }
+            }
+            Strategy::TopK => StrategySpec::TopK { frac: self.topk_frac },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_projection_roundtrips_through_flat() {
+        let specs = [
+            StrategySpec::Full,
+            StrategySpec::Constant { period: 7 },
+            StrategySpec::Adaptive {
+                p_init: 3,
+                warmup_iters: 11,
+                ks_frac: 0.2,
+                low: 0.6,
+                high: 1.4,
+            },
+            StrategySpec::Decreasing { first: 19, second: 3 },
+            StrategySpec::Qsgd { levels: 15, bucket: 256 },
+            StrategySpec::Piecewise { schedule: "0:2,100:9".into() },
+            StrategySpec::Easgd { period: 6, alpha: 0.25 },
+            StrategySpec::TopK { frac: 0.125 },
+        ];
+        for spec in specs {
+            let mut sync = SyncConfig::default();
+            spec.apply_to(&mut sync);
+            assert_eq!(sync.strategy, spec.kind());
+            assert_eq!(sync.spec(), spec, "{spec:?} must survive flat projection");
+        }
+    }
+
+    #[test]
+    fn every_strategy_has_consistent_key_tables() {
+        for kind in ALL_STRATEGIES {
+            assert_eq!(nested_keys(kind).len(), legacy_fields(kind).len(), "{kind}");
+            assert_eq!(kind_for_table(canonical_name(kind)), Some(kind));
+            for alias in table_names(kind) {
+                assert_eq!(alias.parse::<Strategy>().unwrap(), kind, "{alias}");
+            }
+        }
+        assert_eq!(kind_for_table("mesh"), None);
+    }
+
+    #[test]
+    fn validate_catches_per_strategy_nonsense() {
+        assert!(StrategySpec::Constant { period: 0 }.validate().is_err());
+        assert!(StrategySpec::Adaptive {
+            p_init: 4,
+            warmup_iters: 0,
+            ks_frac: 0.25,
+            low: 1.5,
+            high: 2.0
+        }
+        .validate()
+        .is_err());
+        assert!(StrategySpec::Qsgd { levels: 0, bucket: 512 }.validate().is_err());
+        assert!(StrategySpec::Piecewise { schedule: "5:4".into() }.validate().is_err());
+        assert!(StrategySpec::Easgd { period: 8, alpha: 0.0 }.validate().is_err());
+        assert!(StrategySpec::TopK { frac: 1.5 }.validate().is_err());
+        assert!(StrategySpec::default_of(Strategy::Adaptive).validate().is_ok());
+    }
+
+    #[test]
+    fn set_nested_rejects_foreign_keys() {
+        let mut spec = StrategySpec::default_of(Strategy::Adaptive);
+        let err = spec.set_nested("levels", &TomlValue::Int(8)).unwrap_err().to_string();
+        assert!(err.contains("not a knob"), "{err}");
+        spec.set_nested("p_init", &TomlValue::Int(9)).unwrap();
+        match spec {
+            StrategySpec::Adaptive { p_init, .. } => assert_eq!(p_init, 9),
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+}

@@ -177,12 +177,7 @@ pub type EngineFactory = Box<dyn Fn(usize) -> Result<Box<dyn Engine>> + Send + S
 /// compiles its own executables on its own PJRT client.
 pub fn factory(cfg: &ExperimentConfig) -> Result<EngineFactory> {
     let momentum = cfg.optim.momentum;
-    let needs_grad = matches!(
-        cfg.sync.strategy,
-        crate::period::Strategy::Full
-            | crate::period::Strategy::Qsgd
-            | crate::period::Strategy::TopK
-    );
+    let needs_grad = cfg.sync.spec().is_gradient_mode();
     match &cfg.workload.backend {
         Backend::Native(name) if name.starts_with("failing") => {
             let (fail_rank, fail_at) = parse_failing(name)
@@ -211,7 +206,8 @@ pub fn factory(cfg: &ExperimentConfig) -> Result<EngineFactory> {
             }))
         }
         Backend::Hlo(model) => {
-            let manifest = Manifest::load(&cfg.artifacts_dir)?;
+            // shared across workers *and* across campaign runs
+            let manifest = Manifest::load_cached(&cfg.artifacts_dir)?;
             manifest.get(model)?; // validate now
             let model = model.clone();
             let fns = EngineFns {

@@ -30,19 +30,34 @@
 
 pub mod engine;
 pub mod node;
+pub mod observer;
 pub mod sync;
 
 use crate::collective::{self, Collective};
 use crate::config::ExperimentConfig;
-use crate::data::{Batch, CharCorpus, DatasetHandle, NodeSource, SynthClass};
+use crate::data::{Batch, DatasetHandle, NodeSource};
 use crate::metrics::Recorder;
 use crate::netsim::{CommKind, CommLedger, NetModel};
 use crate::optim::lr_at;
 use crate::period::Strategy;
 use anyhow::{anyhow, Context, Result};
 use node::Node;
-use std::sync::Arc;
+use observer::{CheckpointObserver, ObserverHub, RecorderObserver, RunEvent, RunObserver};
+use std::sync::{Arc, Mutex};
 use sync::{ExchangeMode, SyncStep};
+
+/// A session-injected period-controller factory: called once per worker
+/// (controllers are replicated per rank) in place of the registry.
+pub type ControllerFactory = dyn Fn() -> Box<dyn crate::period::PeriodController> + Send + Sync;
+
+/// Session-level hooks threaded into one run: extra observers (beyond
+/// the built-in recorder/checkpoint ones) and an optional custom period
+/// controller.
+#[derive(Default)]
+pub(crate) struct RunHooks {
+    pub observers: Vec<Box<dyn RunObserver>>,
+    pub controller: Option<Arc<ControllerFactory>>,
+}
 
 /// Everything a finished run reports (curves + summary numbers).
 #[derive(Debug)]
@@ -138,15 +153,21 @@ impl RunReport {
 struct WorkerOut {
     compute_secs: f64,
     /// rank 0 only
-    recorder: Option<Recorder>,
     ledger: Option<CommLedger>,
 }
 
+/// Deprecated blocking front-door, kept as a thin shim over the session
+/// API: `Trainer::new(cfg)?.run()` is exactly
+/// `Experiment::from_config(cfg)?.run()` with no observers or hooks.
 pub struct Trainer {
     cfg: ExperimentConfig,
 }
 
 impl Trainer {
+    #[deprecated(
+        note = "use adpsgd::experiment::Experiment::builder() (or Experiment::from_config); \
+                Trainer is a compatibility shim over the session API"
+    )]
     pub fn new(cfg: ExperimentConfig) -> Result<Self> {
         cfg.validate()?;
         Ok(Trainer { cfg })
@@ -156,156 +177,188 @@ impl Trainer {
         &self.cfg
     }
 
-    /// Build the (train-kind, eval) dataset handle and the per-node
-    /// batch geometry.  For HLO models the AOT artifacts fix the batch
-    /// shape, so `batch_per_node` is taken from the manifest.
-    fn dataset(&self) -> Result<(DatasetHandle, usize, usize)> {
-        let w = &self.cfg.workload;
-        match &w.backend {
-            crate::config::Backend::Native(_) => {
-                let ds = SynthClass::new(self.cfg.seed, w.input_dim, w.classes, w.noise, w.label_noise);
-                Ok((DatasetHandle::Class(Arc::new(ds)), self.cfg.batch_per_node, 0))
-            }
-            crate::config::Backend::Hlo(model) => {
-                let man = crate::runtime::Manifest::load(&self.cfg.artifacts_dir)?;
-                let spec = man.get(model)?;
-                if spec.kind == "lm" {
-                    let corpus = CharCorpus::generate(self.cfg.seed, 1 << 16);
-                    Ok((DatasetHandle::Text(Arc::new(corpus)), spec.batch, spec.seq))
-                } else {
-                    let dim = *spec.x_shape.last().unwrap();
-                    let classes = spec.classes.max(2);
-                    let ds = SynthClass::new(self.cfg.seed, dim, classes, w.noise, w.label_noise);
-                    Ok((DatasetHandle::Class(Arc::new(ds)), spec.batch, 0))
-                }
+    /// Run the experiment to completion (delegates to the session API).
+    pub fn run(&self) -> Result<RunReport> {
+        run_experiment(&self.cfg, RunHooks::default())
+    }
+}
+
+/// Build the (train-kind, eval) dataset handle and the per-node batch
+/// geometry.  For HLO models the AOT artifacts fix the batch shape, so
+/// `batch_per_node` is taken from the manifest.  Handles come from the
+/// process-wide caches in [`crate::data::cache`] /
+/// [`crate::runtime::Manifest::load_cached`], so campaign sweeps share
+/// one dataset across runs instead of regenerating it per run.
+fn dataset_for(cfg: &ExperimentConfig) -> Result<(DatasetHandle, usize, usize)> {
+    let w = &cfg.workload;
+    match &w.backend {
+        crate::config::Backend::Native(_) => {
+            let ds =
+                crate::data::cache::synth_class(cfg.seed, w.input_dim, w.classes, w.noise, w.label_noise);
+            Ok((DatasetHandle::Class(ds), cfg.batch_per_node, 0))
+        }
+        crate::config::Backend::Hlo(model) => {
+            let man = crate::runtime::Manifest::load_cached(&cfg.artifacts_dir)?;
+            let spec = man.get(model)?;
+            if spec.kind == "lm" {
+                let corpus = crate::data::cache::char_corpus(cfg.seed, 1 << 16);
+                Ok((DatasetHandle::Text(corpus), spec.batch, spec.seq))
+            } else {
+                let dim = *spec.x_shape.last().unwrap();
+                let classes = spec.classes.max(2);
+                let ds = crate::data::cache::synth_class(cfg.seed, dim, classes, w.noise, w.label_noise);
+                Ok((DatasetHandle::Class(ds), spec.batch, 0))
             }
         }
     }
+}
 
-    /// Run the experiment to completion.
-    pub fn run(&self) -> Result<RunReport> {
-        let cfg = &self.cfg;
-        let factory = engine::factory(cfg).context("building engine factory")?;
-        let (dataset, batch, seq) = self.dataset()?;
-        let wall = std::time::Instant::now();
+/// Run one experiment to completion: spawn the worker cluster, feed the
+/// leader's event stream to the observers, and assemble the report.
+/// This is the engine under [`crate::experiment::Experiment`]; the
+/// deprecated [`Trainer`] calls it with empty hooks.
+pub(crate) fn run_experiment(cfg: &ExperimentConfig, hooks: RunHooks) -> Result<RunReport> {
+    cfg.validate()?;
+    let RunHooks { observers: user_observers, controller } = hooks;
+    let factory = engine::factory(cfg).context("building engine factory")?;
+    let (dataset, batch, seq) = dataset_for(cfg)?;
+    let wall = std::time::Instant::now();
 
-        // n_params probe (cheap for native; for HLO reads the manifest)
-        let n_params = match &cfg.workload.backend {
-            crate::config::Backend::Native(name) => {
-                crate::workload::build(name, &cfg.workload)?.n_params()
-            }
-            crate::config::Backend::Hlo(model) => {
-                crate::runtime::Manifest::load(&cfg.artifacts_dir)?.get(model)?.param_count
-            }
-        };
+    // n_params probe (cheap for native; for HLO reads the manifest)
+    let n_params = match &cfg.workload.backend {
+        crate::config::Backend::Native(name) => {
+            crate::workload::build(name, &cfg.workload)?.n_params()
+        }
+        crate::config::Backend::Hlo(model) => {
+            crate::runtime::Manifest::load_cached(&cfg.artifacts_dir)?.get(model)?.param_count
+        }
+    };
 
-        let comm: Arc<dyn Collective> =
-            collective::build(cfg.sync.collective, cfg.nodes, n_params);
-        let mut outs: Vec<Option<WorkerOut>> = (0..cfg.nodes).map(|_| None).collect();
+    // the built-in observers: the recorder (shared so the report can
+    // reclaim the series afterwards) and, when configured, checkpointing
+    let rec = Arc::new(Mutex::new(Recorder::new()));
+    let mut observers: Vec<Box<dyn RunObserver>> =
+        vec![Box::new(RecorderObserver::shared(Arc::clone(&rec)))];
+    if cfg.checkpoint_every > 0 {
+        observers.push(Box::new(CheckpointObserver::new(cfg.checkpoint_dir.clone())));
+    }
+    observers.extend(user_observers);
+    let hub_slot = Mutex::new(Some(ObserverHub::new(observers)));
 
-        std::thread::scope(|scope| -> Result<()> {
-            let mut handles = Vec::new();
-            for (rank, slot) in outs.iter_mut().enumerate() {
-                let comm = Arc::clone(&comm);
-                let dataset = dataset.clone();
-                let factory = &factory;
-                let cfg = &self.cfg;
-                handles.push((
-                    slot,
-                    scope.spawn(move || -> Result<WorkerOut> {
-                        // catch_unwind so a panicking worker still
-                        // poisons the communicator — otherwise peers
-                        // would block forever at the next barrier
-                        let comm2 = Arc::clone(&comm);
-                        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                            move || {
-                                worker_loop(
-                                    cfg, rank, n_params, batch, seq, dataset, comm2, factory,
-                                )
-                            },
-                        ))
-                        .unwrap_or_else(|p| {
-                            let msg = p
-                                .downcast_ref::<String>()
-                                .map(|s| s.as_str())
-                                .or_else(|| p.downcast_ref::<&str>().copied())
-                                .unwrap_or("<non-string panic>");
-                            Err(anyhow!("node {rank} panicked: {msg}"))
-                        });
-                        if out.is_err() {
-                            comm.poison();
-                        }
-                        out
-                    }),
-                ));
-            }
-            // join all workers; report the most informative error (a
-            // real failure beats the Poisoned errors it triggered)
-            let mut first_real: Option<anyhow::Error> = None;
-            let mut first_poisoned: Option<anyhow::Error> = None;
-            for (slot, h) in handles {
-                match h.join().map_err(|e| anyhow!("worker join failed: {e:?}")) {
-                    Ok(Ok(out)) => *slot = Some(out),
-                    Ok(Err(e)) => {
-                        let is_poison = e.is::<crate::collective::Poisoned>()
-                            || format!("{e:#}").contains("poisoned");
-                        if is_poison {
-                            first_poisoned.get_or_insert(e);
-                        } else {
-                            first_real.get_or_insert(e);
-                        }
+    let comm: Arc<dyn Collective> = collective::build(cfg.sync.collective, cfg.nodes, n_params);
+    let mut outs: Vec<Option<WorkerOut>> = (0..cfg.nodes).map(|_| None).collect();
+
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        let hub_slot = &hub_slot;
+        for (rank, slot) in outs.iter_mut().enumerate() {
+            let comm = Arc::clone(&comm);
+            let dataset = dataset.clone();
+            let factory = &factory;
+            let ctrl_factory = controller.clone();
+            handles.push((
+                slot,
+                scope.spawn(move || -> Result<WorkerOut> {
+                    // the leader carries the observer hub; peers run bare
+                    let hub = if rank == 0 { hub_slot.lock().unwrap().take() } else { None };
+                    // catch_unwind so a panicking worker still
+                    // poisons the communicator — otherwise peers
+                    // would block forever at the next barrier
+                    let comm2 = Arc::clone(&comm);
+                    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        move || {
+                            worker_loop(
+                                cfg, rank, n_params, batch, seq, dataset, comm2, factory,
+                                hub, ctrl_factory,
+                            )
+                        },
+                    ))
+                    .unwrap_or_else(|p| {
+                        let msg = p
+                            .downcast_ref::<String>()
+                            .map(|s| s.as_str())
+                            .or_else(|| p.downcast_ref::<&str>().copied())
+                            .unwrap_or("<non-string panic>");
+                        Err(anyhow!("node {rank} panicked: {msg}"))
+                    });
+                    if out.is_err() {
+                        comm.poison();
                     }
-                    Err(e) => {
+                    out
+                }),
+            ));
+        }
+        // join all workers; report the most informative error (a
+        // real failure beats the Poisoned errors it triggered)
+        let mut first_real: Option<anyhow::Error> = None;
+        let mut first_poisoned: Option<anyhow::Error> = None;
+        for (slot, h) in handles {
+            match h.join().map_err(|e| anyhow!("worker join failed: {e:?}")) {
+                Ok(Ok(out)) => *slot = Some(out),
+                Ok(Err(e)) => {
+                    let is_poison = e.is::<crate::collective::Poisoned>()
+                        || format!("{e:#}").contains("poisoned");
+                    if is_poison {
+                        first_poisoned.get_or_insert(e);
+                    } else {
                         first_real.get_or_insert(e);
                     }
                 }
+                Err(e) => {
+                    first_real.get_or_insert(e);
+                }
             }
-            if let Some(e) = first_real.or(first_poisoned) {
-                return Err(e.context("worker failed"));
-            }
-            Ok(())
-        })?;
+        }
+        if let Some(e) = first_real.or(first_poisoned) {
+            return Err(e.context("worker failed"));
+        }
+        Ok(())
+    })?;
 
-        let wall_secs = wall.elapsed().as_secs_f64();
-        let compute_secs = outs
-            .iter()
-            .map(|o| o.as_ref().unwrap().compute_secs)
-            .fold(0.0f64, f64::max);
-        let rank0 = outs[0].take().unwrap();
-        let recorder = rank0.recorder.unwrap();
-        let ledger = rank0.ledger.unwrap();
+    let wall_secs = wall.elapsed().as_secs_f64();
+    let compute_secs = outs
+        .iter()
+        .map(|o| o.as_ref().unwrap().compute_secs)
+        .fold(0.0f64, f64::max);
+    let rank0 = outs[0].take().unwrap();
+    let ledger = rank0.ledger.unwrap();
+    // the hub (and with it the RecorderObserver's clone) died with the
+    // leader thread, so the session holds the only reference now
+    let recorder = match Arc::try_unwrap(rec) {
+        Ok(m) => m.into_inner().expect("recorder lock"),
+        Err(arc) => arc.lock().expect("recorder lock").clone(),
+    };
 
-        let loss_series = recorder.get("train_loss");
-        let final_train_loss = loss_series.and_then(|s| s.tail_mean(10)).unwrap_or(f64::NAN);
-        let min_train_loss = loss_series.and_then(|s| s.min_y()).unwrap_or(f64::NAN);
-        let acc = recorder.get("eval_acc");
-        let best_eval_acc = acc.and_then(|s| s.max_y()).unwrap_or(f64::NAN);
-        let final_eval_acc = acc.and_then(|s| s.last_y()).unwrap_or(f64::NAN);
-        let final_eval_loss =
-            recorder.get("eval_loss").and_then(|s| s.last_y()).unwrap_or(f64::NAN);
-        let syncs = ledger.syncs;
-        let avg_period =
-            if syncs > 0 { cfg.iters as f64 / syncs as f64 } else { f64::INFINITY };
+    let loss_series = recorder.get("train_loss");
+    let final_train_loss = loss_series.and_then(|s| s.tail_mean(10)).unwrap_or(f64::NAN);
+    let min_train_loss = loss_series.and_then(|s| s.min_y()).unwrap_or(f64::NAN);
+    let acc = recorder.get("eval_acc");
+    let best_eval_acc = acc.and_then(|s| s.max_y()).unwrap_or(f64::NAN);
+    let final_eval_acc = acc.and_then(|s| s.last_y()).unwrap_or(f64::NAN);
+    let final_eval_loss =
+        recorder.get("eval_loss").and_then(|s| s.last_y()).unwrap_or(f64::NAN);
+    let syncs = ledger.syncs;
+    let avg_period =
+        if syncs > 0 { cfg.iters as f64 / syncs as f64 } else { f64::INFINITY };
 
-        Ok(RunReport {
-            name: cfg.name.clone(),
-            strategy: cfg.sync.strategy,
-            nodes: cfg.nodes,
-            iters: cfg.iters,
-            n_params,
-            final_train_loss,
-            min_train_loss,
-            best_eval_acc,
-            final_eval_acc,
-            final_eval_loss,
-            syncs,
-            avg_period,
-            compute_secs,
-            wall_secs,
-            ledger,
-            recorder,
-        })
-    }
+    Ok(RunReport {
+        name: cfg.name.clone(),
+        strategy: cfg.sync.strategy,
+        nodes: cfg.nodes,
+        iters: cfg.iters,
+        n_params,
+        final_train_loss,
+        min_train_loss,
+        best_eval_acc,
+        final_eval_acc,
+        final_eval_loss,
+        syncs,
+        avg_period,
+        compute_secs,
+        wall_secs,
+        ledger,
+        recorder,
+    })
 }
 
 /// How often the (instrumentation-only) mean train loss is agreed.
@@ -321,17 +374,26 @@ fn worker_loop(
     dataset: DatasetHandle,
     comm: Arc<dyn Collective>,
     factory: &engine::EngineFactory,
+    mut hub: Option<ObserverHub>,
+    ctrl_factory: Option<Arc<ControllerFactory>>,
 ) -> Result<WorkerOut> {
     let n = cfg.nodes;
-    let is_leader = rank == 0;
     let net = NetModel::new(&cfg.net);
     let mut ledger = CommLedger::with_algo(n, cfg.sync.collective);
-    let mut recorder = Recorder::new();
 
     let mut node =
         Node::build(cfg, rank, n_params, batch_per_node, seq, dataset, comm.as_ref(), factory)?;
-    let mut step = SyncStep::build(cfg, n_params, rank);
+    // warm starts continue the checkpointed run's global iteration count:
+    // the period controller sees `resume + k` over a `resume + iters`
+    // horizon, so Algorithm 2 does not re-run its p=1 warmup epoch or
+    // resample C₂ from scratch, and schedule switch points stay global
+    let resume = node.resume_iter;
+    let mut step = SyncStep::build(cfg, n_params, rank, resume, ctrl_factory.as_deref());
     let grad_mode = step.mode == ExchangeMode::Gradient;
+
+    if let Some(h) = hub.as_mut() {
+        h.emit(&RunEvent::RunStart { cfg, n_params, resume_iter: resume })?;
+    }
 
     // pre-averaging variance of a sync that happened this iteration —
     // the variance probe must report it instead of the (trivially zero)
@@ -339,7 +401,10 @@ fn worker_loop(
     let mut sync_var: Option<f64> = None;
 
     for k in 0..cfg.iters {
-        let lr = lr_at(&cfg.optim.schedule, cfg.optim.lr0, k);
+        // the LR schedule runs on the same global clock as the period
+        // controller: a warm start resumes the decay schedule where the
+        // checkpointed run left off instead of restarting at lr0
+        let lr = lr_at(&cfg.optim.schedule, cfg.optim.lr0, resume + k);
         let batch = node.source.next_batch();
 
         match step.mode {
@@ -355,28 +420,37 @@ fn worker_loop(
                 // gated sync pipeline (see sync.rs for the stage table)
                 node.local_step(&batch, lr)?;
                 sync_var = None;
-                if let Some(s_k) =
-                    step.maybe_sync_params(&mut node, comm.as_ref(), &net, &mut ledger, k, lr)?
-                {
+                if let Some(s_k) = step.maybe_sync_params(
+                    &mut node,
+                    comm.as_ref(),
+                    &net,
+                    &mut ledger,
+                    resume + k,
+                    lr,
+                )? {
                     sync_var = Some(s_k);
-                    if is_leader {
-                        recorder.push("s_k", k as f64, s_k);
-                        recorder.push("period", k as f64, step.current_period() as f64);
-                        recorder.push("sync_at", k as f64, 1.0);
+                    if let Some(h) = hub.as_mut() {
+                        h.emit(&RunEvent::SyncDone {
+                            k,
+                            s_k,
+                            period: step.current_period(),
+                            bytes: (node.w.len() * 4) as u64,
+                        })?;
                     }
                 }
             }
         }
 
         // ---------------- instrumentation (not charged to the ledger) -----
+        let mut iter_loss = None;
         if (k + 1) % LOSS_EVERY == 0 || k + 1 == cfg.iters {
             let mean_loss =
                 comm.allreduce_scalar_sum(rank, node.mean_local_loss())? / n as f64;
-            if is_leader {
-                recorder.push("train_loss", k as f64, mean_loss);
-                recorder.push("lr", k as f64, lr as f64);
-            }
+            iter_loss = Some(mean_loss);
             node.reset_loss_window();
+        }
+        if let Some(h) = hub.as_mut() {
+            h.emit(&RunEvent::IterEnd { k, lr, loss: iter_loss })?;
         }
 
         let need_var = cfg.variance_every > 0 && (k + 1) % cfg.variance_every == 0 && !grad_mode;
@@ -395,45 +469,48 @@ fn worker_loop(
                         comm.allreduce_scalar_sum(rank, dev)? / n as f64
                     }
                 };
-                if is_leader {
-                    recorder.push("var", k as f64, var);
+                if let Some(h) = hub.as_mut() {
+                    h.emit(&RunEvent::VarProbe { k, var })?;
                 }
             }
-            if need_eval && is_leader {
+            if need_eval && hub.is_some() {
                 let (l, a) =
                     eval_model(node.engine.as_mut(), &node.w_pre, &mut node.eval_source, cfg)?;
-                recorder.push("eval_loss", k as f64, l);
-                recorder.push("eval_acc", k as f64, a);
+                if let Some(h) = hub.as_mut() {
+                    h.emit(&RunEvent::EvalDone { k, loss: l, acc: a })?;
+                }
             }
-        } else if need_eval && grad_mode && is_leader {
+        } else if need_eval && grad_mode && hub.is_some() {
             // grad modes keep all nodes identical: evaluate local params
             let (l, a) = eval_model(node.engine.as_mut(), &node.w, &mut node.eval_source, cfg)?;
-            recorder.push("eval_loss", k as f64, l);
-            recorder.push("eval_acc", k as f64, a);
+            if let Some(h) = hub.as_mut() {
+                h.emit(&RunEvent::EvalDone { k, loss: l, acc: a })?;
+            }
         }
 
-        // ---------------- checkpointing (leader; mean parameters) ---------
+        // ------------- checkpoint cadence (mean parameters agreed by ------
+        // ------------- all ranks; the write is an observer's concern) -----
         if cfg.checkpoint_every > 0 && (k + 1) % cfg.checkpoint_every == 0 {
             // snapshot the averaged parameters without disturbing training
             node.w_pre.copy_from_slice(&node.w);
             comm.allreduce_mean(rank, &mut node.w_pre)?;
-            if is_leader {
-                let dir = std::path::Path::new(&cfg.checkpoint_dir);
-                let ck = crate::checkpoint::Checkpoint::new(
-                    (k + 1) as u64,
-                    node.mean_local_loss(),
-                    node.w_pre.clone(),
-                );
-                ck.save(&crate::checkpoint::Checkpoint::path_for(dir, (k + 1) as u64))
-                    .context("writing checkpoint")?;
+            if let Some(h) = hub.as_mut() {
+                h.emit(&RunEvent::CheckpointDue {
+                    iter: (resume + k + 1) as u64,
+                    mean_loss: node.mean_local_loss(),
+                    w: &node.w_pre,
+                })?;
             }
         }
     }
 
+    if let Some(h) = hub.as_mut() {
+        h.emit(&RunEvent::RunEnd { iters: cfg.iters })?;
+    }
+
     Ok(WorkerOut {
         compute_secs: node.compute.secs(),
-        recorder: is_leader.then_some(recorder),
-        ledger: is_leader.then_some(ledger),
+        ledger: hub.is_some().then_some(ledger),
     })
 }
 
@@ -455,6 +532,7 @@ fn eval_model(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // Trainer is exercised deliberately: it must stay green
 mod tests {
     use super::*;
     use crate::config::Backend;
@@ -652,6 +730,41 @@ mod tests {
         assert!(
             warm_first < cold_first * 0.8,
             "warm start should begin near trained loss: warm {warm_first} vs cold {cold_first}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn warm_start_resumes_adaptive_controller_state() {
+        // regression: warm-starting used to restart Algorithm 2 at
+        // iteration 0 (p=1 warmup re-run, C₂ resampled).  With the
+        // resumed iteration threaded into the controller, a restart past
+        // the warmup window must sync at p_init, not at p=1.
+        let dir = std::env::temp_dir().join(format!("adpsgd_resume_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+
+        let mut base = quick_cfg(Strategy::Adaptive);
+        base.iters = 40;
+        base.sync.warmup_iters = 10;
+        base.sync.p_init = 2;
+        // band wide enough that feedback never moves the period, so the
+        // sync schedule is exactly p_init-periodic outside warmup
+        base.sync.low = 0.01;
+        base.sync.high = 100.0;
+
+        let cold = Trainer::new(base.clone()).unwrap().run().unwrap();
+        assert_eq!(cold.syncs, 25, "cold: 10 warmup syncs + 15 at p=2");
+
+        let n_params = cold.n_params;
+        crate::checkpoint::Checkpoint::new(200, 0.0, vec![0.01; n_params])
+            .save(&crate::checkpoint::Checkpoint::path_for(&dir, 200))
+            .unwrap();
+        let mut warm_cfg = base.clone();
+        warm_cfg.init_from = dir.to_str().unwrap().into();
+        let warm = Trainer::new(warm_cfg).unwrap().run().unwrap();
+        assert_eq!(
+            warm.syncs, 20,
+            "warm restart at iter 200 must skip the p=1 warmup and sync every p_init=2"
         );
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -39,6 +39,11 @@ pub struct Node {
     /// local loss accumulated since the last agreement window
     pub loss_acc: f64,
     pub loss_cnt: u32,
+    /// global iteration this run resumes from (the checkpoint's `iter`
+    /// for warm starts, 0 for cold starts) — threaded into the period
+    /// controller so Algorithm 2 continues where it left off instead of
+    /// re-running its warmup epoch and C₂ sampling
+    pub resume_iter: usize,
 }
 
 impl Node {
@@ -70,6 +75,7 @@ impl Node {
         debug_assert_eq!(engine.n_params(), n_params);
 
         // --- shared initial point (paper: all nodes start from w_0) ------
+        let mut resume_iter = 0usize;
         let mut w = if cfg.init_from.is_empty() {
             engine.init(cfg.seed)?
         } else {
@@ -89,6 +95,7 @@ impl Node {
                     ck.w.len()
                 );
             }
+            resume_iter = ck.iter as usize;
             ck.w
         };
         comm.broadcast(rank, &mut w)?;
@@ -111,6 +118,7 @@ impl Node {
             compute: Timer::new(),
             loss_acc: 0.0,
             loss_cnt: 0,
+            resume_iter,
         })
     }
 

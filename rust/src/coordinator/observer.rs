@@ -1,0 +1,189 @@
+//! The run-observer event stream: typed events out of the coordinator
+//! loop, consumers plugged in at session build time.
+//!
+//! The training loop no longer hard-codes *what happens* to its
+//! measurements — it emits [`RunEvent`]s on the leader rank, and an
+//! [`ObserverHub`] fans them out to every registered [`RunObserver`]:
+//!
+//! * [`RecorderObserver`] rebuilds the metric series every figure and
+//!   test consumes (`train_loss`, `s_k`, `period`, `var`, `eval_acc`,
+//!   …) — exactly the pushes the loop used to make inline;
+//! * [`CheckpointObserver`] writes parameter snapshots on
+//!   [`RunEvent::CheckpointDue`] — the collective mean-parameter
+//!   agreement stays in the loop (all ranks participate), only the
+//!   leader-side *write* lives here;
+//! * user observers (live progress, external metric sinks, early-stop
+//!   probes) ride the same stream via
+//!   `ExperimentBuilder::observer`.
+//!
+//! Observers run on the leader worker's thread, between iterations: an
+//! observer error aborts the run cleanly (the cluster tears down through
+//! the same poisoned-collective path as any worker failure).
+
+use crate::config::ExperimentConfig;
+use crate::metrics::Recorder;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// One typed event out of the coordinator loop.  `k` is the run-local
+/// iteration index (0-based); warm-started runs report their global
+/// offset once in [`RunEvent::RunStart`].
+#[derive(Debug)]
+pub enum RunEvent<'a> {
+    /// Emitted once before the first iteration.
+    RunStart {
+        cfg: &'a ExperimentConfig,
+        n_params: usize,
+        /// global iteration the run resumes from (0 for cold starts)
+        resume_iter: usize,
+    },
+    /// Emitted after every iteration.  `loss` carries the cluster-agreed
+    /// mean train loss on agreement windows, `None` in between.
+    IterEnd { k: usize, lr: f32, loss: Option<f64> },
+    /// A parameter synchronization completed: the agreed variance `S_k`,
+    /// the controller's (post-feedback) period, and the payload bytes.
+    SyncDone { k: usize, s_k: f64, period: usize, bytes: u64 },
+    /// A variance probe sampled `Var[W_k]` (instrumentation).
+    VarProbe { k: usize, var: f64 },
+    /// A held-out evaluation completed.
+    EvalDone { k: usize, loss: f64, acc: f64 },
+    /// The checkpoint cadence fired: `w` holds the cluster-mean
+    /// parameters after `iter` completed iterations (1-based).
+    CheckpointDue { iter: u64, mean_loss: f64, w: &'a [f32] },
+    /// Emitted once after the last iteration.
+    RunEnd { iters: usize },
+}
+
+/// A consumer of the coordinator's event stream.
+pub trait RunObserver: Send {
+    fn on_event(&mut self, ev: &RunEvent<'_>) -> Result<()>;
+}
+
+/// Leader-side fan-out of one run's events to all observers.
+pub struct ObserverHub {
+    observers: Vec<Box<dyn RunObserver>>,
+}
+
+impl ObserverHub {
+    pub fn new(observers: Vec<Box<dyn RunObserver>>) -> Self {
+        ObserverHub { observers }
+    }
+
+    pub fn emit(&mut self, ev: &RunEvent<'_>) -> Result<()> {
+        for o in &mut self.observers {
+            o.on_event(ev).context("run observer failed")?;
+        }
+        Ok(())
+    }
+}
+
+/// Rebuilds the historical [`Recorder`] series from the event stream.
+/// The recorder is shared (`Arc<Mutex<…>>`) so the session can hand the
+/// final series to [`crate::coordinator::RunReport`] after the run.
+pub struct RecorderObserver {
+    rec: Arc<Mutex<Recorder>>,
+}
+
+impl RecorderObserver {
+    pub fn shared(rec: Arc<Mutex<Recorder>>) -> Self {
+        RecorderObserver { rec }
+    }
+}
+
+impl RunObserver for RecorderObserver {
+    fn on_event(&mut self, ev: &RunEvent<'_>) -> Result<()> {
+        let mut rec = self.rec.lock().expect("recorder lock");
+        match ev {
+            RunEvent::IterEnd { k, lr, loss: Some(loss) } => {
+                rec.push("train_loss", *k as f64, *loss);
+                rec.push("lr", *k as f64, *lr as f64);
+            }
+            RunEvent::SyncDone { k, s_k, period, .. } => {
+                rec.push("s_k", *k as f64, *s_k);
+                rec.push("period", *k as f64, *period as f64);
+                rec.push("sync_at", *k as f64, 1.0);
+            }
+            RunEvent::VarProbe { k, var } => rec.push("var", *k as f64, *var),
+            RunEvent::EvalDone { k, loss, acc } => {
+                rec.push("eval_loss", *k as f64, *loss);
+                rec.push("eval_acc", *k as f64, *acc);
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+/// Writes a parameter snapshot on every [`RunEvent::CheckpointDue`].
+pub struct CheckpointObserver {
+    dir: PathBuf,
+}
+
+impl CheckpointObserver {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        CheckpointObserver { dir: dir.into() }
+    }
+}
+
+impl RunObserver for CheckpointObserver {
+    fn on_event(&mut self, ev: &RunEvent<'_>) -> Result<()> {
+        if let RunEvent::CheckpointDue { iter, mean_loss, w } = ev {
+            crate::checkpoint::Checkpoint::new(*iter, *mean_loss, w.to_vec())
+                .save(&crate::checkpoint::Checkpoint::path_for(&self.dir, *iter))
+                .context("writing checkpoint")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_observer_rebuilds_series() {
+        let rec = Arc::new(Mutex::new(Recorder::new()));
+        let mut obs = RecorderObserver::shared(Arc::clone(&rec));
+        obs.on_event(&RunEvent::IterEnd { k: 0, lr: 0.1, loss: None }).unwrap();
+        obs.on_event(&RunEvent::IterEnd { k: 9, lr: 0.1, loss: Some(2.0) }).unwrap();
+        obs.on_event(&RunEvent::SyncDone { k: 3, s_k: 0.5, period: 4, bytes: 64 }).unwrap();
+        obs.on_event(&RunEvent::VarProbe { k: 5, var: 0.25 }).unwrap();
+        obs.on_event(&RunEvent::EvalDone { k: 9, loss: 1.5, acc: 0.7 }).unwrap();
+        let rec = rec.lock().unwrap();
+        assert_eq!(rec.get("train_loss").unwrap().points, vec![(9.0, 2.0)]);
+        assert!(rec.get("lr").is_some());
+        assert_eq!(rec.get("s_k").unwrap().points, vec![(3.0, 0.5)]);
+        assert_eq!(rec.get("period").unwrap().points, vec![(3.0, 4.0)]);
+        assert_eq!(rec.get("sync_at").unwrap().points, vec![(3.0, 1.0)]);
+        assert_eq!(rec.get("var").unwrap().points, vec![(5.0, 0.25)]);
+        assert_eq!(rec.get("eval_acc").unwrap().points, vec![(9.0, 0.7)]);
+    }
+
+    #[test]
+    fn checkpoint_observer_writes_snapshots() {
+        let dir = std::env::temp_dir().join(format!("adpsgd_obs_ckpt_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut obs = CheckpointObserver::new(&dir);
+        let w = vec![0.5f32; 16];
+        obs.on_event(&RunEvent::CheckpointDue { iter: 40, mean_loss: 0.1, w: &w }).unwrap();
+        let latest = crate::checkpoint::Checkpoint::latest(&dir).unwrap().expect("snapshot");
+        let ck = crate::checkpoint::Checkpoint::load(&latest).unwrap();
+        assert_eq!(ck.iter, 40);
+        assert_eq!(ck.w, w);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn hub_propagates_observer_errors() {
+        struct Failing;
+        impl RunObserver for Failing {
+            fn on_event(&mut self, _: &RunEvent<'_>) -> Result<()> {
+                anyhow::bail!("observer exploded")
+            }
+        }
+        let mut hub = ObserverHub::new(vec![Box::new(Failing)]);
+        let err = hub.emit(&RunEvent::RunEnd { iters: 1 }).unwrap_err();
+        assert!(format!("{err:#}").contains("observer exploded"));
+    }
+}

@@ -27,9 +27,9 @@
 
 use super::node::Node;
 use crate::collective::{Collective, Poisoned};
-use crate::config::ExperimentConfig;
+use crate::config::{ExperimentConfig, StrategySpec};
 use crate::netsim::{CommKind, CommLedger, NetModel};
-use crate::period::{PeriodController, Strategy};
+use crate::period::{registry, PeriodController};
 use crate::quant::QsgdConfig;
 use crate::sparse::{Residual, TopKConfig};
 use crate::util::rng::Rng;
@@ -107,33 +107,60 @@ pub struct SyncStep {
 
 impl SyncStep {
     /// Compose the pipeline for `cfg`'s strategy.  `rank` seeds the
-    /// quantizer's per-node RNG stream.
-    pub fn build(cfg: &ExperimentConfig, n_params: usize, rank: usize) -> SyncStep {
-        let controller = crate::period::build(cfg);
+    /// quantizer's per-node RNG stream.  The stage composition is driven
+    /// entirely by the typed [`StrategySpec`]: the period gate comes
+    /// from the controller [`registry`] (or from `controller_factory`,
+    /// the session-level injection seam that bypasses the registry), the
+    /// payload transform and elastic pull from the spec's own payload.
+    ///
+    /// `resume_iter` is the warm-start offset: controllers see global
+    /// iteration indices, so k-fraction horizons (ADPSGD's `K_s`, the
+    /// decreasing schedule's switch point) are computed over the global
+    /// span `resume_iter + iters` — a run checkpointed at 200 and
+    /// resumed for 3800 more iterations adapts on the same global
+    /// schedule as the cold 4000-iteration run.
+    pub fn build(
+        cfg: &ExperimentConfig,
+        n_params: usize,
+        rank: usize,
+        resume_iter: usize,
+        controller_factory: Option<&super::ControllerFactory>,
+    ) -> SyncStep {
+        let spec = cfg.sync.spec();
+        let controller = match controller_factory {
+            Some(f) => Some(f()),
+            None => registry::build(
+                &spec,
+                &registry::Ctx { total_iters: resume_iter + cfg.iters },
+            ),
+        };
         let mode = if controller.is_none() {
             ExchangeMode::Gradient
         } else {
             ExchangeMode::Parameters
         };
-        let transform: Option<Box<dyn GradTransform>> = match cfg.sync.strategy {
-            Strategy::Qsgd => Some(Box::new(QsgdTransform {
-                cfg: QsgdConfig { levels: cfg.sync.qsgd_levels, bucket: cfg.sync.qsgd_bucket },
+        let transform: Option<Box<dyn GradTransform>> = match &spec {
+            StrategySpec::Qsgd { levels, bucket } => Some(Box::new(QsgdTransform {
+                cfg: QsgdConfig { levels: *levels, bucket: *bucket },
                 rng: Rng::new(cfg.seed ^ 0x9569D, rank as u64),
             })),
-            Strategy::TopK => Some(Box::new(TopKTransform {
-                cfg: TopKConfig { keep_frac: cfg.sync.topk_frac },
+            StrategySpec::TopK { frac } => Some(Box::new(TopKTransform {
+                cfg: TopKConfig { keep_frac: *frac },
                 res: Residual::new(n_params),
             })),
             _ => None,
         };
-        let elastic_alpha = (cfg.sync.strategy == Strategy::Easgd && cfg.sync.easgd_alpha < 1.0)
-            .then(|| cfg.sync.easgd_alpha as f32);
+        let elastic_alpha = match &spec {
+            // α = 1 degenerates to CPSGD: the elastic stage composes away
+            StrategySpec::Easgd { alpha, .. } if *alpha < 1.0 => Some(*alpha as f32),
+            _ => None,
+        };
         SyncStep {
             mode,
             controller,
             transform,
             elastic_alpha,
-            charge_scalar_stat: cfg.sync.strategy == Strategy::Adaptive,
+            charge_scalar_stat: matches!(spec, StrategySpec::Adaptive { .. }),
         }
     }
 
@@ -170,6 +197,10 @@ impl SyncStep {
     /// charge → collective exchange → S_k agreement → elastic pull →
     /// extra ledger stat → period feedback.  Returns the agreed S_k when
     /// a synchronization happened, `None` otherwise.
+    ///
+    /// `k` is the *global* iteration index (warm starts pass
+    /// `resume_iter + local_k`), matching the [`PeriodController`]
+    /// contract.
     pub fn maybe_sync_params(
         &mut self,
         node: &mut Node,
@@ -214,6 +245,8 @@ mod tests {
         cfg
     }
 
+    use crate::period::Strategy;
+
     #[test]
     fn mode_per_strategy() {
         for (s, mode) in [
@@ -226,35 +259,50 @@ mod tests {
             (Strategy::Piecewise, ExchangeMode::Parameters),
             (Strategy::Decreasing, ExchangeMode::Parameters),
         ] {
-            let step = SyncStep::build(&cfg_for(s), 64, 0);
+            let step = SyncStep::build(&cfg_for(s), 64, 0, 0, None);
             assert_eq!(step.mode, mode, "{s}");
         }
     }
 
     #[test]
     fn stage_composition_per_strategy() {
-        let full = SyncStep::build(&cfg_for(Strategy::Full), 64, 0);
+        let full = SyncStep::build(&cfg_for(Strategy::Full), 64, 0, 0, None);
         assert!(full.transform.is_none() && full.controller.is_none());
         assert!(!full.charge_scalar_stat && full.elastic_alpha.is_none());
 
-        let qsgd = SyncStep::build(&cfg_for(Strategy::Qsgd), 64, 0);
+        let qsgd = SyncStep::build(&cfg_for(Strategy::Qsgd), 64, 0, 0, None);
         assert_eq!(qsgd.transform.as_ref().unwrap().kind(), CommKind::QuantAllgather);
 
-        let topk = SyncStep::build(&cfg_for(Strategy::TopK), 64, 0);
+        let topk = SyncStep::build(&cfg_for(Strategy::TopK), 64, 0, 0, None);
         assert_eq!(topk.transform.as_ref().unwrap().kind(), CommKind::SparsePs);
 
-        let adp = SyncStep::build(&cfg_for(Strategy::Adaptive), 64, 0);
+        let adp = SyncStep::build(&cfg_for(Strategy::Adaptive), 64, 0, 0, None);
         assert!(adp.charge_scalar_stat && adp.controller.is_some());
 
         let mut ecfg = cfg_for(Strategy::Easgd);
         ecfg.sync.easgd_alpha = 0.5;
-        let easgd = SyncStep::build(&ecfg, 64, 0);
+        let easgd = SyncStep::build(&ecfg, 64, 0, 0, None);
         assert_eq!(easgd.elastic_alpha, Some(0.5));
 
         // α = 1 degenerates to CPSGD: the elastic stage composes away
         ecfg.sync.easgd_alpha = 1.0;
-        let cpsgd_like = SyncStep::build(&ecfg, 64, 0);
+        let cpsgd_like = SyncStep::build(&ecfg, 64, 0, 0, None);
         assert_eq!(cpsgd_like.elastic_alpha, None);
+    }
+
+    #[test]
+    fn injected_controller_overrides_registry() {
+        let step = SyncStep::build(
+            &cfg_for(Strategy::Constant),
+            64,
+            0,
+            0,
+            Some(&|| {
+                Box::new(crate::period::Constant::new(7)) as Box<dyn PeriodController>
+            }),
+        );
+        assert_eq!(step.mode, ExchangeMode::Parameters);
+        assert_eq!(step.current_period(), 7);
     }
 
     #[test]

@@ -181,6 +181,57 @@ impl NodeSource {
     }
 }
 
+/// Process-wide dataset cache.
+///
+/// Datasets are pure functions of their construction parameters and
+/// immutable afterwards, so sweeps (campaigns, figure regenerations)
+/// share one `Arc` per distinct parameter set instead of regenerating
+/// the class means / corpus text for every run.  Sampling stays
+/// per-node-RNG, so sharing changes no training bytes.
+pub mod cache {
+    use super::{CharCorpus, SynthClass};
+    use crate::util::memo;
+    use std::sync::{Arc, OnceLock};
+
+    type SynthKey = (u64, usize, usize, u32, u32);
+
+    pub fn synth_class(
+        seed: u64,
+        dim: usize,
+        classes: usize,
+        noise: f32,
+        label_noise: f32,
+    ) -> Arc<SynthClass> {
+        static CACHE: memo::Cache<SynthKey, SynthClass> = OnceLock::new();
+        let key = (seed, dim, classes, noise.to_bits(), label_noise.to_bits());
+        memo::get_or_build(&CACHE, key, || {
+            SynthClass::new(seed, dim, classes, noise, label_noise)
+        })
+    }
+
+    pub fn char_corpus(seed: u64, target_len: usize) -> Arc<CharCorpus> {
+        static CACHE: memo::Cache<(u64, usize), CharCorpus> = OnceLock::new();
+        memo::get_or_build(&CACHE, (seed, target_len), || CharCorpus::generate(seed, target_len))
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use std::sync::Arc;
+
+        #[test]
+        fn same_key_shares_one_dataset() {
+            let a = super::synth_class(11, 8, 4, 1.0, 0.0);
+            let b = super::synth_class(11, 8, 4, 1.0, 0.0);
+            assert!(Arc::ptr_eq(&a, &b));
+            let c = super::synth_class(12, 8, 4, 1.0, 0.0);
+            assert!(!Arc::ptr_eq(&a, &c));
+            let t1 = super::char_corpus(5, 1024);
+            let t2 = super::char_corpus(5, 1024);
+            assert!(Arc::ptr_eq(&t1, &t2));
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,622 @@
+//! Declarative multi-run campaigns: a cartesian sweep over strategy ×
+//! nodes × network × collective (× arbitrary named variants), executed
+//! with bounded-parallel scheduling.
+//!
+//! A campaign *describes* every run up front ([`CampaignBuilder::build`]
+//! materializes the cross product into labeled, validated
+//! [`RunSpec`]s), then [`Campaign::run`] executes them through the
+//! session API.  Because runs are fully independent coordinator
+//! clusters, the scheduler can run several at once — results are
+//! deterministic and ordered regardless of the parallelism level, and
+//! datasets/manifests are shared across runs through the process-wide
+//! caches ([`crate::data::cache`],
+//! [`crate::runtime::Manifest::load_cached`]).
+//!
+//! Every `figures/*` module is a campaign definition plus
+//! post-processing; `adpsgd campaign` exposes the same axes on the
+//! command line.
+
+use super::Experiment;
+use crate::collective::Algo;
+use crate::config::{ExperimentConfig, NetConfig, StrategySpec};
+use crate::coordinator::RunReport;
+use crate::metrics::Table;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+type Patch = Arc<dyn Fn(&mut ExperimentConfig) + Send + Sync>;
+
+/// One materialized run of a campaign: a label and a validated config.
+pub struct RunSpec {
+    pub label: String,
+    pub cfg: ExperimentConfig,
+}
+
+/// A fully-materialized sweep, ready to execute.
+pub struct Campaign {
+    pub name: String,
+    runs: Vec<RunSpec>,
+    parallelism: usize,
+}
+
+impl Campaign {
+    pub fn builder(name: impl Into<String>, base: ExperimentConfig) -> CampaignBuilder {
+        CampaignBuilder {
+            name: name.into(),
+            base,
+            strategies: Vec::new(),
+            nodes: Vec::new(),
+            nets: Vec::new(),
+            collectives: Vec::new(),
+            variants: Vec::new(),
+            post: None,
+            parallelism: 1,
+        }
+    }
+
+    /// Concatenate several campaigns into one (for non-cartesian unions
+    /// like Table I's four run families).  Run order is the
+    /// concatenation order; parallelism is the maximum of the parts.
+    /// Labels must stay unique across parts (get/take are label-keyed).
+    pub fn union(
+        name: impl Into<String>,
+        parts: impl IntoIterator<Item = Campaign>,
+    ) -> Result<Campaign> {
+        let name = name.into();
+        let mut runs: Vec<RunSpec> = Vec::new();
+        let mut parallelism = 1;
+        for c in parts {
+            parallelism = parallelism.max(c.parallelism);
+            for run in c.runs {
+                if runs.iter().any(|r| r.label == run.label) {
+                    bail!(
+                        "campaign union {name:?}: duplicate run label {:?} across parts",
+                        run.label
+                    );
+                }
+                runs.push(run);
+            }
+        }
+        Ok(Campaign { name, runs, parallelism })
+    }
+
+    pub fn runs(&self) -> &[RunSpec] {
+        &self.runs
+    }
+
+    pub fn len(&self) -> usize {
+        self.runs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+
+    /// Override the scheduler's worker count after build.
+    pub fn with_parallelism(mut self, n: usize) -> Campaign {
+        self.parallelism = n.max(1);
+        self
+    }
+
+    /// Execute every run with at most `parallelism` concurrent runs.
+    /// Reports come back in declaration order; the first failing run
+    /// aborts the campaign (remaining queued runs are not started,
+    /// in-flight ones finish).
+    pub fn run(&self) -> Result<CampaignReport> {
+        let n = self.runs.len();
+        if n == 0 {
+            bail!("campaign {:?} has no runs", self.name);
+        }
+        let wall = std::time::Instant::now();
+        let workers = self.parallelism.clamp(1, n);
+        let next = AtomicUsize::new(0);
+        let failed = std::sync::atomic::AtomicBool::new(false);
+        let slots: Vec<Mutex<Option<Result<RunReport>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    if failed.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let spec = &self.runs[i];
+                    let res = Experiment::from_config(spec.cfg.clone())
+                        .and_then(Experiment::run)
+                        .with_context(|| {
+                            format!("campaign {:?} run {:?}", self.name, spec.label)
+                        });
+                    if res.is_err() {
+                        failed.store(true, Ordering::Relaxed);
+                    }
+                    *slots[i].lock().expect("campaign slot lock") = Some(res);
+                });
+            }
+        });
+        let mut runs = Vec::with_capacity(n);
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot.into_inner().expect("campaign slot lock") {
+                Some(Ok(report)) => {
+                    runs.push(CampaignRunResult { label: self.runs[i].label.clone(), report })
+                }
+                Some(Err(e)) => return Err(e),
+                None => bail!(
+                    "campaign {:?}: run {:?} was skipped after an earlier failure",
+                    self.name,
+                    self.runs[i].label
+                ),
+            }
+        }
+        Ok(CampaignReport {
+            name: self.name.clone(),
+            wall_secs: wall.elapsed().as_secs_f64(),
+            runs,
+        })
+    }
+}
+
+/// Axis-by-axis description of a campaign; `build()` materializes the
+/// cross product.  Empty axes are skipped (they contribute neither a
+/// dimension nor a label part).
+pub struct CampaignBuilder {
+    name: String,
+    base: ExperimentConfig,
+    strategies: Vec<(String, StrategySpec)>,
+    nodes: Vec<usize>,
+    nets: Vec<(String, NetConfig)>,
+    collectives: Vec<Algo>,
+    variants: Vec<(String, Patch)>,
+    post: Option<Patch>,
+    parallelism: usize,
+}
+
+impl CampaignBuilder {
+    /// Add one strategy to the strategy axis.
+    pub fn strategy(mut self, label: impl Into<String>, spec: StrategySpec) -> Self {
+        self.strategies.push((label.into(), spec));
+        self
+    }
+
+    /// Add many strategies at once.
+    pub fn strategies(
+        mut self,
+        specs: impl IntoIterator<Item = (String, StrategySpec)>,
+    ) -> Self {
+        self.strategies.extend(specs);
+        self
+    }
+
+    /// Sweep the cluster size.
+    pub fn nodes(mut self, ns: &[usize]) -> Self {
+        self.nodes.extend_from_slice(ns);
+        self
+    }
+
+    /// Add one network preset to the bandwidth axis.
+    pub fn net(mut self, label: impl Into<String>, net: NetConfig) -> Self {
+        self.nets.push((label.into(), net));
+        self
+    }
+
+    /// Sweep the collective algorithm.
+    pub fn collectives(mut self, algos: &[Algo]) -> Self {
+        self.collectives.extend_from_slice(algos);
+        self
+    }
+
+    /// Add a named config patch to the variant axis (for sweeps the
+    /// typed axes don't cover: learning rates, batch geometry, …).
+    pub fn variant(
+        mut self,
+        label: impl Into<String>,
+        f: impl Fn(&mut ExperimentConfig) + Send + Sync + 'static,
+    ) -> Self {
+        self.variants.push((label.into(), Arc::new(f)));
+        self
+    }
+
+    /// A patch applied to *every* run after all axes (e.g. fixed-work
+    /// scaling `iters = K/nodes`).
+    pub fn post(mut self, f: impl Fn(&mut ExperimentConfig) + Send + Sync + 'static) -> Self {
+        self.post = Some(Arc::new(f));
+        self
+    }
+
+    /// Maximum concurrent runs (each run is itself a `nodes`-thread
+    /// cluster; default 1).
+    pub fn parallelism(mut self, n: usize) -> Self {
+        self.parallelism = n.max(1);
+        self
+    }
+
+    /// Materialize and validate every run of the cross product.
+    pub fn build(self) -> Result<Campaign> {
+        fn axis<T>(v: Vec<T>) -> Vec<Option<T>> {
+            if v.is_empty() {
+                vec![None]
+            } else {
+                v.into_iter().map(Some).collect()
+            }
+        }
+        let strategies = axis(self.strategies);
+        let nodes = axis(self.nodes);
+        let nets = axis(self.nets);
+        let collectives = axis(self.collectives);
+        let variants = axis(self.variants);
+
+        let mut runs = Vec::new();
+        for strat in &strategies {
+            for n in &nodes {
+                for net in &nets {
+                    for algo in &collectives {
+                        for var in &variants {
+                            let mut cfg = self.base.clone();
+                            let mut parts: Vec<String> = Vec::new();
+                            if let Some((label, spec)) = strat {
+                                spec.validate()
+                                    .with_context(|| format!("campaign run {label:?}"))?;
+                                spec.apply_to(&mut cfg.sync);
+                                parts.push(label.clone());
+                            }
+                            if let Some(n) = n {
+                                cfg.nodes = *n;
+                                parts.push(format!("n{n}"));
+                            }
+                            if let Some((label, net)) = net {
+                                cfg.net = net.clone();
+                                parts.push(label.clone());
+                            }
+                            if let Some(algo) = algo {
+                                cfg.sync.collective = *algo;
+                                parts.push(algo.to_string());
+                            }
+                            if let Some((label, patch)) = var {
+                                patch(&mut cfg);
+                                parts.push(label.clone());
+                            }
+                            if let Some(post) = &self.post {
+                                post(&mut cfg);
+                            }
+                            let label = if parts.is_empty() {
+                                self.name.clone()
+                            } else {
+                                parts.join("_")
+                            };
+                            if runs.iter().any(|r: &RunSpec| r.label == label) {
+                                bail!(
+                                    "campaign {:?}: duplicate run label {label:?} \
+                                     (axis entries must have distinct labels)",
+                                    self.name
+                                );
+                            }
+                            if cfg.checkpoint_every > 0 {
+                                // concurrent runs must not race on one
+                                // snapshot directory: namespace per label
+                                cfg.checkpoint_dir =
+                                    std::path::Path::new(&cfg.checkpoint_dir)
+                                        .join(&label)
+                                        .to_string_lossy()
+                                        .into_owned();
+                            }
+                            cfg.name = label.clone();
+                            cfg.validate()
+                                .with_context(|| format!("campaign run {label:?}"))?;
+                            runs.push(RunSpec { label, cfg });
+                        }
+                    }
+                }
+            }
+        }
+        Ok(Campaign { name: self.name, runs, parallelism: self.parallelism })
+    }
+}
+
+/// One finished run of a campaign.
+pub struct CampaignRunResult {
+    pub label: String,
+    pub report: RunReport,
+}
+
+/// Everything a finished campaign reports.
+pub struct CampaignReport {
+    pub name: String,
+    pub wall_secs: f64,
+    pub runs: Vec<CampaignRunResult>,
+}
+
+impl CampaignReport {
+    pub fn try_get(&self, label: &str) -> Option<&RunReport> {
+        self.runs.iter().find(|r| r.label == label).map(|r| &r.report)
+    }
+
+    pub fn get(&self, label: &str) -> &RunReport {
+        self.try_get(label).unwrap_or_else(|| {
+            let labels: Vec<&str> = self.runs.iter().map(|r| r.label.as_str()).collect();
+            panic!("campaign {:?} has no run {label:?} (runs: {labels:?})", self.name)
+        })
+    }
+
+    /// Remove and return one run's report by label (for consumers that
+    /// need owned reports); panics with the available labels if absent.
+    pub fn take(&mut self, label: &str) -> RunReport {
+        match self.runs.iter().position(|r| r.label == label) {
+            Some(i) => self.runs.remove(i).report,
+            None => {
+                let labels: Vec<&str> = self.runs.iter().map(|r| r.label.as_str()).collect();
+                panic!("campaign {:?} has no run {label:?} (runs: {labels:?})", self.name)
+            }
+        }
+    }
+
+    /// The reports in declaration order (each `RunReport::name` is its
+    /// campaign label).
+    pub fn reports(self) -> Vec<RunReport> {
+        self.runs.into_iter().map(|r| r.report).collect()
+    }
+
+    pub fn runs_per_sec(&self) -> f64 {
+        self.runs.len() as f64 / self.wall_secs.max(1e-12)
+    }
+
+    /// Total modeled communication across all runs (each priced under
+    /// its own configured network).
+    pub fn total_modeled_comm_secs(&self) -> f64 {
+        self.runs.iter().map(|r| r.report.ledger.total_secs()).sum()
+    }
+
+    pub fn total_wire_bytes(&self) -> u64 {
+        self.runs.iter().map(|r| r.report.ledger.total_wire_bytes()).sum()
+    }
+
+    /// Per-run summary table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&[
+            "run", "strategy", "nodes", "final loss", "best acc", "syncs", "p̄", "wire MB",
+            "comm(model)",
+        ]);
+        for r in &self.runs {
+            let rep = &r.report;
+            t.row(&[
+                r.label.clone(),
+                rep.strategy.to_string(),
+                rep.nodes.to_string(),
+                format!("{:.4}", rep.final_train_loss),
+                format!("{:.4}", rep.best_eval_acc),
+                rep.syncs.to_string(),
+                format!("{:.2}", rep.avg_period),
+                format!("{:.2}", rep.ledger.total_wire_bytes() as f64 / 1e6),
+                crate::util::fmt::secs(rep.ledger.total_secs()),
+            ]);
+        }
+        t
+    }
+
+    /// Machine-readable campaign summary (per-run one-line summaries,
+    /// no series).
+    pub fn to_json(&self) -> Json {
+        let runs = Json::Arr(
+            self.runs
+                .iter()
+                .map(|r| {
+                    let mut obj = match r.report.to_json(false) {
+                        Json::Obj(m) => m,
+                        _ => unreachable!("run summary is an object"),
+                    };
+                    obj.insert("label".into(), Json::str(r.label.clone()));
+                    Json::Obj(obj)
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("campaign", Json::str(self.name.clone())),
+            ("runs", Json::num(self.runs.len() as f64)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("runs_per_sec", Json::num(self.runs_per_sec())),
+            ("total_modeled_comm_secs", Json::num(self.total_modeled_comm_secs())),
+            ("total_wire_bytes", Json::num(self.total_wire_bytes() as f64)),
+            ("run_summaries", runs),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LrSchedule;
+    use crate::period::Strategy;
+
+    fn tiny_base() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.nodes = 2;
+        cfg.iters = 40;
+        cfg.batch_per_node = 8;
+        cfg.eval_every = 20;
+        cfg.workload.input_dim = 24;
+        cfg.workload.hidden = 12;
+        cfg.workload.eval_batches = 2;
+        cfg.optim.schedule = LrSchedule::Const;
+        cfg.sync.period = 4;
+        cfg.sync.p_init = 2;
+        cfg.sync.warmup_iters = 4;
+        cfg
+    }
+
+    #[test]
+    fn cartesian_product_labels_and_order() {
+        let c = Campaign::builder("t", tiny_base())
+            .strategy("cpsgd", StrategySpec::Constant { period: 4 })
+            .strategy("full", StrategySpec::Full)
+            .collectives(&[Algo::Ring, Algo::Flat])
+            .build()
+            .unwrap();
+        let labels: Vec<&str> = c.runs().iter().map(|r| r.label.as_str()).collect();
+        assert_eq!(labels, vec!["cpsgd_ring", "cpsgd_flat", "full_ring", "full_flat"]);
+        assert_eq!(c.runs()[3].cfg.sync.strategy, Strategy::Full);
+        assert_eq!(c.runs()[1].cfg.sync.collective, Algo::Flat);
+    }
+
+    #[test]
+    fn single_axis_keeps_clean_labels() {
+        let c = Campaign::builder("t", tiny_base())
+            .strategy("fullsgd", StrategySpec::Full)
+            .strategy("adpsgd", StrategySpec::default_of(Strategy::Adaptive))
+            .build()
+            .unwrap();
+        let labels: Vec<&str> = c.runs().iter().map(|r| r.label.as_str()).collect();
+        assert_eq!(labels, vec!["fullsgd", "adpsgd"]);
+    }
+
+    #[test]
+    fn invalid_spec_rejected_at_build() {
+        let err = Campaign::builder("t", tiny_base())
+            .strategy("bad", StrategySpec::Constant { period: 0 })
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("bad"), "{err:#}");
+    }
+
+    #[test]
+    fn checkpoint_dirs_are_namespaced_per_run() {
+        let mut base = tiny_base();
+        base.checkpoint_every = 20;
+        base.checkpoint_dir = "ckpts".into();
+        let c = Campaign::builder("t", base)
+            .strategy("a", StrategySpec::Full)
+            .strategy("b", StrategySpec::Constant { period: 4 })
+            .build()
+            .unwrap();
+        let dirs: Vec<&str> =
+            c.runs().iter().map(|r| r.cfg.checkpoint_dir.as_str()).collect();
+        assert_eq!(dirs.len(), 2);
+        assert_ne!(dirs[0], dirs[1], "concurrent runs must not share a snapshot dir");
+        assert!(dirs[0].starts_with("ckpts"), "{dirs:?}");
+    }
+
+    #[test]
+    fn duplicate_labels_rejected_at_build() {
+        let err = Campaign::builder("t", tiny_base())
+            .strategy("same", StrategySpec::Full)
+            .strategy("same", StrategySpec::Constant { period: 4 })
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate run label"), "{err:#}");
+    }
+
+    #[test]
+    fn take_extracts_owned_reports_by_label() {
+        let mut rep = Campaign::builder("t", tiny_base())
+            .strategy("cpsgd", StrategySpec::Constant { period: 4 })
+            .strategy("full", StrategySpec::Full)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        let full = rep.take("full");
+        assert_eq!(full.name, "full");
+        assert_eq!(rep.runs.len(), 1);
+        assert!(rep.try_get("full").is_none());
+    }
+
+    #[test]
+    fn no_axes_yields_single_base_run() {
+        let c = Campaign::builder("t", tiny_base()).build().unwrap();
+        // no axes -> exactly one base run, labeled with the campaign name
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.runs()[0].label, "t");
+        // and a union of nothing has nothing to run
+        assert!(Campaign::union("u", []).unwrap().run().is_err());
+    }
+
+    #[test]
+    fn union_rejects_duplicate_labels_across_parts() {
+        let part = |label: &str| {
+            Campaign::builder("p", tiny_base())
+                .strategy(label, StrategySpec::Full)
+                .build()
+                .unwrap()
+        };
+        let err = Campaign::union("u", [part("same"), part("same")]).unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate run label"), "{err:#}");
+        assert!(Campaign::union("u", [part("a"), part("b")]).is_ok());
+    }
+
+    #[test]
+    fn campaign_runs_and_reports_in_order() {
+        let rep = Campaign::builder("t", tiny_base())
+            .strategy("cpsgd", StrategySpec::Constant { period: 4 })
+            .strategy("full", StrategySpec::Full)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(rep.runs.len(), 2);
+        assert_eq!(rep.runs[0].label, "cpsgd");
+        assert_eq!(rep.get("cpsgd").syncs, 10);
+        assert_eq!(rep.get("full").syncs, 40);
+        assert!(rep.runs_per_sec() > 0.0);
+        assert!(rep.total_wire_bytes() > 0);
+        let json = rep.to_json().to_string_compact();
+        assert!(json.contains("\"campaign\""), "{json}");
+        assert!(json.contains("cpsgd"), "{json}");
+    }
+
+    #[test]
+    fn parallel_scheduling_is_deterministic() {
+        let build = |par: usize| {
+            Campaign::builder("t", tiny_base())
+                .strategy("cpsgd", StrategySpec::Constant { period: 4 })
+                .strategy("adpsgd", StrategySpec::default_of(Strategy::Adaptive))
+                .strategy("full", StrategySpec::Full)
+                .strategy("qsgd", StrategySpec::default_of(Strategy::Qsgd))
+                .parallelism(par)
+                .build()
+                .unwrap()
+        };
+        let serial = build(1).run().unwrap();
+        let parallel = build(3).run().unwrap();
+        for (a, b) in serial.runs.iter().zip(&parallel.runs) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(
+                a.report.final_train_loss, b.report.final_train_loss,
+                "{}: parallel scheduling must not change results",
+                a.label
+            );
+            assert_eq!(a.report.syncs, b.report.syncs, "{}", a.label);
+        }
+    }
+
+    #[test]
+    fn failing_run_aborts_campaign_with_label() {
+        let mut bad = tiny_base();
+        bad.workload.backend = crate::config::Backend::Native("failing:0:5".into());
+        let c = Campaign::builder("t", bad)
+            .strategy("boom", StrategySpec::Constant { period: 4 })
+            .build()
+            .unwrap();
+        let err = c.run().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("boom"), "{msg}");
+        assert!(msg.contains("injected failure"), "{msg}");
+    }
+
+    #[test]
+    fn variant_and_post_patches_apply_in_order() {
+        let c = Campaign::builder("t", tiny_base())
+            .strategy("full", StrategySpec::Full)
+            .nodes(&[2, 4])
+            .variant("lr2", |cfg| cfg.optim.lr0 = 0.2)
+            .post(|cfg| cfg.iters = 80 / cfg.nodes)
+            .build()
+            .unwrap();
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.runs()[0].label, "full_n2_lr2");
+        assert_eq!(c.runs()[0].cfg.iters, 40);
+        assert_eq!(c.runs()[1].cfg.iters, 20);
+        assert!((c.runs()[1].cfg.optim.lr0 - 0.2).abs() < 1e-6);
+    }
+}

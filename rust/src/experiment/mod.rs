@@ -1,0 +1,376 @@
+//! The session-level experiment API: typed builders over the
+//! coordinator, observer plumbing, and declarative multi-run campaigns.
+//!
+//! One run:
+//!
+//! ```no_run
+//! use adpsgd::config::StrategySpec;
+//! use adpsgd::experiment::Experiment;
+//!
+//! let report = Experiment::builder()
+//!     .name("demo")
+//!     .nodes(8)
+//!     .iters(2_000)
+//!     .strategy(StrategySpec::Adaptive {
+//!         p_init: 4, warmup_iters: 25, ks_frac: 0.25, low: 0.7, high: 1.3,
+//!     })
+//!     .build()
+//!     .unwrap()
+//!     .run()
+//!     .unwrap();
+//! println!("final loss {:.4}", report.final_train_loss);
+//! ```
+//!
+//! The builder validates at `build()` time: a knob that does not belong
+//! to the chosen strategy (`.set("sync.qsgd_levels", …)` under an
+//! adaptive spec) is rejected with the valid key list, not silently
+//! absorbed.  Observers ([`RunObserver`]) receive the typed event
+//! stream from the coordinator loop; a custom [`PeriodController`] can
+//! be injected per session, bypassing the registry.
+//!
+//! Many runs: [`Campaign`] (see [`campaign`]) sweeps strategy × nodes ×
+//! network × collective axes with bounded-parallel scheduling and
+//! shared dataset caching.
+
+pub mod campaign;
+
+pub use crate::coordinator::observer::{
+    CheckpointObserver, ObserverHub, RecorderObserver, RunEvent, RunObserver,
+};
+pub use campaign::{Campaign, CampaignBuilder, CampaignReport, CampaignRunResult, RunSpec};
+
+use crate::collective::Algo;
+use crate::config::{toml::TomlDoc, Backend, ExperimentConfig, NetConfig, StrategySpec};
+use crate::coordinator::{run_experiment, ControllerFactory, RunHooks, RunReport};
+use crate::period::PeriodController;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// One fully-validated experiment, ready to run.
+pub struct Experiment {
+    cfg: ExperimentConfig,
+    observers: Vec<Box<dyn RunObserver>>,
+    controller: Option<Arc<ControllerFactory>>,
+}
+
+impl Experiment {
+    /// Start from the default config.
+    pub fn builder() -> ExperimentBuilder {
+        ExperimentBuilder::from_config(ExperimentConfig::default())
+    }
+
+    /// Start from an existing config (a TOML preset, a figure base, …).
+    pub fn builder_from(cfg: ExperimentConfig) -> ExperimentBuilder {
+        ExperimentBuilder::from_config(cfg)
+    }
+
+    /// Wrap a config directly (validating it), with no extra hooks.
+    pub fn from_config(cfg: ExperimentConfig) -> Result<Experiment> {
+        cfg.validate()?;
+        Ok(Experiment { cfg, observers: Vec::new(), controller: None })
+    }
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// Attach another observer after build.
+    pub fn observe(&mut self, observer: Box<dyn RunObserver>) {
+        self.observers.push(observer);
+    }
+
+    /// Run to completion, streaming events to the observers.
+    pub fn run(self) -> Result<RunReport> {
+        run_experiment(
+            &self.cfg,
+            RunHooks { observers: self.observers, controller: self.controller },
+        )
+    }
+}
+
+/// Builder for [`Experiment`] with build-time validation.
+pub struct ExperimentBuilder {
+    cfg: ExperimentConfig,
+    strategy: Option<StrategySpec>,
+    overrides: Vec<(String, String)>,
+    observers: Vec<Box<dyn RunObserver>>,
+    controller: Option<Arc<ControllerFactory>>,
+}
+
+impl ExperimentBuilder {
+    fn from_config(cfg: ExperimentConfig) -> Self {
+        ExperimentBuilder {
+            cfg,
+            strategy: None,
+            overrides: Vec::new(),
+            observers: Vec::new(),
+            controller: None,
+        }
+    }
+
+    pub fn name(mut self, name: impl Into<String>) -> Self {
+        self.cfg.name = name.into();
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn nodes(mut self, nodes: usize) -> Self {
+        self.cfg.nodes = nodes;
+        self
+    }
+
+    pub fn iters(mut self, iters: usize) -> Self {
+        self.cfg.iters = iters;
+        self
+    }
+
+    pub fn batch_per_node(mut self, b: usize) -> Self {
+        self.cfg.batch_per_node = b;
+        self
+    }
+
+    pub fn eval_every(mut self, every: usize) -> Self {
+        self.cfg.eval_every = every;
+        self
+    }
+
+    pub fn variance_every(mut self, every: usize) -> Self {
+        self.cfg.variance_every = every;
+        self
+    }
+
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.cfg.workload.backend = backend;
+        self
+    }
+
+    pub fn net(mut self, net: NetConfig) -> Self {
+        self.cfg.net = net;
+        self
+    }
+
+    pub fn collective(mut self, algo: Algo) -> Self {
+        self.cfg.sync.collective = algo;
+        self
+    }
+
+    /// Choose the synchronization strategy by typed spec.
+    pub fn strategy(mut self, spec: StrategySpec) -> Self {
+        self.strategy = Some(spec);
+        self
+    }
+
+    /// Checkpoint cadence and directory.
+    pub fn checkpoint(mut self, every: usize, dir: impl Into<String>) -> Self {
+        self.cfg.checkpoint_every = every;
+        self.cfg.checkpoint_dir = dir.into();
+        self
+    }
+
+    /// Warm-start from a snapshot file or directory.
+    pub fn init_from(mut self, path: impl Into<String>) -> Self {
+        self.cfg.init_from = path.into();
+        self
+    }
+
+    /// Set a dotted config key (`"sync.adaptive.p_init"`,
+    /// `"optim.lr0"`, …).  Checked against the chosen strategy at
+    /// `build()` — misplaced strategy knobs are rejected with the valid
+    /// key list.
+    pub fn set(mut self, key: impl Into<String>, value: impl Into<String>) -> Self {
+        self.overrides.push((key.into(), value.into()));
+        self
+    }
+
+    /// Escape hatch: arbitrary config surgery before validation.
+    pub fn configure(mut self, f: impl FnOnce(&mut ExperimentConfig)) -> Self {
+        f(&mut self.cfg);
+        self
+    }
+
+    /// Attach an observer to the run's event stream.
+    pub fn observer(mut self, observer: Box<dyn RunObserver>) -> Self {
+        self.observers.push(observer);
+        self
+    }
+
+    /// Inject a custom period controller (one instance per worker rank),
+    /// bypassing the registry.  Requires a parameter-averaging strategy.
+    pub fn period_controller(
+        mut self,
+        factory: impl Fn() -> Box<dyn PeriodController> + Send + Sync + 'static,
+    ) -> Self {
+        self.controller = Some(Arc::new(factory));
+        self
+    }
+
+    /// Validate everything and produce a runnable [`Experiment`].
+    pub fn build(self) -> Result<Experiment> {
+        let ExperimentBuilder { mut cfg, strategy, overrides, observers, controller } = self;
+        if let Some(spec) = &strategy {
+            spec.validate()?;
+            spec.apply_to(&mut cfg.sync);
+        }
+        if !overrides.is_empty() {
+            let mut doc = TomlDoc::default();
+            for (k, v) in &overrides {
+                doc.entries.insert(k.clone(), ExperimentConfig::parse_override_value(v));
+            }
+            cfg.apply_doc(&doc)?;
+            ExperimentConfig::check_override_keys(&[cfg.sync.strategy], &overrides)?;
+        }
+        if controller.is_some() && cfg.sync.spec().is_gradient_mode() {
+            bail!(
+                "a custom period controller requires a parameter-averaging strategy \
+                 (got {}, which exchanges gradients every iteration)",
+                cfg.sync.spec().name()
+            );
+        }
+        cfg.validate()?;
+        Ok(Experiment { cfg, observers, controller })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LrSchedule;
+    use crate::period::Strategy;
+    use std::sync::Mutex;
+
+    fn quick_builder() -> ExperimentBuilder {
+        Experiment::builder()
+            .name("exp_test")
+            .nodes(2)
+            .iters(60)
+            .batch_per_node(8)
+            .eval_every(30)
+            .configure(|c| {
+                c.workload.input_dim = 24;
+                c.workload.hidden = 12;
+                c.workload.eval_batches = 2;
+                c.optim.schedule = LrSchedule::Const;
+            })
+    }
+
+    #[test]
+    fn builder_rejects_mismatched_strategy_knob() {
+        let err = quick_builder()
+            .strategy(StrategySpec::default_of(Strategy::Adaptive))
+            .set("sync.qsgd_levels", "15")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("qsgd knob"), "{err}");
+        assert!(err.contains("sync.adaptive"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_invalid_spec() {
+        let err = quick_builder()
+            .strategy(StrategySpec::Easgd { period: 8, alpha: 1.7 })
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("alpha"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_controller_on_gradient_mode() {
+        let err = quick_builder()
+            .strategy(StrategySpec::Full)
+            .period_controller(|| Box::new(crate::period::Constant::new(3)))
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("parameter-averaging"), "{err}");
+    }
+
+    #[test]
+    fn custom_controller_drives_sync_schedule() {
+        let report = quick_builder()
+            .strategy(StrategySpec::Constant { period: 5 })
+            .period_controller(|| Box::new(crate::period::Constant::new(3)))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(report.syncs, 20, "injected p=3 over 60 iters");
+    }
+
+    #[test]
+    fn observer_sees_typed_event_stream() {
+        #[derive(Default)]
+        struct Counts {
+            iters: usize,
+            syncs: usize,
+            evals: usize,
+            started: bool,
+            ended: bool,
+        }
+        struct Counting(Arc<Mutex<Counts>>);
+        impl RunObserver for Counting {
+            fn on_event(&mut self, ev: &RunEvent<'_>) -> Result<()> {
+                let mut c = self.0.lock().unwrap();
+                match ev {
+                    RunEvent::RunStart { .. } => c.started = true,
+                    RunEvent::IterEnd { .. } => c.iters += 1,
+                    RunEvent::SyncDone { .. } => c.syncs += 1,
+                    RunEvent::EvalDone { .. } => c.evals += 1,
+                    RunEvent::RunEnd { .. } => c.ended = true,
+                    _ => {}
+                }
+                Ok(())
+            }
+        }
+        let counts = Arc::new(Mutex::new(Counts::default()));
+        let report = quick_builder()
+            .strategy(StrategySpec::Constant { period: 4 })
+            .observer(Box::new(Counting(Arc::clone(&counts))))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        let c = counts.lock().unwrap();
+        assert!(c.started && c.ended);
+        assert_eq!(c.iters, 60);
+        assert_eq!(c.syncs as u64, report.syncs);
+        assert_eq!(c.evals, 2, "eval_every=30 over 60 iters");
+    }
+
+    #[test]
+    fn failing_observer_aborts_run_cleanly() {
+        struct Bomb;
+        impl RunObserver for Bomb {
+            fn on_event(&mut self, ev: &RunEvent<'_>) -> Result<()> {
+                if let RunEvent::IterEnd { k: 10, .. } = ev {
+                    anyhow::bail!("observer bomb");
+                }
+                Ok(())
+            }
+        }
+        let err = quick_builder()
+            .strategy(StrategySpec::Constant { period: 4 })
+            .observer(Box::new(Bomb))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("observer bomb"));
+    }
+
+    #[test]
+    fn experiment_matches_deprecated_trainer() {
+        let exp = quick_builder().strategy(StrategySpec::Constant { period: 4 }).build().unwrap();
+        let cfg = exp.config().clone();
+        let a = exp.run().unwrap();
+        #[allow(deprecated)]
+        let b = crate::coordinator::Trainer::new(cfg).unwrap().run().unwrap();
+        assert_eq!(a.final_train_loss, b.final_train_loss);
+        assert_eq!(a.syncs, b.syncs);
+    }
+}

@@ -9,8 +9,9 @@
 //! * EASGD (related work [57]) vs ADPSGD at matched period — does the
 //!   elastic pull change the convergence/communication trade-off?
 
-use super::{run_strategy, Scale, Sink};
-use crate::config::ExperimentConfig;
+use super::{Scale, Sink};
+use crate::config::{ExperimentConfig, StrategySpec};
+use crate::experiment::Campaign;
 use crate::metrics::Table;
 use crate::period::Strategy;
 use anyhow::Result;
@@ -56,65 +57,104 @@ fn print_rows(sink: &Sink, title: &str, rows: &[AblationRow]) {
     sink.print(&t.render());
 }
 
-/// Run the full ablation suite on one base config.
+/// Build an Adaptive spec from `base` with one knob mutated.
+fn adaptive_with(
+    base: &ExperimentConfig,
+    f: impl FnOnce(&mut usize, &mut f64, &mut f64, &mut f64),
+) -> StrategySpec {
+    let mut spec = base.sync.spec_of(Strategy::Adaptive);
+    if let StrategySpec::Adaptive { p_init, ks_frac, low, high, .. } = &mut spec {
+        f(p_init, ks_frac, low, high);
+    }
+    spec
+}
+
+/// Run the full ablation suite on one base config: four campaign
+/// definitions (three Adaptive-knob sweeps expressed as strategy axes,
+/// plus the EASGD α sweep), executed as one union.
 pub fn ablation(base: &ExperimentConfig, scale: Scale, sink: &Sink) -> Result<Ablation> {
-    // ---- p_init sweep (paper: 2..5 equivalent, 8 degrades) ------------
     let p_inits: Vec<usize> = match scale {
         Scale::Quick => vec![2, 4, 8],
         Scale::Paper => vec![2, 3, 4, 5, 8],
     };
-    let mut p_init = Vec::new();
-    for p in p_inits {
-        let mut cfg = base.clone();
-        cfg.sync.p_init = p;
-        let r = run_strategy(&cfg, Strategy::Adaptive, &format!("abl_pinit{p}"))?;
-        p_init.push(row(format!("p_init={p}"), &r));
-    }
-    print_rows(sink, "Ablation — ADPSGD p_init sensitivity (§IV-B)", &p_init);
-
-    // ---- K_s sweep (paper: 500..1500 of 4000 equivalent) --------------
     let ks_fracs: Vec<f64> = match scale {
         Scale::Quick => vec![0.125, 0.25, 0.375],
         Scale::Paper => vec![0.125, 0.1875, 0.25, 0.3125, 0.375],
     };
-    let mut k_s = Vec::new();
-    for f in ks_fracs {
-        let mut cfg = base.clone();
-        cfg.sync.ks_frac = f;
-        let r = run_strategy(&cfg, Strategy::Adaptive, &format!("abl_ks{f}"))?;
-        k_s.push(row(format!("K_s={:.0}", f * base.iters as f64), &r));
-    }
-    print_rows(sink, "Ablation — ADPSGD K_s sensitivity (§IV-B)", &k_s);
-
-    // ---- threshold-band sweep ------------------------------------------
     let bands: Vec<(f64, f64)> = match scale {
         Scale::Quick => vec![(0.9, 1.1), (0.7, 1.3), (0.4, 1.6)],
         Scale::Paper => vec![(0.95, 1.05), (0.9, 1.1), (0.7, 1.3), (0.5, 1.5), (0.4, 1.6)],
     };
-    let mut band = Vec::new();
-    for (lo, hi) in bands {
-        let mut cfg = base.clone();
-        cfg.sync.low = lo;
-        cfg.sync.high = hi;
-        let r = run_strategy(&cfg, Strategy::Adaptive, &format!("abl_band{lo}_{hi}"))?;
-        band.push(row(format!("[{lo},{hi}]"), &r));
-    }
+    let alphas = [0.25, 0.5, 0.9];
+
+    // ---- p_init sweep (paper: 2..5 equivalent, 8 degrades) ------------
+    let p_init_camp = Campaign::builder("abl_pinit", base.clone())
+        .strategies(p_inits.iter().map(|&p| {
+            (format!("abl_pinit{p}"), adaptive_with(base, |pi, _, _, _| *pi = p))
+        }))
+        .build()?;
+
+    // ---- K_s sweep (paper: 500..1500 of 4000 equivalent) --------------
+    let ks_camp = Campaign::builder("abl_ks", base.clone())
+        .strategies(ks_fracs.iter().map(|&f| {
+            (format!("abl_ks{f}"), adaptive_with(base, |_, ks, _, _| *ks = f))
+        }))
+        .build()?;
+
+    // ---- threshold-band sweep ------------------------------------------
+    let band_camp = Campaign::builder("abl_band", base.clone())
+        .strategies(bands.iter().map(|&(lo, hi)| {
+            (
+                format!("abl_band{lo}_{hi}"),
+                adaptive_with(base, |_, _, l, h| {
+                    *l = lo;
+                    *h = hi;
+                }),
+            )
+        }))
+        .build()?;
+
+    // ---- EASGD comparison (+ the ADPSGD reference row) -----------------
+    let easgd_camp = Campaign::builder("abl_easgd", base.clone())
+        .strategies(alphas.iter().map(|&alpha| {
+            (format!("abl_easgd{alpha}"), StrategySpec::Easgd { period: 8, alpha })
+        }))
+        .strategy("abl_easgd_adpsgd", base.sync.spec_of(Strategy::Adaptive))
+        .build()?;
+
+    let report = Campaign::union(
+        "ablation",
+        [p_init_camp, ks_camp, band_camp, easgd_camp],
+    )?
+    .run()?;
+
+    let p_init: Vec<AblationRow> = p_inits
+        .iter()
+        .map(|&p| row(format!("p_init={p}"), report.get(&format!("abl_pinit{p}"))))
+        .collect();
+    print_rows(sink, "Ablation — ADPSGD p_init sensitivity (§IV-B)", &p_init);
+
+    let k_s: Vec<AblationRow> = ks_fracs
+        .iter()
+        .map(|&f| {
+            row(format!("K_s={:.0}", f * base.iters as f64), report.get(&format!("abl_ks{f}")))
+        })
+        .collect();
+    print_rows(sink, "Ablation — ADPSGD K_s sensitivity (§IV-B)", &k_s);
+
+    let band: Vec<AblationRow> = bands
+        .iter()
+        .map(|&(lo, hi)| {
+            row(format!("[{lo},{hi}]"), report.get(&format!("abl_band{lo}_{hi}")))
+        })
+        .collect();
     print_rows(sink, "Ablation — Algorithm 2 threshold band (design choice)", &band);
 
-    // ---- EASGD comparison ----------------------------------------------
-    let mut easgd = Vec::new();
-    for alpha in [0.25, 0.5, 0.9] {
-        let mut cfg = base.clone();
-        cfg.sync.period = 8;
-        cfg.sync.easgd_alpha = alpha;
-        cfg.sync.warmup_iters = 0;
-        let r = run_strategy(&cfg, Strategy::Easgd, &format!("abl_easgd{alpha}"))?;
-        easgd.push(row(format!("EASGD α={alpha}"), &r));
-    }
-    {
-        let r = run_strategy(base, Strategy::Adaptive, "abl_easgd_adpsgd")?;
-        easgd.push(row("ADPSGD".into(), &r));
-    }
+    let mut easgd: Vec<AblationRow> = alphas
+        .iter()
+        .map(|&a| row(format!("EASGD α={a}"), report.get(&format!("abl_easgd{a}"))))
+        .collect();
+    easgd.push(row("ADPSGD".into(), report.get("abl_easgd_adpsgd")));
     print_rows(sink, "Ablation — EASGD (related work [57]) vs ADPSGD", &easgd);
 
     Ok(Ablation { p_init, k_s, band, easgd })

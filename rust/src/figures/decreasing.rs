@@ -7,9 +7,10 @@
 //! order of magnitude worse and its accuracy lower.  This validates the
 //! paper's core claim that early synchronization matters most.
 
-use super::{run_strategy, Sink};
-use crate::config::ExperimentConfig;
+use super::Sink;
+use crate::config::{ExperimentConfig, StrategySpec};
 use crate::coordinator::RunReport;
+use crate::experiment::Campaign;
 use crate::metrics::Table;
 use crate::period::Strategy;
 use anyhow::Result;
@@ -22,20 +23,18 @@ pub struct DecreasingStudy {
     pub cpsgd8: RunReport,
 }
 
-/// Run the §V-B comparison on one base config.
+/// Run the §V-B comparison on one base config — a three-strategy
+/// campaign (the 20-then-5 strawman, CPSGD p=8, ADPSGD).
 pub fn decreasing_study(base: &ExperimentConfig, sink: &Sink) -> Result<DecreasingStudy> {
-    let mut dcfg = base.clone();
-    dcfg.sync.dec_first = 20;
-    dcfg.sync.dec_second = 5;
-    dcfg.sync.warmup_iters = 0;
-    let decreasing = run_strategy(&dcfg, Strategy::Decreasing, "decreasing")?;
-
-    let mut ccfg = base.clone();
-    ccfg.sync.period = 8;
-    ccfg.sync.warmup_iters = 0;
-    let cpsgd8 = run_strategy(&ccfg, Strategy::Constant, "cpsgd8")?;
-
-    let adpsgd = run_strategy(base, Strategy::Adaptive, "adpsgd")?;
+    let mut report = Campaign::builder("sec5b", base.clone())
+        .strategy("decreasing", StrategySpec::Decreasing { first: 20, second: 5 })
+        .strategy("cpsgd8", StrategySpec::Constant { period: 8 })
+        .strategy("adpsgd", base.sync.spec_of(Strategy::Adaptive))
+        .build()?
+        .run()?;
+    let decreasing = report.take("decreasing");
+    let cpsgd8 = report.take("cpsgd8");
+    let adpsgd = report.take("adpsgd");
 
     for r in [&decreasing, &cpsgd8, &adpsgd] {
         sink.write(&format!("sec5b_{}", r.name), &r.recorder)?;

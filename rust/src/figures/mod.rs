@@ -6,6 +6,13 @@
 //! harnesses (timed quick-scale runs), and the integration tests (shape
 //! assertions on quick-scale outputs).  Each returns a structured result
 //! *and* can render the rows/series the paper reports.
+//!
+//! Every multi-run sweep in this tree is a declarative
+//! [`crate::experiment::Campaign`] definition — the figure modules
+//! describe their run families (strategy axes, period sweeps, lr
+//! sweeps) and post-process the ordered
+//! [`crate::experiment::CampaignReport`] rows; none
+//! of them hand-rolls a train-loop-per-sweep-point anymore.
 
 pub mod ablation;
 pub mod convergence;
@@ -14,8 +21,9 @@ pub mod speedup;
 pub mod table1;
 pub mod variance;
 
-use crate::config::ExperimentConfig;
-use crate::coordinator::{RunReport, Trainer};
+use crate::config::{ExperimentConfig, StrategySpec};
+use crate::coordinator::RunReport;
+use crate::experiment::{Campaign, Experiment};
 use crate::period::Strategy;
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
@@ -152,27 +160,32 @@ pub fn vgg_role(cfg: &mut ExperimentConfig, scale: Scale) {
     }
 }
 
-/// Run one strategy variant of a base config.
+/// Run one strategy variant of a base config (single run, through the
+/// session API).
 pub fn run_strategy(base: &ExperimentConfig, strategy: Strategy, name: &str) -> Result<RunReport> {
     let mut cfg = base.clone();
     cfg.sync.strategy = strategy;
     cfg.name = name.to_string();
-    Trainer::new(cfg)?.run()
+    Experiment::from_config(cfg)?.run()
 }
 
-/// Run the paper's four comparison strategies (FULLSGD, CPSGD p=8,
-/// ADPSGD, QSGD) on one base config.
+/// The paper's four comparison strategies (FULLSGD, CPSGD, ADPSGD,
+/// QSGD) as a campaign over one base config, with the specs projected
+/// from the base's knobs.
+pub fn quartet_campaign(base: &ExperimentConfig) -> Result<Campaign> {
+    let s = &base.sync;
+    Campaign::builder("quartet", base.clone())
+        .strategy("fullsgd", StrategySpec::Full)
+        .strategy("cpsgd", s.spec_of(Strategy::Constant))
+        .strategy("adpsgd", s.spec_of(Strategy::Adaptive))
+        .strategy("qsgd", s.spec_of(Strategy::Qsgd))
+        .build()
+}
+
+/// Run the quartet; reports in the paper's order (FULLSGD, CPSGD,
+/// ADPSGD, QSGD).
 pub fn run_quartet(base: &ExperimentConfig) -> Result<Vec<RunReport>> {
-    let mut out = Vec::new();
-    for (s, n) in [
-        (Strategy::Full, "fullsgd"),
-        (Strategy::Constant, "cpsgd"),
-        (Strategy::Adaptive, "adpsgd"),
-        (Strategy::Qsgd, "qsgd"),
-    ] {
-        out.push(run_strategy(base, s, n)?);
-    }
-    Ok(out)
+    Ok(quartet_campaign(base)?.run()?.reports())
 }
 
 #[cfg(test)]

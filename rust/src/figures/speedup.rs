@@ -10,9 +10,9 @@
 //! actual ledger (ADPSGD's sync count is a training outcome, so we run
 //! the real coordinator at every n to obtain it).
 
-use super::{run_strategy, Scale, Sink};
-use crate::config::{ExperimentConfig, NetConfig};
-use crate::coordinator::Trainer;
+use super::{Scale, Sink};
+use crate::config::{ExperimentConfig, NetConfig, StrategySpec};
+use crate::experiment::{Campaign, Experiment};
 use crate::metrics::Table;
 use crate::netsim::NetModel;
 use crate::period::Strategy;
@@ -49,12 +49,14 @@ pub fn calibrate_step_secs(base: &ExperimentConfig, calib_iters: usize) -> Resul
     cfg.sync.strategy = Strategy::Constant;
     cfg.sync.period = usize::MAX / 2; // never sync; pure compute
     cfg.name = "calibrate".into();
-    let rep = Trainer::new(cfg)?.run()?;
+    let rep = Experiment::from_config(cfg)?.run()?;
     Ok(rep.compute_secs / calib_iters as f64)
 }
 
 /// Fig 6 for one model role. `base` must be a single-node-geometry
-/// config whose `iters` is the single-node iteration count K.
+/// config whose `iters` is the single-node iteration count K.  The
+/// (strategy × nodes) grid is one campaign; fixed-work scaling
+/// (`iters = K/n`) is its post-patch.
 pub fn fig6(role_name: &'static str, base: &ExperimentConfig, scale: Scale, sink: &Sink) -> Result<Fig6> {
     let calib = match scale {
         Scale::Quick => 50,
@@ -67,29 +69,34 @@ pub fn fig6(role_name: &'static str, base: &ExperimentConfig, scale: Scale, sink
     let fast = NetModel::new(&NetConfig::infiniband_100g());
     let slow = NetModel::new(&NetConfig::ethernet_10g());
 
-    let mut cells = Vec::new();
-    for &n in &[2usize, 4, 8, 16] {
-        for strategy in [Strategy::Full, Strategy::Adaptive] {
-            let mut cfg = base.clone();
-            cfg.nodes = n;
-            cfg.iters = (k1 / n).max(1);
+    let report = Campaign::builder("fig6", base.clone())
+        .strategy("fig6_full", StrategySpec::Full)
+        .strategy("fig6_adpsgd", base.sync.spec_of(Strategy::Adaptive))
+        .nodes(&[2, 4, 8, 16])
+        .post(move |cfg| {
+            cfg.iters = (k1 / cfg.nodes).max(1);
             cfg.eval_every = 0;
             cfg.variance_every = 0;
-            let rep = run_strategy(&cfg, strategy, &format!("fig6_{strategy}_{n}"))?;
-            let compute = per_step * cfg.iters as f64;
-            let t100 = compute + rep.ledger.modeled_secs(&fast);
-            let t10 = compute + rep.ledger.modeled_secs(&slow);
-            cells.push(SpeedupCell {
-                strategy,
-                nodes: n,
-                iters: cfg.iters,
-                syncs: rep.syncs,
-                total_100g: t100,
-                total_10g: t10,
-                speedup_100g: single_node_secs / t100,
-                speedup_10g: single_node_secs / t10,
-            });
-        }
+        })
+        .build()?
+        .run()?;
+
+    let mut cells = Vec::new();
+    for run in &report.runs {
+        let rep = &run.report;
+        let compute = per_step * rep.iters as f64;
+        let t100 = compute + rep.ledger.modeled_secs(&fast);
+        let t10 = compute + rep.ledger.modeled_secs(&slow);
+        cells.push(SpeedupCell {
+            strategy: rep.strategy,
+            nodes: rep.nodes,
+            iters: rep.iters,
+            syncs: rep.syncs,
+            total_100g: t100,
+            total_10g: t10,
+            speedup_100g: single_node_secs / t100,
+            speedup_10g: single_node_secs / t10,
+        });
     }
 
     let mut t = Table::new(&["version", "nodes", "iters", "syncs", "speedup@100G", "speedup@10G"]);

@@ -5,9 +5,9 @@
 //! point below ADPSGD (while needing more communication), FULLSGD unable
 //! to close the large-batch generalization gap by raising γ₀.
 
-use super::{run_strategy, Scale, Sink};
-use crate::config::ExperimentConfig;
-use crate::coordinator::Trainer;
+use super::{Scale, Sink};
+use crate::config::{ExperimentConfig, StrategySpec};
+use crate::experiment::Campaign;
 use crate::metrics::Table;
 use crate::period::Strategy;
 use anyhow::Result;
@@ -48,25 +48,61 @@ fn fullsgd_lrs(scale: Scale) -> Vec<f32> {
     }
 }
 
-/// Regenerate Table I for one base workload config.
+/// Regenerate Table I for one base workload config.  The four run
+/// families are four campaign definitions executed as one union:
+/// (a) SMALL_BATCH — a single-run variant patch (1 node, nodes× iters);
+/// (b) ADPSGD at the paper's defaults; (c) a CPSGD period sweep as a
+/// strategy axis of `Constant` specs; (d) a FULLSGD γ₀ sweep as a
+/// variant axis.
 pub fn table1(base: &ExperimentConfig, scale: Scale, sink: &Sink) -> Result<Table1> {
+    let periods = cpsgd_periods(scale);
+    let lrs = fullsgd_lrs(scale);
+    let n = base.nodes;
+
+    let small_batch = Campaign::builder("table1_small", base.clone())
+        .strategy("small_batch", StrategySpec::Full)
+        .post(move |cfg| {
+            // vanilla single-node SGD, same number of epochs ⇒ nodes×
+            // more iterations at 1/nodes the batch, LR boundaries at the
+            // same epoch fractions
+            cfg.nodes = 1;
+            cfg.iters *= n;
+            if let crate::config::LrSchedule::StepDecay { boundaries, .. } =
+                &mut cfg.optim.schedule
+            {
+                boundaries.iter_mut().for_each(|b| *b *= n);
+            }
+            cfg.eval_every = cfg.iters / 20;
+        })
+        .build()?;
+
+    let adpsgd = Campaign::builder("table1_adp", base.clone())
+        .strategy("table1_adpsgd", base.sync.spec_of(Strategy::Adaptive))
+        .build()?;
+
+    let cpsgd_sweep = Campaign::builder("table1_cpsgd", base.clone())
+        .strategies(
+            periods
+                .iter()
+                .map(|&p| (format!("table1_cpsgd_p{p}"), StrategySpec::Constant { period: p })),
+        )
+        .build()?;
+
+    let mut full_sweep = Campaign::builder("table1_full", base.clone())
+        .strategy("table1_full", StrategySpec::Full);
+    for &lr0 in &lrs {
+        full_sweep = full_sweep.variant(format!("lr{lr0}"), move |cfg| cfg.optim.lr0 = lr0);
+    }
+    let full_sweep = full_sweep.build()?;
+
+    let report =
+        Campaign::union("table1", [small_batch, adpsgd, cpsgd_sweep, full_sweep])?.run()?;
+
     let mut rows = Vec::new();
 
-    // (a) SMALL_BATCH: vanilla single-node SGD, same number of epochs ⇒
-    //     nodes× more iterations at 1/nodes the batch.
+    // (a) SMALL_BATCH
     {
-        let mut cfg = base.clone();
-        let n = cfg.nodes;
-        cfg.nodes = 1;
-        cfg.iters = base.iters * n;
-        // keep the LR boundaries at the same epoch fractions
-        if let crate::config::LrSchedule::StepDecay { boundaries, .. } = &mut cfg.optim.schedule {
-            boundaries.iter_mut().for_each(|b| *b *= n);
-        }
-        cfg.eval_every = cfg.iters / 20;
-        cfg.sync.strategy = Strategy::Full;
-        cfg.name = "small_batch".into();
-        let rep = Trainer::new(cfg)?.run()?;
+        let rep = report.get("small_batch");
         rows.push(Table1Row {
             version: "SMALL_BATCH".into(),
             best_acc: rep.best_eval_acc,
@@ -77,7 +113,7 @@ pub fn table1(base: &ExperimentConfig, scale: Scale, sink: &Sink) -> Result<Tabl
 
     // (b) ADPSGD at the paper's default knobs.
     {
-        let rep = run_strategy(base, Strategy::Adaptive, "table1_adpsgd")?;
+        let rep = report.get("table1_adpsgd");
         rows.push(Table1Row {
             version: "ADPSGD".into(),
             best_acc: rep.best_eval_acc,
@@ -86,44 +122,32 @@ pub fn table1(base: &ExperimentConfig, scale: Scale, sink: &Sink) -> Result<Tabl
         });
     }
 
-    // (c) CPSGD: sweep p, report the best.
+    // (c) CPSGD: best point of the period sweep.
     {
-        let mut best: Option<(usize, f64, u64)> = None;
-        for p in cpsgd_periods(scale) {
-            let mut cfg = base.clone();
-            cfg.sync.period = p;
-            cfg.sync.warmup_iters = 0;
-            let rep = run_strategy(&cfg, Strategy::Constant, &format!("table1_cpsgd_p{p}"))?;
-            if best.map(|(_, acc, _)| rep.best_eval_acc > acc).unwrap_or(true) {
-                best = Some((p, rep.best_eval_acc, rep.syncs));
-            }
-        }
-        let (p, acc, syncs) = best.unwrap();
+        let (p, rep) = periods
+            .iter()
+            .map(|&p| (p, report.get(&format!("table1_cpsgd_p{p}"))))
+            .max_by(|a, b| a.1.best_eval_acc.total_cmp(&b.1.best_eval_acc))
+            .expect("cpsgd sweep is non-empty");
         rows.push(Table1Row {
             version: "CPSGD".into(),
-            best_acc: acc,
+            best_acc: rep.best_eval_acc,
             argmax: format!("p={p}"),
-            syncs,
+            syncs: rep.syncs,
         });
     }
 
-    // (d) FULLSGD: sweep γ₀ (linear-scaling attempts), report the best.
+    // (d) FULLSGD: best point of the γ₀ sweep.
     {
-        let mut best: Option<(f32, f64)> = None;
-        for lr0 in fullsgd_lrs(scale) {
-            let mut cfg = base.clone();
-            cfg.optim.lr0 = lr0;
-            let rep = run_strategy(&cfg, Strategy::Full, &format!("table1_full_lr{lr0}"))?;
-            if rep.best_eval_acc.is_finite()
-                && best.map(|(_, acc)| rep.best_eval_acc > acc).unwrap_or(true)
-            {
-                best = Some((lr0, rep.best_eval_acc));
-            }
-        }
-        let (lr0, acc) = best.unwrap();
+        let (lr0, rep) = lrs
+            .iter()
+            .map(|&lr0| (lr0, report.get(&format!("table1_full_lr{lr0}"))))
+            .filter(|(_, r)| r.best_eval_acc.is_finite())
+            .max_by(|a, b| a.1.best_eval_acc.total_cmp(&b.1.best_eval_acc))
+            .expect("fullsgd sweep has a finite point");
         rows.push(Table1Row {
             version: "FULLSGD".into(),
-            best_acc: acc,
+            best_acc: rep.best_eval_acc,
             argmax: format!("γ₀={lr0}"),
             syncs: base.iters as u64,
         });

@@ -8,9 +8,10 @@
 //! * **Fig 3** — ADPSGD's averaging-period trajectory: fixed at p_init
 //!   while sampling C₂, then growing, jumping up after each LR decay.
 
-use super::{cifar_base, googlenet_role, run_strategy, Scale, Sink};
-use crate::config::ExperimentConfig;
+use super::{cifar_base, googlenet_role, Scale, Sink};
+use crate::config::{ExperimentConfig, StrategySpec};
 use crate::coordinator::RunReport;
+use crate::experiment::Campaign;
 use crate::metrics::{Series, Table};
 use crate::period::Strategy;
 use anyhow::Result;
@@ -64,15 +65,21 @@ pub struct Fig1 {
     pub iters: usize,
 }
 
-/// Fig 1: CPSGD variance for p ∈ {2,4,5,8}.
+/// Fig 1: CPSGD variance for p ∈ {2,4,5,8} — a period sweep expressed
+/// as a strategy axis of four `Constant` specs.
 pub fn fig1(scale: Scale, sink: &Sink) -> Result<Fig1> {
     let base = variance_base(scale);
+    const PERIODS: [usize; 4] = [2, 4, 5, 8];
+    let campaign = Campaign::builder("fig1", base.clone())
+        .strategies(
+            PERIODS
+                .iter()
+                .map(|&p| (format!("fig1_p{p}"), StrategySpec::Constant { period: p })),
+        )
+        .build()?;
     let mut rows = Vec::new();
-    for p in [2usize, 4, 5, 8] {
-        let mut cfg = base.clone();
-        cfg.sync.period = p;
-        cfg.sync.warmup_iters = 0; // Fig 1 is plain Algorithm 1
-        let report = run_strategy(&cfg, Strategy::Constant, &format!("fig1_p{p}"))?;
+    for (run, &p) in campaign.run()?.runs.into_iter().zip(PERIODS.iter()) {
+        let report = run.report;
         let v_t = vt_series(&report);
         sink.write(&format!("fig1_p{p}"), &report.recorder)?;
         rows.push(Fig1Row { p, report, v_t });
@@ -105,17 +112,18 @@ pub struct Fig23 {
     pub iters: usize,
 }
 
-/// Fig 2 + Fig 3: ADPSGD variance + period trajectory vs CPSGD p=8.
+/// Fig 2 + Fig 3: ADPSGD variance + period trajectory vs CPSGD p=8 —
+/// one two-strategy campaign (ADPSGD keeps the warmup epoch + p_init=4
+/// + K_s=0.25K from `cifar_base`).
 pub fn fig2_fig3(scale: Scale, sink: &Sink) -> Result<Fig23> {
     let base = variance_base(scale);
-
-    let mut ccfg = base.clone();
-    ccfg.sync.period = 8;
-    ccfg.sync.warmup_iters = 0;
-    let cpsgd8 = run_strategy(&ccfg, Strategy::Constant, "fig2_cpsgd8")?;
-
-    let acfg = base.clone(); // warmup epoch + p_init=4 + K_s=0.25K from cifar_base
-    let adpsgd = run_strategy(&acfg, Strategy::Adaptive, "fig2_adpsgd")?;
+    let mut report = Campaign::builder("fig2", base.clone())
+        .strategy("fig2_cpsgd8", StrategySpec::Constant { period: 8 })
+        .strategy("fig2_adpsgd", base.sync.spec_of(Strategy::Adaptive))
+        .build()?
+        .run()?;
+    let cpsgd8 = report.take("fig2_cpsgd8");
+    let adpsgd = report.take("fig2_adpsgd");
 
     let adpsgd_vt = vt_series(&adpsgd);
     let cpsgd_vt = vt_series(&cpsgd8);

@@ -52,19 +52,64 @@
 //! executes them from the training hot path; python never runs at train
 //! time.
 //!
-//! ## Quick start
+//! ## Quick start — one experiment
+//!
+//! Experiments are described by a typed [`config::StrategySpec`] (each
+//! strategy carries exactly its own knobs) and run through the session
+//! API:
 //!
 //! ```no_run
-//! use adpsgd::config::ExperimentConfig;
-//! use adpsgd::coordinator::Trainer;
+//! use adpsgd::config::StrategySpec;
+//! use adpsgd::experiment::Experiment;
 //!
-//! let mut cfg = ExperimentConfig::default();
-//! cfg.nodes = 8;
-//! cfg.iters = 2_000;
-//! cfg.sync.strategy = adpsgd::period::Strategy::Adaptive;
-//! let report = Trainer::new(cfg).unwrap().run().unwrap();
+//! let report = Experiment::builder()
+//!     .name("quickstart")
+//!     .nodes(8)
+//!     .iters(2_000)
+//!     .strategy(StrategySpec::Adaptive {
+//!         p_init: 4, warmup_iters: 25, ks_frac: 0.25, low: 0.7, high: 1.3,
+//!     })
+//!     .build()
+//!     .unwrap()
+//!     .run()
+//!     .unwrap();
 //! println!("final loss {:.4}", report.final_train_loss);
 //! ```
+//!
+//! Observers ([`experiment::RunObserver`]) tap the coordinator's typed
+//! event stream (`IterEnd`, `SyncDone`, `CheckpointDue`, …) — the
+//! built-in metrics recorder and checkpoint writer are themselves
+//! observers.  Custom period controllers plug in through
+//! [`period::registry`] or per-session via
+//! `ExperimentBuilder::period_controller`.
+//!
+//! ## Quick start — a campaign
+//!
+//! Multi-run sweeps are declarative [`experiment::Campaign`]s (strategy
+//! × nodes × network × collective), with bounded-parallel scheduling
+//! and shared dataset caching:
+//!
+//! ```no_run
+//! use adpsgd::collective::Algo;
+//! use adpsgd::config::{ExperimentConfig, StrategySpec};
+//! use adpsgd::experiment::Campaign;
+//! use adpsgd::period::Strategy;
+//!
+//! let base = ExperimentConfig::default();
+//! let report = Campaign::builder("demo", base.clone())
+//!     .strategy("fullsgd", StrategySpec::Full)
+//!     .strategy("adpsgd", base.sync.spec_of(Strategy::Adaptive))
+//!     .collectives(&[Algo::Ring, Algo::Flat])
+//!     .parallelism(2)
+//!     .build()
+//!     .unwrap()
+//!     .run()
+//!     .unwrap();
+//! println!("{}", report.table().render());
+//! ```
+//!
+//! The deprecated `Trainer::new(cfg)?.run()` front-door remains as a
+//! thin shim over the session API.
 
 pub mod analysis;
 pub mod checkpoint;
@@ -73,6 +118,7 @@ pub mod collective;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod experiment;
 pub mod figures;
 pub mod metrics;
 pub mod netsim;
@@ -85,6 +131,7 @@ pub mod tensor;
 pub mod util;
 pub mod workload;
 
-pub use config::ExperimentConfig;
+pub use config::{ExperimentConfig, StrategySpec};
 pub use coordinator::{RunReport, Trainer};
+pub use experiment::{Campaign, Experiment};
 pub use period::Strategy;

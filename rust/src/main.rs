@@ -2,41 +2,69 @@
 //!
 //! ```text
 //! adpsgd run      [--config exp.toml] [--sync.strategy=adpsgd] [--nodes 16] ...
+//! adpsgd campaign [--strategies full,cpsgd,adpsgd,qsgd] [--collectives ring,flat] ...
 //! adpsgd figures  [--only fig1,fig4,...] [--quick] [--out results]
 //! adpsgd models   [--artifacts artifacts]
 //! adpsgd help
 //! ```
 //!
 //! `run` executes one experiment described by a TOML config plus dotted
-//! CLI overrides; `figures` regenerates every paper table/figure (see
-//! DESIGN.md §4); `models` lists the AOT artifacts the PJRT runtime can
-//! load.
+//! CLI overrides (through the session API); `campaign` executes a
+//! declarative strategy × nodes × bandwidth × collective sweep and
+//! writes a JSON summary; `figures` regenerates every paper
+//! table/figure (see DESIGN.md §4); `models` lists the AOT artifacts
+//! the PJRT runtime can load.
 
 use adpsgd::cli::Args;
-use adpsgd::config::ExperimentConfig;
-use adpsgd::coordinator::Trainer;
+use adpsgd::collective::Algo;
+use adpsgd::config::{ExperimentConfig, NetConfig, StrategySpec};
+use adpsgd::experiment::{Campaign, Experiment};
 use adpsgd::figures::{self, Scale, Sink};
+use adpsgd::period::Strategy;
 use anyhow::{bail, Context, Result};
 
 const HELP: &str = "\
 adpsgd — Adaptive Periodic Parameter Averaging SGD (Jiang & Agrawal 2020)
 
 USAGE:
-    adpsgd run     [--config FILE] [--out DIR] [--json [--series]]
-                   [--key.subkey=value ...]
-    adpsgd figures [--only LIST] [--quick] [--out DIR]
-    adpsgd models  [--artifacts DIR]
+    adpsgd run      [--config FILE] [--out DIR] [--json [--series]]
+                    [--key.subkey=value ...]
+    adpsgd campaign [--config FILE] [--name NAME] [--strategies LIST]
+                    [--sweep-nodes LIST] [--bandwidths LIST] [--collectives LIST]
+                    [--parallel N] [--quick] [--json] [--out DIR]
+    adpsgd figures  [--only LIST] [--quick] [--out DIR]
+    adpsgd models   [--artifacts DIR]
     adpsgd help
 
 RUN OVERRIDES (dotted keys mirror the TOML schema):
     --nodes 16 --iters 4000 --batch_per_node 128 --seed 42
     --sync.strategy {full|cpsgd|adpsgd|decreasing|qsgd|piecewise|easgd|topk}
-    --sync.period 8 --sync.p_init 4 --sync.ks_frac 0.25
+    --sync.<strategy>.<knob>        typed per-strategy knobs, e.g.:
+        --sync.adaptive.p_init 4 --sync.adaptive.ks_frac 0.25
+        --sync.constant.period 8
+        --sync.qsgd.levels 255 --sync.qsgd.bucket 512
+        --sync.easgd.period 8 --sync.easgd.alpha 0.5
     --sync.collective {ring|flat}   (allreduce algorithm: chunked-parallel
                                      ring, or the leader-serialized flat)
     --workload.backend {native|hlo} --workload.model mlp_small
     --optim.lr0 0.1 --optim.schedule {const|step|warmup}
     --net.bandwidth_gbps 100 --net.latency_us 2
+    Legacy flat keys (--sync.p_init, --sync.qsgd_levels, ...) still load
+    (deprecated).  A knob that does not belong to the chosen strategy is
+    rejected with the valid key list.
+
+CAMPAIGN (cartesian sweep; every run is a full coordinator cluster):
+    --strategies  full,cpsgd,adpsgd,qsgd   (default)  strategy axis
+    --collectives ring,flat                (default)  collective axis
+    --sweep-nodes 4,8,16                   optional   cluster-size axis
+    --bandwidths  100,10                   optional   Gbps axis (100 and 10
+                                           use the paper's latency presets)
+    --parallel 2                           concurrent runs (default 2)
+    --quick                                small base geometry (no --config)
+    --out DIR                              writes <name>.campaign.json there
+    Dotted overrides patch the base config like `run`; strategy knobs
+    are accepted for ANY swept strategy, e.g.
+    `--strategies adpsgd,qsgd --sync.qsgd.levels 15`.
 
 FIGURES:
     --only fig1,fig2,fig4,fig5,fig6,fig7,fig8,table1,sec5b,ablation  (default: all)
@@ -55,6 +83,7 @@ fn real_main() -> Result<()> {
     let args = Args::parse_env(&["quick", "quiet", "json", "series"])?;
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
+        Some("campaign") => cmd_campaign(&args),
         Some("figures") => cmd_figures(&args),
         Some("models") => cmd_models(&args),
         Some("help") | None => {
@@ -65,34 +94,48 @@ fn real_main() -> Result<()> {
     }
 }
 
-fn build_config(args: &Args) -> Result<ExperimentConfig> {
+/// Top-level config keys accepted without a dot by `run`/`campaign`.
+const SHORTCUT_KEYS: [&str; 7] =
+    ["name", "seed", "nodes", "iters", "batch_per_node", "eval_every", "variance_every"];
+
+/// Collect dotted overrides plus the common top-level keys.
+fn cli_overrides(args: &Args) -> Vec<(String, String)> {
     let mut overrides = args.config_overrides();
-    // allow the common top-level keys without a dot, too
-    for k in ["name", "seed", "nodes", "iters", "batch_per_node", "eval_every", "variance_every"] {
+    for k in SHORTCUT_KEYS {
         if let Some(v) = args.get(k) {
             overrides.push((k.to_string(), v.to_string()));
         }
     }
+    overrides
+}
+
+/// Reject misspelled dotless options (`--bandwidth` for `--bandwidths`)
+/// instead of silently ignoring them — dotted keys are validated
+/// separately against the config schema.
+fn reject_unknown_options(args: &Args, extra: &[&str]) -> Result<()> {
+    for key in args.options.keys() {
+        if key.contains('.') {
+            continue;
+        }
+        if !extra.contains(&key.as_str()) && !SHORTCUT_KEYS.contains(&key.as_str()) {
+            let mut valid: Vec<&str> = extra.to_vec();
+            valid.extend(SHORTCUT_KEYS);
+            bail!("unknown option --{key} (valid options: --{})", valid.join(", --"));
+        }
+    }
+    Ok(())
+}
+
+fn build_config(args: &Args) -> Result<ExperimentConfig> {
+    let overrides = cli_overrides(args);
     match args.get("config") {
         Some(path) => ExperimentConfig::from_file(path, &overrides),
-        None => {
-            // synthesize a TOML document from the overrides alone
-            let text = String::new();
-            let mut doc = adpsgd::config::toml::TomlDoc::parse(&text)
-                .map_err(|e| anyhow::anyhow!("internal: {e}"))?;
-            for (k, v) in &overrides {
-                let val = adpsgd::config::toml::TomlDoc::parse(&format!("x = {v}"))
-                    .ok()
-                    .and_then(|d| d.get("x").cloned())
-                    .unwrap_or(adpsgd::config::toml::TomlValue::Str(v.clone()));
-                doc.entries.insert(k.clone(), val);
-            }
-            ExperimentConfig::from_doc(&doc)
-        }
+        None => ExperimentConfig::from_overrides(&overrides),
     }
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
+    reject_unknown_options(args, &["config", "out"])?;
     let cfg = build_config(args)?;
     let json_out = args.flag("json");
     if !json_out {
@@ -101,7 +144,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             cfg.name, cfg.nodes, cfg.iters, cfg.sync.strategy, cfg.workload.backend
         );
     }
-    let report = Trainer::new(cfg)?.run().context("training run failed")?;
+    let report = Experiment::from_config(cfg)?.run().context("training run failed")?;
     if json_out {
         println!("{}", report.to_json(args.flag("series")).to_string_compact());
     } else {
@@ -117,7 +160,145 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// A small base geometry for `campaign --quick` (no --config): the
+/// quartet finishes in seconds.
+fn quick_campaign_base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "campaign_quick".into();
+    cfg.nodes = 4;
+    cfg.iters = 160;
+    cfg.batch_per_node = 16;
+    cfg.eval_every = 40;
+    cfg.workload.input_dim = 48;
+    cfg.workload.hidden = 24;
+    cfg.workload.eval_batches = 4;
+    cfg.optim.schedule =
+        adpsgd::config::LrSchedule::StepDecay { boundaries: vec![80, 120], factor: 0.1 };
+    cfg.sync.warmup_iters = 4;
+    cfg.sync.p_init = 2;
+    cfg
+}
+
+fn csv_list(args: &Args, key: &str) -> Option<Vec<String>> {
+    args.get(key).map(|s| {
+        s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect()
+    })
+}
+
+fn cmd_campaign(args: &Args) -> Result<()> {
+    reject_unknown_options(
+        args,
+        &["config", "out", "strategies", "sweep-nodes", "bandwidths", "collectives", "parallel"],
+    )?;
+    let overrides = cli_overrides(args);
+    let strategy_names = csv_list(args, "strategies")
+        .unwrap_or_else(|| vec!["full".into(), "cpsgd".into(), "adpsgd".into(), "qsgd".into()]);
+    let mut kinds: Vec<Strategy> = Vec::new();
+    for s in &strategy_names {
+        kinds.push(s.parse()?);
+    }
+
+    // load the base leniently, then validate strategy-knob overrides
+    // against the whole *swept* set — `--sync.qsgd.levels 15` is valid
+    // whenever qsgd is being swept, regardless of the base's strategy
+    let base = match args.get("config") {
+        Some(path) => ExperimentConfig::from_file_lenient(path, &overrides)?,
+        None => {
+            let mut b =
+                if args.flag("quick") { quick_campaign_base() } else { ExperimentConfig::default() };
+            b.apply_overrides_lenient(&overrides)?;
+            b
+        }
+    };
+    let mut checked = kinds.clone();
+    if !checked.contains(&base.sync.strategy) {
+        checked.push(base.sync.strategy);
+    }
+    ExperimentConfig::check_override_keys(&checked, &overrides)?;
+
+    let name = args.get_or("name", "campaign").to_string();
+    let mut builder = Campaign::builder(name.clone(), base.clone());
+    let specs: Vec<(String, StrategySpec)> = strategy_names
+        .iter()
+        .zip(&kinds)
+        .map(|(s, kind)| (s.clone(), base.sync.spec_of(*kind)))
+        .collect();
+    builder = builder.strategies(specs);
+
+    if let Some(nodes) = csv_list(args, "sweep-nodes") {
+        let ns: Vec<usize> = nodes
+            .iter()
+            .map(|n| n.parse().with_context(|| format!("--sweep-nodes entry {n:?}")))
+            .collect::<Result<_>>()?;
+        builder = builder.nodes(&ns);
+    }
+
+    if let Some(bands) = csv_list(args, "bandwidths") {
+        for b in &bands {
+            let gbps: f64 = b.parse().with_context(|| format!("--bandwidths entry {b:?}"))?;
+            // the paper's presets carry their own latencies; other rates
+            // keep the base latency
+            let net = if (gbps - 100.0).abs() < 1e-9 {
+                NetConfig::infiniband_100g()
+            } else if (gbps - 10.0).abs() < 1e-9 {
+                NetConfig::ethernet_10g()
+            } else {
+                NetConfig { bandwidth_gbps: gbps, latency_us: base.net.latency_us }
+            };
+            // label with the exact rate (Display round-trips f64, so
+            // distinct rates always get distinct labels; the builder
+            // additionally rejects duplicate labels)
+            builder = builder.net(format!("{gbps}g"), net);
+        }
+    }
+
+    let collective_names =
+        csv_list(args, "collectives").unwrap_or_else(|| vec!["ring".into(), "flat".into()]);
+    let algos: Vec<Algo> =
+        collective_names.iter().map(|c| c.parse()).collect::<Result<_>>()?;
+    builder = builder.collectives(&algos);
+
+    let parallel = args.get_usize("parallel", 2)?;
+    let campaign = builder.parallelism(parallel).build()?;
+
+    let json_out = args.flag("json");
+    if !json_out {
+        println!(
+            "campaign {name}: {} runs ({} strategies × axes), {} concurrent",
+            campaign.len(),
+            strategy_names.len(),
+            parallel
+        );
+    }
+    let report = campaign.run().context("campaign failed")?;
+
+    if json_out {
+        println!("{}", report.to_json().to_string_compact());
+    } else {
+        println!("{}", report.table().render());
+        println!(
+            "campaign {name}: {} runs in {} ({:.2} runs/sec), total modeled comm {}",
+            report.runs.len(),
+            adpsgd::util::fmt::secs(report.wall_secs),
+            report.runs_per_sec(),
+            adpsgd::util::fmt::secs(report.total_modeled_comm_secs()),
+        );
+    }
+
+    let out_dir = std::path::PathBuf::from(args.get_or("out", "results"));
+    std::fs::create_dir_all(&out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    let path = out_dir.join(format!("{name}.campaign.json"));
+    std::fs::write(&path, report.to_json().to_string_compact())
+        .with_context(|| format!("writing {}", path.display()))?;
+    if !json_out {
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
 fn cmd_figures(args: &Args) -> Result<()> {
+    reject_unknown_options(args, &["only", "out"])?;
     let scale = Scale::from_flag(args.flag("quick"));
     let sink = Sink::new(args.get("out"), args.flag("quiet"));
     let only: Vec<String> = args
@@ -170,6 +351,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
 }
 
 fn cmd_models(args: &Args) -> Result<()> {
+    reject_unknown_options(args, &["artifacts"])?;
     let dir = args.get_or("artifacts", "artifacts");
     let man = adpsgd::runtime::Manifest::load(dir)?;
     println!("{:<12} {:>10} {:>8} {:>6} kind", "model", "params", "batch", "files");

@@ -10,6 +10,8 @@
 //! * `Full` synchronization and QSGD are *modes* of the coordinator,
 //!   not period controllers (they exchange gradients every iteration).
 
+pub mod registry;
+
 use anyhow::bail;
 
 /// Config-level strategy selector.
@@ -75,8 +77,15 @@ impl std::fmt::Display for Strategy {
 
 /// Decides, after each local update `k`, whether to synchronize now, and
 /// adapts from the post-sync feedback `(S_k, γ_k)`.
+///
+/// `k` is the **global** iteration index: when a run warm-starts from a
+/// checkpoint (`init_from`), the coordinator passes
+/// `resumed_iter + local_k`, so a controller's k-dependent state (the
+/// ADPSGD warmup window, C₂ sampling horizon, schedule switch points)
+/// continues where the checkpointed run left off instead of restarting
+/// at iteration 0.
 pub trait PeriodController: Send {
-    /// Called after the local update of iteration `k` (0-based).
+    /// Called after the local update of iteration `k` (0-based, global).
     fn should_sync(&mut self, k: usize) -> bool;
 
     /// Feedback after a synchronization at iteration `k`: the measured
@@ -349,32 +358,13 @@ impl PeriodController for Piecewise {
     }
 }
 
-/// Build the controller for a config (Full/Qsgd have no controller).
-pub fn build(
-    cfg: &crate::config::ExperimentConfig,
-) -> Option<Box<dyn PeriodController>> {
-    let s = &cfg.sync;
-    match s.strategy {
-        Strategy::Constant => Some(Box::new(Constant::new(s.period))),
-        Strategy::Adaptive => Some(Box::new(Adaptive::new(
-            s.p_init,
-            s.warmup_iters,
-            (s.ks_frac * cfg.iters as f64) as usize,
-            s.low,
-            s.high,
-        ))),
-        Strategy::Decreasing => {
-            Some(Box::new(Decreasing::new(s.dec_first, s.dec_second, cfg.iters / 2)))
-        }
-        Strategy::Piecewise => Some(Box::new(
-            Piecewise::parse(&s.piecewise).expect("validated piecewise schedule"),
-        )),
-        // EASGD syncs on a constant period; the elastic pull happens in
-        // the coordinator
-        Strategy::Easgd => Some(Box::new(Constant::new(s.period))),
-        Strategy::Full | Strategy::Qsgd | Strategy::TopK => None,
-    }
-}
+// Controllers are built through [`registry::build`] from a typed
+// `StrategySpec` plus a `Ctx` carrying the *global* iteration horizon
+// (warm starts pass `resume + iters`); see
+// `coordinator::sync::SyncStep::build` for the single production call
+// site.  There is deliberately no `build(cfg)` convenience here — it
+// would not know the resume offset and would silently diverge from the
+// coordinator on warm starts.
 
 #[cfg(test)]
 mod tests {

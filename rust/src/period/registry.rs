@@ -1,0 +1,189 @@
+//! Open registry of period controllers, keyed by canonical strategy
+//! name.
+//!
+//! The coordinator never matches on [`crate::period::Strategy`] to pick
+//! a controller: it asks the registry to build one from the typed
+//! [`StrategySpec`], and dispatches through the [`PeriodController`]
+//! trait from then on.  New schedules plug in two ways:
+//!
+//! * **replace a builtin** — a [`Registry`] instance with
+//!   [`Registry::register`] swaps the builder for a name (e.g. an
+//!   experimental Adaptive variant behind the same `adaptive` spec);
+//! * **bypass the registry entirely** — sessions can inject a custom
+//!   controller factory via
+//!   `ExperimentBuilder::period_controller`, which
+//!   takes precedence over the registry and needs no spec at all.
+//!
+//! Gradient-mode strategies (FULLSGD / QSGD / TopK) have no period
+//! controller — their builders return `None`, which the sync pipeline
+//! reads as "exchange every iteration".
+
+use super::{Adaptive, Constant, Decreasing, PeriodController, Piecewise};
+use crate::config::StrategySpec;
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+/// Build-time context a controller may need beyond its own knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct Ctx {
+    /// Total iterations K of *this* run (ADPSGD's sampling horizon
+    /// `K_s = ks_frac·K` and the decreasing schedule's switch point are
+    /// fractions of it).
+    pub total_iters: usize,
+}
+
+/// A named controller builder.  Returns `None` when the spec runs in
+/// gradient mode (no period gate).
+pub type BuilderFn = fn(&StrategySpec, &Ctx) -> Option<Box<dyn PeriodController>>;
+
+/// A name → builder table.  [`Registry::with_defaults`] carries the
+/// paper's controllers; callers may re-register names to swap
+/// implementations.
+pub struct Registry {
+    builders: BTreeMap<String, BuilderFn>,
+}
+
+fn build_none(_: &StrategySpec, _: &Ctx) -> Option<Box<dyn PeriodController>> {
+    None
+}
+
+fn build_constant(spec: &StrategySpec, _: &Ctx) -> Option<Box<dyn PeriodController>> {
+    match spec {
+        StrategySpec::Constant { period } => Some(Box::new(Constant::new(*period))),
+        _ => None,
+    }
+}
+
+fn build_adaptive(spec: &StrategySpec, ctx: &Ctx) -> Option<Box<dyn PeriodController>> {
+    match spec {
+        StrategySpec::Adaptive { p_init, warmup_iters, ks_frac, low, high } => {
+            let k_s = (ks_frac * ctx.total_iters as f64) as usize;
+            Some(Box::new(Adaptive::new(*p_init, *warmup_iters, k_s, *low, *high)))
+        }
+        _ => None,
+    }
+}
+
+fn build_decreasing(spec: &StrategySpec, ctx: &Ctx) -> Option<Box<dyn PeriodController>> {
+    match spec {
+        StrategySpec::Decreasing { first, second } => {
+            Some(Box::new(Decreasing::new(*first, *second, ctx.total_iters / 2)))
+        }
+        _ => None,
+    }
+}
+
+fn build_piecewise(spec: &StrategySpec, _: &Ctx) -> Option<Box<dyn PeriodController>> {
+    match spec {
+        StrategySpec::Piecewise { schedule } => Some(Box::new(
+            Piecewise::parse(schedule).expect("validated piecewise schedule"),
+        )),
+        _ => None,
+    }
+}
+
+fn build_easgd(spec: &StrategySpec, _: &Ctx) -> Option<Box<dyn PeriodController>> {
+    // EASGD syncs on a constant period; the elastic pull is a pipeline
+    // stage in the coordinator, not a scheduling concern
+    match spec {
+        StrategySpec::Easgd { period, .. } => Some(Box::new(Constant::new(*period))),
+        _ => None,
+    }
+}
+
+impl Registry {
+    /// The paper's controllers under their canonical names.
+    pub fn with_defaults() -> Registry {
+        let mut r = Registry { builders: BTreeMap::new() };
+        r.register("full", build_none);
+        r.register("constant", build_constant);
+        r.register("adaptive", build_adaptive);
+        r.register("decreasing", build_decreasing);
+        r.register("qsgd", build_none);
+        r.register("piecewise", build_piecewise);
+        r.register("easgd", build_easgd);
+        r.register("topk", build_none);
+        r
+    }
+
+    /// Register (or replace) the builder for a strategy name.
+    pub fn register(&mut self, name: &str, f: BuilderFn) {
+        self.builders.insert(name.to_string(), f);
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.builders.keys().map(String::as_str)
+    }
+
+    /// Build the controller for a spec, dispatching by its canonical
+    /// name.  `None` for gradient-mode strategies or unknown names.
+    pub fn build(&self, spec: &StrategySpec, ctx: &Ctx) -> Option<Box<dyn PeriodController>> {
+        self.builders.get(spec.name()).and_then(|f| f(spec, ctx))
+    }
+}
+
+/// Build from the process-wide default registry (the builtins).
+pub fn build(spec: &StrategySpec, ctx: &Ctx) -> Option<Box<dyn PeriodController>> {
+    static DEFAULT: OnceLock<Registry> = OnceLock::new();
+    DEFAULT.get_or_init(Registry::with_defaults).build(spec, ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::period::Strategy;
+
+    #[test]
+    fn defaults_cover_every_strategy() {
+        let r = Registry::with_defaults();
+        let ctx = Ctx { total_iters: 4000 };
+        for kind in crate::config::spec::ALL_STRATEGIES {
+            let spec = StrategySpec::default_of(kind);
+            let ctrl = r.build(&spec, &ctx);
+            match kind {
+                Strategy::Full | Strategy::Qsgd | Strategy::TopK => {
+                    assert!(ctrl.is_none(), "{kind} is gradient-mode")
+                }
+                _ => assert!(ctrl.is_some(), "{kind} needs a controller"),
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_horizon_scales_with_total_iters() {
+        let spec = StrategySpec::Adaptive {
+            p_init: 4,
+            warmup_iters: 0,
+            ks_frac: 0.25,
+            low: 0.7,
+            high: 1.3,
+        };
+        let mut c = build(&spec, &Ctx { total_iters: 400 }).unwrap();
+        // K_s = 0.25·400 = 100: sample C₂ = 2.0 for k < 100, then feed
+        // tiny variance so the period must grow once adaptation starts
+        let mut syncs = 0;
+        for k in 0..400 {
+            if c.should_sync(k) {
+                let s_k = if k < 100 { 0.2 } else { 0.001 };
+                c.on_sync(k, s_k, 0.1);
+                syncs += 1;
+            }
+        }
+        assert!(c.current_period() > 4, "period should grow after K_s");
+        assert!(syncs > 0);
+    }
+
+    #[test]
+    fn custom_builder_replaces_builtin() {
+        fn every_iter(_: &StrategySpec, _: &Ctx) -> Option<Box<dyn PeriodController>> {
+            Some(Box::new(Constant::new(1)))
+        }
+        let mut r = Registry::with_defaults();
+        r.register("adaptive", every_iter);
+        let ctrl = r
+            .build(&StrategySpec::default_of(Strategy::Adaptive), &Ctx { total_iters: 100 })
+            .unwrap();
+        assert_eq!(ctrl.name(), "constant");
+        assert_eq!(ctrl.current_period(), 1);
+    }
+}

@@ -55,6 +55,18 @@ fn shape_of(j: &Json) -> Result<Vec<usize>> {
 }
 
 impl Manifest {
+    /// Cached [`Manifest::load`]: one parse per artifacts directory per
+    /// process, so campaign sweeps over HLO models share the manifest
+    /// (and its error path stays uncached — a missing directory keeps
+    /// erroring with the actionable message).
+    pub fn load_cached(dir: impl AsRef<Path>) -> Result<std::sync::Arc<Manifest>> {
+        use crate::util::memo;
+        use std::sync::OnceLock;
+        static CACHE: memo::Cache<PathBuf, Manifest> = OnceLock::new();
+        let key = dir.as_ref().to_path_buf();
+        memo::get_or_try_build(&CACHE, key.clone(), || Self::load(&key))
+    }
+
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");

@@ -1,0 +1,62 @@
+//! Keyed `Arc` memoization for the process-wide caches (datasets,
+//! corpora, artifact manifests): one `static` [`Cache`] per call site,
+//! one locking discipline, fallible and infallible flavors.
+//!
+//! Values are immutable after construction (that is what makes sharing
+//! an `Arc` across concurrent campaign runs sound); errors are *not*
+//! cached, so a failed build (e.g. a missing artifacts directory) keeps
+//! erroring with its actionable message instead of poisoning the key.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Declare one of these as a `static` next to the memoized function.
+pub type Cache<K, V> = OnceLock<Mutex<HashMap<K, Arc<V>>>>;
+
+/// Get-or-build with a fallible constructor.  The lock is held across
+/// the build, serializing concurrent first-builds of the same cache.
+pub fn get_or_try_build<K: Eq + Hash, V>(
+    cache: &Cache<K, V>,
+    key: K,
+    build: impl FnOnce() -> anyhow::Result<V>,
+) -> anyhow::Result<Arc<V>> {
+    let mut map = cache.get_or_init(Default::default).lock().expect("memo cache lock");
+    if let Some(v) = map.get(&key) {
+        return Ok(Arc::clone(v));
+    }
+    let v = Arc::new(build()?);
+    map.insert(key, Arc::clone(&v));
+    Ok(v)
+}
+
+/// Get-or-build with an infallible constructor.
+pub fn get_or_build<K: Eq + Hash, V>(
+    cache: &Cache<K, V>,
+    key: K,
+    build: impl FnOnce() -> V,
+) -> Arc<V> {
+    get_or_try_build(cache, key, || Ok(build())).expect("infallible build")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caches_by_key_and_does_not_cache_errors() {
+        static CACHE: Cache<u32, String> = OnceLock::new();
+        let a = get_or_build(&CACHE, 1, || "one".to_string());
+        let b = get_or_build(&CACHE, 1, || unreachable!("cached"));
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = get_or_build(&CACHE, 2, || "two".to_string());
+        assert!(!Arc::ptr_eq(&a, &c));
+
+        let err: anyhow::Result<Arc<String>> =
+            get_or_try_build(&CACHE, 3, || anyhow::bail!("boom"));
+        assert!(err.is_err());
+        // the failed key retries (errors are not cached)
+        let ok = get_or_try_build(&CACHE, 3, || Ok("three".to_string())).unwrap();
+        assert_eq!(*ok, "three");
+    }
+}

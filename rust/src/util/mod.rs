@@ -5,6 +5,7 @@
 pub mod bench;
 pub mod fmt;
 pub mod json;
+pub mod memo;
 pub mod prop;
 pub mod rng;
 pub mod timer;

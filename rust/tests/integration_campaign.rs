@@ -1,0 +1,235 @@
+//! Integration tests for the experiment API redesign: typed
+//! `StrategySpec` ⇄ TOML ⇄ dotted-override round trips (including the
+//! legacy flat-key compat path), strategy alias coverage, the session
+//! builder, and end-to-end campaign execution.
+
+use adpsgd::collective::Algo;
+use adpsgd::config::{spec, ExperimentConfig, StrategySpec};
+use adpsgd::config::toml::TomlDoc;
+use adpsgd::experiment::Campaign;
+use adpsgd::period::Strategy;
+
+fn nondefault_specs() -> Vec<StrategySpec> {
+    vec![
+        StrategySpec::Full,
+        StrategySpec::Constant { period: 11 },
+        StrategySpec::Adaptive { p_init: 3, warmup_iters: 17, ks_frac: 0.2, low: 0.6, high: 1.4 },
+        StrategySpec::Decreasing { first: 21, second: 3 },
+        StrategySpec::Qsgd { levels: 15, bucket: 128 },
+        StrategySpec::Piecewise { schedule: "0:2,500:9".into() },
+        StrategySpec::Easgd { period: 6, alpha: 0.25 },
+        StrategySpec::TopK { frac: 0.0625 },
+    ]
+}
+
+#[test]
+fn spec_to_toml_to_spec_roundtrip() {
+    for spec in nondefault_specs() {
+        let text = spec.to_toml();
+        let doc = TomlDoc::parse(&text).unwrap_or_else(|e| panic!("{spec:?}: {e}\n{text}"));
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+        assert_eq!(cfg.sync.strategy, spec.kind());
+        assert_eq!(cfg.sync.spec(), spec, "nested-TOML round trip for {spec:?}");
+    }
+}
+
+#[test]
+fn spec_to_dotted_overrides_roundtrip() {
+    // the same knobs as dotted CLI overrides instead of a file
+    let cases: Vec<(Vec<(&str, &str)>, StrategySpec)> = vec![
+        (
+            vec![
+                ("sync.strategy", "adaptive"),
+                ("sync.adaptive.p_init", "3"),
+                ("sync.adaptive.warmup_iters", "17"),
+                ("sync.adaptive.ks_frac", "0.2"),
+                ("sync.adaptive.low", "0.6"),
+                ("sync.adaptive.high", "1.4"),
+            ],
+            StrategySpec::Adaptive {
+                p_init: 3,
+                warmup_iters: 17,
+                ks_frac: 0.2,
+                low: 0.6,
+                high: 1.4,
+            },
+        ),
+        (
+            vec![
+                ("sync.strategy", "qsgd"),
+                ("sync.qsgd.levels", "15"),
+                ("sync.qsgd.bucket", "128"),
+            ],
+            StrategySpec::Qsgd { levels: 15, bucket: 128 },
+        ),
+        (
+            vec![
+                ("sync.strategy", "easgd"),
+                ("sync.easgd.period", "6"),
+                ("sync.easgd.alpha", "0.25"),
+            ],
+            StrategySpec::Easgd { period: 6, alpha: 0.25 },
+        ),
+        (
+            vec![("sync.strategy", "piecewise"), ("sync.piecewise.schedule", "\"0:2,500:9\"")],
+            StrategySpec::Piecewise { schedule: "0:2,500:9".into() },
+        ),
+    ];
+    for (overrides, want) in cases {
+        let ov: Vec<(String, String)> =
+            overrides.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        let cfg = ExperimentConfig::from_overrides(&ov).unwrap_or_else(|e| panic!("{want:?}: {e}"));
+        assert_eq!(cfg.sync.spec(), want);
+    }
+}
+
+#[test]
+fn legacy_flat_keys_still_load_and_agree_with_nested() {
+    // the compat path: old flat [sync] keys produce the same typed spec
+    let flat = TomlDoc::parse(
+        "[sync]\nstrategy = \"adpsgd\"\np_init = 3\nwarmup_iters = 17\nks_frac = 0.2\nlow = 0.6\nhigh = 1.4",
+    )
+    .unwrap();
+    let nested = TomlDoc::parse(
+        "[sync]\nstrategy = \"adaptive\"\n\n[sync.adaptive]\np_init = 3\nwarmup_iters = 17\nks_frac = 0.2\nlow = 0.6\nhigh = 1.4",
+    )
+    .unwrap();
+    let a = ExperimentConfig::from_doc(&flat).unwrap();
+    let b = ExperimentConfig::from_doc(&nested).unwrap();
+    assert_eq!(a.sync.spec(), b.sync.spec());
+
+    // legacy dotted overrides keep loading too (matching strategy)
+    let ov =
+        vec![("sync.strategy".to_string(), "qsgd".to_string()),
+             ("sync.qsgd_levels".to_string(), "31".to_string())];
+    let cfg = ExperimentConfig::from_overrides(&ov).unwrap();
+    assert_eq!(cfg.sync.spec(), StrategySpec::Qsgd { levels: 31, bucket: 512 });
+}
+
+#[test]
+fn strategy_alias_coverage() {
+    let cases: [(&str, Strategy); 11] = [
+        ("full", Strategy::Full),
+        ("fullsgd", Strategy::Full),
+        ("constant", Strategy::Constant),
+        ("cpsgd", Strategy::Constant),
+        ("adaptive", Strategy::Adaptive),
+        ("adpsgd", Strategy::Adaptive),
+        ("decreasing", Strategy::Decreasing),
+        ("qsgd", Strategy::Qsgd),
+        ("piecewise", Strategy::Piecewise),
+        ("easgd", Strategy::Easgd),
+        ("topk", Strategy::TopK),
+    ];
+    for (alias, want) in cases {
+        assert_eq!(alias.parse::<Strategy>().unwrap(), want, "{alias}");
+    }
+    assert!("mesh".parse::<Strategy>().is_err());
+    assert!("ADPSGD".parse::<Strategy>().is_err(), "aliases are lowercase");
+    // every alias table agrees with FromStr, and canonical names parse
+    for kind in spec::ALL_STRATEGIES {
+        for table in spec::table_names(kind) {
+            assert_eq!(table.parse::<Strategy>().unwrap(), kind);
+        }
+    }
+}
+
+#[test]
+fn misplaced_cli_knob_reports_valid_keys() {
+    let path = {
+        use std::io::Write;
+        let dir = std::env::temp_dir().join(format!("adpsgd_camp_it_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("adaptive.toml");
+        let mut f = std::fs::File::create(&p).unwrap();
+        f.write_all(b"[sync]\nstrategy = \"adpsgd\"\n").unwrap();
+        p
+    };
+    let ov = vec![("sync.qsgd_levels".to_string(), "15".to_string())];
+    let err = ExperimentConfig::from_file(path.to_str().unwrap(), &ov).unwrap_err().to_string();
+    assert!(err.contains("qsgd knob"), "{err}");
+    assert!(err.contains("sync.adaptive.p_init"), "{err}");
+    assert!(err.contains("sync.p_init"), "legacy form listed too: {err}");
+}
+
+#[test]
+fn swept_strategy_overrides_accepted_and_applied() {
+    // the `adpsgd campaign` path: base strategy adaptive, sweeping qsgd —
+    // qsgd knobs arrive via lenient application, flow into the swept
+    // run's spec, and validate against the swept set
+    let ov = vec![("sync.qsgd.levels".to_string(), "15".to_string())];
+    let mut base = quick_base(); // default strategy: adaptive
+    base.apply_overrides_lenient(&ov).unwrap();
+    ExperimentConfig::check_override_keys(&[Strategy::Adaptive, Strategy::Qsgd], &ov).unwrap();
+    assert_eq!(
+        base.sync.spec_of(Strategy::Qsgd),
+        StrategySpec::Qsgd { levels: 15, bucket: 512 }
+    );
+    // the same override stays rejected for a single-strategy run
+    let err =
+        ExperimentConfig::check_override_keys(&[Strategy::Adaptive], &ov).unwrap_err().to_string();
+    assert!(err.contains("configures strategy qsgd"), "{err}");
+}
+
+fn quick_base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.nodes = 2;
+    cfg.iters = 60;
+    cfg.batch_per_node = 8;
+    cfg.eval_every = 30;
+    cfg.workload.input_dim = 24;
+    cfg.workload.hidden = 12;
+    cfg.workload.eval_batches = 2;
+    cfg.optim.schedule = adpsgd::config::LrSchedule::Const;
+    cfg.sync.period = 4;
+    cfg.sync.p_init = 2;
+    cfg.sync.warmup_iters = 4;
+    cfg
+}
+
+#[test]
+fn campaign_strategy_by_collective_sweep_end_to_end() {
+    // the `adpsgd campaign --quick` shape: strategy × collective
+    let base = quick_base();
+    let report = Campaign::builder("it_campaign", base.clone())
+        .strategy("cpsgd", base.sync.spec_of(Strategy::Constant))
+        .strategy("adpsgd", base.sync.spec_of(Strategy::Adaptive))
+        .collectives(&[Algo::Ring, Algo::Flat])
+        .parallelism(2)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(report.runs.len(), 4);
+    // both collectives reduce bit-identically per strategy
+    for s in ["cpsgd", "adpsgd"] {
+        let ring = report.get(&format!("{s}_ring"));
+        let flat = report.get(&format!("{s}_flat"));
+        assert_eq!(ring.final_train_loss, flat.final_train_loss, "{s}");
+        assert_eq!(ring.syncs, flat.syncs, "{s}");
+    }
+    // JSON summary carries the headline numbers
+    let json = report.to_json().to_string_compact();
+    for key in ["runs_per_sec", "total_modeled_comm_secs", "total_wire_bytes", "adpsgd_flat"] {
+        assert!(json.contains(key), "missing {key}: {json}");
+    }
+}
+
+#[test]
+fn campaign_bandwidth_axis_reprices_comm() {
+    use adpsgd::config::NetConfig;
+    let base = quick_base();
+    let report = Campaign::builder("net_sweep", base.clone())
+        .strategy("full", StrategySpec::Full)
+        .net("100g", NetConfig::infiniband_100g())
+        .net("10g", NetConfig::ethernet_10g())
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let fast = report.get("full_100g");
+    let slow = report.get("full_10g");
+    // identical training, different modeled cost
+    assert_eq!(fast.final_train_loss, slow.final_train_loss);
+    assert!(slow.ledger.total_secs() > fast.ledger.total_secs());
+}

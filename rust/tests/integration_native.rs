@@ -3,6 +3,10 @@
 //! on every strategy, asserting the paper's qualitative claims at quick
 //! scale.
 
+// Trainer is deprecated in favor of the session API; these tests keep
+// exercising the shim deliberately (it must stay green).
+#![allow(deprecated)]
+
 use adpsgd::config::{Backend, ExperimentConfig, LrSchedule};
 use adpsgd::coordinator::Trainer;
 use adpsgd::netsim::{CommKind, NetModel};
