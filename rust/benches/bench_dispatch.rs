@@ -1,0 +1,167 @@
+//! Dispatch-layer benchmark: scheduler throughput across job counts,
+//! run-cache hit economics, and the subprocess transport overhead.
+//!
+//! Emits a machine-readable summary line (`BENCH_DISPATCH_JSON {...}`)
+//! *and* writes it to `BENCH_dispatch.json`, so the dispatcher's
+//! trajectory accumulates across commits next to `BENCH_campaign.json`.
+//! Headline numbers: runs/sec at jobs ∈ {1, 2, 4, 8} on an 8-run
+//! campaign, the cache hit rate and cold/warm wall ratio, and the
+//! per-run overhead of subprocess dispatch vs in-process threads.
+
+use adpsgd::collective::Algo;
+use adpsgd::config::{ExperimentConfig, LrSchedule, StrategySpec};
+use adpsgd::dispatch::{DispatchOptions, WorkerKind};
+use adpsgd::experiment::Campaign;
+use adpsgd::period::Strategy;
+use adpsgd::util::json::Json;
+
+fn tiny_base(iters: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "bench_dispatch".into();
+    cfg.nodes = 2;
+    cfg.iters = iters;
+    cfg.batch_per_node = 16;
+    cfg.eval_every = iters / 2;
+    cfg.workload.input_dim = 48;
+    cfg.workload.hidden = 24;
+    cfg.workload.eval_batches = 4;
+    cfg.optim.schedule = LrSchedule::Const;
+    cfg.optim.lr0 = 0.05;
+    cfg.sync.warmup_iters = 4;
+    cfg.sync.p_init = 2;
+    cfg.sync.period = 4;
+    cfg
+}
+
+/// 8 runs: the paper's quartet × both collectives.
+fn eight(base: &ExperimentConfig) -> Campaign {
+    Campaign::builder("bench", base.clone())
+        .strategy("full", StrategySpec::Full)
+        .strategy("cpsgd", base.sync.spec_of(Strategy::Constant))
+        .strategy("adpsgd", base.sync.spec_of(Strategy::Adaptive))
+        .strategy("qsgd", base.sync.spec_of(Strategy::Qsgd))
+        .collectives(&[Algo::Ring, Algo::Flat])
+        .build()
+        .expect("bench campaign builds")
+}
+
+fn opts(jobs: usize) -> DispatchOptions {
+    DispatchOptions { jobs: Some(jobs), cache_dir: None, ..DispatchOptions::default() }
+}
+
+fn main() {
+    let fast = std::env::var("ADPSGD_BENCH_FAST").is_ok();
+    let iters = if fast { 80 } else { 240 };
+    let base = tiny_base(iters);
+    println!("\n== bench group: dispatch (8-run campaign, {iters} iters/run) ==");
+
+    // -- scheduler throughput across job counts ---------------------------
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("bench", Json::str("dispatch")),
+        ("iters", Json::num(iters as f64)),
+        ("runs", Json::num(8.0)),
+    ];
+    let mut wall_j1 = 0.0;
+    for jobs in [1usize, 2, 4, 8] {
+        let report = eight(&base).execute(&opts(jobs)).expect("bench campaign");
+        if jobs == 1 {
+            wall_j1 = report.wall_secs;
+        }
+        println!(
+            "dispatch/jobs_{jobs:<2}            {} runs in {:>8.2?} ({:.2} runs/sec, speedup {:.2}x)",
+            report.runs.len(),
+            std::time::Duration::from_secs_f64(report.wall_secs),
+            report.runs_per_sec(),
+            wall_j1 / report.wall_secs.max(1e-12),
+        );
+        pairs.push((
+            match jobs {
+                1 => "runs_per_sec_j1",
+                2 => "runs_per_sec_j2",
+                4 => "runs_per_sec_j4",
+                _ => "runs_per_sec_j8",
+            },
+            Json::num(report.runs_per_sec()),
+        ));
+    }
+
+    // -- cache economics: cold fill vs warm hit ---------------------------
+    let cache_dir = std::env::temp_dir()
+        .join(format!("adpsgd_bench_dispatch_cache_{}", std::process::id()));
+    std::fs::remove_dir_all(&cache_dir).ok();
+    let cached = DispatchOptions {
+        jobs: Some(4),
+        cache_dir: Some(cache_dir.clone()),
+        ..DispatchOptions::default()
+    };
+    let cold = eight(&base).execute(&cached).expect("cold campaign");
+    let warm = eight(&base).execute(&cached).expect("warm campaign");
+    let hit_rate = warm.cache_hits() as f64 / warm.runs.len() as f64;
+    assert!(
+        (hit_rate - 1.0).abs() < f64::EPSILON,
+        "warm pass must be all hits, got {hit_rate}"
+    );
+    assert_eq!(
+        cold.to_json_stable().to_string_compact(),
+        warm.to_json_stable().to_string_compact(),
+        "cold and warm stable summaries must be byte-identical"
+    );
+    println!(
+        "dispatch/cache              cold {:>8.2?} -> warm {:>8.2?} ({:.0}% hits, {:.1}x)",
+        std::time::Duration::from_secs_f64(cold.wall_secs),
+        std::time::Duration::from_secs_f64(warm.wall_secs),
+        hit_rate * 100.0,
+        cold.wall_secs / warm.wall_secs.max(1e-12),
+    );
+    std::fs::remove_dir_all(&cache_dir).ok();
+    pairs.push(("cache_hit_rate", Json::num(hit_rate)));
+    pairs.push(("cold_wall_secs", Json::num(cold.wall_secs)));
+    pairs.push(("warm_wall_secs", Json::num(warm.wall_secs)));
+
+    // -- subprocess transport overhead ------------------------------------
+    // cargo exports the binary path to benches; guard for stripped envs
+    let worker_exe = option_env!("CARGO_BIN_EXE_adpsgd").map(std::path::PathBuf::from);
+    match worker_exe {
+        Some(exe) if exe.exists() => {
+            let two = |opts: &DispatchOptions| {
+                let mut b = tiny_base(iters);
+                b.name = "bench_sub".into();
+                let c = Campaign::builder("sub", b.clone())
+                    .strategy("cpsgd", b.sync.spec_of(Strategy::Constant))
+                    .strategy("full", StrategySpec::Full)
+                    .build()
+                    .expect("subprocess bench campaign");
+                c.execute(opts).expect("subprocess bench campaign run")
+            };
+            let threads = two(&opts(2));
+            let subs = two(&DispatchOptions {
+                jobs: Some(2),
+                workers: WorkerKind::Subprocess,
+                worker_exe: Some(exe),
+                cache_dir: None,
+                ..DispatchOptions::default()
+            });
+            let overhead =
+                (subs.wall_secs - threads.wall_secs) / subs.runs.len() as f64;
+            println!(
+                "dispatch/subprocess         thread {:>8.2?} vs subprocess {:>8.2?} ({:+.3}s/run)",
+                std::time::Duration::from_secs_f64(threads.wall_secs),
+                std::time::Duration::from_secs_f64(subs.wall_secs),
+                overhead,
+            );
+            pairs.push(("subprocess_overhead_secs_per_run", Json::num(overhead)));
+        }
+        _ => {
+            println!("dispatch/subprocess         skipped (worker binary unavailable)");
+            pairs.push(("subprocess_overhead_secs_per_run", Json::Null));
+        }
+    }
+
+    let line = Json::obj(pairs).to_string_compact();
+    println!("BENCH_DISPATCH_JSON {line}");
+    if let Err(e) = std::fs::write("BENCH_dispatch.json", &line) {
+        eprintln!("warning: could not write BENCH_dispatch.json: {e}");
+    } else {
+        println!("wrote BENCH_dispatch.json");
+    }
+}

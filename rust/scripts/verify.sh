@@ -1,9 +1,12 @@
 #!/usr/bin/env bash
 # Tier-1 verification: build + full test suite + examples build + one
 # quickstart smoke run under each collective algorithm + a campaign
-# smoke sweep (strategy × collective) + the campaign-scheduler bench
-# (emits BENCH_campaign.json for the perf trajectory).  Referenced from
-# ROADMAP.md; CI and pre-merge checks should run exactly this.
+# smoke sweep (strategy × collective) + a cold-vs-warm run-cache smoke
+# (the second invocation must be answered from the cache and write a
+# byte-identical summary) + the campaign/dispatch benches (emit
+# BENCH_campaign.json / BENCH_dispatch.json for the perf trajectory).
+# Referenced from ROADMAP.md; CI and pre-merge checks should run
+# exactly this.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,9 +25,32 @@ for algo in flat ring; do
 done
 
 echo "== verify: campaign smoke sweep (strategy x collective) =="
-cargo run --release -- campaign --quick --name verify_campaign --parallel 2 --out /tmp/adpsgd_verify
+cargo run --release -- campaign --quick --name verify_campaign --jobs 2 --out /tmp/adpsgd_verify
+
+echo "== verify: run-cache cold/warm smoke =="
+CACHE_DIR=/tmp/adpsgd_verify_cache
+rm -rf "${CACHE_DIR}" /tmp/adpsgd_verify_cold /tmp/adpsgd_verify_warm
+cargo run --release -- campaign --quick --name cache_smoke --jobs 4 \
+    --cache-dir "${CACHE_DIR}" --out /tmp/adpsgd_verify_cold | tee /tmp/adpsgd_verify_cold.log
+cargo run --release -- campaign --quick --name cache_smoke --jobs 4 \
+    --cache-dir "${CACHE_DIR}" --out /tmp/adpsgd_verify_warm | tee /tmp/adpsgd_verify_warm.log
+# the warm pass must be answered entirely from the cache (the quick
+# sweep is 4 strategies x 2 collectives = 8 runs) ...
+grep -q "8 cache hits" /tmp/adpsgd_verify_warm.log \
+    || { echo "verify: FAIL — warm campaign did not hit the cache on all 8 runs"; exit 1; }
+# ... and produce a byte-identical summary
+cmp /tmp/adpsgd_verify_cold/cache_smoke.campaign.json /tmp/adpsgd_verify_warm/cache_smoke.campaign.json \
+    || { echo "verify: FAIL — cold/warm campaign summaries differ"; exit 1; }
+echo "   cache smoke OK (8/8 hits, byte-identical summary)"
+
+echo "== verify: subprocess-worker smoke =="
+cargo run --release -- campaign --quick --name worker_smoke --jobs 2 --workers subprocess \
+    --strategies cpsgd,adpsgd --collectives ring --out /tmp/adpsgd_verify
 
 echo "== verify: campaign scheduler bench (fast) =="
 ADPSGD_BENCH_FAST=1 cargo bench --bench bench_campaign
+
+echo "== verify: dispatch bench (fast) =="
+ADPSGD_BENCH_FAST=1 cargo bench --bench bench_dispatch
 
 echo "== verify: OK =="

@@ -8,36 +8,61 @@
 //! warm start is a new trajectory.
 //!
 //! Format (little-endian): magic `ADPK`, version u32, iter u64,
-//! n_params u64, loss f64, then n f32 parameters, then a u64 xor
-//! checksum of the payload words.
+//! n_params u64, loss f64, a controller-state section (version ≥ 2: a
+//! presence byte, then period/cnt u64, C₂ f64, C₂-sample-count u64 —
+//! see [`CtrlState`]), then n f32 parameters, then a u64 xor checksum
+//! of the payload words (parameters and controller state).  Version-1
+//! snapshots (no controller section) still load, with `ctrl = None` —
+//! those warm starts re-seed C₂ from the first post-resume sync.
 
+use crate::period::CtrlState;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 4] = b"ADPK";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
-/// One parameter snapshot.
+/// One parameter snapshot, plus (version ≥ 2) the period controller's
+/// adaptive state so Algorithm 2 resumes exactly.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
     pub iter: u64,
     pub loss: f64,
     pub w: Vec<f32>,
+    /// the leader's period-controller state at snapshot time (all
+    /// replicas hold identical controllers); `None` for stateless
+    /// strategies and version-1 snapshots
+    pub ctrl: Option<CtrlState>,
 }
 
-fn checksum(w: &[f32]) -> u64 {
+fn checksum(w: &[f32], ctrl: &Option<CtrlState>) -> u64 {
     let mut acc = 0xD1B54A32D192ED03u64;
-    for (i, v) in w.iter().enumerate() {
-        acc ^= (v.to_bits() as u64).rotate_left((i % 63) as u32);
+    let mut mix = |word: u64, i: usize| {
+        acc ^= word.rotate_left((i % 63) as u32);
         acc = acc.wrapping_mul(0x9E3779B97F4A7C15);
+    };
+    for (i, v) in w.iter().enumerate() {
+        mix(v.to_bits() as u64, i);
+    }
+    if let Some(c) = ctrl {
+        for (i, word) in
+            [c.period, c.cnt, c.c2.to_bits(), c.c2_samples].into_iter().enumerate()
+        {
+            mix(word, w.len() + i);
+        }
     }
     acc
 }
 
 impl Checkpoint {
     pub fn new(iter: u64, loss: f64, w: Vec<f32>) -> Self {
-        Checkpoint { iter, loss, w }
+        Checkpoint { iter, loss, w, ctrl: None }
+    }
+
+    /// A snapshot carrying the period controller's state.
+    pub fn with_ctrl(iter: u64, loss: f64, w: Vec<f32>, ctrl: Option<CtrlState>) -> Self {
+        Checkpoint { iter, loss, w, ctrl }
     }
 
     /// Canonical file name for iteration `iter` under `dir`.
@@ -62,10 +87,20 @@ impl Checkpoint {
             f.write_all(&self.iter.to_le_bytes())?;
             f.write_all(&(self.w.len() as u64).to_le_bytes())?;
             f.write_all(&self.loss.to_le_bytes())?;
+            match &self.ctrl {
+                None => f.write_all(&[0u8])?,
+                Some(c) => {
+                    f.write_all(&[1u8])?;
+                    f.write_all(&c.period.to_le_bytes())?;
+                    f.write_all(&c.cnt.to_le_bytes())?;
+                    f.write_all(&c.c2.to_le_bytes())?;
+                    f.write_all(&c.c2_samples.to_le_bytes())?;
+                }
+            }
             for v in &self.w {
                 f.write_all(&v.to_le_bytes())?;
             }
-            f.write_all(&checksum(&self.w).to_le_bytes())?;
+            f.write_all(&checksum(&self.w, &self.ctrl).to_le_bytes())?;
         }
         std::fs::rename(&tmp, path)?;
         Ok(())
@@ -84,7 +119,7 @@ impl Checkpoint {
         let mut b8 = [0u8; 8];
         f.read_exact(&mut b4)?;
         let version = u32::from_le_bytes(b4);
-        if version != VERSION {
+        if !(1..=VERSION).contains(&version) {
             bail!("{}: unsupported checkpoint version {version}", path.display());
         }
         f.read_exact(&mut b8)?;
@@ -96,6 +131,30 @@ impl Checkpoint {
         }
         f.read_exact(&mut b8)?;
         let loss = f64::from_le_bytes(b8);
+        let ctrl = if version >= 2 {
+            let mut flag = [0u8; 1];
+            f.read_exact(&mut flag)?;
+            match flag[0] {
+                0 => None,
+                1 => {
+                    let mut word = || -> Result<u64> {
+                        f.read_exact(&mut b8)?;
+                        Ok(u64::from_le_bytes(b8))
+                    };
+                    let period = word()?;
+                    let cnt = word()?;
+                    let c2 = f64::from_bits(word()?);
+                    let c2_samples = word()?;
+                    Some(CtrlState { period, cnt, c2, c2_samples })
+                }
+                other => bail!(
+                    "{}: corrupt controller-state flag {other}",
+                    path.display()
+                ),
+            }
+        } else {
+            None
+        };
         let mut w = vec![0.0f32; n];
         let mut buf = vec![0u8; n * 4];
         f.read_exact(&mut buf)?;
@@ -104,11 +163,11 @@ impl Checkpoint {
         }
         f.read_exact(&mut b8)?;
         let want = u64::from_le_bytes(b8);
-        let got = checksum(&w);
+        let got = if version >= 2 { checksum(&w, &ctrl) } else { checksum(&w, &None) };
         if want != got {
             bail!("{}: checksum mismatch (corrupt checkpoint)", path.display());
         }
-        Ok(Checkpoint { iter, loss, w })
+        Ok(Checkpoint { iter, loss, w, ctrl })
     }
 
     /// Latest checkpoint (by iteration) in a directory, if any.
@@ -153,6 +212,63 @@ mod tests {
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(ck, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn roundtrip_with_controller_state() {
+        let dir = tmpdir("ctrl");
+        let ctrl = CtrlState { period: 7, cnt: 3, c2: 2.625, c2_samples: 19 };
+        let ck = Checkpoint::with_ctrl(88, 0.5, vec![1.5; 32], Some(ctrl));
+        let path = Checkpoint::path_for(&dir, ck.iter);
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        assert_eq!(back.ctrl, Some(ctrl));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn version1_snapshots_still_load_without_ctrl() {
+        let dir = tmpdir("v1");
+        let w = vec![0.25f32; 16];
+        let path = dir.join("ckpt_0000000042.adpk");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&42u64.to_le_bytes());
+        bytes.extend_from_slice(&(w.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(&0.75f64.to_le_bytes());
+        for v in &w {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        bytes.extend_from_slice(&checksum(&w, &None).to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.iter, 42);
+        assert_eq!(ck.w, w);
+        assert_eq!(ck.ctrl, None, "v1 snapshots carry no controller state");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ctrl_state_corruption_detected() {
+        let dir = tmpdir("ctrlcorrupt");
+        let ck = Checkpoint::with_ctrl(
+            1,
+            0.0,
+            vec![1.0; 64],
+            Some(CtrlState { period: 4, cnt: 1, c2: 1.0, c2_samples: 2 }),
+        );
+        let path = Checkpoint::path_for(&dir, 1);
+        ck.save(&path).unwrap();
+        // flip a byte inside the controller-state section (right after
+        // the presence flag at offset 4+4+8+8+8)
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4 + 4 + 8 + 8 + 8 + 1] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

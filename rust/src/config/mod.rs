@@ -105,6 +105,13 @@ pub struct SyncConfig {
     /// EASGD elastic coefficient α (fraction each node moves toward the
     /// mean at a sync; 1.0 degenerates to CPSGD).
     pub easgd_alpha: f64,
+    /// Per-strategy period storage: CPSGD and EASGD both *consume* a
+    /// period, but each strategy's `[sync.<strategy>]` table stores its
+    /// value here independently (`None` = fall back to the shared legacy
+    /// `period` field), so one base config can configure both without
+    /// last-writer-wins between the tables.
+    pub constant_period: Option<usize>,
+    pub easgd_period: Option<usize>,
     /// Top-k sparsification: fraction of gradient components kept.
     pub topk_frac: f64,
     /// Which collective algorithm executes (and prices) the exchanges:
@@ -130,6 +137,8 @@ impl Default for SyncConfig {
             qsgd_bucket: 512,
             piecewise: "0:4,2000:8".into(),
             easgd_alpha: 0.5,
+            constant_period: None,
+            easgd_period: None,
             topk_frac: 0.03125,
             collective: CollectiveAlgo::Ring,
         }
@@ -425,6 +434,93 @@ impl ExperimentConfig {
         Ok(cfg)
     }
 
+    /// Canonical dotted-key document form of the fully-resolved config:
+    /// every field of the TOML schema, with the strategy knobs written
+    /// as nested `[sync.<strategy>]` keys for *all* strategies (so sweep
+    /// bases survive).  Round-trips through [`Self::from_doc`] to a
+    /// config whose every strategy projection ([`SyncConfig::spec_of`])
+    /// is equal, and is idempotent (`to_doc(from_doc(d)) == d` for `d`
+    /// produced here) — the substrate for the dispatch layer's run-cache
+    /// digest and worker wire format.
+    pub fn to_doc(&self) -> TomlDoc {
+        let mut doc = TomlDoc::default();
+        let mut set = |k: &str, v: TomlValue| {
+            doc.entries.insert(k.to_string(), v);
+        };
+        let s = |v: &str| TomlValue::Str(v.to_string());
+        let i = |v: usize| TomlValue::Int(v as i64);
+
+        set("name", s(&self.name));
+        set("seed", TomlValue::Int(self.seed as i64));
+        set("nodes", i(self.nodes));
+        set("iters", i(self.iters));
+        set("batch_per_node", i(self.batch_per_node));
+        set("eval_every", i(self.eval_every));
+        set("variance_every", i(self.variance_every));
+        set("threads", i(self.threads));
+        set("artifacts_dir", s(&self.artifacts_dir));
+        set("checkpoint_every", i(self.checkpoint_every));
+        set("checkpoint_dir", s(&self.checkpoint_dir));
+        set("init_from", s(&self.init_from));
+
+        let (backend, model) = match &self.workload.backend {
+            Backend::Native(m) => ("native", m),
+            Backend::Hlo(m) => ("hlo", m),
+        };
+        set("workload.backend", s(backend));
+        set("workload.model", s(model));
+        set("workload.input_dim", i(self.workload.input_dim));
+        set("workload.classes", i(self.workload.classes));
+        set("workload.hidden", i(self.workload.hidden));
+        set("workload.noise", TomlValue::Float(self.workload.noise as f64));
+        set("workload.label_noise", TomlValue::Float(self.workload.label_noise as f64));
+        set("workload.eval_batches", i(self.workload.eval_batches));
+
+        set("optim.lr0", TomlValue::Float(self.optim.lr0 as f64));
+        set("optim.momentum", TomlValue::Float(self.optim.momentum as f64));
+        let bounds = |b: &[usize]| {
+            TomlValue::Arr(b.iter().map(|x| TomlValue::Int(*x as i64)).collect())
+        };
+        match &self.optim.schedule {
+            LrSchedule::Const => set("optim.schedule", s("const")),
+            LrSchedule::StepDecay { boundaries, factor } => {
+                set("optim.schedule", s("step"));
+                set("optim.boundaries", bounds(boundaries));
+                set("optim.factor", TomlValue::Float(*factor as f64));
+            }
+            LrSchedule::Warmup { warmup_iters, warmup_factor, boundaries, factor } => {
+                set("optim.schedule", s("warmup"));
+                set("optim.warmup_iters", i(*warmup_iters));
+                set("optim.warmup_factor", TomlValue::Float(*warmup_factor as f64));
+                set("optim.boundaries", bounds(boundaries));
+                set("optim.factor", TomlValue::Float(*factor as f64));
+            }
+        }
+
+        set("sync.strategy", s(spec::canonical_name(self.sync.strategy)));
+        set("sync.collective", s(&self.sync.collective.to_string()));
+        for kind in spec::ALL_STRATEGIES {
+            let name = spec::canonical_name(kind);
+            for (key, val) in self.sync.spec_of(kind).nested_entries() {
+                doc.entries.insert(format!("sync.{name}.{key}"), val);
+            }
+        }
+
+        doc.entries.insert(
+            "net.bandwidth_gbps".into(),
+            TomlValue::Float(self.net.bandwidth_gbps),
+        );
+        doc.entries.insert("net.latency_us".into(), TomlValue::Float(self.net.latency_us));
+        doc
+    }
+
+    /// [`Self::to_doc`] rendered as canonical TOML text (byte-stable for
+    /// equal configs).  Errors only on strings the TOML subset cannot
+    /// represent (embedded quotes or line breaks in names/paths).
+    pub fn to_toml_string(&self) -> Result<String> {
+        self.to_doc().render().map_err(|e| anyhow!("serializing config: {e}"))
+    }
+
     /// Apply a parsed document onto this config (no validation) — the
     /// shared core of [`Self::from_doc`], [`Self::from_file`], and the
     /// experiment builder's dotted `set()` overrides.
@@ -544,6 +640,12 @@ impl ExperimentConfig {
         }
         if let Some(v) = gi("sync.period") {
             cfg.sync.period = v as usize;
+            // the legacy flat key targets the shared carrier: reset the
+            // per-strategy slots so this document's value takes effect
+            // (nested [sync.constant]/[sync.easgd] tables in the same
+            // document re-apply below and still win over the flat key)
+            cfg.sync.constant_period = None;
+            cfg.sync.easgd_period = None;
         }
         if let Some(v) = gi("sync.p_init") {
             cfg.sync.p_init = v as usize;
@@ -594,37 +696,35 @@ impl ExperimentConfig {
         }
 
         // nested per-strategy tables: every [sync.<strategy>] table is
-        // applied onto the flat carrier, so tables for strategies not
+        // applied into the carrier, so tables for strategies not
         // currently chosen still configure those strategies' knobs for
-        // campaign sweeps (read back via `SyncConfig::spec_of`).  The
-        // chosen strategy's effective knobs (its flat keys overlaid with
-        // its own table) are captured first and re-applied last, so a
-        // foreign table can never leak into the chosen strategy through
-        // a shared carrier field like `period`.  The one remaining
-        // carrier limitation: two *non-chosen* strategies that share a
-        // flat field (constant/easgd both store `period`) overwrite each
-        // other, last table wins.
-        let chosen = cfg.sync.strategy;
-        let overlay = |sp: &mut spec::StrategySpec,
-                       kind: Strategy|
-         -> Result<()> {
+        // campaign sweeps (read back via `SyncConfig::spec_of`).  Each
+        // strategy owns its storage — constant and easgd keep their
+        // periods in distinct slots (`constant_period`/`easgd_period`)
+        // despite sharing the legacy flat `period` fallback — so table
+        // application order does not matter and no table can leak into
+        // another strategy's knobs.
+        // (project every spec against the pre-table carrier first, then
+        // apply, so one table's writes never feed another's projection)
+        let mut overlaid: Vec<spec::StrategySpec> = Vec::new();
+        for kind in spec::ALL_STRATEGIES {
+            let mut sp = cfg.sync.spec_of(kind);
+            let mut touched = false;
             for table in spec::table_names(kind) {
                 for key in spec::nested_keys(kind) {
                     if let Some(v) = doc.get(&format!("sync.{table}.{key}")) {
                         sp.set_nested(key, v)?;
+                        touched = true;
                     }
                 }
             }
-            Ok(())
-        };
-        let mut chosen_sp = cfg.sync.spec();
-        for kind in spec::ALL_STRATEGIES.into_iter().filter(|k| *k != chosen) {
-            let mut sp = cfg.sync.spec_of(kind);
-            overlay(&mut sp, kind)?;
+            if touched {
+                overlaid.push(sp);
+            }
+        }
+        for sp in overlaid {
             sp.apply_knobs_to(&mut cfg.sync);
         }
-        overlay(&mut chosen_sp, chosen)?;
-        chosen_sp.apply_knobs_to(&mut cfg.sync);
 
         // legacy flat strategy knobs still load — note it once
         let legacy_used = doc.entries.keys().any(|k| {
@@ -840,15 +940,33 @@ latency_us = 25.0
 
     #[test]
     fn chosen_strategy_nested_table_wins_shared_fields() {
-        // constant and easgd share the flat `period` carrier: the chosen
-        // strategy's table is applied last and wins
+        // constant and easgd both consume a period; each table lands in
+        // its own slot, so the chosen strategy reads its own value
         let doc = TomlDoc::parse(
             "[sync]\nstrategy = \"constant\"\n\n[sync.constant]\nperiod = 5\n\n[sync.easgd]\nperiod = 9\nalpha = 0.5",
         )
         .unwrap();
         let cfg = ExperimentConfig::from_doc(&doc).unwrap();
-        assert_eq!(cfg.sync.period, 5, "chosen strategy's period must win");
+        assert_eq!(cfg.sync.spec(), StrategySpec::Constant { period: 5 });
         assert_eq!(cfg.sync.easgd_alpha, 0.5);
+    }
+
+    #[test]
+    fn foreign_constant_table_cannot_leak_into_flat_configured_easgd() {
+        // the mirrored direction: EASGD chosen via the legacy flat
+        // period, with a sweep-base [sync.constant] table present — the
+        // table must not rewrite the carrier EASGD falls back to
+        let doc = TomlDoc::parse(
+            "[sync]\nstrategy = \"easgd\"\nperiod = 7\neasgd_alpha = 0.25\n\n[sync.constant]\nperiod = 5",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(
+            cfg.sync.spec(),
+            StrategySpec::Easgd { period: 7, alpha: 0.25 },
+            "foreign constant table must not leak into the chosen EASGD run"
+        );
+        assert_eq!(cfg.sync.spec_of(Strategy::Constant), StrategySpec::Constant { period: 5 });
     }
 
     #[test]
@@ -862,6 +980,114 @@ latency_us = 25.0
         let cfg = ExperimentConfig::from_doc(&doc).unwrap();
         assert_eq!(cfg.sync.period, 8, "foreign easgd table must not leak into CPSGD");
         assert_eq!(cfg.sync.easgd_alpha, 0.5, "easgd's own (unshared) knob is stored");
+    }
+
+    #[test]
+    fn constant_and_easgd_periods_configure_independently() {
+        // the last last-writer-wins corner: both tables in one base must
+        // configure their own strategy regardless of order or of which
+        // strategy is chosen
+        for text in [
+            "[sync]\nstrategy = \"adaptive\"\n\n[sync.constant]\nperiod = 5\n\n[sync.easgd]\nperiod = 9\nalpha = 0.5",
+            "[sync]\nstrategy = \"adaptive\"\n\n[sync.easgd]\nperiod = 9\nalpha = 0.5\n\n[sync.constant]\nperiod = 5",
+        ] {
+            let cfg = ExperimentConfig::from_doc(&TomlDoc::parse(text).unwrap()).unwrap();
+            assert_eq!(
+                cfg.sync.spec_of(Strategy::Constant),
+                StrategySpec::Constant { period: 5 },
+                "{text}"
+            );
+            assert_eq!(
+                cfg.sync.spec_of(Strategy::Easgd),
+                StrategySpec::Easgd { period: 9, alpha: 0.5 },
+                "{text}"
+            );
+        }
+    }
+
+    #[test]
+    fn easgd_without_table_still_reads_legacy_flat_period() {
+        let doc =
+            TomlDoc::parse("[sync]\nstrategy = \"easgd\"\nperiod = 7\neasgd_alpha = 0.25").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.sync.spec(), StrategySpec::Easgd { period: 7, alpha: 0.25 });
+    }
+
+    #[test]
+    fn later_flat_override_beats_earlier_nested_table() {
+        // a file configures [sync.constant]; a later CLI round with the
+        // legacy flat key must still take effect (flat resets the slot)
+        let doc = TomlDoc::parse("[sync]\nstrategy = \"constant\"\n\n[sync.constant]\nperiod = 5")
+            .unwrap();
+        let mut cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        cfg.apply_overrides(&[("sync.period".to_string(), "9".to_string())]).unwrap();
+        assert_eq!(cfg.sync.spec(), StrategySpec::Constant { period: 9 });
+    }
+
+    #[test]
+    fn to_doc_roundtrips_and_is_canonical() {
+        let doc = TomlDoc::parse(
+            r#"
+name = "canon"
+seed = 7
+nodes = 4
+iters = 120
+batch_per_node = 16
+
+[workload]
+backend = "native"
+model = "mlp"
+input_dim = 32
+
+[optim]
+lr0 = 0.05
+schedule = "warmup"
+warmup_iters = 10
+warmup_factor = 4.0
+boundaries = [60, 90]
+factor = 0.1
+
+[sync]
+strategy = "adaptive"
+
+[sync.adaptive]
+p_init = 3
+ks_frac = 0.2
+
+[sync.constant]
+period = 5
+
+[sync.easgd]
+period = 9
+alpha = 0.5
+
+[net]
+bandwidth_gbps = 10.0
+latency_us = 25.0
+"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        let canon = cfg.to_doc();
+        let text = canon.render().unwrap();
+        let back = ExperimentConfig::from_doc(&TomlDoc::parse(&text).unwrap()).unwrap();
+        // every strategy projection survives the round trip ...
+        for kind in spec::ALL_STRATEGIES {
+            assert_eq!(back.sync.spec_of(kind), cfg.sync.spec_of(kind), "{kind}");
+        }
+        assert_eq!(back.nodes, cfg.nodes);
+        assert_eq!(back.optim.schedule, cfg.optim.schedule);
+        assert_eq!(back.net, cfg.net);
+        assert_eq!(back.workload, cfg.workload);
+        // ... and the canonical form is idempotent (digest substrate)
+        assert_eq!(back.to_doc().render().unwrap(), text);
+    }
+
+    #[test]
+    fn to_doc_rejects_unrepresentable_strings() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = "quo\"te".into();
+        assert!(cfg.to_toml_string().is_err());
     }
 
     #[test]

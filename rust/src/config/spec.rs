@@ -21,7 +21,11 @@
 //! The flat [`super::SyncConfig`] struct remains the storage carrier (a
 //! lot of call sites patch it directly); [`SyncConfig::spec`] projects
 //! flat → typed and [`StrategySpec::apply_to`] writes typed → flat, so
-//! the two views cannot drift per-strategy.
+//! the two views cannot drift per-strategy.  Strategies that *consume*
+//! the same knob name (constant/easgd both take a `period`) store it in
+//! per-strategy slots (`SyncConfig::constant_period` /
+//! `SyncConfig::easgd_period`, falling back to the shared legacy
+//! `period` field), so one base config configures both independently.
 
 use super::toml::TomlValue;
 use super::SyncConfig;
@@ -237,7 +241,15 @@ impl StrategySpec {
     pub fn apply_knobs_to(&self, sync: &mut SyncConfig) {
         match self {
             StrategySpec::Full => {}
-            StrategySpec::Constant { period } => sync.period = *period,
+            StrategySpec::Constant { period } => {
+                // CPSGD and EASGD both consume a period; each writes
+                // ONLY its own storage slot (spec_of reads the slot,
+                // with the shared legacy `period` field as fallback) —
+                // writing the shared carrier here would leak a
+                // sweep-base [sync.constant] table into a
+                // flat-configured EASGD run, and vice versa
+                sync.constant_period = Some(*period);
+            }
             StrategySpec::Adaptive { p_init, warmup_iters, ks_frac, low, high } => {
                 sync.p_init = *p_init;
                 sync.warmup_iters = *warmup_iters;
@@ -255,7 +267,7 @@ impl StrategySpec {
             }
             StrategySpec::Piecewise { schedule } => sync.piecewise = schedule.clone(),
             StrategySpec::Easgd { period, alpha } => {
-                sync.period = *period;
+                sync.easgd_period = Some(*period);
                 sync.easgd_alpha = *alpha;
             }
             StrategySpec::TopK { frac } => sync.topk_frac = *frac,
@@ -307,6 +319,42 @@ impl StrategySpec {
             ),
         }
         Ok(())
+    }
+
+    /// The spec's knobs as `(nested_key, value)` pairs, in
+    /// [`nested_keys`] order — the substrate for
+    /// [`super::ExperimentConfig::to_doc`]'s canonical `[sync.<name>]`
+    /// tables.
+    pub fn nested_entries(&self) -> Vec<(&'static str, TomlValue)> {
+        match self {
+            StrategySpec::Full => vec![],
+            StrategySpec::Constant { period } => {
+                vec![("period", TomlValue::Int(*period as i64))]
+            }
+            StrategySpec::Adaptive { p_init, warmup_iters, ks_frac, low, high } => vec![
+                ("p_init", TomlValue::Int(*p_init as i64)),
+                ("warmup_iters", TomlValue::Int(*warmup_iters as i64)),
+                ("ks_frac", TomlValue::Float(*ks_frac)),
+                ("low", TomlValue::Float(*low)),
+                ("high", TomlValue::Float(*high)),
+            ],
+            StrategySpec::Decreasing { first, second } => vec![
+                ("first", TomlValue::Int(*first as i64)),
+                ("second", TomlValue::Int(*second as i64)),
+            ],
+            StrategySpec::Qsgd { levels, bucket } => vec![
+                ("levels", TomlValue::Int(*levels as i64)),
+                ("bucket", TomlValue::Int(*bucket as i64)),
+            ],
+            StrategySpec::Piecewise { schedule } => {
+                vec![("schedule", TomlValue::Str(schedule.clone()))]
+            }
+            StrategySpec::Easgd { period, alpha } => vec![
+                ("period", TomlValue::Int(*period as i64)),
+                ("alpha", TomlValue::Float(*alpha)),
+            ],
+            StrategySpec::TopK { frac } => vec![("frac", TomlValue::Float(*frac))],
+        }
     }
 
     /// Render the canonical nested-TOML form:
@@ -365,7 +413,9 @@ impl SyncConfig {
     pub fn spec_of(&self, kind: Strategy) -> StrategySpec {
         match kind {
             Strategy::Full => StrategySpec::Full,
-            Strategy::Constant => StrategySpec::Constant { period: self.period },
+            Strategy::Constant => StrategySpec::Constant {
+                period: self.constant_period.unwrap_or(self.period),
+            },
             Strategy::Adaptive => StrategySpec::Adaptive {
                 p_init: self.p_init,
                 warmup_iters: self.warmup_iters,
@@ -380,9 +430,10 @@ impl SyncConfig {
                 StrategySpec::Qsgd { levels: self.qsgd_levels, bucket: self.qsgd_bucket }
             }
             Strategy::Piecewise => StrategySpec::Piecewise { schedule: self.piecewise.clone() },
-            Strategy::Easgd => {
-                StrategySpec::Easgd { period: self.period, alpha: self.easgd_alpha }
-            }
+            Strategy::Easgd => StrategySpec::Easgd {
+                period: self.easgd_period.unwrap_or(self.period),
+                alpha: self.easgd_alpha,
+            },
             Strategy::TopK => StrategySpec::TopK { frac: self.topk_frac },
         }
     }

@@ -21,6 +21,40 @@ pub enum TomlValue {
 }
 
 impl TomlValue {
+    /// Render in the subset grammar [`TomlDoc::parse`] accepts.  The
+    /// subset has no string escapes, so strings containing a double
+    /// quote, `#`, or a line break cannot be represented and error.
+    pub fn render(&self) -> Result<String, String> {
+        match self {
+            TomlValue::Str(s) => {
+                if s.contains('"') || s.contains('#') || s.contains('\n') || s.contains('\r') {
+                    Err(format!("string {s:?} is not representable (no escape support)"))
+                } else {
+                    Ok(format!("\"{s}\""))
+                }
+            }
+            TomlValue::Int(i) => Ok(i.to_string()),
+            TomlValue::Float(f) => {
+                if !f.is_finite() {
+                    return Err(format!("non-finite float {f}"));
+                }
+                let s = format!("{f}");
+                // keep the float/integer distinction through a re-parse
+                Ok(if s.contains('.') || s.contains('e') || s.contains('E') {
+                    s
+                } else {
+                    format!("{s}.0")
+                })
+            }
+            TomlValue::Bool(b) => Ok(b.to_string()),
+            TomlValue::Arr(items) => {
+                let parts: Result<Vec<String>, String> =
+                    items.iter().map(TomlValue::render).collect();
+                Ok(format!("[{}]", parts?.join(", ")))
+            }
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             TomlValue::Str(s) => Some(s),
@@ -111,6 +145,23 @@ impl TomlDoc {
 
     pub fn get(&self, key: &str) -> Option<&TomlValue> {
         self.entries.get(key)
+    }
+
+    /// Render as sorted dotted `key = value` lines.  The output
+    /// round-trips through [`TomlDoc::parse`] to an equal document, and
+    /// is byte-stable for equal documents (entries are a sorted map) —
+    /// the canonical text form behind the dispatch layer's config digest
+    /// and worker wire format.
+    pub fn render(&self) -> Result<String, String> {
+        let mut out = String::new();
+        for (k, v) in &self.entries {
+            let val = v.render().map_err(|e| format!("{k}: {e}"))?;
+            out.push_str(k);
+            out.push_str(" = ");
+            out.push_str(&val);
+            out.push('\n');
+        }
+        Ok(out)
     }
 
     /// All keys under a dotted prefix (for unknown-key validation).

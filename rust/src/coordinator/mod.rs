@@ -156,33 +156,6 @@ struct WorkerOut {
     ledger: Option<CommLedger>,
 }
 
-/// Deprecated blocking front-door, kept as a thin shim over the session
-/// API: `Trainer::new(cfg)?.run()` is exactly
-/// `Experiment::from_config(cfg)?.run()` with no observers or hooks.
-pub struct Trainer {
-    cfg: ExperimentConfig,
-}
-
-impl Trainer {
-    #[deprecated(
-        note = "use adpsgd::experiment::Experiment::builder() (or Experiment::from_config); \
-                Trainer is a compatibility shim over the session API"
-    )]
-    pub fn new(cfg: ExperimentConfig) -> Result<Self> {
-        cfg.validate()?;
-        Ok(Trainer { cfg })
-    }
-
-    pub fn config(&self) -> &ExperimentConfig {
-        &self.cfg
-    }
-
-    /// Run the experiment to completion (delegates to the session API).
-    pub fn run(&self) -> Result<RunReport> {
-        run_experiment(&self.cfg, RunHooks::default())
-    }
-}
-
 /// Build the (train-kind, eval) dataset handle and the per-node batch
 /// geometry.  For HLO models the AOT artifacts fix the batch shape, so
 /// `batch_per_node` is taken from the manifest.  Handles come from the
@@ -215,8 +188,7 @@ fn dataset_for(cfg: &ExperimentConfig) -> Result<(DatasetHandle, usize, usize)> 
 
 /// Run one experiment to completion: spawn the worker cluster, feed the
 /// leader's event stream to the observers, and assemble the report.
-/// This is the engine under [`crate::experiment::Experiment`]; the
-/// deprecated [`Trainer`] calls it with empty hooks.
+/// This is the engine under [`crate::experiment::Experiment`].
 pub(crate) fn run_experiment(cfg: &ExperimentConfig, hooks: RunHooks) -> Result<RunReport> {
     cfg.validate()?;
     let RunHooks { observers: user_observers, controller } = hooks;
@@ -389,6 +361,12 @@ fn worker_loop(
     // resample C₂ from scratch, and schedule switch points stay global
     let resume = node.resume_iter;
     let mut step = SyncStep::build(cfg, n_params, rank, resume, ctrl_factory.as_deref());
+    // version-2 snapshots carry the controller's adaptive state (C₂, p):
+    // restoring it makes the resume exact — without it Algorithm 2 would
+    // re-seed C₂ from the first post-resume sync
+    if let Some(state) = &node.resume_ctrl {
+        step.restore_controller(state);
+    }
     let grad_mode = step.mode == ExchangeMode::Gradient;
 
     if let Some(h) = hub.as_mut() {
@@ -499,6 +477,7 @@ fn worker_loop(
                     iter: (resume + k + 1) as u64,
                     mean_loss: node.mean_local_loss(),
                     w: &node.w_pre,
+                    ctrl: step.controller_state(),
                 })?;
             }
         }
@@ -532,10 +511,14 @@ fn eval_model(
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // Trainer is exercised deliberately: it must stay green
 mod tests {
     use super::*;
     use crate::config::Backend;
+
+    /// Run a config through the session API (the tests' front door).
+    fn train(cfg: ExperimentConfig) -> Result<RunReport> {
+        crate::experiment::Experiment::from_config(cfg)?.run()
+    }
 
     fn quick_cfg(strategy: Strategy) -> ExperimentConfig {
         let mut cfg = ExperimentConfig::default();
@@ -559,7 +542,7 @@ mod tests {
 
     #[test]
     fn cpsgd_sync_count_matches_period() {
-        let report = Trainer::new(quick_cfg(Strategy::Constant)).unwrap().run().unwrap();
+        let report = train(quick_cfg(Strategy::Constant)).unwrap();
         assert_eq!(report.syncs, 30); // 120 / 4
         assert!((report.avg_period - 4.0).abs() < 1e-9);
         assert!(report.final_train_loss.is_finite());
@@ -567,15 +550,15 @@ mod tests {
 
     #[test]
     fn fullsgd_syncs_every_iteration() {
-        let report = Trainer::new(quick_cfg(Strategy::Full)).unwrap().run().unwrap();
+        let report = train(quick_cfg(Strategy::Full)).unwrap();
         assert_eq!(report.syncs, 120);
         assert!(report.ledger.count(CommKind::GradAllreduce) == 120);
     }
 
     #[test]
     fn qsgd_moves_fewer_bytes_than_fullsgd() {
-        let full = Trainer::new(quick_cfg(Strategy::Full)).unwrap().run().unwrap();
-        let qsgd = Trainer::new(quick_cfg(Strategy::Qsgd)).unwrap().run().unwrap();
+        let full = train(quick_cfg(Strategy::Full)).unwrap();
+        let qsgd = train(quick_cfg(Strategy::Qsgd)).unwrap();
         let fb = full.ledger.total_wire_bytes() as f64;
         let qb = qsgd.ledger.total_wire_bytes() as f64;
         assert!(qb < fb / 2.0, "qsgd bytes {qb} vs full {fb}");
@@ -586,7 +569,7 @@ mod tests {
     fn adaptive_records_period_and_sk() {
         let mut cfg = quick_cfg(Strategy::Adaptive);
         cfg.variance_every = 10;
-        let report = Trainer::new(cfg).unwrap().run().unwrap();
+        let report = train(cfg).unwrap();
         assert!(report.recorder.get("s_k").is_some());
         assert!(report.recorder.get("period").is_some());
         assert!(report.recorder.get("var").is_some());
@@ -598,7 +581,7 @@ mod tests {
     fn single_node_runs() {
         let mut cfg = quick_cfg(Strategy::Constant);
         cfg.nodes = 1;
-        let report = Trainer::new(cfg).unwrap().run().unwrap();
+        let report = train(cfg).unwrap();
         assert!(report.final_train_loss.is_finite());
     }
 
@@ -607,7 +590,7 @@ mod tests {
         let mut cfg = quick_cfg(Strategy::Adaptive);
         cfg.iters = 400;
         cfg.workload.noise = 0.4;
-        let report = Trainer::new(cfg).unwrap().run().unwrap();
+        let report = train(cfg).unwrap();
         assert!(
             report.best_eval_acc > 0.8,
             "acc {} loss {}",
@@ -623,7 +606,7 @@ mod tests {
         let mut cfg = quick_cfg(Strategy::Piecewise);
         cfg.iters = 160;
         cfg.sync.piecewise = "0:4,80:8".into();
-        let report = Trainer::new(cfg).unwrap().run().unwrap();
+        let report = train(cfg).unwrap();
         assert_eq!(report.syncs, 30); // 80/4 + 80/8
     }
 
@@ -634,7 +617,7 @@ mod tests {
         cfg.variance_every = 10;
         cfg.sync.period = 4;
         cfg.sync.easgd_alpha = 0.5;
-        let easgd = Trainer::new(cfg).unwrap().run().unwrap();
+        let easgd = train(cfg).unwrap();
         assert!(easgd.final_train_loss.is_finite());
         assert_eq!(easgd.syncs, 50);
 
@@ -644,7 +627,7 @@ mod tests {
         ccfg.iters = 200;
         ccfg.variance_every = 10;
         ccfg.sync.period = 4;
-        let cpsgd = Trainer::new(ccfg).unwrap().run().unwrap();
+        let cpsgd = train(ccfg).unwrap();
         let ev = easgd.recorder.get("var").unwrap().mean_y_in(20.0, 200.0).unwrap();
         let cv = cpsgd.recorder.get("var").unwrap().mean_y_in(20.0, 200.0).unwrap();
         assert!(ev > cv, "easgd var {ev:.3e} should exceed cpsgd var {cv:.3e}");
@@ -654,8 +637,8 @@ mod tests {
     fn easgd_alpha_one_equals_cpsgd() {
         let mut ecfg = quick_cfg(Strategy::Easgd);
         ecfg.sync.easgd_alpha = 1.0;
-        let e = Trainer::new(ecfg).unwrap().run().unwrap();
-        let c = Trainer::new(quick_cfg(Strategy::Constant)).unwrap().run().unwrap();
+        let e = train(ecfg).unwrap();
+        let c = train(quick_cfg(Strategy::Constant)).unwrap();
         assert_eq!(e.final_train_loss, c.final_train_loss, "α=1 must reduce to CPSGD");
     }
 
@@ -666,7 +649,7 @@ mod tests {
         let mut cfg = quick_cfg(Strategy::Adaptive);
         cfg.workload.backend = Backend::Native("failing:2:15".into());
         let start = std::time::Instant::now();
-        let err = Trainer::new(cfg).unwrap().run().unwrap_err();
+        let err = train(cfg).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("injected failure"), "{msg}");
         assert!(msg.contains("node 2"), "{msg}");
@@ -677,7 +660,7 @@ mod tests {
     fn failure_at_first_step_also_clean() {
         let mut cfg = quick_cfg(Strategy::Full);
         cfg.workload.backend = Backend::Native("failing:0:1".into());
-        let err = Trainer::new(cfg).unwrap().run().unwrap_err();
+        let err = train(cfg).unwrap_err();
         assert!(format!("{err:#}").contains("injected failure"));
     }
 
@@ -686,11 +669,11 @@ mod tests {
         let mut cfg = quick_cfg(Strategy::TopK);
         cfg.iters = 300;
         cfg.sync.topk_frac = 0.05;
-        let topk = Trainer::new(cfg).unwrap().run().unwrap();
+        let topk = train(cfg).unwrap();
         let full = {
             let mut c = quick_cfg(Strategy::Full);
             c.iters = 300;
-            Trainer::new(c).unwrap().run().unwrap()
+            train(c).unwrap()
         };
         // error feedback keeps it learning
         assert!(topk.best_eval_acc > 0.7, "topk acc {}", topk.best_eval_acc);
@@ -711,7 +694,7 @@ mod tests {
         cfg.iters = 200;
         cfg.checkpoint_every = 100;
         cfg.checkpoint_dir = dir.to_str().unwrap().into();
-        let cold = Trainer::new(cfg).unwrap().run().unwrap();
+        let cold = train(cfg).unwrap();
         let latest = crate::checkpoint::Checkpoint::latest(&dir).unwrap().expect("snapshots");
         let ck = crate::checkpoint::Checkpoint::load(&latest).unwrap();
         assert_eq!(ck.iter, 200);
@@ -721,11 +704,11 @@ mod tests {
         let mut warm_cfg = quick_cfg(Strategy::Adaptive);
         warm_cfg.iters = 40;
         warm_cfg.init_from = dir.to_str().unwrap().into();
-        let warm = Trainer::new(warm_cfg).unwrap().run().unwrap();
+        let warm = train(warm_cfg).unwrap();
         let warm_first = warm.recorder.get("train_loss").unwrap().points[0].1;
         let mut cold_cfg = quick_cfg(Strategy::Adaptive);
         cold_cfg.iters = 40;
-        let cold2 = Trainer::new(cold_cfg).unwrap().run().unwrap();
+        let cold2 = train(cold_cfg).unwrap();
         let cold_first = cold2.recorder.get("train_loss").unwrap().points[0].1;
         assert!(
             warm_first < cold_first * 0.8,
@@ -752,7 +735,7 @@ mod tests {
         base.sync.low = 0.01;
         base.sync.high = 100.0;
 
-        let cold = Trainer::new(base.clone()).unwrap().run().unwrap();
+        let cold = train(base.clone()).unwrap();
         assert_eq!(cold.syncs, 25, "cold: 10 warmup syncs + 15 at p=2");
 
         let n_params = cold.n_params;
@@ -761,10 +744,63 @@ mod tests {
             .unwrap();
         let mut warm_cfg = base.clone();
         warm_cfg.init_from = dir.to_str().unwrap().into();
-        let warm = Trainer::new(warm_cfg).unwrap().run().unwrap();
+        let warm = train(warm_cfg).unwrap();
         assert_eq!(
             warm.syncs, 20,
             "warm restart at iter 200 must skip the p=1 warmup and sync every p_init=2"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoints_carry_controller_state() {
+        // a cold adaptive run past its sampling horizon must snapshot a
+        // trained C₂ and the live period alongside the parameters
+        let dir = std::env::temp_dir().join(format!("adpsgd_ctrl_ck_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cfg = quick_cfg(Strategy::Adaptive);
+        cfg.iters = 200;
+        cfg.sync.ks_frac = 0.25; // k_s = 50 < 200: C₂ fully sampled
+        cfg.checkpoint_every = 200;
+        cfg.checkpoint_dir = dir.to_str().unwrap().into();
+        let report = crate::experiment::Experiment::from_config(cfg).unwrap().run().unwrap();
+        let latest = crate::checkpoint::Checkpoint::latest(&dir).unwrap().expect("snapshot");
+        let ck = crate::checkpoint::Checkpoint::load(&latest).unwrap();
+        let ctrl = ck.ctrl.expect("adaptive snapshots controller state");
+        assert!(ctrl.c2_samples > 0, "C₂ running average was sampled: {ctrl:?}");
+        assert!(ctrl.c2.is_finite() && ctrl.c2 > 0.0, "{ctrl:?}");
+        assert!(ctrl.period >= 1);
+        assert!(report.syncs > 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn warm_start_restores_sampled_c2_and_period() {
+        // resume-equivalence regression: a restored controller must
+        // adapt from the checkpointed C₂ immediately — not re-seed C₂
+        // from the first post-resume sync.  The checkpoint carries an
+        // absurdly large C₂, so every post-resume sync sees
+        // S_k < low·γ·C₂ and the period grows deterministically:
+        // restored p=4 → syncs at local k = 3, 8, 14, 21, 29, 38.
+        let dir = std::env::temp_dir().join(format!("adpsgd_ctrl_resume_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cfg = quick_cfg(Strategy::Adaptive);
+        cfg.iters = 40;
+        cfg.sync.warmup_iters = 10; // resume at 200 is far past warmup
+        cfg.sync.p_init = 2;
+
+        let n_params = crate::workload::build("mlp", &cfg.workload).unwrap().n_params();
+        let ctrl =
+            crate::period::CtrlState { period: 4, cnt: 0, c2: 1e12, c2_samples: 1 };
+        crate::checkpoint::Checkpoint::with_ctrl(200, 0.0, vec![0.01; n_params], Some(ctrl))
+            .save(&crate::checkpoint::Checkpoint::path_for(&dir, 200))
+            .unwrap();
+        cfg.init_from = dir.to_str().unwrap().into();
+        let warm = crate::experiment::Experiment::from_config(cfg).unwrap().run().unwrap();
+        assert_eq!(
+            warm.syncs, 6,
+            "restored p=4 and huge C₂ must grow the period every sync \
+             (p_init=2 would have produced ~20 syncs)"
         );
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -778,15 +814,15 @@ mod tests {
             .unwrap();
         let mut cfg = quick_cfg(Strategy::Constant);
         cfg.init_from = dir.to_str().unwrap().into();
-        let err = Trainer::new(cfg).unwrap().run().unwrap_err();
+        let err = train(cfg).unwrap_err();
         assert!(format!("{err:#}").contains("params"), "{err:#}");
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn deterministic_across_runs() {
-        let r1 = Trainer::new(quick_cfg(Strategy::Adaptive)).unwrap().run().unwrap();
-        let r2 = Trainer::new(quick_cfg(Strategy::Adaptive)).unwrap().run().unwrap();
+        let r1 = train(quick_cfg(Strategy::Adaptive)).unwrap();
+        let r2 = train(quick_cfg(Strategy::Adaptive)).unwrap();
         assert_eq!(r1.final_train_loss, r2.final_train_loss);
         assert_eq!(r1.syncs, r2.syncs);
         let s1 = r1.recorder.get("train_loss").unwrap();
@@ -813,8 +849,8 @@ mod tests {
             fcfg.sync.collective = Algo::Flat;
             let mut rcfg = quick_cfg(strategy);
             rcfg.sync.collective = Algo::Ring;
-            let f = Trainer::new(fcfg).unwrap().run().unwrap();
-            let r = Trainer::new(rcfg).unwrap().run().unwrap();
+            let f = train(fcfg).unwrap();
+            let r = train(rcfg).unwrap();
             assert_eq!(f.syncs, r.syncs, "{strategy}");
             assert_eq!(f.avg_period, r.avg_period, "{strategy}");
             assert_eq!(

@@ -44,6 +44,10 @@ pub struct Node {
     /// controller so Algorithm 2 continues where it left off instead of
     /// re-running its warmup epoch and C₂ sampling
     pub resume_iter: usize,
+    /// the checkpoint's period-controller state (warm starts from a
+    /// version-2 snapshot) — restored into the sync pipeline so resume
+    /// is exact: the sampled C₂ and current period p survive the restart
+    pub resume_ctrl: Option<crate::period::CtrlState>,
 }
 
 impl Node {
@@ -76,6 +80,7 @@ impl Node {
 
         // --- shared initial point (paper: all nodes start from w_0) ------
         let mut resume_iter = 0usize;
+        let mut resume_ctrl = None;
         let mut w = if cfg.init_from.is_empty() {
             engine.init(cfg.seed)?
         } else {
@@ -96,6 +101,7 @@ impl Node {
                 );
             }
             resume_iter = ck.iter as usize;
+            resume_ctrl = ck.ctrl;
             ck.w
         };
         comm.broadcast(rank, &mut w)?;
@@ -119,6 +125,7 @@ impl Node {
             loss_acc: 0.0,
             loss_cnt: 0,
             resume_iter,
+            resume_ctrl,
         })
     }
 

@@ -49,8 +49,15 @@ pub enum RunEvent<'a> {
     /// A held-out evaluation completed.
     EvalDone { k: usize, loss: f64, acc: f64 },
     /// The checkpoint cadence fired: `w` holds the cluster-mean
-    /// parameters after `iter` completed iterations (1-based).
-    CheckpointDue { iter: u64, mean_loss: f64, w: &'a [f32] },
+    /// parameters after `iter` completed iterations (1-based), and
+    /// `ctrl` the period controller's state (for exact warm-start
+    /// resume; `None` for stateless strategies).
+    CheckpointDue {
+        iter: u64,
+        mean_loss: f64,
+        w: &'a [f32],
+        ctrl: Option<crate::period::CtrlState>,
+    },
     /// Emitted once after the last iteration.
     RunEnd { iters: usize },
 }
@@ -128,8 +135,8 @@ impl CheckpointObserver {
 
 impl RunObserver for CheckpointObserver {
     fn on_event(&mut self, ev: &RunEvent<'_>) -> Result<()> {
-        if let RunEvent::CheckpointDue { iter, mean_loss, w } = ev {
-            crate::checkpoint::Checkpoint::new(*iter, *mean_loss, w.to_vec())
+        if let RunEvent::CheckpointDue { iter, mean_loss, w, ctrl } = ev {
+            crate::checkpoint::Checkpoint::with_ctrl(*iter, *mean_loss, w.to_vec(), *ctrl)
                 .save(&crate::checkpoint::Checkpoint::path_for(&self.dir, *iter))
                 .context("writing checkpoint")?;
         }
@@ -166,11 +173,19 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
         let mut obs = CheckpointObserver::new(&dir);
         let w = vec![0.5f32; 16];
-        obs.on_event(&RunEvent::CheckpointDue { iter: 40, mean_loss: 0.1, w: &w }).unwrap();
+        let ctrl = crate::period::CtrlState { period: 6, cnt: 2, c2: 1.25, c2_samples: 9 };
+        obs.on_event(&RunEvent::CheckpointDue {
+            iter: 40,
+            mean_loss: 0.1,
+            w: &w,
+            ctrl: Some(ctrl),
+        })
+        .unwrap();
         let latest = crate::checkpoint::Checkpoint::latest(&dir).unwrap().expect("snapshot");
         let ck = crate::checkpoint::Checkpoint::load(&latest).unwrap();
         assert_eq!(ck.iter, 40);
         assert_eq!(ck.w, w);
+        assert_eq!(ck.ctrl, Some(ctrl), "controller state rides the snapshot");
         std::fs::remove_dir_all(&dir).ok();
     }
 

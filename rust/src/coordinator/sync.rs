@@ -169,6 +169,23 @@ impl SyncStep {
         self.controller.as_ref().map(|c| c.current_period()).unwrap_or(1)
     }
 
+    /// The period controller's adaptive state for a checkpoint (`None`
+    /// in gradient mode or for stateless controllers).  All ranks hold
+    /// identical controllers, so the leader's snapshot speaks for the
+    /// cluster.
+    pub fn controller_state(&self) -> Option<crate::period::CtrlState> {
+        self.controller.as_ref().and_then(|c| c.snapshot())
+    }
+
+    /// Restore a checkpointed controller state (warm start): Algorithm
+    /// 2 resumes with its sampled C₂ and adapted period instead of
+    /// re-seeding them from the first post-resume sync.
+    pub fn restore_controller(&mut self, state: &crate::period::CtrlState) {
+        if let Some(c) = self.controller.as_mut() {
+            c.restore(state);
+        }
+    }
+
     /// Gradient-mode chain: payload transform (timed as compute) →
     /// ledger charge → collective exchange.  The averaged gradient lands
     /// back in `node.g`.

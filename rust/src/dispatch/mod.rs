@@ -1,0 +1,81 @@
+//! The dispatch layer: how many runs become one result set.
+//!
+//! [`crate::experiment::Campaign`] describes *what* to run; this
+//! subsystem decides *how*: which runs are already answered by the
+//! persistent content-addressed [`runcache`], how many execute
+//! concurrently, whether they execute on in-process threads or in
+//! `adpsgd worker` subprocesses speaking the [`proto`] line protocol,
+//! and how crashed workers are retried — all behind
+//! [`pool::Dispatcher`], which merges results deterministically in
+//! declaration order no matter the parallelism or completion order.
+//!
+//! Layering: `experiment` (describe) → `dispatch` (schedule, memoize,
+//! transport) → `coordinator` (execute one run).  The coordinator knows
+//! nothing about caching or subprocesses; campaigns know nothing about
+//! queues or retries.
+//!
+//! ## The run cache in one paragraph
+//!
+//! Every fully-resolved run config has a canonical text
+//! ([`crate::config::ExperimentConfig::to_doc`]); the digest of its
+//! result-affecting subset (plus content digests of any warm-start
+//! snapshot and HLO manifest) keys a directory of serialized
+//! [`crate::coordinator::RunReport`]s.  Re-running a campaign, resuming
+//! an aborted sweep, or sharing runs across the `figures/*` campaigns
+//! then skips completed work entirely — a hit is bit-identical to the
+//! original report, and any result-affecting knob change busts the key
+//! by construction.  See [`runcache`] for the exact hashed/not-hashed
+//! policy.
+//!
+//! ## Process-default cache
+//!
+//! Campaigns executed through [`crate::experiment::Campaign::run`]
+//! consult the process-wide default cache directory: unset by default,
+//! taken from `$ADPSGD_RUN_CACHE` when present, and settable by
+//! launchers ([`set_default_cache_dir`]) — which is how `adpsgd figures
+//! --cache-dir` gives all six figure campaigns memoization without
+//! touching their definitions.
+
+pub mod pool;
+pub mod proto;
+pub mod runcache;
+
+pub use pool::{DispatchOptions, DispatchedRun, Dispatcher, WorkerKind};
+pub use runcache::{cfg_digest, RunCache};
+
+use std::path::PathBuf;
+use std::sync::{Mutex, OnceLock};
+
+fn default_cache_cell() -> &'static Mutex<Option<PathBuf>> {
+    static CELL: OnceLock<Mutex<Option<PathBuf>>> = OnceLock::new();
+    CELL.get_or_init(|| Mutex::new(std::env::var_os("ADPSGD_RUN_CACHE").map(PathBuf::from)))
+}
+
+/// The process-wide default run-cache directory (used by
+/// [`DispatchOptions::default`]): `$ADPSGD_RUN_CACHE` unless a launcher
+/// overrode it.  `None` disables caching by default.
+pub fn default_cache_dir() -> Option<PathBuf> {
+    default_cache_cell().lock().expect("default cache cell").clone()
+}
+
+/// Override the process-default run-cache directory (`None` disables).
+/// Launchers call this once before building campaigns.
+pub fn set_default_cache_dir(dir: Option<PathBuf>) {
+    *default_cache_cell().lock().expect("default cache cell") = dir;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_cache_dir_is_settable() {
+        // restore whatever was there (the environment may set it, and
+        // concurrent tests read it through DispatchOptions::default)
+        let prev = default_cache_dir();
+        set_default_cache_dir(Some(PathBuf::from("/tmp/adpsgd_cache_test")));
+        assert_eq!(default_cache_dir(), Some(PathBuf::from("/tmp/adpsgd_cache_test")));
+        set_default_cache_dir(prev.clone());
+        assert_eq!(default_cache_dir(), prev);
+    }
+}

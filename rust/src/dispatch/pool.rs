@@ -1,0 +1,439 @@
+//! The worker pool: a work-stealing run queue drained by in-process
+//! thread slots or `adpsgd worker` subprocess slots, with cache
+//! short-circuiting, crashed-worker retry, and a deterministic merge.
+//!
+//! Scheduling is a shared queue: every slot pops the next pending run,
+//! so a slow run never blocks the others (work stealing without
+//! per-slot queues).  Results land in per-run slots indexed by
+//! declaration order, so the merged output is identical for any `jobs`
+//! level and any completion order.  A *deterministic* run failure
+//! aborts the dispatch (queued runs are not started; in-flight runs
+//! finish) — exactly the historical campaign semantics.  A *crashed*
+//! subprocess worker (pipe EOF, spawn failure) is not a run failure:
+//! the run is re-queued for any free slot (the crashing slot respawns a
+//! fresh child) up to [`DispatchOptions::max_attempts`] attempts.
+
+use super::runcache::{self, RunCache};
+use crate::coordinator::RunReport;
+use crate::experiment::{Experiment, RunSpec};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::VecDeque;
+use std::io::{BufRead, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Where a pending run executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerKind {
+    /// In-process: each slot runs the experiment on its own thread (the
+    /// run itself still spawns its `nodes`-thread cluster).
+    Thread,
+    /// Out-of-process: each slot owns an `adpsgd worker` child speaking
+    /// the line-delimited JSON protocol of [`super::proto`].
+    Subprocess,
+}
+
+/// How a dispatch executes: slot count, worker kind, cache, retries.
+#[derive(Debug, Clone)]
+pub struct DispatchOptions {
+    /// Concurrent run slots; `None` = `min(available cores, runs)`.
+    pub jobs: Option<usize>,
+    pub workers: WorkerKind,
+    /// Run-cache directory; `None` disables caching.
+    pub cache_dir: Option<PathBuf>,
+    /// Attempts per run before a crashing worker fails the dispatch.
+    pub max_attempts: usize,
+    /// Binary for subprocess workers; `None` = this executable.
+    pub worker_exe: Option<PathBuf>,
+}
+
+impl Default for DispatchOptions {
+    fn default() -> Self {
+        DispatchOptions {
+            jobs: None,
+            workers: WorkerKind::Thread,
+            cache_dir: super::default_cache_dir(),
+            max_attempts: 3,
+            worker_exe: None,
+        }
+    }
+}
+
+impl DispatchOptions {
+    /// The conservative in-process profile [`crate::experiment::Campaign::run`]
+    /// uses: a fixed slot count, thread workers, the process-default
+    /// cache (usually disabled).
+    pub fn in_process(jobs: usize) -> DispatchOptions {
+        DispatchOptions { jobs: Some(jobs.max(1)), ..DispatchOptions::default() }
+    }
+}
+
+/// One finished run out of the dispatcher.
+pub struct DispatchedRun {
+    pub report: RunReport,
+    /// whether the report came from the run cache (no training executed)
+    pub from_cache: bool,
+}
+
+/// Executes batches of [`RunSpec`]s under one [`DispatchOptions`]
+/// profile.  Reusable across batches; exposes live worker pids and the
+/// crash-retry count for observability (and the kill-a-worker tests).
+pub struct Dispatcher {
+    opts: DispatchOptions,
+    pids: Arc<Mutex<Vec<u32>>>,
+    retries: Arc<AtomicUsize>,
+}
+
+enum Outcome {
+    Done(RunReport),
+    RunFailed(anyhow::Error),
+    Crashed(anyhow::Error),
+}
+
+impl Dispatcher {
+    pub fn new(opts: DispatchOptions) -> Dispatcher {
+        Dispatcher { opts, pids: Arc::new(Mutex::new(Vec::new())), retries: Arc::new(AtomicUsize::new(0)) }
+    }
+
+    /// Live subprocess-worker pids (empty in thread mode).
+    pub fn worker_pids(&self) -> Arc<Mutex<Vec<u32>>> {
+        Arc::clone(&self.pids)
+    }
+
+    /// Crashed-worker retries performed so far.
+    pub fn retries(&self) -> usize {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    /// Execute every run, returning reports in declaration order
+    /// regardless of completion order or parallelism.
+    pub fn execute(&self, runs: &[RunSpec]) -> Result<Vec<DispatchedRun>> {
+        let n = runs.len();
+        if n == 0 {
+            bail!("dispatch of zero runs");
+        }
+        let cache = self.opts.cache_dir.as_ref().map(RunCache::new);
+        let slots: Vec<Mutex<Option<Result<DispatchedRun>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        // (digest, canonical text) per run — probed up front so hits
+        // skip the queue entirely
+        let mut keys: Vec<Option<(String, String)>> = (0..n).map(|_| None).collect();
+        let mut pending: VecDeque<(usize, usize)> = VecDeque::new();
+        for (i, spec) in runs.iter().enumerate() {
+            if let Some(cache) = &cache {
+                let canonical = runcache::cfg_canonical_text(&spec.cfg)
+                    .with_context(|| format!("hashing run {:?}", spec.label))?;
+                let key = runcache::content_digest(canonical.as_bytes());
+                if let Some(mut report) = cache.get(&key) {
+                    // the name is excluded from the key (incidental):
+                    // restamp it so cross-campaign hits report under the
+                    // requesting label
+                    report.name = spec.cfg.name.clone();
+                    *slots[i].lock().expect("dispatch slot") =
+                        Some(Ok(DispatchedRun { report, from_cache: true }));
+                    continue;
+                }
+                keys[i] = Some((key, canonical));
+            }
+            pending.push_back((i, 1));
+        }
+
+        if !pending.is_empty() {
+            let jobs = self
+                .opts
+                .jobs
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism().map(usize::from).unwrap_or(2)
+                })
+                .clamp(1, pending.len());
+            let queue = Mutex::new(pending);
+            let aborted = AtomicBool::new(false);
+            std::thread::scope(|scope| {
+                for _ in 0..jobs {
+                    scope.spawn(|| self.slot_loop(runs, &keys, cache.as_ref(), &queue, &aborted, &slots));
+                }
+            });
+        }
+
+        // deterministic merge: declaration order; the lowest-index real
+        // failure wins over "skipped" noise
+        let mut merged: Vec<Option<DispatchedRun>> = Vec::with_capacity(n);
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut skipped: Option<usize> = None;
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot.into_inner().expect("dispatch slot") {
+                Some(Ok(run)) => merged.push(Some(run)),
+                Some(Err(e)) => {
+                    first_err.get_or_insert(e);
+                    merged.push(None);
+                }
+                None => {
+                    skipped.get_or_insert(i);
+                    merged.push(None);
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        if let Some(i) = skipped {
+            bail!("run {:?} was skipped after an earlier failure", runs[i].label);
+        }
+        Ok(merged.into_iter().map(|r| r.expect("all slots filled")).collect())
+    }
+
+    /// One slot: pop runs until the queue drains or the dispatch aborts.
+    fn slot_loop(
+        &self,
+        runs: &[RunSpec],
+        keys: &[Option<(String, String)>],
+        cache: Option<&RunCache>,
+        queue: &Mutex<VecDeque<(usize, usize)>>,
+        aborted: &AtomicBool,
+        slots: &[Mutex<Option<Result<DispatchedRun>>>],
+    ) {
+        let mut client: Option<WorkerClient> = None;
+        loop {
+            if aborted.load(Ordering::Relaxed) {
+                break;
+            }
+            let Some((i, attempt)) = queue.lock().expect("dispatch queue").pop_front() else {
+                break;
+            };
+            let spec = &runs[i];
+            let outcome = match self.opts.workers {
+                WorkerKind::Thread => {
+                    match Experiment::from_config(spec.cfg.clone()).and_then(Experiment::run)
+                    {
+                        Ok(report) => Outcome::Done(report),
+                        Err(e) => Outcome::RunFailed(e),
+                    }
+                }
+                WorkerKind::Subprocess => {
+                    self.subprocess_run(&mut client, &spec.cfg)
+                }
+            };
+            match outcome {
+                Outcome::Done(report) => {
+                    if let (Some(cache), Some((key, canonical))) = (cache, &keys[i]) {
+                        if let Err(e) = cache.put(key, canonical, &report) {
+                            eprintln!("note: run cache write failed for {:?}: {e:#}", spec.label);
+                        }
+                    }
+                    *slots[i].lock().expect("dispatch slot") =
+                        Some(Ok(DispatchedRun { report, from_cache: false }));
+                }
+                Outcome::RunFailed(e) => {
+                    aborted.store(true, Ordering::Relaxed);
+                    *slots[i].lock().expect("dispatch slot") =
+                        Some(Err(e.context(format!("run {:?}", spec.label))));
+                }
+                Outcome::Crashed(e) => {
+                    // the child is gone: drop it and respawn lazily on
+                    // the next pop; the run goes back to *any* slot
+                    client = None;
+                    if attempt < self.opts.max_attempts {
+                        self.retries.fetch_add(1, Ordering::Relaxed);
+                        eprintln!(
+                            "note: worker crashed during run {:?} (attempt {attempt}); retrying: {e:#}",
+                            spec.label
+                        );
+                        queue.lock().expect("dispatch queue").push_back((i, attempt + 1));
+                    } else {
+                        aborted.store(true, Ordering::Relaxed);
+                        *slots[i].lock().expect("dispatch slot") = Some(Err(e.context(format!(
+                            "run {:?} crashed its worker {} times",
+                            spec.label, attempt
+                        ))));
+                    }
+                }
+            }
+        }
+    }
+
+    fn subprocess_run(
+        &self,
+        client: &mut Option<WorkerClient>,
+        cfg: &crate::config::ExperimentConfig,
+    ) -> Outcome {
+        if client.is_none() {
+            match WorkerClient::spawn(self.opts.worker_exe.clone(), &self.pids) {
+                Ok(c) => *client = Some(c),
+                Err(e) => return Outcome::Crashed(e.context("spawning worker")),
+            }
+        }
+        let c = client.as_mut().expect("worker client just ensured");
+        c.run(cfg)
+    }
+}
+
+/// One `adpsgd worker` child and its protocol channel.
+struct WorkerClient {
+    child: std::process::Child,
+    stdin: std::process::ChildStdin,
+    stdout: std::io::BufReader<std::process::ChildStdout>,
+    next_id: u64,
+    pids: Arc<Mutex<Vec<u32>>>,
+}
+
+impl WorkerClient {
+    fn spawn(exe: Option<PathBuf>, pids: &Arc<Mutex<Vec<u32>>>) -> Result<WorkerClient> {
+        let exe = match exe {
+            Some(p) => p,
+            None => std::env::current_exe().context("resolving worker executable")?,
+        };
+        let mut child = std::process::Command::new(&exe)
+            .arg("worker")
+            .stdin(std::process::Stdio::piped())
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawning {} worker", exe.display()))?;
+        let stdin = child.stdin.take().expect("piped stdin");
+        let stdout = std::io::BufReader::new(child.stdout.take().expect("piped stdout"));
+        pids.lock().expect("pid registry").push(child.id());
+        Ok(WorkerClient { child, stdin, stdout, next_id: 0, pids: Arc::clone(pids) })
+    }
+
+    /// Submit one run and block for its terminal frame, tolerating
+    /// heartbeats.  Any transport defect is a crash (retryable); an
+    /// `Error` frame is a deterministic run failure (fatal).
+    fn run(&mut self, cfg: &crate::config::ExperimentConfig) -> Outcome {
+        self.next_id += 1;
+        let id = self.next_id;
+        let line = match (super::proto::Frame::RunRequest { id, cfg: cfg.clone() }).to_line() {
+            Ok(l) => l,
+            // an unserializable config is the run's fault, not the worker's
+            Err(e) => return Outcome::RunFailed(e),
+        };
+        if let Err(e) = self.stdin.write_all(line.as_bytes()).and_then(|()| self.stdin.flush())
+        {
+            return Outcome::Crashed(anyhow!("worker pipe closed: {e}"));
+        }
+        loop {
+            let mut reply = String::new();
+            match self.stdout.read_line(&mut reply) {
+                Ok(0) => return Outcome::Crashed(anyhow!("worker exited mid-run (pipe EOF)")),
+                Ok(_) => {}
+                Err(e) => return Outcome::Crashed(anyhow!("reading worker reply: {e}")),
+            }
+            match super::proto::Frame::parse(&reply) {
+                Ok(super::proto::Frame::Heartbeat { .. }) => continue,
+                Ok(super::proto::Frame::RunResult { id: rid, report }) if rid == id => {
+                    return Outcome::Done(report)
+                }
+                Ok(super::proto::Frame::Error { id: rid, message }) if rid == id => {
+                    return Outcome::RunFailed(anyhow!("{message}"))
+                }
+                Ok(other) => {
+                    return Outcome::Crashed(anyhow!("worker protocol violation: {other:?}"))
+                }
+                Err(e) => return Outcome::Crashed(e.context("malformed worker reply")),
+            }
+        }
+    }
+}
+
+impl Drop for WorkerClient {
+    fn drop(&mut self) {
+        let pid = self.child.id();
+        self.child.kill().ok();
+        self.child.wait().ok();
+        self.pids.lock().expect("pid registry").retain(|p| *p != pid);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, LrSchedule, StrategySpec};
+
+    fn quick_cfg(name: &str, seed: u64) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = name.into();
+        cfg.seed = seed;
+        cfg.nodes = 2;
+        cfg.iters = 30;
+        cfg.batch_per_node = 8;
+        cfg.eval_every = 15;
+        cfg.workload.input_dim = 16;
+        cfg.workload.hidden = 8;
+        cfg.workload.eval_batches = 2;
+        cfg.optim.schedule = LrSchedule::Const;
+        StrategySpec::Constant { period: 3 }.apply_to(&mut cfg.sync);
+        cfg
+    }
+
+    fn specs(n: usize) -> Vec<RunSpec> {
+        (0..n)
+            .map(|i| {
+                let cfg = quick_cfg(&format!("r{i}"), 100 + i as u64);
+                RunSpec { label: format!("r{i}"), cfg }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn thread_pool_merges_deterministically_across_jobs() {
+        let run = |jobs: usize| {
+            Dispatcher::new(DispatchOptions {
+                jobs: Some(jobs),
+                cache_dir: None,
+                ..DispatchOptions::default()
+            })
+            .execute(&specs(6))
+            .unwrap()
+        };
+        let serial = run(1);
+        let parallel = run(4);
+        assert_eq!(serial.len(), 6);
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.report.name, b.report.name);
+            assert_eq!(a.report.final_train_loss, b.report.final_train_loss);
+            assert_eq!(a.report.syncs, b.report.syncs);
+            assert!(!a.from_cache && !b.from_cache);
+        }
+    }
+
+    #[test]
+    fn cache_hit_skips_execution_and_is_bit_identical() {
+        let dir = std::env::temp_dir()
+            .join(format!("adpsgd_pool_cache_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let opts = DispatchOptions {
+            jobs: Some(2),
+            cache_dir: Some(dir.clone()),
+            ..DispatchOptions::default()
+        };
+        let cold = Dispatcher::new(opts.clone()).execute(&specs(3)).unwrap();
+        assert!(cold.iter().all(|r| !r.from_cache));
+        let warm = Dispatcher::new(opts).execute(&specs(3)).unwrap();
+        assert!(warm.iter().all(|r| r.from_cache), "second dispatch must be all hits");
+        for (a, b) in cold.iter().zip(&warm) {
+            let aj = runcache::report_to_json(&a.report).to_string_compact();
+            let bj = runcache::report_to_json(&b.report).to_string_compact();
+            assert_eq!(aj, bj, "cached report must be bit-identical");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failing_run_aborts_and_names_the_label() {
+        let mut runs = specs(2);
+        runs[1].cfg.workload.backend =
+            crate::config::Backend::Native("failing:0:5".into());
+        runs[1].label = "boom".into();
+        runs[1].cfg.name = "boom".into();
+        let err = Dispatcher::new(DispatchOptions {
+            jobs: Some(1),
+            cache_dir: None,
+            ..DispatchOptions::default()
+        })
+        .execute(&runs)
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("boom"), "{msg}");
+        assert!(msg.contains("injected failure"), "{msg}");
+    }
+}

@@ -1,0 +1,259 @@
+//! The `adpsgd worker` wire protocol: line-delimited JSON frames over
+//! stdin/stdout.
+//!
+//! The dispatcher sends [`Frame::RunRequest`] lines (the config rides as
+//! its canonical TOML text, so the worker rebuilds it through the exact
+//! same parser/validator as a `--config` file); the worker answers with
+//! periodic [`Frame::Heartbeat`]s while training and exactly one
+//! terminal [`Frame::RunResult`] (the full report — summary, ledger,
+//! series) or [`Frame::Error`] per request.  A deterministic run failure
+//! travels as an `Error` frame; a *crash* (the child dying) is visible
+//! to the dispatcher as EOF on the pipe, which is what triggers a retry
+//! on another slot.  One worker processes requests sequentially and
+//! exits cleanly on stdin EOF.
+
+use crate::config::{toml::TomlDoc, ExperimentConfig};
+use crate::coordinator::RunReport;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// How often a busy worker proves liveness.
+pub const HEARTBEAT_EVERY: std::time::Duration = std::time::Duration::from_millis(500);
+
+/// One protocol frame.
+#[derive(Debug)]
+pub enum Frame {
+    /// Dispatcher → worker: execute this config.
+    RunRequest { id: u64, cfg: ExperimentConfig },
+    /// Worker → dispatcher: the run finished.
+    RunResult { id: u64, report: RunReport },
+    /// Worker → dispatcher: still alive, still training `id`.
+    Heartbeat { id: u64 },
+    /// Worker → dispatcher: the run failed deterministically.
+    Error { id: u64, message: String },
+}
+
+impl Frame {
+    /// Encode as one newline-terminated JSON line.
+    pub fn to_line(&self) -> Result<String> {
+        let json = match self {
+            Frame::RunRequest { id, cfg } => Json::obj(vec![
+                ("type", Json::str("run_request")),
+                ("id", Json::num(*id as f64)),
+                ("cfg", Json::str(cfg.to_toml_string()?)),
+            ]),
+            Frame::RunResult { id, report } => Json::obj(vec![
+                ("type", Json::str("run_result")),
+                ("id", Json::num(*id as f64)),
+                ("report", super::runcache::report_to_json(report)),
+            ]),
+            Frame::Heartbeat { id } => Json::obj(vec![
+                ("type", Json::str("heartbeat")),
+                ("id", Json::num(*id as f64)),
+            ]),
+            Frame::Error { id, message } => Json::obj(vec![
+                ("type", Json::str("error")),
+                ("id", Json::num(*id as f64)),
+                ("message", Json::str(message.clone())),
+            ]),
+        };
+        Ok(format!("{}\n", json.to_string_compact()))
+    }
+
+    /// Decode one line.
+    pub fn parse(line: &str) -> Result<Frame> {
+        let v = Json::parse(line.trim()).map_err(|e| anyhow!("protocol frame: {e}"))?;
+        let id = v
+            .get("id")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("protocol frame: missing \"id\""))? as u64;
+        let kind = v
+            .get("type")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("protocol frame: missing \"type\""))?;
+        Ok(match kind {
+            "run_request" => {
+                let text = v
+                    .get("cfg")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("run_request: missing \"cfg\""))?;
+                let doc = TomlDoc::parse(text).map_err(|e| anyhow!("run_request cfg: {e}"))?;
+                Frame::RunRequest { id, cfg: ExperimentConfig::from_doc(&doc)? }
+            }
+            "run_result" => Frame::RunResult {
+                id,
+                report: super::runcache::report_from_json(
+                    v.get("report").ok_or_else(|| anyhow!("run_result: missing report"))?,
+                )?,
+            },
+            "heartbeat" => Frame::Heartbeat { id },
+            "error" => Frame::Error {
+                id,
+                message: v
+                    .get("message")
+                    .and_then(Json::as_str)
+                    .unwrap_or("<no message>")
+                    .to_string(),
+            },
+            other => bail!("protocol frame: unknown type {other:?}"),
+        })
+    }
+}
+
+/// The `adpsgd worker` loop: serve run requests from `input` until EOF,
+/// writing heartbeats and terminal frames to `output`.  Frames are
+/// written whole-line under a lock, so the heartbeat thread can never
+/// interleave mid-line with a result.
+pub fn serve(input: impl BufRead, output: impl Write + Send + 'static) -> Result<()> {
+    let out = Arc::new(Mutex::new(output));
+    let write_frame = |frame: &Frame| -> Result<()> {
+        let line = frame.to_line()?;
+        let mut o = out.lock().expect("worker stdout lock");
+        o.write_all(line.as_bytes()).context("writing frame")?;
+        o.flush().context("flushing frame")
+    };
+    for line in input.lines() {
+        let line = line.context("reading request")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (id, cfg) = match Frame::parse(&line) {
+            Ok(Frame::RunRequest { id, cfg }) => (id, cfg),
+            Ok(other) => {
+                bail!("worker: expected a run_request, got {other:?}")
+            }
+            Err(e) => return Err(e.context("worker: malformed request")),
+        };
+        // prove liveness while the (possibly long) run executes
+        let stop = Arc::new(AtomicBool::new(false));
+        let beat = {
+            let stop = Arc::clone(&stop);
+            let out = Arc::clone(&out);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::park_timeout(HEARTBEAT_EVERY);
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    if let Ok(line) = (Frame::Heartbeat { id }).to_line() {
+                        let mut o = out.lock().expect("worker stdout lock");
+                        let _ = o.write_all(line.as_bytes());
+                        let _ = o.flush();
+                    }
+                }
+            })
+        };
+        let result = crate::experiment::Experiment::from_config(cfg)
+            .and_then(crate::experiment::Experiment::run);
+        stop.store(true, Ordering::Relaxed);
+        beat.thread().unpark();
+        beat.join().ok();
+        match result {
+            Ok(report) => write_frame(&Frame::RunResult { id, report })?,
+            Err(e) => write_frame(&Frame::Error { id, message: format!("{e:#}") })?,
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_roundtrip_through_lines() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = "proto_rt".into();
+        cfg.nodes = 3;
+        cfg.sync.qsgd_levels = 15;
+        let line = (Frame::RunRequest { id: 7, cfg: cfg.clone() }).to_line().unwrap();
+        assert!(line.ends_with('\n') && !line[..line.len() - 1].contains('\n'));
+        match Frame::parse(&line).unwrap() {
+            Frame::RunRequest { id, cfg: back } => {
+                assert_eq!(id, 7);
+                assert_eq!(back.name, "proto_rt");
+                assert_eq!(back.nodes, 3);
+                // the canonical text is the equality witness: every
+                // result-affecting knob survived the wire
+                assert_eq!(back.to_toml_string().unwrap(), cfg.to_toml_string().unwrap());
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+
+        let hb = (Frame::Heartbeat { id: 3 }).to_line().unwrap();
+        assert!(matches!(Frame::parse(&hb).unwrap(), Frame::Heartbeat { id: 3 }));
+
+        let err = (Frame::Error { id: 9, message: "boom".into() }).to_line().unwrap();
+        match Frame::parse(&err).unwrap() {
+            Frame::Error { id, message } => {
+                assert_eq!((id, message.as_str()), (9, "boom"));
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+
+        assert!(Frame::parse("{\"type\":\"warp\",\"id\":1}").is_err());
+        assert!(Frame::parse("not json").is_err());
+    }
+
+    #[test]
+    fn serve_runs_a_request_and_reports_errors() {
+        let mut quick = ExperimentConfig::default();
+        quick.name = "serve_ok".into();
+        quick.nodes = 2;
+        quick.iters = 20;
+        quick.batch_per_node = 8;
+        quick.eval_every = 10;
+        quick.workload.input_dim = 16;
+        quick.workload.hidden = 8;
+        quick.workload.eval_batches = 2;
+        quick.optim.schedule = crate::config::LrSchedule::Const;
+        quick.sync.strategy = crate::period::Strategy::Constant;
+        quick.sync.period = 4;
+
+        let mut bad = quick.clone();
+        bad.name = "serve_bad".into();
+        bad.workload.backend = crate::config::Backend::Native("failing:0:5".into());
+
+        let input = format!(
+            "{}{}",
+            (Frame::RunRequest { id: 1, cfg: quick }).to_line().unwrap(),
+            (Frame::RunRequest { id: 2, cfg: bad }).to_line().unwrap(),
+        );
+        let out: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+        struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+        impl Write for SharedBuf {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        serve(input.as_bytes(), SharedBuf(Arc::clone(&out))).unwrap();
+        let bytes = out.lock().unwrap().clone();
+        let text = String::from_utf8(bytes).unwrap();
+        let frames: Vec<Frame> =
+            text.lines().map(|l| Frame::parse(l).unwrap()).collect();
+        let result = frames
+            .iter()
+            .find_map(|f| match f {
+                Frame::RunResult { id: 1, report } => Some(report),
+                _ => None,
+            })
+            .expect("run 1 succeeds");
+        assert_eq!(result.iters, 20);
+        assert_eq!(result.syncs, 5);
+        let msg = frames
+            .iter()
+            .find_map(|f| match f {
+                Frame::Error { id: 2, message } => Some(message.clone()),
+                _ => None,
+            })
+            .expect("run 2 fails deterministically");
+        assert!(msg.contains("injected failure"), "{msg}");
+    }
+}

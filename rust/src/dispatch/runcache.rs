@@ -1,0 +1,430 @@
+//! Persistent, content-addressed run cache: canonical-config digest →
+//! serialized [`RunReport`] on disk.
+//!
+//! The cache key is a digest of the *fully-resolved* config's canonical
+//! text ([`crate::config::ExperimentConfig::to_doc`]) restricted to the
+//! knobs that affect results.  Deliberate cache-busting policy:
+//!
+//! * **hashed** — everything that changes what a run computes or
+//!   reports: seed, cluster geometry, iteration count, workload, optim
+//!   schedule, every strategy knob (nested `[sync.<strategy>]` form),
+//!   the collective algorithm, the network cost model, and the
+//!   eval/variance cadences (they shape the recorded series);
+//! * **content-addressed indirections** — a warm start hashes the
+//!   *bytes* of the resolved `init_from` snapshot, and an HLO workload
+//!   hashes the artifacts `manifest.json` bytes, so editing either
+//!   busts the entry even though the configured path is unchanged;
+//! * **not hashed** — knobs that cannot change results: the run name,
+//!   checkpoint cadence/paths (instrumentation), the artifacts
+//!   *directory path* (its manifest content is hashed instead), and the
+//!   unused `threads` hint.
+//!
+//! A hit reproduces the run's *report*; it does not replay output side
+//! effects (a cached run writes no new checkpoint files — delete the
+//! entry or pass `--no-cache` if you need the snapshots themselves).
+//! The digest keys *configs*, not code: entries written by an older
+//! binary stay valid across rebuilds, so clear the cache directory (or
+//! use a fresh one) after a change to training semantics, like any
+//! content-addressed build cache.
+//!
+//! Entries are single JSON files (`<digest>.run.json`) carrying the
+//! digest, the canonical config text (for debugging and paranoia
+//! re-verification), and the full report — scalar summary, per-kind
+//! communication ledger, and every recorded metric series — so a cache
+//! hit reproduces the original [`RunReport`] bit-for-bit.  A corrupted
+//! or version-skewed entry is discarded (and deleted best-effort), never
+//! trusted.  Writes are atomic (unique temp file + rename), so
+//! concurrent workers that race on the same key leave one valid entry.
+
+use crate::config::{spec, ExperimentConfig};
+use crate::coordinator::RunReport;
+use crate::metrics::Recorder;
+use crate::netsim::CommLedger;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Cache-entry schema version; bump on any layout change.
+const ENTRY_VERSION: f64 = 1.0;
+
+// ----------------------------------------------------------------- digest
+
+fn fnv64(bytes: &[u8], seed: u64) -> u64 {
+    let mut h = seed;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// 128-bit content digest (two independently-seeded FNV-1a streams) as
+/// 32 hex chars.
+pub fn content_digest(bytes: &[u8]) -> String {
+    format!(
+        "{:016x}{:016x}",
+        fnv64(bytes, 0xCBF2_9CE4_8422_2325),
+        fnv64(bytes, 0x9E37_79B9_7F4A_7C15)
+    )
+}
+
+/// The canonical result-affecting text of a config — what
+/// [`cfg_digest`] hashes.  Exposed for tests and cache debugging.
+pub fn cfg_canonical_text(cfg: &ExperimentConfig) -> Result<String> {
+    let mut doc = cfg.to_doc();
+    // incidental knobs: cannot affect the training computation or the
+    // recorded series/ledger
+    for key in ["name", "checkpoint_dir", "checkpoint_every", "artifacts_dir", "threads", "init_from"]
+    {
+        doc.entries.remove(key);
+    }
+    let mut text = doc.render().map_err(|e| anyhow!("canonicalizing config: {e}"))?;
+    if !cfg.init_from.is_empty() {
+        // hash the snapshot *content*, not its path: moving the file is
+        // incidental, editing it is not
+        let p = Path::new(&cfg.init_from);
+        let resolved = if p.is_dir() {
+            crate::checkpoint::Checkpoint::latest(p).ok().flatten()
+        } else {
+            Some(p.to_path_buf())
+        };
+        match resolved.and_then(|f| std::fs::read(f).ok()) {
+            Some(bytes) => {
+                text.push_str(&format!("init_from_digest = \"{}\"\n", content_digest(&bytes)))
+            }
+            // unreadable: fall back to the path (the run will fail with
+            // its own actionable error; the key just has to be distinct)
+            None => text.push_str(&format!("init_from_path = \"{}\"\n", cfg.init_from)),
+        }
+    }
+    if let crate::config::Backend::Hlo(_) = &cfg.workload.backend {
+        let manifest = Path::new(&cfg.artifacts_dir).join("manifest.json");
+        match std::fs::read(&manifest) {
+            Ok(bytes) => text
+                .push_str(&format!("manifest_digest = \"{}\"\n", content_digest(&bytes))),
+            Err(_) => text.push_str(&format!(
+                "manifest_path = \"{}\"\n",
+                manifest.to_string_lossy()
+            )),
+        }
+    }
+    Ok(text)
+}
+
+/// The run-cache key for a fully-resolved config.
+pub fn cfg_digest(cfg: &ExperimentConfig) -> Result<String> {
+    Ok(content_digest(cfg_canonical_text(cfg)?.as_bytes()))
+}
+
+// ---------------------------------------------------- report (de)serialize
+
+/// Full-fidelity [`RunReport`] serialization (unlike
+/// [`RunReport::to_json`], which is a human-facing summary): includes
+/// the per-kind ledger and every recorded series, and round-trips
+/// bit-exactly through [`report_from_json`].
+pub fn report_to_json(report: &RunReport) -> Json {
+    let series = Json::Obj(
+        report
+            .recorder
+            .series
+            .iter()
+            .map(|(name, s)| {
+                let pts = Json::Arr(
+                    s.points
+                        .iter()
+                        .map(|(x, y)| Json::Arr(vec![Json::num(*x), Json::num(*y)]))
+                        .collect(),
+                );
+                (name.clone(), pts)
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("name", Json::str(report.name.clone())),
+        ("strategy", Json::str(spec::canonical_name(report.strategy))),
+        ("nodes", Json::num(report.nodes as f64)),
+        ("iters", Json::num(report.iters as f64)),
+        ("n_params", Json::num(report.n_params as f64)),
+        ("final_train_loss", Json::num(report.final_train_loss)),
+        ("min_train_loss", Json::num(report.min_train_loss)),
+        ("best_eval_acc", Json::num(report.best_eval_acc)),
+        ("final_eval_acc", Json::num(report.final_eval_acc)),
+        ("final_eval_loss", Json::num(report.final_eval_loss)),
+        ("syncs", Json::num(report.syncs as f64)),
+        ("compute_secs", Json::num(report.compute_secs)),
+        ("wall_secs", Json::num(report.wall_secs)),
+        ("ledger", report.ledger.to_json()),
+        ("series", series),
+    ])
+}
+
+/// Rebuild a [`RunReport`] serialized by [`report_to_json`].
+pub fn report_from_json(v: &Json) -> Result<RunReport> {
+    // non-finite floats serialize as JSON null; they come back as the
+    // canonical NaN — exactly what the coordinator's `unwrap_or(NAN)`
+    // readouts produce
+    let float = |key: &str| -> Result<f64> {
+        match v.get(key) {
+            Some(Json::Null) => Ok(f64::NAN),
+            Some(x) => {
+                x.as_f64().ok_or_else(|| anyhow!("report json: {key:?} is not a number"))
+            }
+            None => Err(anyhow!("report json: missing {key:?}")),
+        }
+    };
+    let int = |key: &str| -> Result<u64> { float(key).map(|x| x as u64) };
+    let strategy: crate::period::Strategy = v
+        .get("strategy")
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| anyhow!("report json: missing \"strategy\""))?
+        .parse()?;
+    let ledger = CommLedger::from_json(
+        v.get("ledger").ok_or_else(|| anyhow!("report json: missing \"ledger\""))?,
+    )?;
+    let mut recorder = Recorder::new();
+    let series = v
+        .get("series")
+        .and_then(|x| x.as_obj())
+        .ok_or_else(|| anyhow!("report json: missing \"series\""))?;
+    for (name, pts) in series {
+        let pts =
+            pts.as_arr().ok_or_else(|| anyhow!("report json: series {name:?} not an array"))?;
+        for p in pts {
+            let xy = p
+                .as_arr()
+                .filter(|a| a.len() == 2)
+                .ok_or_else(|| anyhow!("report json: series {name:?} has a malformed point"))?;
+            let coord = |j: &Json| -> f64 {
+                match j {
+                    Json::Null => f64::NAN,
+                    other => other.as_f64().unwrap_or(f64::NAN),
+                }
+            };
+            recorder.push(name, coord(&xy[0]), coord(&xy[1]));
+        }
+    }
+    let iters = int("iters")? as usize;
+    let syncs = int("syncs")?;
+    // recomputed, not parsed: ∞ (a run that never synchronized) has no
+    // JSON representation, and recomputing keeps the hit bit-identical
+    let avg_period = if syncs > 0 { iters as f64 / syncs as f64 } else { f64::INFINITY };
+    Ok(RunReport {
+        name: v
+            .get("name")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| anyhow!("report json: missing \"name\""))?
+            .to_string(),
+        strategy,
+        nodes: int("nodes")? as usize,
+        iters,
+        n_params: int("n_params")? as usize,
+        final_train_loss: float("final_train_loss")?,
+        min_train_loss: float("min_train_loss")?,
+        best_eval_acc: float("best_eval_acc")?,
+        final_eval_acc: float("final_eval_acc")?,
+        final_eval_loss: float("final_eval_loss")?,
+        syncs,
+        avg_period,
+        compute_secs: float("compute_secs")?,
+        wall_secs: float("wall_secs")?,
+        ledger,
+        recorder,
+    })
+}
+
+// ------------------------------------------------------------------ cache
+
+/// A directory of `<digest>.run.json` entries.
+pub struct RunCache {
+    dir: PathBuf,
+}
+
+static TMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+impl RunCache {
+    pub fn new(dir: impl Into<PathBuf>) -> RunCache {
+        RunCache { dir: dir.into() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn path_for(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{key}.run.json"))
+    }
+
+    /// Look up a cached report.  Any defect — unparseable JSON, schema
+    /// version skew, a digest that does not match the file name, a
+    /// report that fails to decode — discards the entry (deleting it
+    /// best-effort) and returns `None`, so a corrupted cache degrades to
+    /// a recompute instead of poisoned results.
+    pub fn get(&self, key: &str) -> Option<RunReport> {
+        let path = self.path_for(key);
+        let text = std::fs::read_to_string(&path).ok()?;
+        match Self::decode(key, &text) {
+            Ok(report) => Some(report),
+            Err(e) => {
+                eprintln!(
+                    "note: discarding corrupt run-cache entry {} ({e:#})",
+                    path.display()
+                );
+                std::fs::remove_file(&path).ok();
+                None
+            }
+        }
+    }
+
+    fn decode(key: &str, text: &str) -> Result<RunReport> {
+        let v = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        if v.get("version").and_then(Json::as_f64) != Some(ENTRY_VERSION) {
+            return Err(anyhow!("cache entry version skew"));
+        }
+        let stored = v
+            .get("cfg_hash")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("missing cfg_hash"))?;
+        if stored != key {
+            return Err(anyhow!("cfg_hash {stored:?} does not match entry name"));
+        }
+        report_from_json(v.get("report").ok_or_else(|| anyhow!("missing report"))?)
+    }
+
+    /// Store a finished run under `key`.  `cfg_canonical` is the hashed
+    /// canonical text, stored alongside for debugging and hash-collision
+    /// forensics.
+    pub fn put(&self, key: &str, cfg_canonical: &str, report: &RunReport) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating run cache {}", self.dir.display()))?;
+        let entry = Json::obj(vec![
+            ("version", Json::num(ENTRY_VERSION)),
+            ("cfg_hash", Json::str(key)),
+            ("cfg", Json::str(cfg_canonical)),
+            ("report", report_to_json(report)),
+        ]);
+        let path = self.path_for(key);
+        // unique temp name: concurrent writers of the same key must not
+        // clobber each other's half-written files
+        let tmp = self.dir.join(format!(
+            ".{key}.{}.{}.tmp",
+            std::process::id(),
+            TMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, entry.to_string_compact())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing {}", path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml::TomlDoc;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("adpsgd_runcache_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn digest_stable_across_key_ordering() {
+        // the same resolved config from differently-ordered documents
+        let a = TomlDoc::parse(
+            "nodes = 4\nseed = 9\n\n[sync]\nstrategy = \"adaptive\"\n\n[sync.adaptive]\np_init = 3\nks_frac = 0.2",
+        )
+        .unwrap();
+        let b = TomlDoc::parse(
+            "seed = 9\nnodes = 4\n\n[sync.adaptive]\nks_frac = 0.2\np_init = 3\n\n[sync]\nstrategy = \"adaptive\"",
+        )
+        .unwrap();
+        let ca = ExperimentConfig::from_doc(&a).unwrap();
+        let cb = ExperimentConfig::from_doc(&b).unwrap();
+        assert_eq!(cfg_digest(&ca).unwrap(), cfg_digest(&cb).unwrap());
+    }
+
+    #[test]
+    fn digest_ignores_incidental_knobs() {
+        let base = ExperimentConfig::default();
+        let d0 = cfg_digest(&base).unwrap();
+        let mut c = base.clone();
+        c.name = "renamed".into();
+        c.checkpoint_every = 500;
+        c.checkpoint_dir = "/elsewhere".into();
+        c.threads = 7;
+        assert_eq!(cfg_digest(&c).unwrap(), d0, "output knobs must not bust the cache");
+    }
+
+    #[test]
+    fn digest_busts_on_every_result_affecting_knob() {
+        let base = ExperimentConfig::default();
+        let d0 = cfg_digest(&base).unwrap();
+        let busts: Vec<(&str, Box<dyn Fn(&mut ExperimentConfig)>)> = vec![
+            ("seed", Box::new(|c| c.seed += 1)),
+            ("nodes", Box::new(|c| c.nodes += 1)),
+            ("iters", Box::new(|c| c.iters += 1)),
+            ("batch", Box::new(|c| c.batch_per_node += 1)),
+            ("eval cadence", Box::new(|c| c.eval_every += 1)),
+            ("strategy", Box::new(|c| c.sync.strategy = crate::period::Strategy::Constant)),
+            ("strategy knob", Box::new(|c| c.sync.p_init += 1)),
+            ("foreign table knob", Box::new(|c| c.sync.qsgd_levels = 15)),
+            ("collective", Box::new(|c| c.sync.collective = crate::collective::Algo::Flat)),
+            ("bandwidth", Box::new(|c| c.net.bandwidth_gbps = 10.0)),
+            ("lr", Box::new(|c| c.optim.lr0 = 0.2)),
+            ("workload", Box::new(|c| c.workload.hidden += 1)),
+        ];
+        for (what, bust) in busts {
+            let mut c = base.clone();
+            bust(&mut c);
+            assert_ne!(cfg_digest(&c).unwrap(), d0, "{what} must bust the cache");
+        }
+    }
+
+    #[test]
+    fn digest_follows_init_from_content_not_path() {
+        let dir = tmpdir("init");
+        let ck = |seed: f32| crate::checkpoint::Checkpoint::new(5, 0.0, vec![seed; 8]);
+        let p1 = dir.join("a.adpk");
+        let p2 = dir.join("b.adpk");
+        ck(0.5).save(&p1).unwrap();
+        ck(0.5).save(&p2).unwrap();
+        let mut c1 = ExperimentConfig::default();
+        c1.init_from = p1.to_str().unwrap().into();
+        let mut c2 = c1.clone();
+        c2.init_from = p2.to_str().unwrap().into();
+        assert_eq!(
+            cfg_digest(&c1).unwrap(),
+            cfg_digest(&c2).unwrap(),
+            "same snapshot bytes at a different path must hit"
+        );
+        ck(0.75).save(&p2).unwrap();
+        assert_ne!(
+            cfg_digest(&c1).unwrap(),
+            cfg_digest(&c2).unwrap(),
+            "different snapshot bytes must bust"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_entries_are_discarded() {
+        let dir = tmpdir("corrupt");
+        let cache = RunCache::new(&dir);
+        let key = "00112233445566778899aabbccddeeff";
+        std::fs::write(cache.path_for(key), b"{ not json").unwrap();
+        assert!(cache.get(key).is_none(), "garbage must miss");
+        assert!(!cache.path_for(key).exists(), "garbage must be deleted");
+        // wrong embedded hash is a defect too
+        std::fs::write(
+            cache.path_for(key),
+            r#"{"version":1,"cfg_hash":"deadbeef","cfg":"","report":{}}"#,
+        )
+        .unwrap();
+        assert!(cache.get(key).is_none(), "hash mismatch must miss");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -4,27 +4,30 @@
 //!
 //! A campaign *describes* every run up front ([`CampaignBuilder::build`]
 //! materializes the cross product into labeled, validated
-//! [`RunSpec`]s), then [`Campaign::run`] executes them through the
-//! session API.  Because runs are fully independent coordinator
-//! clusters, the scheduler can run several at once — results are
-//! deterministic and ordered regardless of the parallelism level, and
-//! datasets/manifests are shared across runs through the process-wide
-//! caches ([`crate::data::cache`],
-//! [`crate::runtime::Manifest::load_cached`]).
+//! [`RunSpec`]s), then hands them to the [`crate::dispatch`] subsystem:
+//! [`Campaign::run`] uses the conservative in-process profile, while
+//! [`Campaign::execute`] takes an explicit
+//! [`crate::dispatch::DispatchOptions`] (job count, thread vs
+//! `adpsgd worker` subprocess slots, persistent run cache).  Because
+//! runs are fully independent coordinator clusters, the pool can run
+//! several at once — results are deterministic and ordered regardless
+//! of the parallelism level or worker kind, already-cached runs are
+//! answered without training, and datasets/manifests are shared across
+//! in-process runs through the process-wide caches
+//! ([`crate::data::cache`], [`crate::runtime::Manifest::load_cached`]).
 //!
 //! Every `figures/*` module is a campaign definition plus
 //! post-processing; `adpsgd campaign` exposes the same axes on the
 //! command line.
 
-use super::Experiment;
 use crate::collective::Algo;
 use crate::config::{ExperimentConfig, NetConfig, StrategySpec};
 use crate::coordinator::RunReport;
+use crate::dispatch::{DispatchOptions, Dispatcher};
 use crate::metrics::Table;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 type Patch = Arc<dyn Fn(&mut ExperimentConfig) + Send + Sync>;
 
@@ -100,58 +103,39 @@ impl Campaign {
         self
     }
 
-    /// Execute every run with at most `parallelism` concurrent runs.
-    /// Reports come back in declaration order; the first failing run
-    /// aborts the campaign (remaining queued runs are not started,
-    /// in-flight ones finish).
+    /// Execute every run with at most `parallelism` concurrent
+    /// in-process runs — the conservative profile: thread workers, the
+    /// process-default run cache (usually disabled; see
+    /// [`crate::dispatch::default_cache_dir`]).  Reports come back in
+    /// declaration order; the first failing run aborts the campaign
+    /// (remaining queued runs are not started, in-flight ones finish).
     pub fn run(&self) -> Result<CampaignReport> {
-        let n = self.runs.len();
-        if n == 0 {
+        self.execute(&DispatchOptions::in_process(self.parallelism))
+    }
+
+    /// Execute through an explicit dispatch profile: job count, thread
+    /// vs subprocess workers, run-cache directory, crash retries (see
+    /// [`crate::dispatch`]).  Results are identical to [`Campaign::run`]
+    /// for any profile — parallelism, worker kind, and cache hits
+    /// change wall-clock, never reports.
+    pub fn execute(&self, opts: &DispatchOptions) -> Result<CampaignReport> {
+        if self.runs.is_empty() {
             bail!("campaign {:?} has no runs", self.name);
         }
         let wall = std::time::Instant::now();
-        let workers = self.parallelism.clamp(1, n);
-        let next = AtomicUsize::new(0);
-        let failed = std::sync::atomic::AtomicBool::new(false);
-        let slots: Vec<Mutex<Option<Result<RunReport>>>> =
-            (0..n).map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    if failed.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let spec = &self.runs[i];
-                    let res = Experiment::from_config(spec.cfg.clone())
-                        .and_then(Experiment::run)
-                        .with_context(|| {
-                            format!("campaign {:?} run {:?}", self.name, spec.label)
-                        });
-                    if res.is_err() {
-                        failed.store(true, Ordering::Relaxed);
-                    }
-                    *slots[i].lock().expect("campaign slot lock") = Some(res);
-                });
-            }
-        });
-        let mut runs = Vec::with_capacity(n);
-        for (i, slot) in slots.into_iter().enumerate() {
-            match slot.into_inner().expect("campaign slot lock") {
-                Some(Ok(report)) => {
-                    runs.push(CampaignRunResult { label: self.runs[i].label.clone(), report })
-                }
-                Some(Err(e)) => return Err(e),
-                None => bail!(
-                    "campaign {:?}: run {:?} was skipped after an earlier failure",
-                    self.name,
-                    self.runs[i].label
-                ),
-            }
-        }
+        let dispatched = Dispatcher::new(opts.clone())
+            .execute(&self.runs)
+            .with_context(|| format!("campaign {:?}", self.name))?;
+        let runs = self
+            .runs
+            .iter()
+            .zip(dispatched)
+            .map(|(spec, d)| CampaignRunResult {
+                label: spec.label.clone(),
+                report: d.report,
+                from_cache: d.from_cache,
+            })
+            .collect();
         Ok(CampaignReport {
             name: self.name.clone(),
             wall_secs: wall.elapsed().as_secs_f64(),
@@ -320,6 +304,8 @@ impl CampaignBuilder {
 pub struct CampaignRunResult {
     pub label: String,
     pub report: RunReport,
+    /// whether the report came from the run cache (no training executed)
+    pub from_cache: bool,
 }
 
 /// Everything a finished campaign reports.
@@ -361,6 +347,11 @@ impl CampaignReport {
 
     pub fn runs_per_sec(&self) -> f64 {
         self.runs.len() as f64 / self.wall_secs.max(1e-12)
+    }
+
+    /// How many runs were answered by the run cache.
+    pub fn cache_hits(&self) -> usize {
+        self.runs.iter().filter(|r| r.from_cache).count()
     }
 
     /// Total modeled communication across all runs (each priced under
@@ -415,12 +406,30 @@ impl CampaignReport {
         Json::obj(vec![
             ("campaign", Json::str(self.name.clone())),
             ("runs", Json::num(self.runs.len() as f64)),
+            ("cache_hits", Json::num(self.cache_hits() as f64)),
             ("wall_secs", Json::num(self.wall_secs)),
             ("runs_per_sec", Json::num(self.runs_per_sec())),
             ("total_modeled_comm_secs", Json::num(self.total_modeled_comm_secs())),
             ("total_wire_bytes", Json::num(self.total_wire_bytes() as f64)),
             ("run_summaries", runs),
         ])
+    }
+
+    /// [`Self::to_json`] minus the per-invocation volatile keys (this
+    /// host's wall clock and hit count): the *stable* summary.  Because
+    /// cached reports are bit-identical to the originals, a campaign
+    /// re-executed against a warm cache produces byte-identical stable
+    /// JSON — what `adpsgd campaign` writes to `<name>.campaign.json`
+    /// and what the verify script compares cold vs warm.
+    pub fn to_json_stable(&self) -> Json {
+        let mut obj = match self.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("campaign summary is an object"),
+        };
+        for volatile in ["wall_secs", "runs_per_sec", "cache_hits"] {
+            obj.remove(volatile);
+        }
+        Json::Obj(obj)
     }
 }
 
@@ -588,6 +597,40 @@ mod tests {
             );
             assert_eq!(a.report.syncs, b.report.syncs, "{}", a.label);
         }
+    }
+
+    #[test]
+    fn cached_campaign_is_all_hits_and_byte_identical() {
+        let dir = std::env::temp_dir()
+            .join(format!("adpsgd_campaign_cache_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let build = || {
+            Campaign::builder("t", tiny_base())
+                .strategy("cpsgd", StrategySpec::Constant { period: 4 })
+                .strategy("full", StrategySpec::Full)
+                .build()
+                .unwrap()
+        };
+        let opts = DispatchOptions {
+            jobs: Some(2),
+            cache_dir: Some(dir.clone()),
+            ..DispatchOptions::default()
+        };
+        let cold = build().execute(&opts).unwrap();
+        assert_eq!(cold.cache_hits(), 0);
+        let warm = build().execute(&opts).unwrap();
+        assert_eq!(warm.cache_hits(), 2, "re-execution must perform zero training");
+        assert_eq!(
+            cold.to_json_stable().to_string_compact(),
+            warm.to_json_stable().to_string_compact(),
+            "stable summary must be byte-identical across cold/warm"
+        );
+        // volatile keys stay out of the stable form but in the live one
+        let live = warm.to_json().to_string_compact();
+        assert!(live.contains("cache_hits"), "{live}");
+        let stable = warm.to_json_stable().to_string_compact();
+        assert!(!stable.contains("runs_per_sec") && !stable.contains("cache_hits"), "{stable}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

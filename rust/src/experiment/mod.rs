@@ -364,12 +364,11 @@ mod tests {
     }
 
     #[test]
-    fn experiment_matches_deprecated_trainer() {
+    fn builder_and_from_config_agree() {
         let exp = quick_builder().strategy(StrategySpec::Constant { period: 4 }).build().unwrap();
         let cfg = exp.config().clone();
         let a = exp.run().unwrap();
-        #[allow(deprecated)]
-        let b = crate::coordinator::Trainer::new(cfg).unwrap().run().unwrap();
+        let b = Experiment::from_config(cfg).unwrap().run().unwrap();
         assert_eq!(a.final_train_loss, b.final_train_loss);
         assert_eq!(a.syncs, b.syncs);
     }

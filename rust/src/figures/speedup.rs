@@ -46,8 +46,8 @@ pub fn calibrate_step_secs(base: &ExperimentConfig, calib_iters: usize) -> Resul
     cfg.iters = calib_iters;
     cfg.eval_every = 0;
     cfg.variance_every = 0;
-    cfg.sync.strategy = Strategy::Constant;
-    cfg.sync.period = usize::MAX / 2; // never sync; pure compute
+    // never sync; pure compute
+    StrategySpec::Constant { period: usize::MAX / 2 }.apply_to(&mut cfg.sync);
     cfg.name = "calibrate".into();
     let rep = Experiment::from_config(cfg)?.run()?;
     Ok(rep.compute_secs / calib_iters as f64)

@@ -108,8 +108,17 @@
 //! println!("{}", report.table().render());
 //! ```
 //!
-//! The deprecated `Trainer::new(cfg)?.run()` front-door remains as a
-//! thin shim over the session API.
+//! Campaign execution routes through the [`dispatch`] subsystem: a
+//! persistent content-addressed run cache (same resolved config →
+//! cached [`coordinator::RunReport`], bit-identical), a work-stealing
+//! pool of in-process threads or `adpsgd worker` subprocesses (a
+//! line-delimited JSON protocol; crashed workers retry on another
+//! slot), and a deterministic merge — so `--jobs 8` and a warm cache
+//! change wall-clock, never results.  See [`dispatch`] for the
+//! experiment → dispatch → coordinator layering.
+//!
+//! (The historical `Trainer::new(cfg)?.run()` front-door is gone; every
+//! caller goes through [`experiment::Experiment`] now.)
 
 pub mod analysis;
 pub mod checkpoint;
@@ -118,6 +127,7 @@ pub mod collective;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dispatch;
 pub mod experiment;
 pub mod figures;
 pub mod metrics;
@@ -132,6 +142,6 @@ pub mod util;
 pub mod workload;
 
 pub use config::{ExperimentConfig, StrategySpec};
-pub use coordinator::{RunReport, Trainer};
+pub use coordinator::RunReport;
 pub use experiment::{Campaign, Experiment};
 pub use period::Strategy;

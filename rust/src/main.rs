@@ -2,22 +2,27 @@
 //!
 //! ```text
 //! adpsgd run      [--config exp.toml] [--sync.strategy=adpsgd] [--nodes 16] ...
-//! adpsgd campaign [--strategies full,cpsgd,adpsgd,qsgd] [--collectives ring,flat] ...
-//! adpsgd figures  [--only fig1,fig4,...] [--quick] [--out results]
+//! adpsgd campaign [--strategies full,cpsgd,adpsgd,qsgd] [--jobs 8]
+//!                 [--workers subprocess] [--cache-dir DIR] ...
+//! adpsgd figures  [--only fig1,fig4,...] [--quick] [--cache-dir DIR] [--out results]
 //! adpsgd models   [--artifacts artifacts]
+//! adpsgd worker
 //! adpsgd help
 //! ```
 //!
 //! `run` executes one experiment described by a TOML config plus dotted
 //! CLI overrides (through the session API); `campaign` executes a
-//! declarative strategy × nodes × bandwidth × collective sweep and
+//! declarative strategy × nodes × bandwidth × collective sweep through
+//! the dispatch subsystem (worker pool + persistent run cache) and
 //! writes a JSON summary; `figures` regenerates every paper
 //! table/figure (see DESIGN.md §4); `models` lists the AOT artifacts
-//! the PJRT runtime can load.
+//! the PJRT runtime can load; `worker` is the subprocess end of the
+//! dispatcher's line-delimited JSON protocol (not for interactive use).
 
 use adpsgd::cli::Args;
 use adpsgd::collective::Algo;
 use adpsgd::config::{ExperimentConfig, NetConfig, StrategySpec};
+use adpsgd::dispatch::{self, DispatchOptions, WorkerKind};
 use adpsgd::experiment::{Campaign, Experiment};
 use adpsgd::figures::{self, Scale, Sink};
 use adpsgd::period::Strategy;
@@ -31,9 +36,12 @@ USAGE:
                     [--key.subkey=value ...]
     adpsgd campaign [--config FILE] [--name NAME] [--strategies LIST]
                     [--sweep-nodes LIST] [--bandwidths LIST] [--collectives LIST]
-                    [--parallel N] [--quick] [--json] [--out DIR]
-    adpsgd figures  [--only LIST] [--quick] [--out DIR]
+                    [--jobs N] [--workers thread|subprocess]
+                    [--cache-dir DIR] [--no-cache] [--retries N]
+                    [--quick] [--json] [--out DIR]
+    adpsgd figures  [--only LIST] [--quick] [--cache-dir DIR] [--out DIR]
     adpsgd models   [--artifacts DIR]
+    adpsgd worker   (dispatcher subprocess; speaks JSONL on stdin/stdout)
     adpsgd help
 
 RUN OVERRIDES (dotted keys mirror the TOML schema):
@@ -59,16 +67,39 @@ CAMPAIGN (cartesian sweep; every run is a full coordinator cluster):
     --sweep-nodes 4,8,16                   optional   cluster-size axis
     --bandwidths  100,10                   optional   Gbps axis (100 and 10
                                            use the paper's latency presets)
-    --parallel 2                           concurrent runs (default 2)
+    --jobs N                               concurrent run slots
+                                           (default min(cores, runs);
+                                           --parallel N is a legacy alias)
+    --workers {thread|subprocess}          run slots in-process (default) or
+                                           as `adpsgd worker` children over a
+                                           line-delimited JSON protocol;
+                                           crashed children are retried on
+                                           another slot (--retries, default 3)
+    --cache-dir DIR                        persistent content-addressed run
+                                           cache: the same fully-resolved run
+                                           config (strategy knobs, seed,
+                                           geometry, collective, network, and
+                                           snapshot/manifest *content*) is
+                                           answered from disk bit-identically
+                                           with zero training; any
+                                           result-affecting knob busts the key
+                                           ($ADPSGD_RUN_CACHE sets a default)
+    --no-cache                             ignore any default cache dir
     --quick                                small base geometry (no --config)
     --out DIR                              writes <name>.campaign.json there
+                                           (the *stable* summary: re-running
+                                           against a warm cache is
+                                           byte-identical)
     Dotted overrides patch the base config like `run`; strategy knobs
     are accepted for ANY swept strategy, e.g.
     `--strategies adpsgd,qsgd --sync.qsgd.levels 15`.
+    The merged results are deterministic for any --jobs/--workers level.
 
 FIGURES:
     --only fig1,fig2,fig4,fig5,fig6,fig7,fig8,table1,sec5b,ablation  (default: all)
     --quick        shrink every axis (seconds instead of minutes)
+    --cache-dir DIR  run cache shared by every figure campaign (regenerating
+                   a subset of figures reuses the others' finished runs)
     --out DIR      write the CSV series behind each panel
 ";
 
@@ -80,12 +111,17 @@ fn main() {
 }
 
 fn real_main() -> Result<()> {
-    let args = Args::parse_env(&["quick", "quiet", "json", "series"])?;
+    let args = Args::parse_env(&["quick", "quiet", "json", "series", "no-cache"])?;
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("campaign") => cmd_campaign(&args),
         Some("figures") => cmd_figures(&args),
         Some("models") => cmd_models(&args),
+        // the dispatcher's subprocess end: serve run requests over
+        // stdin/stdout until EOF
+        Some("worker") => {
+            adpsgd::dispatch::proto::serve(std::io::stdin().lock(), std::io::stdout())
+        }
         Some("help") | None => {
             print!("{HELP}");
             Ok(())
@@ -185,10 +221,46 @@ fn csv_list(args: &Args, key: &str) -> Option<Vec<String>> {
     })
 }
 
+/// Dispatch profile from the campaign flags: `--jobs` (with the legacy
+/// `--parallel` alias), `--workers`, `--cache-dir`/`--no-cache`,
+/// `--retries`.
+fn dispatch_options(args: &Args) -> Result<DispatchOptions> {
+    let mut opts = DispatchOptions::default();
+    opts.jobs = match (args.get("jobs"), args.get("parallel")) {
+        (Some(j), _) => Some(j.parse::<usize>().context("--jobs")?),
+        (None, Some(p)) => Some(p.parse::<usize>().context("--parallel")?),
+        (None, None) => None, // min(cores, runs)
+    };
+    opts.workers = match args.get_or("workers", "thread") {
+        "thread" => WorkerKind::Thread,
+        "subprocess" => WorkerKind::Subprocess,
+        other => bail!("--workers must be thread|subprocess, got {other:?}"),
+    };
+    if args.flag("no-cache") {
+        opts.cache_dir = None;
+    } else if let Some(dir) = args.get("cache-dir") {
+        opts.cache_dir = Some(dir.into());
+    }
+    opts.max_attempts = args.get_usize("retries", opts.max_attempts)?.max(1);
+    Ok(opts)
+}
+
 fn cmd_campaign(args: &Args) -> Result<()> {
     reject_unknown_options(
         args,
-        &["config", "out", "strategies", "sweep-nodes", "bandwidths", "collectives", "parallel"],
+        &[
+            "config",
+            "out",
+            "strategies",
+            "sweep-nodes",
+            "bandwidths",
+            "collectives",
+            "parallel",
+            "jobs",
+            "workers",
+            "cache-dir",
+            "retries",
+        ],
     )?;
     let overrides = cli_overrides(args);
     let strategy_names = csv_list(args, "strategies")
@@ -258,29 +330,38 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         collective_names.iter().map(|c| c.parse()).collect::<Result<_>>()?;
     builder = builder.collectives(&algos);
 
-    let parallel = args.get_usize("parallel", 2)?;
-    let campaign = builder.parallelism(parallel).build()?;
+    let opts = dispatch_options(args)?;
+    let campaign = builder.build()?;
 
     let json_out = args.flag("json");
     if !json_out {
+        let jobs = opts
+            .jobs
+            .map(|j| j.to_string())
+            .unwrap_or_else(|| "min(cores, runs)".into());
         println!(
-            "campaign {name}: {} runs ({} strategies × axes), {} concurrent",
+            "campaign {name}: {} runs ({} strategies × axes), jobs={jobs}, workers={:?}{}",
             campaign.len(),
             strategy_names.len(),
-            parallel
+            opts.workers,
+            opts.cache_dir
+                .as_ref()
+                .map(|d| format!(", cache={}", d.display()))
+                .unwrap_or_default(),
         );
     }
-    let report = campaign.run().context("campaign failed")?;
+    let report = campaign.execute(&opts).context("campaign failed")?;
 
     if json_out {
         println!("{}", report.to_json().to_string_compact());
     } else {
         println!("{}", report.table().render());
         println!(
-            "campaign {name}: {} runs in {} ({:.2} runs/sec), total modeled comm {}",
+            "campaign {name}: {} runs in {} ({:.2} runs/sec, {} cache hits), total modeled comm {}",
             report.runs.len(),
             adpsgd::util::fmt::secs(report.wall_secs),
             report.runs_per_sec(),
+            report.cache_hits(),
             adpsgd::util::fmt::secs(report.total_modeled_comm_secs()),
         );
     }
@@ -289,7 +370,8 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     std::fs::create_dir_all(&out_dir)
         .with_context(|| format!("creating {}", out_dir.display()))?;
     let path = out_dir.join(format!("{name}.campaign.json"));
-    std::fs::write(&path, report.to_json().to_string_compact())
+    // the stable summary: byte-identical when re-run against a warm cache
+    std::fs::write(&path, report.to_json_stable().to_string_compact())
         .with_context(|| format!("writing {}", path.display()))?;
     if !json_out {
         println!("wrote {}", path.display());
@@ -298,7 +380,12 @@ fn cmd_campaign(args: &Args) -> Result<()> {
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {
-    reject_unknown_options(args, &["only", "out"])?;
+    reject_unknown_options(args, &["only", "out", "cache-dir"])?;
+    // every figure campaign goes through Campaign::run, which consults
+    // the process-default cache — one flag memoizes all six
+    if let Some(dir) = args.get("cache-dir") {
+        dispatch::set_default_cache_dir(Some(dir.into()));
+    }
     let scale = Scale::from_flag(args.flag("quick"));
     let sink = Sink::new(args.get("out"), args.flag("quiet"));
     let only: Vec<String> = args

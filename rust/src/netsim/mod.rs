@@ -367,6 +367,71 @@ impl CommLedger {
         self.totals.get(Self::kind_name(kind)).map(|e| e.1).unwrap_or(0)
     }
 
+    /// Serialize the full ledger (per-kind counts, bottleneck-link wire
+    /// bytes, and modeled seconds) for the dispatch layer's run cache
+    /// and worker wire format.  Round-trips through
+    /// [`CommLedger::from_json`] bit-exactly for counts/bytes below
+    /// 2⁵³ (JSON numbers are f64).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let totals = Json::Obj(
+            self.totals
+                .iter()
+                .map(|(name, (count, wire, secs))| {
+                    (
+                        name.to_string(),
+                        Json::Arr(vec![
+                            Json::num(*count as f64),
+                            Json::num(*wire as f64),
+                            Json::num(*secs),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("n", Json::num(self.n as f64)),
+            ("syncs", Json::num(self.syncs as f64)),
+            ("algo", Json::str(self.algo.to_string())),
+            ("totals", totals),
+        ])
+    }
+
+    /// Rebuild a ledger serialized by [`CommLedger::to_json`].
+    pub fn from_json(v: &crate::util::json::Json) -> anyhow::Result<CommLedger> {
+        use anyhow::{anyhow, bail};
+        let num = |key: &str| -> anyhow::Result<f64> {
+            v.get(key)
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| anyhow!("ledger json: missing number {key:?}"))
+        };
+        let algo: Algo = v
+            .get("algo")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| anyhow!("ledger json: missing \"algo\""))?
+            .parse()?;
+        let mut ledger = CommLedger::with_algo(num("n")? as usize, algo);
+        ledger.syncs = num("syncs")? as u64;
+        let totals = v
+            .get("totals")
+            .and_then(|x| x.as_obj())
+            .ok_or_else(|| anyhow!("ledger json: missing \"totals\""))?;
+        const KIND_NAMES: [&'static str; 5] =
+            ["param_avg", "grad_allreduce", "quant_allgather", "sparse_ps", "scalar_stat"];
+        for (name, entry) in totals {
+            let Some(stat) = KIND_NAMES.iter().copied().find(|k| *k == name.as_str()) else {
+                bail!("ledger json: unknown exchange kind {name:?}");
+            };
+            let arr = entry
+                .as_arr()
+                .filter(|a| a.len() == 3)
+                .ok_or_else(|| anyhow!("ledger json: {name:?} is not a [count, wire, secs] triple"))?;
+            let f = |i: usize| arr[i].as_f64().ok_or_else(|| anyhow!("ledger json: {name:?}[{i}]"));
+            ledger.totals.insert(stat, (f(0)? as u64, f(1)? as u64, f(2)?));
+        }
+        Ok(ledger)
+    }
+
     pub fn summary(&self) -> String {
         let mut s = String::new();
         for (name, (count, bytes, secs)) in &self.totals {
@@ -473,6 +538,36 @@ mod tests {
         let mut d = CommLedger::new(8);
         d.record(&net, CommKind::ParamAvg, 8, payload);
         assert_eq!(d.total_wire_bytes(), ring.total_wire_bytes());
+    }
+
+    #[test]
+    fn ledger_json_roundtrip_is_exact() {
+        let net = ib();
+        let mut led = CommLedger::with_algo(8, Algo::Flat);
+        led.record(&net, CommKind::ParamAvg, 8, 4 * 1_000_000);
+        led.record(&net, CommKind::ScalarStat, 8, 4);
+        led.record(&net, CommKind::QuantAllgather, 8, 123_457);
+        let text = led.to_json().to_string_compact();
+        let back =
+            CommLedger::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.n, led.n);
+        assert_eq!(back.syncs, led.syncs);
+        assert_eq!(back.algo, led.algo);
+        for kind in [
+            CommKind::ParamAvg,
+            CommKind::GradAllreduce,
+            CommKind::QuantAllgather,
+            CommKind::SparsePs,
+            CommKind::ScalarStat,
+        ] {
+            assert_eq!(back.count(kind), led.count(kind), "{kind:?}");
+            assert_eq!(back.bytes(kind), led.bytes(kind), "{kind:?}");
+            assert_eq!(back.secs(kind).to_bits(), led.secs(kind).to_bits(), "{kind:?}");
+        }
+        // corrupted shapes are rejected, not trusted
+        assert!(CommLedger::from_json(&crate::util::json::Json::parse("{}").unwrap()).is_err());
+        let bad = r#"{"algo":"ring","n":2,"syncs":1,"totals":{"mesh_avg":[1,2,3.0]}}"#;
+        assert!(CommLedger::from_json(&crate::util::json::Json::parse(bad).unwrap()).is_err());
     }
 
     #[test]

@@ -75,6 +75,27 @@ impl std::fmt::Display for Strategy {
     }
 }
 
+/// Snapshot of a period controller's adaptive state, carried inside
+/// parameter checkpoints so a warm start resumes Algorithm 2 *exactly*:
+/// the sampled `C₂` running average and the current period `p` survive
+/// the restart instead of being re-seeded from the first post-resume
+/// sync.
+///
+/// The fields are a superset: schedule-only controllers use `period`
+/// and `cnt` (the phase inside the current period) and leave the C₂
+/// fields zero.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CtrlState {
+    /// current averaging period p
+    pub period: u64,
+    /// iterations into the current period (sync-counter phase)
+    pub cnt: u64,
+    /// ADPSGD: the sampled C₂ running average (Algorithm 2 line 14)
+    pub c2: f64,
+    /// ADPSGD: how many samples the running average has absorbed
+    pub c2_samples: u64,
+}
+
 /// Decides, after each local update `k`, whether to synchronize now, and
 /// adapts from the post-sync feedback `(S_k, γ_k)`.
 ///
@@ -96,6 +117,17 @@ pub trait PeriodController: Send {
     fn current_period(&self) -> usize;
 
     fn name(&self) -> &'static str;
+
+    /// Snapshot the controller's adaptive state for a checkpoint.
+    /// `None` (the default) means the controller is stateless beyond its
+    /// configuration and needs nothing restored.
+    fn snapshot(&self) -> Option<CtrlState> {
+        None
+    }
+
+    /// Restore a state previously produced by [`Self::snapshot`] (from a
+    /// checkpoint of the same strategy).  The default ignores it.
+    fn restore(&mut self, _state: &CtrlState) {}
 }
 
 // ---------------------------------------------------------------- constant
@@ -133,6 +165,18 @@ impl PeriodController for Constant {
 
     fn name(&self) -> &'static str {
         "constant"
+    }
+
+    fn snapshot(&self) -> Option<CtrlState> {
+        Some(CtrlState { period: self.p as u64, cnt: self.cnt as u64, ..CtrlState::default() })
+    }
+
+    fn restore(&mut self, state: &CtrlState) {
+        // p is configuration; only the phase inside the period resumes.
+        // Clamp by modulo: a snapshot taken under a larger period (or a
+        // resume that lowers `p`) must not leave cnt >= p, which would
+        // never equal p in should_sync and silence syncing entirely.
+        self.cnt = state.cnt as usize % self.p;
     }
 }
 
@@ -223,6 +267,22 @@ impl PeriodController for Adaptive {
     fn name(&self) -> &'static str {
         "adaptive"
     }
+
+    fn snapshot(&self) -> Option<CtrlState> {
+        Some(CtrlState {
+            period: self.p as u64,
+            cnt: self.cnt as u64,
+            c2: self.c2,
+            c2_samples: self.c2_samples,
+        })
+    }
+
+    fn restore(&mut self, state: &CtrlState) {
+        self.p = (state.period as usize).max(1);
+        self.cnt = state.cnt as usize;
+        self.c2 = state.c2;
+        self.c2_samples = state.c2_samples;
+    }
 }
 
 // -------------------------------------------------------------- decreasing
@@ -272,6 +332,18 @@ impl PeriodController for Decreasing {
 
     fn name(&self) -> &'static str {
         "decreasing"
+    }
+
+    fn snapshot(&self) -> Option<CtrlState> {
+        Some(CtrlState {
+            period: self.first as u64,
+            cnt: self.cnt as u64,
+            ..CtrlState::default()
+        })
+    }
+
+    fn restore(&mut self, state: &CtrlState) {
+        self.cnt = state.cnt as usize;
     }
 }
 
@@ -355,6 +427,18 @@ impl PeriodController for Piecewise {
 
     fn name(&self) -> &'static str {
         "piecewise"
+    }
+
+    fn snapshot(&self) -> Option<CtrlState> {
+        Some(CtrlState {
+            period: self.segments[0].1 as u64,
+            cnt: self.cnt as u64,
+            ..CtrlState::default()
+        })
+    }
+
+    fn restore(&mut self, state: &CtrlState) {
+        self.cnt = state.cnt as usize;
     }
 }
 
@@ -472,6 +556,71 @@ mod tests {
             k += 1;
         }
         assert_eq!(a.current_period(), 1);
+    }
+
+    #[test]
+    fn adaptive_snapshot_restore_resumes_exactly() {
+        // drive one controller for 200 iters; snapshot at 100 into a
+        // fresh controller; both must take identical decisions after
+        let feedback = |k: usize| if k < 40 { 0.2 } else { 0.02 };
+        let mut full = Adaptive::new(4, 0, 40, 0.7, 1.3);
+        let mut snap: Option<CtrlState> = None;
+        let mut tail_full = Vec::new();
+        for k in 0..200 {
+            if full.should_sync(k) {
+                full.on_sync(k, feedback(k), 0.1);
+            }
+            if k + 1 == 100 {
+                snap = full.snapshot();
+            }
+            if k >= 100 {
+                tail_full.push((k, full.current_period()));
+            }
+        }
+        let snap = snap.expect("adaptive snapshots");
+        assert!(snap.c2_samples > 0, "C₂ was sampled before the snapshot");
+        let mut resumed = Adaptive::new(4, 0, 40, 0.7, 1.3);
+        resumed.restore(&snap);
+        assert!((resumed.c2() - snap.c2).abs() == 0.0);
+        let mut tail_resumed = Vec::new();
+        for k in 100..200 {
+            if resumed.should_sync(k) {
+                resumed.on_sync(k, feedback(k), 0.1);
+            }
+            tail_resumed.push((k, resumed.current_period()));
+        }
+        assert_eq!(tail_full, tail_resumed, "restored controller must continue exactly");
+    }
+
+    #[test]
+    fn constant_restore_clamps_phase_from_a_larger_period() {
+        // snapshot under p=8 mid-period, resume with p=4: the phase must
+        // wrap, not exceed the new period (cnt >= p would never sync)
+        let mut big = Constant::new(8);
+        for k in 0..5 {
+            big.should_sync(k);
+        }
+        let st = big.snapshot().unwrap();
+        assert_eq!(st.cnt, 5);
+        let mut small = Constant::new(4);
+        small.restore(&st);
+        let first_sync = (0..16).find(|&k| small.should_sync(k));
+        assert_eq!(first_sync, Some(2), "cnt wraps to 1; syncs 3 iters later");
+    }
+
+    #[test]
+    fn schedule_controllers_snapshot_phase() {
+        let mut c = Constant::new(4);
+        for k in 0..6 {
+            c.should_sync(k);
+        }
+        let st = c.snapshot().unwrap();
+        assert_eq!(st.cnt, 2, "2 iters into the current period");
+        let mut c2 = Constant::new(4);
+        c2.restore(&st);
+        // next sync arrives after the remaining 2 iterations
+        assert!(!c2.should_sync(6));
+        assert!(c2.should_sync(7));
     }
 
     #[test]

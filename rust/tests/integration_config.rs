@@ -2,13 +2,9 @@
 //! overrides → validated `ExperimentConfig` → actual run; plus CLI
 //! parsing round-trips the launcher relies on.
 
-// Trainer is deprecated in favor of the session API; these tests keep
-// exercising the shim deliberately (it must stay green).
-#![allow(deprecated)]
-
 use adpsgd::cli::Args;
 use adpsgd::config::{Backend, ExperimentConfig, LrSchedule};
-use adpsgd::coordinator::Trainer;
+use adpsgd::experiment::Experiment;
 use adpsgd::period::Strategy;
 use std::io::Write;
 
@@ -69,7 +65,7 @@ fn toml_file_to_run_end_to_end() {
     assert_eq!(cfg.workload.classes, 5);
     assert_eq!(cfg.net.bandwidth_gbps, 10.0);
 
-    let r = Trainer::new(cfg).unwrap().run().unwrap();
+    let r = Experiment::from_config(cfg).unwrap().run().unwrap();
     assert!(r.final_train_loss.is_finite());
     assert!(r.best_eval_acc > 0.3);
 }
@@ -138,7 +134,7 @@ fn default_config_runs_hlo_backend_spec() {
     cfg.iters = 4;
     cfg.workload.backend = Backend::Hlo("mlp_small".into());
     cfg.artifacts_dir = "/definitely/not/here".into();
-    let err = Trainer::new(cfg).unwrap().run().unwrap_err();
+    let err = Experiment::from_config(cfg).unwrap().run().unwrap_err();
     assert!(format!("{err:#}").contains("make artifacts"), "{err:#}");
 }
 
@@ -169,7 +165,7 @@ fn preset_runs_shortened() {
     ];
     let cfg = ExperimentConfig::from_file("configs/cifar_adpsgd.toml", &overrides).unwrap();
     assert_eq!(cfg.sync.warmup_iters, 4, "nested override must take effect");
-    let r = Trainer::new(cfg).unwrap().run().unwrap();
+    let r = Experiment::from_config(cfg).unwrap().run().unwrap();
     assert!(r.final_train_loss.is_finite());
 }
 
@@ -188,7 +184,7 @@ fn schedule_variants_validate() {
         cfg.workload.hidden = 8;
         cfg.optim.schedule = schedule;
         cfg.eval_every = 0;
-        let r = Trainer::new(cfg).unwrap().run().unwrap();
+        let r = Experiment::from_config(cfg).unwrap().run().unwrap();
         assert!(r.final_train_loss.is_finite());
     }
 }

@@ -1,0 +1,354 @@
+//! Integration tests for the dispatch subsystem: the content-addressed
+//! run cache end to end (hash stability, bit-identical hits, deliberate
+//! busting, corruption handling), subprocess workers over the JSONL
+//! protocol (including a killed worker retried on a fresh child), and
+//! the deterministic merge across job counts.
+
+use adpsgd::config::{ExperimentConfig, LrSchedule, StrategySpec};
+use adpsgd::dispatch::{runcache, DispatchOptions, Dispatcher, WorkerKind};
+use adpsgd::experiment::{Campaign, RunSpec};
+use adpsgd::period::Strategy;
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("adpsgd_it_dispatch_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn quick_base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.nodes = 2;
+    cfg.iters = 60;
+    cfg.batch_per_node = 8;
+    cfg.eval_every = 30;
+    cfg.variance_every = 20;
+    cfg.workload.input_dim = 24;
+    cfg.workload.hidden = 12;
+    cfg.workload.eval_batches = 2;
+    cfg.optim.schedule = LrSchedule::Const;
+    cfg.sync.period = 4;
+    cfg.sync.p_init = 2;
+    cfg.sync.warmup_iters = 4;
+    cfg
+}
+
+fn eight_run_campaign(base: &ExperimentConfig) -> Campaign {
+    Campaign::builder("it_dispatch", base.clone())
+        .strategy("cpsgd", base.sync.spec_of(Strategy::Constant))
+        .strategy("adpsgd", base.sync.spec_of(Strategy::Adaptive))
+        .strategy("full", StrategySpec::Full)
+        .strategy("qsgd", base.sync.spec_of(Strategy::Qsgd))
+        .collectives(&[adpsgd::collective::Algo::Ring, adpsgd::collective::Algo::Flat])
+        .build()
+        .unwrap()
+}
+
+/// The `adpsgd` binary for subprocess-worker tests (cargo builds and
+/// exports it for integration tests).
+fn worker_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_adpsgd"))
+}
+
+/// Full-fidelity report JSON minus the measured wall/compute clocks —
+/// the determinism witness for comparing *separate executions* (cache
+/// hits are bit-identical including clocks; fresh re-executions are
+/// bit-identical except for them).
+fn stable_report_json(r: &adpsgd::RunReport) -> String {
+    use adpsgd::util::json::Json;
+    let mut obj = match runcache::report_to_json(r) {
+        Json::Obj(m) => m,
+        _ => unreachable!("report json is an object"),
+    };
+    obj.remove("wall_secs");
+    obj.remove("compute_secs");
+    Json::Obj(obj).to_string_compact()
+}
+
+// ------------------------------------------------------------------ cache
+
+#[test]
+fn warm_campaign_does_no_training_and_summary_is_byte_identical() {
+    let cache = tmpdir("warm");
+    let base = quick_base();
+    let opts = DispatchOptions {
+        jobs: Some(4),
+        cache_dir: Some(cache.clone()),
+        ..DispatchOptions::default()
+    };
+    let cold = eight_run_campaign(&base).execute(&opts).unwrap();
+    assert_eq!(cold.cache_hits(), 0);
+    assert_eq!(cold.runs.len(), 8);
+
+    let warm = eight_run_campaign(&base).execute(&opts).unwrap();
+    assert_eq!(warm.cache_hits(), 8, "every run must be answered from the cache");
+
+    // byte-identical stable summaries (what `adpsgd campaign --out` writes)
+    assert_eq!(
+        cold.to_json_stable().to_string_compact(),
+        warm.to_json_stable().to_string_compact()
+    );
+    // and per-run reports are bit-identical including series and ledger
+    for (a, b) in cold.runs.iter().zip(&warm.runs) {
+        assert_eq!(
+            runcache::report_to_json(&a.report).to_string_compact(),
+            runcache::report_to_json(&b.report).to_string_compact(),
+            "{}",
+            a.label
+        );
+    }
+    std::fs::remove_dir_all(&cache).ok();
+}
+
+#[test]
+fn cache_is_shared_across_campaign_definitions() {
+    // two different campaigns containing the same resolved run share it
+    let cache = tmpdir("shared");
+    let base = quick_base();
+    let opts = DispatchOptions {
+        jobs: Some(2),
+        cache_dir: Some(cache.clone()),
+        ..DispatchOptions::default()
+    };
+    let first = Campaign::builder("one", base.clone())
+        .strategy("cpsgd", base.sync.spec_of(Strategy::Constant))
+        .build()
+        .unwrap()
+        .execute(&opts)
+        .unwrap();
+    assert_eq!(first.cache_hits(), 0);
+    let second = Campaign::builder("two", base.clone())
+        .strategy("cpsgd_again", base.sync.spec_of(Strategy::Constant))
+        .strategy("full", StrategySpec::Full)
+        .build()
+        .unwrap()
+        .execute(&opts)
+        .unwrap();
+    assert_eq!(second.cache_hits(), 1, "the shared run must hit; labels are incidental");
+    // the hit is restamped under the requesting label
+    assert_eq!(second.get("cpsgd_again").name, "cpsgd_again");
+    assert_eq!(
+        second.get("cpsgd_again").final_train_loss,
+        first.get("cpsgd").final_train_loss
+    );
+    std::fs::remove_dir_all(&cache).ok();
+}
+
+#[test]
+fn result_affecting_knobs_bust_the_campaign_cache() {
+    let cache = tmpdir("bust");
+    let base = quick_base();
+    let opts = DispatchOptions {
+        jobs: Some(2),
+        cache_dir: Some(cache.clone()),
+        ..DispatchOptions::default()
+    };
+    let campaign = |cfg: &ExperimentConfig| {
+        Campaign::builder("b", cfg.clone())
+            .strategy("cpsgd", cfg.sync.spec_of(Strategy::Constant))
+            .build()
+            .unwrap()
+    };
+    campaign(&base).execute(&opts).unwrap();
+    let mut reseeded = base.clone();
+    reseeded.seed = 777;
+    let r = campaign(&reseeded).execute(&opts).unwrap();
+    assert_eq!(r.cache_hits(), 0, "a new seed is a new run");
+    let mut retuned = base.clone();
+    retuned.sync.period = 5;
+    let r = campaign(&retuned).execute(&opts).unwrap();
+    assert_eq!(r.cache_hits(), 0, "a strategy knob is part of the key");
+    // but an output-only knob hits
+    let mut renamed = base.clone();
+    renamed.checkpoint_dir = "/somewhere/else".into();
+    let r = campaign(&renamed).execute(&opts).unwrap();
+    assert_eq!(r.cache_hits(), 1, "output paths are incidental");
+    std::fs::remove_dir_all(&cache).ok();
+}
+
+#[test]
+fn corrupted_cache_entry_is_recomputed_not_trusted() {
+    let cache = tmpdir("corrupt");
+    let base = quick_base();
+    let opts = DispatchOptions {
+        jobs: Some(1),
+        cache_dir: Some(cache.clone()),
+        ..DispatchOptions::default()
+    };
+    let campaign = || {
+        Campaign::builder("c", quick_base())
+            .strategy("cpsgd", quick_base().sync.spec_of(Strategy::Constant))
+            .build()
+            .unwrap()
+    };
+    let cold = campaign().execute(&opts).unwrap();
+    // trash every entry in the cache dir
+    let mut entries = 0;
+    for e in std::fs::read_dir(&cache).unwrap() {
+        let p = e.unwrap().path();
+        if p.extension().map(|x| x == "json").unwrap_or(false) {
+            std::fs::write(&p, b"{\"version\":1,\"cfg_hash\":\"junk\"").unwrap();
+            entries += 1;
+        }
+    }
+    assert_eq!(entries, 1);
+    let recomputed = campaign().execute(&opts).unwrap();
+    assert_eq!(recomputed.cache_hits(), 0, "corrupt entries must miss");
+    assert_eq!(
+        recomputed.get("cpsgd").final_train_loss,
+        cold.get("cpsgd").final_train_loss,
+        "recompute reproduces the original"
+    );
+    // the rewritten entry is valid again
+    let warm = campaign().execute(&opts).unwrap();
+    assert_eq!(warm.cache_hits(), 1);
+    let _ = base;
+    std::fs::remove_dir_all(&cache).ok();
+}
+
+// ----------------------------------------------------- determinism / jobs
+
+#[test]
+fn jobs_levels_produce_identical_merged_results() {
+    // the acceptance gate: jobs=4 on an 8-run campaign == jobs=1
+    let base = quick_base();
+    let run = |jobs: usize| {
+        eight_run_campaign(&base)
+            .execute(&DispatchOptions {
+                jobs: Some(jobs),
+                cache_dir: None,
+                ..DispatchOptions::default()
+            })
+            .unwrap()
+    };
+    let serial = run(1);
+    let parallel = run(4);
+    assert_eq!(serial.runs.len(), 8);
+    for (a, b) in serial.runs.iter().zip(&parallel.runs) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(
+            stable_report_json(&a.report),
+            stable_report_json(&b.report),
+            "{}: the merge must be deterministic across job counts",
+            a.label
+        );
+    }
+}
+
+// ------------------------------------------------------------- subprocess
+
+#[test]
+fn subprocess_workers_match_thread_workers_exactly() {
+    let base = quick_base();
+    let campaign = Campaign::builder("sub", base.clone())
+        .strategy("cpsgd", base.sync.spec_of(Strategy::Constant))
+        .strategy("adpsgd", base.sync.spec_of(Strategy::Adaptive))
+        .strategy("full", StrategySpec::Full)
+        .build()
+        .unwrap();
+    let threads = campaign
+        .execute(&DispatchOptions {
+            jobs: Some(2),
+            cache_dir: None,
+            ..DispatchOptions::default()
+        })
+        .unwrap();
+    let subprocesses = campaign
+        .execute(&DispatchOptions {
+            jobs: Some(2),
+            workers: WorkerKind::Subprocess,
+            worker_exe: Some(worker_exe()),
+            cache_dir: None,
+            ..DispatchOptions::default()
+        })
+        .unwrap();
+    for (a, b) in threads.runs.iter().zip(&subprocesses.runs) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(
+            stable_report_json(&a.report),
+            stable_report_json(&b.report),
+            "{}: subprocess transport must not change results",
+            a.label
+        );
+    }
+}
+
+#[test]
+fn subprocess_run_failure_aborts_with_the_workers_message() {
+    let mut bad = quick_base();
+    bad.name = "boom".into();
+    bad.workload.backend = adpsgd::config::Backend::Native("failing:0:5".into());
+    let runs = vec![RunSpec { label: "boom".into(), cfg: bad }];
+    let err = Dispatcher::new(DispatchOptions {
+        jobs: Some(1),
+        workers: WorkerKind::Subprocess,
+        worker_exe: Some(worker_exe()),
+        cache_dir: None,
+        ..DispatchOptions::default()
+    })
+    .execute(&runs)
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("injected failure"), "{msg}");
+    assert!(msg.contains("boom"), "{msg}");
+}
+
+#[test]
+fn killed_worker_is_retried_on_a_fresh_child() {
+    // a long-enough run that the kill lands mid-training
+    let mut cfg = quick_base();
+    cfg.name = "survivor".into();
+    cfg.iters = 8000;
+    cfg.eval_every = 4000;
+    cfg.variance_every = 0;
+    let runs = vec![RunSpec { label: "survivor".into(), cfg: cfg.clone() }];
+
+    let dispatcher = Dispatcher::new(DispatchOptions {
+        jobs: Some(1),
+        workers: WorkerKind::Subprocess,
+        worker_exe: Some(worker_exe()),
+        cache_dir: None,
+        ..DispatchOptions::default()
+    });
+    let pids = dispatcher.worker_pids();
+
+    // assassin: kill the first worker child as soon as it appears
+    let assassin = std::thread::spawn(move || {
+        for _ in 0..500 {
+            let victim = pids.lock().unwrap().first().copied();
+            if let Some(pid) = victim {
+                // the child has at most parsed the request by now — an
+                // 8000-iteration run cannot have finished.  (`kill` via
+                // sh: the builtin exists even without procps.)
+                let _ = std::process::Command::new("sh")
+                    .arg("-c")
+                    .arg(format!("kill {pid}"))
+                    .status();
+                return true;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        false
+    });
+
+    let merged = dispatcher.execute(&runs).expect("dispatch survives a killed worker");
+    assert!(assassin.join().unwrap(), "the assassin must have found a worker to kill");
+    assert!(dispatcher.retries() >= 1, "the kill must have caused at least one retry");
+    assert_eq!(merged.len(), 1);
+    assert!(!merged[0].from_cache);
+
+    // and the retried result is exactly the undisturbed result
+    let undisturbed = Dispatcher::new(DispatchOptions {
+        jobs: Some(1),
+        cache_dir: None,
+        ..DispatchOptions::default()
+    })
+    .execute(&runs)
+    .unwrap();
+    assert_eq!(
+        stable_report_json(&merged[0].report),
+        stable_report_json(&undisturbed[0].report),
+        "a retried run must reproduce the undisturbed run bit-for-bit"
+    );
+}

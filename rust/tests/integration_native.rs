@@ -3,12 +3,8 @@
 //! on every strategy, asserting the paper's qualitative claims at quick
 //! scale.
 
-// Trainer is deprecated in favor of the session API; these tests keep
-// exercising the shim deliberately (it must stay green).
-#![allow(deprecated)]
-
 use adpsgd::config::{Backend, ExperimentConfig, LrSchedule};
-use adpsgd::coordinator::Trainer;
+use adpsgd::experiment::Experiment;
 use adpsgd::netsim::{CommKind, NetModel};
 use adpsgd::period::Strategy;
 
@@ -31,7 +27,7 @@ fn base(iters: usize, nodes: usize) -> ExperimentConfig {
 }
 
 fn run(cfg: ExperimentConfig) -> adpsgd::coordinator::RunReport {
-    Trainer::new(cfg).unwrap().run().unwrap()
+    Experiment::from_config(cfg).unwrap().run().unwrap()
 }
 
 #[test]

@@ -4,12 +4,8 @@
 //! the artifacts directory is missing so `cargo test` works on a fresh
 //! checkout before the python build step.
 
-// Trainer is deprecated in favor of the session API; these tests keep
-// exercising the shim deliberately (it must stay green).
-#![allow(deprecated)]
-
 use adpsgd::config::{Backend, ExperimentConfig, LrSchedule};
-use adpsgd::coordinator::Trainer;
+use adpsgd::experiment::Experiment;
 use adpsgd::data::{CharCorpus, DatasetHandle, NodeSource, SynthClass};
 use adpsgd::period::Strategy;
 use adpsgd::runtime::{EngineFns, HloEngine, Manifest};
@@ -121,7 +117,7 @@ fn hlo_eval_accuracy_in_range() {
 fn coordinator_trains_hlo_mlp_with_adpsgd() {
     let Some(_man) = manifest() else { return };
     let cfg = hlo_cfg("mlp_small", Strategy::Adaptive, 40, 2);
-    let r = Trainer::new(cfg).unwrap().run().unwrap();
+    let r = Experiment::from_config(cfg).unwrap().run().unwrap();
     assert!(r.final_train_loss.is_finite());
     assert!(r.syncs > 0);
     let loss = r.recorder.get("train_loss").unwrap();
@@ -138,7 +134,7 @@ fn coordinator_trains_hlo_transformer_lm() {
         return;
     }
     let cfg = hlo_cfg("txf_tiny", Strategy::Adaptive, 30, 2);
-    let r = Trainer::new(cfg).unwrap().run().unwrap();
+    let r = Experiment::from_config(cfg).unwrap().run().unwrap();
     let loss = r.recorder.get("train_loss").unwrap();
     let first = loss.points.first().unwrap().1;
     let last = loss.last_y().unwrap();
@@ -150,7 +146,7 @@ fn hlo_fullsgd_matches_qsgd_shape() {
     let Some(_man) = manifest() else { return };
     for strategy in [Strategy::Full, Strategy::Qsgd] {
         let cfg = hlo_cfg("mlp_small", strategy, 20, 2);
-        let r = Trainer::new(cfg).unwrap().run().unwrap();
+        let r = Experiment::from_config(cfg).unwrap().run().unwrap();
         assert!(r.final_train_loss.is_finite(), "{strategy}");
         assert_eq!(r.syncs, 20, "{strategy} syncs every iteration");
     }
