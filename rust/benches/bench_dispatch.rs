@@ -1,19 +1,24 @@
 //! Dispatch-layer benchmark: scheduler throughput across job counts,
-//! run-cache hit economics, and the subprocess transport overhead.
+//! run-cache hit economics (including warm-probe throughput, now that
+//! slots probe the cache in parallel), the subprocess transport
+//! overhead, and pool reuse vs respawn-per-campaign.
 //!
 //! Emits a machine-readable summary line (`BENCH_DISPATCH_JSON {...}`)
 //! *and* writes it to `BENCH_dispatch.json`, so the dispatcher's
 //! trajectory accumulates across commits next to `BENCH_campaign.json`.
 //! Headline numbers: runs/sec at jobs ∈ {1, 2, 4, 8} on an 8-run
-//! campaign, the cache hit rate and cold/warm wall ratio, and the
-//! per-run overhead of subprocess dispatch vs in-process threads.
+//! campaign, the cache hit rate, cold/warm wall ratio and warm-probe
+//! runs/sec, the per-run overhead of subprocess dispatch vs in-process
+//! threads, and the per-campaign overhead of respawning a worker pool
+//! instead of reusing the shared one.
 
 use adpsgd::collective::Algo;
 use adpsgd::config::{ExperimentConfig, LrSchedule, StrategySpec};
-use adpsgd::dispatch::{DispatchOptions, WorkerKind};
+use adpsgd::dispatch::{DispatchOptions, Dispatcher, WorkerKind, WorkerPool};
 use adpsgd::experiment::Campaign;
 use adpsgd::period::Strategy;
 use adpsgd::util::json::Json;
+use std::sync::Arc;
 
 fn tiny_base(iters: usize) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default();
@@ -107,16 +112,20 @@ fn main() {
         "cold and warm stable summaries must be byte-identical"
     );
     println!(
-        "dispatch/cache              cold {:>8.2?} -> warm {:>8.2?} ({:.0}% hits, {:.1}x)",
+        "dispatch/cache              cold {:>8.2?} -> warm {:>8.2?} ({:.0}% hits, {:.1}x, {:.1} probe runs/sec)",
         std::time::Duration::from_secs_f64(cold.wall_secs),
         std::time::Duration::from_secs_f64(warm.wall_secs),
         hit_rate * 100.0,
         cold.wall_secs / warm.wall_secs.max(1e-12),
+        warm.runs_per_sec(),
     );
     std::fs::remove_dir_all(&cache_dir).ok();
     pairs.push(("cache_hit_rate", Json::num(hit_rate)));
     pairs.push(("cold_wall_secs", Json::num(cold.wall_secs)));
     pairs.push(("warm_wall_secs", Json::num(warm.wall_secs)));
+    // warm-probe throughput: all 8 runs answered by parallel cache
+    // probes on the slot threads (no training, no serial pre-pass)
+    pairs.push(("warm_probe_runs_per_sec", Json::num(warm.runs_per_sec())));
 
     // -- subprocess transport overhead ------------------------------------
     // cargo exports the binary path to benches; guard for stripped envs
@@ -137,7 +146,7 @@ fn main() {
             let subs = two(&DispatchOptions {
                 jobs: Some(2),
                 workers: WorkerKind::Subprocess,
-                worker_exe: Some(exe),
+                worker_exe: Some(exe.clone()),
                 cache_dir: None,
                 ..DispatchOptions::default()
             });
@@ -150,10 +159,59 @@ fn main() {
                 overhead,
             );
             pairs.push(("subprocess_overhead_secs_per_run", Json::num(overhead)));
+
+            // -- pool reuse vs respawn across sequential campaigns ---------
+            // the same 2-run campaign dispatched 3 times in a row: once
+            // through the process-wide shared pool (children stay warm
+            // between dispatches) and once with a fresh private pool per
+            // dispatch (the historical respawn-per-campaign behavior)
+            let mut b = tiny_base(iters);
+            b.name = "bench_pool".into();
+            let campaign = Campaign::builder("pool", b.clone())
+                .strategy("cpsgd", b.sync.spec_of(Strategy::Constant))
+                .strategy("full", StrategySpec::Full)
+                .build()
+                .expect("pool bench campaign");
+            let sub_opts = DispatchOptions {
+                jobs: Some(2),
+                workers: WorkerKind::Subprocess,
+                worker_exe: Some(exe.clone()),
+                cache_dir: None,
+                ..DispatchOptions::default()
+            };
+            const ROUNDS: usize = 3;
+            let timed = |fresh_pool_per_dispatch: bool| {
+                let t = std::time::Instant::now();
+                for _ in 0..ROUNDS {
+                    let d = if fresh_pool_per_dispatch {
+                        Dispatcher::with_pool(sub_opts.clone(), Arc::new(WorkerPool::new()))
+                    } else {
+                        Dispatcher::new(sub_opts.clone())
+                    };
+                    d.execute(campaign.runs()).expect("pool bench dispatch");
+                }
+                t.elapsed().as_secs_f64()
+            };
+            let reuse = timed(false);
+            let respawn = timed(true);
+            let per_campaign = (respawn - reuse) / ROUNDS as f64;
+            println!(
+                "dispatch/pool_reuse         shared {:>8.2?} vs respawn {:>8.2?} over {ROUNDS} campaigns ({:+.3}s/campaign)",
+                std::time::Duration::from_secs_f64(reuse),
+                std::time::Duration::from_secs_f64(respawn),
+                per_campaign,
+            );
+            pairs.push(("pool_reuse_wall_secs", Json::num(reuse)));
+            pairs.push(("pool_respawn_wall_secs", Json::num(respawn)));
+            pairs.push(("pool_respawn_overhead_secs_per_campaign", Json::num(per_campaign)));
         }
         _ => {
             println!("dispatch/subprocess         skipped (worker binary unavailable)");
+            // keep the JSON schema identical to the measured branch
             pairs.push(("subprocess_overhead_secs_per_run", Json::Null));
+            pairs.push(("pool_reuse_wall_secs", Json::Null));
+            pairs.push(("pool_respawn_wall_secs", Json::Null));
+            pairs.push(("pool_respawn_overhead_secs_per_campaign", Json::Null));
         }
     }
 

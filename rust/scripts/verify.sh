@@ -3,10 +3,12 @@
 # quickstart smoke run under each collective algorithm + a campaign
 # smoke sweep (strategy × collective) + a cold-vs-warm run-cache smoke
 # (the second invocation must be answered from the cache and write a
-# byte-identical summary) + the campaign/dispatch benches (emit
-# BENCH_campaign.json / BENCH_dispatch.json for the perf trajectory).
-# Referenced from ROADMAP.md; CI and pre-merge checks should run
-# exactly this.
+# byte-identical summary) + a cache-gc smoke (size-bound eviction must
+# shrink the warm cache) + a hang smoke (a SIGSTOPped subprocess
+# worker must be recovered under the heartbeat deadline) + the
+# campaign/dispatch benches (emit BENCH_campaign.json /
+# BENCH_dispatch.json for the perf trajectory).  Referenced from
+# ROADMAP.md; CI and pre-merge checks should run exactly this.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -43,9 +45,24 @@ cmp /tmp/adpsgd_verify_cold/cache_smoke.campaign.json /tmp/adpsgd_verify_warm/ca
     || { echo "verify: FAIL — cold/warm campaign summaries differ"; exit 1; }
 echo "   cache smoke OK (8/8 hits, byte-identical summary)"
 
-echo "== verify: subprocess-worker smoke =="
+echo "== verify: cache-gc smoke =="
+# the warm cache above holds 8 entries; a 1-byte bound must evict them all
+entries_before=$(find "${CACHE_DIR}" -name '*.run.json' | wc -l)
+[ "${entries_before}" -eq 8 ] \
+    || { echo "verify: FAIL — expected 8 cache entries before gc, found ${entries_before}"; exit 1; }
+cargo run --release -- cache-gc --cache-dir "${CACHE_DIR}" --max-bytes 1
+entries_after=$(find "${CACHE_DIR}" -name '*.run.json' | wc -l)
+[ "${entries_after}" -eq 0 ] \
+    || { echo "verify: FAIL — cache-gc left ${entries_after} entries above the size bound"; exit 1; }
+echo "   cache-gc smoke OK (${entries_before} -> ${entries_after} entries)"
+
+echo "== verify: subprocess-worker smoke (tight hang deadline) =="
 cargo run --release -- campaign --quick --name worker_smoke --jobs 2 --workers subprocess \
+    --hang-timeout 30 \
     --strategies cpsgd,adpsgd --collectives ring --out /tmp/adpsgd_verify
+
+echo "== verify: hang smoke (stopped worker recovered under deadline) =="
+cargo test --release --test integration_dispatch stopped_worker_is_declared_hung_and_run_retried
 
 echo "== verify: campaign scheduler bench (fast) =="
 ADPSGD_BENCH_FAST=1 cargo bench --bench bench_campaign

@@ -5,9 +5,18 @@
 //! persistent content-addressed [`runcache`], how many execute
 //! concurrently, whether they execute on in-process threads or in
 //! `adpsgd worker` subprocesses speaking the [`proto`] line protocol,
-//! and how crashed workers are retried — all behind
+//! and how crashed or *hung* workers are recovered — all behind
 //! [`pool::Dispatcher`], which merges results deterministically in
 //! declaration order no matter the parallelism or completion order.
+//!
+//! Supervision (see [`pool`]): subprocess reads are deadline-aware, so
+//! a child that stops heartbeating ([`proto::HEARTBEAT_EVERY`]) for
+//! [`pool::DispatchOptions::heartbeat_timeout`] is declared hung,
+//! killed, and its run retried on another slot; children live in the
+//! process-wide [`shared_worker_pool`] and are reused warm across
+//! sequential campaigns, with graceful shutdown (stdin EOF → bounded
+//! wait → kill); the cache probe runs on the pool's own threads; and
+//! [`runcache::RunCache::gc`] bounds long-lived cache directories.
 //!
 //! Layering: `experiment` (describe) → `dispatch` (schedule, memoize,
 //! transport) → `coordinator` (execute one run).  The coordinator knows
@@ -40,11 +49,21 @@ pub mod pool;
 pub mod proto;
 pub mod runcache;
 
-pub use pool::{DispatchOptions, DispatchedRun, Dispatcher, WorkerKind};
-pub use runcache::{cfg_digest, RunCache};
+pub use pool::{DispatchOptions, DispatchedRun, Dispatcher, WorkerKind, WorkerPool};
+pub use runcache::{cfg_digest, GcPolicy, GcStats, RunCache};
 
 use std::path::PathBuf;
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// The process-wide shared [`WorkerPool`]: every [`Dispatcher::new`]
+/// borrows it, so sequential campaigns (and all six `adpsgd figures`
+/// sweeps) reuse warm `adpsgd worker` children instead of paying a
+/// respawn per campaign.  Tests and benchmarks that need isolation use
+/// [`Dispatcher::with_pool`] with a private pool instead.
+pub fn shared_worker_pool() -> Arc<WorkerPool> {
+    static POOL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+    Arc::clone(POOL.get_or_init(|| Arc::new(WorkerPool::new())))
+}
 
 fn default_cache_cell() -> &'static Mutex<Option<PathBuf>> {
     static CELL: OnceLock<Mutex<Option<PathBuf>>> = OnceLock::new();

@@ -1,27 +1,58 @@
 //! The worker pool: a work-stealing run queue drained by in-process
 //! thread slots or `adpsgd worker` subprocess slots, with cache
-//! short-circuiting, crashed-worker retry, and a deterministic merge.
+//! short-circuiting, hang detection, crashed-worker retry, and a
+//! deterministic merge.
 //!
 //! Scheduling is a shared queue: every slot pops the next pending run,
 //! so a slow run never blocks the others (work stealing without
-//! per-slot queues).  Results land in per-run slots indexed by
-//! declaration order, so the merged output is identical for any `jobs`
-//! level and any completion order.  A *deterministic* run failure
-//! aborts the dispatch (queued runs are not started; in-flight runs
-//! finish) — exactly the historical campaign semantics.  A *crashed*
-//! subprocess worker (pipe EOF, spawn failure) is not a run failure:
-//! the run is re-queued for any free slot (the crashing slot respawns a
-//! fresh child) up to [`DispatchOptions::max_attempts`] attempts.
+//! per-slot queues).  Cache probing happens on the slots themselves —
+//! a fully-warm campaign parses its entries with `jobs`-way
+//! parallelism instead of a serial pre-pass.  Results land in per-run
+//! slots indexed by declaration order, so the merged output is
+//! identical for any `jobs` level and any completion order.  A
+//! *deterministic* run failure aborts the dispatch (queued runs are not
+//! started; in-flight runs finish) — exactly the historical campaign
+//! semantics.  A *crashed* subprocess worker (pipe EOF, spawn failure,
+//! or a missed [`DispatchOptions::heartbeat_timeout`] deadline) is not
+//! a run failure: the run is re-queued for any free slot up to
+//! [`DispatchOptions::max_attempts`] attempts.
+//!
+//! ## Supervision
+//!
+//! Each subprocess client reads its child's stdout on a dedicated
+//! reader thread and waits on a channel with a deadline, so a child
+//! that hangs *without* closing its pipe (SIGSTOP, livelock, a wedged
+//! syscall) is detected: after `heartbeat_timeout` of silence — the
+//! worker proves liveness every [`super::proto::HEARTBEAT_EVERY`]
+//! while training — the child is killed and the run retried through
+//! the ordinary crash path.  Terminal frames that surface later for an
+//! abandoned request id are discarded as stale, never misclassified as
+//! protocol violations.
+//!
+//! ## The shared pool
+//!
+//! Subprocess children are owned by a [`WorkerPool`], not by the
+//! dispatch that spawned them: when a dispatch drains its queue, each
+//! slot checks its warm child back in, and the next dispatch (a
+//! sequential campaign, the next `adpsgd figures` sweep) checks it out
+//! again instead of respawning.  [`Dispatcher::new`] borrows the
+//! process-wide [`super::shared_worker_pool`]; tests and benchmarks
+//! can inject a private pool via [`Dispatcher::with_pool`].  Pool
+//! teardown is graceful — stdin closes (the worker's serve loop exits
+//! on EOF), then a bounded wait, then kill — instead of the historical
+//! unconditional kill.
 
 use super::runcache::{self, RunCache};
 use crate::coordinator::RunReport;
 use crate::experiment::{Experiment, RunSpec};
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
 use std::collections::VecDeque;
 use std::io::{BufRead, Write};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Where a pending run executes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -29,12 +60,18 @@ pub enum WorkerKind {
     /// In-process: each slot runs the experiment on its own thread (the
     /// run itself still spawns its `nodes`-thread cluster).
     Thread,
-    /// Out-of-process: each slot owns an `adpsgd worker` child speaking
-    /// the line-delimited JSON protocol of [`super::proto`].
+    /// Out-of-process: each slot borrows an `adpsgd worker` child from
+    /// the [`WorkerPool`], speaking the line-delimited JSON protocol of
+    /// [`super::proto`].
     Subprocess,
 }
 
-/// How a dispatch executes: slot count, worker kind, cache, retries.
+/// How many [`super::proto::HEARTBEAT_EVERY`] intervals a silent worker
+/// may miss before the default deadline declares it hung.
+const DEFAULT_MISSED_HEARTBEATS: u32 = 20;
+
+/// How a dispatch executes: slot count, worker kind, cache, retries,
+/// hang deadline.
 #[derive(Debug, Clone)]
 pub struct DispatchOptions {
     /// Concurrent run slots; `None` = `min(available cores, runs)`.
@@ -46,6 +83,12 @@ pub struct DispatchOptions {
     pub max_attempts: usize,
     /// Binary for subprocess workers; `None` = this executable.
     pub worker_exe: Option<PathBuf>,
+    /// How long a subprocess worker may stay silent mid-run before it
+    /// is declared hung, killed, and its run retried (the worker
+    /// heartbeats every [`super::proto::HEARTBEAT_EVERY`]; the default
+    /// allows [`DEFAULT_MISSED_HEARTBEATS`] missed intervals).
+    /// `adpsgd campaign --hang-timeout SECS` sets it.
+    pub heartbeat_timeout: Duration,
 }
 
 impl Default for DispatchOptions {
@@ -56,6 +99,7 @@ impl Default for DispatchOptions {
             cache_dir: super::default_cache_dir(),
             max_attempts: 3,
             worker_exe: None,
+            heartbeat_timeout: super::proto::HEARTBEAT_EVERY * DEFAULT_MISSED_HEARTBEATS,
         }
     }
 }
@@ -76,12 +120,113 @@ pub struct DispatchedRun {
     pub from_cache: bool,
 }
 
+// ------------------------------------------------------------------- pool
+
+/// A registry of warm `adpsgd worker` children shared across
+/// dispatches.  Slots check a child out for the duration of a dispatch
+/// and check it back in when their queue drains, so sequential
+/// campaigns in one process reuse children instead of paying a
+/// respawn per campaign.  Children are tagged with the executable they
+/// were spawned from, so dispatchers with different `worker_exe`
+/// settings never receive each other's workers.
+pub struct WorkerPool {
+    idle: Mutex<Vec<WorkerClient>>,
+    pids: Arc<Mutex<Vec<u32>>>,
+    warm_checkouts: AtomicUsize,
+}
+
+impl WorkerPool {
+    pub fn new() -> WorkerPool {
+        WorkerPool {
+            idle: Mutex::new(Vec::new()),
+            pids: Arc::new(Mutex::new(Vec::new())),
+            warm_checkouts: AtomicUsize::new(0),
+        }
+    }
+
+    /// Live subprocess-worker pids (checked-out and idle alike).
+    pub fn worker_pids(&self) -> Arc<Mutex<Vec<u32>>> {
+        Arc::clone(&self.pids)
+    }
+
+    /// Idle warm children currently parked in the pool.
+    pub fn idle_workers(&self) -> usize {
+        self.idle.lock().expect("worker pool").len()
+    }
+
+    /// How many checkouts were answered by a warm child instead of a
+    /// spawn (observability; the pool-reuse benchmark reads it).
+    pub fn warm_checkouts(&self) -> usize {
+        self.warm_checkouts.load(Ordering::Relaxed)
+    }
+
+    /// Borrow a live child spawned from `exe`, reusing a warm one when
+    /// possible.  A child that died while idle is discarded on the spot
+    /// — dropping it reaps the process and prunes its pid from the
+    /// registry, so observers never target a dead pid.
+    fn checkout(&self, exe: Option<&Path>) -> Result<WorkerClient> {
+        let exe = match exe {
+            Some(p) => p.to_path_buf(),
+            None => std::env::current_exe().context("resolving worker executable")?,
+        };
+        loop {
+            let candidate = {
+                let mut idle = self.idle.lock().expect("worker pool");
+                idle.iter().position(|c| c.exe == exe).map(|i| idle.swap_remove(i))
+            };
+            match candidate {
+                Some(mut client) => {
+                    if client.is_alive() {
+                        self.warm_checkouts.fetch_add(1, Ordering::Relaxed);
+                        return Ok(client);
+                    }
+                    // died between runs: drop reaps it and prunes the
+                    // stale pid; keep looking for a live sibling
+                }
+                None => return WorkerClient::spawn(exe, &self.pids),
+            }
+        }
+    }
+
+    /// Park a child for the next dispatch.  Dead children are dropped
+    /// (reaped, pid pruned) instead of parked.
+    fn checkin(&self, mut client: WorkerClient) {
+        if client.is_alive() && client.stdin.is_some() {
+            self.idle.lock().expect("worker pool").push(client);
+        }
+    }
+
+    /// Gracefully retire every idle child: close stdin (the worker's
+    /// serve loop exits on EOF), wait up to `timeout` each, then kill.
+    /// Checked-out children are unaffected.
+    pub fn shutdown(&self, timeout: Duration) {
+        let clients = std::mem::take(&mut *self.idle.lock().expect("worker pool"));
+        for mut client in clients {
+            client.shutdown(timeout);
+        }
+    }
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        WorkerPool::new()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown(Duration::from_secs(2));
+    }
+}
+
+// -------------------------------------------------------------- dispatcher
+
 /// Executes batches of [`RunSpec`]s under one [`DispatchOptions`]
 /// profile.  Reusable across batches; exposes live worker pids and the
 /// crash-retry count for observability (and the kill-a-worker tests).
 pub struct Dispatcher {
     opts: DispatchOptions,
-    pids: Arc<Mutex<Vec<u32>>>,
+    pool: Arc<WorkerPool>,
     retries: Arc<AtomicUsize>,
 }
 
@@ -92,13 +237,27 @@ enum Outcome {
 }
 
 impl Dispatcher {
+    /// A dispatcher over the process-wide [`super::shared_worker_pool`]:
+    /// sequential dispatches reuse each other's warm children.
     pub fn new(opts: DispatchOptions) -> Dispatcher {
-        Dispatcher { opts, pids: Arc::new(Mutex::new(Vec::new())), retries: Arc::new(AtomicUsize::new(0)) }
+        Dispatcher::with_pool(opts, super::shared_worker_pool())
     }
 
-    /// Live subprocess-worker pids (empty in thread mode).
+    /// A dispatcher over an explicit pool (private pools isolate tests
+    /// and let benchmarks compare reuse against respawn).
+    pub fn with_pool(opts: DispatchOptions, pool: Arc<WorkerPool>) -> Dispatcher {
+        Dispatcher { opts, pool, retries: Arc::new(AtomicUsize::new(0)) }
+    }
+
+    /// Live subprocess-worker pids of the underlying pool (empty in
+    /// thread mode).
     pub fn worker_pids(&self) -> Arc<Mutex<Vec<u32>>> {
-        Arc::clone(&self.pids)
+        self.pool.worker_pids()
+    }
+
+    /// The pool this dispatcher borrows children from.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
     }
 
     /// Crashed-worker retries performed so far.
@@ -107,54 +266,35 @@ impl Dispatcher {
     }
 
     /// Execute every run, returning reports in declaration order
-    /// regardless of completion order or parallelism.
+    /// regardless of completion order or parallelism.  An empty batch
+    /// is a valid (empty) result — a campaign whose sweep resolves to
+    /// zero runs reports cleanly instead of erroring.
     pub fn execute(&self, runs: &[RunSpec]) -> Result<Vec<DispatchedRun>> {
         let n = runs.len();
         if n == 0 {
-            bail!("dispatch of zero runs");
+            return Ok(Vec::new());
         }
         let cache = self.opts.cache_dir.as_ref().map(RunCache::new);
         let slots: Vec<Mutex<Option<Result<DispatchedRun>>>> =
             (0..n).map(|_| Mutex::new(None)).collect();
-        // (digest, canonical text) per run — probed up front so hits
-        // skip the queue entirely
-        let mut keys: Vec<Option<(String, String)>> = (0..n).map(|_| None).collect();
-        let mut pending: VecDeque<(usize, usize)> = VecDeque::new();
-        for (i, spec) in runs.iter().enumerate() {
-            if let Some(cache) = &cache {
-                let canonical = runcache::cfg_canonical_text(&spec.cfg)
-                    .with_context(|| format!("hashing run {:?}", spec.label))?;
-                let key = runcache::content_digest(canonical.as_bytes());
-                if let Some(mut report) = cache.get(&key) {
-                    // the name is excluded from the key (incidental):
-                    // restamp it so cross-campaign hits report under the
-                    // requesting label
-                    report.name = spec.cfg.name.clone();
-                    *slots[i].lock().expect("dispatch slot") =
-                        Some(Ok(DispatchedRun { report, from_cache: true }));
-                    continue;
-                }
-                keys[i] = Some((key, canonical));
+        // every run enters the queue; the slots themselves probe the
+        // cache, so warm campaigns parse entries in parallel instead of
+        // serially before the pool starts
+        let pending: VecDeque<(usize, usize)> = (0..n).map(|i| (i, 1)).collect();
+        let jobs = self
+            .opts
+            .jobs
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(usize::from).unwrap_or(2)
+            })
+            .clamp(1, n);
+        let queue = Mutex::new(pending);
+        let aborted = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            for _ in 0..jobs {
+                scope.spawn(|| self.slot_loop(runs, cache.as_ref(), &queue, &aborted, &slots));
             }
-            pending.push_back((i, 1));
-        }
-
-        if !pending.is_empty() {
-            let jobs = self
-                .opts
-                .jobs
-                .unwrap_or_else(|| {
-                    std::thread::available_parallelism().map(usize::from).unwrap_or(2)
-                })
-                .clamp(1, pending.len());
-            let queue = Mutex::new(pending);
-            let aborted = AtomicBool::new(false);
-            std::thread::scope(|scope| {
-                for _ in 0..jobs {
-                    scope.spawn(|| self.slot_loop(runs, &keys, cache.as_ref(), &queue, &aborted, &slots));
-                }
-            });
-        }
+        });
 
         // deterministic merge: declaration order; the lowest-index real
         // failure wins over "skipped" noise
@@ -178,16 +318,16 @@ impl Dispatcher {
             return Err(e);
         }
         if let Some(i) = skipped {
-            bail!("run {:?} was skipped after an earlier failure", runs[i].label);
+            anyhow::bail!("run {:?} was skipped after an earlier failure", runs[i].label);
         }
         Ok(merged.into_iter().map(|r| r.expect("all slots filled")).collect())
     }
 
-    /// One slot: pop runs until the queue drains or the dispatch aborts.
+    /// One slot: pop runs until the queue drains or the dispatch
+    /// aborts, then park the warm child back in the pool.
     fn slot_loop(
         &self,
         runs: &[RunSpec],
-        keys: &[Option<(String, String)>],
         cache: Option<&RunCache>,
         queue: &Mutex<VecDeque<(usize, usize)>>,
         aborted: &AtomicBool,
@@ -202,6 +342,32 @@ impl Dispatcher {
                 break;
             };
             let spec = &runs[i];
+            // probe the cache on this slot's own thread: a hit fills
+            // the result without touching a worker
+            let mut key: Option<(String, String)> = None;
+            if let Some(cache) = cache {
+                match runcache::cfg_canonical_text(&spec.cfg) {
+                    Ok(canonical) => {
+                        let digest = runcache::content_digest(canonical.as_bytes());
+                        if let Some(mut report) = cache.get(&digest) {
+                            // the name is excluded from the key
+                            // (incidental): restamp it so cross-campaign
+                            // hits report under the requesting label
+                            report.name = spec.cfg.name.clone();
+                            *slots[i].lock().expect("dispatch slot") =
+                                Some(Ok(DispatchedRun { report, from_cache: true }));
+                            continue;
+                        }
+                        key = Some((digest, canonical));
+                    }
+                    Err(e) => {
+                        aborted.store(true, Ordering::Relaxed);
+                        *slots[i].lock().expect("dispatch slot") =
+                            Some(Err(e.context(format!("hashing run {:?}", spec.label))));
+                        continue;
+                    }
+                }
+            }
             let outcome = match self.opts.workers {
                 WorkerKind::Thread => {
                     match Experiment::from_config(spec.cfg.clone()).and_then(Experiment::run)
@@ -210,14 +376,12 @@ impl Dispatcher {
                         Err(e) => Outcome::RunFailed(e),
                     }
                 }
-                WorkerKind::Subprocess => {
-                    self.subprocess_run(&mut client, &spec.cfg)
-                }
+                WorkerKind::Subprocess => self.subprocess_run(&mut client, &spec.cfg),
             };
             match outcome {
                 Outcome::Done(report) => {
-                    if let (Some(cache), Some((key, canonical))) = (cache, &keys[i]) {
-                        if let Err(e) = cache.put(key, canonical, &report) {
+                    if let (Some(cache), Some((digest, canonical))) = (cache, &key) {
+                        if let Err(e) = cache.put(digest, canonical, &report) {
                             eprintln!("note: run cache write failed for {:?}: {e:#}", spec.label);
                         }
                     }
@@ -230,8 +394,11 @@ impl Dispatcher {
                         Some(Err(e.context(format!("run {:?}", spec.label))));
                 }
                 Outcome::Crashed(e) => {
-                    // the child is gone: drop it and respawn lazily on
-                    // the next pop; the run goes back to *any* slot
+                    // the child is gone: dropping it reaps the process
+                    // and prunes its pid from the registry right here on
+                    // the crash path (not at some later Drop), then the
+                    // run goes back to *any* slot and a fresh child is
+                    // checked out lazily on the next pop
                     client = None;
                     if attempt < self.opts.max_attempts {
                         self.retries.fetch_add(1, Ordering::Relaxed);
@@ -250,6 +417,11 @@ impl Dispatcher {
                 }
             }
         }
+        // queue drained or dispatch aborted: park the warm child for
+        // the next dispatch instead of killing it
+        if let Some(c) = client {
+            self.pool.checkin(c);
+        }
     }
 
     fn subprocess_run(
@@ -258,31 +430,34 @@ impl Dispatcher {
         cfg: &crate::config::ExperimentConfig,
     ) -> Outcome {
         if client.is_none() {
-            match WorkerClient::spawn(self.opts.worker_exe.clone(), &self.pids) {
+            match self.pool.checkout(self.opts.worker_exe.as_deref()) {
                 Ok(c) => *client = Some(c),
                 Err(e) => return Outcome::Crashed(e.context("spawning worker")),
             }
         }
         let c = client.as_mut().expect("worker client just ensured");
-        c.run(cfg)
+        c.run(cfg, self.opts.heartbeat_timeout)
     }
 }
 
-/// One `adpsgd worker` child and its protocol channel.
+// ----------------------------------------------------------------- client
+
+/// One `adpsgd worker` child and its protocol channel.  Reads arrive
+/// through a dedicated reader thread, so waits carry a deadline.
 struct WorkerClient {
+    /// the executable this child was spawned from (pool-matching tag)
+    exe: PathBuf,
     child: std::process::Child,
-    stdin: std::process::ChildStdin,
-    stdout: std::io::BufReader<std::process::ChildStdout>,
+    /// `None` after a graceful [`WorkerClient::shutdown`] closed it
+    stdin: Option<std::process::ChildStdin>,
+    /// lines from the reader thread; disconnects on pipe EOF
+    lines: Receiver<std::io::Result<String>>,
     next_id: u64,
     pids: Arc<Mutex<Vec<u32>>>,
 }
 
 impl WorkerClient {
-    fn spawn(exe: Option<PathBuf>, pids: &Arc<Mutex<Vec<u32>>>) -> Result<WorkerClient> {
-        let exe = match exe {
-            Some(p) => p,
-            None => std::env::current_exe().context("resolving worker executable")?,
-        };
+    fn spawn(exe: PathBuf, pids: &Arc<Mutex<Vec<u32>>>) -> Result<WorkerClient> {
         let mut child = std::process::Command::new(&exe)
             .arg("worker")
             .stdin(std::process::Stdio::piped())
@@ -291,15 +466,57 @@ impl WorkerClient {
             .spawn()
             .with_context(|| format!("spawning {} worker", exe.display()))?;
         let stdin = child.stdin.take().expect("piped stdin");
-        let stdout = std::io::BufReader::new(child.stdout.take().expect("piped stdout"));
+        let stdout = child.stdout.take().expect("piped stdout");
+        // the reader thread owns the blocking pipe; the client waits on
+        // the channel with a deadline.  On EOF the sender drops and the
+        // channel disconnects; the thread also exits if the client side
+        // goes away first.
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let mut reader = std::io::BufReader::new(stdout);
+            loop {
+                let mut line = String::new();
+                match reader.read_line(&mut line) {
+                    Ok(0) => break,
+                    Ok(_) => {
+                        if tx.send(Ok(line)).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tx.send(Err(e));
+                        break;
+                    }
+                }
+            }
+        });
         pids.lock().expect("pid registry").push(child.id());
-        Ok(WorkerClient { child, stdin, stdout, next_id: 0, pids: Arc::clone(pids) })
+        Ok(WorkerClient {
+            exe,
+            child,
+            stdin: Some(stdin),
+            lines: rx,
+            next_id: 0,
+            pids: Arc::clone(pids),
+        })
     }
 
-    /// Submit one run and block for its terminal frame, tolerating
-    /// heartbeats.  Any transport defect is a crash (retryable); an
-    /// `Error` frame is a deterministic run failure (fatal).
-    fn run(&mut self, cfg: &crate::config::ExperimentConfig) -> Outcome {
+    fn is_alive(&mut self) -> bool {
+        matches!(self.child.try_wait(), Ok(None))
+    }
+
+    /// Submit one run and wait for its terminal frame under the
+    /// heartbeat deadline.  Any received frame — heartbeat, stale or
+    /// current — proves liveness and re-arms the deadline; terminal
+    /// frames for an older (abandoned) request id are discarded as
+    /// stale.  A transport defect or a missed deadline is a crash
+    /// (retryable); an `Error` frame for the current id is a
+    /// deterministic run failure (fatal).
+    fn run(
+        &mut self,
+        cfg: &crate::config::ExperimentConfig,
+        heartbeat_timeout: Duration,
+    ) -> Outcome {
         self.next_id += 1;
         let id = self.next_id;
         let line = match (super::proto::Frame::RunRequest { id, cfg: cfg.clone() }).to_line() {
@@ -307,17 +524,40 @@ impl WorkerClient {
             // an unserializable config is the run's fault, not the worker's
             Err(e) => return Outcome::RunFailed(e),
         };
-        if let Err(e) = self.stdin.write_all(line.as_bytes()).and_then(|()| self.stdin.flush())
-        {
+        let Some(stdin) = self.stdin.as_mut() else {
+            return Outcome::Crashed(anyhow!("worker stdin already closed"));
+        };
+        if let Err(e) = stdin.write_all(line.as_bytes()).and_then(|()| stdin.flush()) {
             return Outcome::Crashed(anyhow!("worker pipe closed: {e}"));
         }
+        let mut deadline = Instant::now() + heartbeat_timeout;
         loop {
-            let mut reply = String::new();
-            match self.stdout.read_line(&mut reply) {
-                Ok(0) => return Outcome::Crashed(anyhow!("worker exited mid-run (pipe EOF)")),
-                Ok(_) => {}
+            let wait = deadline.saturating_duration_since(Instant::now());
+            let msg = match self.lines.recv_timeout(wait) {
+                Ok(msg) => msg,
+                Err(RecvTimeoutError::Timeout) => {
+                    // the deadline spans many HEARTBEAT_EVERY intervals:
+                    // total silence means the child is hung (stopped,
+                    // livelocked), not slow.  Kill it; the crash path
+                    // requeues the run on another slot.
+                    self.child.kill().ok();
+                    return Outcome::Crashed(anyhow!(
+                        "worker {} silent for {:.1}s during run id {id} \
+                         (missed heartbeat deadline); killed",
+                        self.child.id(),
+                        heartbeat_timeout.as_secs_f64()
+                    ));
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Outcome::Crashed(anyhow!("worker exited mid-run (pipe EOF)"))
+                }
+            };
+            let reply = match msg {
+                Ok(line) => line,
                 Err(e) => return Outcome::Crashed(anyhow!("reading worker reply: {e}")),
-            }
+            };
+            // any frame proves the child is alive
+            deadline = Instant::now() + heartbeat_timeout;
             match super::proto::Frame::parse(&reply) {
                 Ok(super::proto::Frame::Heartbeat { .. }) => continue,
                 Ok(super::proto::Frame::RunResult { id: rid, report }) if rid == id => {
@@ -326,10 +566,44 @@ impl WorkerClient {
                 Ok(super::proto::Frame::Error { id: rid, message }) if rid == id => {
                     return Outcome::RunFailed(anyhow!("{message}"))
                 }
+                Ok(super::proto::Frame::RunResult { id: rid, .. })
+                | Ok(super::proto::Frame::Error { id: rid, .. })
+                    if rid < id =>
+                {
+                    // a terminal frame for an abandoned request (e.g.
+                    // one that hit the heartbeat deadline before this
+                    // client was reused): stale, not a protocol
+                    // violation — discard and keep waiting
+                    eprintln!(
+                        "note: discarding stale terminal frame for request {rid} (current {id})"
+                    );
+                    continue;
+                }
                 Ok(other) => {
-                    return Outcome::Crashed(anyhow!("worker protocol violation: {other:?}"))
+                    return Outcome::Crashed(anyhow!(
+                        "worker protocol violation: unexpected {} frame for request {}",
+                        other.kind(),
+                        other.id()
+                    ))
                 }
                 Err(e) => return Outcome::Crashed(e.context("malformed worker reply")),
+            }
+        }
+    }
+
+    /// Graceful retirement: close stdin (the worker's serve loop exits
+    /// on EOF), wait up to `timeout` for a clean exit, then kill.
+    fn shutdown(&mut self, timeout: Duration) {
+        drop(self.stdin.take());
+        let deadline = Instant::now() + timeout;
+        loop {
+            match self.child.try_wait() {
+                Ok(Some(_)) | Err(_) => break,
+                Ok(None) if Instant::now() >= deadline => {
+                    self.child.kill().ok();
+                    break;
+                }
+                Ok(None) => std::thread::sleep(Duration::from_millis(20)),
             }
         }
     }
@@ -338,7 +612,11 @@ impl WorkerClient {
 impl Drop for WorkerClient {
     fn drop(&mut self) {
         let pid = self.child.id();
-        self.child.kill().ok();
+        // still running means a crash path or process teardown reached
+        // us without a graceful shutdown: hard kill is the last resort
+        if matches!(self.child.try_wait(), Ok(None)) {
+            self.child.kill().ok();
+        }
         self.child.wait().ok();
         self.pids.lock().expect("pid registry").retain(|p| *p != pid);
     }
@@ -397,6 +675,19 @@ mod tests {
     }
 
     #[test]
+    fn empty_dispatch_is_ok_and_empty() {
+        // zero runs is a valid dispatch (a campaign sweep can resolve
+        // to nothing), not an error
+        let out = Dispatcher::new(DispatchOptions {
+            cache_dir: None,
+            ..DispatchOptions::default()
+        })
+        .execute(&[])
+        .unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
     fn cache_hit_skips_execution_and_is_bit_identical() {
         let dir = std::env::temp_dir()
             .join(format!("adpsgd_pool_cache_{}", std::process::id()));
@@ -435,5 +726,70 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("boom"), "{msg}");
         assert!(msg.contains("injected failure"), "{msg}");
+    }
+
+    /// A stand-in worker executable: stays alive until its stdin
+    /// closes (like the real serve loop), ignores its `worker` arg.
+    /// Checkout only needs a live process — protocol traffic is not
+    /// required to exercise the park/reuse/prune bookkeeping.
+    fn stub_worker(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("adpsgd_pool_stub_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("stub_{tag}.sh"));
+        std::fs::write(&path, "#!/bin/sh\ncat >/dev/null\n").unwrap();
+        #[cfg(unix)]
+        {
+            use std::os::unix::fs::PermissionsExt;
+            std::fs::set_permissions(&path, std::fs::Permissions::from_mode(0o755)).unwrap();
+        }
+        path
+    }
+
+    #[test]
+    fn private_pool_parks_and_reuses_warm_children() {
+        let exe = stub_worker("reuse");
+        let pool = WorkerPool::new();
+        let a = pool.checkout(Some(exe.as_path())).unwrap();
+        let pid = a.child.id();
+        assert_eq!(pool.warm_checkouts(), 0);
+        assert!(pool.worker_pids().lock().unwrap().contains(&pid));
+        pool.checkin(a);
+        assert_eq!(pool.idle_workers(), 1);
+        let b = pool.checkout(Some(exe.as_path())).unwrap();
+        assert_eq!(b.child.id(), pid, "warm child must be reused");
+        assert_eq!(pool.warm_checkouts(), 1);
+        pool.checkin(b);
+        // a different exe never receives someone else's child
+        let other_exe = stub_worker("other");
+        let other = pool.checkout(Some(other_exe.as_path())).unwrap();
+        assert_ne!(other.child.id(), pid);
+        drop(other);
+        pool.shutdown(Duration::from_secs(2));
+        assert_eq!(pool.idle_workers(), 0);
+        assert!(
+            pool.worker_pids().lock().unwrap().is_empty(),
+            "shutdown must prune every pid"
+        );
+    }
+
+    #[test]
+    fn dead_idle_child_is_pruned_at_checkout() {
+        let exe = stub_worker("dead");
+        let pool = WorkerPool::new();
+        let mut a = pool.checkout(Some(exe.as_path())).unwrap();
+        let pid = a.child.id();
+        // kill it behind the pool's back, then park the corpse the way
+        // a between-runs crash would leave it
+        a.child.kill().ok();
+        a.child.wait().ok();
+        pool.idle.lock().unwrap().push(a);
+        let b = pool.checkout(Some(exe.as_path())).unwrap();
+        assert_ne!(b.child.id(), pid, "a dead child must not be handed out");
+        assert!(
+            !pool.worker_pids().lock().unwrap().contains(&pid),
+            "the dead child's pid must be pruned from the registry"
+        );
+        drop(b);
     }
 }

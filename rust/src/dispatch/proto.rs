@@ -37,6 +37,27 @@ pub enum Frame {
 }
 
 impl Frame {
+    /// The request id this frame carries.
+    pub fn id(&self) -> u64 {
+        match self {
+            Frame::RunRequest { id, .. }
+            | Frame::RunResult { id, .. }
+            | Frame::Heartbeat { id }
+            | Frame::Error { id, .. } => *id,
+        }
+    }
+
+    /// The frame's wire-type name (for diagnostics that must not dump a
+    /// whole report).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Frame::RunRequest { .. } => "run_request",
+            Frame::RunResult { .. } => "run_result",
+            Frame::Heartbeat { .. } => "heartbeat",
+            Frame::Error { .. } => "error",
+        }
+    }
+
     /// Encode as one newline-terminated JSON line.
     pub fn to_line(&self) -> Result<String> {
         let json = match self {
@@ -103,10 +124,27 @@ impl Frame {
     }
 }
 
+/// Best-effort request id of a line that failed [`Frame::parse`], so a
+/// rejection can still be correlated with the request that caused it.
+fn best_effort_id(line: &str) -> u64 {
+    Json::parse(line.trim())
+        .ok()
+        .and_then(|v| v.get("id").and_then(Json::as_f64))
+        .map(|x| x as u64)
+        .unwrap_or(0)
+}
+
 /// The `adpsgd worker` loop: serve run requests from `input` until EOF,
 /// writing heartbeats and terminal frames to `output`.  Frames are
 /// written whole-line under a lock, so the heartbeat thread can never
 /// interleave mid-line with a result.
+///
+/// A malformed or unexpected request frame does **not** kill the
+/// worker: it is answered with a [`Frame::Error`] (best-effort id) and
+/// the loop keeps serving.  Dying instead would look like a *crash* to
+/// the dispatcher (pipe EOF), which would respawn fresh children
+/// against the same poison input until `max_attempts` ran out — a
+/// deterministic bad request must surface as a deterministic failure.
 pub fn serve(input: impl BufRead, output: impl Write + Send + 'static) -> Result<()> {
     let out = Arc::new(Mutex::new(output));
     let write_frame = |frame: &Frame| -> Result<()> {
@@ -123,9 +161,22 @@ pub fn serve(input: impl BufRead, output: impl Write + Send + 'static) -> Result
         let (id, cfg) = match Frame::parse(&line) {
             Ok(Frame::RunRequest { id, cfg }) => (id, cfg),
             Ok(other) => {
-                bail!("worker: expected a run_request, got {other:?}")
+                write_frame(&Frame::Error {
+                    id: other.id(),
+                    message: format!(
+                        "worker: expected a run_request, got a {} frame",
+                        other.kind()
+                    ),
+                })?;
+                continue;
             }
-            Err(e) => return Err(e.context("worker: malformed request")),
+            Err(e) => {
+                write_frame(&Frame::Error {
+                    id: best_effort_id(&line),
+                    message: format!("worker: malformed request: {e:#}"),
+                })?;
+                continue;
+            }
         };
         // prove liveness while the (possibly long) run executes
         let stop = Arc::new(AtomicBool::new(false));
@@ -196,6 +247,72 @@ mod tests {
 
         assert!(Frame::parse("{\"type\":\"warp\",\"id\":1}").is_err());
         assert!(Frame::parse("not json").is_err());
+    }
+
+    #[test]
+    fn serve_survives_malformed_and_unexpected_frames() {
+        let mut quick = ExperimentConfig::default();
+        quick.name = "serve_resilient".into();
+        quick.nodes = 2;
+        quick.iters = 20;
+        quick.batch_per_node = 8;
+        quick.eval_every = 10;
+        quick.workload.input_dim = 16;
+        quick.workload.hidden = 8;
+        quick.workload.eval_batches = 2;
+        quick.optim.schedule = crate::config::LrSchedule::Const;
+        quick.sync.strategy = crate::period::Strategy::Constant;
+        quick.sync.period = 4;
+
+        // four poison lines, then a valid request: the worker must
+        // answer each defect with an Error frame and keep serving
+        // (id 5: a run_request whose cfg is not even a string)
+        let input = format!(
+            "not json at all\n\
+             {{\"type\":\"heartbeat\",\"id\":9}}\n\
+             {{\"type\":\"run_request\",\"id\":5,\"cfg\":42}}\n\
+             {{\"type\":\"warp\",\"id\":6}}\n\
+             {}",
+            (Frame::RunRequest { id: 3, cfg: quick }).to_line().unwrap(),
+        );
+        let out: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+        struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+        impl Write for SharedBuf {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        serve(input.as_bytes(), SharedBuf(Arc::clone(&out))).unwrap();
+        let bytes = out.lock().unwrap().clone();
+        let text = String::from_utf8(bytes).unwrap();
+        let frames: Vec<Frame> = text.lines().map(|l| Frame::parse(l).unwrap()).collect();
+        let error_for = |want: u64| {
+            frames
+                .iter()
+                .find_map(|f| match f {
+                    Frame::Error { id, message } if *id == want => Some(message.clone()),
+                    _ => None,
+                })
+                .unwrap_or_else(|| panic!("no error frame for id {want} in {text}"))
+        };
+        // garbage carries no id: best-effort 0
+        assert!(error_for(0).contains("malformed request"));
+        // a non-request frame echoes its own id
+        assert!(error_for(9).contains("expected a run_request"));
+        // a request whose cfg fails to parse keeps its id, so the
+        // dispatcher can fail that run deterministically
+        assert!(error_for(5).contains("malformed request"));
+        assert!(error_for(6).contains("malformed request"));
+        // and the valid request after all that still executes
+        let result = frames.iter().find_map(|f| match f {
+            Frame::RunResult { id: 3, report } => Some(report),
+            _ => None,
+        });
+        assert_eq!(result.expect("run 3 must still be served").iters, 20);
     }
 
     #[test]

@@ -35,6 +35,12 @@
 //! or version-skewed entry is discarded (and deleted best-effort), never
 //! trusted.  Writes are atomic (unique temp file + rename), so
 //! concurrent workers that race on the same key leave one valid entry.
+//!
+//! Long-lived cache directories are bounded by [`RunCache::gc`]
+//! (size/age eviction oldest-first plus a sweep of orphaned `.tmp`
+//! files), wired to `adpsgd cache-gc` and `adpsgd campaign
+//! --cache-max-bytes`.  Eviction is always safe: a probe of an evicted
+//! key simply recomputes.
 
 use crate::config::{spec, ExperimentConfig};
 use crate::coordinator::RunReport;
@@ -44,6 +50,7 @@ use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, SystemTime};
 
 /// Cache-entry schema version; bump on any layout change.
 const ENTRY_VERSION: f64 = 1.0;
@@ -235,6 +242,45 @@ pub fn report_from_json(v: &Json) -> Result<RunReport> {
 
 // ------------------------------------------------------------------ cache
 
+/// Eviction policy for [`RunCache::gc`].  The digest keys *configs*,
+/// not code, so long-lived cache directories accumulate entries that a
+/// semantic change has silently staled — GC bounds that growth.
+#[derive(Debug, Clone)]
+pub struct GcPolicy {
+    /// Evict oldest-first (by file mtime) until the directory's
+    /// `*.run.json` total is at most this many bytes.  `None` = no
+    /// size bound.
+    pub max_bytes: Option<u64>,
+    /// Evict every entry whose age (now − mtime) is at least this.
+    /// `None` = no age bound.
+    pub max_age: Option<Duration>,
+    /// Orphaned `.tmp` files (left by a writer that died between write
+    /// and rename) at least this old are swept.  The grace period
+    /// protects temp files of concurrent in-flight writers.
+    pub tmp_grace: Duration,
+}
+
+impl Default for GcPolicy {
+    fn default() -> Self {
+        GcPolicy { max_bytes: None, max_age: None, tmp_grace: Duration::from_secs(15 * 60) }
+    }
+}
+
+/// What one [`RunCache::gc`] pass did.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct GcStats {
+    /// `*.run.json` entries considered.
+    pub scanned: usize,
+    /// Entries surviving the pass.
+    pub kept: usize,
+    pub kept_bytes: u64,
+    /// Entries removed by the age or size bound.
+    pub evicted: usize,
+    pub evicted_bytes: u64,
+    /// Orphaned `.tmp` files removed.
+    pub tmp_swept: usize,
+}
+
 /// A directory of `<digest>.run.json` entries.
 pub struct RunCache {
     dir: PathBuf,
@@ -316,6 +362,87 @@ impl RunCache {
         std::fs::rename(&tmp, &path)
             .with_context(|| format!("publishing {}", path.display()))?;
         Ok(())
+    }
+
+    /// Evict entries per `policy` and sweep orphaned `.tmp` files.
+    ///
+    /// Age eviction runs first (age ≥ `max_age` goes), then the size
+    /// bound removes the oldest survivors (mtime order, path as the
+    /// deterministic tiebreak) until the directory's `*.run.json`
+    /// total fits in `max_bytes`.  Foreign files are never touched; a
+    /// missing directory is an empty cache, not an error.  Eviction is
+    /// always safe: a future probe of an evicted key recomputes.
+    pub fn gc(&self, policy: &GcPolicy) -> Result<GcStats> {
+        let mut stats = GcStats::default();
+        let entries = match std::fs::read_dir(&self.dir) {
+            Ok(rd) => rd,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(stats),
+            Err(e) => {
+                return Err(anyhow!(e))
+                    .with_context(|| format!("scanning run cache {}", self.dir.display()))
+            }
+        };
+        let now = SystemTime::now();
+        // mtimes in the future (clock skew) count as age zero
+        let age_of = |modified: SystemTime| now.duration_since(modified).unwrap_or_default();
+        let mut live: Vec<(PathBuf, u64, SystemTime)> = Vec::new();
+        for entry in entries {
+            let entry = entry.context("reading run cache directory")?;
+            let path = entry.path();
+            let Ok(meta) = entry.metadata() else { continue };
+            if !meta.is_file() {
+                continue;
+            }
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let modified = meta.modified().unwrap_or(std::time::UNIX_EPOCH);
+            if name.starts_with('.') && name.ends_with(".tmp") {
+                if age_of(modified) >= policy.tmp_grace {
+                    if std::fs::remove_file(&path).is_ok() {
+                        stats.tmp_swept += 1;
+                    }
+                }
+                continue;
+            }
+            if !name.ends_with(".run.json") {
+                continue;
+            }
+            stats.scanned += 1;
+            if let Some(max_age) = policy.max_age {
+                if age_of(modified) >= max_age {
+                    if std::fs::remove_file(&path).is_ok() {
+                        stats.evicted += 1;
+                        stats.evicted_bytes += meta.len();
+                    }
+                    continue;
+                }
+            }
+            live.push((path, meta.len(), modified));
+        }
+        live.sort_by(|a, b| a.2.cmp(&b.2).then_with(|| a.0.cmp(&b.0)));
+        let mut total: u64 = live.iter().map(|(_, len, _)| len).sum();
+        let mut survivors = live.into_iter();
+        if let Some(max_bytes) = policy.max_bytes {
+            for (path, len, _) in survivors.by_ref() {
+                if total <= max_bytes {
+                    // iterators have no peek-and-put-back: account the
+                    // entry we already pulled, then fall through
+                    stats.kept += 1;
+                    stats.kept_bytes += len;
+                    break;
+                }
+                if std::fs::remove_file(&path).is_ok() {
+                    stats.evicted += 1;
+                    stats.evicted_bytes += len;
+                    total -= len;
+                }
+            }
+        }
+        for (_, len, _) in survivors {
+            stats.kept += 1;
+            stats.kept_bytes += len;
+        }
+        Ok(stats)
     }
 }
 
@@ -407,6 +534,69 @@ mod tests {
             cfg_digest(&c2).unwrap(),
             "different snapshot bytes must bust"
         );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_missing_dir_is_an_empty_pass() {
+        let cache = RunCache::new("/nonexistent/adpsgd_gc_nowhere");
+        let stats = cache.gc(&GcPolicy::default()).unwrap();
+        assert_eq!(stats, GcStats::default());
+    }
+
+    #[test]
+    fn gc_sweeps_orphaned_tmp_but_respects_grace() {
+        let dir = tmpdir("gc_tmp");
+        let cache = RunCache::new(&dir);
+        let orphan = dir.join(".deadbeef.12345.0.tmp");
+        std::fs::write(&orphan, b"half-written").unwrap();
+        // default grace (15 min): a fresh temp file belongs to a
+        // possibly-live writer and must survive
+        let stats = cache.gc(&GcPolicy::default()).unwrap();
+        assert_eq!(stats.tmp_swept, 0);
+        assert!(orphan.exists());
+        // zero grace: swept
+        let stats = cache
+            .gc(&GcPolicy { tmp_grace: Duration::ZERO, ..GcPolicy::default() })
+            .unwrap();
+        assert_eq!(stats.tmp_swept, 1);
+        assert!(!orphan.exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_evicts_by_size_oldest_first_and_by_age() {
+        let dir = tmpdir("gc_size");
+        let cache = RunCache::new(&dir);
+        // three fake entries with distinct sizes; a foreign file that
+        // must never be touched
+        let keys = ["aaa0", "bbb1", "ccc2"];
+        for (i, key) in keys.iter().enumerate() {
+            std::fs::write(cache.path_for(key), vec![b'x'; 100 * (i + 1)]).unwrap();
+        }
+        std::fs::write(dir.join("README"), b"not a cache entry").unwrap();
+        let total = 100 + 200 + 300;
+        // no bounds: everything survives
+        let stats = cache.gc(&GcPolicy::default()).unwrap();
+        assert_eq!((stats.scanned, stats.kept, stats.evicted), (3, 3, 0));
+        assert_eq!(stats.kept_bytes, total);
+        // size bound below total: oldest entries go until it fits
+        // (same-mtime ties break by path, so eviction order is
+        // deterministic here too)
+        let stats = cache
+            .gc(&GcPolicy { max_bytes: Some(total - 1), ..GcPolicy::default() })
+            .unwrap();
+        assert!(stats.evicted >= 1, "{stats:?}");
+        assert!(stats.kept_bytes <= total - 1, "{stats:?}");
+        assert_eq!(stats.kept + stats.evicted, 3, "{stats:?}");
+        assert!(dir.join("README").exists(), "foreign files are never GC'd");
+        // age bound zero: every remaining entry is at least age zero
+        let stats = cache
+            .gc(&GcPolicy { max_age: Some(Duration::ZERO), ..GcPolicy::default() })
+            .unwrap();
+        assert_eq!(stats.kept, 0, "{stats:?}");
+        assert_eq!(stats.evicted, stats.scanned, "{stats:?}");
+        assert!(dir.join("README").exists());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -114,14 +114,13 @@ impl Campaign {
     }
 
     /// Execute through an explicit dispatch profile: job count, thread
-    /// vs subprocess workers, run-cache directory, crash retries (see
-    /// [`crate::dispatch`]).  Results are identical to [`Campaign::run`]
-    /// for any profile — parallelism, worker kind, and cache hits
-    /// change wall-clock, never reports.
+    /// vs subprocess workers, run-cache directory, crash retries, hang
+    /// deadline (see [`crate::dispatch`]).  Results are identical to
+    /// [`Campaign::run`] for any profile — parallelism, worker kind,
+    /// and cache hits change wall-clock, never reports.  A campaign
+    /// whose sweep resolved to zero runs yields an empty (but stable)
+    /// report rather than an error.
     pub fn execute(&self, opts: &DispatchOptions) -> Result<CampaignReport> {
-        if self.runs.is_empty() {
-            bail!("campaign {:?} has no runs", self.name);
-        }
         let wall = std::time::Instant::now();
         let dispatched = Dispatcher::new(opts.clone())
             .execute(&self.runs)
@@ -537,8 +536,22 @@ mod tests {
         // no axes -> exactly one base run, labeled with the campaign name
         assert_eq!(c.len(), 1);
         assert_eq!(c.runs()[0].label, "t");
-        // and a union of nothing has nothing to run
-        assert!(Campaign::union("u", []).unwrap().run().is_err());
+    }
+
+    #[test]
+    fn empty_campaign_reports_cleanly() {
+        // a sweep that resolves to zero runs (e.g. a union of nothing)
+        // is a valid empty result, not an error
+        let empty = Campaign::union("u", []).unwrap();
+        assert!(empty.is_empty());
+        let rep = empty.run().unwrap();
+        assert!(rep.runs.is_empty());
+        assert_eq!(rep.cache_hits(), 0);
+        assert_eq!(rep.total_wire_bytes(), 0);
+        // the stable summary is well-formed and names the campaign
+        let stable = rep.to_json_stable().to_string_compact();
+        assert!(stable.contains("\"campaign\":\"u\""), "{stable}");
+        assert!(stable.contains("\"run_summaries\":[]"), "{stable}");
     }
 
     #[test]

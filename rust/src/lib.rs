@@ -110,12 +110,18 @@
 //!
 //! Campaign execution routes through the [`dispatch`] subsystem: a
 //! persistent content-addressed run cache (same resolved config →
-//! cached [`coordinator::RunReport`], bit-identical), a work-stealing
-//! pool of in-process threads or `adpsgd worker` subprocesses (a
-//! line-delimited JSON protocol; crashed workers retry on another
-//! slot), and a deterministic merge — so `--jobs 8` and a warm cache
-//! change wall-clock, never results.  See [`dispatch`] for the
-//! experiment → dispatch → coordinator layering.
+//! cached [`coordinator::RunReport`], bit-identical, probed on the
+//! pool's own threads and bounded by `RunCache::gc` /
+//! `adpsgd cache-gc`), a work-stealing pool of in-process threads or
+//! `adpsgd worker` subprocesses (a line-delimited JSON protocol;
+//! crashed **or hung** workers — detected by heartbeat deadline,
+//! `--hang-timeout` — retry on another slot), and a deterministic
+//! merge — so `--jobs 8` and a warm cache change wall-clock, never
+//! results.  Subprocess children live in a process-wide shared
+//! [`dispatch::WorkerPool`], so sequential campaigns reuse warm
+//! workers and teardown is graceful (stdin EOF, bounded wait, then
+//! kill).  See [`dispatch`] for the experiment → dispatch →
+//! coordinator layering.
 //!
 //! (The historical `Trainer::new(cfg)?.run()` front-door is gone; every
 //! caller goes through [`experiment::Experiment`] now.)

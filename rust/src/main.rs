@@ -3,8 +3,9 @@
 //! ```text
 //! adpsgd run      [--config exp.toml] [--sync.strategy=adpsgd] [--nodes 16] ...
 //! adpsgd campaign [--strategies full,cpsgd,adpsgd,qsgd] [--jobs 8]
-//!                 [--workers subprocess] [--cache-dir DIR] ...
+//!                 [--workers subprocess] [--cache-dir DIR] [--hang-timeout 10] ...
 //! adpsgd figures  [--only fig1,fig4,...] [--quick] [--cache-dir DIR] [--out results]
+//! adpsgd cache-gc [--cache-dir DIR] [--max-bytes N] [--max-age-secs S]
 //! adpsgd models   [--artifacts artifacts]
 //! adpsgd worker
 //! adpsgd help
@@ -38,8 +39,11 @@ USAGE:
                     [--sweep-nodes LIST] [--bandwidths LIST] [--collectives LIST]
                     [--jobs N] [--workers thread|subprocess]
                     [--cache-dir DIR] [--no-cache] [--retries N]
+                    [--hang-timeout SECS] [--cache-max-bytes N]
                     [--quick] [--json] [--out DIR]
     adpsgd figures  [--only LIST] [--quick] [--cache-dir DIR] [--out DIR]
+    adpsgd cache-gc [--cache-dir DIR] [--max-bytes N] [--max-age-secs S]
+                    [--tmp-grace-secs S]
     adpsgd models   [--artifacts DIR]
     adpsgd worker   (dispatcher subprocess; speaks JSONL on stdin/stdout)
     adpsgd help
@@ -74,7 +78,15 @@ CAMPAIGN (cartesian sweep; every run is a full coordinator cluster):
                                            as `adpsgd worker` children over a
                                            line-delimited JSON protocol;
                                            crashed children are retried on
-                                           another slot (--retries, default 3)
+                                           another slot (--retries, default 3);
+                                           children are pooled process-wide, so
+                                           sequential campaigns reuse warm
+                                           workers instead of respawning
+    --hang-timeout SECS                    declare a subprocess worker hung
+                                           after this much mid-run silence
+                                           (it heartbeats every 0.5s), kill
+                                           it, and retry the run on another
+                                           slot (default 10)
     --cache-dir DIR                        persistent content-addressed run
                                            cache: the same fully-resolved run
                                            config (strategy knobs, seed,
@@ -85,6 +97,9 @@ CAMPAIGN (cartesian sweep; every run is a full coordinator cluster):
                                            result-affecting knob busts the key
                                            ($ADPSGD_RUN_CACHE sets a default)
     --no-cache                             ignore any default cache dir
+    --cache-max-bytes N                    after the campaign, GC the run
+                                           cache down to N bytes (oldest
+                                           entries evicted first)
     --quick                                small base geometry (no --config)
     --out DIR                              writes <name>.campaign.json there
                                            (the *stable* summary: re-running
@@ -101,6 +116,13 @@ FIGURES:
     --cache-dir DIR  run cache shared by every figure campaign (regenerating
                    a subset of figures reuses the others' finished runs)
     --out DIR      write the CSV series behind each panel
+
+CACHE-GC (bound a long-lived run-cache directory):
+    --cache-dir DIR      directory to collect ($ADPSGD_RUN_CACHE if omitted)
+    --max-bytes N        evict oldest entries until the total fits N bytes
+    --max-age-secs S     evict entries older than S seconds
+    --tmp-grace-secs S   sweep orphaned .tmp files older than S (default 900)
+    Eviction is always safe: an evicted key is recomputed on its next probe.
 ";
 
 fn main() {
@@ -116,6 +138,7 @@ fn real_main() -> Result<()> {
         Some("run") => cmd_run(&args),
         Some("campaign") => cmd_campaign(&args),
         Some("figures") => cmd_figures(&args),
+        Some("cache-gc") => cmd_cache_gc(&args),
         Some("models") => cmd_models(&args),
         // the dispatcher's subprocess end: serve run requests over
         // stdin/stdout until EOF
@@ -223,7 +246,7 @@ fn csv_list(args: &Args, key: &str) -> Option<Vec<String>> {
 
 /// Dispatch profile from the campaign flags: `--jobs` (with the legacy
 /// `--parallel` alias), `--workers`, `--cache-dir`/`--no-cache`,
-/// `--retries`.
+/// `--retries`, `--hang-timeout`.
 fn dispatch_options(args: &Args) -> Result<DispatchOptions> {
     let mut opts = DispatchOptions::default();
     opts.jobs = match (args.get("jobs"), args.get("parallel")) {
@@ -242,6 +265,15 @@ fn dispatch_options(args: &Args) -> Result<DispatchOptions> {
         opts.cache_dir = Some(dir.into());
     }
     opts.max_attempts = args.get_usize("retries", opts.max_attempts)?.max(1);
+    if let Some(secs) = args.get("hang-timeout") {
+        let secs: f64 = secs.parse().context("--hang-timeout")?;
+        // the upper bound keeps Duration::from_secs_f64 from panicking
+        // on absurd-but-finite values
+        if !secs.is_finite() || secs <= 0.0 || secs > 86_400.0 * 365.0 {
+            bail!("--hang-timeout must be a positive number of seconds (≤ 1 year), got {secs}");
+        }
+        opts.heartbeat_timeout = std::time::Duration::from_secs_f64(secs);
+    }
     Ok(opts)
 }
 
@@ -260,6 +292,8 @@ fn cmd_campaign(args: &Args) -> Result<()> {
             "workers",
             "cache-dir",
             "retries",
+            "hang-timeout",
+            "cache-max-bytes",
         ],
     )?;
     let overrides = cli_overrides(args);
@@ -331,6 +365,18 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     builder = builder.collectives(&algos);
 
     let opts = dispatch_options(args)?;
+    // validate the post-campaign GC request up front: a bad flag must
+    // fail *before* hours of sweep, not after
+    let cache_max_bytes: Option<u64> = match args.get("cache-max-bytes") {
+        Some(max) => {
+            let max = max.parse().context("--cache-max-bytes")?;
+            if opts.cache_dir.is_none() {
+                bail!("--cache-max-bytes needs a run cache (--cache-dir or $ADPSGD_RUN_CACHE)");
+            }
+            Some(max)
+        }
+        None => None,
+    };
     let campaign = builder.build()?;
 
     let json_out = args.flag("json");
@@ -376,6 +422,60 @@ fn cmd_campaign(args: &Args) -> Result<()> {
     if !json_out {
         println!("wrote {}", path.display());
     }
+
+    if let Some(max) = cache_max_bytes {
+        let dir = opts.cache_dir.as_ref().expect("validated before the campaign ran");
+        let stats = adpsgd::dispatch::RunCache::new(dir)
+            .gc(&adpsgd::dispatch::GcPolicy { max_bytes: Some(max), ..Default::default() })
+            .with_context(|| format!("collecting run cache {}", dir.display()))?;
+        if !json_out {
+            println!("{}", gc_summary(dir, &stats));
+        }
+    }
+    Ok(())
+}
+
+fn gc_summary(dir: &std::path::Path, stats: &adpsgd::dispatch::GcStats) -> String {
+    format!(
+        "cache-gc {}: {} entries scanned, {} evicted ({} bytes), {} kept ({} bytes), {} orphaned tmp swept",
+        dir.display(),
+        stats.scanned,
+        stats.evicted,
+        stats.evicted_bytes,
+        stats.kept,
+        stats.kept_bytes,
+        stats.tmp_swept,
+    )
+}
+
+/// `adpsgd cache-gc`: bound a long-lived run-cache directory by size
+/// and/or age, and sweep orphaned temp files.
+fn cmd_cache_gc(args: &Args) -> Result<()> {
+    reject_unknown_options(
+        args,
+        &["cache-dir", "max-bytes", "max-age-secs", "tmp-grace-secs"],
+    )?;
+    let dir = args
+        .get("cache-dir")
+        .map(std::path::PathBuf::from)
+        .or_else(dispatch::default_cache_dir)
+        .ok_or_else(|| {
+            anyhow::anyhow!("no cache directory (pass --cache-dir or set $ADPSGD_RUN_CACHE)")
+        })?;
+    let mut policy = adpsgd::dispatch::GcPolicy::default();
+    if let Some(b) = args.get("max-bytes") {
+        policy.max_bytes = Some(b.parse().context("--max-bytes")?);
+    }
+    if let Some(s) = args.get("max-age-secs") {
+        policy.max_age = Some(std::time::Duration::from_secs(s.parse().context("--max-age-secs")?));
+    }
+    if let Some(s) = args.get("tmp-grace-secs") {
+        policy.tmp_grace = std::time::Duration::from_secs(s.parse().context("--tmp-grace-secs")?);
+    }
+    let stats = adpsgd::dispatch::RunCache::new(&dir)
+        .gc(&policy)
+        .with_context(|| format!("collecting run cache {}", dir.display()))?;
+    println!("{}", gc_summary(&dir, &stats));
     Ok(())
 }
 

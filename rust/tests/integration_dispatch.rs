@@ -1,14 +1,24 @@
 //! Integration tests for the dispatch subsystem: the content-addressed
 //! run cache end to end (hash stability, bit-identical hits, deliberate
-//! busting, corruption handling), subprocess workers over the JSONL
-//! protocol (including a killed worker retried on a fresh child), and
-//! the deterministic merge across job counts.
+//! busting, corruption handling, GC), subprocess workers over the JSONL
+//! protocol (including a killed worker retried on a fresh child, a
+//! SIGSTOPped worker recovered by the heartbeat deadline, and stale
+//! terminal frames discarded), and the deterministic merge across job
+//! counts.
+//!
+//! Subprocess tests that kill or freeze workers use a private
+//! [`WorkerPool`] so they never target another test's children through
+//! the process-wide shared pool.
 
 use adpsgd::config::{ExperimentConfig, LrSchedule, StrategySpec};
-use adpsgd::dispatch::{runcache, DispatchOptions, Dispatcher, WorkerKind};
+use adpsgd::dispatch::{
+    runcache, DispatchOptions, Dispatcher, GcPolicy, RunCache, WorkerKind, WorkerPool,
+};
 use adpsgd::experiment::{Campaign, RunSpec};
 use adpsgd::period::Strategy;
 use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
 
 fn tmpdir(tag: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!("adpsgd_it_dispatch_{tag}_{}", std::process::id()));
@@ -304,13 +314,18 @@ fn killed_worker_is_retried_on_a_fresh_child() {
     cfg.variance_every = 0;
     let runs = vec![RunSpec { label: "survivor".into(), cfg: cfg.clone() }];
 
-    let dispatcher = Dispatcher::new(DispatchOptions {
-        jobs: Some(1),
-        workers: WorkerKind::Subprocess,
-        worker_exe: Some(worker_exe()),
-        cache_dir: None,
-        ..DispatchOptions::default()
-    });
+    // a private pool: the assassin must never see another test's
+    // workers through the process-wide shared pool
+    let dispatcher = Dispatcher::with_pool(
+        DispatchOptions {
+            jobs: Some(1),
+            workers: WorkerKind::Subprocess,
+            worker_exe: Some(worker_exe()),
+            cache_dir: None,
+            ..DispatchOptions::default()
+        },
+        Arc::new(WorkerPool::new()),
+    );
     let pids = dispatcher.worker_pids();
 
     // assassin: kill the first worker child as soon as it appears
@@ -325,18 +340,24 @@ fn killed_worker_is_retried_on_a_fresh_child() {
                     .arg("-c")
                     .arg(format!("kill {pid}"))
                     .status();
-                return true;
+                return Some(pid);
             }
             std::thread::sleep(std::time::Duration::from_millis(10));
         }
-        false
+        None
     });
 
     let merged = dispatcher.execute(&runs).expect("dispatch survives a killed worker");
-    assert!(assassin.join().unwrap(), "the assassin must have found a worker to kill");
+    let victim = assassin.join().unwrap().expect("the assassin must have found a worker");
     assert!(dispatcher.retries() >= 1, "the kill must have caused at least one retry");
     assert_eq!(merged.len(), 1);
     assert!(!merged[0].from_cache);
+    // the crash path prunes the dead child's pid immediately: no
+    // observer (or assassin) can ever target it again
+    assert!(
+        !dispatcher.worker_pids().lock().unwrap().contains(&victim),
+        "a crashed worker's pid must be pruned from the registry"
+    );
 
     // and the retried result is exactly the undisturbed result
     let undisturbed = Dispatcher::new(DispatchOptions {
@@ -351,4 +372,204 @@ fn killed_worker_is_retried_on_a_fresh_child() {
         stable_report_json(&undisturbed[0].report),
         "a retried run must reproduce the undisturbed run bit-for-bit"
     );
+}
+
+// ------------------------------------------------------------ supervision
+
+#[test]
+fn stopped_worker_is_declared_hung_and_run_retried() {
+    // a SIGSTOPped child keeps its pipe open, so EOF never comes — only
+    // the heartbeat deadline can unstick the dispatch
+    let mut cfg = quick_base();
+    cfg.name = "frozen".into();
+    cfg.iters = 8000;
+    cfg.eval_every = 4000;
+    cfg.variance_every = 0;
+    let runs = vec![RunSpec { label: "frozen".into(), cfg: cfg.clone() }];
+
+    let dispatcher = Dispatcher::with_pool(
+        DispatchOptions {
+            jobs: Some(1),
+            workers: WorkerKind::Subprocess,
+            worker_exe: Some(worker_exe()),
+            cache_dir: None,
+            heartbeat_timeout: Duration::from_millis(2000),
+            ..DispatchOptions::default()
+        },
+        Arc::new(WorkerPool::new()),
+    );
+    let pids = dispatcher.worker_pids();
+
+    // freezer: SIGSTOP the first worker child as soon as it appears
+    let freezer = std::thread::spawn(move || {
+        for _ in 0..500 {
+            let victim = pids.lock().unwrap().first().copied();
+            if let Some(pid) = victim {
+                let _ = std::process::Command::new("sh")
+                    .arg("-c")
+                    .arg(format!("kill -STOP {pid}"))
+                    .status();
+                return Some(pid);
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        None
+    });
+
+    let start = std::time::Instant::now();
+    let merged = dispatcher.execute(&runs).expect("dispatch recovers from a frozen worker");
+    let frozen = freezer.join().unwrap().expect("the freezer must have found a worker");
+    assert!(
+        dispatcher.retries() >= 1,
+        "the missed heartbeat deadline must surface as a crash retry"
+    );
+    assert!(
+        !dispatcher.worker_pids().lock().unwrap().contains(&frozen),
+        "the hung child must be killed and its pid pruned"
+    );
+    // generous sanity bound — without hang detection this blocks forever
+    assert!(
+        start.elapsed() < std::time::Duration::from_secs(120),
+        "recovery must be deadline-driven, not luck"
+    );
+    assert_eq!(merged.len(), 1);
+    assert!(!merged[0].from_cache);
+
+    let undisturbed = Dispatcher::new(DispatchOptions {
+        jobs: Some(1),
+        cache_dir: None,
+        ..DispatchOptions::default()
+    })
+    .execute(&runs)
+    .unwrap();
+    assert_eq!(
+        stable_report_json(&merged[0].report),
+        stable_report_json(&undisturbed[0].report),
+        "the retried run must reproduce the undisturbed run bit-for-bit"
+    );
+}
+
+#[test]
+fn stale_terminal_frames_are_discarded_not_protocol_violations() {
+    // a shim worker that injects a terminal frame for an abandoned
+    // request id (as a child reused after a heartbeat timeout would)
+    // before handing the session to the real worker.  Under the old
+    // reader this was a "protocol violation" that burned a crash retry
+    // per attempt against deterministic input.
+    let dir = tmpdir("stale");
+    let script = dir.join("stale_worker.sh");
+    std::fs::write(
+        &script,
+        format!(
+            "#!/bin/sh\n\
+             read -r line\n\
+             printf '{{\"type\":\"error\",\"id\":0,\"message\":\"stale\"}}\\n'\n\
+             {{ printf '%s\\n' \"$line\"; cat; }} | {:?} worker\n",
+            worker_exe()
+        ),
+    )
+    .unwrap();
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::PermissionsExt;
+        std::fs::set_permissions(&script, std::fs::Permissions::from_mode(0o755)).unwrap();
+    }
+
+    let mut cfg = quick_base();
+    cfg.name = "stale_ok".into();
+    let runs = vec![RunSpec { label: "stale_ok".into(), cfg: cfg.clone() }];
+    let dispatcher = Dispatcher::with_pool(
+        DispatchOptions {
+            jobs: Some(1),
+            workers: WorkerKind::Subprocess,
+            worker_exe: Some(script.clone()),
+            cache_dir: None,
+            ..DispatchOptions::default()
+        },
+        Arc::new(WorkerPool::new()),
+    );
+    let merged = dispatcher.execute(&runs).expect("a stale frame must not fail the dispatch");
+    assert_eq!(
+        dispatcher.retries(),
+        0,
+        "a stale terminal frame must be discarded, not misread as a crash"
+    );
+    assert_eq!(merged.len(), 1);
+
+    let undisturbed = Dispatcher::new(DispatchOptions {
+        jobs: Some(1),
+        cache_dir: None,
+        ..DispatchOptions::default()
+    })
+    .execute(&runs)
+    .unwrap();
+    assert_eq!(
+        stable_report_json(&merged[0].report),
+        stable_report_json(&undisturbed[0].report),
+        "the run served after a stale frame must be bit-identical"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ------------------------------------------------------------------- gc
+
+#[test]
+fn run_cache_gc_bounds_size_sweeps_tmp_and_survivors_still_hit() {
+    let cache_dir = tmpdir("gc");
+    let base = quick_base();
+    let opts = DispatchOptions {
+        jobs: Some(2),
+        cache_dir: Some(cache_dir.clone()),
+        ..DispatchOptions::default()
+    };
+    let campaign = || {
+        Campaign::builder("gc", base.clone())
+            .strategy("cpsgd", base.sync.spec_of(Strategy::Constant))
+            .strategy("full", StrategySpec::Full)
+            .build()
+            .unwrap()
+    };
+    campaign().execute(&opts).unwrap();
+    let entry_bytes: Vec<u64> = std::fs::read_dir(&cache_dir)
+        .unwrap()
+        .filter_map(|e| {
+            let e = e.unwrap();
+            e.file_name()
+                .to_string_lossy()
+                .ends_with(".run.json")
+                .then(|| e.metadata().unwrap().len())
+        })
+        .collect();
+    assert_eq!(entry_bytes.len(), 2, "both runs must be cached");
+    // an orphaned temp file, as left by a writer that died mid-publish
+    let orphan = cache_dir.join(".feedface.999.0.tmp");
+    std::fs::write(&orphan, b"half-written").unwrap();
+
+    // room for exactly the largest single entry: the older one goes
+    let max = *entry_bytes.iter().max().unwrap();
+    let cache = RunCache::new(&cache_dir);
+    let stats = cache
+        .gc(&GcPolicy {
+            max_bytes: Some(max),
+            tmp_grace: Duration::ZERO,
+            ..GcPolicy::default()
+        })
+        .unwrap();
+    assert_eq!((stats.scanned, stats.evicted, stats.kept), (2, 1, 1), "{stats:?}");
+    assert!(stats.kept_bytes <= max, "{stats:?}");
+    assert_eq!(stats.tmp_swept, 1, "{stats:?}");
+    assert!(!orphan.exists());
+
+    // the survivor still hits; the evicted run recomputes (and re-caches)
+    let warm = campaign().execute(&opts).unwrap();
+    assert_eq!(warm.cache_hits(), 1, "exactly the surviving entry must hit");
+
+    // age-based eviction clears everything that remains
+    let stats = cache
+        .gc(&GcPolicy { max_age: Some(Duration::ZERO), ..GcPolicy::default() })
+        .unwrap();
+    assert_eq!(stats.evicted, stats.scanned, "{stats:?}");
+    let cold = campaign().execute(&opts).unwrap();
+    assert_eq!(cold.cache_hits(), 0, "an emptied cache recomputes everything");
+    std::fs::remove_dir_all(&cache_dir).ok();
 }
