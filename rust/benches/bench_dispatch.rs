@@ -9,12 +9,14 @@
 //! Headline numbers: runs/sec at jobs ∈ {1, 2, 4, 8} on an 8-run
 //! campaign, the cache hit rate, cold/warm wall ratio and warm-probe
 //! runs/sec, the per-run overhead of subprocess dispatch vs in-process
-//! threads, and the per-campaign overhead of respawning a worker pool
-//! instead of reusing the shared one.
+//! threads, the per-campaign overhead of respawning a worker pool
+//! instead of reusing the shared one, and the loopback `adpsgd agent`
+//! columns (remote runs/sec and the per-run TCP-fabric overhead vs
+//! local threads).
 
 use adpsgd::collective::Algo;
 use adpsgd::config::{ExperimentConfig, LrSchedule, StrategySpec};
-use adpsgd::dispatch::{DispatchOptions, Dispatcher, WorkerKind, WorkerPool};
+use adpsgd::dispatch::{Agent, AgentConfig, DispatchOptions, Dispatcher, WorkerKind, WorkerPool};
 use adpsgd::experiment::Campaign;
 use adpsgd::period::Strategy;
 use adpsgd::util::json::Json;
@@ -204,6 +206,51 @@ fn main() {
             pairs.push(("pool_reuse_wall_secs", Json::num(reuse)));
             pairs.push(("pool_respawn_wall_secs", Json::num(respawn)));
             pairs.push(("pool_respawn_overhead_secs_per_campaign", Json::num(per_campaign)));
+
+            // -- remote loopback: the TCP agent fabric vs local threads ----
+            // an in-process agent on 127.0.0.1 whose children run the
+            // real binary: the overhead measured is handshake + JSON
+            // frames over loopback + the agent's child supervision
+            let agent_cfg = AgentConfig {
+                listen: "127.0.0.1:0".into(),
+                slots: 2,
+                worker_exe: Some(exe.clone()),
+                ..AgentConfig::default()
+            };
+            match Agent::spawn(agent_cfg, Arc::new(WorkerPool::new())) {
+                Ok(addr) => {
+                    let remote = two(&DispatchOptions {
+                        workers: WorkerKind::Remote,
+                        remote: vec![addr.to_string()],
+                        cache_dir: None,
+                        ..DispatchOptions::default()
+                    });
+                    assert_eq!(
+                        threads.to_json_stable().to_string_compact(),
+                        remote.to_json_stable().to_string_compact(),
+                        "remote loopback must reproduce the local stable summary"
+                    );
+                    let overhead =
+                        (remote.wall_secs - threads.wall_secs) / remote.runs.len() as f64;
+                    println!(
+                        "dispatch/remote_loopback    thread {:>8.2?} vs agent {:>8.2?} ({:.2} runs/sec, {:+.3}s/run)",
+                        std::time::Duration::from_secs_f64(threads.wall_secs),
+                        std::time::Duration::from_secs_f64(remote.wall_secs),
+                        remote.runs_per_sec(),
+                        overhead,
+                    );
+                    pairs.push((
+                        "remote_loopback_runs_per_sec",
+                        Json::num(remote.runs_per_sec()),
+                    ));
+                    pairs.push(("remote_overhead_secs_per_run", Json::num(overhead)));
+                }
+                Err(e) => {
+                    println!("dispatch/remote_loopback    skipped (agent bind failed: {e:#})");
+                    pairs.push(("remote_loopback_runs_per_sec", Json::Null));
+                    pairs.push(("remote_overhead_secs_per_run", Json::Null));
+                }
+            }
         }
         _ => {
             println!("dispatch/subprocess         skipped (worker binary unavailable)");
@@ -212,6 +259,8 @@ fn main() {
             pairs.push(("pool_reuse_wall_secs", Json::Null));
             pairs.push(("pool_respawn_wall_secs", Json::Null));
             pairs.push(("pool_respawn_overhead_secs_per_campaign", Json::Null));
+            pairs.push(("remote_loopback_runs_per_sec", Json::Null));
+            pairs.push(("remote_overhead_secs_per_run", Json::Null));
         }
     }
 

@@ -4,8 +4,11 @@
 # smoke sweep (strategy × collective) + a cold-vs-warm run-cache smoke
 # (the second invocation must be answered from the cache and write a
 # byte-identical summary) + a cache-gc smoke (size-bound eviction must
-# shrink the warm cache) + a hang smoke (a SIGSTOPped subprocess
-# worker must be recovered under the heartbeat deadline) + the
+# shrink the warm cache, previewed by --dry-run) + a hang smoke (a
+# SIGSTOPped subprocess worker must be recovered under the heartbeat
+# deadline) + a remote-agent loopback smoke (a campaign dispatched to a
+# local `adpsgd agent` must write a byte-identical stable summary, and
+# a warm agent must answer the re-run from its own cache) + the
 # campaign/dispatch benches (emit BENCH_campaign.json /
 # BENCH_dispatch.json for the perf trajectory).  Referenced from
 # ROADMAP.md; CI and pre-merge checks should run exactly this.
@@ -45,16 +48,23 @@ cmp /tmp/adpsgd_verify_cold/cache_smoke.campaign.json /tmp/adpsgd_verify_warm/ca
     || { echo "verify: FAIL — cold/warm campaign summaries differ"; exit 1; }
 echo "   cache smoke OK (8/8 hits, byte-identical summary)"
 
-echo "== verify: cache-gc smoke =="
+echo "== verify: cache-gc smoke (dry-run preview, then real) =="
 # the warm cache above holds 8 entries; a 1-byte bound must evict them all
 entries_before=$(find "${CACHE_DIR}" -name '*.run.json' | wc -l)
 [ "${entries_before}" -eq 8 ] \
     || { echo "verify: FAIL — expected 8 cache entries before gc, found ${entries_before}"; exit 1; }
+cargo run --release -- cache-gc --cache-dir "${CACHE_DIR}" --max-bytes 1 --dry-run \
+    | tee /tmp/adpsgd_verify_gc_dry.log
+grep -q "8 would be evicted" /tmp/adpsgd_verify_gc_dry.log \
+    || { echo "verify: FAIL — dry run did not plan all 8 evictions"; exit 1; }
+entries_dry=$(find "${CACHE_DIR}" -name '*.run.json' | wc -l)
+[ "${entries_dry}" -eq 8 ] \
+    || { echo "verify: FAIL — --dry-run deleted entries (${entries_dry} left)"; exit 1; }
 cargo run --release -- cache-gc --cache-dir "${CACHE_DIR}" --max-bytes 1
 entries_after=$(find "${CACHE_DIR}" -name '*.run.json' | wc -l)
 [ "${entries_after}" -eq 0 ] \
     || { echo "verify: FAIL — cache-gc left ${entries_after} entries above the size bound"; exit 1; }
-echo "   cache-gc smoke OK (${entries_before} -> ${entries_after} entries)"
+echo "   cache-gc smoke OK (${entries_before} -> ${entries_after} entries, dry-run previewed)"
 
 echo "== verify: subprocess-worker smoke (tight hang deadline) =="
 cargo run --release -- campaign --quick --name worker_smoke --jobs 2 --workers subprocess \
@@ -63,6 +73,46 @@ cargo run --release -- campaign --quick --name worker_smoke --jobs 2 --workers s
 
 echo "== verify: hang smoke (stopped worker recovered under deadline) =="
 cargo test --release --test integration_dispatch stopped_worker_is_declared_hung_and_run_retried
+
+echo "== verify: remote-agent loopback smoke =="
+AGENT_CACHE=/tmp/adpsgd_verify_agent_cache
+AGENT_LOG=/tmp/adpsgd_verify_agent.log
+rm -rf "${AGENT_CACHE}" "${AGENT_LOG}" \
+    /tmp/adpsgd_verify_remote_local /tmp/adpsgd_verify_remote /tmp/adpsgd_verify_remote2
+./target/release/adpsgd agent --listen 127.0.0.1:0 --slots 2 --token verify-secret \
+    --cache-dir "${AGENT_CACHE}" > "${AGENT_LOG}" 2>&1 &
+AGENT_PID=$!
+trap 'kill "${AGENT_PID}" 2>/dev/null || true' EXIT
+for _ in $(seq 50); do
+    grep -q "agent: listening on" "${AGENT_LOG}" && break
+    sleep 0.2
+done
+AGENT_ADDR=$(sed -n 's/^agent: listening on \([^ ]*\).*/\1/p' "${AGENT_LOG}" | head -n1)
+[ -n "${AGENT_ADDR}" ] \
+    || { echo "verify: FAIL — agent did not announce its address"; cat "${AGENT_LOG}"; exit 1; }
+# the same 8-run quick campaign, locally and through the loopback agent:
+# the stable summaries must be byte-identical
+cargo run --release -- campaign --quick --name remote_smoke --jobs 4 \
+    --no-cache --out /tmp/adpsgd_verify_remote_local
+cargo run --release -- campaign --quick --name remote_smoke --workers remote \
+    --remote "${AGENT_ADDR}" --remote-token verify-secret \
+    --no-cache --out /tmp/adpsgd_verify_remote
+cmp /tmp/adpsgd_verify_remote_local/remote_smoke.campaign.json \
+    /tmp/adpsgd_verify_remote/remote_smoke.campaign.json \
+    || { echo "verify: FAIL — remote and local stable summaries differ"; exit 1; }
+# a warm agent answers the re-run from its own cache (8/8 hits in its log)
+cargo run --release -- campaign --quick --name remote_smoke --workers remote \
+    --remote "${AGENT_ADDR}" --remote-token verify-secret \
+    --no-cache --out /tmp/adpsgd_verify_remote2
+agent_hits=$(grep -c "answered from cache" "${AGENT_LOG}" || true)
+[ "${agent_hits}" -ge 8 ] \
+    || { echo "verify: FAIL — warm agent served ${agent_hits}/8 runs from its cache"; cat "${AGENT_LOG}"; exit 1; }
+cmp /tmp/adpsgd_verify_remote/remote_smoke.campaign.json \
+    /tmp/adpsgd_verify_remote2/remote_smoke.campaign.json \
+    || { echo "verify: FAIL — warm-agent re-run summary differs"; exit 1; }
+kill "${AGENT_PID}" 2>/dev/null || true
+trap - EXIT
+echo "   remote-agent smoke OK (byte-identical summary, ${agent_hits}/8 agent cache hits)"
 
 echo "== verify: campaign scheduler bench (fast) =="
 ADPSGD_BENCH_FAST=1 cargo bench --bench bench_campaign

@@ -3,11 +3,14 @@
 //! [`crate::experiment::Campaign`] describes *what* to run; this
 //! subsystem decides *how*: which runs are already answered by the
 //! persistent content-addressed [`runcache`], how many execute
-//! concurrently, whether they execute on in-process threads or in
+//! concurrently, whether they execute on in-process threads, in
 //! `adpsgd worker` subprocesses speaking the [`proto`] line protocol,
-//! and how crashed or *hung* workers are recovered — all behind
-//! [`pool::Dispatcher`], which merges results deterministically in
-//! declaration order no matter the parallelism or completion order.
+//! or on remote `adpsgd agent` daemons over the [`net`] TCP transport
+//! (mixed local+remote slots drain one queue), and how crashed or
+//! *hung* workers — including silent or disconnected agents — are
+//! recovered: all behind [`pool::Dispatcher`], which merges results
+//! deterministically in declaration order no matter the parallelism,
+//! worker mix, or completion order.
 //!
 //! Supervision (see [`pool`]): subprocess reads are deadline-aware, so
 //! a child that stops heartbeating ([`proto::HEARTBEAT_EVERY`]) for
@@ -45,12 +48,14 @@
 //! --cache-dir` gives all six figure campaigns memoization without
 //! touching their definitions.
 
+pub mod net;
 pub mod pool;
 pub mod proto;
 pub mod runcache;
 
+pub use net::{Agent, AgentConfig, RemoteAgentClient};
 pub use pool::{DispatchOptions, DispatchedRun, Dispatcher, WorkerKind, WorkerPool};
-pub use runcache::{cfg_digest, GcPolicy, GcStats, RunCache};
+pub use runcache::{cfg_digest, GcPlan, GcPolicy, GcStats, GcVictim, RunCache};
 
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -81,6 +86,33 @@ pub fn default_cache_dir() -> Option<PathBuf> {
 /// Launchers call this once before building campaigns.
 pub fn set_default_cache_dir(dir: Option<PathBuf>) {
     *default_cache_cell().lock().expect("default cache cell") = dir;
+}
+
+fn default_options_cell() -> &'static Mutex<Option<DispatchOptions>> {
+    static CELL: OnceLock<Mutex<Option<DispatchOptions>>> = OnceLock::new();
+    CELL.get_or_init(|| Mutex::new(None))
+}
+
+/// The process-wide default dispatch profile, used by
+/// [`crate::experiment::Campaign::run`] (the implicit-profile entry
+/// point every `figures/*` campaign goes through).  Unset by default —
+/// then `run()` behaves exactly as before: thread workers, the
+/// campaign's own parallelism, the process-default cache dir.  A
+/// launcher that sets it (`adpsgd figures --jobs/--workers/--remote/…`)
+/// gives every implicit campaign the full pool/supervision/remote
+/// treatment without touching campaign definitions.
+pub fn default_options() -> DispatchOptions {
+    default_options_cell()
+        .lock()
+        .expect("default options cell")
+        .clone()
+        .unwrap_or_default()
+}
+
+/// Install (or with `None` clear) the process-default dispatch profile.
+/// Launchers call this once before building campaigns.
+pub fn set_default_options(opts: Option<DispatchOptions>) {
+    *default_options_cell().lock().expect("default options cell") = opts;
 }
 
 #[cfg(test)]

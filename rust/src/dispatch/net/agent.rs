@@ -1,0 +1,495 @@
+//! The `adpsgd agent` daemon: remote run capacity behind one TCP port.
+//!
+//! An agent accepts dispatcher connections, authenticates each with the
+//! `Hello`/`HelloAck` handshake (protocol version — enforced by frame
+//! parsing — plus an optional shared-secret token), advertises its slot
+//! capacity, and then serves [`Frame::RunRequest`]s concurrently:
+//! every request gets its own handler thread (at most `slots` in
+//! flight per connection — requests past the advertised capacity are
+//! refused with an `Error` frame — with execution additionally bounded
+//! by a process-wide slot semaphore, so several connections cannot
+//! oversubscribe the machine), its own heartbeat pump (armed from the
+//! moment the request is read, so even time spent *waiting* for a slot
+//! re-arms the dispatcher's deadline), and executes in a warm
+//! `adpsgd worker` child checked out of a [`WorkerPool`] — the exact
+//! supervision stack local subprocess dispatch uses, including the
+//! heartbeat-deadline hang kill.
+//!
+//! Outcome mapping onto terminal frames: a finished run answers
+//! [`Frame::RunResult`]; a deterministic failure answers
+//! [`Frame::Error`] (the dispatcher aborts); a crashed or hung child
+//! answers [`Frame::Crashed`] (the dispatcher *requeues*, possibly onto
+//! this same agent, which then uses a fresh child).  If the agent
+//! process itself dies, the dispatcher sees the connection drop and
+//! requeues through the same path — there is no outcome a remote
+//! failure can produce that the local supervision model doesn't already
+//! have.
+//!
+//! With `--cache-dir` the agent probes its own
+//! [`RunCache`] before executing, so a warm agent
+//! answers repeats from disk without recomputation (and caches what it
+//! does compute) — cache hits are logged, and the verify script asserts
+//! them on its warm re-run.
+
+use crate::dispatch::net::transport;
+use crate::dispatch::pool::{Outcome, WorkerPool};
+use crate::dispatch::proto::{Frame, HEARTBEAT_EVERY};
+use crate::dispatch::runcache::RunCache;
+use anyhow::{Context, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// How an agent serves (CLI: `adpsgd agent`).
+#[derive(Debug, Clone)]
+pub struct AgentConfig {
+    /// Bind address, e.g. `0.0.0.0:7070`; port 0 picks a free port
+    /// (the bound address is printed on stdout either way).
+    pub listen: String,
+    /// Concurrent run capacity advertised to every client and enforced
+    /// across all connections by a slot semaphore.
+    pub slots: usize,
+    /// Shared secret clients must present in their `Hello`; `None`
+    /// accepts any client.
+    pub token: Option<String>,
+    /// Agent-side run cache: probed before executing, written after.
+    /// `None` disables (every request executes).
+    pub cache_dir: Option<PathBuf>,
+    /// Binary for the agent's worker children; `None` = this
+    /// executable (tests and benches, whose own executable has no
+    /// `worker` subcommand, must set it).
+    pub worker_exe: Option<PathBuf>,
+    /// Supervision deadline for the agent's worker children — the same
+    /// meaning as `DispatchOptions::heartbeat_timeout` locally.
+    pub heartbeat_timeout: Duration,
+}
+
+impl Default for AgentConfig {
+    fn default() -> Self {
+        AgentConfig {
+            listen: "127.0.0.1:0".into(),
+            slots: std::thread::available_parallelism().map(usize::from).unwrap_or(2),
+            token: None,
+            cache_dir: None,
+            worker_exe: None,
+            heartbeat_timeout: HEARTBEAT_EVERY * 20,
+        }
+    }
+}
+
+/// Counting semaphore bounding concurrent run execution across every
+/// connection (std has no semaphore; Mutex + Condvar is enough here).
+struct Slots {
+    free: Mutex<usize>,
+    freed: Condvar,
+}
+
+struct Permit<'a>(&'a Slots);
+
+impl Slots {
+    fn new(n: usize) -> Slots {
+        Slots { free: Mutex::new(n.max(1)), freed: Condvar::new() }
+    }
+
+    fn acquire(&self) -> Permit<'_> {
+        let mut free = self.free.lock().expect("agent slots");
+        while *free == 0 {
+            free = self.freed.wait(free).expect("agent slots");
+        }
+        *free -= 1;
+        Permit(self)
+    }
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        *self.0.free.lock().expect("agent slots") += 1;
+        self.0.freed.notify_one();
+    }
+}
+
+/// Everything the connection and run-handler threads share.
+struct Shared {
+    cfg: AgentConfig,
+    pool: Arc<WorkerPool>,
+    cache: Option<RunCache>,
+    slots: Slots,
+    /// observability: runs answered from the agent's own cache
+    cache_hits: Arc<AtomicUsize>,
+    /// observability: total runs answered (any outcome)
+    served: Arc<AtomicUsize>,
+}
+
+/// A bound (but not yet serving) agent.
+pub struct Agent {
+    listener: TcpListener,
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+}
+
+impl Agent {
+    /// Bind over the process-wide shared worker pool (the CLI entry:
+    /// sequential runs reuse warm children).
+    pub fn bind(cfg: AgentConfig) -> Result<Agent> {
+        Agent::bind_with_pool(cfg, crate::dispatch::shared_worker_pool())
+    }
+
+    /// Bind over an explicit pool (tests and benches isolate their
+    /// children this way).
+    pub fn bind_with_pool(mut cfg: AgentConfig, pool: Arc<WorkerPool>) -> Result<Agent> {
+        // clamp once, here: the semaphore, the HelloAck advertisement,
+        // and the per-connection in-flight cap must all see the same
+        // number (slots = 0 would otherwise advertise a capacity the
+        // connection loop rejects every request against)
+        cfg.slots = cfg.slots.max(1);
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding agent listener on {}", cfg.listen))?;
+        let addr = listener.local_addr().context("reading bound agent address")?;
+        let cache = cfg.cache_dir.as_ref().map(RunCache::new);
+        let slots = Slots::new(cfg.slots);
+        Ok(Agent {
+            listener,
+            addr,
+            shared: Arc::new(Shared {
+                pool,
+                cache,
+                slots,
+                cfg,
+                cache_hits: Arc::new(AtomicUsize::new(0)),
+                served: Arc::new(AtomicUsize::new(0)),
+            }),
+        })
+    }
+
+    /// The bound address (resolves `--listen host:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Counter handle for runs the agent answered from its own cache.
+    pub fn cache_hit_counter(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.shared.cache_hits)
+    }
+
+    /// Counter handle for all runs the agent answered.
+    pub fn served_counter(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.shared.served)
+    }
+
+    /// Accept and serve connections forever on this thread (the CLI
+    /// entry).  Each connection gets its own thread; each run request
+    /// gets its own handler thread under the slot semaphore.
+    pub fn serve(self) -> Result<()> {
+        println!(
+            "agent: listening on {} (slots {}, token {}, cache {})",
+            self.addr,
+            self.shared.cfg.slots,
+            if self.shared.cfg.token.is_some() { "required" } else { "open" },
+            self.shared
+                .cfg
+                .cache_dir
+                .as_ref()
+                .map(|d| d.display().to_string())
+                .unwrap_or_else(|| "disabled".into()),
+        );
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    let shared = Arc::clone(&self.shared);
+                    std::thread::spawn(move || handle_connection(shared, stream, peer));
+                }
+                Err(e) => {
+                    // transient accept errors (EMFILE under load) must
+                    // not kill the daemon
+                    eprintln!("agent: note: accept failed: {e}");
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+        }
+    }
+
+    /// Serve on a background thread, returning the bound address (the
+    /// in-process entry for tests and benchmarks).  The thread runs for
+    /// the life of the process.
+    pub fn spawn(cfg: AgentConfig, pool: Arc<WorkerPool>) -> Result<SocketAddr> {
+        let agent = Agent::bind_with_pool(cfg, pool)?;
+        let addr = agent.addr();
+        std::thread::spawn(move || {
+            if let Err(e) = agent.serve() {
+                eprintln!("agent: serve loop failed: {e:#}");
+            }
+        });
+        Ok(addr)
+    }
+}
+
+/// Write one frame to the shared connection writer.  Encoding happens
+/// outside the lock; the single `write_all` under it keeps concurrent
+/// handlers' frames from interleaving mid-payload.
+fn send(writer: &Mutex<TcpStream>, frame: &Frame) -> Result<()> {
+    let bytes = transport::encode_frame(frame)?;
+    let mut w = writer.lock().expect("agent connection writer");
+    std::io::Write::write_all(&mut *w, &bytes).context("writing to client")?;
+    std::io::Write::flush(&mut *w).context("flushing to client")
+}
+
+fn handle_connection(shared: Arc<Shared>, stream: TcpStream, peer: SocketAddr) {
+    stream.set_nodelay(true).ok();
+    // bound every write: a frozen or partitioned dispatcher must fail a
+    // blocked heartbeat/terminal send (freeing the handler, its pump,
+    // and the in-flight slot) instead of pinning them under the writer
+    // lock until the kernel's TCP retransmission timeout — the agent
+    // mirror of the dispatcher's heartbeat deadline.  A slow-but-alive
+    // peer is fine: the timeout is per write syscall, each of which
+    // only needs *some* buffer space to progress.
+    stream
+        .set_write_timeout(Some(super::HANDSHAKE_TIMEOUT.max(shared.cfg.heartbeat_timeout)))
+        .ok();
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(e) => {
+            eprintln!("agent: note: could not clone stream for {peer}: {e}");
+            return;
+        }
+    };
+    let mut reader = std::io::BufReader::new(stream);
+
+    // -- handshake: exactly one Hello, token-checked, then HelloAck ----
+    if let Err(e) = reader.get_ref().set_read_timeout(Some(super::HANDSHAKE_TIMEOUT)) {
+        eprintln!("agent: note: could not arm handshake timeout for {peer}: {e}");
+        return;
+    }
+    match transport::read_frame(&mut reader) {
+        Ok(Some(Frame::Hello { token })) => {
+            let want = shared.cfg.token.as_deref().unwrap_or("");
+            if !want.is_empty() && token != want {
+                let _ = send(
+                    &writer,
+                    &Frame::Error {
+                        id: 0,
+                        message: "agent: invalid or missing shared-secret token".into(),
+                    },
+                );
+                println!("agent: rejected {peer} (bad token)");
+                return;
+            }
+            if send(&writer, &Frame::HelloAck { slots: shared.cfg.slots as u32 }).is_err() {
+                return;
+            }
+        }
+        Ok(Some(other)) => {
+            let _ = send(
+                &writer,
+                &Frame::Error {
+                    id: 0,
+                    message: format!(
+                        "agent: expected a hello frame to open the session, got a {} frame",
+                        other.kind()
+                    ),
+                },
+            );
+            println!("agent: rejected {peer} (no hello)");
+            return;
+        }
+        Ok(None) => return,
+        Err(e) => {
+            // includes the typed version-skew diagnosis: the client
+            // sees exactly why it was turned away
+            let _ = send(
+                &writer,
+                &Frame::Error { id: 0, message: format!("agent: rejecting connection: {e:#}") },
+            );
+            println!("agent: rejected {peer} ({e:#})");
+            return;
+        }
+    }
+    if reader.get_ref().set_read_timeout(None).is_err() {
+        return;
+    }
+    println!("agent: session with {peer} open");
+
+    // -- session: serve run requests until the client disconnects ------
+    // a well-behaved dispatcher keeps at most `slots` requests in
+    // flight per connection (that is exactly what HelloAck advertised);
+    // bounding it here keeps a defective or abusive client from
+    // pinning an unbounded number of handler+pump threads
+    let in_flight = Arc::new(AtomicUsize::new(0));
+    loop {
+        match transport::read_frame(&mut reader) {
+            Ok(Some(Frame::RunRequest { id, cfg })) => {
+                if in_flight.fetch_add(1, Ordering::SeqCst) >= shared.cfg.slots {
+                    in_flight.fetch_sub(1, Ordering::SeqCst);
+                    let _ = send(
+                        &writer,
+                        &Frame::Error {
+                            id,
+                            message: format!(
+                                "agent: too many concurrent requests on this connection \
+                                 (advertised capacity is {} slots)",
+                                shared.cfg.slots
+                            ),
+                        },
+                    );
+                    continue;
+                }
+                let shared = Arc::clone(&shared);
+                let writer = Arc::clone(&writer);
+                let in_flight = Arc::clone(&in_flight);
+                std::thread::spawn(move || serve_run(shared, writer, peer, id, cfg, in_flight));
+            }
+            Ok(Some(other)) => {
+                let _ = send(
+                    &writer,
+                    &Frame::Error {
+                        id: other.id(),
+                        message: format!(
+                            "agent: expected a run_request, got a {} frame",
+                            other.kind()
+                        ),
+                    },
+                );
+            }
+            Ok(None) => break,
+            Err(e) => {
+                // length-delimited framing survives a bad payload, but a
+                // client sending one is defective: answer and hang up
+                let _ = send(
+                    &writer,
+                    &Frame::Error { id: 0, message: format!("agent: malformed frame: {e:#}") },
+                );
+                eprintln!("agent: note: closing session with {peer}: {e:#}");
+                break;
+            }
+        }
+    }
+    // unstick any handler blocked in a send to this session: the
+    // client is gone, so fail their writes now rather than at the
+    // write timeout
+    reader.get_ref().shutdown(std::net::Shutdown::Both).ok();
+    println!("agent: session with {peer} closed");
+}
+
+/// One run request end to end: heartbeat pump from the moment the
+/// request exists, slot acquisition, agent-cache probe, execution in a
+/// warm worker child, terminal frame.
+fn serve_run(
+    shared: Arc<Shared>,
+    writer: Arc<Mutex<TcpStream>>,
+    peer: SocketAddr,
+    id: u64,
+    cfg: crate::config::ExperimentConfig,
+    in_flight: Arc<AtomicUsize>,
+) {
+    let label = cfg.name.clone();
+    println!("agent: run {label:?} started (id {id}, {peer})");
+    let started = Instant::now();
+    // when a heartbeat write fails the client is gone (disconnected,
+    // lease killed): handlers still queued on the slot semaphore skip
+    // execution instead of computing for nobody
+    let client_gone = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let (frame, note) = {
+        // prove liveness from request receipt: slot waits and cache
+        // parses re-arm the dispatcher's deadline too, exactly like a
+        // busy child (the shared pump stops+joins when the guard drops,
+        // or early if the client is gone)
+        let writer = Arc::clone(&writer);
+        let gone = Arc::clone(&client_gone);
+        let _pump = crate::dispatch::proto::heartbeat_pump(move || {
+            let ok = send(&writer, &Frame::Heartbeat { id }).is_ok();
+            if !ok {
+                gone.store(true, Ordering::SeqCst);
+            }
+            ok
+        });
+        execute(&shared, id, cfg, &client_gone)
+    };
+    shared.served.fetch_add(1, Ordering::Relaxed);
+    // release the connection's in-flight slot BEFORE the terminal frame
+    // goes out: the dispatcher reuses its slot the moment it receives
+    // the result, and its next request must never race the decrement
+    // into a spurious over-capacity rejection
+    in_flight.fetch_sub(1, Ordering::SeqCst);
+    match send(&writer, &frame) {
+        Ok(()) => println!(
+            "agent: run {label:?} {note} in {:.2}s (id {id})",
+            started.elapsed().as_secs_f64()
+        ),
+        Err(e) => eprintln!(
+            "agent: note: could not answer run {label:?} (client gone?): {e:#}"
+        ),
+    }
+}
+
+/// Probe the agent cache, else execute in a warm worker child; map the
+/// outcome onto its terminal frame (plus a log tag).  A run whose
+/// client vanished while it waited for a slot is abandoned without
+/// executing; a run already inside a worker child runs to completion
+/// (and, with a cache configured, its result is cached — a retried
+/// campaign then hits it instead of recomputing).
+fn execute(
+    shared: &Shared,
+    id: u64,
+    cfg: crate::config::ExperimentConfig,
+    client_gone: &std::sync::atomic::AtomicBool,
+) -> (Frame, &'static str) {
+    let mut key: Option<(String, String)> = None;
+    if let Some(cache) = &shared.cache {
+        // the same RunCache::probe the dispatcher's slots use, so the
+        // key/restamp semantics cannot diverge between the two sites
+        match cache.probe(&cfg) {
+            Ok((_, _, Some(report))) => {
+                shared.cache_hits.fetch_add(1, Ordering::Relaxed);
+                return (Frame::RunResult { id, report }, "answered from cache");
+            }
+            Ok((digest, canonical, None)) => key = Some((digest, canonical)),
+            Err(e) => {
+                return (
+                    Frame::Error { id, message: format!("agent: hashing run config: {e:#}") },
+                    "failed (unhashable config)",
+                )
+            }
+        }
+    }
+    let _permit = shared.slots.acquire();
+    if client_gone.load(Ordering::SeqCst) {
+        // the slot wait outlived the session: don't burn a worker on a
+        // result nobody will read (the terminal send would fail anyway)
+        return (
+            Frame::Crashed { id, message: "agent: client disconnected before the run started".into() },
+            "abandoned (client gone)",
+        );
+    }
+    let mut client = match shared.pool.checkout(shared.cfg.worker_exe.as_deref()) {
+        Ok(c) => c,
+        Err(e) => {
+            return (
+                Frame::Crashed { id, message: format!("agent: spawning worker: {e:#}") },
+                "crashed (no worker)",
+            )
+        }
+    };
+    match client.run(&cfg, shared.cfg.heartbeat_timeout) {
+        Outcome::Done(report) => {
+            if let (Some(cache), Some((digest, canonical))) = (&shared.cache, &key) {
+                if let Err(e) = cache.put(digest, canonical, &report) {
+                    eprintln!("agent: note: cache write failed for {:?}: {e:#}", report.name);
+                }
+            }
+            shared.pool.checkin(client);
+            (Frame::RunResult { id, report }, "executed")
+        }
+        Outcome::RunFailed(e) => {
+            // the child is healthy (it *reported* the failure): park it
+            shared.pool.checkin(client);
+            (Frame::Error { id, message: format!("{e:#}") }, "failed")
+        }
+        Outcome::Crashed(e) => {
+            // dropping the client reaps the dead/hung child and prunes
+            // its pid; the dispatcher decides whether to retry
+            drop(client);
+            (Frame::Crashed { id, message: format!("{e:#}") }, "crashed (worker lost)")
+        }
+    }
+}

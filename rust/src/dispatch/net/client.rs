@@ -1,0 +1,438 @@
+//! Dispatcher side of the remote worker fabric: one authenticated TCP
+//! connection per `adpsgd agent`, multiplexed across that agent's
+//! advertised slots.
+//!
+//! A [`RemoteAgentClient`] owns the connection: a single reader thread
+//! demultiplexes incoming frames by request id into per-slot channels,
+//! and slot threads wait on their channel with the same heartbeat
+//! deadline as a local subprocess client — so a silent agent (network
+//! partition, frozen daemon) is handled exactly like a hung child: the
+//! lease is killed (the socket is shut down, which also unsticks every
+//! sibling slot on the same connection), the in-flight runs come back
+//! as crashes, and the dispatcher requeues them onto surviving slots.
+//! Terminal frames that surface for an id no slot is waiting on are
+//! discarded as stale, never misclassified as protocol violations.
+
+use crate::dispatch::net::transport;
+use crate::dispatch::pool::Outcome;
+use crate::dispatch::proto::Frame;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One live, handshaken connection to an `adpsgd agent`.
+pub struct RemoteAgentClient {
+    addr: String,
+    /// concurrent-run capacity the agent advertised in its `HelloAck`
+    slots: usize,
+    /// kept for `shutdown` on lease kill; the writer is a clone
+    stream: TcpStream,
+    writer: Mutex<TcpStream>,
+    /// request id → the slot waiting for that id's frames
+    pending: Arc<Mutex<HashMap<u64, Sender<Frame>>>>,
+    next_id: AtomicU64,
+    dead: Arc<AtomicBool>,
+    /// bumped by the reader on every successful read syscall: byte
+    /// progress *inside* a large frame (a multi-MB RunResult on a slow
+    /// link) proves liveness even though no complete frame has arrived
+    /// to re-arm a slot's deadline yet
+    rx_tick: Arc<AtomicU64>,
+}
+
+/// Read adapter that ticks a counter on every successful read, so
+/// deadline checks can distinguish a silent connection from one slowly
+/// delivering a large frame.
+struct TickingReader<R> {
+    inner: R,
+    tick: Arc<AtomicU64>,
+}
+
+impl<R: std::io::Read> std::io::Read for TickingReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        if n > 0 {
+            self.tick.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(n)
+    }
+}
+
+/// Removes a slot's id from the demux table on every exit path, so
+/// late frames for an abandoned request are discarded as stale.
+struct PendingGuard<'a> {
+    pending: &'a Mutex<HashMap<u64, Sender<Frame>>>,
+    id: u64,
+}
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        self.pending.lock().expect("remote pending map").remove(&self.id);
+    }
+}
+
+impl RemoteAgentClient {
+    /// Connect to `addr` and perform the `Hello`/`HelloAck` handshake.
+    /// Failures here are loud configuration errors with the cause
+    /// spelled out: unreachable host, rejected token, version skew, or
+    /// a peer that is not an adpsgd agent.
+    pub fn connect(
+        addr: &str,
+        token: Option<&str>,
+        handshake_timeout: Duration,
+    ) -> Result<Arc<RemoteAgentClient>> {
+        // connect under the same deadline as the handshake: a host that
+        // silently drops SYNs (firewall sinkhole, powered-off machine)
+        // must not stall campaign startup for the OS connect timeout
+        use std::net::ToSocketAddrs;
+        let resolved: Vec<std::net::SocketAddr> = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving agent address {addr}"))?
+            .collect();
+        // split the budget across the resolved addresses (a sinkholed
+        // AAAA record must not consume the whole deadline before the A
+        // record gets a try), with a floor so many addresses still each
+        // get a usable slice
+        let per_addr = handshake_timeout
+            .checked_div(resolved.len().max(1) as u32)
+            .unwrap_or(handshake_timeout)
+            .max(Duration::from_millis(500));
+        let mut stream: Option<TcpStream> = None;
+        let mut last_err: Option<std::io::Error> = None;
+        for a in &resolved {
+            match TcpStream::connect_timeout(a, per_addr) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let stream = stream.ok_or_else(|| match last_err {
+            Some(e) => anyhow!("connecting to agent {addr}: {e}"),
+            None => anyhow!("agent address {addr} resolved to no usable address"),
+        })?;
+        stream.set_nodelay(true).ok();
+        // the deadline applies to the handshake only; run waits are
+        // deadline-aware through the demux channels instead
+        stream
+            .set_read_timeout(Some(handshake_timeout))
+            .context("arming handshake timeout")?;
+        let mut writer = stream.try_clone().context("cloning agent stream")?;
+        transport::write_frame(
+            &mut writer,
+            &Frame::Hello { token: token.unwrap_or("").to_string() },
+        )
+        .with_context(|| format!("greeting agent {addr}"))?;
+        let mut reader = stream.try_clone().context("cloning agent stream")?;
+        let ack = transport::read_frame(&mut reader)
+            .with_context(|| format!("handshake with agent {addr}"))?;
+        let slots = match ack {
+            Some(Frame::HelloAck { slots }) => slots.max(1) as usize,
+            Some(Frame::Error { message, .. }) => {
+                bail!("agent {addr} rejected the connection: {message}")
+            }
+            Some(other) => bail!(
+                "agent {addr} answered the handshake with an unexpected {} frame",
+                other.kind()
+            ),
+            None => bail!("agent {addr} closed the connection during the handshake"),
+        };
+        stream.set_read_timeout(None).context("disarming handshake timeout")?;
+
+        let pending: Arc<Mutex<HashMap<u64, Sender<Frame>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let dead = Arc::new(AtomicBool::new(false));
+        let rx_tick = Arc::new(AtomicU64::new(0));
+        {
+            // the reader thread: demultiplex frames by id.  On EOF or a
+            // transport error it marks the connection dead and clears
+            // the demux table — dropping the senders disconnects every
+            // waiting slot, which surfaces as a crash (requeue).
+            let pending = Arc::clone(&pending);
+            let dead = Arc::clone(&dead);
+            let rx_tick = Arc::clone(&rx_tick);
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let mut reader =
+                    std::io::BufReader::new(TickingReader { inner: reader, tick: rx_tick });
+                loop {
+                    match transport::read_frame(&mut reader) {
+                        Ok(Some(frame)) => {
+                            let sender = pending
+                                .lock()
+                                .expect("remote pending map")
+                                .get(&frame.id())
+                                .cloned();
+                            match sender {
+                                Some(tx) => {
+                                    let _ = tx.send(frame);
+                                }
+                                None => match &frame {
+                                    Frame::Heartbeat { .. } => {}
+                                    Frame::RunResult { .. }
+                                    | Frame::Error { .. }
+                                    | Frame::Crashed { .. } => eprintln!(
+                                        "note: discarding stale {} frame for abandoned \
+                                         request {} from agent {addr}",
+                                        frame.kind(),
+                                        frame.id()
+                                    ),
+                                    _ => {}
+                                },
+                            }
+                        }
+                        Ok(None) => break,
+                        Err(e) => {
+                            if !dead.load(Ordering::SeqCst) {
+                                eprintln!("note: agent {addr} connection error: {e:#}");
+                            }
+                            break;
+                        }
+                    }
+                }
+                dead.store(true, Ordering::SeqCst);
+                pending.lock().expect("remote pending map").clear();
+            });
+        }
+        Ok(Arc::new(RemoteAgentClient {
+            addr: addr.to_string(),
+            slots,
+            stream,
+            writer: Mutex::new(writer),
+            pending,
+            next_id: AtomicU64::new(0),
+            dead,
+            rx_tick,
+        }))
+    }
+
+    /// The concurrent-run capacity the agent advertised.
+    pub fn slots(&self) -> usize {
+        self.slots
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Whether the connection has been lost or its lease killed.
+    pub fn is_dead(&self) -> bool {
+        self.dead.load(Ordering::SeqCst)
+    }
+
+    /// Kill the lease on this agent: mark it dead and shut the socket
+    /// down, so the reader thread exits and every sibling slot waiting
+    /// on this connection crashes out (and requeues) instead of waiting
+    /// for its own deadline.
+    fn kill(&self, why: &str) {
+        if !self.dead.swap(true, Ordering::SeqCst) {
+            eprintln!("note: killing lease on agent {} ({why})", self.addr);
+        }
+        self.stream.shutdown(Shutdown::Both).ok();
+    }
+
+    /// Submit one run and wait for its terminal frame under the
+    /// heartbeat deadline — the remote mirror of the subprocess
+    /// client's supervision.  Heartbeats (and raw byte progress on the
+    /// shared connection, for large frames in transit) re-arm the
+    /// deadline; `Error` is a deterministic run failure; `Crashed`
+    /// (the agent's executor died) and every transport defect are
+    /// retryable crashes; total silence past the deadline kills the
+    /// lease.
+    pub(crate) fn run(
+        &self,
+        cfg: &crate::config::ExperimentConfig,
+        heartbeat_timeout: Duration,
+    ) -> Outcome {
+        if self.is_dead() {
+            return Outcome::Crashed(anyhow!("agent {} connection already lost", self.addr));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
+        let bytes = match transport::encode_frame(&Frame::RunRequest { id, cfg: cfg.clone() }) {
+            Ok(b) => b,
+            // an unserializable config is the run's fault, not the agent's
+            Err(e) => return Outcome::RunFailed(e),
+        };
+        let (tx, rx) = mpsc::channel();
+        self.pending.lock().expect("remote pending map").insert(id, tx);
+        let _guard = PendingGuard { pending: &*self.pending, id };
+        {
+            let mut w = self.writer.lock().expect("remote writer");
+            if let Err(e) = w.write_all(&bytes).and_then(|()| w.flush()) {
+                self.kill("write failed");
+                return Outcome::Crashed(anyhow!(
+                    "agent {} connection lost while submitting run: {e}",
+                    self.addr
+                ));
+            }
+        }
+        // re-check after registering: if the reader died between the
+        // entry check and our insert, it already cleared the demux map
+        // (dead is stored *before* the clear), and a write to the
+        // half-closed socket can still "succeed" — without this check
+        // the slot would stall a full heartbeat_timeout before
+        // requeueing a run the connection can never answer
+        if self.is_dead() {
+            return Outcome::Crashed(anyhow!(
+                "agent {} connection lost while submitting run",
+                self.addr
+            ));
+        }
+        let mut deadline = Instant::now() + heartbeat_timeout;
+        let mut seen_tick = self.rx_tick.load(Ordering::Relaxed);
+        loop {
+            let wait = deadline.saturating_duration_since(Instant::now());
+            let frame = match rx.recv_timeout(wait) {
+                Ok(frame) => frame,
+                Err(RecvTimeoutError::Timeout) => {
+                    // no complete frame — but byte progress counts as
+                    // liveness too: a multi-MB terminal frame crossing a
+                    // slow link (which also blocks sibling heartbeats
+                    // behind the agent's writer lock) must not be
+                    // mistaken for a hung agent
+                    let tick = self.rx_tick.load(Ordering::Relaxed);
+                    if tick != seen_tick {
+                        seen_tick = tick;
+                        deadline = Instant::now() + heartbeat_timeout;
+                        continue;
+                    }
+                    self.kill("missed heartbeat deadline");
+                    return Outcome::Crashed(anyhow!(
+                        "agent {} silent for {:.1}s during run id {id} \
+                         (missed heartbeat deadline); lease killed, run requeued",
+                        self.addr,
+                        heartbeat_timeout.as_secs_f64()
+                    ));
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Outcome::Crashed(anyhow!(
+                        "agent {} connection lost mid-run",
+                        self.addr
+                    ))
+                }
+            };
+            // any frame for our id proves the agent is making progress
+            deadline = Instant::now() + heartbeat_timeout;
+            match frame {
+                Frame::Heartbeat { .. } => continue,
+                Frame::RunResult { report, .. } => return Outcome::Done(report),
+                Frame::Error { message, .. } => {
+                    return Outcome::RunFailed(anyhow!("{message}"))
+                }
+                Frame::Crashed { message, .. } => {
+                    return Outcome::Crashed(anyhow!(
+                        "agent {} reported an executor crash: {message}",
+                        self.addr
+                    ))
+                }
+                other => {
+                    return Outcome::Crashed(anyhow!(
+                        "agent {} protocol violation: unexpected {} frame for request {id}",
+                        self.addr,
+                        other.kind()
+                    ))
+                }
+            }
+        }
+    }
+}
+
+impl Drop for RemoteAgentClient {
+    fn drop(&mut self) {
+        // normal end-of-dispatch teardown: closing the underlying
+        // socket (shared by the reader thread's clone) unblocks and
+        // exits the reader and ends the agent-side session — without
+        // this, every dispatch would leak a parked thread and an open
+        // connection per agent
+        self.dead.store(true, Ordering::SeqCst);
+        self.stream.shutdown(Shutdown::Both).ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::proto::VersionSkew;
+    use std::net::TcpListener;
+
+    /// A fake peer that answers the handshake with raw bytes.
+    fn fake_agent(response: &'static [u8]) -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            if let Ok((mut s, _)) = listener.accept() {
+                // drain the hello so the client's write cannot fail first
+                let _ = transport::read_frame(&mut s.try_clone().unwrap());
+                let _ = s.write_all(response);
+                let _ = s.flush();
+                std::thread::sleep(Duration::from_millis(200));
+            }
+        });
+        addr
+    }
+
+    fn raw_frame(json: &str) -> Vec<u8> {
+        let mut buf = (json.len() as u32).to_be_bytes().to_vec();
+        buf.extend_from_slice(json.as_bytes());
+        buf
+    }
+
+    #[test]
+    fn handshake_accepts_ack_and_reports_capacity() {
+        let line = (Frame::HelloAck { slots: 5 }).to_line().unwrap();
+        let bytes: &'static [u8] = Box::leak(raw_frame(&line).into_boxed_slice());
+        let addr = fake_agent(bytes);
+        let client =
+            RemoteAgentClient::connect(&addr, None, Duration::from_secs(5)).unwrap();
+        assert_eq!(client.slots(), 5);
+        assert!(!client.is_dead());
+    }
+
+    #[test]
+    fn handshake_version_skew_is_a_clear_error() {
+        let bytes: &'static [u8] = Box::leak(
+            raw_frame("{\"type\":\"hello_ack\",\"slots\":2,\"v\":1}").into_boxed_slice(),
+        );
+        let addr = fake_agent(bytes);
+        let err = RemoteAgentClient::connect(&addr, None, Duration::from_secs(5))
+            .err()
+            .expect("a version-skewed peer must be rejected");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("protocol version skew"), "{msg}");
+        assert!(err.is::<VersionSkew>(), "{msg}");
+    }
+
+    #[test]
+    fn handshake_rejection_carries_the_agents_message() {
+        let line =
+            (Frame::Error { id: 0, message: "agent: invalid shared-secret token".into() })
+                .to_line()
+                .unwrap();
+        let bytes: &'static [u8] = Box::leak(raw_frame(&line).into_boxed_slice());
+        let addr = fake_agent(bytes);
+        let err = RemoteAgentClient::connect(&addr, Some("wrong"), Duration::from_secs(5))
+            .err()
+            .expect("a rejected handshake must error");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("token"), "{msg}");
+        assert!(msg.contains("rejected"), "{msg}");
+    }
+
+    #[test]
+    fn unreachable_agent_is_a_connect_error() {
+        // a port from the ephemeral range with nothing bound: connect
+        // must fail with the address in the message
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        let err = RemoteAgentClient::connect(&addr, None, Duration::from_millis(500))
+            .err()
+            .expect("nothing is listening");
+        assert!(format!("{err:#}").contains(&addr), "{err:#}");
+    }
+}

@@ -1,0 +1,43 @@
+//! The remote worker fabric: `adpsgd agent` daemons serving campaign
+//! runs over TCP.
+//!
+//! The stdin/stdout `adpsgd worker` protocol ([`super::proto`]) is
+//! process-agnostic by design; this module carries the same frames over
+//! a length-delimited TCP transport ([`transport`]) so dispatch
+//! capacity can live on other machines:
+//!
+//! * [`agent`] — the `adpsgd agent --listen ADDR --slots N` daemon.  It
+//!   accepts connections, authenticates them with a `Hello`/`HelloAck`
+//!   handshake (protocol version, optional shared-secret token,
+//!   advertised slot capacity), and serves many concurrent runs per
+//!   connection (frames are tagged by request id).  Runs execute in
+//!   warm `adpsgd worker` children checked out of a [`super::pool::WorkerPool`]
+//!   — the same supervision as local subprocess dispatch — and the
+//!   agent probes its own [`super::runcache::RunCache`] first, so a
+//!   warm agent answers repeats without recomputation.
+//! * [`client`] — the dispatcher side: [`client::RemoteAgentClient`]
+//!   multiplexes one connection across that agent's advertised slots,
+//!   with the same deadline-aware supervision as a local child (a
+//!   silent or disconnected agent is treated exactly like a hung
+//!   worker: the lease is killed and in-flight runs requeue onto the
+//!   surviving slots; stale terminal frames are discarded).
+//!
+//! Remote slots plug into [`super::pool::Dispatcher`]'s work-stealing
+//! queue next to thread/subprocess slots (`--workers remote`,
+//! `--remote host:port[,host:port...]`; listing agents while keeping
+//! local workers gives the mixed pool).  Because the merge is the same
+//! deterministic declaration-order merge, a remote campaign's stable
+//! summary is byte-identical to a local one.
+
+pub mod agent;
+pub mod client;
+pub mod transport;
+
+pub use agent::{Agent, AgentConfig};
+pub use client::RemoteAgentClient;
+
+/// How long connection setup (TCP connect + `Hello`/`HelloAck`) may
+/// take before an agent is declared unreachable.  Generous: handshakes
+/// are two small frames; only a dead host or a firewall sinkhole gets
+/// near this.
+pub const HANDSHAKE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);

@@ -1,0 +1,132 @@
+//! Length-delimited framing of [`proto::Frame`]s for stream transports.
+//!
+//! The stdin/stdout worker protocol is newline-delimited; over TCP the
+//! same JSON frames travel length-delimited instead — a 4-byte
+//! big-endian length prefix followed by the frame's JSON bytes — so a
+//! reader never has to scan for a delimiter and a parse error never
+//! loses framing (the next frame boundary is always known, which is why
+//! an agent can answer a malformed frame instead of dropping the
+//! connection).  [`MAX_FRAME_BYTES`] bounds the prefix so a stray
+//! non-adpsgd peer cannot make the reader allocate gigabytes.
+
+use crate::dispatch::proto::Frame;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Upper bound on one frame's payload.  A full `RunResult` report with
+/// every recorded series is a few MB at paper scale; 256 MiB is a
+/// sanity bound against garbage length prefixes, not a real limit.
+pub const MAX_FRAME_BYTES: u32 = 256 * 1024 * 1024;
+
+/// Encode one frame as its wire bytes (length prefix + JSON payload),
+/// ready for a single `write_all`.  Writers that share a stream across
+/// threads encode first and write the returned buffer under their lock,
+/// so frames can never interleave mid-payload.
+pub fn encode_frame(frame: &Frame) -> Result<Vec<u8>> {
+    let line = frame.to_line()?;
+    let payload = line.as_bytes();
+    if payload.len() as u64 > MAX_FRAME_BYTES as u64 {
+        bail!("frame too large to encode: {} bytes (max {MAX_FRAME_BYTES})", payload.len());
+    }
+    let mut buf = Vec::with_capacity(4 + payload.len());
+    buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    buf.extend_from_slice(payload);
+    Ok(buf)
+}
+
+/// Encode and write one frame.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<()> {
+    let buf = encode_frame(frame)?;
+    w.write_all(&buf).context("writing frame")?;
+    w.flush().context("flushing frame")
+}
+
+/// Read the 4-byte length header; `None` on a clean EOF at a frame
+/// boundary, an error on EOF mid-header.
+fn read_header(r: &mut impl Read) -> Result<Option<[u8; 4]>> {
+    let mut buf = [0u8; 4];
+    let mut got = 0;
+    while got < buf.len() {
+        let n = r.read(&mut buf[got..]).context("reading frame header")?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            bail!("connection closed mid-frame header");
+        }
+        got += n;
+    }
+    Ok(Some(buf))
+}
+
+/// Read one frame; `Ok(None)` on clean EOF.  An implausible length
+/// prefix (zero, or past [`MAX_FRAME_BYTES`]) is diagnosed as a
+/// non-adpsgd peer instead of an allocation attempt; a payload that
+/// fails [`Frame::parse`] carries the parser's error (including the
+/// typed version-skew diagnosis) without losing stream framing.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>> {
+    let Some(header) = read_header(r)? else {
+        return Ok(None);
+    };
+    let len = u32::from_be_bytes(header);
+    if len == 0 || len > MAX_FRAME_BYTES {
+        bail!("implausible frame length {len} (is the peer an adpsgd agent/client?)");
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+    let line = std::str::from_utf8(&payload).context("frame payload is not UTF-8")?;
+    Frame::parse(line).map(Some)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frames_roundtrip_length_delimited() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, &Frame::Heartbeat { id: 5 }).unwrap();
+        write_frame(&mut buf, &Frame::Hello { token: "t".into() }).unwrap();
+        write_frame(&mut buf, &Frame::HelloAck { slots: 3 }).unwrap();
+        let mut r = Cursor::new(buf);
+        assert!(matches!(read_frame(&mut r).unwrap(), Some(Frame::Heartbeat { id: 5 })));
+        match read_frame(&mut r).unwrap() {
+            Some(Frame::Hello { token }) => assert_eq!(token, "t"),
+            other => panic!("wrong frame {other:?}"),
+        }
+        assert!(matches!(read_frame(&mut r).unwrap(), Some(Frame::HelloAck { slots: 3 })));
+        // clean EOF at a boundary
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn truncation_and_garbage_lengths_are_errors() {
+        // EOF mid-header
+        let mut r = Cursor::new(vec![0u8, 0]);
+        assert!(read_frame(&mut r).unwrap_err().to_string().contains("mid-frame header"));
+        // EOF mid-payload
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, &Frame::Heartbeat { id: 1 }).unwrap();
+        buf.truncate(buf.len() - 2);
+        let mut r = Cursor::new(buf);
+        assert!(read_frame(&mut r).is_err());
+        // an implausible length prefix must not allocate
+        let mut r = Cursor::new(u32::MAX.to_be_bytes().to_vec());
+        let err = format!("{:#}", read_frame(&mut r).unwrap_err());
+        assert!(err.contains("implausible frame length"), "{err}");
+        // zero length is equally implausible
+        let mut r = Cursor::new(0u32.to_be_bytes().to_vec());
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn version_skew_survives_the_framing() {
+        let payload = b"{\"type\":\"heartbeat\",\"id\":1,\"v\":999}";
+        let mut buf = (payload.len() as u32).to_be_bytes().to_vec();
+        buf.extend_from_slice(payload);
+        let mut r = Cursor::new(buf);
+        let err = read_frame(&mut r).unwrap_err();
+        assert!(err.is::<crate::dispatch::proto::VersionSkew>(), "{err:#}");
+    }
+}

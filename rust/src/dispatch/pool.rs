@@ -1,7 +1,7 @@
 //! The worker pool: a work-stealing run queue drained by in-process
-//! thread slots or `adpsgd worker` subprocess slots, with cache
-//! short-circuiting, hang detection, crashed-worker retry, and a
-//! deterministic merge.
+//! thread slots, `adpsgd worker` subprocess slots, and/or remote
+//! `adpsgd agent` slots, with cache short-circuiting, hang detection,
+//! crashed-worker retry, and a deterministic merge.
 //!
 //! Scheduling is a shared queue: every slot pops the next pending run,
 //! so a slow run never blocks the others (work stealing without
@@ -9,13 +9,26 @@
 //! a fully-warm campaign parses its entries with `jobs`-way
 //! parallelism instead of a serial pre-pass.  Results land in per-run
 //! slots indexed by declaration order, so the merged output is
-//! identical for any `jobs` level and any completion order.  A
+//! identical for any `jobs` level, any worker mix (local threads,
+//! subprocess children, remote agents), and any completion order.  A
 //! *deterministic* run failure aborts the dispatch (queued runs are not
 //! started; in-flight runs finish) — exactly the historical campaign
-//! semantics.  A *crashed* subprocess worker (pipe EOF, spawn failure,
-//! or a missed [`DispatchOptions::heartbeat_timeout`] deadline) is not
-//! a run failure: the run is re-queued for any free slot up to
+//! semantics.  A *crashed* worker (pipe EOF, spawn failure, a missed
+//! [`DispatchOptions::heartbeat_timeout`] deadline, an agent-reported
+//! executor crash, or a lost agent connection) is not a run failure:
+//! the run is re-queued for any free slot up to
 //! [`DispatchOptions::max_attempts`] attempts.
+//!
+//! ## Remote slots
+//!
+//! [`DispatchOptions::remote`] leases slots on `adpsgd agent` daemons
+//! (see [`super::net`]): each reachable agent contributes its
+//! advertised capacity as slot threads that drain the *same* queue as
+//! the local ones — mixed local+remote is simply both kinds of slot
+//! popping one queue.  `--workers remote` disables local slots
+//! entirely.  A remote slot whose agent connection dies stops popping
+//! (its in-flight run is requeued through the ordinary crash path and
+//! lands on a surviving slot, local or remote).
 //!
 //! ## Supervision
 //!
@@ -42,7 +55,8 @@
 //! on EOF), then a bounded wait, then kill — instead of the historical
 //! unconditional kill.
 
-use super::runcache::{self, RunCache};
+use super::net::client::RemoteAgentClient;
+use super::runcache::RunCache;
 use crate::coordinator::RunReport;
 use crate::experiment::{Experiment, RunSpec};
 use anyhow::{anyhow, Context, Result};
@@ -64,6 +78,11 @@ pub enum WorkerKind {
     /// the [`WorkerPool`], speaking the line-delimited JSON protocol of
     /// [`super::proto`].
     Subprocess,
+    /// Off-machine only: no local slots; every run executes on an
+    /// `adpsgd agent` listed in [`DispatchOptions::remote`].  (Listing
+    /// agents while keeping `Thread`/`Subprocess` gives the *mixed*
+    /// pool — local and remote slots drain the same queue.)
+    Remote,
 }
 
 /// How many [`super::proto::HEARTBEAT_EVERY`] intervals a silent worker
@@ -83,12 +102,23 @@ pub struct DispatchOptions {
     pub max_attempts: usize,
     /// Binary for subprocess workers; `None` = this executable.
     pub worker_exe: Option<PathBuf>,
-    /// How long a subprocess worker may stay silent mid-run before it
-    /// is declared hung, killed, and its run retried (the worker
-    /// heartbeats every [`super::proto::HEARTBEAT_EVERY`]; the default
-    /// allows [`DEFAULT_MISSED_HEARTBEATS`] missed intervals).
+    /// How long a subprocess worker (or a remote agent connection) may
+    /// stay silent mid-run before it is declared hung, killed, and its
+    /// run retried (the worker heartbeats every
+    /// [`super::proto::HEARTBEAT_EVERY`]; the default allows
+    /// [`DEFAULT_MISSED_HEARTBEATS`] missed intervals).
     /// `adpsgd campaign --hang-timeout SECS` sets it.
     pub heartbeat_timeout: Duration,
+    /// `adpsgd agent` endpoints (`host:port`) to lease remote slots
+    /// from.  Empty = local-only.  With `workers` = `Thread` or
+    /// `Subprocess` this is the *mixed* pool; with
+    /// [`WorkerKind::Remote`] it is the only capacity.  CLI:
+    /// `--remote host:port[,host:port...]`.
+    pub remote: Vec<String>,
+    /// Shared-secret token presented in the `Hello` handshake (must
+    /// match each agent's `--token`; `None` sends an empty token, which
+    /// only tokenless agents accept).  CLI: `--remote-token`.
+    pub remote_token: Option<String>,
 }
 
 impl Default for DispatchOptions {
@@ -100,16 +130,9 @@ impl Default for DispatchOptions {
             max_attempts: 3,
             worker_exe: None,
             heartbeat_timeout: super::proto::HEARTBEAT_EVERY * DEFAULT_MISSED_HEARTBEATS,
+            remote: Vec::new(),
+            remote_token: None,
         }
-    }
-}
-
-impl DispatchOptions {
-    /// The conservative in-process profile [`crate::experiment::Campaign::run`]
-    /// uses: a fixed slot count, thread workers, the process-default
-    /// cache (usually disabled).
-    pub fn in_process(jobs: usize) -> DispatchOptions {
-        DispatchOptions { jobs: Some(jobs.max(1)), ..DispatchOptions::default() }
     }
 }
 
@@ -163,8 +186,10 @@ impl WorkerPool {
     /// Borrow a live child spawned from `exe`, reusing a warm one when
     /// possible.  A child that died while idle is discarded on the spot
     /// — dropping it reaps the process and prunes its pid from the
-    /// registry, so observers never target a dead pid.
-    fn checkout(&self, exe: Option<&Path>) -> Result<WorkerClient> {
+    /// registry, so observers never target a dead pid.  (`pub(crate)`:
+    /// the `adpsgd agent` daemon checks its worker children out of the
+    /// same pool type.)
+    pub(crate) fn checkout(&self, exe: Option<&Path>) -> Result<WorkerClient> {
         let exe = match exe {
             Some(p) => p.to_path_buf(),
             None => std::env::current_exe().context("resolving worker executable")?,
@@ -190,7 +215,7 @@ impl WorkerPool {
 
     /// Park a child for the next dispatch.  Dead children are dropped
     /// (reaped, pid pruned) instead of parked.
-    fn checkin(&self, mut client: WorkerClient) {
+    pub(crate) fn checkin(&self, mut client: WorkerClient) {
         if client.is_alive() && client.stdin.is_some() {
             self.idle.lock().expect("worker pool").push(client);
         }
@@ -230,10 +255,34 @@ pub struct Dispatcher {
     retries: Arc<AtomicUsize>,
 }
 
-enum Outcome {
+/// How one execution attempt ended (shared with [`super::net`]: the
+/// agent daemon maps its own child outcomes onto terminal frames, and
+/// the remote client maps frames back onto outcomes).
+pub(crate) enum Outcome {
     Done(RunReport),
+    /// Deterministic failure: aborts the dispatch.
     RunFailed(anyhow::Error),
+    /// The executor died or went silent: the run is retryable.
     Crashed(anyhow::Error),
+}
+
+/// What drains the queue in one slot thread.
+enum SlotRunner {
+    /// A local slot: in-process thread or subprocess child per
+    /// [`DispatchOptions::workers`].
+    Local,
+    /// A leased slot on one remote agent connection.
+    Remote(Arc<RemoteAgentClient>),
+}
+
+impl SlotRunner {
+    /// A dead agent connection stops popping; local slots never die.
+    fn available(&self) -> bool {
+        match self {
+            SlotRunner::Local => true,
+            SlotRunner::Remote(agent) => !agent.is_dead(),
+        }
+    }
 }
 
 impl Dispatcher {
@@ -265,15 +314,52 @@ impl Dispatcher {
         self.retries.load(Ordering::Relaxed)
     }
 
+    /// Connect and handshake with every configured remote agent, in
+    /// parallel (connects are independent; dialing serially would make
+    /// startup latency O(agents × timeout) when hosts sinkhole SYNs).
+    /// A rejected handshake (unreachable host, bad token, version skew)
+    /// is a loud configuration error, not a silent capacity loss — a
+    /// dead agent *mid-dispatch* is what the crash/requeue path covers.
+    fn connect_remote_agents(&self) -> Result<Vec<Arc<RemoteAgentClient>>> {
+        if self.opts.remote.is_empty() {
+            if matches!(self.opts.workers, WorkerKind::Remote) {
+                anyhow::bail!(
+                    "--workers remote needs at least one agent endpoint \
+                     (--remote host:port[,host:port...])"
+                );
+            }
+            return Ok(Vec::new());
+        }
+        let token = self.opts.remote_token.as_deref();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .opts
+                .remote
+                .iter()
+                .map(|addr| {
+                    scope.spawn(move || {
+                        RemoteAgentClient::connect(addr, token, super::net::HANDSHAKE_TIMEOUT)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("agent connect thread"))
+                .collect()
+        })
+    }
+
     /// Execute every run, returning reports in declaration order
-    /// regardless of completion order or parallelism.  An empty batch
-    /// is a valid (empty) result — a campaign whose sweep resolves to
-    /// zero runs reports cleanly instead of erroring.
+    /// regardless of completion order, parallelism, or worker mix
+    /// (local threads, subprocess children, remote agents).  An empty
+    /// batch is a valid (empty) result — a campaign whose sweep
+    /// resolves to zero runs reports cleanly instead of erroring.
     pub fn execute(&self, runs: &[RunSpec]) -> Result<Vec<DispatchedRun>> {
         let n = runs.len();
         if n == 0 {
             return Ok(Vec::new());
         }
+        let remote = self.connect_remote_agents()?;
         let cache = self.opts.cache_dir.as_ref().map(RunCache::new);
         let slots: Vec<Mutex<Option<Result<DispatchedRun>>>> =
             (0..n).map(|_| Mutex::new(None)).collect();
@@ -281,20 +367,65 @@ impl Dispatcher {
         // cache, so warm campaigns parse entries in parallel instead of
         // serially before the pool starts
         let pending: VecDeque<(usize, usize)> = (0..n).map(|i| (i, 1)).collect();
-        let jobs = self
-            .opts
-            .jobs
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(usize::from).unwrap_or(2)
-            })
-            .clamp(1, n);
+        let local_jobs = match self.opts.workers {
+            WorkerKind::Remote => 0,
+            _ => self
+                .opts
+                .jobs
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism().map(usize::from).unwrap_or(2)
+                })
+                .clamp(1, n),
+        };
         let queue = Mutex::new(pending);
         let aborted = AtomicBool::new(false);
-        std::thread::scope(|scope| {
-            for _ in 0..jobs {
-                scope.spawn(|| self.slot_loop(runs, cache.as_ref(), &queue, &aborted, &slots));
-            }
-        });
+        // runs not yet terminally resolved (result or fatal error
+        // recorded).  An idle slot must NOT exit while this is nonzero:
+        // a run in flight on a dying remote slot can still be requeued,
+        // and the requeue needs a surviving slot to pop it.
+        let remaining = AtomicUsize::new(n);
+        {
+            // plain references for the spawned closures: `move` must
+            // copy these borrows, never capture the owners
+            let cache = cache.as_ref();
+            let queue = &queue;
+            let aborted = &aborted;
+            let slots = &slots[..];
+            let remaining = &remaining;
+            std::thread::scope(|scope| {
+                for _ in 0..local_jobs {
+                    scope.spawn(move || {
+                        self.slot_loop(
+                            &SlotRunner::Local,
+                            runs,
+                            cache,
+                            queue,
+                            aborted,
+                            slots,
+                            remaining,
+                        )
+                    });
+                }
+                for agent in &remote {
+                    // one slot thread per advertised unit of capacity,
+                    // all multiplexed over the agent's single connection
+                    for _ in 0..agent.slots().min(n) {
+                        let agent = Arc::clone(agent);
+                        scope.spawn(move || {
+                            self.slot_loop(
+                                &SlotRunner::Remote(agent),
+                                runs,
+                                cache,
+                                queue,
+                                aborted,
+                                slots,
+                                remaining,
+                            )
+                        });
+                    }
+                }
+            });
+        }
 
         // deterministic merge: declaration order; the lowest-index real
         // failure wins over "skipped" noise
@@ -318,65 +449,102 @@ impl Dispatcher {
             return Err(e);
         }
         if let Some(i) = skipped {
-            anyhow::bail!("run {:?} was skipped after an earlier failure", runs[i].label);
+            // no recorded error means no abort: every slot exited with
+            // work still queued (e.g. all remote agents disconnected in
+            // a remote-only dispatch)
+            if aborted.load(Ordering::Relaxed) {
+                anyhow::bail!("run {:?} was skipped after an earlier failure", runs[i].label);
+            }
+            anyhow::bail!(
+                "run {:?} was never executed: every worker slot exited before it could run \
+                 (all remote agents disconnected?)",
+                runs[i].label
+            );
         }
         Ok(merged.into_iter().map(|r| r.expect("all slots filled")).collect())
     }
 
-    /// One slot: pop runs until the queue drains or the dispatch
-    /// aborts, then park the warm child back in the pool.
+    /// One slot: pop runs until every run is resolved, the dispatch
+    /// aborts, or (for a remote slot) the agent connection dies; then
+    /// park the warm child back in the pool.
+    ///
+    /// An *empty queue* alone is not an exit condition: while other
+    /// slots still have runs in flight, this slot idles — one of those
+    /// runs may yet crash (a dying agent requeues everything it held)
+    /// and the requeue needs a live slot to pop it.  Exiting on the
+    /// first empty pop would orphan such runs and fail the dispatch
+    /// despite surviving healthy capacity.
+    #[allow(clippy::too_many_arguments)]
     fn slot_loop(
         &self,
+        runner: &SlotRunner,
         runs: &[RunSpec],
         cache: Option<&RunCache>,
         queue: &Mutex<VecDeque<(usize, usize)>>,
         aborted: &AtomicBool,
         slots: &[Mutex<Option<Result<DispatchedRun>>>],
+        remaining: &AtomicUsize,
     ) {
         let mut client: Option<WorkerClient> = None;
         loop {
             if aborted.load(Ordering::Relaxed) {
                 break;
             }
-            let Some((i, attempt)) = queue.lock().expect("dispatch queue").pop_front() else {
+            if !runner.available() {
+                // a dead agent connection must not keep popping runs it
+                // can only fail; surviving slots drain the queue
                 break;
+            }
+            let popped = queue.lock().expect("dispatch queue").pop_front();
+            let Some((i, attempt)) = popped else {
+                if remaining.load(Ordering::SeqCst) == 0 {
+                    break;
+                }
+                // runs are in flight on other slots: idle, don't exit
+                std::thread::sleep(Duration::from_millis(25));
+                continue;
             };
             let spec = &runs[i];
             // probe the cache on this slot's own thread: a hit fills
-            // the result without touching a worker
+            // the result without touching a worker (RunCache::probe
+            // restamps the hit under this run's label)
             let mut key: Option<(String, String)> = None;
             if let Some(cache) = cache {
-                match runcache::cfg_canonical_text(&spec.cfg) {
-                    Ok(canonical) => {
-                        let digest = runcache::content_digest(canonical.as_bytes());
-                        if let Some(mut report) = cache.get(&digest) {
-                            // the name is excluded from the key
-                            // (incidental): restamp it so cross-campaign
-                            // hits report under the requesting label
-                            report.name = spec.cfg.name.clone();
-                            *slots[i].lock().expect("dispatch slot") =
-                                Some(Ok(DispatchedRun { report, from_cache: true }));
-                            continue;
-                        }
-                        key = Some((digest, canonical));
+                match cache.probe(&spec.cfg) {
+                    Ok((_, _, Some(report))) => {
+                        *slots[i].lock().expect("dispatch slot") =
+                            Some(Ok(DispatchedRun { report, from_cache: true }));
+                        remaining.fetch_sub(1, Ordering::SeqCst);
+                        continue;
                     }
+                    Ok((digest, canonical, None)) => key = Some((digest, canonical)),
                     Err(e) => {
                         aborted.store(true, Ordering::Relaxed);
                         *slots[i].lock().expect("dispatch slot") =
                             Some(Err(e.context(format!("hashing run {:?}", spec.label))));
+                        remaining.fetch_sub(1, Ordering::SeqCst);
                         continue;
                     }
                 }
             }
-            let outcome = match self.opts.workers {
-                WorkerKind::Thread => {
-                    match Experiment::from_config(spec.cfg.clone()).and_then(Experiment::run)
-                    {
-                        Ok(report) => Outcome::Done(report),
-                        Err(e) => Outcome::RunFailed(e),
+            let outcome = match runner {
+                SlotRunner::Local => match self.opts.workers {
+                    WorkerKind::Thread => {
+                        match Experiment::from_config(spec.cfg.clone())
+                            .and_then(Experiment::run)
+                        {
+                            Ok(report) => Outcome::Done(report),
+                            Err(e) => Outcome::RunFailed(e),
+                        }
                     }
+                    WorkerKind::Subprocess => self.subprocess_run(&mut client, &spec.cfg),
+                    WorkerKind::Remote => {
+                        unreachable!("remote-only dispatch spawns no local slots")
+                    }
+                },
+                SlotRunner::Remote(agent) => {
+                    agent.run(&spec.cfg, self.opts.heartbeat_timeout)
                 }
-                WorkerKind::Subprocess => self.subprocess_run(&mut client, &spec.cfg),
             };
             match outcome {
                 Outcome::Done(report) => {
@@ -387,11 +555,13 @@ impl Dispatcher {
                     }
                     *slots[i].lock().expect("dispatch slot") =
                         Some(Ok(DispatchedRun { report, from_cache: false }));
+                    remaining.fetch_sub(1, Ordering::SeqCst);
                 }
                 Outcome::RunFailed(e) => {
                     aborted.store(true, Ordering::Relaxed);
                     *slots[i].lock().expect("dispatch slot") =
                         Some(Err(e.context(format!("run {:?}", spec.label))));
+                    remaining.fetch_sub(1, Ordering::SeqCst);
                 }
                 Outcome::Crashed(e) => {
                     // the child is gone: dropping it reaps the process
@@ -406,6 +576,8 @@ impl Dispatcher {
                             "note: worker crashed during run {:?} (attempt {attempt}); retrying: {e:#}",
                             spec.label
                         );
+                        // requeued, not resolved: `remaining` stays up,
+                        // so idle slots keep waiting for this run
                         queue.lock().expect("dispatch queue").push_back((i, attempt + 1));
                     } else {
                         aborted.store(true, Ordering::Relaxed);
@@ -413,6 +585,7 @@ impl Dispatcher {
                             "run {:?} crashed its worker {} times",
                             spec.label, attempt
                         ))));
+                        remaining.fetch_sub(1, Ordering::SeqCst);
                     }
                 }
             }
@@ -444,7 +617,9 @@ impl Dispatcher {
 
 /// One `adpsgd worker` child and its protocol channel.  Reads arrive
 /// through a dedicated reader thread, so waits carry a deadline.
-struct WorkerClient {
+/// (`pub(crate)`: the `adpsgd agent` daemon drives the same client
+/// against its own warm children.)
+pub(crate) struct WorkerClient {
     /// the executable this child was spawned from (pool-matching tag)
     exe: PathBuf,
     child: std::process::Child,
@@ -511,8 +686,9 @@ impl WorkerClient {
     /// frames for an older (abandoned) request id are discarded as
     /// stale.  A transport defect or a missed deadline is a crash
     /// (retryable); an `Error` frame for the current id is a
-    /// deterministic run failure (fatal).
-    fn run(
+    /// deterministic run failure (fatal), and so is a version-skewed
+    /// reply (retrying against the same binary cannot succeed).
+    pub(crate) fn run(
         &mut self,
         cfg: &crate::config::ExperimentConfig,
         heartbeat_timeout: Duration,
@@ -566,8 +742,15 @@ impl WorkerClient {
                 Ok(super::proto::Frame::Error { id: rid, message }) if rid == id => {
                     return Outcome::RunFailed(anyhow!("{message}"))
                 }
+                Ok(super::proto::Frame::Crashed { id: rid, message }) if rid == id => {
+                    // the peer's executor died: retryable, like a local
+                    // child crash (the local serve loop never sends
+                    // this, but agents relaying child crashes do)
+                    return Outcome::Crashed(anyhow!("worker reported executor crash: {message}"))
+                }
                 Ok(super::proto::Frame::RunResult { id: rid, .. })
                 | Ok(super::proto::Frame::Error { id: rid, .. })
+                | Ok(super::proto::Frame::Crashed { id: rid, .. })
                     if rid < id =>
                 {
                     // a terminal frame for an abandoned request (e.g.
@@ -586,7 +769,16 @@ impl WorkerClient {
                         other.id()
                     ))
                 }
-                Err(e) => return Outcome::Crashed(e.context("malformed worker reply")),
+                Err(e) => {
+                    if e.is::<super::proto::VersionSkew>() {
+                        // deterministic: a respawned child is the same
+                        // binary, so burning crash retries cannot help
+                        return Outcome::RunFailed(
+                            e.context("worker replied with a version-skewed frame"),
+                        );
+                    }
+                    return Outcome::Crashed(e.context("malformed worker reply"));
+                }
             }
         }
     }
@@ -626,6 +818,7 @@ impl Drop for WorkerClient {
 mod tests {
     use super::*;
     use crate::config::{ExperimentConfig, LrSchedule, StrategySpec};
+    use crate::dispatch::runcache;
 
     fn quick_cfg(name: &str, seed: u64) -> ExperimentConfig {
         let mut cfg = ExperimentConfig::default();

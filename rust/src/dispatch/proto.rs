@@ -1,5 +1,6 @@
 //! The `adpsgd worker` wire protocol: line-delimited JSON frames over
-//! stdin/stdout.
+//! stdin/stdout (and, length-delimited, over the [`super::net`] TCP
+//! transport).
 //!
 //! The dispatcher sends [`Frame::RunRequest`] lines (the config rides as
 //! its canonical TOML text, so the worker rebuilds it through the exact
@@ -11,6 +12,22 @@
 //! to the dispatcher as EOF on the pipe, which is what triggers a retry
 //! on another slot.  One worker processes requests sequentially and
 //! exits cleanly on stdin EOF.
+//!
+//! Remote agents (see [`super::net`]) reuse these frames with three
+//! additions: [`Frame::Hello`]/[`Frame::HelloAck`] open a TCP session
+//! (shared-secret token, advertised slot capacity), and
+//! [`Frame::Crashed`] reports an agent-side executor crash as a
+//! *retryable* terminal frame — distinct from `Error`, whose failure is
+//! deterministic and aborts the dispatch.
+//!
+//! ## Versioning
+//!
+//! Every frame carries a `"v"` header set to [`PROTO_VERSION`].  Both
+//! ends ([`serve`] and the dispatcher-side clients) reject a frame whose
+//! version is missing or different with a typed [`VersionSkew`] error —
+//! a clear "rebuild both ends" diagnosis instead of a generic parse
+//! failure, covering the old-worker-binary-new-CLI corner (and its
+//! inverse) for subprocess and TCP peers alike.
 
 use crate::config::{toml::TomlDoc, ExperimentConfig};
 use crate::coordinator::RunReport;
@@ -23,6 +40,43 @@ use std::sync::{Arc, Mutex};
 /// How often a busy worker proves liveness.
 pub const HEARTBEAT_EVERY: std::time::Duration = std::time::Duration::from_millis(500);
 
+/// Wire-protocol version carried in every frame's `"v"` header.
+///
+/// v1 was the unversioned JSONL protocol of the first dispatch release;
+/// v2 added the header itself, the `hello`/`hello_ack` TCP handshake,
+/// and the retryable `crashed` terminal frame.
+pub const PROTO_VERSION: u64 = 2;
+
+/// Typed parse error for a frame whose `"v"` header is missing or does
+/// not match [`PROTO_VERSION`].  Carried through `anyhow` so transports
+/// can `downcast_ref` and treat skew as a deterministic configuration
+/// error (no point respawning or retrying against the same binary).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VersionSkew {
+    /// The version the peer sent; `None` for an unversioned (pre-v2)
+    /// frame.
+    pub got: Option<u64>,
+}
+
+impl std::fmt::Display for VersionSkew {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.got {
+            Some(got) => write!(
+                f,
+                "protocol version skew: peer speaks wire version {got}, this binary speaks \
+                 v{PROTO_VERSION} — rebuild/redeploy both ends from the same adpsgd version"
+            ),
+            None => write!(
+                f,
+                "protocol version skew: peer sent an unversioned (pre-v2) frame, this binary \
+                 speaks v{PROTO_VERSION} — rebuild/redeploy both ends from the same adpsgd version"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for VersionSkew {}
+
 /// One protocol frame.
 #[derive(Debug)]
 pub enum Frame {
@@ -34,16 +88,30 @@ pub enum Frame {
     Heartbeat { id: u64 },
     /// Worker → dispatcher: the run failed deterministically.
     Error { id: u64, message: String },
+    /// Agent → dispatcher: the run's *executor* crashed (child died,
+    /// hung past the deadline).  Retryable — the dispatcher requeues the
+    /// run like any local worker crash instead of aborting the dispatch.
+    Crashed { id: u64, message: String },
+    /// Client → agent, first frame on a TCP connection: authenticate
+    /// with the agent's shared-secret token (empty when the agent
+    /// requires none).
+    Hello { token: String },
+    /// Agent → client: handshake accepted; the agent advertises how many
+    /// concurrent runs it will serve on this connection.
+    HelloAck { slots: u32 },
 }
 
 impl Frame {
-    /// The request id this frame carries.
+    /// The request id this frame carries (handshake frames, which are
+    /// per-connection rather than per-run, report 0).
     pub fn id(&self) -> u64 {
         match self {
             Frame::RunRequest { id, .. }
             | Frame::RunResult { id, .. }
             | Frame::Heartbeat { id }
-            | Frame::Error { id, .. } => *id,
+            | Frame::Error { id, .. }
+            | Frame::Crashed { id, .. } => *id,
+            Frame::Hello { .. } | Frame::HelloAck { .. } => 0,
         }
     }
 
@@ -55,48 +123,87 @@ impl Frame {
             Frame::RunResult { .. } => "run_result",
             Frame::Heartbeat { .. } => "heartbeat",
             Frame::Error { .. } => "error",
+            Frame::Crashed { .. } => "crashed",
+            Frame::Hello { .. } => "hello",
+            Frame::HelloAck { .. } => "hello_ack",
         }
     }
 
-    /// Encode as one newline-terminated JSON line.
+    /// Encode as one newline-terminated JSON line (every frame carries
+    /// the [`PROTO_VERSION`] header).
     pub fn to_line(&self) -> Result<String> {
+        let version = ("v", Json::num(PROTO_VERSION as f64));
         let json = match self {
             Frame::RunRequest { id, cfg } => Json::obj(vec![
                 ("type", Json::str("run_request")),
                 ("id", Json::num(*id as f64)),
                 ("cfg", Json::str(cfg.to_toml_string()?)),
+                version,
             ]),
             Frame::RunResult { id, report } => Json::obj(vec![
                 ("type", Json::str("run_result")),
                 ("id", Json::num(*id as f64)),
                 ("report", super::runcache::report_to_json(report)),
+                version,
             ]),
             Frame::Heartbeat { id } => Json::obj(vec![
                 ("type", Json::str("heartbeat")),
                 ("id", Json::num(*id as f64)),
+                version,
             ]),
             Frame::Error { id, message } => Json::obj(vec![
                 ("type", Json::str("error")),
                 ("id", Json::num(*id as f64)),
                 ("message", Json::str(message.clone())),
+                version,
+            ]),
+            Frame::Crashed { id, message } => Json::obj(vec![
+                ("type", Json::str("crashed")),
+                ("id", Json::num(*id as f64)),
+                ("message", Json::str(message.clone())),
+                version,
+            ]),
+            Frame::Hello { token } => Json::obj(vec![
+                ("type", Json::str("hello")),
+                ("token", Json::str(token.clone())),
+                version,
+            ]),
+            Frame::HelloAck { slots } => Json::obj(vec![
+                ("type", Json::str("hello_ack")),
+                ("slots", Json::num(*slots as f64)),
+                version,
             ]),
         };
         Ok(format!("{}\n", json.to_string_compact()))
     }
 
-    /// Decode one line.
+    /// Decode one line.  A missing or mismatched `"v"` header fails with
+    /// a typed [`VersionSkew`] (downcastable through the `anyhow`
+    /// chain), never a generic parse error.
     pub fn parse(line: &str) -> Result<Frame> {
         let v = Json::parse(line.trim()).map_err(|e| anyhow!("protocol frame: {e}"))?;
-        let id = v
-            .get("id")
-            .and_then(Json::as_f64)
-            .ok_or_else(|| anyhow!("protocol frame: missing \"id\""))? as u64;
+        match v.get("v").and_then(Json::as_f64) {
+            Some(x) if x as u64 == PROTO_VERSION => {}
+            got => {
+                return Err(anyhow::Error::new(VersionSkew { got: got.map(|x| x as u64) }))
+            }
+        }
         let kind = v
             .get("type")
             .and_then(Json::as_str)
             .ok_or_else(|| anyhow!("protocol frame: missing \"type\""))?;
+        let need_id = || -> Result<u64> {
+            v.get("id")
+                .and_then(Json::as_f64)
+                .map(|x| x as u64)
+                .ok_or_else(|| anyhow!("protocol frame: missing \"id\""))
+        };
+        let message = || {
+            v.get("message").and_then(Json::as_str).unwrap_or("<no message>").to_string()
+        };
         Ok(match kind {
             "run_request" => {
+                let id = need_id()?;
                 let text = v
                     .get("cfg")
                     .and_then(Json::as_str)
@@ -105,22 +212,62 @@ impl Frame {
                 Frame::RunRequest { id, cfg: ExperimentConfig::from_doc(&doc)? }
             }
             "run_result" => Frame::RunResult {
-                id,
+                id: need_id()?,
                 report: super::runcache::report_from_json(
                     v.get("report").ok_or_else(|| anyhow!("run_result: missing report"))?,
                 )?,
             },
-            "heartbeat" => Frame::Heartbeat { id },
-            "error" => Frame::Error {
-                id,
-                message: v
-                    .get("message")
-                    .and_then(Json::as_str)
-                    .unwrap_or("<no message>")
-                    .to_string(),
+            "heartbeat" => Frame::Heartbeat { id: need_id()? },
+            "error" => Frame::Error { id: need_id()?, message: message() },
+            "crashed" => Frame::Crashed { id: need_id()?, message: message() },
+            "hello" => Frame::Hello {
+                token: v.get("token").and_then(Json::as_str).unwrap_or_default().to_string(),
+            },
+            "hello_ack" => Frame::HelloAck {
+                slots: v.get("slots").and_then(Json::as_f64).unwrap_or(1.0) as u32,
             },
             other => bail!("protocol frame: unknown type {other:?}"),
         })
+    }
+}
+
+/// A liveness pump: a background thread calling `beat` every
+/// [`HEARTBEAT_EVERY`] for as long as the returned guard lives
+/// (stopping early if `beat` reports the peer gone).  Dropping the
+/// guard stops and joins the thread.  The subtle stop/unpark/join
+/// shutdown handshake lives here once, shared by the worker serve loop
+/// and the agent's run handlers.
+pub(crate) struct HeartbeatPump {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+pub(crate) fn heartbeat_pump(beat: impl Fn() -> bool + Send + 'static) -> HeartbeatPump {
+    let stop = Arc::new(AtomicBool::new(false));
+    let thread = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::park_timeout(HEARTBEAT_EVERY);
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                if !beat() {
+                    break;
+                }
+            }
+        })
+    };
+    HeartbeatPump { stop, thread: Some(thread) }
+}
+
+impl Drop for HeartbeatPump {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            t.thread().unpark();
+            t.join().ok();
+        }
     }
 }
 
@@ -178,30 +325,20 @@ pub fn serve(input: impl BufRead, output: impl Write + Send + 'static) -> Result
                 continue;
             }
         };
-        // prove liveness while the (possibly long) run executes
-        let stop = Arc::new(AtomicBool::new(false));
-        let beat = {
-            let stop = Arc::clone(&stop);
+        // prove liveness while the (possibly long) run executes; the
+        // guard stops and joins the pump before the terminal frame
+        let result = {
             let out = Arc::clone(&out);
-            std::thread::spawn(move || {
-                while !stop.load(Ordering::Relaxed) {
-                    std::thread::park_timeout(HEARTBEAT_EVERY);
-                    if stop.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    if let Ok(line) = (Frame::Heartbeat { id }).to_line() {
-                        let mut o = out.lock().expect("worker stdout lock");
-                        let _ = o.write_all(line.as_bytes());
-                        let _ = o.flush();
-                    }
+            let _pump = heartbeat_pump(move || match (Frame::Heartbeat { id }).to_line() {
+                Ok(line) => {
+                    let mut o = out.lock().expect("worker stdout lock");
+                    o.write_all(line.as_bytes()).and_then(|()| o.flush()).is_ok()
                 }
-            })
+                Err(_) => true,
+            });
+            crate::experiment::Experiment::from_config(cfg)
+                .and_then(crate::experiment::Experiment::run)
         };
-        let result = crate::experiment::Experiment::from_config(cfg)
-            .and_then(crate::experiment::Experiment::run);
-        stop.store(true, Ordering::Relaxed);
-        beat.thread().unpark();
-        beat.join().ok();
         match result {
             Ok(report) => write_frame(&Frame::RunResult { id, report })?,
             Err(e) => write_frame(&Frame::Error { id, message: format!("{e:#}") })?,
@@ -235,6 +372,7 @@ mod tests {
         }
 
         let hb = (Frame::Heartbeat { id: 3 }).to_line().unwrap();
+        assert!(hb.contains("\"v\":2"), "every frame carries the version header: {hb}");
         assert!(matches!(Frame::parse(&hb).unwrap(), Frame::Heartbeat { id: 3 }));
 
         let err = (Frame::Error { id: 9, message: "boom".into() }).to_line().unwrap();
@@ -245,8 +383,45 @@ mod tests {
             other => panic!("wrong frame {other:?}"),
         }
 
-        assert!(Frame::parse("{\"type\":\"warp\",\"id\":1}").is_err());
+        let crashed =
+            (Frame::Crashed { id: 4, message: "child died".into() }).to_line().unwrap();
+        match Frame::parse(&crashed).unwrap() {
+            Frame::Crashed { id, message } => {
+                assert_eq!((id, message.as_str()), (4, "child died"));
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+
+        let hello = (Frame::Hello { token: "sesame".into() }).to_line().unwrap();
+        match Frame::parse(&hello).unwrap() {
+            Frame::Hello { token } => assert_eq!(token, "sesame"),
+            other => panic!("wrong frame {other:?}"),
+        }
+        let ack = (Frame::HelloAck { slots: 6 }).to_line().unwrap();
+        match Frame::parse(&ack).unwrap() {
+            Frame::HelloAck { slots } => assert_eq!(slots, 6),
+            other => panic!("wrong frame {other:?}"),
+        }
+        assert_eq!((Frame::Hello { token: String::new() }).id(), 0);
+
+        assert!(Frame::parse("{\"type\":\"warp\",\"id\":1,\"v\":2}").is_err());
         assert!(Frame::parse("not json").is_err());
+    }
+
+    #[test]
+    fn version_skew_is_a_typed_clear_error() {
+        // unversioned (pre-v2) frame
+        let err = Frame::parse("{\"type\":\"heartbeat\",\"id\":1}").unwrap_err();
+        assert!(err.is::<VersionSkew>(), "{err:#}");
+        assert_eq!(err.downcast_ref::<VersionSkew>(), Some(&VersionSkew { got: None }));
+        let msg = format!("{err:#}");
+        assert!(msg.contains("protocol version skew"), "{msg}");
+        assert!(msg.contains("unversioned"), "{msg}");
+        // versioned but different
+        let err = Frame::parse("{\"type\":\"heartbeat\",\"id\":1,\"v\":999}").unwrap_err();
+        assert_eq!(err.downcast_ref::<VersionSkew>(), Some(&VersionSkew { got: Some(999) }));
+        let msg = format!("{err:#}");
+        assert!(msg.contains("999") && msg.contains("protocol version skew"), "{msg}");
     }
 
     #[test]
@@ -264,14 +439,16 @@ mod tests {
         quick.sync.strategy = crate::period::Strategy::Constant;
         quick.sync.period = 4;
 
-        // four poison lines, then a valid request: the worker must
+        // five poison lines, then a valid request: the worker must
         // answer each defect with an Error frame and keep serving
-        // (id 5: a run_request whose cfg is not even a string)
+        // (id 5: a run_request whose cfg is not even a string; id 7: a
+        // version-skewed frame from a mismatched binary)
         let input = format!(
             "not json at all\n\
-             {{\"type\":\"heartbeat\",\"id\":9}}\n\
-             {{\"type\":\"run_request\",\"id\":5,\"cfg\":42}}\n\
-             {{\"type\":\"warp\",\"id\":6}}\n\
+             {{\"type\":\"heartbeat\",\"id\":9,\"v\":2}}\n\
+             {{\"type\":\"run_request\",\"id\":5,\"cfg\":42,\"v\":2}}\n\
+             {{\"type\":\"warp\",\"id\":6,\"v\":2}}\n\
+             {{\"type\":\"run_request\",\"id\":7,\"cfg\":\"\"}}\n\
              {}",
             (Frame::RunRequest { id: 3, cfg: quick }).to_line().unwrap(),
         );
@@ -307,6 +484,9 @@ mod tests {
         // dispatcher can fail that run deterministically
         assert!(error_for(5).contains("malformed request"));
         assert!(error_for(6).contains("malformed request"));
+        // a version-skewed peer gets the clear skew diagnosis, not a
+        // generic parse failure
+        assert!(error_for(7).contains("protocol version skew"), "{}", error_for(7));
         // and the valid request after all that still executes
         let result = frames.iter().find_map(|f| match f {
             Frame::RunResult { id: 3, report } => Some(report),

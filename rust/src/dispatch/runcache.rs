@@ -39,8 +39,10 @@
 //! Long-lived cache directories are bounded by [`RunCache::gc`]
 //! (size/age eviction oldest-first plus a sweep of orphaned `.tmp`
 //! files), wired to `adpsgd cache-gc` and `adpsgd campaign
-//! --cache-max-bytes`.  Eviction is always safe: a probe of an evicted
-//! key simply recomputes.
+//! --cache-max-bytes`; [`RunCache::gc_plan`] is the dry-run form
+//! (`adpsgd cache-gc --dry-run`) reporting the exact victims — paths,
+//! bytes, ages — a real pass would delete.  Eviction is always safe: a
+//! probe of an evicted key simply recomputes.
 
 use crate::config::{spec, ExperimentConfig};
 use crate::coordinator::RunReport;
@@ -266,6 +268,43 @@ impl Default for GcPolicy {
     }
 }
 
+/// One file a GC pass would remove (or did remove).
+#[derive(Debug, Clone)]
+pub struct GcVictim {
+    pub path: PathBuf,
+    pub bytes: u64,
+    /// now − mtime at plan time (future mtimes count as age zero)
+    pub age: Duration,
+}
+
+/// What a GC pass *would* do — the dry-run form ([`RunCache::gc_plan`])
+/// and the execution plan [`RunCache::gc`] carries out, so
+/// `adpsgd cache-gc --dry-run` prints exactly the deletions a real run
+/// performs on the same directory state.
+#[derive(Debug, Default)]
+pub struct GcPlan {
+    /// `*.run.json` entries considered.
+    pub scanned: usize,
+    /// Entries the age/size bounds select for eviction (age victims
+    /// first, then size victims oldest-first — deletion order).
+    pub evict: Vec<GcVictim>,
+    /// Orphaned `.tmp` files past the grace period.
+    pub tmp_sweep: Vec<GcVictim>,
+    /// Entries surviving the pass.
+    pub kept: usize,
+    pub kept_bytes: u64,
+}
+
+impl GcPlan {
+    pub fn evicted_bytes(&self) -> u64 {
+        self.evict.iter().map(|v| v.bytes).sum()
+    }
+
+    pub fn is_noop(&self) -> bool {
+        self.evict.is_empty() && self.tmp_sweep.is_empty()
+    }
+}
+
 /// What one [`RunCache::gc`] pass did.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct GcStats {
@@ -299,6 +338,27 @@ impl RunCache {
 
     pub fn path_for(&self, key: &str) -> PathBuf {
         self.dir.join(format!("{key}.run.json"))
+    }
+
+    /// Canonicalize `cfg`, probe for its report, and restamp a hit
+    /// under the requesting run's name (the name is excluded from the
+    /// key as incidental, so cross-campaign hits report under the label
+    /// that asked).  Returns `(digest, canonical_text, hit)` — the
+    /// first two are what [`RunCache::put`] needs after a miss
+    /// executes.  This is THE probe: the dispatcher's slot threads and
+    /// the remote agent both call it, so the key/restamp semantics can
+    /// never diverge between the two cache sites.
+    pub fn probe(
+        &self,
+        cfg: &ExperimentConfig,
+    ) -> Result<(String, String, Option<RunReport>)> {
+        let canonical = cfg_canonical_text(cfg)?;
+        let digest = content_digest(canonical.as_bytes());
+        let hit = self.get(&digest).map(|mut report| {
+            report.name = cfg.name.clone();
+            report
+        });
+        Ok((digest, canonical, hit))
     }
 
     /// Look up a cached report.  Any defect — unparseable JSON, schema
@@ -364,19 +424,22 @@ impl RunCache {
         Ok(())
     }
 
-    /// Evict entries per `policy` and sweep orphaned `.tmp` files.
+    /// Compute what [`RunCache::gc`] would do under `policy` without
+    /// touching the directory — the dry-run entry
+    /// (`adpsgd cache-gc --dry-run` prints this plan).
     ///
-    /// Age eviction runs first (age ≥ `max_age` goes), then the size
-    /// bound removes the oldest survivors (mtime order, path as the
-    /// deterministic tiebreak) until the directory's `*.run.json`
-    /// total fits in `max_bytes`.  Foreign files are never touched; a
-    /// missing directory is an empty cache, not an error.  Eviction is
-    /// always safe: a future probe of an evicted key recomputes.
-    pub fn gc(&self, policy: &GcPolicy) -> Result<GcStats> {
-        let mut stats = GcStats::default();
+    /// Age eviction selects first (age ≥ `max_age` goes), then the size
+    /// bound selects the oldest survivors (mtime order, path as the
+    /// deterministic tiebreak) until the directory's `*.run.json` total
+    /// fits in `max_bytes`.  Orphaned `.tmp` files past the grace
+    /// period are planned for sweeping.  Foreign files are never
+    /// selected; a missing directory is an empty (no-op) plan, not an
+    /// error.
+    pub fn gc_plan(&self, policy: &GcPolicy) -> Result<GcPlan> {
+        let mut plan = GcPlan::default();
         let entries = match std::fs::read_dir(&self.dir) {
             Ok(rd) => rd,
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(stats),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(plan),
             Err(e) => {
                 return Err(anyhow!(e))
                     .with_context(|| format!("scanning run cache {}", self.dir.display()))
@@ -396,24 +459,20 @@ impl RunCache {
             let name = entry.file_name();
             let name = name.to_string_lossy();
             let modified = meta.modified().unwrap_or(std::time::UNIX_EPOCH);
+            let age = age_of(modified);
             if name.starts_with('.') && name.ends_with(".tmp") {
-                if age_of(modified) >= policy.tmp_grace {
-                    if std::fs::remove_file(&path).is_ok() {
-                        stats.tmp_swept += 1;
-                    }
+                if age >= policy.tmp_grace {
+                    plan.tmp_sweep.push(GcVictim { path, bytes: meta.len(), age });
                 }
                 continue;
             }
             if !name.ends_with(".run.json") {
                 continue;
             }
-            stats.scanned += 1;
+            plan.scanned += 1;
             if let Some(max_age) = policy.max_age {
-                if age_of(modified) >= max_age {
-                    if std::fs::remove_file(&path).is_ok() {
-                        stats.evicted += 1;
-                        stats.evicted_bytes += meta.len();
-                    }
+                if age >= max_age {
+                    plan.evict.push(GcVictim { path, bytes: meta.len(), age });
                     continue;
                 }
             }
@@ -421,26 +480,44 @@ impl RunCache {
         }
         live.sort_by(|a, b| a.2.cmp(&b.2).then_with(|| a.0.cmp(&b.0)));
         let mut total: u64 = live.iter().map(|(_, len, _)| len).sum();
-        let mut survivors = live.into_iter();
-        if let Some(max_bytes) = policy.max_bytes {
-            for (path, len, _) in survivors.by_ref() {
-                if total <= max_bytes {
-                    // iterators have no peek-and-put-back: account the
-                    // entry we already pulled, then fall through
-                    stats.kept += 1;
-                    stats.kept_bytes += len;
-                    break;
-                }
-                if std::fs::remove_file(&path).is_ok() {
-                    stats.evicted += 1;
-                    stats.evicted_bytes += len;
-                    total -= len;
-                }
+        for (path, len, modified) in live {
+            if policy.max_bytes.map(|max| total > max).unwrap_or(false) {
+                total -= len;
+                plan.evict.push(GcVictim { path, bytes: len, age: age_of(modified) });
+            } else {
+                plan.kept += 1;
+                plan.kept_bytes += len;
             }
         }
-        for (_, len, _) in survivors {
-            stats.kept += 1;
-            stats.kept_bytes += len;
+        Ok(plan)
+    }
+
+    /// Evict entries per `policy` and sweep orphaned `.tmp` files —
+    /// exactly the deletions [`RunCache::gc_plan`] reports for the same
+    /// directory state (the dry-run/real-run parity the unit tests
+    /// pin).  Eviction is always safe: a future probe of an evicted key
+    /// recomputes.  A file that refuses to delete is counted as kept.
+    pub fn gc(&self, policy: &GcPolicy) -> Result<GcStats> {
+        let plan = self.gc_plan(policy)?;
+        let mut stats = GcStats {
+            scanned: plan.scanned,
+            kept: plan.kept,
+            kept_bytes: plan.kept_bytes,
+            ..GcStats::default()
+        };
+        for v in &plan.tmp_sweep {
+            if std::fs::remove_file(&v.path).is_ok() {
+                stats.tmp_swept += 1;
+            }
+        }
+        for v in &plan.evict {
+            if std::fs::remove_file(&v.path).is_ok() {
+                stats.evicted += 1;
+                stats.evicted_bytes += v.bytes;
+            } else {
+                stats.kept += 1;
+                stats.kept_bytes += v.bytes;
+            }
         }
         Ok(stats)
     }
@@ -597,6 +674,63 @@ mod tests {
         assert_eq!(stats.kept, 0, "{stats:?}");
         assert_eq!(stats.evicted, stats.scanned, "{stats:?}");
         assert!(dir.join("README").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gc_dry_run_plans_exactly_what_the_real_run_deletes() {
+        let dir = tmpdir("gc_dry");
+        let cache = RunCache::new(&dir);
+        let keys = ["old0", "old1", "new2"];
+        for (i, key) in keys.iter().enumerate() {
+            std::fs::write(cache.path_for(key), vec![b'x'; 100 * (i + 1)]).unwrap();
+        }
+        let orphan = dir.join(".cafebabe.1.0.tmp");
+        std::fs::write(&orphan, b"half-written").unwrap();
+        std::fs::write(dir.join("README"), b"foreign").unwrap();
+        let policy = GcPolicy {
+            // room for the largest entry only: two must go
+            max_bytes: Some(300),
+            tmp_grace: Duration::ZERO,
+            ..GcPolicy::default()
+        };
+
+        // the plan selects victims without touching anything (which
+        // entries go depends on the oldest-first tiebreak, so pin the
+        // invariants, not the victim identities)
+        let plan = cache.gc_plan(&policy).unwrap();
+        assert_eq!(plan.scanned, 3);
+        assert!(!plan.evict.is_empty(), "{plan:?}");
+        assert_eq!(plan.kept + plan.evict.len(), 3, "{plan:?}");
+        assert!(plan.kept_bytes <= 300, "{plan:?}");
+        assert_eq!(plan.kept_bytes + plan.evicted_bytes(), 600, "{plan:?}");
+        assert_eq!(plan.tmp_sweep.len(), 1, "{plan:?}");
+        assert!(!plan.is_noop());
+        for key in keys {
+            assert!(cache.path_for(key).exists(), "dry run must not delete {key}");
+        }
+        assert!(orphan.exists(), "dry run must not sweep tmp files");
+
+        // the real run performs exactly the planned deletions
+        let stats = cache.gc(&policy).unwrap();
+        assert_eq!(stats.scanned, plan.scanned);
+        assert_eq!(stats.evicted, plan.evict.len());
+        assert_eq!(stats.evicted_bytes, plan.evicted_bytes());
+        assert_eq!((stats.kept, stats.kept_bytes), (plan.kept, plan.kept_bytes));
+        assert_eq!(stats.tmp_swept, plan.tmp_sweep.len());
+        for v in plan.evict.iter().chain(&plan.tmp_sweep) {
+            assert!(!v.path.exists(), "{} must be gone after gc", v.path.display());
+        }
+        let survivors = keys
+            .iter()
+            .filter(|k| cache.path_for(k).exists())
+            .count();
+        assert_eq!(survivors, plan.kept, "exactly the planned survivors remain");
+        assert!(dir.join("README").exists(), "foreign files are never touched");
+
+        // a second plan over the collected directory is a no-op
+        let plan = cache.gc_plan(&policy).unwrap();
+        assert!(plan.is_noop(), "{plan:?}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

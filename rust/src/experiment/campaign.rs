@@ -5,10 +5,13 @@
 //! A campaign *describes* every run up front ([`CampaignBuilder::build`]
 //! materializes the cross product into labeled, validated
 //! [`RunSpec`]s), then hands them to the [`crate::dispatch`] subsystem:
-//! [`Campaign::run`] uses the conservative in-process profile, while
+//! [`Campaign::run`] uses the process-default dispatch profile
+//! (conservative in-process execution unless a launcher installed one
+//! via [`crate::dispatch::set_default_options`]), while
 //! [`Campaign::execute`] takes an explicit
 //! [`crate::dispatch::DispatchOptions`] (job count, thread vs
-//! `adpsgd worker` subprocess slots, persistent run cache).  Because
+//! `adpsgd worker` subprocess vs remote `adpsgd agent` slots,
+//! persistent run cache).  Because
 //! runs are fully independent coordinator clusters, the pool can run
 //! several at once — results are deterministic and ordered regardless
 //! of the parallelism level or worker kind, already-cached runs are
@@ -103,14 +106,24 @@ impl Campaign {
         self
     }
 
-    /// Execute every run with at most `parallelism` concurrent
-    /// in-process runs — the conservative profile: thread workers, the
+    /// Execute under the process-default dispatch profile
+    /// ([`crate::dispatch::default_options`]).  With no profile
+    /// installed this is the historical conservative behavior: thread
+    /// workers, at most `parallelism` concurrent in-process runs, the
     /// process-default run cache (usually disabled; see
-    /// [`crate::dispatch::default_cache_dir`]).  Reports come back in
-    /// declaration order; the first failing run aborts the campaign
-    /// (remaining queued runs are not started, in-flight ones finish).
+    /// [`crate::dispatch::default_cache_dir`]).  A launcher-installed
+    /// profile (`adpsgd figures --jobs/--workers/--remote/…`) gives
+    /// every implicit campaign the full pool/supervision/remote
+    /// treatment; only an explicit `--jobs` overrides the campaign's
+    /// own parallelism.  Reports come back in declaration order; the
+    /// first failing run aborts the campaign (remaining queued runs are
+    /// not started, in-flight ones finish).
     pub fn run(&self) -> Result<CampaignReport> {
-        self.execute(&DispatchOptions::in_process(self.parallelism))
+        let mut opts = crate::dispatch::default_options();
+        if opts.jobs.is_none() {
+            opts.jobs = Some(self.parallelism.max(1));
+        }
+        self.execute(&opts)
     }
 
     /// Execute through an explicit dispatch profile: job count, thread
@@ -414,12 +427,15 @@ impl CampaignReport {
         ])
     }
 
-    /// [`Self::to_json`] minus the per-invocation volatile keys (this
-    /// host's wall clock and hit count): the *stable* summary.  Because
-    /// cached reports are bit-identical to the originals, a campaign
-    /// re-executed against a warm cache produces byte-identical stable
-    /// JSON — what `adpsgd campaign` writes to `<name>.campaign.json`
-    /// and what the verify script compares cold vs warm.
+    /// [`Self::to_json`] minus every per-invocation volatile key — the
+    /// campaign-level wall clock, throughput, and hit count, *and* each
+    /// run summary's measured `wall_secs`/`compute_secs` — leaving only
+    /// deterministic quantities (losses, sync counts, modeled
+    /// communication).  The *stable* summary is therefore byte-identical
+    /// across a warm-cache re-run, a fresh local re-execution, and a
+    /// remote execution through `adpsgd agent` — what `adpsgd campaign`
+    /// writes to `<name>.campaign.json` and what the verify script
+    /// `cmp`s cold-vs-warm and local-vs-remote.
     pub fn to_json_stable(&self) -> Json {
         let mut obj = match self.to_json() {
             Json::Obj(m) => m,
@@ -427,6 +443,14 @@ impl CampaignReport {
         };
         for volatile in ["wall_secs", "runs_per_sec", "cache_hits"] {
             obj.remove(volatile);
+        }
+        if let Some(Json::Arr(runs)) = obj.get_mut("run_summaries") {
+            for run in runs {
+                if let Json::Obj(ro) = run {
+                    ro.remove("wall_secs");
+                    ro.remove("compute_secs");
+                }
+            }
         }
         Json::Obj(obj)
     }
@@ -641,9 +665,38 @@ mod tests {
         // volatile keys stay out of the stable form but in the live one
         let live = warm.to_json().to_string_compact();
         assert!(live.contains("cache_hits"), "{live}");
+        assert!(live.contains("wall_secs"), "{live}");
         let stable = warm.to_json_stable().to_string_compact();
         assert!(!stable.contains("runs_per_sec") && !stable.contains("cache_hits"), "{stable}");
+        // per-run measured clocks are volatile too: stripping them is
+        // what makes fresh local and remote re-executions byte-identical
+        assert!(
+            !stable.contains("wall_secs") && !stable.contains("compute_secs"),
+            "{stable}"
+        );
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fresh_reexecution_stable_summary_is_byte_identical() {
+        // no cache involved: two fresh executions differ only in
+        // measured clocks, which the stable summary excludes
+        let build = || {
+            Campaign::builder("t", tiny_base())
+                .strategy("cpsgd", StrategySpec::Constant { period: 4 })
+                .strategy("full", StrategySpec::Full)
+                .build()
+                .unwrap()
+        };
+        let opts =
+            DispatchOptions { jobs: Some(2), cache_dir: None, ..DispatchOptions::default() };
+        let a = build().execute(&opts).unwrap();
+        let b = build().execute(&opts).unwrap();
+        assert_eq!(
+            a.to_json_stable().to_string_compact(),
+            b.to_json_stable().to_string_compact(),
+            "fresh re-executions must agree on the stable summary"
+        );
     }
 
     #[test]

@@ -112,16 +112,25 @@
 //! persistent content-addressed run cache (same resolved config →
 //! cached [`coordinator::RunReport`], bit-identical, probed on the
 //! pool's own threads and bounded by `RunCache::gc` /
-//! `adpsgd cache-gc`), a work-stealing pool of in-process threads or
-//! `adpsgd worker` subprocesses (a line-delimited JSON protocol;
-//! crashed **or hung** workers — detected by heartbeat deadline,
-//! `--hang-timeout` — retry on another slot), and a deterministic
-//! merge — so `--jobs 8` and a warm cache change wall-clock, never
-//! results.  Subprocess children live in a process-wide shared
-//! [`dispatch::WorkerPool`], so sequential campaigns reuse warm
-//! workers and teardown is graceful (stdin EOF, bounded wait, then
-//! kill).  See [`dispatch`] for the experiment → dispatch →
-//! coordinator layering.
+//! `adpsgd cache-gc` — with `--dry-run` to preview evictions), a
+//! work-stealing pool of in-process threads, `adpsgd worker`
+//! subprocesses (a line-delimited JSON protocol; crashed **or hung**
+//! workers — detected by heartbeat deadline, `--hang-timeout` — retry
+//! on another slot), and/or **remote `adpsgd agent` daemons** over the
+//! [`dispatch::net`] TCP transport (`--remote host:port`, `--workers
+//! remote`; mixed local+remote slots drain one queue, agents probe
+//! their own cache before executing, and a silent or disconnected
+//! agent is handled exactly like a hung child), and a deterministic
+//! merge — so `--jobs 8`, a warm cache, or a rack of agents change
+//! wall-clock, never results: the stable campaign summary is
+//! byte-identical across local, cached, and remote execution.
+//! Subprocess children live in a process-wide shared
+//! [`dispatch::WorkerPool`] (agents reuse the same pool for their own
+//! children), so sequential campaigns reuse warm workers and teardown
+//! is graceful (stdin EOF, bounded wait, then kill).  Wire frames are
+//! versioned: a version-skewed peer is rejected with a clear
+//! rebuild-both-ends error, never a generic parse failure.  See
+//! [`dispatch`] for the experiment → dispatch → coordinator layering.
 //!
 //! (The historical `Trainer::new(cfg)?.run()` front-door is gone; every
 //! caller goes through [`experiment::Experiment`] now.)

@@ -3,9 +3,12 @@
 //! ```text
 //! adpsgd run      [--config exp.toml] [--sync.strategy=adpsgd] [--nodes 16] ...
 //! adpsgd campaign [--strategies full,cpsgd,adpsgd,qsgd] [--jobs 8]
-//!                 [--workers subprocess] [--cache-dir DIR] [--hang-timeout 10] ...
-//! adpsgd figures  [--only fig1,fig4,...] [--quick] [--cache-dir DIR] [--out results]
-//! adpsgd cache-gc [--cache-dir DIR] [--max-bytes N] [--max-age-secs S]
+//!                 [--workers subprocess|remote] [--remote host:7070]
+//!                 [--cache-dir DIR] [--hang-timeout 10] ...
+//! adpsgd figures  [--only fig1,fig4,...] [--quick] [--cache-dir DIR]
+//!                 [--jobs 8] [--remote host:7070] [--out results]
+//! adpsgd agent    --listen 0.0.0.0:7070 [--slots 8] [--token T] [--cache-dir DIR]
+//! adpsgd cache-gc [--cache-dir DIR] [--max-bytes N] [--max-age-secs S] [--dry-run]
 //! adpsgd models   [--artifacts artifacts]
 //! adpsgd worker
 //! adpsgd help
@@ -14,11 +17,14 @@
 //! `run` executes one experiment described by a TOML config plus dotted
 //! CLI overrides (through the session API); `campaign` executes a
 //! declarative strategy × nodes × bandwidth × collective sweep through
-//! the dispatch subsystem (worker pool + persistent run cache) and
-//! writes a JSON summary; `figures` regenerates every paper
-//! table/figure (see DESIGN.md §4); `models` lists the AOT artifacts
-//! the PJRT runtime can load; `worker` is the subprocess end of the
-//! dispatcher's line-delimited JSON protocol (not for interactive use).
+//! the dispatch subsystem (worker pool + persistent run cache + remote
+//! agents) and writes a JSON summary; `figures` regenerates every paper
+//! table/figure (see DESIGN.md §4) under the same dispatch flags;
+//! `agent` serves campaign runs over TCP for `--remote` dispatchers
+//! (the cross-machine end of the worker fabric); `models` lists the AOT
+//! artifacts the PJRT runtime can load; `worker` is the subprocess end
+//! of the dispatcher's line-delimited JSON protocol (not for
+//! interactive use).
 
 use adpsgd::cli::Args;
 use adpsgd::collective::Algo;
@@ -37,13 +43,20 @@ USAGE:
                     [--key.subkey=value ...]
     adpsgd campaign [--config FILE] [--name NAME] [--strategies LIST]
                     [--sweep-nodes LIST] [--bandwidths LIST] [--collectives LIST]
-                    [--jobs N] [--workers thread|subprocess]
+                    [--jobs N] [--workers thread|subprocess|remote]
+                    [--remote HOST:PORT[,...]] [--remote-token T]
                     [--cache-dir DIR] [--no-cache] [--retries N]
                     [--hang-timeout SECS] [--cache-max-bytes N]
                     [--quick] [--json] [--out DIR]
-    adpsgd figures  [--only LIST] [--quick] [--cache-dir DIR] [--out DIR]
+    adpsgd figures  [--only LIST] [--quick] [--out DIR]
+                    [--jobs N] [--workers thread|subprocess|remote]
+                    [--remote HOST:PORT[,...]] [--remote-token T]
+                    [--cache-dir DIR] [--no-cache] [--retries N]
+                    [--hang-timeout SECS]
+    adpsgd agent    --listen HOST:PORT [--slots N] [--token T]
+                    [--cache-dir DIR] [--hang-timeout SECS]
     adpsgd cache-gc [--cache-dir DIR] [--max-bytes N] [--max-age-secs S]
-                    [--tmp-grace-secs S]
+                    [--tmp-grace-secs S] [--dry-run]
     adpsgd models   [--artifacts DIR]
     adpsgd worker   (dispatcher subprocess; speaks JSONL on stdin/stdout)
     adpsgd help
@@ -74,9 +87,11 @@ CAMPAIGN (cartesian sweep; every run is a full coordinator cluster):
     --jobs N                               concurrent run slots
                                            (default min(cores, runs);
                                            --parallel N is a legacy alias)
-    --workers {thread|subprocess}          run slots in-process (default) or
-                                           as `adpsgd worker` children over a
-                                           line-delimited JSON protocol;
+    --workers {thread|subprocess|remote}   run slots in-process (default), as
+                                           `adpsgd worker` children over a
+                                           line-delimited JSON protocol, or
+                                           remote-only on `adpsgd agent`
+                                           daemons (requires --remote);
                                            crashed children are retried on
                                            another slot (--retries, default 3);
                                            children are pooled process-wide, so
@@ -110,18 +125,54 @@ CAMPAIGN (cartesian sweep; every run is a full coordinator cluster):
     `--strategies adpsgd,qsgd --sync.qsgd.levels 15`.
     The merged results are deterministic for any --jobs/--workers level.
 
+REMOTE WORKERS (cross-machine campaign execution; two-machine quickstart):
+    machine B (worker):  adpsgd agent --listen 0.0.0.0:7070 --slots 8 \
+                             --token sesame --cache-dir /var/adpsgd-cache
+    machine A (driver):  adpsgd campaign --remote b.example:7070 \
+                             --remote-token sesame [--workers remote] ...
+    --remote host:port[,host:port...]      lease slots on these agents; each
+                                           contributes its advertised capacity
+                                           to the same work-stealing queue as
+                                           the local slots (mixed local+remote
+                                           is the default when both are given)
+    --workers remote                       remote-only: no local slots
+    --remote-token T                       shared secret for the Hello
+                                           handshake (must match --token)
+    Agents probe their own --cache-dir before executing, so a warm agent
+    answers repeats without recomputation.  A silent or disconnected agent
+    is treated exactly like a hung worker: its lease is killed and its runs
+    requeue onto the surviving slots.  The merged report and the stable
+    summary are byte-identical to a local run.  Version-skewed peers and
+    bad tokens are rejected at the handshake with a clear error.
+
+AGENT (the daemon behind --remote):
+    --listen HOST:PORT   bind address (port 0 picks a free port; the bound
+                         address is printed on stdout either way)
+    --slots N            advertised concurrent-run capacity (default: cores)
+    --token T            require this shared secret from every client
+    --cache-dir DIR      agent-side run cache ($ADPSGD_RUN_CACHE if omitted;
+                         probed before executing, written after)
+    --hang-timeout SECS  supervision deadline for the agent's own worker
+                         children (default 10)
+
 FIGURES:
     --only fig1,fig2,fig4,fig5,fig6,fig7,fig8,table1,sec5b,ablation  (default: all)
     --quick        shrink every axis (seconds instead of minutes)
     --cache-dir DIR  run cache shared by every figure campaign (regenerating
                    a subset of figures reuses the others' finished runs)
     --out DIR      write the CSV series behind each panel
+    Figure campaigns take the same dispatch flags as `campaign`
+    (--jobs/--workers/--remote/--remote-token/--retries/--hang-timeout/
+    --no-cache): the whole figure sweep gets the same pool, supervision,
+    and remote capacity.
 
 CACHE-GC (bound a long-lived run-cache directory):
     --cache-dir DIR      directory to collect ($ADPSGD_RUN_CACHE if omitted)
     --max-bytes N        evict oldest entries until the total fits N bytes
     --max-age-secs S     evict entries older than S seconds
     --tmp-grace-secs S   sweep orphaned .tmp files older than S (default 900)
+    --dry-run            print what would be evicted (paths, bytes, ages)
+                         without deleting anything
     Eviction is always safe: an evicted key is recomputed on its next probe.
 ";
 
@@ -133,7 +184,7 @@ fn main() {
 }
 
 fn real_main() -> Result<()> {
-    let args = Args::parse_env(&["quick", "quiet", "json", "series", "no-cache"])?;
+    let args = Args::parse_env(&["quick", "quiet", "json", "series", "no-cache", "dry-run"])?;
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("campaign") => cmd_campaign(&args),
@@ -145,6 +196,8 @@ fn real_main() -> Result<()> {
         Some("worker") => {
             adpsgd::dispatch::proto::serve(std::io::stdin().lock(), std::io::stdout())
         }
+        // the remote end of `--remote`: serve campaign runs over TCP
+        Some("agent") => cmd_agent(&args),
         Some("help") | None => {
             print!("{HELP}");
             Ok(())
@@ -244,9 +297,9 @@ fn csv_list(args: &Args, key: &str) -> Option<Vec<String>> {
     })
 }
 
-/// Dispatch profile from the campaign flags: `--jobs` (with the legacy
-/// `--parallel` alias), `--workers`, `--cache-dir`/`--no-cache`,
-/// `--retries`, `--hang-timeout`.
+/// Dispatch profile from the campaign/figures flags: `--jobs` (with the
+/// legacy `--parallel` alias), `--workers`, `--remote`/`--remote-token`,
+/// `--cache-dir`/`--no-cache`, `--retries`, `--hang-timeout`.
 fn dispatch_options(args: &Args) -> Result<DispatchOptions> {
     let mut opts = DispatchOptions::default();
     opts.jobs = match (args.get("jobs"), args.get("parallel")) {
@@ -257,8 +310,20 @@ fn dispatch_options(args: &Args) -> Result<DispatchOptions> {
     opts.workers = match args.get_or("workers", "thread") {
         "thread" => WorkerKind::Thread,
         "subprocess" => WorkerKind::Subprocess,
-        other => bail!("--workers must be thread|subprocess, got {other:?}"),
+        "remote" => WorkerKind::Remote,
+        other => bail!("--workers must be thread|subprocess|remote, got {other:?}"),
     };
+    if let Some(endpoints) = args.get("remote") {
+        opts.remote = endpoints
+            .split(',')
+            .map(|a| a.trim().to_string())
+            .filter(|a| !a.is_empty())
+            .collect();
+    }
+    opts.remote_token = args.get("remote-token").map(String::from);
+    if matches!(opts.workers, WorkerKind::Remote) && opts.remote.is_empty() {
+        bail!("--workers remote needs at least one agent (--remote host:port[,host:port...])");
+    }
     if args.flag("no-cache") {
         opts.cache_dir = None;
     } else if let Some(dir) = args.get("cache-dir") {
@@ -290,6 +355,8 @@ fn cmd_campaign(args: &Args) -> Result<()> {
             "parallel",
             "jobs",
             "workers",
+            "remote",
+            "remote-token",
             "cache-dir",
             "retries",
             "hang-timeout",
@@ -386,10 +453,15 @@ fn cmd_campaign(args: &Args) -> Result<()> {
             .map(|j| j.to_string())
             .unwrap_or_else(|| "min(cores, runs)".into());
         println!(
-            "campaign {name}: {} runs ({} strategies × axes), jobs={jobs}, workers={:?}{}",
+            "campaign {name}: {} runs ({} strategies × axes), jobs={jobs}, workers={:?}{}{}",
             campaign.len(),
             strategy_names.len(),
             opts.workers,
+            if opts.remote.is_empty() {
+                String::new()
+            } else {
+                format!(", remote=[{}]", opts.remote.join(", "))
+            },
             opts.cache_dir
                 .as_ref()
                 .map(|d| format!(", cache={}", d.display()))
@@ -449,7 +521,8 @@ fn gc_summary(dir: &std::path::Path, stats: &adpsgd::dispatch::GcStats) -> Strin
 }
 
 /// `adpsgd cache-gc`: bound a long-lived run-cache directory by size
-/// and/or age, and sweep orphaned temp files.
+/// and/or age, and sweep orphaned temp files.  `--dry-run` prints the
+/// exact victims (paths, bytes, ages) without deleting anything.
 fn cmd_cache_gc(args: &Args) -> Result<()> {
     reject_unknown_options(
         args,
@@ -472,20 +545,98 @@ fn cmd_cache_gc(args: &Args) -> Result<()> {
     if let Some(s) = args.get("tmp-grace-secs") {
         policy.tmp_grace = std::time::Duration::from_secs(s.parse().context("--tmp-grace-secs")?);
     }
-    let stats = adpsgd::dispatch::RunCache::new(&dir)
+    let cache = adpsgd::dispatch::RunCache::new(&dir);
+    if args.flag("dry-run") {
+        let plan = cache
+            .gc_plan(&policy)
+            .with_context(|| format!("planning gc of run cache {}", dir.display()))?;
+        for v in &plan.evict {
+            println!(
+                "would evict {}  ({} bytes, age {:.0}s)",
+                v.path.display(),
+                v.bytes,
+                v.age.as_secs_f64()
+            );
+        }
+        for v in &plan.tmp_sweep {
+            println!(
+                "would sweep {}  ({} bytes, age {:.0}s)",
+                v.path.display(),
+                v.bytes,
+                v.age.as_secs_f64()
+            );
+        }
+        println!(
+            "cache-gc {} (dry run): {} entries scanned, {} would be evicted ({} bytes), \
+             {} kept ({} bytes), {} orphaned tmp would be swept",
+            dir.display(),
+            plan.scanned,
+            plan.evict.len(),
+            plan.evicted_bytes(),
+            plan.kept,
+            plan.kept_bytes,
+            plan.tmp_sweep.len(),
+        );
+        return Ok(());
+    }
+    let stats = cache
         .gc(&policy)
         .with_context(|| format!("collecting run cache {}", dir.display()))?;
     println!("{}", gc_summary(&dir, &stats));
     Ok(())
 }
 
-fn cmd_figures(args: &Args) -> Result<()> {
-    reject_unknown_options(args, &["only", "out", "cache-dir"])?;
-    // every figure campaign goes through Campaign::run, which consults
-    // the process-default cache — one flag memoizes all six
-    if let Some(dir) = args.get("cache-dir") {
-        dispatch::set_default_cache_dir(Some(dir.into()));
+/// `adpsgd agent`: serve campaign runs over TCP for `--remote`
+/// dispatchers (the remote end of the worker fabric; see HELP).
+fn cmd_agent(args: &Args) -> Result<()> {
+    reject_unknown_options(args, &["listen", "slots", "token", "cache-dir", "hang-timeout"])?;
+    let listen = args.get("listen").ok_or_else(|| {
+        anyhow::anyhow!("agent needs --listen HOST:PORT (e.g. --listen 0.0.0.0:7070)")
+    })?;
+    let cores = std::thread::available_parallelism().map(usize::from).unwrap_or(2);
+    let mut cfg = adpsgd::dispatch::AgentConfig {
+        listen: listen.to_string(),
+        slots: args.get_usize("slots", cores)?.max(1),
+        token: args.get("token").map(String::from),
+        // $ADPSGD_RUN_CACHE gives a warm agent its cache by default
+        cache_dir: args.get("cache-dir").map(Into::into).or_else(dispatch::default_cache_dir),
+        worker_exe: None, // this binary has the `worker` subcommand
+        ..adpsgd::dispatch::AgentConfig::default()
+    };
+    if let Some(secs) = args.get("hang-timeout") {
+        let secs: f64 = secs.parse().context("--hang-timeout")?;
+        if !secs.is_finite() || secs <= 0.0 || secs > 86_400.0 * 365.0 {
+            bail!("--hang-timeout must be a positive number of seconds (≤ 1 year), got {secs}");
+        }
+        cfg.heartbeat_timeout = std::time::Duration::from_secs_f64(secs);
     }
+    adpsgd::dispatch::Agent::bind(cfg)?.serve()
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    reject_unknown_options(
+        args,
+        &[
+            "only",
+            "out",
+            "cache-dir",
+            "jobs",
+            "parallel",
+            "workers",
+            "remote",
+            "remote-token",
+            "retries",
+            "hang-timeout",
+        ],
+    )?;
+    // every figure campaign goes through Campaign::run, which consults
+    // the process-default dispatch profile — one flag group gives all
+    // six figure sweeps the same pool/supervision/remote treatment as
+    // `adpsgd campaign` (an unset --jobs keeps each campaign's own
+    // parallelism)
+    let opts = dispatch_options(args)?;
+    dispatch::set_default_cache_dir(opts.cache_dir.clone());
+    dispatch::set_default_options(Some(opts));
     let scale = Scale::from_flag(args.flag("quick"));
     let sink = Sink::new(args.get("out"), args.flag("quiet"));
     let only: Vec<String> = args

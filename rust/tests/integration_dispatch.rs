@@ -12,7 +12,8 @@
 
 use adpsgd::config::{ExperimentConfig, LrSchedule, StrategySpec};
 use adpsgd::dispatch::{
-    runcache, DispatchOptions, Dispatcher, GcPolicy, RunCache, WorkerKind, WorkerPool,
+    runcache, Agent, AgentConfig, DispatchOptions, Dispatcher, GcPolicy, RunCache, WorkerKind,
+    WorkerPool,
 };
 use adpsgd::experiment::{Campaign, RunSpec};
 use adpsgd::period::Strategy;
@@ -463,7 +464,7 @@ fn stale_terminal_frames_are_discarded_not_protocol_violations() {
         format!(
             "#!/bin/sh\n\
              read -r line\n\
-             printf '{{\"type\":\"error\",\"id\":0,\"message\":\"stale\"}}\\n'\n\
+             printf '{{\"type\":\"error\",\"id\":0,\"message\":\"stale\",\"v\":2}}\\n'\n\
              {{ printf '%s\\n' \"$line\"; cat; }} | {:?} worker\n",
             worker_exe()
         ),
@@ -509,6 +510,298 @@ fn stale_terminal_frames_are_discarded_not_protocol_violations() {
         "the run served after a stale frame must be bit-identical"
     );
     std::fs::remove_dir_all(&dir).ok();
+}
+
+// ----------------------------------------------------------- remote agents
+
+/// Spawn an in-process loopback agent on a private pool.  The worker
+/// children must come from the real `adpsgd` binary (this test
+/// executable has no `worker` subcommand).
+fn spawn_agent(slots: usize, token: Option<&str>, cache_dir: Option<PathBuf>) -> String {
+    let cfg = AgentConfig {
+        listen: "127.0.0.1:0".into(),
+        slots,
+        token: token.map(String::from),
+        cache_dir,
+        worker_exe: Some(worker_exe()),
+        ..AgentConfig::default()
+    };
+    Agent::spawn(cfg, Arc::new(WorkerPool::new())).expect("loopback agent binds").to_string()
+}
+
+fn three_run_campaign(base: &ExperimentConfig) -> Campaign {
+    Campaign::builder("remote", base.clone())
+        .strategy("cpsgd", base.sync.spec_of(Strategy::Constant))
+        .strategy("adpsgd", base.sync.spec_of(Strategy::Adaptive))
+        .strategy("full", StrategySpec::Full)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn remote_agent_matches_thread_workers_bit_identically() {
+    let base = quick_base();
+    let addr = spawn_agent(2, None, None);
+    let threads = three_run_campaign(&base)
+        .execute(&DispatchOptions {
+            jobs: Some(2),
+            cache_dir: None,
+            ..DispatchOptions::default()
+        })
+        .unwrap();
+    let remote = three_run_campaign(&base)
+        .execute(&DispatchOptions {
+            workers: WorkerKind::Remote,
+            remote: vec![addr],
+            cache_dir: None,
+            ..DispatchOptions::default()
+        })
+        .unwrap();
+    for (a, b) in threads.runs.iter().zip(&remote.runs) {
+        assert_eq!(a.label, b.label);
+        assert!(!b.from_cache, "no dispatcher cache was configured");
+        assert_eq!(
+            stable_report_json(&a.report),
+            stable_report_json(&b.report),
+            "{}: the TCP transport must not change results",
+            a.label
+        );
+    }
+    // the acceptance gate: the stable summary (what `adpsgd campaign
+    // --out` writes) is byte-identical across local and remote
+    assert_eq!(
+        threads.to_json_stable().to_string_compact(),
+        remote.to_json_stable().to_string_compact(),
+        "remote campaign must write a byte-identical stable summary"
+    );
+}
+
+#[test]
+fn warm_agent_answers_from_its_own_cache() {
+    let agent_cache = tmpdir("agent_cache");
+    let base = quick_base();
+    let addr = spawn_agent(2, None, Some(agent_cache.clone()));
+    // no dispatcher-side cache: every probe happens on the agent
+    let opts = DispatchOptions {
+        workers: WorkerKind::Remote,
+        remote: vec![addr],
+        cache_dir: None,
+        ..DispatchOptions::default()
+    };
+    let cold = three_run_campaign(&base).execute(&opts).unwrap();
+    let entries = std::fs::read_dir(&agent_cache)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref().unwrap().file_name().to_string_lossy().ends_with(".run.json")
+        })
+        .count();
+    assert_eq!(entries, 3, "the agent must populate its own cache");
+    let warm = three_run_campaign(&base).execute(&opts).unwrap();
+    // an agent cache hit reproduces the original report bit-for-bit —
+    // *including* the measured clocks, which fresh executions cannot
+    for (a, b) in cold.runs.iter().zip(&warm.runs) {
+        assert_eq!(
+            runcache::report_to_json(&a.report).to_string_compact(),
+            runcache::report_to_json(&b.report).to_string_compact(),
+            "{}: a warm agent must answer from its cache, not recompute",
+            a.label
+        );
+    }
+    std::fs::remove_dir_all(&agent_cache).ok();
+}
+
+#[test]
+fn wrong_token_and_version_skew_are_rejected_with_clear_errors() {
+    let base = quick_base();
+    let runs = vec![RunSpec { label: "r".into(), cfg: base.clone() }];
+    // wrong token
+    let addr = spawn_agent(1, Some("sesame"), None);
+    let err = Dispatcher::new(DispatchOptions {
+        workers: WorkerKind::Remote,
+        remote: vec![addr.clone()],
+        remote_token: Some("wrong".into()),
+        cache_dir: None,
+        ..DispatchOptions::default()
+    })
+    .execute(&runs)
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("token"), "{msg}");
+    // missing token against a token-requiring agent
+    let err = Dispatcher::new(DispatchOptions {
+        workers: WorkerKind::Remote,
+        remote: vec![addr],
+        cache_dir: None,
+        ..DispatchOptions::default()
+    })
+    .execute(&runs)
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("token"), "{err:#}");
+
+    // version skew: a fake agent that answers the handshake with a v1
+    // frame must be diagnosed as skew, not a generic parse failure
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let skew_addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        if let Ok((mut s, _)) = listener.accept() {
+            use std::io::{Read, Write};
+            let mut drain = [0u8; 1024];
+            let _ = s.read(&mut drain);
+            let payload = b"{\"type\":\"hello_ack\",\"slots\":2,\"v\":1}";
+            let mut buf = (payload.len() as u32).to_be_bytes().to_vec();
+            buf.extend_from_slice(payload);
+            let _ = s.write_all(&buf);
+            std::thread::sleep(Duration::from_millis(200));
+        }
+    });
+    let err = Dispatcher::new(DispatchOptions {
+        workers: WorkerKind::Remote,
+        remote: vec![skew_addr],
+        cache_dir: None,
+        ..DispatchOptions::default()
+    })
+    .execute(&runs)
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("protocol version skew"), "{msg}");
+
+    // and remote-only with no endpoints is a configuration error
+    let err = Dispatcher::new(DispatchOptions {
+        workers: WorkerKind::Remote,
+        cache_dir: None,
+        ..DispatchOptions::default()
+    })
+    .execute(&runs)
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("--remote"), "{err:#}");
+}
+
+#[test]
+fn mixed_local_and_remote_dispatch_is_deterministic() {
+    let base = quick_base();
+    let addr = spawn_agent(2, None, None);
+    let local = eight_run_campaign(&base)
+        .execute(&DispatchOptions {
+            jobs: Some(2),
+            cache_dir: None,
+            ..DispatchOptions::default()
+        })
+        .unwrap();
+    for jobs in [1usize, 4] {
+        let mixed = eight_run_campaign(&base)
+            .execute(&DispatchOptions {
+                jobs: Some(jobs),
+                workers: WorkerKind::Thread,
+                remote: vec![addr.clone()],
+                cache_dir: None,
+                ..DispatchOptions::default()
+            })
+            .unwrap();
+        assert_eq!(mixed.runs.len(), 8);
+        for (a, b) in local.runs.iter().zip(&mixed.runs) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(
+                stable_report_json(&a.report),
+                stable_report_json(&b.report),
+                "{} (jobs {jobs}): mixed local+remote must merge deterministically",
+                a.label
+            );
+        }
+        assert_eq!(
+            local.to_json_stable().to_string_compact(),
+            mixed.to_json_stable().to_string_compact(),
+            "jobs {jobs}: stable summaries must be byte-identical"
+        );
+    }
+}
+
+#[test]
+fn agent_killed_mid_campaign_requeues_onto_remaining_slots() {
+    use std::io::BufRead;
+    // a real `adpsgd agent` subprocess, so it can be killed mid-run
+    let mut agent = std::process::Command::new(worker_exe())
+        .args(["agent", "--listen", "127.0.0.1:0", "--slots", "2"])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawning adpsgd agent");
+    let stdout = agent.stdout.take().expect("piped agent stdout");
+    let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+    let (start_tx, start_rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        for line in std::io::BufReader::new(stdout).lines() {
+            let Ok(line) = line else { break };
+            if let Some(rest) = line.strip_prefix("agent: listening on ") {
+                let addr = rest.split_whitespace().next().unwrap_or("").to_string();
+                let _ = addr_tx.send(addr);
+            }
+            if line.contains("started") {
+                let _ = start_tx.send(());
+            }
+        }
+    });
+    let addr = addr_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("agent must announce its address");
+
+    // long runs so the kill lands mid-training
+    let mut cfg = quick_base();
+    cfg.iters = 8000;
+    cfg.eval_every = 4000;
+    cfg.variance_every = 0;
+    let mk = |name: &str, seed: u64| {
+        let mut c = cfg.clone();
+        c.name = name.into();
+        c.seed = seed;
+        RunSpec { label: name.into(), cfg: c }
+    };
+    let runs = vec![mk("ra", 11), mk("rb", 22), mk("rc", 33)];
+
+    // mixed pool: one local thread slot plus the agent's two slots
+    let dispatcher = Dispatcher::new(DispatchOptions {
+        jobs: Some(1),
+        workers: WorkerKind::Thread,
+        remote: vec![addr],
+        cache_dir: None,
+        heartbeat_timeout: Duration::from_secs(10),
+        ..DispatchOptions::default()
+    });
+
+    // assassin: kill the agent as soon as it starts executing a run
+    let agent_pid = agent.id();
+    let killer = std::thread::spawn(move || {
+        let seen = start_rx.recv_timeout(Duration::from_secs(60)).is_ok();
+        let _ = std::process::Command::new("sh")
+            .arg("-c")
+            .arg(format!("kill {agent_pid}"))
+            .status();
+        seen
+    });
+
+    let merged = dispatcher.execute(&runs).expect("dispatch survives a killed agent");
+    assert!(killer.join().unwrap(), "the agent must have started at least one run");
+    assert!(
+        dispatcher.retries() >= 1,
+        "killing the agent mid-run must requeue through the crash path"
+    );
+    agent.wait().ok();
+
+    // the requeued runs still produce exactly the undisturbed results
+    let undisturbed = Dispatcher::new(DispatchOptions {
+        jobs: Some(2),
+        cache_dir: None,
+        ..DispatchOptions::default()
+    })
+    .execute(&runs)
+    .unwrap();
+    assert_eq!(merged.len(), undisturbed.len());
+    for (a, b) in merged.iter().zip(&undisturbed) {
+        assert_eq!(
+            stable_report_json(&a.report),
+            stable_report_json(&b.report),
+            "a run requeued off a dead agent must reproduce the undisturbed run bit-for-bit"
+        );
+    }
 }
 
 // ------------------------------------------------------------------- gc
