@@ -129,6 +129,26 @@ fn main() {
     // probes on the slot threads (no training, no serial pre-pass)
     pairs.push(("warm_probe_runs_per_sec", Json::num(warm.runs_per_sec())));
 
+    // -- proto v3 wire economics: JSON line vs binary payload -------------
+    // the same finished report encoded both ways; the binary form is what
+    // the TCP transport actually ships for run results since proto v3
+    {
+        use adpsgd::dispatch::net::transport;
+        use adpsgd::dispatch::proto::Frame;
+        let report = adpsgd::experiment::Experiment::from_config(tiny_base(iters))
+            .and_then(adpsgd::experiment::Experiment::run)
+            .expect("proto wire-size run");
+        let frame = Frame::RunResult { id: 1, report };
+        let json_bytes = frame.to_line().expect("json form").len();
+        let bin_bytes = transport::encode_frame(&frame).expect("binary form").len();
+        println!(
+            "dispatch/proto_bytes        json {json_bytes}B vs binary {bin_bytes}B per run result ({:.2}x smaller)",
+            json_bytes as f64 / bin_bytes.max(1) as f64,
+        );
+        pairs.push(("proto_json_bytes_per_run", Json::num(json_bytes as f64)));
+        pairs.push(("proto_binary_bytes_per_run", Json::num(bin_bytes as f64)));
+    }
+
     // -- subprocess transport overhead ------------------------------------
     // cargo exports the binary path to benches; guard for stripped envs
     let worker_exe = option_env!("CARGO_BIN_EXE_adpsgd").map(std::path::PathBuf::from);

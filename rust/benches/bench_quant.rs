@@ -2,10 +2,36 @@
 //! argues can defeat the saved bandwidth on fast links.  Reported per
 //! gradient size so the netsim crossover analysis in EXPERIMENTS.md can
 //! cite measured encode+decode cost vs modeled wire-time savings.
+//!
+//! `encode_into` and `quantize_inplace_with` reuse caller scratch
+//! (no per-sync allocation); the serial/par pairs measure the parallel
+//! bucket-norm pre-pass (the stochastic level walk stays sequential for
+//! RNG-order determinism, so speedups here are smaller than tensor's).
 
-use adpsgd::quant::{decode, encode, quantize_inplace, QsgdConfig};
-use adpsgd::util::bench::Runner;
+use adpsgd::quant::{
+    decode, encode, encode_into, quantize_inplace, quantize_inplace_with, Encoded, QsgdConfig,
+    QsgdScratch,
+};
+use adpsgd::tensor::par;
+use adpsgd::util::bench::{Measurement, Runner};
 use adpsgd::util::rng::Rng;
+
+/// Bench `f` serial then parallel and print the speedup column.
+fn bench_pair<T>(r: &mut Runner, name: &str, bytes: u64, mut f: impl FnMut() -> T) {
+    par::set_threads(1);
+    let serial = r.bench(&format!("{name}/serial"), &mut f).map(Measurement::p50_ns);
+    par::set_threads(0);
+    let auto = r.bench(&format!("{name}/par"), &mut f).map(Measurement::p50_ns);
+    if let (Some(s), Some(p)) = (serial, auto) {
+        println!(
+            "{:<44} {:>9.2}x speedup  ({:.2} GB/s parallel, {} threads)",
+            format!("quant/{name}"),
+            s / p,
+            bytes as f64 / p,
+            par::threads()
+        );
+    }
+}
 
 fn main() {
     let mut r = Runner::from_env("quant");
@@ -20,7 +46,18 @@ fn main() {
         {
             let g = g.clone();
             let mut rng = Rng::new(11, 0);
+            par::set_threads(1);
             r.bench_bytes(&format!("encode/{tag}"), bytes, move || encode(&g, &cfg, &mut rng));
+        }
+        {
+            // scratch-reusing encode: the per-sync hot path after PR 6
+            let g = g.clone();
+            let mut rng = Rng::new(11, 0);
+            let mut out = Encoded::default();
+            bench_pair(&mut r, &format!("encode_into/{tag}"), bytes, move || {
+                encode_into(&g, &cfg, &mut rng, &mut out);
+                out.qs.first().copied()
+            });
         }
         {
             let mut rng = Rng::new(11, 0);
@@ -34,8 +71,9 @@ fn main() {
         {
             let mut buf = g.clone();
             let mut rng = Rng::new(11, 0);
-            r.bench_bytes(&format!("quantize_inplace/{tag}"), bytes, move || {
-                quantize_inplace(&mut buf, &cfg, &mut rng)
+            let mut scratch = QsgdScratch::default();
+            bench_pair(&mut r, &format!("quantize_inplace/{tag}"), bytes, move || {
+                quantize_inplace_with(&mut buf, &cfg, &mut rng, &mut scratch)
             });
         }
     }
@@ -53,5 +91,6 @@ fn main() {
         });
     }
 
+    par::set_threads(0);
     r.finish();
 }

@@ -2,13 +2,36 @@
 //! fused momentum update) for every native workload, at both figure
 //! geometries.  These are the compute numbers the Fig 4c/5c/6 time
 //! models calibrate against.
+//!
+//! Every step/grad row is measured serial (`perf.threads = 1`) and
+//! parallel (auto), with a speedup column — results are bit-identical
+//! between the two (see `tensor::par`), so the column is pure
+//! throughput.  The final `mlp_wide/d1024h1024` row is the 1e6+ param
+//! geometry where kernel parallelism should pay for its dispatch.
 
 use adpsgd::config::WorkloadConfig;
 use adpsgd::coordinator::engine::{Engine, NativeEngine};
 use adpsgd::data::SynthClass;
-use adpsgd::util::bench::Runner;
+use adpsgd::tensor::par;
+use adpsgd::util::bench::{Measurement, Runner};
 use adpsgd::util::rng::Rng;
 use adpsgd::workload::build;
+
+/// Bench `f` serial then parallel and print the speedup column.
+fn bench_pair<T>(r: &mut Runner, name: &str, mut f: impl FnMut() -> T) {
+    par::set_threads(1);
+    let serial = r.bench(&format!("{name}/serial"), &mut f).map(Measurement::p50_ns);
+    par::set_threads(0);
+    let auto = r.bench(&format!("{name}/par"), &mut f).map(Measurement::p50_ns);
+    if let (Some(s), Some(p)) = (serial, auto) {
+        println!(
+            "{:<44} {:>9.2}x speedup  ({} threads)",
+            format!("step/{name}"),
+            s / p,
+            par::threads()
+        );
+    }
+}
 
 fn main() {
     let mut r = Runner::from_env("step");
@@ -20,6 +43,8 @@ fn main() {
         ("mlp_wide", 256, 256, 128),
         ("logreg", 256, 0, 128),
         ("quadratic", 1024, 0, 128),
+        // the 1e6+ param geometry: parallel kernels should clearly win here
+        ("mlp_wide", 1024, 1024, 64),
     ] {
         let mut wcfg = WorkloadConfig::default();
         wcfg.input_dim = dim;
@@ -35,15 +60,19 @@ fn main() {
         let mut w = engine.init(42).unwrap();
         let mut m = vec![0.0f32; n_params];
         let tag = format!("{name}/d{dim}h{hidden}b{batch} ({n_params}p)");
-        r.bench(&format!("step/{tag}"), || {
+        bench_pair(&mut r, &format!("step/{tag}"), || {
             engine.step(&mut w, &mut m, &batch_data, 1e-4).unwrap()
         });
 
         let mut g = vec![0.0f32; n_params];
-        r.bench(&format!("grad/{tag}"), || engine.grad(&w, &batch_data, &mut g).unwrap());
+        bench_pair(&mut r, &format!("grad/{tag}"), || {
+            engine.grad(&w, &batch_data, &mut g).unwrap()
+        });
 
+        par::set_threads(1);
         r.bench(&format!("eval/{tag}"), || engine.eval(&w, &batch_data).unwrap());
     }
 
+    par::set_threads(0);
     r.finish();
 }

@@ -2,8 +2,14 @@
 //! path (momentum update, squared deviation, allreduce arithmetic) at
 //! the paper's model sizes (GoogLeNet ≈ 6.8M params, VGG16 ≈ 138M is
 //! benchmarked at 32M to keep the window short).
+//!
+//! Each kernel is measured twice — `perf.threads = 1` (the serial lane
+//! kernels) and `perf.threads = 0` (auto parallelism) — and a speedup
+//! column reports the ratio.  The two settings are bit-identical by
+//! construction (see `tensor::par`), so the column is pure throughput,
+//! not an accuracy trade.
 
-use adpsgd::tensor;
+use adpsgd::tensor::{self, par};
 use adpsgd::util::bench::Runner;
 use adpsgd::util::rng::Rng;
 
@@ -25,6 +31,23 @@ fn sq_deviation_naive(a: &[f32], b: &[f32]) -> f64 {
     acc
 }
 
+/// Bench `f` serial then parallel and print the speedup column.
+fn bench_pair<T>(r: &mut Runner, name: &str, bytes: u64, mut f: impl FnMut() -> T) {
+    par::set_threads(1);
+    let serial = r.bench(&format!("{name}/serial"), &mut f).map(adpsgd::util::bench::Measurement::p50_ns);
+    par::set_threads(0);
+    let auto = r.bench(&format!("{name}/par"), &mut f).map(adpsgd::util::bench::Measurement::p50_ns);
+    if let (Some(s), Some(p)) = (serial, auto) {
+        println!(
+            "{:<44} {:>9.2}x speedup  ({:.2} GB/s parallel, {} threads)",
+            format!("tensor/{name}"),
+            s / p,
+            bytes as f64 / p,
+            par::threads()
+        );
+    }
+}
+
 fn main() {
     let mut r = Runner::from_env("tensor");
 
@@ -35,17 +58,18 @@ fn main() {
         let bytes = (n * 4) as u64;
 
         let mut y = y0.clone();
-        r.bench_bytes(&format!("axpy/{tag}"), 2 * bytes, || {
+        bench_pair(&mut r, &format!("axpy/{tag}"), 2 * bytes, || {
             tensor::axpy(&mut y, 0.5, &x);
             y[0]
         });
 
-        r.bench_bytes(&format!("sq_norm/{tag}"), bytes, || tensor::sq_norm(&x));
+        bench_pair(&mut r, &format!("sq_norm/{tag}"), bytes, || tensor::sq_norm(&x));
 
-        r.bench_bytes(&format!("sq_deviation/{tag}"), 2 * bytes, || {
+        bench_pair(&mut r, &format!("sq_deviation/{tag}"), 2 * bytes, || {
             tensor::sq_deviation(&x, &y0)
         });
 
+        par::set_threads(1);
         r.bench_bytes(&format!("sq_deviation_naive/{tag}"), 2 * bytes, || {
             sq_deviation_naive(&x, &y0)
         });
@@ -53,12 +77,12 @@ fn main() {
         let mut w = y0.clone();
         let mut m = vec![0.0f32; n];
         let g = x.clone();
-        r.bench_bytes(&format!("momentum_update/{tag}"), 4 * bytes, || {
+        bench_pair(&mut r, &format!("momentum_update/{tag}"), 4 * bytes, || {
             tensor::momentum_update(&mut w, &mut m, &g, 1e-6, 0.9);
             w[0]
         });
 
-        r.bench_bytes(&format!("dot/{tag}"), 2 * bytes, || tensor::dot(&x, &y0));
+        bench_pair(&mut r, &format!("dot/{tag}"), 2 * bytes, || tensor::dot(&x, &y0));
     }
 
     // param_variance across 16 node rows — the Var[W_k] instrumentation
@@ -66,9 +90,10 @@ fn main() {
     let rows_data: Vec<Vec<f32>> = (0..16).map(|i| vec_of(n, 100 + i)).collect();
     let rows: Vec<&[f32]> = rows_data.iter().map(|v| v.as_slice()).collect();
     let mut scratch = vec![0.0f32; n];
-    r.bench_bytes("param_variance/16x256k", (16 * n * 4) as u64, || {
+    bench_pair(&mut r, "param_variance/16x256k", (16 * n * 4) as u64, || {
         tensor::param_variance(&rows, &mut scratch)
     });
 
+    par::set_threads(0);
     r.finish();
 }

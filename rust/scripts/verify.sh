@@ -8,7 +8,10 @@
 # SIGSTOPped subprocess worker must be recovered under the heartbeat
 # deadline) + a remote-agent loopback smoke (a campaign dispatched to a
 # local `adpsgd agent` must write a byte-identical stable summary, and
-# a warm agent must answer the re-run from its own cache) + the
+# a warm agent must answer the re-run from its own cache) + a
+# kernel-parallelism smoke (the same campaign under perf.threads=1 and
+# perf.threads=4 must write byte-identical stable summaries — the
+# tensor::par reductions are bit-identical at any thread count) + the
 # campaign/dispatch benches (emit BENCH_campaign.json /
 # BENCH_dispatch.json for the perf trajectory).  Referenced from
 # ROADMAP.md; CI and pre-merge checks should run exactly this.
@@ -65,6 +68,20 @@ entries_after=$(find "${CACHE_DIR}" -name '*.run.json' | wc -l)
 [ "${entries_after}" -eq 0 ] \
     || { echo "verify: FAIL — cache-gc left ${entries_after} entries above the size bound"; exit 1; }
 echo "   cache-gc smoke OK (${entries_before} -> ${entries_after} entries, dry-run previewed)"
+
+echo "== verify: kernel-parallelism smoke (perf.threads 1 vs 4) =="
+# --no-cache so both passes really execute: the comparison must witness
+# the parallel kernels reproducing the serial results bit-for-bit, not a
+# cache answering the second pass
+rm -rf /tmp/adpsgd_verify_t1 /tmp/adpsgd_verify_t4
+cargo run --release -- campaign --quick --name threads_smoke --jobs 2 --no-cache \
+    --perf.threads 1 --out /tmp/adpsgd_verify_t1
+cargo run --release -- campaign --quick --name threads_smoke --jobs 2 --no-cache \
+    --perf.threads 4 --out /tmp/adpsgd_verify_t4
+cmp /tmp/adpsgd_verify_t1/threads_smoke.campaign.json \
+    /tmp/adpsgd_verify_t4/threads_smoke.campaign.json \
+    || { echo "verify: FAIL — perf.threads changed results (reductions must be bit-identical)"; exit 1; }
+echo "   threads smoke OK (perf.threads 1 and 4 summaries byte-identical)"
 
 echo "== verify: subprocess-worker smoke (tight hang deadline) =="
 cargo run --release -- campaign --quick --name worker_smoke --jobs 2 --workers subprocess \

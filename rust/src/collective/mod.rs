@@ -253,6 +253,14 @@ impl Core {
 
     /// Reduce `[lo, hi)` of the result buffer from all slots in rank
     /// order, then scale by 1/n.  Caller owns the range (phase 2).
+    ///
+    /// The per-element arithmetic (rank-ordered add, then scale) goes
+    /// through the [`crate::tensor`] kernels, which split large ranges
+    /// across the `tensor::par` pool — elementwise ops, so the result
+    /// is bit-identical at any thread count.  Slots stay locked one at
+    /// a time: under the ring algorithm every rank reduces its own
+    /// range concurrently, and holding all slot locks here would
+    /// serialize them.
     fn reduce_range(&self, lo: usize, hi: usize) {
         if lo >= hi {
             return;
@@ -265,13 +273,9 @@ impl Core {
         drop(first);
         for r in 1..self.n {
             let slot = self.slots[r].lock().unwrap();
-            for (o, v) in out.iter_mut().zip(&slot[lo..hi]) {
-                *o += *v;
-            }
+            crate::tensor::add_assign(out, &slot[lo..hi]);
         }
-        for o in out.iter_mut() {
-            *o *= inv;
-        }
+        crate::tensor::scale(out, inv);
     }
 
     /// Full allreduce with the phase-2 reduction range given by
@@ -524,6 +528,41 @@ mod tests {
         // and flat reduces in the same rank order -> bit-identical too
         let f1 = run(Algo::Flat);
         assert_eq!(r1, f1, "flat and ring must agree bitwise");
+    }
+
+    #[test]
+    fn allreduce_bit_identical_across_thread_counts() {
+        // the reduce inner loops route through tensor::par — the mean
+        // must not depend on the kernel thread count for either algo
+        let _guard = crate::tensor::par::test_serial();
+        let n = 4;
+        let len = 40_000; // above the parallel threshold
+        let run = |algo: Algo| {
+            let comm = build(algo, n, len);
+            let out: Arc<Mutex<Vec<f32>>> = Arc::new(Mutex::new(vec![]));
+            let out2 = Arc::clone(&out);
+            let comm2 = Arc::clone(&comm);
+            run_ranks(n, move |rank| {
+                let mut rng = Rng::new(77, rank as u64);
+                let mut buf = vec![0.0f32; len];
+                rng.fill_normal(&mut buf, 1.0);
+                comm2.allreduce_mean(rank, &mut buf).unwrap();
+                if rank == 0 {
+                    *out2.lock().unwrap() = buf;
+                }
+            });
+            let v = out.lock().unwrap().clone();
+            v
+        };
+        for algo in [Algo::Flat, Algo::Ring] {
+            crate::tensor::par::set_threads(1);
+            let reference = run(algo);
+            for t in [2usize, 7] {
+                crate::tensor::par::set_threads(t);
+                assert_eq!(run(algo), reference, "algo {algo:?} threads={t}");
+            }
+        }
+        crate::tensor::par::set_threads(0);
     }
 
     #[test]

@@ -196,6 +196,23 @@ impl Default for WorkloadConfig {
     }
 }
 
+/// Execution-performance knobs.  Incidental by construction: they
+/// change wall-clock, never results (the kernels are bit-identical at
+/// any thread count), so the run-cache digest excludes them the same
+/// way it excludes `name` and the scheduler's `jobs`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PerfConfig {
+    /// worker threads for the parallel tensor kernels
+    /// (`tensor::par`): 0 = auto (one per core), 1 = serial
+    pub threads: usize,
+}
+
+impl Default for PerfConfig {
+    fn default() -> Self {
+        PerfConfig { threads: 0 }
+    }
+}
+
 /// Top-level experiment description.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
@@ -212,6 +229,7 @@ pub struct ExperimentConfig {
     /// measurement instrumentation (not charged to the comm ledger).
     pub variance_every: usize,
     pub threads: usize,
+    pub perf: PerfConfig,
     pub workload: WorkloadConfig,
     pub optim: OptimConfig,
     pub sync: SyncConfig,
@@ -238,6 +256,7 @@ impl Default for ExperimentConfig {
             eval_every: 200,
             variance_every: 0,
             threads: 0,
+            perf: PerfConfig::default(),
             workload: WorkloadConfig::default(),
             optim: OptimConfig::default(),
             sync: SyncConfig::default(),
@@ -458,6 +477,7 @@ impl ExperimentConfig {
         set("eval_every", i(self.eval_every));
         set("variance_every", i(self.variance_every));
         set("threads", i(self.threads));
+        set("perf.threads", i(self.perf.threads));
         set("artifacts_dir", s(&self.artifacts_dir));
         set("checkpoint_every", i(self.checkpoint_every));
         set("checkpoint_dir", s(&self.checkpoint_dir));
@@ -533,7 +553,7 @@ impl ExperimentConfig {
                     "unknown config key {key:?} (top-level: name seed nodes iters \
                      batch_per_node eval_every variance_every threads artifacts_dir \
                      checkpoint_every checkpoint_dir init_from; sections: workload optim \
-                     sync net; per-strategy tables: [sync.<strategy>] — \
+                     sync net perf; per-strategy tables: [sync.<strategy>] — \
                      run `adpsgd help` for the schema)"
                 );
             }
@@ -565,6 +585,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = gi("threads") {
             cfg.threads = v as usize;
+        }
+        if let Some(v) = gi("perf.threads") {
+            cfg.perf.threads = v as usize;
         }
         if let Some(v) = gs("artifacts_dir") {
             cfg.artifacts_dir = v;
@@ -759,6 +782,7 @@ impl ExperimentConfig {
             "eval_every",
             "variance_every",
             "threads",
+            "perf.threads",
             "artifacts_dir",
             "checkpoint_every",
             "checkpoint_dir",

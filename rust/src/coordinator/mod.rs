@@ -191,6 +191,10 @@ fn dataset_for(cfg: &ExperimentConfig) -> Result<(DatasetHandle, usize, usize)> 
 /// This is the engine under [`crate::experiment::Experiment`].
 pub(crate) fn run_experiment(cfg: &ExperimentConfig, hooks: RunHooks) -> Result<RunReport> {
     cfg.validate()?;
+    // kernel parallelism is process-global and bit-identical at any
+    // setting, so applying it here (rather than per node) is safe even
+    // when runs share the process — last writer wins, results don't move
+    crate::tensor::par::set_threads(cfg.perf.threads);
     let RunHooks { observers: user_observers, controller } = hooks;
     let factory = engine::factory(cfg).context("building engine factory")?;
     let (dataset, batch, seq) = dataset_for(cfg)?;

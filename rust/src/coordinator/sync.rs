@@ -63,11 +63,14 @@ pub trait GradTransform: Send {
 pub struct QsgdTransform {
     cfg: QsgdConfig,
     rng: Rng,
+    /// bucket-norm buffer reused across syncs (the transform runs every
+    /// exchange; without this it would reallocate per call)
+    scratch: crate::quant::QsgdScratch,
 }
 
 impl GradTransform for QsgdTransform {
     fn apply(&mut self, g: &mut [f32]) -> u64 {
-        crate::quant::quantize_inplace(g, &self.cfg, &mut self.rng)
+        crate::quant::quantize_inplace_with(g, &self.cfg, &mut self.rng, &mut self.scratch)
     }
 
     fn kind(&self) -> CommKind {
@@ -143,6 +146,7 @@ impl SyncStep {
             StrategySpec::Qsgd { levels, bucket } => Some(Box::new(QsgdTransform {
                 cfg: QsgdConfig { levels: *levels, bucket: *bucket },
                 rng: Rng::new(cfg.seed ^ 0x9569D, rank as u64),
+                scratch: crate::quant::QsgdScratch::default(),
             })),
             StrategySpec::TopK { frac } => Some(Box::new(TopKTransform {
                 cfg: TopKConfig { keep_frac: *frac },
@@ -327,6 +331,7 @@ mod tests {
         let mut q = QsgdTransform {
             cfg: QsgdConfig::default(),
             rng: Rng::new(1, 0),
+            scratch: crate::quant::QsgdScratch::default(),
         };
         let mut g = vec![0.5f32; 4096];
         let wire = q.apply(&mut g);

@@ -1,37 +1,128 @@
 //! Length-delimited framing of [`proto::Frame`]s for stream transports.
 //!
 //! The stdin/stdout worker protocol is newline-delimited; over TCP the
-//! same JSON frames travel length-delimited instead — a 4-byte
-//! big-endian length prefix followed by the frame's JSON bytes — so a
-//! reader never has to scan for a delimiter and a parse error never
-//! loses framing (the next frame boundary is always known, which is why
-//! an agent can answer a malformed frame instead of dropping the
+//! same frames travel length-delimited instead — a 4-byte big-endian
+//! length prefix followed by the frame's payload bytes — so a reader
+//! never has to scan for a delimiter and a parse error never loses
+//! framing (the next frame boundary is always known, which is why an
+//! agent can answer a malformed frame instead of dropping the
 //! connection).  [`MAX_FRAME_BYTES`] bounds the prefix so a stray
 //! non-adpsgd peer cannot make the reader allocate gigabytes.
+//!
+//! ## Payload forms (proto v3)
+//!
+//! Control frames (requests, heartbeats, errors, handshakes) stay JSON,
+//! byte-for-byte the same line the stdio path would emit.  The two bulk
+//! frames — [`Frame::RunResult`] and [`Frame::Blob`] — are encoded
+//! *binary* instead: a leading `0x00` marker byte (a JSON payload always
+//! starts with `{`, so the two forms can never be confused), a kind
+//! byte, the protocol version, the request id, then the raw bytes (the
+//! report's [`report_to_bytes`] form, or the blob's bytes verbatim).
+//! This skips JSON float formatting and parsing for multi-MB metric
+//! series entirely.  The version travels inside the binary payload too,
+//! and is checked *before* the kind byte, so cross-version peers still
+//! get the typed [`VersionSkew`] "rebuild both ends" diagnosis.
 
-use crate::dispatch::proto::Frame;
+use crate::dispatch::proto::{Frame, VersionSkew, PROTO_VERSION};
+use crate::dispatch::runcache::{report_from_bytes, report_to_bytes};
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
+
+/// First payload byte of a binary frame.  JSON payloads always begin
+/// with `'{'` (0x7b), so 0x00 unambiguously marks the binary form.
+const BIN_MARKER: u8 = 0x00;
+/// Kind byte: the payload after the header is a [`report_to_bytes`]
+/// run report.
+const BIN_RUN_RESULT: u8 = 1;
+/// Kind byte: the payload after the header is a tagged byte blob
+/// (u16 BE tag length, tag UTF-8, then the bytes verbatim).
+const BIN_BLOB: u8 = 2;
+/// Bytes before the kind-specific body: marker, kind, u32 version,
+/// u64 id.
+const BIN_HEADER_BYTES: usize = 1 + 1 + 4 + 8;
 
 /// Upper bound on one frame's payload.  A full `RunResult` report with
 /// every recorded series is a few MB at paper scale; 256 MiB is a
 /// sanity bound against garbage length prefixes, not a real limit.
 pub const MAX_FRAME_BYTES: u32 = 256 * 1024 * 1024;
 
-/// Encode one frame as its wire bytes (length prefix + JSON payload),
-/// ready for a single `write_all`.  Writers that share a stream across
+/// Encode one frame as its wire bytes (length prefix + payload), ready
+/// for a single `write_all`.  Bulk frames get the binary payload form,
+/// everything else its JSON line.  Writers that share a stream across
 /// threads encode first and write the returned buffer under their lock,
 /// so frames can never interleave mid-payload.
 pub fn encode_frame(frame: &Frame) -> Result<Vec<u8>> {
-    let line = frame.to_line()?;
-    let payload = line.as_bytes();
+    let payload = match frame {
+        Frame::RunResult { id, report } => {
+            binary_payload(BIN_RUN_RESULT, *id, &[], &report_to_bytes(report)?)
+        }
+        Frame::Blob { id, tag, bytes } => {
+            let tag_len = u16::try_from(tag.len())
+                .with_context(|| format!("blob tag too long: {} bytes", tag.len()))?;
+            let mut head = tag_len.to_be_bytes().to_vec();
+            head.extend_from_slice(tag.as_bytes());
+            binary_payload(BIN_BLOB, *id, &head, bytes)
+        }
+        other => other.to_line()?.into_bytes(),
+    };
     if payload.len() as u64 > MAX_FRAME_BYTES as u64 {
         bail!("frame too large to encode: {} bytes (max {MAX_FRAME_BYTES})", payload.len());
     }
     let mut buf = Vec::with_capacity(4 + payload.len());
     buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
-    buf.extend_from_slice(payload);
+    buf.extend_from_slice(&payload);
     Ok(buf)
+}
+
+/// Assemble a binary payload: marker, kind, version, id, then the
+/// kind-specific head and body.
+fn binary_payload(kind: u8, id: u64, head: &[u8], body: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(BIN_HEADER_BYTES + head.len() + body.len());
+    buf.push(BIN_MARKER);
+    buf.push(kind);
+    buf.extend_from_slice(&(PROTO_VERSION as u32).to_be_bytes());
+    buf.extend_from_slice(&id.to_be_bytes());
+    buf.extend_from_slice(head);
+    buf.extend_from_slice(body);
+    buf
+}
+
+/// Decode a binary payload (first byte [`BIN_MARKER`]) back into a
+/// frame.  The version field is checked before the kind byte so a
+/// cross-version peer always gets the typed skew error, even if the
+/// other end grew kinds we don't know.
+fn parse_binary(payload: &[u8]) -> Result<Frame> {
+    if payload.len() < BIN_HEADER_BYTES {
+        bail!("binary frame truncated: {} bytes (header is {BIN_HEADER_BYTES})", payload.len());
+    }
+    let version = u32::from_be_bytes(payload[2..6].try_into().expect("4 bytes")) as u64;
+    if version != PROTO_VERSION {
+        return Err(anyhow::Error::new(VersionSkew { got: Some(version) }));
+    }
+    let id = u64::from_be_bytes(payload[6..14].try_into().expect("8 bytes"));
+    let body = &payload[BIN_HEADER_BYTES..];
+    match payload[1] {
+        BIN_RUN_RESULT => {
+            let report = report_from_bytes(body).context("binary run_result payload")?;
+            Ok(Frame::RunResult { id, report })
+        }
+        BIN_BLOB => {
+            if body.len() < 2 {
+                bail!("binary blob frame truncated: missing tag length");
+            }
+            let tag_len = u16::from_be_bytes(body[..2].try_into().expect("2 bytes")) as usize;
+            let Some(tag_bytes) = body.get(2..2 + tag_len) else {
+                bail!("binary blob frame truncated: tag length {tag_len} exceeds payload");
+            };
+            let tag = std::str::from_utf8(tag_bytes).context("blob tag is not UTF-8")?;
+            Ok(Frame::Blob {
+                id,
+                tag: tag.to_string(),
+                bytes: body[2 + tag_len..].to_vec(),
+            })
+        }
+        other => bail!("binary frame: unknown kind byte {other}"),
+    }
 }
 
 /// Encode and write one frame.
@@ -62,8 +153,10 @@ fn read_header(r: &mut impl Read) -> Result<Option<[u8; 4]>> {
 /// Read one frame; `Ok(None)` on clean EOF.  An implausible length
 /// prefix (zero, or past [`MAX_FRAME_BYTES`]) is diagnosed as a
 /// non-adpsgd peer instead of an allocation attempt; a payload that
-/// fails [`Frame::parse`] carries the parser's error (including the
-/// typed version-skew diagnosis) without losing stream framing.
+/// fails to parse carries the parser's error (including the typed
+/// version-skew diagnosis) without losing stream framing.  The first
+/// payload byte dispatches between the binary bulk form ([`BIN_MARKER`])
+/// and a JSON control frame.
 pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>> {
     let Some(header) = read_header(r)? else {
         return Ok(None);
@@ -74,6 +167,9 @@ pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>> {
     }
     let mut payload = vec![0u8; len as usize];
     r.read_exact(&mut payload).context("reading frame payload")?;
+    if payload.first() == Some(&BIN_MARKER) {
+        return parse_binary(&payload).map(Some);
+    }
     let line = std::str::from_utf8(&payload).context("frame payload is not UTF-8")?;
     Frame::parse(line).map(Some)
 }
@@ -128,5 +224,113 @@ mod tests {
         let mut r = Cursor::new(buf);
         let err = read_frame(&mut r).unwrap_err();
         assert!(err.is::<crate::dispatch::proto::VersionSkew>(), "{err:#}");
+    }
+
+    fn sample_report() -> crate::coordinator::RunReport {
+        let mut recorder = crate::metrics::Recorder::new();
+        for i in 0..200 {
+            recorder.push("train_loss", i as f64, 1.0 / (i + 1) as f64);
+        }
+        recorder.push("eval_acc", 50.0, 0.75);
+        crate::coordinator::RunReport {
+            name: "wire".into(),
+            strategy: crate::period::Strategy::Constant,
+            nodes: 4,
+            iters: 200,
+            n_params: 1000,
+            final_train_loss: 0.1,
+            min_train_loss: 0.05,
+            best_eval_acc: 0.9,
+            final_eval_acc: 0.85,
+            final_eval_loss: 0.3,
+            syncs: 20,
+            avg_period: 10.0,
+            compute_secs: 1.0,
+            wall_secs: 1.5,
+            ledger: crate::netsim::CommLedger::new(4),
+            recorder,
+        }
+    }
+
+    #[test]
+    fn bulk_frames_roundtrip_binary() {
+        use crate::dispatch::runcache::report_to_json;
+        let report = sample_report();
+        let canonical = report_to_json(&report).to_string_compact();
+        let blob_bytes: Vec<u8> = (0u16..=255).map(|b| b as u8).collect();
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, &Frame::RunResult { id: 21, report }).unwrap();
+        write_frame(
+            &mut buf,
+            &Frame::Blob { id: 22, tag: "snapshot".into(), bytes: blob_bytes.clone() },
+        )
+        .unwrap();
+        // both payloads took the binary form (marker right after the prefix)
+        assert_eq!(buf[4], BIN_MARKER);
+
+        let mut r = Cursor::new(buf);
+        match read_frame(&mut r).unwrap() {
+            Some(Frame::RunResult { id, report: back }) => {
+                assert_eq!(id, 21);
+                assert_eq!(
+                    report_to_json(&back).to_string_compact(),
+                    canonical,
+                    "binary transit must reproduce the exact canonical report"
+                );
+                // and the binary payload beats the JSON line on the wire
+                let frame = Frame::RunResult { id, report: back };
+                let bin = encode_frame(&frame).unwrap();
+                let json = frame.to_line().unwrap();
+                assert!(
+                    bin.len() < json.len(),
+                    "binary ({}) should be smaller than JSON ({})",
+                    bin.len(),
+                    json.len()
+                );
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        match read_frame(&mut r).unwrap() {
+            Some(Frame::Blob { id, tag, bytes }) => {
+                assert_eq!((id, tag.as_str()), (22, "snapshot"));
+                assert_eq!(bytes, blob_bytes);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn binary_truncation_and_unknown_kinds_are_errors() {
+        let frame = Frame::Blob { id: 7, tag: "t".into(), bytes: vec![1, 2, 3] };
+        let buf = encode_frame(&frame).unwrap();
+        let payload = &buf[4..];
+        // every strict prefix of the payload fails cleanly
+        for cut in [0, 1, 5, BIN_HEADER_BYTES - 1, BIN_HEADER_BYTES, BIN_HEADER_BYTES + 1] {
+            assert!(parse_binary(&payload[..cut]).is_err(), "prefix of {cut} bytes");
+        }
+        // a tag length pointing past the payload is caught, not a panic
+        let mut bad = payload.to_vec();
+        bad[BIN_HEADER_BYTES] = 0xff;
+        bad[BIN_HEADER_BYTES + 1] = 0xff;
+        let err = parse_binary(&bad).unwrap_err().to_string();
+        assert!(err.contains("exceeds payload"), "{err}");
+        // an unknown kind byte is a clear error
+        let mut unknown = payload.to_vec();
+        unknown[1] = 99;
+        let err = parse_binary(&unknown).unwrap_err().to_string();
+        assert!(err.contains("unknown kind byte"), "{err}");
+    }
+
+    #[test]
+    fn binary_version_skew_is_the_same_typed_error() {
+        let frame = Frame::Blob { id: 7, tag: "t".into(), bytes: vec![9] };
+        let mut buf = encode_frame(&frame).unwrap();
+        // rewrite the version field (payload bytes 2..6, after the prefix)
+        buf[4 + 2..4 + 6].copy_from_slice(&999u32.to_be_bytes());
+        let mut r = Cursor::new(buf);
+        let err = read_frame(&mut r).unwrap_err();
+        let skew = err.downcast_ref::<crate::dispatch::proto::VersionSkew>();
+        assert_eq!(skew.map(|s| s.got), Some(Some(999)), "{err:#}");
     }
 }

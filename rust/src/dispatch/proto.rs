@@ -28,6 +28,17 @@
 //! a clear "rebuild both ends" diagnosis instead of a generic parse
 //! failure, covering the old-worker-binary-new-CLI corner (and its
 //! inverse) for subprocess and TCP peers alike.
+//!
+//! ## Bulk payloads (proto v3)
+//!
+//! Two frames carry bulk bytes — [`Frame::RunResult`] (a report whose
+//! metric series can run to multiple MB of floats) and [`Frame::Blob`]
+//! (opaque tagged bytes: warm-start snapshots, staged artifacts).  On
+//! the TCP transport these travel as length-delimited *binary* payloads
+//! (see [`super::net::transport`]), skipping JSON float formatting and
+//! parsing entirely; on the stdio JSONL path they still render as JSON
+//! lines (the report as its JSON form, blob bytes hex-encoded), so the
+//! subprocess worker protocol stays line-delimited and debuggable.
 
 use crate::config::{toml::TomlDoc, ExperimentConfig};
 use crate::coordinator::RunReport;
@@ -44,8 +55,10 @@ pub const HEARTBEAT_EVERY: std::time::Duration = std::time::Duration::from_milli
 ///
 /// v1 was the unversioned JSONL protocol of the first dispatch release;
 /// v2 added the header itself, the `hello`/`hello_ack` TCP handshake,
-/// and the retryable `crashed` terminal frame.
-pub const PROTO_VERSION: u64 = 2;
+/// and the retryable `crashed` terminal frame; v3 added binary bulk
+/// payloads on the TCP transport (run results and `blob` frames) while
+/// control frames stayed JSON.
+pub const PROTO_VERSION: u64 = 3;
 
 /// Typed parse error for a frame whose `"v"` header is missing or does
 /// not match [`PROTO_VERSION`].  Carried through `anyhow` so transports
@@ -99,6 +112,11 @@ pub enum Frame {
     /// Agent → client: handshake accepted; the agent advertises how many
     /// concurrent runs it will serve on this connection.
     HelloAck { slots: u32 },
+    /// Either direction: opaque bulk bytes for the request `id` — a
+    /// warm-start snapshot, a staged artifact.  `tag` names what the
+    /// bytes are (receiver-interpreted).  Binary on the TCP transport;
+    /// hex-encoded on the JSONL path.
+    Blob { id: u64, tag: String, bytes: Vec<u8> },
 }
 
 impl Frame {
@@ -110,7 +128,8 @@ impl Frame {
             | Frame::RunResult { id, .. }
             | Frame::Heartbeat { id }
             | Frame::Error { id, .. }
-            | Frame::Crashed { id, .. } => *id,
+            | Frame::Crashed { id, .. }
+            | Frame::Blob { id, .. } => *id,
             Frame::Hello { .. } | Frame::HelloAck { .. } => 0,
         }
     }
@@ -126,6 +145,7 @@ impl Frame {
             Frame::Crashed { .. } => "crashed",
             Frame::Hello { .. } => "hello",
             Frame::HelloAck { .. } => "hello_ack",
+            Frame::Blob { .. } => "blob",
         }
     }
 
@@ -171,6 +191,13 @@ impl Frame {
             Frame::HelloAck { slots } => Json::obj(vec![
                 ("type", Json::str("hello_ack")),
                 ("slots", Json::num(*slots as f64)),
+                version,
+            ]),
+            Frame::Blob { id, tag, bytes } => Json::obj(vec![
+                ("type", Json::str("blob")),
+                ("id", Json::num(*id as f64)),
+                ("tag", Json::str(tag.clone())),
+                ("hex", Json::str(hex_encode(bytes))),
                 version,
             ]),
         };
@@ -226,9 +253,43 @@ impl Frame {
             "hello_ack" => Frame::HelloAck {
                 slots: v.get("slots").and_then(Json::as_f64).unwrap_or(1.0) as u32,
             },
+            "blob" => Frame::Blob {
+                id: need_id()?,
+                tag: v.get("tag").and_then(Json::as_str).unwrap_or_default().to_string(),
+                bytes: hex_decode(
+                    v.get("hex")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("blob: missing \"hex\""))?,
+                )?,
+            },
             other => bail!("protocol frame: unknown type {other:?}"),
         })
     }
+}
+
+/// Hex codec for [`Frame::Blob`] bytes on the JSONL path (the TCP
+/// transport carries them raw; see [`super::net::transport`]).
+fn hex_encode(bytes: &[u8]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        write!(s, "{b:02x}").expect("writing to a String cannot fail");
+    }
+    s
+}
+
+fn hex_decode(s: &str) -> Result<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        bail!("blob hex: odd length {}", s.len());
+    }
+    (0..s.len())
+        .step_by(2)
+        .map(|i| {
+            s.get(i..i + 2)
+                .and_then(|pair| u8::from_str_radix(pair, 16).ok())
+                .ok_or_else(|| anyhow!("blob hex: invalid digit at offset {i}"))
+        })
+        .collect()
 }
 
 /// A liveness pump: a background thread calling `beat` every
@@ -372,7 +433,7 @@ mod tests {
         }
 
         let hb = (Frame::Heartbeat { id: 3 }).to_line().unwrap();
-        assert!(hb.contains("\"v\":2"), "every frame carries the version header: {hb}");
+        assert!(hb.contains("\"v\":3"), "every frame carries the version header: {hb}");
         assert!(matches!(Frame::parse(&hb).unwrap(), Frame::Heartbeat { id: 3 }));
 
         let err = (Frame::Error { id: 9, message: "boom".into() }).to_line().unwrap();
@@ -404,8 +465,41 @@ mod tests {
         }
         assert_eq!((Frame::Hello { token: String::new() }).id(), 0);
 
-        assert!(Frame::parse("{\"type\":\"warp\",\"id\":1,\"v\":2}").is_err());
+        assert!(Frame::parse("{\"type\":\"warp\",\"id\":1,\"v\":3}").is_err());
         assert!(Frame::parse("not json").is_err());
+    }
+
+    #[test]
+    fn blob_frames_roundtrip_hex_on_the_jsonl_path() {
+        // all 256 byte values, so the hex codec has no blind spots
+        let bytes: Vec<u8> = (0u16..=255).map(|b| b as u8).collect();
+        let line =
+            (Frame::Blob { id: 12, tag: "snapshot".into(), bytes: bytes.clone() })
+                .to_line()
+                .unwrap();
+        assert!(line.ends_with('\n') && !line[..line.len() - 1].contains('\n'));
+        match Frame::parse(&line).unwrap() {
+            Frame::Blob { id, tag, bytes: back } => {
+                assert_eq!((id, tag.as_str()), (12, "snapshot"));
+                assert_eq!(back, bytes);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+
+        // empty payloads are legal (a zero-length artifact is still an answer)
+        let empty = (Frame::Blob { id: 1, tag: "t".into(), bytes: vec![] }).to_line().unwrap();
+        match Frame::parse(&empty).unwrap() {
+            Frame::Blob { bytes, .. } => assert!(bytes.is_empty()),
+            other => panic!("wrong frame {other:?}"),
+        }
+
+        // corrupt hex is a parse error, not a garbage payload
+        let odd = format!("{{\"type\":\"blob\",\"id\":2,\"tag\":\"t\",\"hex\":\"abc\",\"v\":{PROTO_VERSION}}}");
+        assert!(Frame::parse(&odd).unwrap_err().to_string().contains("odd length"));
+        let bad = format!("{{\"type\":\"blob\",\"id\":2,\"tag\":\"t\",\"hex\":\"zz\",\"v\":{PROTO_VERSION}}}");
+        assert!(Frame::parse(&bad).unwrap_err().to_string().contains("invalid digit"));
+        let missing = format!("{{\"type\":\"blob\",\"id\":2,\"tag\":\"t\",\"v\":{PROTO_VERSION}}}");
+        assert!(Frame::parse(&missing).unwrap_err().to_string().contains("hex"));
     }
 
     #[test]
@@ -445,9 +539,9 @@ mod tests {
         // version-skewed frame from a mismatched binary)
         let input = format!(
             "not json at all\n\
-             {{\"type\":\"heartbeat\",\"id\":9,\"v\":2}}\n\
-             {{\"type\":\"run_request\",\"id\":5,\"cfg\":42,\"v\":2}}\n\
-             {{\"type\":\"warp\",\"id\":6,\"v\":2}}\n\
+             {{\"type\":\"heartbeat\",\"id\":9,\"v\":3}}\n\
+             {{\"type\":\"run_request\",\"id\":5,\"cfg\":42,\"v\":3}}\n\
+             {{\"type\":\"warp\",\"id\":6,\"v\":3}}\n\
              {{\"type\":\"run_request\",\"id\":7,\"cfg\":\"\"}}\n\
              {}",
             (Frame::RunRequest { id: 3, cfg: quick }).to_line().unwrap(),

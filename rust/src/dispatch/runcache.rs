@@ -16,8 +16,9 @@
 //!   busts the entry even though the configured path is unchanged;
 //! * **not hashed** — knobs that cannot change results: the run name,
 //!   checkpoint cadence/paths (instrumentation), the artifacts
-//!   *directory path* (its manifest content is hashed instead), and the
-//!   unused `threads` hint.
+//!   *directory path* (its manifest content is hashed instead), the
+//!   unused `threads` hint, and `perf.threads` (the tensor kernels are
+//!   bit-identical at any thread count, so it cannot change results).
 //!
 //! A hit reproduces the run's *report*; it does not replay output side
 //! effects (a cached run writes no new checkpoint files — delete the
@@ -84,8 +85,15 @@ pub fn cfg_canonical_text(cfg: &ExperimentConfig) -> Result<String> {
     let mut doc = cfg.to_doc();
     // incidental knobs: cannot affect the training computation or the
     // recorded series/ledger
-    for key in ["name", "checkpoint_dir", "checkpoint_every", "artifacts_dir", "threads", "init_from"]
-    {
+    for key in [
+        "name",
+        "checkpoint_dir",
+        "checkpoint_every",
+        "artifacts_dir",
+        "threads",
+        "perf.threads",
+        "init_from",
+    ] {
         doc.entries.remove(key);
     }
     let mut text = doc.render().map_err(|e| anyhow!("canonicalizing config: {e}"))?;
@@ -149,7 +157,17 @@ pub fn report_to_json(report: &RunReport) -> Json {
             })
             .collect(),
     );
-    Json::obj(vec![
+    let mut pairs = report_scalar_pairs(report);
+    pairs.push(("series", series));
+    Json::obj(pairs)
+}
+
+/// Everything [`report_to_json`] carries except the (potentially
+/// multi-MB) metric series — the scalar summary plus the ledger.
+/// Shared between the JSON cache-entry form and the binary proto-v3
+/// bulk form, which ships the series as raw f64 pairs instead.
+fn report_scalar_pairs(report: &RunReport) -> Vec<(&'static str, Json)> {
+    vec![
         ("name", Json::str(report.name.clone())),
         ("strategy", Json::str(spec::canonical_name(report.strategy))),
         ("nodes", Json::num(report.nodes as f64)),
@@ -164,33 +182,11 @@ pub fn report_to_json(report: &RunReport) -> Json {
         ("compute_secs", Json::num(report.compute_secs)),
         ("wall_secs", Json::num(report.wall_secs)),
         ("ledger", report.ledger.to_json()),
-        ("series", series),
-    ])
+    ]
 }
 
 /// Rebuild a [`RunReport`] serialized by [`report_to_json`].
 pub fn report_from_json(v: &Json) -> Result<RunReport> {
-    // non-finite floats serialize as JSON null; they come back as the
-    // canonical NaN — exactly what the coordinator's `unwrap_or(NAN)`
-    // readouts produce
-    let float = |key: &str| -> Result<f64> {
-        match v.get(key) {
-            Some(Json::Null) => Ok(f64::NAN),
-            Some(x) => {
-                x.as_f64().ok_or_else(|| anyhow!("report json: {key:?} is not a number"))
-            }
-            None => Err(anyhow!("report json: missing {key:?}")),
-        }
-    };
-    let int = |key: &str| -> Result<u64> { float(key).map(|x| x as u64) };
-    let strategy: crate::period::Strategy = v
-        .get("strategy")
-        .and_then(|x| x.as_str())
-        .ok_or_else(|| anyhow!("report json: missing \"strategy\""))?
-        .parse()?;
-    let ledger = CommLedger::from_json(
-        v.get("ledger").ok_or_else(|| anyhow!("report json: missing \"ledger\""))?,
-    )?;
     let mut recorder = Recorder::new();
     let series = v
         .get("series")
@@ -213,6 +209,34 @@ pub fn report_from_json(v: &Json) -> Result<RunReport> {
             recorder.push(name, coord(&xy[0]), coord(&xy[1]));
         }
     }
+    report_from_parts(v, recorder)
+}
+
+/// The scalar half of [`report_from_json`]: every field except the
+/// series, which the caller has already decoded into `recorder` (from
+/// JSON arrays or from the binary form's raw f64 pairs).
+fn report_from_parts(v: &Json, recorder: Recorder) -> Result<RunReport> {
+    // non-finite floats serialize as JSON null; they come back as the
+    // canonical NaN — exactly what the coordinator's `unwrap_or(NAN)`
+    // readouts produce
+    let float = |key: &str| -> Result<f64> {
+        match v.get(key) {
+            Some(Json::Null) => Ok(f64::NAN),
+            Some(x) => {
+                x.as_f64().ok_or_else(|| anyhow!("report json: {key:?} is not a number"))
+            }
+            None => Err(anyhow!("report json: missing {key:?}")),
+        }
+    };
+    let int = |key: &str| -> Result<u64> { float(key).map(|x| x as u64) };
+    let strategy: crate::period::Strategy = v
+        .get("strategy")
+        .and_then(|x| x.as_str())
+        .ok_or_else(|| anyhow!("report json: missing \"strategy\""))?
+        .parse()?;
+    let ledger = CommLedger::from_json(
+        v.get("ledger").ok_or_else(|| anyhow!("report json: missing \"ledger\""))?,
+    )?;
     let iters = int("iters")? as usize;
     let syncs = int("syncs")?;
     // recomputed, not parsed: ∞ (a run that never synchronized) has no
@@ -240,6 +264,112 @@ pub fn report_from_json(v: &Json) -> Result<RunReport> {
         ledger,
         recorder,
     })
+}
+
+// --------------------------------------------------- report binary form
+
+/// Magic + format version prefixing [`report_to_bytes`] output.
+const REPORT_BYTES_MAGIC: &[u8; 4] = b"ADPB";
+const REPORT_BYTES_VERSION: u16 = 1;
+
+/// Binary full-fidelity [`RunReport`] serialization — the proto-v3 bulk
+/// payload.  The scalar summary travels as the same compact JSON header
+/// [`report_to_json`] produces (minus `"series"`); every recorded
+/// series follows as length-prefixed raw little-endian f64 `(x, y)`
+/// pairs.  Multi-MB float series cross the wire without any decimal
+/// formatting or parsing, and NaN payload bits survive exactly (the
+/// JSON form maps every non-finite value to null → canonical NaN).
+/// Disk cache entries stay JSON; only the agent wire path uses this.
+pub fn report_to_bytes(report: &RunReport) -> Result<Vec<u8>> {
+    let head = Json::obj(report_scalar_pairs(report)).to_string_compact();
+    let n_points: usize = report.recorder.series.iter().map(|(_, s)| s.points.len()).sum();
+    let mut buf = Vec::with_capacity(head.len() + 64 + n_points * 16);
+    buf.extend_from_slice(REPORT_BYTES_MAGIC);
+    buf.extend_from_slice(&REPORT_BYTES_VERSION.to_be_bytes());
+    buf.extend_from_slice(&u32::try_from(head.len()).context("report header too large")?.to_be_bytes());
+    buf.extend_from_slice(head.as_bytes());
+    let n_series =
+        u32::try_from(report.recorder.series.len()).context("too many series")?;
+    buf.extend_from_slice(&n_series.to_be_bytes());
+    for (name, s) in report.recorder.series.iter() {
+        buf.extend_from_slice(
+            &u16::try_from(name.len()).context("series name too long")?.to_be_bytes(),
+        );
+        buf.extend_from_slice(name.as_bytes());
+        buf.extend_from_slice(
+            &u32::try_from(s.points.len()).context("series too long")?.to_be_bytes(),
+        );
+        for (x, y) in &s.points {
+            buf.extend_from_slice(&x.to_le_bytes());
+            buf.extend_from_slice(&y.to_le_bytes());
+        }
+    }
+    Ok(buf)
+}
+
+/// Bounds-checked cursor over [`report_to_bytes`] output: every read is
+/// validated so a truncated or corrupt payload is a clean error.
+struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| anyhow!("report bytes truncated at offset {}", self.pos))?;
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_be_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Rebuild a [`RunReport`] serialized by [`report_to_bytes`].
+pub fn report_from_bytes(bytes: &[u8]) -> Result<RunReport> {
+    let mut r = ByteReader { buf: bytes, pos: 0 };
+    if r.take(4)? != REPORT_BYTES_MAGIC {
+        return Err(anyhow!("report bytes: bad magic (not an ADPB payload)"));
+    }
+    let ver = r.u16()?;
+    if ver != REPORT_BYTES_VERSION {
+        return Err(anyhow!(
+            "report bytes: format version {ver} (this build reads {REPORT_BYTES_VERSION})"
+        ));
+    }
+    let head_len = r.u32()? as usize;
+    let head = std::str::from_utf8(r.take(head_len)?)
+        .context("report bytes: header is not UTF-8")?;
+    let head = Json::parse(head).context("report bytes: malformed header json")?;
+    let mut recorder = Recorder::new();
+    let n_series = r.u32()?;
+    for _ in 0..n_series {
+        let name_len = r.u16()? as usize;
+        let name = std::str::from_utf8(r.take(name_len)?)
+            .context("report bytes: series name is not UTF-8")?
+            .to_string();
+        let n_points = r.u32()?;
+        for _ in 0..n_points {
+            let x = r.f64()?;
+            let y = r.f64()?;
+            recorder.push(&name, x, y);
+        }
+    }
+    if r.pos != bytes.len() {
+        return Err(anyhow!("report bytes: {} trailing bytes", bytes.len() - r.pos));
+    }
+    report_from_parts(&head, recorder)
 }
 
 // ------------------------------------------------------------------ cache
@@ -560,6 +690,7 @@ mod tests {
         c.checkpoint_every = 500;
         c.checkpoint_dir = "/elsewhere".into();
         c.threads = 7;
+        c.perf.threads = 5;
         assert_eq!(cfg_digest(&c).unwrap(), d0, "output knobs must not bust the cache");
     }
 
@@ -732,6 +863,88 @@ mod tests {
         let plan = cache.gc_plan(&policy).unwrap();
         assert!(plan.is_noop(), "{plan:?}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn sample_report() -> RunReport {
+        let mut recorder = Recorder::new();
+        for i in 0..50 {
+            recorder.push("train_loss", i as f64, 1.0 / (i + 1) as f64);
+        }
+        recorder.push("eval_acc", 10.0, 0.5);
+        // a non-canonical NaN payload: the binary form must carry the
+        // exact bits (JSON would flatten it to null -> canonical NaN)
+        recorder.push("odd", 1.0, f64::from_bits(0x7ff8_dead_beef_0000));
+        let mut ledger = CommLedger::new(4);
+        ledger.record(
+            &crate::netsim::NetModel::infiniband_100g(),
+            crate::netsim::CommKind::ParamAvg,
+            4,
+            1 << 20,
+        );
+        RunReport {
+            name: "bin-roundtrip".into(),
+            strategy: crate::period::Strategy::Constant,
+            nodes: 4,
+            iters: 100,
+            n_params: 1234,
+            final_train_loss: 0.25,
+            min_train_loss: 0.2,
+            best_eval_acc: 0.9,
+            final_eval_acc: 0.85,
+            final_eval_loss: f64::NAN,
+            syncs: 10,
+            avg_period: 10.0,
+            compute_secs: 1.5,
+            wall_secs: 2.0,
+            ledger,
+            recorder,
+        }
+    }
+
+    #[test]
+    fn report_bytes_roundtrip_matches_json_form() {
+        let report = sample_report();
+        let bytes = report_to_bytes(&report).unwrap();
+        let back = report_from_bytes(&bytes).unwrap();
+        assert_eq!(
+            report_to_json(&back).to_string_compact(),
+            report_to_json(&report).to_string_compact(),
+            "binary roundtrip must reproduce the exact canonical report"
+        );
+        // and the series floats come back bit-exact, NaN payload included
+        let original: Vec<_> = report.recorder.series.iter().collect();
+        let returned: Vec<_> = back.recorder.series.iter().collect();
+        assert_eq!(original.len(), returned.len());
+        for ((n1, s1), (n2, s2)) in original.iter().zip(&returned) {
+            assert_eq!(n1, n2);
+            assert_eq!(s1.points.len(), s2.points.len(), "series {n1}");
+            for ((x1, y1), (x2, y2)) in s1.points.iter().zip(&s2.points) {
+                assert_eq!(x1.to_bits(), x2.to_bits(), "series {n1}");
+                assert_eq!(y1.to_bits(), y2.to_bits(), "series {n1}");
+            }
+        }
+    }
+
+    #[test]
+    fn report_bytes_rejects_truncation_and_garbage() {
+        let report = sample_report();
+        let bytes = report_to_bytes(&report).unwrap();
+        // every strict prefix must be a clean error, never a panic
+        for cut in [0, 3, 4, 6, 9, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                report_from_bytes(&bytes[..cut]).is_err(),
+                "prefix of {cut} bytes must not parse"
+            );
+        }
+        // trailing garbage is a defect too (the frame length said otherwise)
+        let mut padded = bytes.clone();
+        padded.extend_from_slice(b"xx");
+        assert!(report_from_bytes(&padded).is_err(), "trailing bytes must not parse");
+        // wrong magic
+        let mut bad = bytes;
+        bad[0] = b'X';
+        let err = report_from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
     }
 
     #[test]

@@ -132,6 +132,34 @@
 //! rebuild-both-ends error, never a generic parse failure.  See
 //! [`dispatch`] for the experiment → dispatch → coordinator layering.
 //!
+//! ## Performance
+//!
+//! The flat-vector kernels in [`tensor`] (dot, norms, axpy, fused
+//! momentum, elastic pull, row means) are written as explicit 8-lane
+//! loops over fixed 4096-element chunks and dispatch across a small
+//! owned thread pool ([`tensor::par`]).  Work is partitioned on the
+//! same chunk boundaries the serial reductions already used and chunk
+//! partials are folded in chunk order, so **every result is
+//! bit-identical at any thread count** — parallelism is a pure
+//! wall-clock knob, never a numerics knob.  `cfg.perf.threads`
+//! (CLI `--perf.threads`) selects the width: `0` = auto (all cores),
+//! `1` = serial; like the scheduler's `jobs` it is excluded from run
+//! digests, so changing it never invalidates the run cache.  The QSGD
+//! quantizer computes bucket norms through the same pool (its
+//! stochastic level walk stays sequential to preserve RNG draw order)
+//! and exposes scratch-reusing entry points ([`quant::encode_into`],
+//! [`quant::quantize_inplace_with`]) so per-sync hot paths never
+//! reallocate.
+//!
+//! On the wire, protocol v3 ships bulk payloads — run-result metric
+//! series and `blob` artifacts — as length-delimited *binary* frames on
+//! the TCP transport ([`dispatch::net::transport`]), skipping JSON
+//! float formatting for multi-MB series; control frames stay JSON, and
+//! the stdio worker protocol stays pure JSONL.  `cargo bench` reports
+//! serial-vs-parallel speedup columns (`bench_tensor`, `bench_quant`,
+//! `bench_step`) and JSON-vs-binary wire bytes per run
+//! (`bench_dispatch`).
+//!
 //! (The historical `Trainer::new(cfg)?.run()` front-door is gone; every
 //! caller goes through [`experiment::Experiment`] now.)
 

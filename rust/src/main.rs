@@ -166,6 +166,20 @@ FIGURES:
     --no-cache): the whole figure sweep gets the same pool, supervision,
     and remote capacity.
 
+PERFORMANCE:
+    --perf.threads N     kernel-parallelism width for the tensor/quant hot
+                         loops (0 = auto/all cores, the default; 1 = serial).
+                         Reductions partition on fixed chunk boundaries and
+                         fold partials in chunk order, so results are
+                         bit-identical at ANY setting — like --jobs it is
+                         excluded from run-cache digests and never busts a
+                         cached run.  Works on `run`, `campaign`, `figures`.
+    Bulk wire frames (run results, blobs) travel binary on the TCP agent
+    fabric since proto v3 (control frames stay JSON; version-skewed peers
+    still get the clear rebuild-both-ends error).  `cargo bench` prints
+    serial-vs-parallel speedup columns (bench_tensor/bench_quant/bench_step)
+    and JSON-vs-binary proto bytes per run (bench_dispatch).
+
 CACHE-GC (bound a long-lived run-cache directory):
     --cache-dir DIR      directory to collect ($ADPSGD_RUN_CACHE if omitted)
     --max-bytes N        evict oldest entries until the total fits N bytes

@@ -42,7 +42,7 @@ impl QsgdConfig {
 }
 
 /// Encoded representation of one vector.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Encoded {
     pub len: usize,
     pub levels: u32,
@@ -64,38 +64,85 @@ impl Encoded {
 }
 
 fn bucket_norm(x: &[f32]) -> f32 {
-    (x.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>()).sqrt() as f32
+    // 8-lane chunked sum of squares (shared with the tensor reductions)
+    crate::tensor::sq_norm(x).sqrt() as f32
+}
+
+/// Compute every bucket's 2-norm into `norms` (cleared + resized).  The
+/// buckets are independent, so this pre-pass runs across the
+/// [`crate::tensor::par`] pool — disjoint writes, bit-identical at any
+/// thread count — leaving the stochastic level pass as the single
+/// sequential walk that owns the RNG draw order.
+fn fill_norms(x: &[f32], bucket: usize, norms: &mut Vec<f32>) {
+    let n = x.len();
+    let nbuckets = n.div_ceil(bucket);
+    norms.clear();
+    norms.resize(nbuckets, 0.0);
+    let out = crate::tensor::par::SendPtr(norms.as_mut_ptr());
+    crate::tensor::par::for_indices(nbuckets, &|b| {
+        let lo = b * bucket;
+        let hi = (lo + bucket).min(n);
+        // SAFETY: one write per bucket index; `norms` outlives the dispatch.
+        unsafe { *out.0.add(b) = bucket_norm(&x[lo..hi]) };
+    });
+}
+
+/// Reusable per-call buffers for the fused quantize path: call sites
+/// that quantize every sync hold one of these (e.g. the coordinator's
+/// QSGD transform) so the hot loop never reallocates.
+#[derive(Debug, Default, Clone)]
+pub struct QsgdScratch {
+    norms: Vec<f32>,
 }
 
 /// Stochastically quantize `x` (QSGD): per bucket, level_i =
 /// floor(|x_i|/norm * s + u_i) with u ~ U[0,1).
 pub fn encode(x: &[f32], cfg: &QsgdConfig, rng: &mut Rng) -> Encoded {
+    let mut out = Encoded {
+        len: 0,
+        levels: cfg.levels,
+        bucket: cfg.bucket,
+        norms: Vec::new(),
+        qs: Vec::new(),
+        signs: Vec::new(),
+    };
+    encode_into(x, cfg, rng, &mut out);
+    out
+}
+
+/// [`encode`] into a reusable `Encoded` — no allocations after warmup.
+/// Sites that encode every sync keep one `Encoded` alive instead of
+/// reallocating `norms`/`qs`/`signs` per call.  Draws exactly one RNG
+/// value per component of each nonzero-norm bucket, in index order
+/// (the same stream [`quantize_inplace`] consumes).
+pub fn encode_into(x: &[f32], cfg: &QsgdConfig, rng: &mut Rng, out: &mut Encoded) {
     assert!(cfg.levels >= 1 && cfg.levels <= 255);
     let n = x.len();
-    let nbuckets = n.div_ceil(cfg.bucket);
-    let mut norms = Vec::with_capacity(nbuckets);
-    let mut qs = vec![0u8; n];
-    let mut signs = vec![0u8; n.div_ceil(8)];
+    out.len = n;
+    out.levels = cfg.levels;
+    out.bucket = cfg.bucket;
+    fill_norms(x, cfg.bucket, &mut out.norms);
+    out.qs.clear();
+    out.qs.resize(n, 0);
+    out.signs.clear();
+    out.signs.resize(n.div_ceil(8), 0);
     let s = cfg.levels as f32;
-    for b in 0..nbuckets {
-        let lo = b * cfg.bucket;
-        let hi = (lo + cfg.bucket).min(n);
-        let norm = bucket_norm(&x[lo..hi]);
-        norms.push(norm);
+    for (b, &norm) in out.norms.iter().enumerate() {
         if norm <= 0.0 {
             continue;
         }
+        let lo = b * cfg.bucket;
+        let hi = (lo + cfg.bucket).min(n);
         for i in lo..hi {
             let v = x[i];
             if v < 0.0 {
-                signs[i / 8] |= 1 << (i % 8);
+                out.signs[i / 8] |= 1 << (i % 8);
             }
             let scaled = v.abs() / norm * s;
             let level = (scaled + rng.f32()).floor();
-            qs[i] = level.min(s) as u8; // clamp: |x| <= norm so level <= s
+            out.qs[i] = level.min(s) as u8; // clamp: |x| <= norm so level <= s
         }
     }
-    Encoded { len: n, levels: cfg.levels, bucket: cfg.bucket, norms, qs, signs }
 }
 
 /// Decode into `out` (len must match).
@@ -118,16 +165,29 @@ pub fn decode(e: &Encoded, out: &mut [f32]) {
 /// Fused quantize+dequantize (hot path for convergence experiments).
 /// Returns the wire bytes the encoded form would occupy.
 pub fn quantize_inplace(x: &mut [f32], cfg: &QsgdConfig, rng: &mut Rng) -> u64 {
+    quantize_inplace_with(x, cfg, rng, &mut QsgdScratch::default())
+}
+
+/// [`quantize_inplace`] with caller-held scratch: the bucket-norm
+/// buffer is reused across calls, so per-sync quantization allocates
+/// nothing.  RNG draw order is identical to [`quantize_inplace`] and
+/// [`encode`] (norms are a deterministic pre-pass; the stochastic walk
+/// stays sequential).
+pub fn quantize_inplace_with(
+    x: &mut [f32],
+    cfg: &QsgdConfig,
+    rng: &mut Rng,
+    scratch: &mut QsgdScratch,
+) -> u64 {
     let n = x.len();
-    let nbuckets = n.div_ceil(cfg.bucket);
     let s = cfg.levels as f32;
-    for b in 0..nbuckets {
-        let lo = b * cfg.bucket;
-        let hi = (lo + cfg.bucket).min(n);
-        let norm = bucket_norm(&x[lo..hi]);
+    fill_norms(x, cfg.bucket, &mut scratch.norms);
+    for (b, &norm) in scratch.norms.iter().enumerate() {
         if norm <= 0.0 {
             continue;
         }
+        let lo = b * cfg.bucket;
+        let hi = (lo + cfg.bucket).min(n);
         let inv = norm / s;
         for v in &mut x[lo..hi] {
             let scaled = v.abs() / norm * s;
@@ -248,6 +308,70 @@ mod tests {
         let mut out = vec![9.0; 100];
         decode(&e, &mut out);
         assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn encode_into_reuses_buffers_and_matches_encode() {
+        let cfg = QsgdConfig { levels: 31, bucket: 64 };
+        let mut out = Encoded {
+            len: 0,
+            levels: 0,
+            bucket: 0,
+            norms: Vec::new(),
+            qs: Vec::new(),
+            signs: Vec::new(),
+        };
+        // reuse across calls of different lengths, incl. shrinking
+        for (round, n) in [1000usize, 130, 1000, 7].into_iter().enumerate() {
+            let mut x = vec![0.0f32; n];
+            Rng::new(40 + round as u64, 1).fill_normal(&mut x, 1.0);
+            let mut r1 = Rng::new(11, round as u64);
+            let mut r2 = r1.clone();
+            encode_into(&x, &cfg, &mut r1, &mut out);
+            let fresh = encode(&x, &cfg, &mut r2);
+            assert_eq!(out.len, fresh.len);
+            assert_eq!(out.norms, fresh.norms);
+            assert_eq!(out.qs, fresh.qs);
+            assert_eq!(out.signs, fresh.signs);
+            assert_eq!(out.wire_bytes(), fresh.wire_bytes());
+        }
+    }
+
+    #[test]
+    fn scratch_variant_matches_plain_inplace() {
+        let cfg = QsgdConfig { levels: 255, bucket: 512 };
+        let mut scratch = QsgdScratch::default();
+        for n in [5usize, 600, 5000] {
+            let mut x = vec![0.0f32; n];
+            Rng::new(n as u64, 2).fill_normal(&mut x, 1.0);
+            let mut a = x.clone();
+            let mut b = x;
+            let bytes_a = quantize_inplace(&mut a, &cfg, &mut Rng::new(3, 3));
+            let bytes_b = quantize_inplace_with(&mut b, &cfg, &mut Rng::new(3, 3), &mut scratch);
+            assert_eq!(bytes_a, bytes_b);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn quantization_bit_identical_across_thread_counts() {
+        // the norms pre-pass is parallel; the quantized output (and the
+        // RNG stream it consumes) must not depend on the thread count
+        let _guard = crate::tensor::par::test_serial();
+        let cfg = QsgdConfig::default();
+        let n = 300_000;
+        let mut x = vec![0.0f32; n];
+        Rng::new(8, 8).fill_normal(&mut x, 1.0);
+        crate::tensor::par::set_threads(1);
+        let mut reference = x.clone();
+        quantize_inplace(&mut reference, &cfg, &mut Rng::new(9, 9));
+        for t in [2usize, 7] {
+            crate::tensor::par::set_threads(t);
+            let mut q = x.clone();
+            quantize_inplace(&mut q, &cfg, &mut Rng::new(9, 9));
+            assert_eq!(q, reference, "threads={t}");
+        }
+        crate::tensor::par::set_threads(0);
     }
 
     #[test]

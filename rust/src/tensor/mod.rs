@@ -3,32 +3,24 @@
 //! Everything the paper's Algorithms 1/2 do outside the model step is
 //! elementwise vector work on flat parameter vectors: averaging,
 //! momentum updates (for the pure-rust workload path), the `S_k`
-//! squared-deviation statistic, norms.  Loops are written over fixed
-//! chunks so LLVM auto-vectorizes them; the chunked forms also keep the
-//! reductions deterministic regardless of thread count (summation order
-//! is fixed).
+//! squared-deviation statistic, norms.  Inner kernels are written as
+//! explicit 8-lane (`LANES`) loops so they vectorize unconditionally,
+//! and large inputs are partitioned across the [`par`] thread pool on
+//! [`RCHUNK`] boundaries.  Reductions keep a fixed summation order (f32
+//! lanes within a chunk, f64 chunk totals folded in chunk order), so
+//! every result is **bit-identical at any thread count** — see the
+//! property tests in [`par`].
 
-/// y += a * x  (axpy).
-pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
-    debug_assert_eq!(y.len(), x.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += a * xi;
-    }
-}
-
-/// y = a * y.
-pub fn scale(y: &mut [f32], a: f32) {
-    for yi in y.iter_mut() {
-        *yi *= a;
-    }
-}
+pub mod par;
 
 /// Reduction chunk: f32 math inside a chunk (8 independent lanes so
 /// LLVM vectorizes the reduction), f64 accumulation across chunks (so
 /// precision matches a plain f64 loop to ~1e-6 relative at 100M+
-/// elements).  4096 f32 = 16 KiB per input — L1-resident.
-const RCHUNK: usize = 4096;
-const LANES: usize = 8;
+/// elements).  4096 f32 = 16 KiB per input — L1-resident.  Also the
+/// unit of work the [`par`] pool claims, which is what keeps the
+/// summation order independent of the thread count.
+pub(crate) const RCHUNK: usize = 4096;
+pub(crate) const LANES: usize = 8;
 
 #[inline]
 fn lanes_total(lanes: [f32; LANES]) -> f64 {
@@ -40,44 +32,114 @@ fn lanes_total(lanes: [f32; LANES]) -> f64 {
     t
 }
 
+/// y += a * x over one range (8-lane inner loop).
+#[inline]
+fn axpy_range(y: &mut [f32], a: f32, x: &[f32]) {
+    for (yv, xv) in y.chunks_exact_mut(LANES).zip(x.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            yv[l] += a * xv[l];
+        }
+    }
+    let n = y.len();
+    let rem = n - n % LANES;
+    for i in rem..n {
+        y[i] += a * x[i];
+    }
+}
+
+/// y += a * x  (axpy).  Elementwise, so any partition is bit-identical.
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    let yp = par::SendPtr(y.as_mut_ptr());
+    par::for_ranges(y.len(), &|lo, hi| {
+        // SAFETY: ranges are disjoint; the slice outlives the dispatch.
+        let yc = unsafe { std::slice::from_raw_parts_mut(yp.0.add(lo), hi - lo) };
+        axpy_range(yc, a, &x[lo..hi]);
+    });
+}
+
+#[inline]
+fn scale_range(y: &mut [f32], a: f32) {
+    for yv in y.chunks_exact_mut(LANES) {
+        for l in 0..LANES {
+            yv[l] *= a;
+        }
+    }
+    let n = y.len();
+    let rem = n - n % LANES;
+    for i in rem..n {
+        y[i] *= a;
+    }
+}
+
+/// y = a * y.
+pub fn scale(y: &mut [f32], a: f32) {
+    let yp = par::SendPtr(y.as_mut_ptr());
+    par::for_ranges(y.len(), &|lo, hi| {
+        // SAFETY: disjoint ranges; slice outlives the dispatch.
+        let yc = unsafe { std::slice::from_raw_parts_mut(yp.0.add(lo), hi - lo) };
+        scale_range(yc, a);
+    });
+}
+
+/// One-chunk dot partial: f32 lanes, f64 total (fixed order).
+#[inline]
+fn dot_chunk(ca: &[f32], cb: &[f32]) -> f64 {
+    let mut lanes = [0.0f32; LANES];
+    for (xa, xb) in ca.chunks_exact(LANES).zip(cb.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            lanes[l] += xa[l] * xb[l];
+        }
+    }
+    let rem = ca.len() - ca.len() % LANES;
+    for i in rem..ca.len() {
+        lanes[i - rem] += ca[i] * cb[i];
+    }
+    lanes_total(lanes)
+}
+
 /// Dot product: f32 lanes within chunks, f64 across chunks.
-/// Deterministic (fixed summation order) and auto-vectorizable.
+/// Deterministic (fixed summation order) at any thread count.
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f64;
-    for (ca, cb) in a.chunks(RCHUNK).zip(b.chunks(RCHUNK)) {
-        let mut lanes = [0.0f32; LANES];
-        for (xa, xb) in ca.chunks_exact(LANES).zip(cb.chunks_exact(LANES)) {
-            for l in 0..LANES {
-                lanes[l] += xa[l] * xb[l];
-            }
+    par::reduce2(a, b, dot_chunk)
+}
+
+#[inline]
+fn sq_norm_chunk(c: &[f32]) -> f64 {
+    let mut lanes = [0.0f32; LANES];
+    for xa in c.chunks_exact(LANES) {
+        for l in 0..LANES {
+            lanes[l] += xa[l] * xa[l];
         }
-        let rem = ca.len() - ca.len() % LANES;
-        for i in rem..ca.len() {
-            lanes[i - rem] += ca[i] * cb[i];
-        }
-        acc += lanes_total(lanes);
     }
-    acc
+    let rem = c.len() - c.len() % LANES;
+    for i in rem..c.len() {
+        lanes[i - rem] += c[i] * c[i];
+    }
+    lanes_total(lanes)
 }
 
 /// ||x||^2 (chunked-lane reduction; see [`dot`]).
 pub fn sq_norm(x: &[f32]) -> f64 {
-    let mut acc = 0.0f64;
-    for c in x.chunks(RCHUNK) {
-        let mut lanes = [0.0f32; LANES];
-        for xa in c.chunks_exact(LANES) {
-            for l in 0..LANES {
-                lanes[l] += xa[l] * xa[l];
-            }
+    par::reduce1(x, sq_norm_chunk)
+}
+
+#[inline]
+fn sq_deviation_chunk(ca: &[f32], cb: &[f32]) -> f64 {
+    let mut lanes = [0.0f32; LANES];
+    for (xa, xb) in ca.chunks_exact(LANES).zip(cb.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            let d = xa[l] - xb[l];
+            lanes[l] += d * d;
         }
-        let rem = c.len() - c.len() % LANES;
-        for i in rem..c.len() {
-            lanes[i - rem] += c[i] * c[i];
-        }
-        acc += lanes_total(lanes);
     }
-    acc
+    let rem = ca.len() - ca.len() % LANES;
+    for i in rem..ca.len() {
+        let d = ca[i] - cb[i];
+        lanes[i - rem] += d * d;
+    }
+    lanes_total(lanes)
 }
 
 /// ||a - b||^2 — the per-node S_k term (paper eq. 16 / Alg. 2 line 11).
@@ -85,39 +147,28 @@ pub fn sq_norm(x: &[f32]) -> f64 {
 /// reduction (see [`dot`]) keeps it at memory bandwidth.
 pub fn sq_deviation(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f64;
-    for (ca, cb) in a.chunks(RCHUNK).zip(b.chunks(RCHUNK)) {
-        let mut lanes = [0.0f32; LANES];
-        for (xa, xb) in ca.chunks_exact(LANES).zip(cb.chunks_exact(LANES)) {
-            for l in 0..LANES {
-                let d = xa[l] - xb[l];
-                lanes[l] += d * d;
-            }
-        }
-        let rem = ca.len() - ca.len() % LANES;
-        for i in rem..ca.len() {
-            let d = ca[i] - cb[i];
-            lanes[i - rem] += d * d;
-        }
-        acc += lanes_total(lanes);
-    }
-    acc
+    par::reduce2(a, b, sq_deviation_chunk)
 }
 
 /// out = mean of rows (each `rows[i]` same length).  The averaging step
-/// of Algorithm 1/2 line 10 when done leader-side.
+/// of Algorithm 1/2 line 10 when done leader-side.  Per-element the
+/// arithmetic is `((row0 + row1) + ...) * inv` in fixed row order, so
+/// any range partition is bit-identical to the serial loop.
 pub fn mean_rows(rows: &[&[f32]], out: &mut [f32]) {
     let n = rows.len();
     assert!(n > 0);
     let inv = 1.0 / n as f32;
-    out.copy_from_slice(rows[0]);
-    for row in &rows[1..] {
-        debug_assert_eq!(row.len(), out.len());
-        for (o, v) in out.iter_mut().zip(*row) {
-            *o += *v;
+    let op = par::SendPtr(out.as_mut_ptr());
+    par::for_ranges(out.len(), &|lo, hi| {
+        // SAFETY: disjoint ranges; slice outlives the dispatch.
+        let oc = unsafe { std::slice::from_raw_parts_mut(op.0.add(lo), hi - lo) };
+        oc.copy_from_slice(&rows[0][lo..hi]);
+        for row in &rows[1..] {
+            debug_assert_eq!(row.len(), rows[0].len());
+            axpy_range(oc, 1.0, &row[lo..hi]);
         }
-    }
-    scale(out, inv);
+        scale_range(oc, inv);
+    });
 }
 
 /// Variance of model parameters among nodes (paper eq. 7):
@@ -137,14 +188,52 @@ pub fn add_assign(y: &mut [f32], x: &[f32]) {
     axpy(y, 1.0, x);
 }
 
+#[inline]
+fn momentum_range(w: &mut [f32], m: &mut [f32], g: &[f32], lr: f32, mu: f32) {
+    for ((wv, mv), gv) in w
+        .chunks_exact_mut(LANES)
+        .zip(m.chunks_exact_mut(LANES))
+        .zip(g.chunks_exact(LANES))
+    {
+        for l in 0..LANES {
+            mv[l] = mu * mv[l] + gv[l];
+            wv[l] -= lr * mv[l];
+        }
+    }
+    let n = w.len();
+    let rem = n - n % LANES;
+    for i in rem..n {
+        m[i] = mu * m[i] + g[i];
+        w[i] -= lr * m[i];
+    }
+}
+
 /// Fused momentum-SGD update (rust mirror of the L1 Pallas kernel, used
 /// by the pure-rust `workload` path):  m = mu*m + g;  w -= lr*m.
 pub fn momentum_update(w: &mut [f32], m: &mut [f32], g: &[f32], lr: f32, mu: f32) {
     debug_assert_eq!(w.len(), m.len());
     debug_assert_eq!(w.len(), g.len());
-    for ((wi, mi), gi) in w.iter_mut().zip(m.iter_mut()).zip(g) {
-        *mi = mu * *mi + gi;
-        *wi -= lr * *mi;
+    let wp = par::SendPtr(w.as_mut_ptr());
+    let mp = par::SendPtr(m.as_mut_ptr());
+    par::for_ranges(w.len(), &|lo, hi| {
+        // SAFETY: disjoint ranges; both slices outlive the dispatch.
+        let wc = unsafe { std::slice::from_raw_parts_mut(wp.0.add(lo), hi - lo) };
+        let mc = unsafe { std::slice::from_raw_parts_mut(mp.0.add(lo), hi - lo) };
+        momentum_range(wc, mc, &g[lo..hi], lr, mu);
+    });
+}
+
+#[inline]
+fn elastic_range(w: &mut [f32], pre: &[f32], alpha: f32) {
+    for (wv, pv) in w.chunks_exact_mut(LANES).zip(pre.chunks_exact(LANES)) {
+        for l in 0..LANES {
+            wv[l] = pv[l] + alpha * (wv[l] - pv[l]);
+        }
+    }
+    let n = w.len();
+    let rem = n - n % LANES;
+    for i in rem..n {
+        w[i] = pre[i] + alpha * (w[i] - pre[i]);
     }
 }
 
@@ -156,9 +245,12 @@ pub fn momentum_update(w: &mut [f32], m: &mut [f32], g: &[f32], lr: f32, mu: f32
 /// coordinator's `SyncStep` pipeline.
 pub fn elastic_pull(w: &mut [f32], pre: &[f32], alpha: f32) {
     debug_assert_eq!(w.len(), pre.len());
-    for (wi, &p) in w.iter_mut().zip(pre) {
-        *wi = p + alpha * (*wi - p);
-    }
+    let wp = par::SendPtr(w.as_mut_ptr());
+    par::for_ranges(w.len(), &|lo, hi| {
+        // SAFETY: disjoint ranges; slice outlives the dispatch.
+        let wc = unsafe { std::slice::from_raw_parts_mut(wp.0.add(lo), hi - lo) };
+        elastic_range(wc, &pre[lo..hi], alpha);
+    });
 }
 
 /// max |a_i - b_i|, for test assertions.

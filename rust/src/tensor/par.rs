@@ -1,0 +1,457 @@
+//! Work-partitioned parallel backend for the flat-vector kernels.
+//!
+//! A small owned thread pool splits flat parameter vectors on the same
+//! [`RCHUNK`] boundaries the scalar kernels already reduce over, so
+//! **every reduction keeps its fixed summation order**: each chunk's
+//! f32-lane partial is computed (possibly on another thread) and the
+//! f64 chunk totals are folded in chunk order on the calling thread.
+//! The result is bit-identical to the serial path at any thread count —
+//! `perf.threads = 1`, `= 4`, and `= 0` (auto) all produce the same
+//! bytes, which is what lets the run cache and the campaign stable
+//! summaries ignore the knob entirely.
+//!
+//! Design notes:
+//! * One process-wide pool ([`set_threads`] adjusts how many workers
+//!   participate; `0` = auto = all cores, `1` = run inline, exactly the
+//!   pre-parallel behavior).  Helpers are spawned lazily on first use
+//!   and park on a condvar between jobs.
+//! * One parallel job at a time: a submitter that finds the pool busy
+//!   (the coordinator runs one kernel per rank thread concurrently)
+//!   simply runs its loop inline.  Results cannot differ — only
+//!   wall-clock can — so composition with the rank-level parallelism is
+//!   free of both deadlock and nondeterminism.
+//! * Work is claimed chunk-by-chunk from an atomic counter, so ragged
+//!   tails and slow cores balance without any static partitioning.
+//! * Inputs below [`PAR_MIN`] never cross the pool: the dispatch
+//!   overhead (~µs) would dominate sub-64KiB memory traffic.
+
+use super::RCHUNK;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, OnceLock, TryLockError};
+
+/// Below this many elements a kernel always runs inline: the pool
+/// wake-up costs more than the memory traffic it would split.
+pub(crate) const PAR_MIN: usize = 4 * RCHUNK;
+
+/// Requested worker count: 0 = auto (all cores), 1 = serial.
+static REQUESTED: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the kernel thread count (the `perf.threads` config knob).
+/// `0` = auto (one worker per core), `1` = serial.  Results are
+/// bit-identical at any setting; only wall-clock changes, which is why
+/// the run-cache digest excludes the knob.
+pub fn set_threads(t: usize) {
+    REQUESTED.store(t, Ordering::Relaxed);
+}
+
+/// The effective kernel thread count (resolving auto to core count).
+pub fn threads() -> usize {
+    match REQUESTED.load(Ordering::Relaxed) {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        t => t,
+    }
+}
+
+/// A raw pointer that workers may write through at **disjoint** chunk
+/// offsets.  Safety contract (caller's): every index is written by at
+/// most one closure invocation, and the buffer outlives the dispatch
+/// (guaranteed — [`Pool::run`] joins before returning).
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+struct PoolState {
+    epoch: u64,
+    /// helpers participating in the current job (worker idx < width)
+    width: usize,
+    /// helpers still running the current job
+    running: usize,
+    panicked: bool,
+    task: Option<&'static (dyn Fn() + Sync)>,
+}
+
+/// The owned thread pool: broadcast one job, caller participates, wait
+/// for all helpers.  See module docs for the busy-means-inline rule.
+struct Pool {
+    m: Mutex<PoolState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// one job at a time; contended submitters run inline instead
+    gate: Mutex<()>,
+    helpers: usize,
+}
+
+fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl Pool {
+    fn global() -> &'static Pool {
+        static POOL: OnceLock<Pool> = OnceLock::new();
+        static SPAWN: std::sync::Once = std::sync::Once::new();
+        let pool = POOL.get_or_init(|| {
+            let avail =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            // at least 7 helpers even on small machines, so thread-count
+            // sweeps (tests, perf.threads > cores) are exercised for real
+            Pool {
+                m: Mutex::new(PoolState {
+                    epoch: 0,
+                    width: 0,
+                    running: 0,
+                    panicked: false,
+                    task: None,
+                }),
+                work_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+                gate: Mutex::new(()),
+                helpers: avail.max(8) - 1,
+            }
+        });
+        SPAWN.call_once(|| {
+            let p: &'static Pool = POOL.get().expect("pool initialized above");
+            for idx in 0..p.helpers {
+                std::thread::Builder::new()
+                    .name(format!("adpsgd-par-{idx}"))
+                    .spawn(move || Pool::worker(p, idx))
+                    .expect("spawning tensor::par worker");
+            }
+        });
+        pool
+    }
+
+    fn worker(pool: &'static Pool, idx: usize) {
+        let mut seen = 0u64;
+        loop {
+            let (task, participating) = {
+                let mut st = lock(&pool.m);
+                while st.epoch == seen {
+                    st = pool.work_cv.wait(st).unwrap_or_else(|p| p.into_inner());
+                }
+                seen = st.epoch;
+                (st.task, idx < st.width)
+            };
+            let Some(task) = task else { continue };
+            if !participating {
+                continue;
+            }
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task()));
+            let mut st = lock(&pool.m);
+            if ok.is_err() {
+                st.panicked = true;
+            }
+            st.running -= 1;
+            if st.running == 0 {
+                pool.done_cv.notify_all();
+            }
+        }
+    }
+
+    /// Broadcast `task` to `width` helpers (>= 1), run it on the calling
+    /// thread too, and return once every participant has finished.  The
+    /// join-before-return is what makes the `'static` lifetime launder
+    /// of `task` sound.
+    fn run(&self, width: usize, task: &(dyn Fn() + Sync)) {
+        // SAFETY: this function does not return until `running == 0`,
+        // i.e. no worker holds the reference past the borrow of `task`.
+        let task_static: &'static (dyn Fn() + Sync) =
+            unsafe { std::mem::transmute(task) };
+        {
+            let mut st = lock(&self.m);
+            debug_assert_eq!(st.running, 0, "pool gate must serialize jobs");
+            st.epoch = st.epoch.wrapping_add(1);
+            st.width = width;
+            st.running = width;
+            st.panicked = false;
+            st.task = Some(task_static);
+            self.work_cv.notify_all();
+        }
+        let mine = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task()));
+        let mut st = lock(&self.m);
+        while st.running > 0 {
+            st = self.done_cv.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+        st.task = None;
+        let helper_panicked = st.panicked;
+        drop(st);
+        if let Err(p) = mine {
+            std::panic::resume_unwind(p);
+        }
+        if helper_panicked {
+            panic!("tensor::par worker thread panicked");
+        }
+    }
+}
+
+/// Run `f(i)` for every `i in 0..n_items`, possibly concurrently.
+/// Invocations for distinct indices must be independent (they write
+/// disjoint data); completion of all of them is guaranteed on return.
+/// Falls back to an inline loop when threads() <= 1, the item count is
+/// trivial, or the pool is busy with another kernel.
+pub(crate) fn for_indices(n_items: usize, f: &(dyn Fn(usize) + Sync)) {
+    let inline = || {
+        for i in 0..n_items {
+            f(i);
+        }
+    };
+    let t = threads();
+    if t <= 1 || n_items < 2 {
+        return inline();
+    }
+    let pool = Pool::global();
+    let width = pool.helpers.min(t - 1).min(n_items - 1);
+    if width == 0 {
+        return inline();
+    }
+    let _gate = match pool.gate.try_lock() {
+        Ok(g) => g,
+        Err(TryLockError::Poisoned(p)) => p.into_inner(),
+        Err(TryLockError::WouldBlock) => return inline(),
+    };
+    let next = AtomicUsize::new(0);
+    let task = move || loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= n_items {
+            break;
+        }
+        f(i);
+    };
+    pool.run(width, &task);
+}
+
+/// Apply `f(lo, hi)` over disjoint RCHUNK-aligned subranges covering
+/// `0..len`, possibly concurrently.  For elementwise kernels (no
+/// cross-element arithmetic) any partition is trivially bit-identical
+/// to the serial loop; small inputs run as the single range `(0, len)`.
+pub(crate) fn for_ranges(len: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+    if len < PAR_MIN || threads() <= 1 {
+        if len > 0 {
+            f(0, len);
+        }
+        return;
+    }
+    let n_chunks = len.div_ceil(RCHUNK);
+    for_indices(n_chunks, &|i| {
+        let lo = i * RCHUNK;
+        f(lo, (lo + RCHUNK).min(len));
+    });
+}
+
+/// Deterministic parallel reduction over one slice: `chunk_kernel` maps
+/// each RCHUNK chunk to its f64 partial; partials are folded **in chunk
+/// order** on the calling thread, so the result is bit-identical to the
+/// serial `acc += kernel(chunk)` loop at any thread count.
+pub(crate) fn reduce1<F>(x: &[f32], chunk_kernel: F) -> f64
+where
+    F: Fn(&[f32]) -> f64 + Sync,
+{
+    if x.len() < PAR_MIN || threads() <= 1 {
+        let mut acc = 0.0f64;
+        for c in x.chunks(RCHUNK) {
+            acc += chunk_kernel(c);
+        }
+        return acc;
+    }
+    let n_chunks = x.len().div_ceil(RCHUNK);
+    let mut partials = vec![0.0f64; n_chunks];
+    let out = SendPtr(partials.as_mut_ptr());
+    for_indices(n_chunks, &|i| {
+        let lo = i * RCHUNK;
+        let hi = (lo + RCHUNK).min(x.len());
+        // SAFETY: each chunk index is claimed exactly once (disjoint
+        // writes) and `partials` outlives the dispatch.
+        unsafe { *out.0.add(i) = chunk_kernel(&x[lo..hi]) };
+    });
+    let mut acc = 0.0f64;
+    for p in &partials {
+        acc += *p;
+    }
+    acc
+}
+
+/// Two-slice variant of [`reduce1`] (dot, squared deviation).
+pub(crate) fn reduce2<F>(a: &[f32], b: &[f32], chunk_kernel: F) -> f64
+where
+    F: Fn(&[f32], &[f32]) -> f64 + Sync,
+{
+    debug_assert_eq!(a.len(), b.len());
+    if a.len() < PAR_MIN || threads() <= 1 {
+        let mut acc = 0.0f64;
+        for (ca, cb) in a.chunks(RCHUNK).zip(b.chunks(RCHUNK)) {
+            acc += chunk_kernel(ca, cb);
+        }
+        return acc;
+    }
+    let n_chunks = a.len().div_ceil(RCHUNK);
+    let mut partials = vec![0.0f64; n_chunks];
+    let out = SendPtr(partials.as_mut_ptr());
+    for_indices(n_chunks, &|i| {
+        let lo = i * RCHUNK;
+        let hi = (lo + RCHUNK).min(a.len());
+        // SAFETY: disjoint writes; `partials` outlives the dispatch.
+        unsafe { *out.0.add(i) = chunk_kernel(&a[lo..hi], &b[lo..hi]) };
+    });
+    let mut acc = 0.0f64;
+    for p in &partials {
+        acc += *p;
+    }
+    acc
+}
+
+#[cfg(test)]
+pub(crate) fn test_serial() -> std::sync::MutexGuard<'static, ()> {
+    // serializes tests that flip the global thread count, so concurrent
+    // test threads never observe each other's settings mid-assertion
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    lock(LOCK.get_or_init(|| Mutex::new(())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::*;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn vec_of(n: usize, seed: u64) -> Vec<f32> {
+        let mut v = vec![0.0f32; n];
+        Rng::new(seed, 9).fill_normal(&mut v, 1.0);
+        v
+    }
+
+    /// Thread counts every property is checked across; `cores` last.
+    fn sweep() -> Vec<usize> {
+        let cores =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        vec![1, 2, 7, cores]
+    }
+
+    /// Ragged and aligned lengths: below one chunk, non-multiple-of-8,
+    /// chunk-aligned, above the parallel threshold, and large-ragged.
+    const LENS: [usize; 7] =
+        [0, 5, 1000, RCHUNK, RCHUNK + 3, PAR_MIN + 4097, 5 * RCHUNK + 13];
+
+    /// Run `compute` under each thread count and assert every result is
+    /// bit-identical to the threads=1 (serial) result.
+    fn assert_bit_identical<T: PartialEq + std::fmt::Debug>(
+        label: &str,
+        mut compute: impl FnMut() -> T,
+    ) {
+        let _guard = test_serial();
+        set_threads(1);
+        let reference = compute();
+        for t in sweep() {
+            set_threads(t);
+            let got = compute();
+            assert_eq!(got, reference, "{label}: threads={t} diverged from serial");
+        }
+        set_threads(0);
+    }
+
+    #[test]
+    fn reductions_bit_identical_across_threads() {
+        for &n in &LENS {
+            let a = vec_of(n, 1);
+            let b = vec_of(n, 2);
+            assert_bit_identical(&format!("dot/{n}"), || dot(&a, &b).to_bits());
+            assert_bit_identical(&format!("sq_norm/{n}"), || sq_norm(&a).to_bits());
+            assert_bit_identical(&format!("sq_deviation/{n}"), || {
+                sq_deviation(&a, &b).to_bits()
+            });
+        }
+    }
+
+    #[test]
+    fn elementwise_kernels_bit_identical_across_threads() {
+        for &n in &LENS {
+            let y0 = vec_of(n, 3);
+            let x = vec_of(n, 4);
+            assert_bit_identical(&format!("axpy/{n}"), || {
+                let mut y = y0.clone();
+                axpy(&mut y, 0.25, &x);
+                y
+            });
+            assert_bit_identical(&format!("scale/{n}"), || {
+                let mut y = y0.clone();
+                scale(&mut y, 0.75);
+                y
+            });
+            assert_bit_identical(&format!("elastic_pull/{n}"), || {
+                let mut w = y0.clone();
+                elastic_pull(&mut w, &x, 0.4);
+                w
+            });
+            assert_bit_identical(&format!("momentum/{n}"), || {
+                let mut w = y0.clone();
+                let mut m = x.clone();
+                momentum_update(&mut w, &mut m, &y0, 0.01, 0.9);
+                (w, m)
+            });
+        }
+    }
+
+    #[test]
+    fn mean_rows_and_variance_bit_identical_across_threads() {
+        for &n in &[7usize, RCHUNK + 3, PAR_MIN + 4097] {
+            let rows_data: Vec<Vec<f32>> = (0..5).map(|i| vec_of(n, 20 + i)).collect();
+            let rows: Vec<&[f32]> = rows_data.iter().map(|v| v.as_slice()).collect();
+            assert_bit_identical(&format!("mean_rows/{n}"), || {
+                let mut out = vec![0.0f32; n];
+                mean_rows(&rows, &mut out);
+                out
+            });
+            assert_bit_identical(&format!("param_variance/{n}"), || {
+                let mut scratch = vec![0.0f32; n];
+                param_variance(&rows, &mut scratch).to_bits()
+            });
+        }
+    }
+
+    #[test]
+    fn reduction_matches_naive_f64_closely() {
+        // not bit-equality (summation orders differ by design) — a sanity
+        // bound that the chunked-lane reduction is numerically right
+        let n = PAR_MIN + 777;
+        let a = vec_of(n, 5);
+        let naive: f64 = a.iter().map(|v| (*v as f64) * (*v as f64)).sum();
+        let got = sq_norm(&a);
+        assert!((got - naive).abs() < 1e-6 * naive.max(1.0), "{got} vs {naive}");
+    }
+
+    #[test]
+    fn busy_pool_falls_back_inline_with_identical_results() {
+        // nested dispatch: outer kernel holds the pool gate, inner calls
+        // (same thread via the chunk closure is impossible — so simulate
+        // contention from sibling threads) must still be correct
+        let _guard = test_serial();
+        set_threads(4);
+        let n = PAR_MIN + 1001;
+        let a = vec_of(n, 6);
+        let expected = {
+            set_threads(1);
+            let e = sq_norm(&a);
+            set_threads(4);
+            e
+        };
+        let results: Vec<f64> = std::thread::scope(|s| {
+            (0..6)
+                .map(|_| s.spawn(|| sq_norm(&a)))
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        for r in results {
+            assert_eq!(r.to_bits(), expected.to_bits());
+        }
+        set_threads(0);
+    }
+
+    #[test]
+    fn thread_count_resolution() {
+        let _guard = test_serial();
+        set_threads(3);
+        assert_eq!(threads(), 3);
+        set_threads(0);
+        assert!(threads() >= 1);
+    }
+}

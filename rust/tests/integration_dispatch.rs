@@ -464,7 +464,7 @@ fn stale_terminal_frames_are_discarded_not_protocol_violations() {
         format!(
             "#!/bin/sh\n\
              read -r line\n\
-             printf '{{\"type\":\"error\",\"id\":0,\"message\":\"stale\",\"v\":2}}\\n'\n\
+             printf '{{\"type\":\"error\",\"id\":0,\"message\":\"stale\",\"v\":3}}\\n'\n\
              {{ printf '%s\\n' \"$line\"; cat; }} | {:?} worker\n",
             worker_exe()
         ),
