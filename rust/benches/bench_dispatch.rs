@@ -10,9 +10,12 @@
 //! campaign, the cache hit rate, cold/warm wall ratio and warm-probe
 //! runs/sec, the per-run overhead of subprocess dispatch vs in-process
 //! threads, the per-campaign overhead of respawning a worker pool
-//! instead of reusing the shared one, and the loopback `adpsgd agent`
+//! instead of reusing the shared one, the loopback `adpsgd agent`
 //! columns (remote runs/sec and the per-run TCP-fabric overhead vs
-//! local threads).
+//! local threads), and the fleet columns (announce-to-membership
+//! latency against a loopback registry, and the blob bytes staged per
+//! warm-start run — content addressing amortizes one snapshot across
+//! every run that references it).
 
 use adpsgd::collective::Algo;
 use adpsgd::config::{ExperimentConfig, LrSchedule, StrategySpec};
@@ -271,6 +274,116 @@ fn main() {
                     pairs.push(("remote_overhead_secs_per_run", Json::Null));
                 }
             }
+
+            // -- fleet: announce-to-membership latency ---------------------
+            // how long after an agent starts announcing does a registry
+            // poll first list it (the floor on mid-campaign join latency)
+            {
+                use adpsgd::dispatch::fleet::registry;
+                use adpsgd::dispatch::Registry;
+                let joined = Registry::spawn("127.0.0.1:0").ok().and_then(|reg| {
+                    let reg = reg.to_string();
+                    let t = std::time::Instant::now();
+                    let agent_cfg = AgentConfig {
+                        listen: "127.0.0.1:0".into(),
+                        slots: 2,
+                        worker_exe: Some(exe.clone()),
+                        fleet: Some(reg.clone()),
+                        ..AgentConfig::default()
+                    };
+                    let addr = Agent::spawn(agent_cfg, Arc::new(WorkerPool::new()))
+                        .ok()?
+                        .to_string();
+                    loop {
+                        match registry::members(&reg) {
+                            Ok(ms) if ms.iter().any(|m| m.addr == addr) => {
+                                break Some(t.elapsed().as_secs_f64())
+                            }
+                            _ if t.elapsed() > std::time::Duration::from_secs(10) => {
+                                break None
+                            }
+                            _ => std::thread::sleep(std::time::Duration::from_millis(2)),
+                        }
+                    }
+                });
+                match joined {
+                    Some(secs) => {
+                        println!("dispatch/fleet_join         agent visible in the registry after {secs:.3}s");
+                        pairs.push(("fleet_join_secs", Json::num(secs)));
+                    }
+                    None => {
+                        println!("dispatch/fleet_join         skipped (registry or agent unavailable)");
+                        pairs.push(("fleet_join_secs", Json::Null));
+                    }
+                }
+            }
+
+            // -- blob staging: bytes shipped per warm-start run ------------
+            // one snapshot, referenced by both runs of a remote campaign
+            // against an agent with an empty blob store: content
+            // addressing stages the artifact once, so bytes/run halves
+            {
+                let ckpt = std::env::temp_dir()
+                    .join(format!("adpsgd_bench_blob_src_{}", std::process::id()));
+                let store = std::env::temp_dir()
+                    .join(format!("adpsgd_bench_blob_store_{}", std::process::id()));
+                std::fs::remove_dir_all(&ckpt).ok();
+                std::fs::remove_dir_all(&store).ok();
+                let mut seed = tiny_base(iters);
+                seed.name = "bench_blob_seed".into();
+                seed.checkpoint_every = (iters / 2).max(1);
+                seed.checkpoint_dir = ckpt.to_string_lossy().into_owned();
+                adpsgd::experiment::Experiment::from_config(seed)
+                    .and_then(adpsgd::experiment::Experiment::run)
+                    .expect("blob bench seeding run");
+                let mut b = tiny_base(iters);
+                b.name = "bench_blob".into();
+                b.init_from = ckpt.to_string_lossy().into_owned();
+                let campaign = Campaign::builder("blob", b.clone())
+                    .strategy("cpsgd", b.sync.spec_of(Strategy::Constant))
+                    .strategy("full", StrategySpec::Full)
+                    .build()
+                    .expect("blob bench campaign");
+                let agent_cfg = AgentConfig {
+                    listen: "127.0.0.1:0".into(),
+                    slots: 2,
+                    worker_exe: Some(exe.clone()),
+                    cache_dir: Some(store.clone()),
+                    ..AgentConfig::default()
+                };
+                match Agent::spawn(agent_cfg, Arc::new(WorkerPool::new())) {
+                    Ok(addr) => {
+                        let report = campaign
+                            .execute(&DispatchOptions {
+                                workers: WorkerKind::Remote,
+                                remote: vec![addr.to_string()],
+                                cache_dir: None,
+                                ..DispatchOptions::default()
+                            })
+                            .expect("blob bench campaign run");
+                        let staged: u64 = std::fs::read_dir(store.join("blobs"))
+                            .map(|rd| {
+                                rd.filter_map(|e| e.ok())
+                                    .filter_map(|e| e.metadata().ok())
+                                    .map(|m| m.len())
+                                    .sum()
+                            })
+                            .unwrap_or(0);
+                        let per_run = staged as f64 / report.runs.len() as f64;
+                        println!(
+                            "dispatch/blob_staging       {staged}B staged once for {} warm-start runs ({per_run:.0}B/run)",
+                            report.runs.len(),
+                        );
+                        pairs.push(("blob_staging_bytes_per_run", Json::num(per_run)));
+                    }
+                    Err(e) => {
+                        println!("dispatch/blob_staging       skipped (agent bind failed: {e:#})");
+                        pairs.push(("blob_staging_bytes_per_run", Json::Null));
+                    }
+                }
+                std::fs::remove_dir_all(&ckpt).ok();
+                std::fs::remove_dir_all(&store).ok();
+            }
         }
         _ => {
             println!("dispatch/subprocess         skipped (worker binary unavailable)");
@@ -281,6 +394,8 @@ fn main() {
             pairs.push(("pool_respawn_overhead_secs_per_campaign", Json::Null));
             pairs.push(("remote_loopback_runs_per_sec", Json::Null));
             pairs.push(("remote_overhead_secs_per_run", Json::Null));
+            pairs.push(("fleet_join_secs", Json::Null));
+            pairs.push(("blob_staging_bytes_per_run", Json::Null));
         }
     }
 

@@ -11,8 +11,11 @@
 # a warm agent must answer the re-run from its own cache) + a
 # kernel-parallelism smoke (the same campaign under perf.threads=1 and
 # perf.threads=4 must write byte-identical stable summaries — the
-# tensor::par reductions are bit-identical at any thread count) + the
-# campaign/dispatch benches (emit BENCH_campaign.json /
+# tensor::par reductions are bit-identical at any thread count) + a
+# fleet smoke (a registry plus two loopback agents resolved via
+# --fleet, one restarted mid-campaign, must write a byte-identical
+# stable summary, and a wrong shared-secret token must be rejected) +
+# the campaign/dispatch benches (emit BENCH_campaign.json /
 # BENCH_dispatch.json for the perf trajectory).  Referenced from
 # ROADMAP.md; CI and pre-merge checks should run exactly this.
 set -euo pipefail
@@ -130,6 +133,75 @@ cmp /tmp/adpsgd_verify_remote/remote_smoke.campaign.json \
 kill "${AGENT_PID}" 2>/dev/null || true
 trap - EXIT
 echo "   remote-agent smoke OK (byte-identical summary, ${agent_hits}/8 agent cache hits)"
+
+echo "== verify: fleet smoke (registry discovery, mid-run agent restart) =="
+FLEET_DIR=/tmp/adpsgd_verify_fleet
+rm -rf "${FLEET_DIR}"
+mkdir -p "${FLEET_DIR}"
+./target/release/adpsgd registry --listen 127.0.0.1:0 > "${FLEET_DIR}/registry.log" 2>&1 &
+REGISTRY_PID=$!
+trap 'kill "${REGISTRY_PID}" "${FLEET_A_PID:-}" "${FLEET_B_PID:-}" 2>/dev/null || true' EXIT
+for _ in $(seq 50); do
+    grep -q "registry: listening on" "${FLEET_DIR}/registry.log" && break
+    sleep 0.2
+done
+REG_ADDR=$(sed -n 's/^registry: listening on \([^ ]*\).*/\1/p' "${FLEET_DIR}/registry.log" | head -n1)
+[ -n "${REG_ADDR}" ] \
+    || { echo "verify: FAIL — registry did not announce its address"; cat "${FLEET_DIR}/registry.log"; exit 1; }
+start_fleet_agent() { # $1 = listen addr, $2 = log file (appended: restarts share it)
+    ./target/release/adpsgd agent --listen "$1" --slots 2 --token fleet-secret \
+        --fleet "${REG_ADDR}" >> "$2" 2>&1 &
+}
+start_fleet_agent 127.0.0.1:0 "${FLEET_DIR}/agent_a.log"
+FLEET_A_PID=$!
+start_fleet_agent 127.0.0.1:0 "${FLEET_DIR}/agent_b.log"
+FLEET_B_PID=$!
+for _ in $(seq 50); do
+    grep -q "agent: listening on" "${FLEET_DIR}/agent_b.log" && break
+    sleep 0.2
+done
+FLEET_B_ADDR=$(sed -n 's/^agent: listening on \([^ ]*\).*/\1/p' "${FLEET_DIR}/agent_b.log" | head -n1)
+[ -n "${FLEET_B_ADDR}" ] \
+    || { echo "verify: FAIL — fleet agent B did not announce its address"; cat "${FLEET_DIR}/agent_b.log"; exit 1; }
+# the same quick campaign locally and with membership resolved through
+# the registry alone (no --remote list): summaries must be byte-identical
+cargo run --release -- campaign --quick --name fleet_smoke --jobs 2 \
+    --no-cache --out "${FLEET_DIR}/local"
+cargo run --release -- campaign --quick --name fleet_smoke --workers remote \
+    --fleet "${REG_ADDR}" --remote-token fleet-secret \
+    --no-cache --out "${FLEET_DIR}/fleet" &
+CAMPAIGN_PID=$!
+# restart agent B as soon as it starts executing: redial-with-backoff
+# must let the campaign finish on capacity that died and came back
+for _ in $(seq 200); do
+    grep -q "agent: run .* started" "${FLEET_DIR}/agent_b.log" && break
+    kill -0 "${CAMPAIGN_PID}" 2>/dev/null || break
+    sleep 0.05
+done
+if grep -q "agent: run .* started" "${FLEET_DIR}/agent_b.log"; then
+    kill "${FLEET_B_PID}" 2>/dev/null || true
+    start_fleet_agent "${FLEET_B_ADDR}" "${FLEET_DIR}/agent_b.log"
+    FLEET_B_PID=$!
+    RESTARTED="restarted mid-run"
+else
+    RESTARTED="no restart (campaign finished first)"
+fi
+wait "${CAMPAIGN_PID}" \
+    || { echo "verify: FAIL — fleet campaign did not survive the restart"; cat "${FLEET_DIR}/agent_b.log"; exit 1; }
+cmp "${FLEET_DIR}/local/fleet_smoke.campaign.json" "${FLEET_DIR}/fleet/fleet_smoke.campaign.json" \
+    || { echo "verify: FAIL — fleet and local stable summaries differ"; exit 1; }
+# wrong shared secret against a token-requiring agent: the campaign must
+# be rejected loudly (static --remote fails fast at the handshake)
+if AUTH_OUT=$(cargo run --release -- campaign --quick --name auth_smoke --workers remote \
+    --remote "${FLEET_B_ADDR}" --remote-token wrong-secret --no-cache \
+    --out "${FLEET_DIR}/auth" 2>&1); then
+    echo "verify: FAIL — a wrong --remote-token must be rejected"; exit 1
+fi
+echo "${AUTH_OUT}" | grep -qi "token" \
+    || { echo "verify: FAIL — the auth rejection must name the token"; echo "${AUTH_OUT}"; exit 1; }
+kill "${REGISTRY_PID}" "${FLEET_A_PID}" "${FLEET_B_PID}" 2>/dev/null || true
+trap - EXIT
+echo "   fleet smoke OK (registry-resolved summary byte-identical; agent B ${RESTARTED}; bad token rejected)"
 
 echo "== verify: campaign scheduler bench (fast) =="
 ADPSGD_BENCH_FAST=1 cargo bench --bench bench_campaign

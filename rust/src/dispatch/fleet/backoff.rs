@@ -1,0 +1,217 @@
+//! Capped exponential backoff with deterministic jitter and a bounded
+//! retry budget — the fleet's redial schedule.
+//!
+//! The schedule doubles from [`Backoff::base`] up to [`Backoff::cap`];
+//! each delay is then jittered into `[nominal/2, nominal]` by a
+//! deterministic hash of `(salt, attempt)` so concurrent slot threads
+//! redialing the same restarted agent fan out instead of stampeding,
+//! while the schedule itself stays reproducible (no RNG, no global
+//! state — the same salt always sleeps the same).  When
+//! [`Backoff::budget`] attempts have all failed, [`Backoff::retry`]
+//! gives up with the typed [`RetryBudgetExhausted`] error so callers
+//! can distinguish "agent is really gone" from a transient dial error.
+
+use anyhow::{bail, Result};
+use std::time::Duration;
+
+/// Typed give-up error: every attempt in the retry budget failed.
+/// Downcastable through the `anyhow` chain, like
+/// [`super::super::proto::VersionSkew`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RetryBudgetExhausted {
+    /// How many attempts were made (== the configured budget).
+    pub attempts: u32,
+    /// What was being retried (an agent address, for diagnostics).
+    pub what: String,
+}
+
+impl std::fmt::Display for RetryBudgetExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "retry budget exhausted: {} failed {} consecutive attempts — giving up",
+            self.what, self.attempts
+        )
+    }
+}
+
+impl std::error::Error for RetryBudgetExhausted {}
+
+/// The redial schedule.  `Default` is tuned for an agent restart
+/// mid-campaign: ~250ms first redial, doubling to an 8s cap, giving up
+/// after 10 attempts (≈45s of patience end to end).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Backoff {
+    /// First (pre-jitter) delay.
+    pub base: Duration,
+    /// Largest (pre-jitter) delay; the doubling saturates here.
+    pub cap: Duration,
+    /// Maximum number of attempts before [`RetryBudgetExhausted`].
+    pub budget: u32,
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Backoff {
+            base: Duration::from_millis(250),
+            cap: Duration::from_secs(8),
+            budget: 10,
+        }
+    }
+}
+
+impl Backoff {
+    /// The jittered delay before attempt `attempt + 1` (i.e. the sleep
+    /// *after* attempt `attempt` failed).  Nominal value is
+    /// `base · 2^attempt` saturating at `cap`; jitter deterministically
+    /// maps `(salt, attempt)` into `[nominal/2, nominal]`.
+    pub fn delay(&self, attempt: u32, salt: &str) -> Duration {
+        let nominal = self
+            .base
+            .checked_mul(1u32.checked_shl(attempt).unwrap_or(u32::MAX))
+            .map_or(self.cap, |d| d.min(self.cap));
+        // first 8 hex chars of the content digest → a uniform fraction
+        let digest =
+            super::super::runcache::content_digest(format!("{salt}#{attempt}").as_bytes());
+        let x = u32::from_str_radix(&digest[..8], 16).unwrap_or(0);
+        let frac = 0.5 + 0.5 * (x as f64 / u32::MAX as f64);
+        nominal.mul_f64(frac)
+    }
+
+    /// Run `op` until it succeeds, sleeping the schedule between
+    /// failures.  `still_wanted` is polled during the sleeps (in 50ms
+    /// steps) so a retry loop stops promptly when the work it would
+    /// reconnect for is already done or aborted; returning `false`
+    /// fails the retry with a plain (non-budget) error.  After `budget`
+    /// failures the typed [`RetryBudgetExhausted`] is returned, with
+    /// the last underlying error in its context chain.
+    pub fn retry<T>(
+        &self,
+        what: &str,
+        still_wanted: impl Fn() -> bool,
+        mut op: impl FnMut() -> Result<T>,
+    ) -> Result<T> {
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..self.budget.max(1) {
+            if !still_wanted() {
+                bail!("retrying {what} abandoned: the work it would serve is gone");
+            }
+            match op() {
+                Ok(v) => return Ok(v),
+                Err(e) => last = Some(e),
+            }
+            // sleep the schedule, but stay responsive to cancellation
+            let mut left = self.delay(attempt, what);
+            while !left.is_zero() {
+                if !still_wanted() {
+                    bail!("retrying {what} abandoned: the work it would serve is gone");
+                }
+                let step = left.min(Duration::from_millis(50));
+                std::thread::sleep(step);
+                left = left.saturating_sub(step);
+            }
+        }
+        let exhausted = RetryBudgetExhausted {
+            attempts: self.budget.max(1),
+            what: what.to_string(),
+        };
+        Err(match last {
+            Some(e) => anyhow::Error::new(exhausted).context(format!("last error: {e:#}")),
+            None => anyhow::Error::new(exhausted),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU32, Ordering};
+
+    fn quick() -> Backoff {
+        Backoff { base: Duration::from_millis(1), cap: Duration::from_millis(4), budget: 3 }
+    }
+
+    #[test]
+    fn delays_double_to_the_cap_and_jitter_stays_in_bounds() {
+        let b = Backoff {
+            base: Duration::from_millis(100),
+            cap: Duration::from_secs(2),
+            budget: 10,
+        };
+        let mut prev_nominal = Duration::ZERO;
+        for attempt in 0..16 {
+            let nominal = b
+                .base
+                .checked_mul(1u32.checked_shl(attempt).unwrap_or(u32::MAX))
+                .map_or(b.cap, |d| d.min(b.cap));
+            assert!(nominal >= prev_nominal, "nominal schedule is monotone");
+            assert!(nominal <= b.cap, "nominal schedule saturates at the cap");
+            prev_nominal = nominal;
+            for salt in ["10.0.0.1:7070", "10.0.0.2:7070", "x"] {
+                let d = b.delay(attempt, salt);
+                assert!(
+                    d >= nominal.mul_f64(0.5) && d <= nominal,
+                    "attempt {attempt} salt {salt}: {d:?} outside [{:?}, {nominal:?}]",
+                    nominal.mul_f64(0.5),
+                );
+            }
+        }
+        // the shift-overflow region (attempt ≥ 32) still just returns the cap
+        assert!(b.delay(40, "x") <= b.cap);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_per_salt_and_spreads_across_salts() {
+        let b = Backoff::default();
+        assert_eq!(b.delay(3, "agent-a"), b.delay(3, "agent-a"));
+        // two agents redialing on the same schedule should not sleep in
+        // lockstep on every attempt (that is the stampede jitter exists
+        // to break)
+        let differs = (0..8).any(|a| b.delay(a, "agent-a") != b.delay(a, "agent-b"));
+        assert!(differs, "jitter must spread distinct salts apart");
+    }
+
+    #[test]
+    fn retry_passes_success_through_and_counts_the_budget() {
+        let calls = AtomicU32::new(0);
+        let got = quick()
+            .retry("t", || true, || {
+                if calls.fetch_add(1, Ordering::Relaxed) < 2 {
+                    bail!("transient")
+                }
+                Ok(42)
+            })
+            .unwrap();
+        assert_eq!(got, 42);
+        assert_eq!(calls.load(Ordering::Relaxed), 3, "succeeded on the last attempt");
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_is_the_typed_error() {
+        let calls = AtomicU32::new(0);
+        let err = quick()
+            .retry::<()>("agent 10.0.0.9:7070", || true, || {
+                calls.fetch_add(1, Ordering::Relaxed);
+                bail!("connection refused")
+            })
+            .unwrap_err();
+        assert_eq!(calls.load(Ordering::Relaxed), 3, "budget bounds the attempts");
+        let typed = err
+            .downcast_ref::<RetryBudgetExhausted>()
+            .unwrap_or_else(|| panic!("not typed: {err:#}"));
+        assert_eq!(typed.attempts, 3);
+        assert!(typed.what.contains("10.0.0.9"), "{typed}");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("retry budget exhausted"), "{msg}");
+        assert!(msg.contains("connection refused"), "last cause must survive: {msg}");
+    }
+
+    #[test]
+    fn retry_stops_promptly_when_no_longer_wanted() {
+        let err = quick()
+            .retry::<()>("t", || false, || bail!("unreachable"))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("abandoned"), "{err:#}");
+        assert!(err.downcast_ref::<RetryBudgetExhausted>().is_none());
+    }
+}

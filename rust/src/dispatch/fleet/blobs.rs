@@ -1,0 +1,379 @@
+//! Content-addressed artifact staging: ship warm-start snapshots (and
+//! other driver-local files) to agents that do not hold them.
+//!
+//! The run cache already fingerprints a warm start by the *bytes* of
+//! the resolved `init_from` snapshot ([`content_digest`]).  Staging
+//! reuses that digest as the transfer key end to end:
+//!
+//! 1. The dispatcher builds a [`BlobCatalog`] over a campaign's runs —
+//!    digest → local path for every resolvable `init_from` — and
+//!    rewrites each remote-bound config's `init_from` to
+//!    `blob:<digest>` ([`BlobCatalog::wire_cfg`]).
+//! 2. The agent's cache probe understands the `blob:` scheme (the
+//!    digest *is* the content hash, so the cache key is identical on
+//!    both ends) — a warm agent answers without ever pulling the bytes.
+//! 3. On a miss, the agent checks its [`BlobStore`]; if the digest is
+//!    absent it sends a `BlobRequest` frame and the dispatcher answers
+//!    with the bytes (binary on the TCP transport).  The store verifies
+//!    the digest before trusting them, writes atomically
+//!    (temp + rename, the run cache's convention), and rewrites the
+//!    config to the staged path before executing.
+//!
+//! An HLO `manifest.json` can ride the same frames (the store is
+//! digest-keyed, not snapshot-specific), but staging a *full* artifacts
+//! directory is future work — see ROADMAP.
+
+use super::super::runcache::content_digest;
+use crate::config::ExperimentConfig;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// The wire scheme for a content-addressed `init_from` reference:
+/// `blob:<digest>` where `<digest>` is the snapshot's
+/// [`content_digest`].
+pub const BLOB_SCHEME: &str = "blob:";
+
+/// Orphaned temp files older than this are swept by [`BlobStore::gc`]
+/// (same grace the run cache uses for its own temp files).
+const TMP_GRACE: Duration = Duration::from_secs(900);
+
+fn valid_digest(digest: &str) -> Result<()> {
+    if digest.is_empty() || !digest.chars().all(|c| c.is_ascii_hexdigit()) {
+        bail!("blob digest {digest:?} is not a hex content digest");
+    }
+    Ok(())
+}
+
+/// An agent-side store of pulled artifacts: one `<digest>.blob` file
+/// per artifact under `<cache-dir>/blobs/`, digest-verified on write,
+/// size-bounded by [`BlobStore::gc`] (oldest-first, like the run
+/// cache).
+pub struct BlobStore {
+    dir: PathBuf,
+}
+
+impl BlobStore {
+    /// A store rooted at `dir` (created lazily on first write).
+    pub fn new(dir: impl Into<PathBuf>) -> BlobStore {
+        BlobStore { dir: dir.into() }
+    }
+
+    /// The conventional store location under an agent's cache dir.
+    pub fn under_cache(cache_dir: &Path) -> BlobStore {
+        BlobStore::new(cache_dir.join("blobs"))
+    }
+
+    /// The store's root directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Where `digest`'s bytes live (whether or not they are present).
+    pub fn path_for(&self, digest: &str) -> PathBuf {
+        self.dir.join(format!("{digest}.blob"))
+    }
+
+    /// The staged path for `digest`, if the bytes are already here.
+    pub fn get(&self, digest: &str) -> Option<PathBuf> {
+        valid_digest(digest).ok()?;
+        let p = self.path_for(digest);
+        p.is_file().then_some(p)
+    }
+
+    /// Store `bytes` under `digest`, verifying the content hash first —
+    /// a peer that ships bytes not matching the digest it was asked for
+    /// is answering the wrong question, and a poisoned store would
+    /// corrupt every future run keyed on that digest.  Atomic
+    /// (unique temp + rename), so concurrent pulls of the same digest
+    /// race safely.
+    pub fn put(&self, digest: &str, bytes: &[u8]) -> Result<PathBuf> {
+        valid_digest(digest)?;
+        let actual = content_digest(bytes);
+        if actual != digest {
+            bail!(
+                "staged blob does not match its digest: expected {digest}, bytes hash to \
+                 {actual} ({} bytes) — refusing to store",
+                bytes.len()
+            );
+        }
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating blob store {}", self.dir.display()))?;
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let tmp = self.dir.join(format!(
+            ".{digest}.{}.{}.tmp",
+            std::process::id(),
+            COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        let path = self.path_for(digest);
+        std::fs::write(&tmp, bytes)
+            .with_context(|| format!("writing blob temp {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path).with_context(|| {
+            std::fs::remove_file(&tmp).ok();
+            format!("publishing blob {}", path.display())
+        })?;
+        Ok(path)
+    }
+
+    /// Bound the store to `max_bytes`, evicting oldest-modified blobs
+    /// first and sweeping orphaned temp files past their grace period.
+    /// Returns `(evicted_blobs, bytes_freed)`.  Eviction is always
+    /// safe: an evicted digest is simply re-pulled on next use.
+    pub fn gc(&self, max_bytes: u64) -> Result<(usize, u64)> {
+        let entries = match std::fs::read_dir(&self.dir) {
+            Ok(e) => e,
+            // no store yet: nothing to bound
+            Err(_) => return Ok((0, 0)),
+        };
+        let mut blobs: Vec<(PathBuf, u64, std::time::SystemTime)> = Vec::new();
+        let mut freed = 0u64;
+        let mut evicted = 0usize;
+        for entry in entries.flatten() {
+            let path = entry.path();
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let meta = match entry.metadata() {
+                Ok(m) if m.is_file() => m,
+                _ => continue,
+            };
+            let mtime = meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+            if name.ends_with(".tmp") {
+                let stale = mtime
+                    .elapsed()
+                    .map(|age| age > TMP_GRACE)
+                    .unwrap_or(false);
+                if stale && std::fs::remove_file(&path).is_ok() {
+                    freed += meta.len();
+                }
+                continue;
+            }
+            if name.ends_with(".blob") {
+                blobs.push((path, meta.len(), mtime));
+            }
+        }
+        let mut total: u64 = blobs.iter().map(|(_, len, _)| len).sum();
+        blobs.sort_by_key(|(_, _, mtime)| *mtime);
+        for (path, len, _) in blobs {
+            if total <= max_bytes {
+                break;
+            }
+            if std::fs::remove_file(&path).is_ok() {
+                total = total.saturating_sub(len);
+                freed += len;
+                evicted += 1;
+            }
+        }
+        Ok((evicted, freed))
+    }
+}
+
+/// The dispatcher's side of staging: digest → local path for every
+/// artifact a campaign's runs reference, plus the `init_from` →
+/// `blob:<digest>` rewrite applied to remote-bound configs.
+#[derive(Debug, Default)]
+pub struct BlobCatalog {
+    by_digest: HashMap<String, PathBuf>,
+    // original `init_from` string → digest, for the wire rewrite
+    by_source: HashMap<String, String>,
+}
+
+impl BlobCatalog {
+    /// A catalog with nothing staged (local-only dispatch).
+    pub fn empty() -> BlobCatalog {
+        BlobCatalog::default()
+    }
+
+    /// True when no run references a stageable artifact.
+    pub fn is_empty(&self) -> bool {
+        self.by_digest.is_empty()
+    }
+
+    /// Number of distinct artifacts catalogued.
+    pub fn len(&self) -> usize {
+        self.by_digest.len()
+    }
+
+    /// Build the catalog over a set of run configs: resolve each
+    /// non-empty `init_from` (a directory resolves to its latest
+    /// checkpoint, exactly as the run-cache digest does), hash the
+    /// bytes, and record digest → path.  An unresolvable reference is
+    /// left alone — the run keeps its original path and fails (locally
+    /// or remotely) with its own actionable error, unchanged from the
+    /// pre-fleet behavior.
+    pub fn for_runs<'a>(cfgs: impl IntoIterator<Item = &'a ExperimentConfig>) -> BlobCatalog {
+        let mut catalog = BlobCatalog::default();
+        for cfg in cfgs {
+            let source = cfg.init_from.trim();
+            if source.is_empty()
+                || source.starts_with(BLOB_SCHEME)
+                || catalog.by_source.contains_key(source)
+            {
+                continue;
+            }
+            let p = Path::new(source);
+            let resolved = if p.is_dir() {
+                crate::checkpoint::Checkpoint::latest(p).ok().flatten()
+            } else {
+                Some(p.to_path_buf())
+            };
+            if let Some((file, bytes)) =
+                resolved.and_then(|f| std::fs::read(&f).ok().map(|b| (f, b)))
+            {
+                let digest = content_digest(&bytes);
+                catalog.by_digest.insert(digest.clone(), file);
+                catalog.by_source.insert(source.to_string(), digest);
+            }
+        }
+        catalog
+    }
+
+    /// The remote-bound form of `cfg`: `init_from` rewritten to
+    /// `blob:<digest>` when the catalog staged it.  Local execution
+    /// keeps the original config — only the wire copy is rewritten.
+    pub fn wire_cfg(&self, cfg: &ExperimentConfig) -> ExperimentConfig {
+        match self.by_source.get(cfg.init_from.trim()) {
+            Some(digest) => {
+                let mut wire = cfg.clone();
+                wire.init_from = format!("{BLOB_SCHEME}{digest}");
+                wire
+            }
+            None => cfg.clone(),
+        }
+    }
+
+    /// The local path holding `digest`'s bytes, if catalogued.
+    pub fn resolve(&self, digest: &str) -> Option<&Path> {
+        self.by_digest.get(digest).map(PathBuf::as_path)
+    }
+
+    /// Read `digest`'s bytes for a `BlobRequest` answer, re-verifying
+    /// the content hash — if the file changed since the catalog was
+    /// built, shipping it would poison the agent's digest-keyed store.
+    pub fn read(&self, digest: &str) -> Result<Vec<u8>> {
+        let path = self
+            .resolve(digest)
+            .ok_or_else(|| anyhow!("blob {digest} is not in this dispatch's catalog"))?;
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading staged artifact {}", path.display()))?;
+        let actual = content_digest(&bytes);
+        if actual != digest {
+            bail!(
+                "staged artifact {} changed on disk since the catalog was built \
+                 (expected {digest}, now {actual})",
+                path.display()
+            );
+        }
+        Ok(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::Checkpoint;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "adpsgd_fleet_blobs_{tag}_{}_{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn store_roundtrips_and_refuses_mismatched_bytes() {
+        let dir = tmpdir("store");
+        let store = BlobStore::new(dir.join("blobs"));
+        let bytes = b"snapshot payload".to_vec();
+        let digest = content_digest(&bytes);
+
+        assert!(store.get(&digest).is_none(), "empty store has nothing");
+        let path = store.put(&digest, &bytes).unwrap();
+        assert_eq!(store.get(&digest), Some(path.clone()));
+        assert_eq!(std::fs::read(&path).unwrap(), bytes);
+
+        // wrong bytes for the digest: refused, store unpoisoned
+        let err = store.put(&digest, b"tampered").unwrap_err();
+        assert!(format!("{err:#}").contains("does not match"), "{err:#}");
+        assert_eq!(std::fs::read(&path).unwrap(), bytes, "original entry untouched");
+
+        // a non-hex digest is rejected before touching the filesystem
+        assert!(store.put("../escape", &bytes).is_err());
+        assert!(store.get("../escape").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_gc_bounds_oldest_first() {
+        let dir = tmpdir("gc");
+        let store = BlobStore::new(dir.join("blobs"));
+        let mut digests = Vec::new();
+        for i in 0..4u8 {
+            let bytes = vec![i; 1000];
+            let digest = content_digest(&bytes);
+            store.put(&digest, &bytes).unwrap();
+            digests.push(digest);
+            // spread mtimes so oldest-first eviction order is well-defined
+            std::thread::sleep(Duration::from_millis(30));
+        }
+        // bound to ~2.5 entries: the two oldest must go
+        let (evicted, freed) = store.gc(2500).unwrap();
+        assert_eq!(evicted, 2, "two oldest blobs evicted");
+        assert_eq!(freed, 2000);
+        assert!(store.get(&digests[0]).is_none());
+        assert!(store.get(&digests[1]).is_none());
+        assert!(store.get(&digests[2]).is_some());
+        assert!(store.get(&digests[3]).is_some());
+        // already under the bound: a second pass is a no-op
+        assert_eq!(store.gc(2500).unwrap(), (0, 0));
+        // gc of a store that never existed is a quiet no-op too
+        assert_eq!(BlobStore::new(dir.join("nope")).gc(0).unwrap(), (0, 0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn catalog_rewrites_init_from_and_preserves_the_cache_key() {
+        let dir = tmpdir("catalog");
+        let snap = dir.join("warm.adpk");
+        Checkpoint::new(5, 0.0, vec![0.5; 8]).save(&snap).unwrap();
+
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = "blob_catalog".into();
+        cfg.init_from = snap.to_str().unwrap().into();
+        let mut plain = ExperimentConfig::default();
+        plain.name = "no_warm_start".into();
+
+        let catalog = BlobCatalog::for_runs([&cfg, &plain]);
+        assert_eq!(catalog.len(), 1, "only the warm start is stageable");
+
+        let wire = catalog.wire_cfg(&cfg);
+        assert!(wire.init_from.starts_with(BLOB_SCHEME), "{}", wire.init_from);
+        let digest = wire.init_from.strip_prefix(BLOB_SCHEME).unwrap();
+
+        // the key property: the wire form and the local form hash to
+        // the same cache key, so driver and agent agree on hits
+        use super::super::super::runcache::cfg_digest;
+        assert_eq!(cfg_digest(&cfg).unwrap(), cfg_digest(&wire).unwrap());
+
+        // the catalog serves the exact snapshot bytes back
+        assert_eq!(catalog.read(digest).unwrap(), std::fs::read(&snap).unwrap());
+        assert!(catalog.resolve(digest).is_some());
+        assert!(catalog.read("00ff00ff").is_err(), "uncatalogued digest is an error");
+
+        // a config without a warm start passes through untouched
+        let untouched = catalog.wire_cfg(&plain);
+        assert!(untouched.init_from.is_empty());
+
+        // editing the file after cataloguing is caught at read time
+        std::fs::write(&snap, b"changed").unwrap();
+        let err = catalog.read(digest).unwrap_err();
+        assert!(format!("{err:#}").contains("changed on disk"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,113 @@
+//! Elastic agent fleet: discovery, reconnection, and artifact staging
+//! on top of the [`super::net`] remote fabric.
+//!
+//! The PR-5 fabric assumed a static, trusted, always-up world — a fixed
+//! `--remote host:port` list, plaintext token auth, no rejoin after an
+//! agent restart, and warm-start snapshots that only exist on the
+//! driver.  This module turns it into a cluster substrate:
+//!
+//! * **[`registry`]** — a lightweight membership endpoint (`adpsgd
+//!   registry --listen ADDR`).  Agents announce themselves with their
+//!   capacity under a liveness lease and re-announce on a cadence; the
+//!   dispatcher resolves membership from the registry (`--fleet ADDR`,
+//!   alongside any static `--remote` list) and adds slot threads as
+//!   members join — mid-campaign joins pick up queued runs, expired
+//!   leases stop attracting new work.
+//! * **[`backoff`]** — the redial schedule.  A dropped or restarted
+//!   agent is redialed under capped exponential backoff with
+//!   deterministic jitter and a bounded retry budget
+//!   ([`backoff::RetryBudgetExhausted`] is the typed give-up error).
+//!   Completed runs are never redriven on rejoin (the
+//!   [`super::RunCache`] memoizes them); in-flight ones requeue through
+//!   the normal crashed-run path.
+//! * **[`blobs`]** — content-addressed artifact staging.  A warm-start
+//!   snapshot is shipped on the wire as `blob:<digest>` (the digest the
+//!   run-cache key already hashes), so an agent can probe its cache
+//!   *before* holding the bytes, and on a miss pull them with a
+//!   [`super::proto::Frame::BlobRequest`] answered by the dispatcher's
+//!   [`blobs::BlobCatalog`].  Pulled bytes land in the agent's
+//!   digest-verified [`blobs::BlobStore`], reusing the run cache's
+//!   directory and GC conventions.
+//!
+//! Authentication is challenge-response ([`super::proto::auth_proof`]):
+//! the agent opens every connection with a nonce challenge and the
+//! client answers with a keyed digest — the shared token never travels
+//! the wire in either direction.  Mid-run cancellation
+//! ([`super::proto::Frame::Cancel`]) lets the dispatcher kill an
+//! orphaned run inside an agent's worker child instead of letting it
+//! silently train to completion.  TLS on the wire remains future work.
+
+pub mod backoff;
+pub mod blobs;
+pub mod registry;
+
+pub use backoff::{Backoff, RetryBudgetExhausted};
+pub use blobs::{BlobCatalog, BlobStore};
+pub use registry::{Member, Registry};
+
+use anyhow::{bail, Result};
+
+/// Validate a list of agent endpoints (`--remote`) at parse time:
+/// empty/whitespace entries and duplicate addresses are configuration
+/// errors and should fail with a clear message up front, not deep in
+/// the dial loop.
+pub fn validate_endpoints(endpoints: &[String]) -> Result<()> {
+    let mut seen = std::collections::BTreeSet::new();
+    for (i, raw) in endpoints.iter().enumerate() {
+        let addr = raw.trim();
+        if addr.is_empty() {
+            bail!(
+                "--remote entry {} is empty — expected a comma-separated list of \
+                 host:port agent endpoints",
+                i + 1
+            );
+        }
+        if addr.split_whitespace().count() > 1 {
+            bail!(
+                "--remote entry {} ({addr:?}) contains whitespace — expected one \
+                 host:port endpoint per comma-separated entry",
+                i + 1
+            );
+        }
+        if !seen.insert(addr.to_string()) {
+            bail!(
+                "--remote lists agent {addr:?} more than once — duplicate endpoints \
+                 would double-count its slots; list each agent exactly once"
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(list: &[&str]) -> Result<()> {
+        validate_endpoints(&list.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn endpoint_validation_accepts_sane_lists() {
+        v(&[]).unwrap();
+        v(&["127.0.0.1:7070"]).unwrap();
+        v(&["a:1", "b:2", "c:3"]).unwrap();
+        // surrounding whitespace is tolerated (the CLI trims), inner is not
+        v(&[" a:1 ", "b:2"]).unwrap();
+    }
+
+    #[test]
+    fn endpoint_validation_rejects_empty_whitespace_and_duplicates() {
+        let e = v(&["a:1", ""]).unwrap_err().to_string();
+        assert!(e.contains("entry 2") && e.contains("empty"), "{e}");
+        let e = v(&["   "]).unwrap_err().to_string();
+        assert!(e.contains("empty"), "{e}");
+        let e = v(&["host one:1"]).unwrap_err().to_string();
+        assert!(e.contains("whitespace"), "{e}");
+        let e = v(&["a:1", "b:2", "a:1"]).unwrap_err().to_string();
+        assert!(e.contains("more than once") && e.contains("a:1"), "{e}");
+        // duplicates are detected on the trimmed form
+        let e = v(&["a:1", " a:1"]).unwrap_err().to_string();
+        assert!(e.contains("more than once"), "{e}");
+    }
+}

@@ -1,0 +1,347 @@
+//! Fleet membership: a lightweight TCP registry where agents announce
+//! themselves under a liveness lease and the dispatcher resolves the
+//! current member set.
+//!
+//! The protocol is deliberately tiny — one JSON line in, one JSON line
+//! out, one request per connection — and versioned with the same
+//! [`PROTO_VERSION`] header (and typed [`VersionSkew`] rejection) as
+//! the run protocol:
+//!
+//! * agent → registry: `{"type":"announce","addr":A,"slots":S,
+//!   "ttl_ms":T,"v":V}` — upserts the member under a lease expiring
+//!   `ttl_ms` from now; answered with `{"type":"ok","members":N}`.
+//!   Agents re-announce every `ttl/3` (see the agent's announce loop),
+//!   so a crashed agent silently ages out.
+//! * dispatcher → registry: `{"type":"list","v":V}` — answered with
+//!   `{"type":"members","agents":[{"addr":A,"slots":S},…]}` holding
+//!   every unexpired member, sorted by address for determinism.
+//!
+//! The registry holds no secrets and schedules nothing: it is a
+//! phonebook, not a broker.  Authentication happens end-to-end between
+//! dispatcher and agent (the challenge-response handshake), so a stale
+//! or malicious registry entry can waste a dial attempt but never
+//! impersonate an agent that holds no token.
+
+use super::super::proto::{VersionSkew, PROTO_VERSION};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Per-connection I/O deadline: a registry exchange is one short line
+/// each way, so anything slower than this is a wedged peer.
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// One live fleet member, as resolved from the registry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Member {
+    /// The agent's dialable `host:port` endpoint.
+    pub addr: String,
+    /// Advertised concurrent-run capacity.
+    pub slots: u32,
+}
+
+/// The registry daemon (`adpsgd registry --listen ADDR`).
+pub struct Registry {
+    listener: TcpListener,
+    members: Arc<Mutex<HashMap<String, (u32, Instant)>>>,
+}
+
+impl Registry {
+    /// Bind the listening socket (port 0 picks a free port; the bound
+    /// address is printed by [`Registry::serve`] and queryable here).
+    pub fn bind(listen: &str) -> Result<Registry> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("registry: binding {listen}"))?;
+        Ok(Registry { listener, members: Arc::new(Mutex::new(HashMap::new())) })
+    }
+
+    /// The bound listening address.
+    pub fn addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("registry: local_addr")
+    }
+
+    /// Accept loop: one thread per connection, one request per
+    /// connection.  Runs until the process exits.
+    pub fn serve(self) -> Result<()> {
+        let addr = self.addr()?;
+        println!("registry: listening on {addr}");
+        for stream in self.listener.incoming() {
+            let stream = match stream {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("registry: accept failed: {e}");
+                    continue;
+                }
+            };
+            let members = Arc::clone(&self.members);
+            std::thread::spawn(move || {
+                if let Err(e) = handle(&members, stream) {
+                    eprintln!("registry: request failed: {e:#}");
+                }
+            });
+        }
+        Ok(())
+    }
+
+    /// Bind and serve on a background thread, returning the bound
+    /// address (tests, benches, and the agent's self-registry mode).
+    pub fn spawn(listen: &str) -> Result<SocketAddr> {
+        let registry = Registry::bind(listen)?;
+        let addr = registry.addr()?;
+        std::thread::spawn(move || {
+            if let Err(e) = registry.serve() {
+                eprintln!("registry: serve failed: {e:#}");
+            }
+        });
+        Ok(addr)
+    }
+}
+
+/// Drop expired leases, logging each member that ages out.
+fn prune(members: &mut HashMap<String, (u32, Instant)>) {
+    let now = Instant::now();
+    members.retain(|addr, (_, expiry)| {
+        let live = *expiry > now;
+        if !live {
+            println!("registry: {addr} lease expired");
+        }
+        live
+    });
+}
+
+fn handle(members: &Mutex<HashMap<String, (u32, Instant)>>, stream: TcpStream) -> Result<()> {
+    stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
+    stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
+    let mut reader = BufReader::new(stream.try_clone().context("registry: clone stream")?);
+    let mut line = String::new();
+    reader.read_line(&mut line).with_context(|| format!("registry: reading from {peer}"))?;
+    let reply = match request(members, &line) {
+        Ok(json) => json,
+        Err(e) => Json::obj(vec![
+            ("type", Json::str("error")),
+            ("message", Json::str(format!("{e:#}"))),
+            ("v", Json::num(PROTO_VERSION as f64)),
+        ]),
+    };
+    let mut stream = stream;
+    stream
+        .write_all(format!("{}\n", reply.to_string_compact()).as_bytes())
+        .with_context(|| format!("registry: answering {peer}"))?;
+    Ok(())
+}
+
+fn request(
+    members: &Mutex<HashMap<String, (u32, Instant)>>,
+    line: &str,
+) -> Result<Json> {
+    let v = Json::parse(line.trim()).map_err(|e| anyhow!("registry request: {e}"))?;
+    match v.get("v").and_then(Json::as_f64) {
+        Some(x) if x as u64 == PROTO_VERSION => {}
+        got => return Err(anyhow::Error::new(VersionSkew { got: got.map(|x| x as u64) })),
+    }
+    let version = ("v", Json::num(PROTO_VERSION as f64));
+    match v.get("type").and_then(Json::as_str) {
+        Some("announce") => {
+            let addr = v
+                .get("addr")
+                .and_then(Json::as_str)
+                .filter(|a| !a.trim().is_empty())
+                .ok_or_else(|| anyhow!("announce: missing \"addr\""))?
+                .trim()
+                .to_string();
+            let slots = v.get("slots").and_then(Json::as_f64).unwrap_or(1.0).max(1.0) as u32;
+            let ttl_ms = v.get("ttl_ms").and_then(Json::as_f64).unwrap_or(15_000.0);
+            let ttl = Duration::from_millis(ttl_ms.clamp(100.0, 3_600_000.0) as u64);
+            let mut m = members.lock().expect("registry members lock");
+            prune(&mut m);
+            if m.insert(addr.clone(), (slots, Instant::now() + ttl)).is_none() {
+                println!("registry: {addr} joined ({slots} slots, lease {ttl:?})");
+            }
+            let n = m.len();
+            Ok(Json::obj(vec![
+                ("type", Json::str("ok")),
+                ("members", Json::num(n as f64)),
+                version,
+            ]))
+        }
+        Some("list") => {
+            let mut m = members.lock().expect("registry members lock");
+            prune(&mut m);
+            let mut agents: Vec<(String, u32)> =
+                m.iter().map(|(a, (s, _))| (a.clone(), *s)).collect();
+            agents.sort();
+            Ok(Json::obj(vec![
+                ("type", Json::str("members")),
+                (
+                    "agents",
+                    Json::Arr(
+                        agents
+                            .into_iter()
+                            .map(|(addr, slots)| {
+                                Json::obj(vec![
+                                    ("addr", Json::str(addr)),
+                                    ("slots", Json::num(slots as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                version,
+            ]))
+        }
+        Some(other) => bail!("registry request: unknown type {other:?}"),
+        None => bail!("registry request: missing \"type\""),
+    }
+}
+
+/// One round trip: connect, send a line, read the answer.
+fn exchange(registry: &str, request: Json) -> Result<Json> {
+    let stream = TcpStream::connect(registry)
+        .with_context(|| format!("connecting to registry {registry}"))?;
+    stream.set_read_timeout(Some(IO_TIMEOUT)).ok();
+    stream.set_write_timeout(Some(IO_TIMEOUT)).ok();
+    let mut writer = stream.try_clone().context("registry: clone stream")?;
+    writer
+        .write_all(format!("{}\n", request.to_string_compact()).as_bytes())
+        .with_context(|| format!("writing to registry {registry}"))?;
+    let mut line = String::new();
+    BufReader::new(stream)
+        .read_line(&mut line)
+        .with_context(|| format!("reading from registry {registry}"))?;
+    if line.trim().is_empty() {
+        bail!("registry {registry} closed the connection without answering");
+    }
+    let v = Json::parse(line.trim())
+        .map_err(|e| anyhow!("registry {registry} answer: {e}"))?;
+    match v.get("v").and_then(Json::as_f64) {
+        Some(x) if x as u64 == PROTO_VERSION => {}
+        got => return Err(anyhow::Error::new(VersionSkew { got: got.map(|x| x as u64) })),
+    }
+    if v.get("type").and_then(Json::as_str) == Some("error") {
+        bail!(
+            "registry {registry} rejected the request: {}",
+            v.get("message").and_then(Json::as_str).unwrap_or("<no message>")
+        );
+    }
+    Ok(v)
+}
+
+/// Announce an agent to the registry: upsert `agent_addr` with `slots`
+/// capacity under a lease of `ttl`.  Called from the agent's announce
+/// loop every `ttl/3`.
+pub fn announce(registry: &str, agent_addr: &str, slots: u32, ttl: Duration) -> Result<()> {
+    exchange(
+        registry,
+        Json::obj(vec![
+            ("type", Json::str("announce")),
+            ("addr", Json::str(agent_addr)),
+            ("slots", Json::num(slots as f64)),
+            ("ttl_ms", Json::num(ttl.as_millis() as f64)),
+            ("v", Json::num(PROTO_VERSION as f64)),
+        ]),
+    )?;
+    Ok(())
+}
+
+/// Resolve the current member set (unexpired leases only, sorted by
+/// address).  Called from the dispatcher's membership poll.
+pub fn members(registry: &str) -> Result<Vec<Member>> {
+    let v = exchange(
+        registry,
+        Json::obj(vec![("type", Json::str("list")), ("v", Json::num(PROTO_VERSION as f64))]),
+    )?;
+    let agents = match v.get("agents").and_then(Json::as_arr) {
+        Some(items) => items,
+        None => bail!("registry {registry}: malformed members answer (no \"agents\" array)"),
+    };
+    agents
+        .iter()
+        .map(|a| {
+            let addr = a
+                .get("addr")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("registry member without \"addr\""))?
+                .to_string();
+            let slots = a.get("slots").and_then(Json::as_f64).unwrap_or(1.0).max(1.0) as u32;
+            Ok(Member { addr, slots })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn announce_list_and_lease_expiry() {
+        let addr = Registry::spawn("127.0.0.1:0").unwrap().to_string();
+        assert!(members(&addr).unwrap().is_empty(), "fresh registry has no members");
+
+        announce(&addr, "10.0.0.1:7070", 4, Duration::from_secs(30)).unwrap();
+        announce(&addr, "10.0.0.2:7070", 2, Duration::from_millis(150)).unwrap();
+        let m = members(&addr).unwrap();
+        assert_eq!(
+            m,
+            vec![
+                Member { addr: "10.0.0.1:7070".into(), slots: 4 },
+                Member { addr: "10.0.0.2:7070".into(), slots: 2 },
+            ],
+            "members are sorted by address"
+        );
+
+        // re-announcing refreshes in place, never duplicates
+        announce(&addr, "10.0.0.1:7070", 6, Duration::from_secs(30)).unwrap();
+        let m = members(&addr).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0], Member { addr: "10.0.0.1:7070".into(), slots: 6 });
+
+        // the short lease ages out; the long one survives
+        std::thread::sleep(Duration::from_millis(300));
+        let m = members(&addr).unwrap();
+        assert_eq!(m.len(), 1, "expired lease must be pruned: {m:?}");
+        assert_eq!(m[0].addr, "10.0.0.1:7070");
+    }
+
+    #[test]
+    fn malformed_and_version_skewed_requests_are_rejected_clearly() {
+        let addr = Registry::spawn("127.0.0.1:0").unwrap().to_string();
+
+        // a bad request is answered with a typed error line, and the
+        // registry keeps serving afterwards
+        let err = exchange(
+            &addr,
+            Json::obj(vec![("type", Json::str("warp")), ("v", Json::num(PROTO_VERSION as f64))]),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown type"), "{err:#}");
+
+        // an unversioned peer gets the skew diagnosis end to end
+        let err = exchange(&addr, Json::obj(vec![("type", Json::str("list"))])).unwrap_err();
+        assert!(format!("{err:#}").contains("version skew"), "{err:#}");
+
+        // announcing without an address is rejected, not stored
+        let err = announce(&addr, "   ", 1, Duration::from_secs(1)).unwrap_err();
+        assert!(format!("{err:#}").contains("addr"), "{err:#}");
+        assert!(members(&addr).unwrap().is_empty());
+
+        // and a normal request still works after all that
+        announce(&addr, "10.0.0.3:7070", 1, Duration::from_secs(5)).unwrap();
+        assert_eq!(members(&addr).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn unreachable_registry_is_a_clear_connect_error() {
+        // bind-then-drop to find a port that is very likely closed
+        let port = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let err = members(&format!("127.0.0.1:{port}")).unwrap_err();
+        assert!(format!("{err:#}").contains("connecting to registry"), "{err:#}");
+    }
+}

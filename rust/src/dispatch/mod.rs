@@ -21,6 +21,17 @@
 //! wait → kill); the cache probe runs on the pool's own threads; and
 //! [`runcache::RunCache::gc`] bounds long-lived cache directories.
 //!
+//! The remote side is elastic (see [`fleet`]): agents announce
+//! themselves to a registry (`--fleet ADDR`) and the dispatcher adds
+//! slot threads as members join mid-campaign; a dropped agent is
+//! redialed under capped exponential backoff with jitter
+//! ([`fleet::Backoff`]); warm-start snapshots the agent lacks are
+//! pulled content-addressed over `BlobRequest`/`Blob` frames
+//! ([`fleet::blobs`]); sessions authenticate by challenge-response
+//! ([`proto::auth_proof`] — the shared token never travels the wire);
+//! and an orphaned in-flight run is killed with a `cancel` frame
+//! instead of silently training to completion.
+//!
 //! Layering: `experiment` (describe) → `dispatch` (schedule, memoize,
 //! transport) → `coordinator` (execute one run).  The coordinator knows
 //! nothing about caching or subprocesses; campaigns know nothing about
@@ -48,11 +59,13 @@
 //! --cache-dir` gives all six figure campaigns memoization without
 //! touching their definitions.
 
+pub mod fleet;
 pub mod net;
 pub mod pool;
 pub mod proto;
 pub mod runcache;
 
+pub use fleet::{Backoff, BlobCatalog, BlobStore, Registry, RetryBudgetExhausted};
 pub use net::{Agent, AgentConfig, RemoteAgentClient};
 pub use pool::{DispatchOptions, DispatchedRun, Dispatcher, WorkerKind, WorkerPool};
 pub use runcache::{cfg_digest, GcPlan, GcPolicy, GcStats, GcVictim, RunCache};

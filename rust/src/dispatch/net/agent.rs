@@ -1,9 +1,13 @@
 //! The `adpsgd agent` daemon: remote run capacity behind one TCP port.
 //!
 //! An agent accepts dispatcher connections, authenticates each with the
-//! `Hello`/`HelloAck` handshake (protocol version — enforced by frame
-//! parsing — plus an optional shared-secret token), advertises its slot
-//! capacity, and then serves [`Frame::RunRequest`]s concurrently:
+//! challenge-response handshake (the agent opens with a fresh
+//! [`Frame::Challenge`] nonce; the client answers [`Frame::Hello`] with
+//! the keyed digest [`auth_proof`] of the shared token over that nonce,
+//! so the secret never travels the wire; protocol version is enforced
+//! by frame parsing), advertises its slot capacity with
+//! [`Frame::HelloAck`], and then serves [`Frame::RunRequest`]s
+//! concurrently:
 //! every request gets its own handler thread (at most `slots` in
 //! flight per connection — requests past the advertised capacity are
 //! refused with an `Error` frame — with execution additionally bounded
@@ -29,18 +33,39 @@
 //! [`RunCache`] before executing, so a warm agent
 //! answers repeats from disk without recomputation (and caches what it
 //! does compute) — cache hits are logged, and the verify script asserts
-//! them on its warm re-run.
+//! them on its warm re-run.  `--cache-max-bytes` bounds that cache (and
+//! the agent's blob store) with [`RunCache::gc`] at startup and after
+//! every session closes, so long-lived agents don't grow unboundedly.
+//!
+//! Fleet duties (see [`crate::dispatch::fleet`]): with `--fleet ADDR`
+//! the agent announces itself to the registry under a liveness lease
+//! and re-announces on a cadence, so dispatchers discover it without a
+//! static `--remote` list.  A run config whose `init_from` is a
+//! `blob:<digest>` reference is resolved from the agent's
+//! [`BlobStore`], pulled from the dispatcher over
+//! [`Frame::BlobRequest`]/[`Frame::Blob`] on a miss (after the cache
+//! probe — a warm agent never pulls bytes it won't use).  A
+//! [`Frame::Cancel`] kills the worker child executing that request, as
+//! does a failed heartbeat write (the client is gone — nobody will read
+//! the result), so orphaned runs never silently train to completion.
 
+use crate::dispatch::fleet::{self, BlobStore};
 use crate::dispatch::net::transport;
 use crate::dispatch::pool::{Outcome, WorkerPool};
-use crate::dispatch::proto::{Frame, HEARTBEAT_EVERY};
-use crate::dispatch::runcache::RunCache;
+use crate::dispatch::proto::{auth_proof, Frame, HEARTBEAT_EVERY};
+use crate::dispatch::runcache::{GcPolicy, RunCache};
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Liveness lease an announcing agent asks the registry for; the agent
+/// re-announces every third of this, so two consecutive announce
+/// failures still leave the lease intact.
+pub const ANNOUNCE_TTL: Duration = Duration::from_secs(15);
 
 /// How an agent serves (CLI: `adpsgd agent`).
 #[derive(Debug, Clone)]
@@ -64,6 +89,16 @@ pub struct AgentConfig {
     /// Supervision deadline for the agent's worker children — the same
     /// meaning as `DispatchOptions::heartbeat_timeout` locally.
     pub heartbeat_timeout: Duration,
+    /// Size bound for the agent's run cache and blob store, enforced at
+    /// startup and after every session closes.  `None` = unbounded.
+    pub cache_max_bytes: Option<u64>,
+    /// Fleet registry to announce to (`--fleet host:port`); `None`
+    /// serves only statically-configured dispatchers.
+    pub fleet: Option<String>,
+    /// The address announced to the registry; defaults to the bound
+    /// listen address (override when binding `0.0.0.0` behind NAT or
+    /// a distinct external name).
+    pub advertise: Option<String>,
 }
 
 impl Default for AgentConfig {
@@ -75,6 +110,9 @@ impl Default for AgentConfig {
             cache_dir: None,
             worker_exe: None,
             heartbeat_timeout: HEARTBEAT_EVERY * 20,
+            cache_max_bytes: None,
+            fleet: None,
+            advertise: None,
         }
     }
 }
@@ -115,11 +153,108 @@ struct Shared {
     cfg: AgentConfig,
     pool: Arc<WorkerPool>,
     cache: Option<RunCache>,
+    /// content-addressed store for artifacts pulled over `BlobRequest`
+    /// (under the cache dir, or a per-port temp dir without one)
+    blobs: BlobStore,
     slots: Slots,
     /// observability: runs answered from the agent's own cache
     cache_hits: Arc<AtomicUsize>,
     /// observability: total runs answered (any outcome)
     served: Arc<AtomicUsize>,
+}
+
+impl Shared {
+    /// Bound the run cache and blob store to `cache_max_bytes` (no-op
+    /// without a bound).  Called at startup and at session close, so a
+    /// long-lived agent stays bounded between campaigns.
+    fn run_gc(&self, when: &str) {
+        let Some(max) = self.cfg.cache_max_bytes else { return };
+        if let Some(cache) = &self.cache {
+            match cache.gc(&GcPolicy { max_bytes: Some(max), ..GcPolicy::default() }) {
+                Ok(stats) if stats.evicted > 0 || stats.tmp_swept > 0 => println!(
+                    "agent: cache gc ({when}): evicted {} entries ({} bytes), kept {}, \
+                     swept {} tmp",
+                    stats.evicted, stats.evicted_bytes, stats.kept, stats.tmp_swept
+                ),
+                Ok(_) => {}
+                Err(e) => eprintln!("agent: note: cache gc failed: {e:#}"),
+            }
+        }
+        match self.blobs.gc(max) {
+            Ok((evicted, freed)) if evicted > 0 => println!(
+                "agent: blob gc ({when}): evicted {evicted} blobs ({freed} bytes)"
+            ),
+            Ok(_) => {}
+            Err(e) => eprintln!("agent: note: blob gc failed: {e:#}"),
+        }
+    }
+}
+
+/// Per-connection state the session loop and run handlers share:
+/// request ids are scoped to a connection (two dispatchers may both be
+/// on id 1), so the routing tables must be too.
+struct Session {
+    writer: Arc<Mutex<TcpStream>>,
+    /// run handlers waiting for a `Blob`/`Error` answer to their
+    /// `BlobRequest`, keyed by request id
+    blob_waits: Mutex<HashMap<u64, mpsc::Sender<Frame>>>,
+    /// worker-child pid per in-flight request id, for `Cancel` and for
+    /// the orphan kill when a heartbeat write finds the client gone
+    children: Mutex<HashMap<u64, u32>>,
+    /// requests cancelled before (or while) they held a child
+    cancelled: Mutex<std::collections::HashSet<u64>>,
+}
+
+impl Session {
+    fn new(writer: Arc<Mutex<TcpStream>>) -> Session {
+        Session {
+            writer,
+            blob_waits: Mutex::new(HashMap::new()),
+            children: Mutex::new(HashMap::new()),
+            cancelled: Mutex::new(std::collections::HashSet::new()),
+        }
+    }
+
+    /// Kill the worker child executing request `id`, if any — the
+    /// `Cancel` path and the orphaned-run path both land here.
+    fn kill_child_of(&self, id: u64) {
+        let pid = self.children.lock().expect("agent children").get(&id).copied();
+        if let Some(pid) = pid {
+            println!("agent: killing worker child {pid} (run id {id} abandoned)");
+            kill_pid(pid);
+        }
+    }
+}
+
+/// Best-effort SIGTERM by pid (the child is ours, but it is checked out
+/// by a handler thread that is blocked reading from it, so the kill has
+/// to go around the `WorkerClient` handle).
+fn kill_pid(pid: u32) {
+    let _ = std::process::Command::new("sh")
+        .arg("-c")
+        .arg(format!("kill {pid} 2>/dev/null"))
+        .status();
+}
+
+/// A nonce for one connection's challenge: unique per (process, time,
+/// connection) so a captured proof is useless against any later
+/// handshake.
+fn fresh_nonce(peer: &SocketAddr) -> String {
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos())
+        .unwrap_or(0);
+    crate::dispatch::runcache::content_digest(
+        format!(
+            "nonce\n{}\n{}\n{}\n{}",
+            std::process::id(),
+            t,
+            COUNTER.fetch_add(1, Ordering::Relaxed),
+            peer
+        )
+        .as_bytes(),
+    )
 }
 
 /// A bound (but not yet serving) agent.
@@ -148,19 +283,32 @@ impl Agent {
             .with_context(|| format!("binding agent listener on {}", cfg.listen))?;
         let addr = listener.local_addr().context("reading bound agent address")?;
         let cache = cfg.cache_dir.as_ref().map(RunCache::new);
+        let blobs = match &cfg.cache_dir {
+            Some(dir) => BlobStore::under_cache(dir),
+            // no cache dir: staged artifacts still need to land
+            // somewhere; the port keeps concurrent agents apart
+            None => BlobStore::new(
+                std::env::temp_dir().join(format!("adpsgd_agent_blobs_{}", addr.port())),
+            ),
+        };
         let slots = Slots::new(cfg.slots);
-        Ok(Agent {
+        let agent = Agent {
             listener,
             addr,
             shared: Arc::new(Shared {
                 pool,
                 cache,
+                blobs,
                 slots,
                 cfg,
                 cache_hits: Arc::new(AtomicUsize::new(0)),
                 served: Arc::new(AtomicUsize::new(0)),
             }),
-        })
+        };
+        // a long-lived agent restarting onto an old cache dir bounds it
+        // before serving anything
+        agent.shared.run_gc("startup");
+        Ok(agent)
     }
 
     /// The bound address (resolves `--listen host:0`).
@@ -194,6 +342,16 @@ impl Agent {
                 .map(|d| d.display().to_string())
                 .unwrap_or_else(|| "disabled".into()),
         );
+        if let Some(registry) = self.shared.cfg.fleet.clone() {
+            let advertise = self
+                .shared
+                .cfg
+                .advertise
+                .clone()
+                .unwrap_or_else(|| self.addr.to_string());
+            let slots = self.shared.cfg.slots as u32;
+            std::thread::spawn(move || announce_loop(&registry, &advertise, slots));
+        }
         loop {
             match self.listener.accept() {
                 Ok((stream, peer)) => {
@@ -222,6 +380,31 @@ impl Agent {
             }
         });
         Ok(addr)
+    }
+}
+
+/// Re-announce to the fleet registry every [`ANNOUNCE_TTL`]/3 for the
+/// life of the process.  Announce failures are logged on the first
+/// failure and on recovery, not every beat — a registry restart is
+/// routine, and the lease machinery already tolerates missed beats.
+fn announce_loop(registry: &str, advertise: &str, slots: u32) {
+    let mut down = false;
+    loop {
+        match fleet::registry::announce(registry, advertise, slots, ANNOUNCE_TTL) {
+            Ok(()) => {
+                if down {
+                    println!("agent: re-announced to registry {registry}");
+                }
+                down = false;
+            }
+            Err(e) => {
+                if !down {
+                    eprintln!("agent: note: announce to registry {registry} failed: {e:#}");
+                }
+                down = true;
+            }
+        }
+        std::thread::sleep(ANNOUNCE_TTL / 3);
     }
 }
 
@@ -256,20 +439,30 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream, peer: SocketAddr) {
     };
     let mut reader = std::io::BufReader::new(stream);
 
-    // -- handshake: exactly one Hello, token-checked, then HelloAck ----
+    // -- handshake: challenge out, exactly one proof back, HelloAck ----
+    // the agent speaks first: a fresh nonce the client must answer with
+    // the keyed digest of the shared token (auth_proof) — the token
+    // itself never travels, and a proof captured off the wire is bound
+    // to this nonce and useless against the next connection
     if let Err(e) = reader.get_ref().set_read_timeout(Some(super::HANDSHAKE_TIMEOUT)) {
         eprintln!("agent: note: could not arm handshake timeout for {peer}: {e}");
         return;
     }
+    let nonce = fresh_nonce(&peer);
+    if send(&writer, &Frame::Challenge { nonce: nonce.clone() }).is_err() {
+        return;
+    }
     match transport::read_frame(&mut reader) {
-        Ok(Some(Frame::Hello { token })) => {
-            let want = shared.cfg.token.as_deref().unwrap_or("");
-            if !want.is_empty() && token != want {
+        Ok(Some(Frame::Hello { proof })) => {
+            let want = auth_proof(&nonce, shared.cfg.token.as_deref().unwrap_or(""));
+            if proof != want {
                 let _ = send(
                     &writer,
                     &Frame::Error {
                         id: 0,
-                        message: "agent: invalid or missing shared-secret token".into(),
+                        message: "agent: authentication failed (invalid or missing \
+                                  shared-secret token)"
+                            .into(),
                     },
                 );
                 println!("agent: rejected {peer} (bad token)");
@@ -285,7 +478,7 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream, peer: SocketAddr) {
                 &Frame::Error {
                     id: 0,
                     message: format!(
-                        "agent: expected a hello frame to open the session, got a {} frame",
+                        "agent: expected a hello proof to open the session, got a {} frame",
                         other.kind()
                     ),
                 },
@@ -315,6 +508,7 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream, peer: SocketAddr) {
     // flight per connection (that is exactly what HelloAck advertised);
     // bounding it here keeps a defective or abusive client from
     // pinning an unbounded number of handler+pump threads
+    let session = Arc::new(Session::new(Arc::clone(&writer)));
     let in_flight = Arc::new(AtomicUsize::new(0));
     loop {
         match transport::read_frame(&mut reader) {
@@ -335,9 +529,32 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream, peer: SocketAddr) {
                     continue;
                 }
                 let shared = Arc::clone(&shared);
-                let writer = Arc::clone(&writer);
+                let session = Arc::clone(&session);
                 let in_flight = Arc::clone(&in_flight);
-                std::thread::spawn(move || serve_run(shared, writer, peer, id, cfg, in_flight));
+                std::thread::spawn(move || serve_run(shared, session, peer, id, cfg, in_flight));
+            }
+            Ok(Some(Frame::Cancel { id })) => {
+                // the dispatcher no longer wants this run (its campaign
+                // aborted): remember the id for handlers still queued on
+                // the slot semaphore, and kill any worker child already
+                // executing it
+                println!("agent: cancel received for run id {id} ({peer})");
+                session.cancelled.lock().expect("agent cancelled").insert(id);
+                session.kill_child_of(id);
+            }
+            Ok(Some(frame @ (Frame::Blob { .. } | Frame::Error { .. }))) => {
+                // an answer to a handler's BlobRequest: route it by id
+                let id = frame.id();
+                let tx = session.blob_waits.lock().expect("agent blob waits").remove(&id);
+                match tx {
+                    Some(tx) => {
+                        let _ = tx.send(frame);
+                    }
+                    None => eprintln!(
+                        "agent: note: unsolicited {} frame (id {id}) from {peer}",
+                        frame.kind()
+                    ),
+                }
             }
             Ok(Some(other)) => {
                 let _ = send(
@@ -369,14 +586,17 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream, peer: SocketAddr) {
     // write timeout
     reader.get_ref().shutdown(std::net::Shutdown::Both).ok();
     println!("agent: session with {peer} closed");
+    // campaign boundary for a long-lived agent: bound the cache and the
+    // blob store it just grew
+    shared.run_gc("session close");
 }
 
 /// One run request end to end: heartbeat pump from the moment the
-/// request exists, slot acquisition, agent-cache probe, execution in a
-/// warm worker child, terminal frame.
+/// request exists, blob staging, slot acquisition, agent-cache probe,
+/// execution in a warm worker child, terminal frame.
 fn serve_run(
     shared: Arc<Shared>,
-    writer: Arc<Mutex<TcpStream>>,
+    session: Arc<Session>,
     peer: SocketAddr,
     id: u64,
     cfg: crate::config::ExperimentConfig,
@@ -387,23 +607,25 @@ fn serve_run(
     let started = Instant::now();
     // when a heartbeat write fails the client is gone (disconnected,
     // lease killed): handlers still queued on the slot semaphore skip
-    // execution instead of computing for nobody
+    // execution instead of computing for nobody, and a child already
+    // executing is killed — nobody will ever read its result
     let client_gone = Arc::new(std::sync::atomic::AtomicBool::new(false));
     let (frame, note) = {
         // prove liveness from request receipt: slot waits and cache
         // parses re-arm the dispatcher's deadline too, exactly like a
         // busy child (the shared pump stops+joins when the guard drops,
         // or early if the client is gone)
-        let writer = Arc::clone(&writer);
+        let pump_session = Arc::clone(&session);
         let gone = Arc::clone(&client_gone);
         let _pump = crate::dispatch::proto::heartbeat_pump(move || {
-            let ok = send(&writer, &Frame::Heartbeat { id }).is_ok();
+            let ok = send(&pump_session.writer, &Frame::Heartbeat { id }).is_ok();
             if !ok {
                 gone.store(true, Ordering::SeqCst);
+                pump_session.kill_child_of(id);
             }
             ok
         });
-        execute(&shared, id, cfg, &client_gone)
+        execute(&shared, &session, id, cfg, &client_gone)
     };
     shared.served.fetch_add(1, Ordering::Relaxed);
     // release the connection's in-flight slot BEFORE the terminal frame
@@ -411,7 +633,7 @@ fn serve_run(
     // the result, and its next request must never race the decrement
     // into a spurious over-capacity rejection
     in_flight.fetch_sub(1, Ordering::SeqCst);
-    match send(&writer, &frame) {
+    match send(&session.writer, &frame) {
         Ok(()) => println!(
             "agent: run {label:?} {note} in {:.2}s (id {id})",
             started.elapsed().as_secs_f64()
@@ -422,16 +644,87 @@ fn serve_run(
     }
 }
 
-/// Probe the agent cache, else execute in a warm worker child; map the
-/// outcome onto its terminal frame (plus a log tag).  A run whose
-/// client vanished while it waited for a slot is abandoned without
-/// executing; a run already inside a worker child runs to completion
-/// (and, with a cache configured, its result is cached — a retried
-/// campaign then hits it instead of recomputing).
+/// Resolve a `blob:<digest>` reference to a staged local path: the
+/// store answers immediately when warm; otherwise the handler asks the
+/// dispatcher over `BlobRequest` and blocks (bounded by the heartbeat
+/// timeout — the pump keeps the dispatcher's own deadline armed
+/// throughout) until the session loop routes the `Blob` answer back.
+/// On failure, the terminal frame to answer the run with.
+fn stage_blob(
+    shared: &Shared,
+    session: &Session,
+    id: u64,
+    digest: &str,
+) -> std::result::Result<PathBuf, (Frame, &'static str)> {
+    if let Some(path) = shared.blobs.get(digest) {
+        return Ok(path);
+    }
+    let (tx, rx) = mpsc::channel();
+    session.blob_waits.lock().expect("agent blob waits").insert(id, tx);
+    if let Err(e) = send(&session.writer, &Frame::BlobRequest { id, digest: digest.into() }) {
+        session.blob_waits.lock().expect("agent blob waits").remove(&id);
+        return Err((
+            Frame::Crashed { id, message: format!("agent: requesting blob {digest}: {e:#}") },
+            "crashed (blob request)",
+        ));
+    }
+    let answer = rx.recv_timeout(shared.cfg.heartbeat_timeout);
+    session.blob_waits.lock().expect("agent blob waits").remove(&id);
+    match answer {
+        Ok(Frame::Blob { bytes, .. }) => match shared.blobs.put(digest, &bytes) {
+            Ok(path) => {
+                println!("agent: staged blob {digest} ({} bytes, run id {id})", bytes.len());
+                Ok(path)
+            }
+            // a digest mismatch here means the dispatcher shipped the
+            // wrong bytes — deterministic, not retryable
+            Err(e) => Err((
+                Frame::Error { id, message: format!("agent: storing blob {digest}: {e:#}") },
+                "failed (blob store)",
+            )),
+        },
+        Ok(Frame::Error { message, .. }) => Err((
+            Frame::Error {
+                id,
+                message: format!("agent: dispatcher could not supply blob {digest}: {message}"),
+            },
+            "failed (blob refused)",
+        )),
+        Ok(other) => Err((
+            Frame::Error {
+                id,
+                message: format!(
+                    "agent: unexpected {} frame answering blob request {digest}",
+                    other.kind()
+                ),
+            },
+            "failed (blob protocol)",
+        )),
+        Err(_) => Err((
+            Frame::Crashed {
+                id,
+                message: format!("agent: timed out waiting for blob {digest} from the dispatcher"),
+            },
+            "crashed (blob timeout)",
+        )),
+    }
+}
+
+/// Probe the agent cache, stage any `blob:` warm-start reference, else
+/// execute in a warm worker child; map the outcome onto its terminal
+/// frame (plus a log tag).  The cache probe comes *first* — the `blob:`
+/// scheme hashes by digest, so a warm agent answers without pulling a
+/// byte — and staging comes *before* the slot acquire, because the pull
+/// is network-bound and must not hold compute capacity.  A run whose
+/// client vanished (or that was cancelled) while it waited for a slot
+/// is abandoned without executing; a child already executing when its
+/// run is orphaned or cancelled is killed by the session/pump paths and
+/// surfaces here as `Crashed`.
 fn execute(
     shared: &Shared,
+    session: &Session,
     id: u64,
-    cfg: crate::config::ExperimentConfig,
+    mut cfg: crate::config::ExperimentConfig,
     client_gone: &std::sync::atomic::AtomicBool,
 ) -> (Frame, &'static str) {
     let mut key: Option<(String, String)> = None;
@@ -452,6 +745,14 @@ fn execute(
             }
         }
     }
+    let blob_ref =
+        cfg.init_from.strip_prefix(fleet::blobs::BLOB_SCHEME).map(str::to_string);
+    if let Some(digest) = blob_ref {
+        match stage_blob(shared, session, id, &digest) {
+            Ok(path) => cfg.init_from = path.display().to_string(),
+            Err(terminal) => return terminal,
+        }
+    }
     let _permit = shared.slots.acquire();
     if client_gone.load(Ordering::SeqCst) {
         // the slot wait outlived the session: don't burn a worker on a
@@ -459,6 +760,12 @@ fn execute(
         return (
             Frame::Crashed { id, message: "agent: client disconnected before the run started".into() },
             "abandoned (client gone)",
+        );
+    }
+    if session.cancelled.lock().expect("agent cancelled").contains(&id) {
+        return (
+            Frame::Crashed { id, message: "agent: run cancelled by the dispatcher".into() },
+            "abandoned (cancelled)",
         );
     }
     let mut client = match shared.pool.checkout(shared.cfg.worker_exe.as_deref()) {
@@ -470,7 +777,11 @@ fn execute(
             )
         }
     };
-    match client.run(&cfg, shared.cfg.heartbeat_timeout) {
+    // register the child for Cancel / orphan kill while it executes
+    session.children.lock().expect("agent children").insert(id, client.pid());
+    let outcome = client.run(&cfg, shared.cfg.heartbeat_timeout);
+    session.children.lock().expect("agent children").remove(&id);
+    match outcome {
         Outcome::Done(report) => {
             if let (Some(cache), Some((digest, canonical))) = (&shared.cache, &key) {
                 if let Err(e) = cache.put(digest, canonical, &report) {
@@ -487,7 +798,9 @@ fn execute(
         }
         Outcome::Crashed(e) => {
             // dropping the client reaps the dead/hung child and prunes
-            // its pid; the dispatcher decides whether to retry
+            // its pid; the dispatcher decides whether to retry (a child
+            // we killed for a Cancel lands here too — harmless, the
+            // cancelling dispatcher has already forgotten the id)
             drop(client);
             (Frame::Crashed { id, message: format!("{e:#}") }, "crashed (worker lost)")
         }

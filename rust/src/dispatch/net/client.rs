@@ -13,9 +13,10 @@
 //! Terminal frames that surface for an id no slot is waiting on are
 //! discarded as stale, never misclassified as protocol violations.
 
+use crate::dispatch::fleet::BlobCatalog;
 use crate::dispatch::net::transport;
 use crate::dispatch::pool::Outcome;
-use crate::dispatch::proto::Frame;
+use crate::dispatch::proto::{auth_proof, Frame};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::io::Write;
@@ -76,10 +77,14 @@ impl Drop for PendingGuard<'_> {
 }
 
 impl RemoteAgentClient {
-    /// Connect to `addr` and perform the `Hello`/`HelloAck` handshake.
-    /// Failures here are loud configuration errors with the cause
-    /// spelled out: unreachable host, rejected token, version skew, or
-    /// a peer that is not an adpsgd agent.
+    /// Connect to `addr` and perform the challenge-response handshake:
+    /// the agent opens with a nonce [`Frame::Challenge`], the client
+    /// answers [`Frame::Hello`] with the keyed digest of the shared
+    /// token over that nonce ([`auth_proof`] — the secret itself never
+    /// travels the wire), and the agent acknowledges with its slot
+    /// capacity.  Failures here are loud configuration errors with the
+    /// cause spelled out: unreachable host, rejected token, version
+    /// skew, or a peer that is not an adpsgd agent.
     pub fn connect(
         addr: &str,
         token: Option<&str>,
@@ -122,13 +127,30 @@ impl RemoteAgentClient {
         stream
             .set_read_timeout(Some(handshake_timeout))
             .context("arming handshake timeout")?;
+        let mut reader = stream.try_clone().context("cloning agent stream")?;
+        // the agent speaks first: a fresh nonce the token is proved
+        // against (an eavesdropper sees only a nonce-bound digest,
+        // useless for any later connection)
+        let challenge = transport::read_frame(&mut reader)
+            .with_context(|| format!("handshake with agent {addr}"))?;
+        let nonce = match challenge {
+            Some(Frame::Challenge { nonce }) => nonce,
+            Some(Frame::Error { message, .. }) => {
+                bail!("agent {addr} rejected the connection: {message}")
+            }
+            Some(other) => bail!(
+                "agent {addr} opened the handshake with an unexpected {} frame \
+                 (expected a challenge)",
+                other.kind()
+            ),
+            None => bail!("agent {addr} closed the connection during the handshake"),
+        };
         let mut writer = stream.try_clone().context("cloning agent stream")?;
         transport::write_frame(
             &mut writer,
-            &Frame::Hello { token: token.unwrap_or("").to_string() },
+            &Frame::Hello { proof: auth_proof(&nonce, token.unwrap_or("")) },
         )
         .with_context(|| format!("greeting agent {addr}"))?;
-        let mut reader = stream.try_clone().context("cloning agent stream")?;
         let ack = transport::read_frame(&mut reader)
             .with_context(|| format!("handshake with agent {addr}"))?;
         let slots = match ack {
@@ -236,6 +258,16 @@ impl RemoteAgentClient {
         self.stream.shutdown(Shutdown::Both).ok();
     }
 
+    /// Write one frame under the writer lock (encoding outside it, so
+    /// concurrent slots' frames never interleave mid-payload).
+    fn send_frame(&self, frame: &Frame) -> Result<()> {
+        let bytes = transport::encode_frame(frame)?;
+        let mut w = self.writer.lock().expect("remote writer");
+        w.write_all(&bytes)
+            .and_then(|()| w.flush())
+            .with_context(|| format!("writing to agent {}", self.addr))
+    }
+
     /// Submit one run and wait for its terminal frame under the
     /// heartbeat deadline — the remote mirror of the subprocess
     /// client's supervision.  Heartbeats (and raw byte progress on the
@@ -244,10 +276,19 @@ impl RemoteAgentClient {
     /// (the agent's executor died) and every transport defect are
     /// retryable crashes; total silence past the deadline kills the
     /// lease.
+    ///
+    /// Two fleet duties ride the same wait loop: a `BlobRequest` from
+    /// the agent (it lacks a staged artifact this run references) is
+    /// answered from `blobs` on the same id, and when `aborted` flips
+    /// the slot sends [`Frame::Cancel`] so the agent kills the orphaned
+    /// worker child instead of letting it train to completion for a
+    /// campaign that no longer exists.
     pub(crate) fn run(
         &self,
         cfg: &crate::config::ExperimentConfig,
         heartbeat_timeout: Duration,
+        blobs: &BlobCatalog,
+        aborted: &AtomicBool,
     ) -> Outcome {
         if self.is_dead() {
             return Outcome::Crashed(anyhow!("agent {} connection already lost", self.addr));
@@ -286,10 +327,28 @@ impl RemoteAgentClient {
         let mut deadline = Instant::now() + heartbeat_timeout;
         let mut seen_tick = self.rx_tick.load(Ordering::Relaxed);
         loop {
-            let wait = deadline.saturating_duration_since(Instant::now());
+            // wake at least every 250ms so a campaign abort turns into
+            // a prompt Cancel instead of waiting out the deadline
+            let wait = deadline
+                .saturating_duration_since(Instant::now())
+                .min(Duration::from_millis(250));
             let frame = match rx.recv_timeout(wait) {
                 Ok(frame) => frame,
                 Err(RecvTimeoutError::Timeout) => {
+                    if aborted.load(Ordering::SeqCst) {
+                        // the campaign is over: tell the agent to kill
+                        // the orphaned worker child — nobody will ever
+                        // read its result
+                        let _ = self.send_frame(&Frame::Cancel { id });
+                        return Outcome::Crashed(anyhow!(
+                            "run id {id} abandoned (campaign aborted); \
+                             cancel sent to agent {}",
+                            self.addr
+                        ));
+                    }
+                    if Instant::now() < deadline {
+                        continue;
+                    }
                     // no complete frame — but byte progress counts as
                     // liveness too: a multi-MB terminal frame crossing a
                     // slow link (which also blocks sibling heartbeats
@@ -320,6 +379,31 @@ impl RemoteAgentClient {
             deadline = Instant::now() + heartbeat_timeout;
             match frame {
                 Frame::Heartbeat { .. } => continue,
+                Frame::BlobRequest { digest, .. } => {
+                    // the agent lacks an artifact this run references:
+                    // answer on the same id from the catalog (a digest
+                    // we never staged gets an Error the agent surfaces
+                    // as the run's own failure)
+                    let answer = match blobs.read(&digest) {
+                        Ok(bytes) => {
+                            println!(
+                                "dispatch: staging blob {digest} ({} bytes) to agent {}",
+                                bytes.len(),
+                                self.addr
+                            );
+                            Frame::Blob { id, tag: digest.clone(), bytes }
+                        }
+                        Err(e) => Frame::Error { id, message: format!("{e:#}") },
+                    };
+                    if let Err(e) = self.send_frame(&answer) {
+                        self.kill("write failed");
+                        return Outcome::Crashed(anyhow!(
+                            "agent {} connection lost while staging blob {digest}: {e:#}",
+                            self.addr
+                        ));
+                    }
+                    continue;
+                }
                 Frame::RunResult { report, .. } => return Outcome::Done(report),
                 Frame::Error { message, .. } => {
                     return Outcome::RunFailed(anyhow!("{message}"))
@@ -360,13 +444,25 @@ mod tests {
     use crate::dispatch::proto::VersionSkew;
     use std::net::TcpListener;
 
-    /// A fake peer that answers the handshake with raw bytes.
+    fn raw_frame(json: &str) -> Vec<u8> {
+        let mut buf = (json.len() as u32).to_be_bytes().to_vec();
+        buf.extend_from_slice(json.as_bytes());
+        buf
+    }
+
+    /// A fake agent that opens with a well-formed challenge, drains the
+    /// client's proof, then answers the handshake with raw bytes.
     fn fake_agent(response: &'static [u8]) -> String {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         std::thread::spawn(move || {
             if let Ok((mut s, _)) = listener.accept() {
-                // drain the hello so the client's write cannot fail first
+                let challenge =
+                    (Frame::Challenge { nonce: "fake-nonce".into() }).to_line().unwrap();
+                let _ = s.write_all(&raw_frame(&challenge));
+                let _ = s.flush();
+                // drain the hello proof so the client's write cannot
+                // fail before it sees our response
                 let _ = transport::read_frame(&mut s.try_clone().unwrap());
                 let _ = s.write_all(response);
                 let _ = s.flush();
@@ -376,10 +472,20 @@ mod tests {
         addr
     }
 
-    fn raw_frame(json: &str) -> Vec<u8> {
-        let mut buf = (json.len() as u32).to_be_bytes().to_vec();
-        buf.extend_from_slice(json.as_bytes());
-        buf
+    /// A fake peer that writes raw bytes the moment the connection
+    /// opens (the client reads the challenge first now, so a skewed or
+    /// defective peer surfaces on that very first frame).
+    fn fake_raw_peer(first: &'static [u8]) -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            if let Ok((mut s, _)) = listener.accept() {
+                let _ = s.write_all(first);
+                let _ = s.flush();
+                std::thread::sleep(Duration::from_millis(200));
+            }
+        });
+        addr
     }
 
     #[test]
@@ -396,15 +502,56 @@ mod tests {
     #[test]
     fn handshake_version_skew_is_a_clear_error() {
         let bytes: &'static [u8] = Box::leak(
-            raw_frame("{\"type\":\"hello_ack\",\"slots\":2,\"v\":1}").into_boxed_slice(),
+            raw_frame("{\"type\":\"challenge\",\"nonce\":\"n\",\"v\":1}").into_boxed_slice(),
         );
-        let addr = fake_agent(bytes);
+        let addr = fake_raw_peer(bytes);
         let err = RemoteAgentClient::connect(&addr, None, Duration::from_secs(5))
             .err()
             .expect("a version-skewed peer must be rejected");
         let msg = format!("{err:#}");
         assert!(msg.contains("protocol version skew"), "{msg}");
         assert!(err.is::<VersionSkew>(), "{msg}");
+    }
+
+    #[test]
+    fn handshake_answers_the_challenge_without_leaking_the_token() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let (tx, rx) = mpsc::channel::<Vec<u8>>();
+        std::thread::spawn(move || {
+            if let Ok((mut s, _)) = listener.accept() {
+                let challenge =
+                    (Frame::Challenge { nonce: "nonce-xyz".into() }).to_line().unwrap();
+                let _ = s.write_all(&raw_frame(&challenge));
+                let _ = s.flush();
+                // capture the client's answer as raw wire bytes
+                use std::io::Read;
+                let mut len = [0u8; 4];
+                if s.read_exact(&mut len).is_ok() {
+                    let mut body = vec![0u8; u32::from_be_bytes(len) as usize];
+                    if s.read_exact(&mut body).is_ok() {
+                        let _ = tx.send(body);
+                    }
+                }
+                let ack = (Frame::HelloAck { slots: 1 }).to_line().unwrap();
+                let _ = s.write_all(&raw_frame(&ack));
+                let _ = s.flush();
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        });
+        let secret = "hunter2-super-secret";
+        let client =
+            RemoteAgentClient::connect(&addr, Some(secret), Duration::from_secs(5)).unwrap();
+        assert_eq!(client.slots(), 1);
+        let hello = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let text = String::from_utf8_lossy(&hello).into_owned();
+        assert!(text.contains("hello"), "{text}");
+        assert!(
+            !text.contains(secret),
+            "the shared secret must never travel the wire: {text}"
+        );
+        // and the answer is exactly the keyed digest over the nonce
+        assert!(text.contains(&auth_proof("nonce-xyz", secret)), "{text}");
     }
 
     #[test]

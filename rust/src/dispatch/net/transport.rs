@@ -183,12 +183,12 @@ mod tests {
     fn frames_roundtrip_length_delimited() {
         let mut buf: Vec<u8> = Vec::new();
         write_frame(&mut buf, &Frame::Heartbeat { id: 5 }).unwrap();
-        write_frame(&mut buf, &Frame::Hello { token: "t".into() }).unwrap();
+        write_frame(&mut buf, &Frame::Hello { proof: "p".into() }).unwrap();
         write_frame(&mut buf, &Frame::HelloAck { slots: 3 }).unwrap();
         let mut r = Cursor::new(buf);
         assert!(matches!(read_frame(&mut r).unwrap(), Some(Frame::Heartbeat { id: 5 })));
         match read_frame(&mut r).unwrap() {
-            Some(Frame::Hello { token }) => assert_eq!(token, "t"),
+            Some(Frame::Hello { proof }) => assert_eq!(proof, "p"),
             other => panic!("wrong frame {other:?}"),
         }
         assert!(matches!(read_frame(&mut r).unwrap(), Some(Frame::HelloAck { slots: 3 })));

@@ -26,9 +26,14 @@
 //! advertised capacity as slot threads that drain the *same* queue as
 //! the local ones — mixed local+remote is simply both kinds of slot
 //! popping one queue.  `--workers remote` disables local slots
-//! entirely.  A remote slot whose agent connection dies stops popping
-//! (its in-flight run is requeued through the ordinary crash path and
-//! lands on a surviving slot, local or remote).
+//! entirely.  A remote slot whose agent connection dies requeues its
+//! in-flight run through the ordinary crash path (it lands on a
+//! surviving slot, local or remote) and then redials the agent under
+//! [`super::fleet::Backoff`] — a restarted daemon rejoins mid-campaign
+//! without redriving completed runs.  [`DispatchOptions::fleet`] adds
+//! *elastic* membership on top: a registry is polled and slot threads
+//! appear as agents announce themselves, so capacity can join a
+//! campaign that is already running.
 //!
 //! ## Supervision
 //!
@@ -55,12 +60,13 @@
 //! on EOF), then a bounded wait, then kill — instead of the historical
 //! unconditional kill.
 
+use super::fleet::{self, Backoff, BlobCatalog};
 use super::net::client::RemoteAgentClient;
 use super::runcache::RunCache;
 use crate::coordinator::RunReport;
 use crate::experiment::{Experiment, RunSpec};
 use anyhow::{anyhow, Context, Result};
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::io::{BufRead, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -115,10 +121,17 @@ pub struct DispatchOptions {
     /// [`WorkerKind::Remote`] it is the only capacity.  CLI:
     /// `--remote host:port[,host:port...]`.
     pub remote: Vec<String>,
-    /// Shared-secret token presented in the `Hello` handshake (must
-    /// match each agent's `--token`; `None` sends an empty token, which
-    /// only tokenless agents accept).  CLI: `--remote-token`.
+    /// Shared secret proved in the challenge-response handshake (must
+    /// match each agent's `--token`; the token itself never travels
+    /// the wire — see [`super::proto::auth_proof`].  `None` proves an
+    /// empty token, which only tokenless agents accept).  CLI:
+    /// `--remote-token`.
     pub remote_token: Option<String>,
+    /// Fleet registry (`host:port`) to resolve agent membership from,
+    /// alongside any static [`DispatchOptions::remote`] list: members
+    /// joining mid-campaign contribute slot threads as they announce,
+    /// expired members stop being dialed.  CLI: `--fleet host:port`.
+    pub fleet: Option<String>,
 }
 
 impl Default for DispatchOptions {
@@ -132,9 +145,19 @@ impl Default for DispatchOptions {
             heartbeat_timeout: super::proto::HEARTBEAT_EVERY * DEFAULT_MISSED_HEARTBEATS,
             remote: Vec::new(),
             remote_token: None,
+            fleet: None,
         }
     }
 }
+
+/// How often the fleet membership poller asks the registry who is
+/// alive.
+const FLEET_POLL_EVERY: Duration = Duration::from_secs(1);
+
+/// With a fleet registry as the *only* possible capacity, how long the
+/// dispatch waits for a first member to join before aborting with a
+/// clear error instead of idling forever.
+const FLEET_JOIN_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// One finished run out of the dispatcher.
 pub struct DispatchedRun {
@@ -271,16 +294,18 @@ enum SlotRunner {
     /// A local slot: in-process thread or subprocess child per
     /// [`DispatchOptions::workers`].
     Local,
-    /// A leased slot on one remote agent connection.
-    Remote(Arc<RemoteAgentClient>),
+    /// A leased slot on one remote agent connection, remembering the
+    /// endpoint so a dropped connection can be redialed under backoff.
+    Remote { agent: Arc<RemoteAgentClient>, addr: String },
 }
 
 impl SlotRunner {
-    /// A dead agent connection stops popping; local slots never die.
+    /// A dead agent connection stops popping (until redialed); local
+    /// slots never die.
     fn available(&self) -> bool {
         match self {
             SlotRunner::Local => true,
-            SlotRunner::Remote(agent) => !agent.is_dead(),
+            SlotRunner::Remote { agent, .. } => !agent.is_dead(),
         }
     }
 }
@@ -321,11 +346,13 @@ impl Dispatcher {
     /// is a loud configuration error, not a silent capacity loss — a
     /// dead agent *mid-dispatch* is what the crash/requeue path covers.
     fn connect_remote_agents(&self) -> Result<Vec<Arc<RemoteAgentClient>>> {
+        fleet::validate_endpoints(&self.opts.remote)?;
         if self.opts.remote.is_empty() {
-            if matches!(self.opts.workers, WorkerKind::Remote) {
+            if matches!(self.opts.workers, WorkerKind::Remote) && self.opts.fleet.is_none() {
                 anyhow::bail!(
                     "--workers remote needs at least one agent endpoint \
-                     (--remote host:port[,host:port...])"
+                     (--remote host:port[,host:port...]) or a fleet registry \
+                     (--fleet host:port)"
                 );
             }
             return Ok(Vec::new());
@@ -361,6 +388,15 @@ impl Dispatcher {
         }
         let remote = self.connect_remote_agents()?;
         let cache = self.opts.cache_dir.as_ref().map(RunCache::new);
+        // digest → local path for every warm-start artifact the runs
+        // reference; remote-bound configs are rewritten to `blob:`
+        // references (same cache key either way), so agents probe their
+        // caches first and pull bytes only on a miss
+        let blobs = if remote.is_empty() && self.opts.fleet.is_none() {
+            BlobCatalog::empty()
+        } else {
+            BlobCatalog::for_runs(runs.iter().map(|r| &r.cfg))
+        };
         let slots: Vec<Mutex<Option<Result<DispatchedRun>>>> =
             (0..n).map(|_| Mutex::new(None)).collect();
         // every run enters the queue; the slots themselves probe the
@@ -384,26 +420,34 @@ impl Dispatcher {
         // a run in flight on a dying remote slot can still be requeued,
         // and the requeue needs a surviving slot to pop it.
         let remaining = AtomicUsize::new(n);
+        // live slot threads of any kind; the fleet poller watches it to
+        // notice when every slot has exited with work still pending
+        let active_slots = AtomicUsize::new(0);
         {
             // plain references for the spawned closures: `move` must
             // copy these borrows, never capture the owners
             let cache = cache.as_ref();
+            let blobs = &blobs;
             let queue = &queue;
             let aborted = &aborted;
             let slots = &slots[..];
             let remaining = &remaining;
+            let active = &active_slots;
             std::thread::scope(|scope| {
                 for _ in 0..local_jobs {
+                    active.fetch_add(1, Ordering::SeqCst);
                     scope.spawn(move || {
                         self.slot_loop(
-                            &SlotRunner::Local,
+                            SlotRunner::Local,
                             runs,
                             cache,
+                            blobs,
                             queue,
                             aborted,
                             slots,
                             remaining,
-                        )
+                        );
+                        active.fetch_sub(1, Ordering::SeqCst);
                     });
                 }
                 for agent in &remote {
@@ -411,18 +455,45 @@ impl Dispatcher {
                     // all multiplexed over the agent's single connection
                     for _ in 0..agent.slots().min(n) {
                         let agent = Arc::clone(agent);
+                        active.fetch_add(1, Ordering::SeqCst);
                         scope.spawn(move || {
+                            let addr = agent.addr().to_string();
                             self.slot_loop(
-                                &SlotRunner::Remote(agent),
+                                SlotRunner::Remote { agent, addr },
                                 runs,
                                 cache,
+                                blobs,
                                 queue,
                                 aborted,
                                 slots,
                                 remaining,
-                            )
+                            );
+                            active.fetch_sub(1, Ordering::SeqCst);
                         });
                     }
+                }
+                if let Some(registry) = self.opts.fleet.as_deref() {
+                    // elastic membership: poll the registry and add slot
+                    // threads for members as they announce themselves
+                    let static_slots = local_jobs > 0 || !remote.is_empty();
+                    let known: HashSet<String> =
+                        self.opts.remote.iter().map(|a| a.trim().to_string()).collect();
+                    scope.spawn(move || {
+                        self.fleet_poller(
+                            scope,
+                            registry,
+                            static_slots,
+                            known,
+                            runs,
+                            cache,
+                            blobs,
+                            queue,
+                            aborted,
+                            slots,
+                            remaining,
+                            active,
+                        )
+                    });
                 }
             });
         }
@@ -464,9 +535,129 @@ impl Dispatcher {
         Ok(merged.into_iter().map(|r| r.expect("all slots filled")).collect())
     }
 
+    /// The fleet membership poller: ask the registry who is alive every
+    /// [`FLEET_POLL_EVERY`], dial members not seen before, and add one
+    /// slot thread per advertised unit of their capacity — mid-campaign
+    /// joins contribute immediately, because every slot drains the same
+    /// queue.  A member that cannot be dialed is retried on later polls
+    /// (it may still be starting); one whose lease expired simply stops
+    /// appearing.  A *restarted* agent needs nothing from this thread:
+    /// its surviving slot threads redial it under backoff, and the run
+    /// cache guarantees completed runs are never redriven.
+    #[allow(clippy::too_many_arguments)]
+    fn fleet_poller<'scope, 'env>(
+        &'scope self,
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        registry: &'scope str,
+        static_slots: bool,
+        mut known: HashSet<String>,
+        runs: &'scope [RunSpec],
+        cache: Option<&'scope RunCache>,
+        blobs: &'scope BlobCatalog,
+        queue: &'scope Mutex<VecDeque<(usize, usize)>>,
+        aborted: &'scope AtomicBool,
+        slots: &'scope [Mutex<Option<Result<DispatchedRun>>>],
+        remaining: &'scope AtomicUsize,
+        active: &'scope AtomicUsize,
+    ) {
+        let token = self.opts.remote_token.as_deref();
+        let started = Instant::now();
+        let mut ever_any = static_slots;
+        let mut registry_down = false;
+        loop {
+            if aborted.load(Ordering::Relaxed) || remaining.load(Ordering::SeqCst) == 0 {
+                break;
+            }
+            match fleet::registry::members(registry) {
+                Ok(members) => {
+                    if registry_down {
+                        eprintln!("note: fleet registry {registry} reachable again");
+                    }
+                    registry_down = false;
+                    for m in members {
+                        if known.contains(&m.addr) {
+                            continue;
+                        }
+                        match RemoteAgentClient::connect(
+                            &m.addr,
+                            token,
+                            super::net::HANDSHAKE_TIMEOUT,
+                        ) {
+                            Ok(agent) => {
+                                println!(
+                                    "dispatch: fleet member {} joined ({} slots)",
+                                    m.addr,
+                                    agent.slots()
+                                );
+                                known.insert(m.addr.clone());
+                                ever_any = true;
+                                for _ in 0..agent.slots().min(runs.len()) {
+                                    let agent = Arc::clone(&agent);
+                                    let addr = m.addr.clone();
+                                    active.fetch_add(1, Ordering::SeqCst);
+                                    scope.spawn(move || {
+                                        self.slot_loop(
+                                            SlotRunner::Remote { agent, addr },
+                                            runs,
+                                            cache,
+                                            blobs,
+                                            queue,
+                                            aborted,
+                                            slots,
+                                            remaining,
+                                        );
+                                        active.fetch_sub(1, Ordering::SeqCst);
+                                    });
+                                }
+                            }
+                            Err(e) => {
+                                // not marked known: a member still
+                                // starting up (or wrongly advertised)
+                                // gets another dial on the next poll
+                                eprintln!(
+                                    "note: fleet member {} not usable yet: {e:#}",
+                                    m.addr
+                                );
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    if !registry_down {
+                        eprintln!("note: fleet registry {registry} poll failed: {e:#}");
+                    }
+                    registry_down = true;
+                }
+            }
+            if !ever_any && started.elapsed() >= FLEET_JOIN_TIMEOUT {
+                // fleet-only capacity and nobody ever joined: abort
+                // loudly instead of idling forever on an empty registry
+                aborted.store(true, Ordering::Relaxed);
+                *slots[0].lock().expect("dispatch slot") = Some(Err(anyhow!(
+                    "no fleet member joined registry {registry} within {}s \
+                     (and no local or static remote slots are configured)",
+                    FLEET_JOIN_TIMEOUT.as_secs()
+                )));
+                remaining.fetch_sub(1, Ordering::SeqCst);
+                break;
+            }
+            if ever_any
+                && active.load(Ordering::SeqCst) == 0
+                && remaining.load(Ordering::SeqCst) > 0
+            {
+                // every slot thread exited (members gone past their
+                // redial budgets) with work still pending: stop polling
+                // so the dispatch reports instead of waiting forever
+                break;
+            }
+            std::thread::sleep(FLEET_POLL_EVERY);
+        }
+    }
+
     /// One slot: pop runs until every run is resolved, the dispatch
-    /// aborts, or (for a remote slot) the agent connection dies; then
-    /// park the warm child back in the pool.
+    /// aborts, or (for a remote slot) the agent connection dies and its
+    /// redial budget is exhausted; then park the warm child back in the
+    /// pool.
     ///
     /// An *empty queue* alone is not an exit condition: while other
     /// slots still have runs in flight, this slot idles — one of those
@@ -477,9 +668,10 @@ impl Dispatcher {
     #[allow(clippy::too_many_arguments)]
     fn slot_loop(
         &self,
-        runner: &SlotRunner,
+        mut runner: SlotRunner,
         runs: &[RunSpec],
         cache: Option<&RunCache>,
+        blobs: &BlobCatalog,
         queue: &Mutex<VecDeque<(usize, usize)>>,
         aborted: &AtomicBool,
         slots: &[Mutex<Option<Result<DispatchedRun>>>],
@@ -491,9 +683,49 @@ impl Dispatcher {
                 break;
             }
             if !runner.available() {
-                // a dead agent connection must not keep popping runs it
-                // can only fail; surviving slots drain the queue
-                break;
+                match &mut runner {
+                    SlotRunner::Local => break,
+                    SlotRunner::Remote { agent, addr } => {
+                        // the agent connection died (daemon restarted,
+                        // network blip): redial it under capped backoff
+                        // with jitter.  Completed runs are never
+                        // redriven — their results are already merged
+                        // (and memoized in the run cache) — and this
+                        // slot's own in-flight run was already requeued
+                        // through the crash path; a reconnect simply
+                        // restores capacity for what is still pending.
+                        let token = self.opts.remote_token.as_deref();
+                        let what = format!("agent {addr}");
+                        let redial = Backoff::default().retry(
+                            &what,
+                            || {
+                                !aborted.load(Ordering::Relaxed)
+                                    && remaining.load(Ordering::SeqCst) > 0
+                            },
+                            || {
+                                RemoteAgentClient::connect(
+                                    addr,
+                                    token,
+                                    super::net::HANDSHAKE_TIMEOUT,
+                                )
+                            },
+                        );
+                        match redial {
+                            Ok(fresh) => {
+                                println!("dispatch: reconnected to agent {addr}");
+                                *agent = fresh;
+                                continue;
+                            }
+                            Err(e) => {
+                                // budget exhausted (or the work is done):
+                                // this slot retires; surviving slots —
+                                // and fleet joins — drain the queue
+                                eprintln!("note: slot giving up on agent {addr}: {e:#}");
+                                break;
+                            }
+                        }
+                    }
+                }
             }
             let popped = queue.lock().expect("dispatch queue").pop_front();
             let Some((i, attempt)) = popped else {
@@ -527,7 +759,7 @@ impl Dispatcher {
                     }
                 }
             }
-            let outcome = match runner {
+            let outcome = match &runner {
                 SlotRunner::Local => match self.opts.workers {
                     WorkerKind::Thread => {
                         match Experiment::from_config(spec.cfg.clone())
@@ -542,8 +774,15 @@ impl Dispatcher {
                         unreachable!("remote-only dispatch spawns no local slots")
                     }
                 },
-                SlotRunner::Remote(agent) => {
-                    agent.run(&spec.cfg, self.opts.heartbeat_timeout)
+                SlotRunner::Remote { agent, .. } => {
+                    // the wire copy carries `blob:` references; the
+                    // local config (and the cache key) are untouched
+                    agent.run(
+                        &blobs.wire_cfg(&spec.cfg),
+                        self.opts.heartbeat_timeout,
+                        blobs,
+                        aborted,
+                    )
                 }
             };
             match outcome {
@@ -678,6 +917,13 @@ impl WorkerClient {
 
     fn is_alive(&mut self) -> bool {
         matches!(self.child.try_wait(), Ok(None))
+    }
+
+    /// The child's pid (the agent registers it per request so a
+    /// `Cancel` — or an orphaned-run kill — can reach the process even
+    /// while a handler thread is blocked reading from it).
+    pub(crate) fn pid(&self) -> u32 {
+        self.child.id()
     }
 
     /// Submit one run and wait for its terminal frame under the

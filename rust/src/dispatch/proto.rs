@@ -13,12 +13,17 @@
 //! on another slot.  One worker processes requests sequentially and
 //! exits cleanly on stdin EOF.
 //!
-//! Remote agents (see [`super::net`]) reuse these frames with three
-//! additions: [`Frame::Hello`]/[`Frame::HelloAck`] open a TCP session
-//! (shared-secret token, advertised slot capacity), and
-//! [`Frame::Crashed`] reports an agent-side executor crash as a
-//! *retryable* terminal frame — distinct from `Error`, whose failure is
-//! deterministic and aborts the dispatch.
+//! Remote agents (see [`super::net`]) reuse these frames with a few
+//! additions: [`Frame::Challenge`]/[`Frame::Hello`]/[`Frame::HelloAck`]
+//! open a TCP session (nonce challenge, keyed-digest proof, advertised
+//! slot capacity — the shared token itself never travels;
+//! see [`auth_proof`]), [`Frame::Crashed`] reports an agent-side
+//! executor crash as a *retryable* terminal frame — distinct from
+//! `Error`, whose failure is deterministic and aborts the dispatch —
+//! [`Frame::Cancel`] kills an in-flight run the dispatcher no longer
+//! wants, and [`Frame::BlobRequest`]/[`Frame::Blob`] pull
+//! content-addressed artifacts (warm-start snapshots, HLO manifests)
+//! the agent is missing (see [`super::fleet::blobs`]).
 //!
 //! ## Versioning
 //!
@@ -57,8 +62,12 @@ pub const HEARTBEAT_EVERY: std::time::Duration = std::time::Duration::from_milli
 /// v2 added the header itself, the `hello`/`hello_ack` TCP handshake,
 /// and the retryable `crashed` terminal frame; v3 added binary bulk
 /// payloads on the TCP transport (run results and `blob` frames) while
-/// control frames stayed JSON.
-pub const PROTO_VERSION: u64 = 3;
+/// control frames stayed JSON; v4 replaced the plaintext hello token
+/// with a `challenge`/proof handshake (the secret never travels — see
+/// [`auth_proof`]) and added the `cancel` and `blob_request` control
+/// frames for mid-run cancellation and content-addressed artifact
+/// staging.
+pub const PROTO_VERSION: u64 = 4;
 
 /// Typed parse error for a frame whose `"v"` header is missing or does
 /// not match [`PROTO_VERSION`].  Carried through `anyhow` so transports
@@ -105,18 +114,48 @@ pub enum Frame {
     /// hung past the deadline).  Retryable — the dispatcher requeues the
     /// run like any local worker crash instead of aborting the dispatch.
     Crashed { id: u64, message: String },
-    /// Client → agent, first frame on a TCP connection: authenticate
-    /// with the agent's shared-secret token (empty when the agent
-    /// requires none).
-    Hello { token: String },
+    /// Agent → client, first frame on a TCP connection: a fresh nonce
+    /// the client must answer with a keyed digest ([`auth_proof`])
+    /// before the session opens.  The nonce is single-use, so a
+    /// captured proof cannot be replayed against a later connection.
+    Challenge { nonce: String },
+    /// Client → agent, answering the [`Frame::Challenge`]: the keyed
+    /// digest of (token, nonce) — never the token itself, so the shared
+    /// secret does not travel the wire in either direction.
+    Hello { proof: String },
     /// Agent → client: handshake accepted; the agent advertises how many
     /// concurrent runs it will serve on this connection.
     HelloAck { slots: u32 },
+    /// Dispatcher → agent: abandon run `id` — kill the worker child
+    /// executing it instead of letting an orphaned run train to
+    /// completion.  The agent answers with its normal retryable
+    /// [`Frame::Crashed`] terminal once the child is down.
+    Cancel { id: u64 },
+    /// Agent → dispatcher: the run `id` references a content-addressed
+    /// artifact (`blob:<digest>` — a warm-start snapshot or HLO
+    /// manifest) the agent does not hold; the dispatcher answers with a
+    /// [`Frame::Blob`] carrying the bytes (tag = digest) or a
+    /// [`Frame::Error`] if it cannot resolve the digest either.
+    BlobRequest { id: u64, digest: String },
     /// Either direction: opaque bulk bytes for the request `id` — a
     /// warm-start snapshot, a staged artifact.  `tag` names what the
     /// bytes are (receiver-interpreted).  Binary on the TCP transport;
     /// hex-encoded on the JSONL path.
     Blob { id: u64, tag: String, bytes: Vec<u8> },
+}
+
+/// The challenge-response proof: an HMAC-shaped keyed digest of the
+/// shared token over the agent's nonce, built from the run cache's
+/// [`super::runcache::content_digest`] (no new dependencies).  Two
+/// nested passes with distinct framing — `digest(token ‖ digest(token ‖
+/// nonce))` — so the proof is bound to both the secret and this
+/// connection's nonce, and neither appears on the wire.  An agent that
+/// requires no token still challenges (`token = ""`); the exchange is
+/// then integrity-only.
+pub fn auth_proof(nonce: &str, token: &str) -> String {
+    let inner =
+        super::runcache::content_digest(format!("adpsgd-auth-i\n{token}\n{nonce}").as_bytes());
+    super::runcache::content_digest(format!("adpsgd-auth-o\n{token}\n{inner}").as_bytes())
 }
 
 impl Frame {
@@ -129,8 +168,10 @@ impl Frame {
             | Frame::Heartbeat { id }
             | Frame::Error { id, .. }
             | Frame::Crashed { id, .. }
+            | Frame::Cancel { id }
+            | Frame::BlobRequest { id, .. }
             | Frame::Blob { id, .. } => *id,
-            Frame::Hello { .. } | Frame::HelloAck { .. } => 0,
+            Frame::Challenge { .. } | Frame::Hello { .. } | Frame::HelloAck { .. } => 0,
         }
     }
 
@@ -143,8 +184,11 @@ impl Frame {
             Frame::Heartbeat { .. } => "heartbeat",
             Frame::Error { .. } => "error",
             Frame::Crashed { .. } => "crashed",
+            Frame::Challenge { .. } => "challenge",
             Frame::Hello { .. } => "hello",
             Frame::HelloAck { .. } => "hello_ack",
+            Frame::Cancel { .. } => "cancel",
+            Frame::BlobRequest { .. } => "blob_request",
             Frame::Blob { .. } => "blob",
         }
     }
@@ -183,14 +227,30 @@ impl Frame {
                 ("message", Json::str(message.clone())),
                 version,
             ]),
-            Frame::Hello { token } => Json::obj(vec![
+            Frame::Challenge { nonce } => Json::obj(vec![
+                ("type", Json::str("challenge")),
+                ("nonce", Json::str(nonce.clone())),
+                version,
+            ]),
+            Frame::Hello { proof } => Json::obj(vec![
                 ("type", Json::str("hello")),
-                ("token", Json::str(token.clone())),
+                ("proof", Json::str(proof.clone())),
                 version,
             ]),
             Frame::HelloAck { slots } => Json::obj(vec![
                 ("type", Json::str("hello_ack")),
                 ("slots", Json::num(*slots as f64)),
+                version,
+            ]),
+            Frame::Cancel { id } => Json::obj(vec![
+                ("type", Json::str("cancel")),
+                ("id", Json::num(*id as f64)),
+                version,
+            ]),
+            Frame::BlobRequest { id, digest } => Json::obj(vec![
+                ("type", Json::str("blob_request")),
+                ("id", Json::num(*id as f64)),
+                ("digest", Json::str(digest.clone())),
                 version,
             ]),
             Frame::Blob { id, tag, bytes } => Json::obj(vec![
@@ -247,11 +307,23 @@ impl Frame {
             "heartbeat" => Frame::Heartbeat { id: need_id()? },
             "error" => Frame::Error { id: need_id()?, message: message() },
             "crashed" => Frame::Crashed { id: need_id()?, message: message() },
+            "challenge" => Frame::Challenge {
+                nonce: v.get("nonce").and_then(Json::as_str).unwrap_or_default().to_string(),
+            },
             "hello" => Frame::Hello {
-                token: v.get("token").and_then(Json::as_str).unwrap_or_default().to_string(),
+                proof: v.get("proof").and_then(Json::as_str).unwrap_or_default().to_string(),
             },
             "hello_ack" => Frame::HelloAck {
                 slots: v.get("slots").and_then(Json::as_f64).unwrap_or(1.0) as u32,
+            },
+            "cancel" => Frame::Cancel { id: need_id()? },
+            "blob_request" => Frame::BlobRequest {
+                id: need_id()?,
+                digest: v
+                    .get("digest")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("blob_request: missing \"digest\""))?
+                    .to_string(),
             },
             "blob" => Frame::Blob {
                 id: need_id()?,
@@ -433,7 +505,10 @@ mod tests {
         }
 
         let hb = (Frame::Heartbeat { id: 3 }).to_line().unwrap();
-        assert!(hb.contains("\"v\":3"), "every frame carries the version header: {hb}");
+        assert!(
+            hb.contains(&format!("\"v\":{PROTO_VERSION}")),
+            "every frame carries the version header: {hb}"
+        );
         assert!(matches!(Frame::parse(&hb).unwrap(), Frame::Heartbeat { id: 3 }));
 
         let err = (Frame::Error { id: 9, message: "boom".into() }).to_line().unwrap();
@@ -453,9 +528,14 @@ mod tests {
             other => panic!("wrong frame {other:?}"),
         }
 
-        let hello = (Frame::Hello { token: "sesame".into() }).to_line().unwrap();
+        let challenge = (Frame::Challenge { nonce: "abc123".into() }).to_line().unwrap();
+        match Frame::parse(&challenge).unwrap() {
+            Frame::Challenge { nonce } => assert_eq!(nonce, "abc123"),
+            other => panic!("wrong frame {other:?}"),
+        }
+        let hello = (Frame::Hello { proof: "deadbeef".into() }).to_line().unwrap();
         match Frame::parse(&hello).unwrap() {
-            Frame::Hello { token } => assert_eq!(token, "sesame"),
+            Frame::Hello { proof } => assert_eq!(proof, "deadbeef"),
             other => panic!("wrong frame {other:?}"),
         }
         let ack = (Frame::HelloAck { slots: 6 }).to_line().unwrap();
@@ -463,10 +543,40 @@ mod tests {
             Frame::HelloAck { slots } => assert_eq!(slots, 6),
             other => panic!("wrong frame {other:?}"),
         }
-        assert_eq!((Frame::Hello { token: String::new() }).id(), 0);
+        assert_eq!((Frame::Hello { proof: String::new() }).id(), 0);
+        assert_eq!((Frame::Challenge { nonce: String::new() }).id(), 0);
 
-        assert!(Frame::parse("{\"type\":\"warp\",\"id\":1,\"v\":3}").is_err());
+        let cancel = (Frame::Cancel { id: 11 }).to_line().unwrap();
+        assert!(matches!(Frame::parse(&cancel).unwrap(), Frame::Cancel { id: 11 }));
+        let req = (Frame::BlobRequest { id: 5, digest: "0a0b".into() }).to_line().unwrap();
+        match Frame::parse(&req).unwrap() {
+            Frame::BlobRequest { id, digest } => {
+                assert_eq!((id, digest.as_str()), (5, "0a0b"));
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        let missing =
+            format!("{{\"type\":\"blob_request\",\"id\":5,\"v\":{PROTO_VERSION}}}");
+        assert!(Frame::parse(&missing).unwrap_err().to_string().contains("digest"));
+
+        assert!(Frame::parse(&format!("{{\"type\":\"warp\",\"id\":1,\"v\":{PROTO_VERSION}}}"))
+            .is_err());
         assert!(Frame::parse("not json").is_err());
+    }
+
+    #[test]
+    fn auth_proof_binds_token_and_nonce_without_leaking_either() {
+        let p = auth_proof("nonce-1", "secret");
+        // deterministic, hex-shaped, and bound to both inputs
+        assert_eq!(p, auth_proof("nonce-1", "secret"));
+        assert_eq!(p.len(), 32);
+        assert!(p.chars().all(|c| c.is_ascii_hexdigit()));
+        assert_ne!(p, auth_proof("nonce-2", "secret"), "proof must vary with the nonce");
+        assert_ne!(p, auth_proof("nonce-1", "other"), "proof must vary with the token");
+        // the proof never contains the secret or the raw nonce
+        assert!(!p.contains("secret") && !p.contains("nonce-1"));
+        // tokenless agents still get a nonce-bound (integrity-only) proof
+        assert_ne!(auth_proof("a", ""), auth_proof("b", ""));
     }
 
     #[test]
@@ -539,12 +649,13 @@ mod tests {
         // version-skewed frame from a mismatched binary)
         let input = format!(
             "not json at all\n\
-             {{\"type\":\"heartbeat\",\"id\":9,\"v\":3}}\n\
-             {{\"type\":\"run_request\",\"id\":5,\"cfg\":42,\"v\":3}}\n\
-             {{\"type\":\"warp\",\"id\":6,\"v\":3}}\n\
+             {{\"type\":\"heartbeat\",\"id\":9,\"v\":{v}}}\n\
+             {{\"type\":\"run_request\",\"id\":5,\"cfg\":42,\"v\":{v}}}\n\
+             {{\"type\":\"warp\",\"id\":6,\"v\":{v}}}\n\
              {{\"type\":\"run_request\",\"id\":7,\"cfg\":\"\"}}\n\
              {}",
             (Frame::RunRequest { id: 3, cfg: quick }).to_line().unwrap(),
+            v = PROTO_VERSION,
         );
         let out: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
         struct SharedBuf(Arc<Mutex<Vec<u8>>>);

@@ -13,7 +13,11 @@
 //! * **content-addressed indirections** — a warm start hashes the
 //!   *bytes* of the resolved `init_from` snapshot, and an HLO workload
 //!   hashes the artifacts `manifest.json` bytes, so editing either
-//!   busts the entry even though the configured path is unchanged;
+//!   busts the entry even though the configured path is unchanged.  A
+//!   `blob:<digest>` reference (the fleet's wire form for a staged
+//!   snapshot; see [`super::fleet::blobs`]) contributes the digest
+//!   directly, so driver and agent agree on the key even when only one
+//!   of them holds the bytes;
 //! * **not hashed** — knobs that cannot change results: the run name,
 //!   checkpoint cadence/paths (instrumentation), the artifacts
 //!   *directory path* (its manifest content is hashed instead), the
@@ -98,21 +102,31 @@ pub fn cfg_canonical_text(cfg: &ExperimentConfig) -> Result<String> {
     }
     let mut text = doc.render().map_err(|e| anyhow!("canonicalizing config: {e}"))?;
     if !cfg.init_from.is_empty() {
-        // hash the snapshot *content*, not its path: moving the file is
-        // incidental, editing it is not
-        let p = Path::new(&cfg.init_from);
-        let resolved = if p.is_dir() {
-            crate::checkpoint::Checkpoint::latest(p).ok().flatten()
+        if let Some(digest) = cfg.init_from.strip_prefix(super::fleet::blobs::BLOB_SCHEME) {
+            // an already content-addressed reference (`blob:<digest>`,
+            // the fleet's wire form): the digest IS the content hash,
+            // so the canonical text — and therefore the cache key — is
+            // identical whether this end holds the bytes or not.  This
+            // is what lets an agent probe its cache before pulling the
+            // snapshot over a BlobRequest.
+            text.push_str(&format!("init_from_digest = \"{digest}\"\n"));
         } else {
-            Some(p.to_path_buf())
-        };
-        match resolved.and_then(|f| std::fs::read(f).ok()) {
-            Some(bytes) => {
-                text.push_str(&format!("init_from_digest = \"{}\"\n", content_digest(&bytes)))
+            // hash the snapshot *content*, not its path: moving the
+            // file is incidental, editing it is not
+            let p = Path::new(&cfg.init_from);
+            let resolved = if p.is_dir() {
+                crate::checkpoint::Checkpoint::latest(p).ok().flatten()
+            } else {
+                Some(p.to_path_buf())
+            };
+            match resolved.and_then(|f| std::fs::read(f).ok()) {
+                Some(bytes) => text
+                    .push_str(&format!("init_from_digest = \"{}\"\n", content_digest(&bytes))),
+                // unreadable: fall back to the path (the run will fail
+                // with its own actionable error; the key just has to be
+                // distinct)
+                None => text.push_str(&format!("init_from_path = \"{}\"\n", cfg.init_from)),
             }
-            // unreadable: fall back to the path (the run will fail with
-            // its own actionable error; the key just has to be distinct)
-            None => text.push_str(&format!("init_from_path = \"{}\"\n", cfg.init_from)),
         }
     }
     if let crate::config::Backend::Hlo(_) = &cfg.workload.backend {

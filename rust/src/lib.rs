@@ -124,13 +124,23 @@
 //! merge — so `--jobs 8`, a warm cache, or a rack of agents change
 //! wall-clock, never results: the stable campaign summary is
 //! byte-identical across local, cached, and remote execution.
-//! Subprocess children live in a process-wide shared
-//! [`dispatch::WorkerPool`] (agents reuse the same pool for their own
-//! children), so sequential campaigns reuse warm workers and teardown
-//! is graceful (stdin EOF, bounded wait, then kill).  Wire frames are
-//! versioned: a version-skewed peer is rejected with a clear
-//! rebuild-both-ends error, never a generic parse failure.  See
-//! [`dispatch`] for the experiment → dispatch → coordinator layering.
+//! [`dispatch::fleet`] makes the remote membership *elastic*: agents
+//! announce themselves to an `adpsgd registry` under a liveness lease
+//! and `--fleet host:port` resolves them at poll time, so capacity can
+//! join a campaign already in flight; a dropped agent is redialed
+//! under capped exponential backoff with jitter (completed runs are
+//! never redriven), warm-start snapshots are staged content-addressed
+//! over blob frames only to agents that lack them, connections are
+//! authenticated by a challenge-response keyed digest (the shared
+//! token never travels the wire), and a cancel frame kills orphaned
+//! runs in agents' worker children.  Subprocess children live in a
+//! process-wide shared [`dispatch::WorkerPool`] (agents reuse the same
+//! pool for their own children), so sequential campaigns reuse warm
+//! workers and teardown is graceful (stdin EOF, bounded wait, then
+//! kill).  Wire frames are versioned: a version-skewed peer is
+//! rejected with a clear rebuild-both-ends error, never a generic
+//! parse failure.  See [`dispatch`] for the experiment → dispatch →
+//! coordinator layering.
 //!
 //! ## Performance
 //!
@@ -151,14 +161,16 @@
 //! [`quant::quantize_inplace_with`]) so per-sync hot paths never
 //! reallocate.
 //!
-//! On the wire, protocol v3 ships bulk payloads — run-result metric
+//! On the wire, protocol v4 ships bulk payloads — run-result metric
 //! series and `blob` artifacts — as length-delimited *binary* frames on
 //! the TCP transport ([`dispatch::net::transport`]), skipping JSON
 //! float formatting for multi-MB series; control frames stay JSON, and
-//! the stdio worker protocol stays pure JSONL.  `cargo bench` reports
-//! serial-vs-parallel speedup columns (`bench_tensor`, `bench_quant`,
-//! `bench_step`) and JSON-vs-binary wire bytes per run
-//! (`bench_dispatch`).
+//! the stdio worker protocol stays pure JSONL.  v4 adds the
+//! challenge-response handshake, blob staging, and cancel frames for
+//! the fleet layer.  `cargo bench` reports serial-vs-parallel speedup
+//! columns (`bench_tensor`, `bench_quant`, `bench_step`),
+//! JSON-vs-binary wire bytes per run, fleet join latency, and blob
+//! bytes staged per warm-start run (`bench_dispatch`).
 //!
 //! (The historical `Trainer::new(cfg)?.run()` front-door is gone; every
 //! caller goes through [`experiment::Experiment`] now.)

@@ -8,6 +8,8 @@
 //! adpsgd figures  [--only fig1,fig4,...] [--quick] [--cache-dir DIR]
 //!                 [--jobs 8] [--remote host:7070] [--out results]
 //! adpsgd agent    --listen 0.0.0.0:7070 [--slots 8] [--token T] [--cache-dir DIR]
+//!                 [--fleet host:7000] [--cache-max-bytes N]
+//! adpsgd registry --listen 0.0.0.0:7000
 //! adpsgd cache-gc [--cache-dir DIR] [--max-bytes N] [--max-age-secs S] [--dry-run]
 //! adpsgd models   [--artifacts artifacts]
 //! adpsgd worker
@@ -21,7 +23,9 @@
 //! agents) and writes a JSON summary; `figures` regenerates every paper
 //! table/figure (see DESIGN.md §4) under the same dispatch flags;
 //! `agent` serves campaign runs over TCP for `--remote` dispatchers
-//! (the cross-machine end of the worker fabric); `models` lists the AOT
+//! (the cross-machine end of the worker fabric); `registry` is the
+//! fleet phonebook agents announce themselves to and `--fleet`
+//! dispatchers resolve members from; `models` lists the AOT
 //! artifacts the PJRT runtime can load; `worker` is the subprocess end
 //! of the dispatcher's line-delimited JSON protocol (not for
 //! interactive use).
@@ -44,17 +48,22 @@ USAGE:
     adpsgd campaign [--config FILE] [--name NAME] [--strategies LIST]
                     [--sweep-nodes LIST] [--bandwidths LIST] [--collectives LIST]
                     [--jobs N] [--workers thread|subprocess|remote]
-                    [--remote HOST:PORT[,...]] [--remote-token T]
+                    [--remote HOST:PORT[,...]] [--fleet HOST:PORT]
+                    [--remote-token T]
                     [--cache-dir DIR] [--no-cache] [--retries N]
                     [--hang-timeout SECS] [--cache-max-bytes N]
                     [--quick] [--json] [--out DIR]
     adpsgd figures  [--only LIST] [--quick] [--out DIR]
                     [--jobs N] [--workers thread|subprocess|remote]
-                    [--remote HOST:PORT[,...]] [--remote-token T]
+                    [--remote HOST:PORT[,...]] [--fleet HOST:PORT]
+                    [--remote-token T]
                     [--cache-dir DIR] [--no-cache] [--retries N]
                     [--hang-timeout SECS]
     adpsgd agent    --listen HOST:PORT [--slots N] [--token T]
-                    [--cache-dir DIR] [--hang-timeout SECS]
+                    [--cache-dir DIR] [--cache-max-bytes N]
+                    [--fleet HOST:PORT] [--advertise HOST:PORT]
+                    [--hang-timeout SECS]
+    adpsgd registry --listen HOST:PORT
     adpsgd cache-gc [--cache-dir DIR] [--max-bytes N] [--max-age-secs S]
                     [--tmp-grace-secs S] [--dry-run]
     adpsgd models   [--artifacts DIR]
@@ -134,10 +143,16 @@ REMOTE WORKERS (cross-machine campaign execution; two-machine quickstart):
                                            contributes its advertised capacity
                                            to the same work-stealing queue as
                                            the local slots (mixed local+remote
-                                           is the default when both are given)
+                                           is the default when both are given);
+                                           empty, whitespace, and duplicate
+                                           entries are rejected at parse time
     --workers remote                       remote-only: no local slots
-    --remote-token T                       shared secret for the Hello
-                                           handshake (must match --token)
+                                           (requires --remote and/or --fleet)
+    --remote-token T                       shared secret for the challenge-
+                                           response handshake (must match the
+                                           agent's --token; never sent on the
+                                           wire — only a keyed digest of the
+                                           agent's nonce travels)
     Agents probe their own --cache-dir before executing, so a warm agent
     answers repeats without recomputation.  A silent or disconnected agent
     is treated exactly like a hung worker: its lease is killed and its runs
@@ -145,15 +160,57 @@ REMOTE WORKERS (cross-machine campaign execution; two-machine quickstart):
     summary are byte-identical to a local run.  Version-skewed peers and
     bad tokens are rejected at the handshake with a clear error.
 
-AGENT (the daemon behind --remote):
+FLEET (elastic membership: agents come and go mid-campaign):
+    registry (machine R):  adpsgd registry --listen 0.0.0.0:7000
+    workers  (B, C, ...):  adpsgd agent --listen 0.0.0.0:7070 --slots 8 \
+                               --token sesame --fleet r.example:7000
+    driver   (machine A):  adpsgd campaign --fleet r.example:7000 \
+                               --remote-token sesame [--workers remote] ...
+    --fleet host:port    resolve agent membership from this registry instead
+                         of (or in addition to) a static --remote list: the
+                         dispatcher polls it during the campaign and adds
+                         slots as members join — an agent started *after* the
+                         campaign did still contributes.  Agents announce
+                         under a liveness lease and re-announce, so crashed
+                         members age out.  The registry is a phonebook, not a
+                         broker: it holds no secrets, and authentication
+                         stays end-to-end between dispatcher and agent.
+    Reconnect: a dropped or restarted agent is redialed under capped
+    exponential backoff with jitter; completed runs are never re-driven
+    (results are merged once and the run cache memoizes), in-flight runs
+    requeue like any crashed worker.  Artifact staging: a warm-start
+    snapshot the agent lacks is pulled from the dispatcher by content
+    digest over the run connection (blob frames), stored in the agent's
+    blob store, and reused on every later run that names the same bytes.
+    Cancellation: when the dispatcher abandons a run (campaign aborted,
+    slot hung), it sends a cancel frame so the agent kills the orphaned
+    worker child instead of letting it train to completion.
+
+AGENT (the daemon behind --remote / --fleet):
     --listen HOST:PORT   bind address (port 0 picks a free port; the bound
                          address is printed on stdout either way)
     --slots N            advertised concurrent-run capacity (default: cores)
     --token T            require this shared secret from every client
+                         (verified by challenge-response; never on the wire)
     --cache-dir DIR      agent-side run cache ($ADPSGD_RUN_CACHE if omitted;
-                         probed before executing, written after)
+                         probed before executing, written after); staged
+                         blobs live under DIR/blobs
+    --cache-max-bytes N  GC the run cache and blob store down to N bytes at
+                         startup and after every client session (oldest
+                         entries evicted first)
+    --fleet HOST:PORT    announce this agent to a fleet registry under a
+                         liveness lease (re-announced automatically)
+    --advertise H:P      the dialable address to announce (defaults to the
+                         bound listen address; set it when agents sit
+                         behind NAT or bind 0.0.0.0)
     --hang-timeout SECS  supervision deadline for the agent's own worker
                          children (default 10)
+
+REGISTRY (the fleet phonebook):
+    --listen HOST:PORT   bind address (port 0 picks a free port; the bound
+                         address is printed on stdout).  One JSON line in,
+                         one out: agents announce, dispatchers list.  It
+                         schedules nothing and holds no secrets.
 
 FIGURES:
     --only fig1,fig2,fig4,fig5,fig6,fig7,fig8,table1,sec5b,ablation  (default: all)
@@ -162,9 +219,9 @@ FIGURES:
                    a subset of figures reuses the others' finished runs)
     --out DIR      write the CSV series behind each panel
     Figure campaigns take the same dispatch flags as `campaign`
-    (--jobs/--workers/--remote/--remote-token/--retries/--hang-timeout/
-    --no-cache): the whole figure sweep gets the same pool, supervision,
-    and remote capacity.
+    (--jobs/--workers/--remote/--fleet/--remote-token/--retries/
+    --hang-timeout/--no-cache): the whole figure sweep gets the same
+    pool, supervision, and remote/fleet capacity.
 
 PERFORMANCE:
     --perf.threads N     kernel-parallelism width for the tensor/quant hot
@@ -176,9 +233,11 @@ PERFORMANCE:
                          cached run.  Works on `run`, `campaign`, `figures`.
     Bulk wire frames (run results, blobs) travel binary on the TCP agent
     fabric since proto v3 (control frames stay JSON; version-skewed peers
-    still get the clear rebuild-both-ends error).  `cargo bench` prints
-    serial-vs-parallel speedup columns (bench_tensor/bench_quant/bench_step)
-    and JSON-vs-binary proto bytes per run (bench_dispatch).
+    still get the clear rebuild-both-ends error); proto v4 adds the
+    challenge-response handshake, blob staging, and cancel frames.
+    `cargo bench` prints serial-vs-parallel speedup columns
+    (bench_tensor/bench_quant/bench_step) and JSON-vs-binary proto bytes
+    per run plus fleet join/staging columns (bench_dispatch).
 
 CACHE-GC (bound a long-lived run-cache directory):
     --cache-dir DIR      directory to collect ($ADPSGD_RUN_CACHE if omitted)
@@ -212,6 +271,8 @@ fn real_main() -> Result<()> {
         }
         // the remote end of `--remote`: serve campaign runs over TCP
         Some("agent") => cmd_agent(&args),
+        // the fleet phonebook: agents announce, dispatchers list
+        Some("registry") => cmd_registry(&args),
         Some("help") | None => {
             print!("{HELP}");
             Ok(())
@@ -312,8 +373,9 @@ fn csv_list(args: &Args, key: &str) -> Option<Vec<String>> {
 }
 
 /// Dispatch profile from the campaign/figures flags: `--jobs` (with the
-/// legacy `--parallel` alias), `--workers`, `--remote`/`--remote-token`,
-/// `--cache-dir`/`--no-cache`, `--retries`, `--hang-timeout`.
+/// legacy `--parallel` alias), `--workers`, `--remote`/`--fleet`/
+/// `--remote-token`, `--cache-dir`/`--no-cache`, `--retries`,
+/// `--hang-timeout`.
 fn dispatch_options(args: &Args) -> Result<DispatchOptions> {
     let mut opts = DispatchOptions::default();
     opts.jobs = match (args.get("jobs"), args.get("parallel")) {
@@ -328,15 +390,20 @@ fn dispatch_options(args: &Args) -> Result<DispatchOptions> {
         other => bail!("--workers must be thread|subprocess|remote, got {other:?}"),
     };
     if let Some(endpoints) = args.get("remote") {
-        opts.remote = endpoints
-            .split(',')
-            .map(|a| a.trim().to_string())
-            .filter(|a| !a.is_empty())
-            .collect();
+        // keep empty entries: validate_endpoints rejects them with the
+        // exact position instead of silently dropping a typo like
+        // "a:7070,,b:7070"
+        opts.remote = endpoints.split(',').map(|a| a.trim().to_string()).collect();
+        adpsgd::dispatch::fleet::validate_endpoints(&opts.remote)?;
     }
+    opts.fleet = args.get("fleet").map(String::from);
     opts.remote_token = args.get("remote-token").map(String::from);
-    if matches!(opts.workers, WorkerKind::Remote) && opts.remote.is_empty() {
-        bail!("--workers remote needs at least one agent (--remote host:port[,host:port...])");
+    if matches!(opts.workers, WorkerKind::Remote) && opts.remote.is_empty() && opts.fleet.is_none()
+    {
+        bail!(
+            "--workers remote needs at least one agent \
+             (--remote host:port[,host:port...] and/or --fleet host:port)"
+        );
     }
     if args.flag("no-cache") {
         opts.cache_dir = None;
@@ -370,6 +437,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
             "jobs",
             "workers",
             "remote",
+            "fleet",
             "remote-token",
             "cache-dir",
             "retries",
@@ -603,7 +671,19 @@ fn cmd_cache_gc(args: &Args) -> Result<()> {
 /// `adpsgd agent`: serve campaign runs over TCP for `--remote`
 /// dispatchers (the remote end of the worker fabric; see HELP).
 fn cmd_agent(args: &Args) -> Result<()> {
-    reject_unknown_options(args, &["listen", "slots", "token", "cache-dir", "hang-timeout"])?;
+    reject_unknown_options(
+        args,
+        &[
+            "listen",
+            "slots",
+            "token",
+            "cache-dir",
+            "cache-max-bytes",
+            "fleet",
+            "advertise",
+            "hang-timeout",
+        ],
+    )?;
     let listen = args.get("listen").ok_or_else(|| {
         anyhow::anyhow!("agent needs --listen HOST:PORT (e.g. --listen 0.0.0.0:7070)")
     })?;
@@ -614,6 +694,12 @@ fn cmd_agent(args: &Args) -> Result<()> {
         token: args.get("token").map(String::from),
         // $ADPSGD_RUN_CACHE gives a warm agent its cache by default
         cache_dir: args.get("cache-dir").map(Into::into).or_else(dispatch::default_cache_dir),
+        cache_max_bytes: match args.get("cache-max-bytes") {
+            Some(max) => Some(max.parse().context("--cache-max-bytes")?),
+            None => None,
+        },
+        fleet: args.get("fleet").map(String::from),
+        advertise: args.get("advertise").map(String::from),
         worker_exe: None, // this binary has the `worker` subcommand
         ..adpsgd::dispatch::AgentConfig::default()
     };
@@ -627,6 +713,17 @@ fn cmd_agent(args: &Args) -> Result<()> {
     adpsgd::dispatch::Agent::bind(cfg)?.serve()
 }
 
+/// `adpsgd registry`: the fleet phonebook — agents announce themselves
+/// under a liveness lease, dispatchers resolve the member set (see HELP
+/// FLEET).  It schedules nothing and holds no secrets.
+fn cmd_registry(args: &Args) -> Result<()> {
+    reject_unknown_options(args, &["listen"])?;
+    let listen = args.get("listen").ok_or_else(|| {
+        anyhow::anyhow!("registry needs --listen HOST:PORT (e.g. --listen 0.0.0.0:7000)")
+    })?;
+    adpsgd::dispatch::Registry::bind(listen)?.serve()
+}
+
 fn cmd_figures(args: &Args) -> Result<()> {
     reject_unknown_options(
         args,
@@ -638,6 +735,7 @@ fn cmd_figures(args: &Args) -> Result<()> {
             "parallel",
             "workers",
             "remote",
+            "fleet",
             "remote-token",
             "retries",
             "hang-timeout",

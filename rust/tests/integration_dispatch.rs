@@ -464,7 +464,7 @@ fn stale_terminal_frames_are_discarded_not_protocol_violations() {
         format!(
             "#!/bin/sh\n\
              read -r line\n\
-             printf '{{\"type\":\"error\",\"id\":0,\"message\":\"stale\",\"v\":3}}\\n'\n\
+             printf '{{\"type\":\"error\",\"id\":0,\"message\":\"stale\",\"v\":4}}\\n'\n\
              {{ printf '%s\\n' \"$line\"; cat; }} | {:?} worker\n",
             worker_exe()
         ),
@@ -638,16 +638,16 @@ fn wrong_token_and_version_skew_are_rejected_with_clear_errors() {
     .unwrap_err();
     assert!(format!("{err:#}").contains("token"), "{err:#}");
 
-    // version skew: a fake agent that answers the handshake with a v1
-    // frame must be diagnosed as skew, not a generic parse failure
+    // version skew: a fake agent that opens the handshake with a v1
+    // frame must be diagnosed as skew, not a generic parse failure.
+    // (The real agent speaks first — it sends the challenge — so the
+    // fake writes its skewed frame immediately on accept.)
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let skew_addr = listener.local_addr().unwrap().to_string();
     std::thread::spawn(move || {
         if let Ok((mut s, _)) = listener.accept() {
-            use std::io::{Read, Write};
-            let mut drain = [0u8; 1024];
-            let _ = s.read(&mut drain);
-            let payload = b"{\"type\":\"hello_ack\",\"slots\":2,\"v\":1}";
+            use std::io::Write;
+            let payload = b"{\"type\":\"challenge\",\"nonce\":\"n\",\"v\":1}";
             let mut buf = (payload.len() as u32).to_be_bytes().to_vec();
             buf.extend_from_slice(payload);
             let _ = s.write_all(&buf);
@@ -802,6 +802,286 @@ fn agent_killed_mid_campaign_requeues_onto_remaining_slots() {
             "a run requeued off a dead agent must reproduce the undisturbed run bit-for-bit"
         );
     }
+}
+
+// ------------------------------------------------------------------ fleet
+
+/// Reserve a loopback port by binding and immediately dropping the
+/// listener (Rust's std sets SO_REUSEADDR on Unix, so a restarted
+/// daemon can rebind the same address right away).
+fn reserve_port() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    format!("127.0.0.1:{}", l.local_addr().unwrap().port())
+}
+
+/// Spawn a real `adpsgd agent` daemon on `addr`, wait until it
+/// listens, and return the child plus a channel that fires whenever
+/// the daemon logs a run start.
+fn spawn_agent_daemon(addr: &str) -> (std::process::Child, std::sync::mpsc::Receiver<()>) {
+    use std::io::BufRead;
+    let mut agent = std::process::Command::new(worker_exe())
+        .args(["agent", "--listen", addr, "--slots", "2"])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawning adpsgd agent");
+    let stdout = agent.stdout.take().expect("piped agent stdout");
+    let (listen_tx, listen_rx) = std::sync::mpsc::channel();
+    let (start_tx, start_rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        for line in std::io::BufReader::new(stdout).lines() {
+            let Ok(line) = line else { break };
+            if line.starts_with("agent: listening on ") {
+                let _ = listen_tx.send(());
+            }
+            if line.contains("started") {
+                let _ = start_tx.send(());
+            }
+        }
+    });
+    listen_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("agent daemon must come up");
+    (agent, start_rx)
+}
+
+#[test]
+fn restarted_agent_is_redialed_and_the_campaign_completes() {
+    let addr = reserve_port();
+    let (mut first, start_rx) = spawn_agent_daemon(&addr);
+
+    // long runs so the restart lands mid-training
+    let mut cfg = quick_base();
+    cfg.iters = 8000;
+    cfg.eval_every = 4000;
+    cfg.variance_every = 0;
+    let mk = |name: &str, seed: u64| {
+        let mut c = cfg.clone();
+        c.name = name.into();
+        c.seed = seed;
+        RunSpec { label: name.into(), cfg: c }
+    };
+    let runs = vec![mk("fa", 41), mk("fb", 42), mk("fc", 43)];
+
+    // remote-only: the restarted daemon is the *only* capacity, so the
+    // campaign can finish only if the redial actually reconnects
+    let dispatcher = Dispatcher::new(DispatchOptions {
+        workers: WorkerKind::Remote,
+        remote: vec![addr.clone()],
+        cache_dir: None,
+        heartbeat_timeout: Duration::from_secs(10),
+        ..DispatchOptions::default()
+    });
+
+    // restarter: once a run is executing, kill the daemon and bring a
+    // fresh one up on the same address
+    let first_pid = first.id();
+    let restart_addr = addr.clone();
+    let restarter = std::thread::spawn(move || {
+        let seen = start_rx.recv_timeout(Duration::from_secs(60)).is_ok();
+        let _ = std::process::Command::new("sh")
+            .arg("-c")
+            .arg(format!("kill {first_pid}"))
+            .status();
+        let replacement = spawn_agent_daemon(&restart_addr).0;
+        (seen, replacement)
+    });
+
+    let merged = dispatcher.execute(&runs).expect("dispatch survives an agent restart");
+    let (seen, mut second) = restarter.join().unwrap();
+    assert!(seen, "the daemon must have started at least one run before the restart");
+    assert!(
+        dispatcher.retries() >= 1,
+        "the dropped connection must requeue in-flight runs through the crash path"
+    );
+    first.wait().ok();
+    second.kill().ok();
+    second.wait().ok();
+
+    // redriven runs still produce exactly the undisturbed results
+    let undisturbed = Dispatcher::new(DispatchOptions {
+        jobs: Some(2),
+        cache_dir: None,
+        ..DispatchOptions::default()
+    })
+    .execute(&runs)
+    .unwrap();
+    assert_eq!(merged.len(), undisturbed.len());
+    for (a, b) in merged.iter().zip(&undisturbed) {
+        assert_eq!(
+            stable_report_json(&a.report),
+            stable_report_json(&b.report),
+            "a run redriven after the restart must reproduce the undisturbed run bit-for-bit"
+        );
+    }
+}
+
+#[test]
+fn fleet_member_joining_late_is_discovered_and_serves_the_campaign() {
+    use adpsgd::dispatch::Registry;
+    let registry = Registry::spawn("127.0.0.1:0").expect("registry binds").to_string();
+    let base = quick_base();
+
+    // the only capacity announces itself ~1.5s *after* the dispatch
+    // starts polling: elastic membership must pick it up mid-campaign
+    let reg = registry.clone();
+    let joiner = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(1500));
+        let cfg = AgentConfig {
+            listen: "127.0.0.1:0".into(),
+            slots: 2,
+            worker_exe: Some(worker_exe()),
+            fleet: Some(reg),
+            ..AgentConfig::default()
+        };
+        Agent::spawn(cfg, Arc::new(WorkerPool::new())).expect("fleet agent binds")
+    });
+
+    let fleet = three_run_campaign(&base)
+        .execute(&DispatchOptions {
+            workers: WorkerKind::Remote,
+            fleet: Some(registry),
+            cache_dir: None,
+            ..DispatchOptions::default()
+        })
+        .expect("a late-joining member must serve the whole campaign");
+    joiner.join().unwrap();
+
+    let local = three_run_campaign(&base)
+        .execute(&DispatchOptions {
+            jobs: Some(2),
+            cache_dir: None,
+            ..DispatchOptions::default()
+        })
+        .unwrap();
+    assert_eq!(fleet.runs.len(), 3);
+    assert!(fleet.runs.iter().all(|r| !r.from_cache), "no dispatcher cache was configured");
+    assert_eq!(
+        local.to_json_stable().to_string_compact(),
+        fleet.to_json_stable().to_string_compact(),
+        "a fleet-resolved campaign must write a byte-identical stable summary"
+    );
+}
+
+#[test]
+fn warm_start_snapshot_is_staged_to_an_agent_that_lacks_it() {
+    let ckpt_dir = tmpdir("blob_src");
+    let agent_cache = tmpdir("blob_agent");
+
+    // produce the snapshot locally
+    let mut seed_cfg = quick_base();
+    seed_cfg.name = "seed".into();
+    seed_cfg.checkpoint_every = 30;
+    seed_cfg.checkpoint_dir = ckpt_dir.to_string_lossy().into_owned();
+    adpsgd::experiment::Experiment::from_config(seed_cfg)
+        .unwrap()
+        .run()
+        .expect("seeding run");
+    let snapshot = adpsgd::checkpoint::Checkpoint::latest(&ckpt_dir)
+        .unwrap()
+        .expect("the seeding run must write a snapshot");
+    let digest = runcache::content_digest(&std::fs::read(&snapshot).unwrap());
+
+    // warm-started campaign, remote-only, against an agent whose blob
+    // store has never seen the snapshot: the dispatcher must stage it
+    let mut base = quick_base();
+    base.init_from = ckpt_dir.to_string_lossy().into_owned();
+    let addr = spawn_agent(2, None, Some(agent_cache.clone()));
+    let remote = three_run_campaign(&base)
+        .execute(&DispatchOptions {
+            workers: WorkerKind::Remote,
+            remote: vec![addr],
+            cache_dir: None,
+            ..DispatchOptions::default()
+        })
+        .expect("warm-start runs must succeed on an agent lacking the snapshot");
+
+    // the artifact landed in the agent's content-addressed store ...
+    let blob = agent_cache.join("blobs").join(format!("{digest}.blob"));
+    assert!(blob.exists(), "the staged snapshot must land as {digest}.blob");
+    assert_eq!(
+        runcache::content_digest(&std::fs::read(&blob).unwrap()),
+        digest,
+        "the staged bytes must verify against their digest"
+    );
+
+    // ... and warm-starting over the wire changes nothing about results
+    let local = three_run_campaign(&base)
+        .execute(&DispatchOptions {
+            jobs: Some(2),
+            cache_dir: None,
+            ..DispatchOptions::default()
+        })
+        .unwrap();
+    assert_eq!(
+        local.to_json_stable().to_string_compact(),
+        remote.to_json_stable().to_string_compact(),
+        "blob-staged warm starts must be byte-identical to local warm starts"
+    );
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+    std::fs::remove_dir_all(&agent_cache).ok();
+}
+
+#[test]
+fn cancel_frame_kills_the_orphaned_run_in_the_agents_worker_child() {
+    use adpsgd::dispatch::net::transport::{read_frame, write_frame};
+    use adpsgd::dispatch::proto::{auth_proof, Frame};
+
+    let addr = spawn_agent(1, None, None);
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = stream.try_clone().unwrap();
+    let mut writer = stream;
+
+    // handshake: challenge → proof (tokenless agent: empty token) → ack
+    let nonce = match read_frame(&mut reader).unwrap() {
+        Some(Frame::Challenge { nonce }) => nonce,
+        other => panic!("expected a challenge, got {other:?}"),
+    };
+    write_frame(&mut writer, &Frame::Hello { proof: auth_proof(&nonce, "") }).unwrap();
+    match read_frame(&mut reader).unwrap() {
+        Some(Frame::HelloAck { .. }) => {}
+        other => panic!("expected an ack, got {other:?}"),
+    }
+
+    // a run far too long to finish on its own within this test
+    let mut cfg = quick_base();
+    cfg.name = "orphan".into();
+    cfg.iters = 2_000_000;
+    cfg.eval_every = 1_000_000;
+    cfg.variance_every = 0;
+    write_frame(&mut writer, &Frame::RunRequest { id: 7, cfg }).unwrap();
+
+    // the first heartbeat proves the child is training; then cancel
+    loop {
+        match read_frame(&mut reader).unwrap() {
+            Some(Frame::Heartbeat { .. }) => break,
+            Some(Frame::RunResult { .. }) => panic!("the run must still be training"),
+            Some(other) => panic!("unexpected {} frame", other.kind()),
+            None => panic!("agent closed the connection"),
+        }
+    }
+    write_frame(&mut writer, &Frame::Cancel { id: 7 }).unwrap();
+
+    // the agent kills the worker child: the run terminates as a crash
+    // frame for our id long before 2M iterations could ever complete
+    let cancelled_at = std::time::Instant::now();
+    loop {
+        match read_frame(&mut reader).unwrap() {
+            Some(Frame::Heartbeat { .. }) => continue,
+            Some(Frame::Crashed { id, .. }) => {
+                assert_eq!(id, 7);
+                break;
+            }
+            Some(Frame::RunResult { .. }) => panic!("a cancelled run must never complete"),
+            Some(other) => panic!("unexpected {} frame", other.kind()),
+            None => panic!("agent closed the connection before the terminal frame"),
+        }
+    }
+    assert!(
+        cancelled_at.elapsed() < Duration::from_secs(30),
+        "cancellation must be prompt, not the run timing out"
+    );
 }
 
 // ------------------------------------------------------------------- gc
