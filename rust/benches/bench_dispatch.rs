@@ -15,7 +15,8 @@
 //! local threads), and the fleet columns (announce-to-membership
 //! latency against a loopback registry, and the blob bytes staged per
 //! warm-start run — content addressing amortizes one snapshot across
-//! every run that references it).
+//! every run that references it), plus the per-run cost of the event
+//! journal (which must never change the stable summary).
 
 use adpsgd::collective::Algo;
 use adpsgd::config::{ExperimentConfig, LrSchedule, StrategySpec};
@@ -150,6 +151,34 @@ fn main() {
         );
         pairs.push(("proto_json_bytes_per_run", Json::num(json_bytes as f64)));
         pairs.push(("proto_binary_bytes_per_run", Json::num(bin_bytes as f64)));
+    }
+
+    // -- journal overhead: the event journal is a pure observer ------------
+    // the same 8-run campaign with and without a journal attached; the
+    // per-run delta prices the JSONL lifecycle lines plus the full typed
+    // event stream (thread workers attach the JournalObserver)
+    {
+        let jpath = std::env::temp_dir()
+            .join(format!("adpsgd_bench_dispatch_journal_{}.jsonl", std::process::id()));
+        std::fs::remove_file(&jpath).ok();
+        let off = eight(&base).execute(&opts(4)).expect("journal-off campaign");
+        let journal = adpsgd::obs::Journal::create(&jpath).expect("bench journal");
+        let on = eight(&base)
+            .execute(&DispatchOptions { journal: Some(journal), ..opts(4) })
+            .expect("journal-on campaign");
+        assert_eq!(
+            off.to_json_stable().to_string_compact(),
+            on.to_json_stable().to_string_compact(),
+            "the journal must not change the stable summary"
+        );
+        let overhead = (on.wall_secs - off.wall_secs) / on.runs.len() as f64;
+        println!(
+            "dispatch/journal            off {:>8.2?} vs on {:>8.2?} ({overhead:+.3}s/run)",
+            std::time::Duration::from_secs_f64(off.wall_secs),
+            std::time::Duration::from_secs_f64(on.wall_secs),
+        );
+        pairs.push(("journal_overhead_secs_per_run", Json::num(overhead)));
+        std::fs::remove_file(&jpath).ok();
     }
 
     // -- subprocess transport overhead ------------------------------------

@@ -15,6 +15,10 @@
 # fleet smoke (a registry plus two loopback agents resolved via
 # --fleet, one restarted mid-campaign, must write a byte-identical
 # stable summary, and a wrong shared-secret token must be rejected) +
+# an obs smoke (a journaled loopback-fleet campaign must write a
+# schema-valid event journal whose trace ids reach the agent's own log,
+# `adpsgd status` must report the advertised slots, and a --no-journal
+# rerun must write a byte-identical stable summary) +
 # the campaign/dispatch benches (emit BENCH_campaign.json /
 # BENCH_dispatch.json for the perf trajectory).  Referenced from
 # ROADMAP.md; CI and pre-merge checks should run exactly this.
@@ -202,6 +206,61 @@ echo "${AUTH_OUT}" | grep -qi "token" \
 kill "${REGISTRY_PID}" "${FLEET_A_PID}" "${FLEET_B_PID}" 2>/dev/null || true
 trap - EXIT
 echo "   fleet smoke OK (registry-resolved summary byte-identical; agent B ${RESTARTED}; bad token rejected)"
+
+echo "== verify: obs smoke (event journal, trace propagation, status) =="
+OBS_DIR=/tmp/adpsgd_verify_obs
+rm -rf "${OBS_DIR}"
+mkdir -p "${OBS_DIR}"
+./target/release/adpsgd registry --listen 127.0.0.1:0 > "${OBS_DIR}/registry.log" 2>&1 &
+OBS_REG_PID=$!
+trap 'kill "${OBS_REG_PID}" "${OBS_AGENT_PID:-}" 2>/dev/null || true' EXIT
+for _ in $(seq 50); do
+    grep -q "registry: listening on" "${OBS_DIR}/registry.log" && break
+    sleep 0.2
+done
+OBS_REG=$(sed -n 's/^registry: listening on \([^ ]*\).*/\1/p' "${OBS_DIR}/registry.log" | head -n1)
+[ -n "${OBS_REG}" ] \
+    || { echo "verify: FAIL — obs registry did not announce its address"; cat "${OBS_DIR}/registry.log"; exit 1; }
+./target/release/adpsgd agent --listen 127.0.0.1:0 --slots 2 --fleet "${OBS_REG}" \
+    > "${OBS_DIR}/agent.log" 2>&1 &
+OBS_AGENT_PID=$!
+for _ in $(seq 50); do
+    grep -q "agent: listening on" "${OBS_DIR}/agent.log" && break
+    sleep 0.2
+done
+# a journaled loopback-fleet campaign: membership via the registry, runs
+# on the loopback agent, the event journal written next to the summary
+cargo run --release -- campaign --quick --name obs_smoke --workers remote \
+    --fleet "${OBS_REG}" --no-cache --out "${OBS_DIR}/on"
+JOURNAL="${OBS_DIR}/on/obs_smoke.campaign.jsonl"
+[ -f "${JOURNAL}" ] \
+    || { echo "verify: FAIL — the campaign did not write its event journal"; exit 1; }
+journal_lines=$(wc -l < "${JOURNAL}")
+schema_lines=$(grep -c '"schema":1' "${JOURNAL}" || true)
+[ "${journal_lines}" -gt 0 ] && [ "${schema_lines}" -eq "${journal_lines}" ] \
+    || { echo "verify: FAIL — journal schema marker on ${schema_lines}/${journal_lines} lines"; exit 1; }
+# one run's trace id must appear on BOTH ends of the TCP hop: in the
+# driver's journal and in the agent's own run-start log line
+OBS_TRACE=$(sed -n 's/.*"event":"run.start".*"trace":"\([0-9a-f]*\)".*/\1/p' "${JOURNAL}" | head -n1)
+[ -n "${OBS_TRACE}" ] \
+    || { echo "verify: FAIL — no journaled run.start carries a trace id"; exit 1; }
+grep -q "trace ${OBS_TRACE}" "${OBS_DIR}/agent.log" \
+    || { echo "verify: FAIL — trace ${OBS_TRACE} never reached the agent"; cat "${OBS_DIR}/agent.log"; exit 1; }
+# the status view renders fleet membership and the advertised capacity
+STATUS_OUT=$(cargo run --release -- status --fleet "${OBS_REG}")
+echo "${STATUS_OUT}" | grep -q "slots 2" \
+    || { echo "verify: FAIL — status did not report the advertised slots"; echo "${STATUS_OUT}"; exit 1; }
+# journaling is a pure observer: a --no-journal rerun writes no journal
+# and a byte-identical stable summary
+cargo run --release -- campaign --quick --name obs_smoke --workers remote \
+    --fleet "${OBS_REG}" --no-cache --no-journal --out "${OBS_DIR}/off"
+[ ! -f "${OBS_DIR}/off/obs_smoke.campaign.jsonl" ] \
+    || { echo "verify: FAIL — --no-journal still wrote a journal"; exit 1; }
+cmp "${OBS_DIR}/on/obs_smoke.campaign.json" "${OBS_DIR}/off/obs_smoke.campaign.json" \
+    || { echo "verify: FAIL — stable summaries differ with journaling on/off"; exit 1; }
+kill "${OBS_REG_PID}" "${OBS_AGENT_PID}" 2>/dev/null || true
+trap - EXIT
+echo "   obs smoke OK (journal schema'd, trace ${OBS_TRACE} on both ends, status sees the slots)"
 
 echo "== verify: campaign scheduler bench (fast) =="
 ADPSGD_BENCH_FAST=1 cargo bench --bench bench_campaign

@@ -78,10 +78,21 @@ impl ObserverHub {
     }
 
     pub fn emit(&mut self, ev: &RunEvent<'_>) -> Result<()> {
+        // fan out to *every* observer even when one fails: a metrics
+        // sink blowing up must not starve the checkpoint writer or the
+        // journal of this event (in particular the terminal `RunEnd`).
+        // The first error is remembered and returned after the loop,
+        // so an observer failure still aborts the run cleanly.
+        let mut first_err: Option<anyhow::Error> = None;
         for o in &mut self.observers {
-            o.on_event(ev).context("run observer failed")?;
+            if let Err(e) = o.on_event(ev) {
+                first_err.get_or_insert(e.context("run observer failed"));
+            }
         }
-        Ok(())
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 }
 
@@ -200,5 +211,52 @@ mod tests {
         let mut hub = ObserverHub::new(vec![Box::new(Failing)]);
         let err = hub.emit(&RunEvent::RunEnd { iters: 1 }).unwrap_err();
         assert!(format!("{err:#}").contains("observer exploded"));
+    }
+
+    #[test]
+    fn a_failing_observer_does_not_starve_later_observers() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        struct Failing;
+        impl RunObserver for Failing {
+            fn on_event(&mut self, _: &RunEvent<'_>) -> Result<()> {
+                anyhow::bail!("first observer exploded")
+            }
+        }
+        struct Counting(Arc<AtomicUsize>, Arc<AtomicUsize>);
+        impl RunObserver for Counting {
+            fn on_event(&mut self, ev: &RunEvent<'_>) -> Result<()> {
+                self.0.fetch_add(1, Ordering::SeqCst);
+                if matches!(ev, RunEvent::RunEnd { .. }) {
+                    self.1.fetch_add(1, Ordering::SeqCst);
+                }
+                Ok(())
+            }
+        }
+        let seen = Arc::new(AtomicUsize::new(0));
+        let ends = Arc::new(AtomicUsize::new(0));
+        let mut hub = ObserverHub::new(vec![
+            Box::new(Failing),
+            Box::new(Counting(Arc::clone(&seen), Arc::clone(&ends))),
+        ]);
+        // the error still surfaces (the run must abort)…
+        let err = hub.emit(&RunEvent::RunEnd { iters: 5 }).unwrap_err();
+        assert!(format!("{err:#}").contains("first observer exploded"), "{err:#}");
+        // …but the observer *after* the failing one still saw the
+        // terminal event — a journal or checkpoint sink gets its
+        // RunEnd even when an earlier sink is broken
+        assert_eq!(seen.load(Ordering::SeqCst), 1);
+        assert_eq!(ends.load(Ordering::SeqCst), 1);
+
+        // and a later error never masks the first one
+        struct AlsoFailing;
+        impl RunObserver for AlsoFailing {
+            fn on_event(&mut self, _: &RunEvent<'_>) -> Result<()> {
+                anyhow::bail!("second observer exploded")
+            }
+        }
+        let mut hub = ObserverHub::new(vec![Box::new(Failing), Box::new(AlsoFailing)]);
+        let err = hub.emit(&RunEvent::RunEnd { iters: 5 }).unwrap_err();
+        assert!(format!("{err:#}").contains("first observer exploded"), "{err:#}");
     }
 }

@@ -98,7 +98,10 @@ impl Backoff {
             }
             match op() {
                 Ok(v) => return Ok(v),
-                Err(e) => last = Some(e),
+                Err(e) => {
+                    crate::obs::metrics().counter("fleet.backoff_attempts").inc();
+                    last = Some(e);
+                }
             }
             // sleep the schedule, but stay responsive to cancellation
             let mut left = self.delay(attempt, what);

@@ -13,8 +13,10 @@
 //!   Agents re-announce every `ttl/3` (see the agent's announce loop),
 //!   so a crashed agent silently ages out.
 //! * dispatcher → registry: `{"type":"list","v":V}` — answered with
-//!   `{"type":"members","agents":[{"addr":A,"slots":S},…]}` holding
-//!   every unexpired member, sorted by address for determinism.
+//!   `{"type":"members","agents":[{"addr":A,"slots":S,"lease_ms":L},…]}`
+//!   holding every unexpired member, sorted by address for determinism;
+//!   `lease_ms` is the time remaining on the member's lease (what
+//!   `adpsgd status` renders as the lease age).
 //!
 //! The registry holds no secrets and schedules nothing: it is a
 //! phonebook, not a broker.  Authentication happens end-to-end between
@@ -42,6 +44,9 @@ pub struct Member {
     pub addr: String,
     /// Advertised concurrent-run capacity.
     pub slots: u32,
+    /// Milliseconds remaining on the liveness lease at list time (0
+    /// from registries that predate the field).
+    pub lease_ms: u64,
 }
 
 /// The registry daemon (`adpsgd registry --listen ADDR`).
@@ -172,8 +177,14 @@ fn request(
         Some("list") => {
             let mut m = members.lock().expect("registry members lock");
             prune(&mut m);
-            let mut agents: Vec<(String, u32)> =
-                m.iter().map(|(a, (s, _))| (a.clone(), *s)).collect();
+            let now = Instant::now();
+            let mut agents: Vec<(String, u32, u64)> = m
+                .iter()
+                .map(|(a, (s, expiry))| {
+                    let lease_ms = expiry.saturating_duration_since(now).as_millis() as u64;
+                    (a.clone(), *s, lease_ms)
+                })
+                .collect();
             agents.sort();
             Ok(Json::obj(vec![
                 ("type", Json::str("members")),
@@ -182,10 +193,11 @@ fn request(
                     Json::Arr(
                         agents
                             .into_iter()
-                            .map(|(addr, slots)| {
+                            .map(|(addr, slots, lease_ms)| {
                                 Json::obj(vec![
                                     ("addr", Json::str(addr)),
                                     ("slots", Json::num(slots as f64)),
+                                    ("lease_ms", Json::num(lease_ms as f64)),
                                 ])
                             })
                             .collect(),
@@ -268,7 +280,8 @@ pub fn members(registry: &str) -> Result<Vec<Member>> {
                 .ok_or_else(|| anyhow!("registry member without \"addr\""))?
                 .to_string();
             let slots = a.get("slots").and_then(Json::as_f64).unwrap_or(1.0).max(1.0) as u32;
-            Ok(Member { addr, slots })
+            let lease_ms = a.get("lease_ms").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            Ok(Member { addr, slots, lease_ms })
         })
         .collect()
 }
@@ -286,19 +299,20 @@ mod tests {
         announce(&addr, "10.0.0.2:7070", 2, Duration::from_millis(150)).unwrap();
         let m = members(&addr).unwrap();
         assert_eq!(
-            m,
-            vec![
-                Member { addr: "10.0.0.1:7070".into(), slots: 4 },
-                Member { addr: "10.0.0.2:7070".into(), slots: 2 },
-            ],
+            m.iter().map(|x| (x.addr.as_str(), x.slots)).collect::<Vec<_>>(),
+            vec![("10.0.0.1:7070", 4), ("10.0.0.2:7070", 2)],
             "members are sorted by address"
         );
+        // the remaining lease rides the list reply (lease_ms is
+        // time-dependent, so bound it instead of pinning it)
+        assert!(m[0].lease_ms > 20_000 && m[0].lease_ms <= 30_000, "{:?}", m[0]);
+        assert!(m[1].lease_ms <= 150, "{:?}", m[1]);
 
         // re-announcing refreshes in place, never duplicates
         announce(&addr, "10.0.0.1:7070", 6, Duration::from_secs(30)).unwrap();
         let m = members(&addr).unwrap();
         assert_eq!(m.len(), 2);
-        assert_eq!(m[0], Member { addr: "10.0.0.1:7070".into(), slots: 6 });
+        assert_eq!((m[0].addr.as_str(), m[0].slots), ("10.0.0.1:7070", 6));
 
         // the short lease ages out; the long one survives
         std::thread::sleep(Duration::from_millis(300));

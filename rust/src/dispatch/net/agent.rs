@@ -54,6 +54,7 @@ use crate::dispatch::net::transport;
 use crate::dispatch::pool::{Outcome, WorkerPool};
 use crate::dispatch::proto::{auth_proof, Frame, HEARTBEAT_EVERY};
 use crate::dispatch::runcache::{GcPolicy, RunCache};
+use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -139,6 +140,12 @@ impl Slots {
         *free -= 1;
         Permit(self)
     }
+
+    /// Slots currently held by executing runs (process-wide, not
+    /// per-connection) — what `adpsgd status` reports as in-flight.
+    fn in_use(&self, total: usize) -> usize {
+        total.saturating_sub(*self.free.lock().expect("agent slots"))
+    }
 }
 
 impl Drop for Permit<'_> {
@@ -177,7 +184,7 @@ impl Shared {
                     stats.evicted, stats.evicted_bytes, stats.kept, stats.tmp_swept
                 ),
                 Ok(_) => {}
-                Err(e) => eprintln!("agent: note: cache gc failed: {e:#}"),
+                Err(e) => crate::obs::log!("agent", "cache gc failed: {e:#}"),
             }
         }
         match self.blobs.gc(max) {
@@ -185,8 +192,23 @@ impl Shared {
                 "agent: blob gc ({when}): evicted {evicted} blobs ({freed} bytes)"
             ),
             Ok(_) => {}
-            Err(e) => eprintln!("agent: note: blob gc failed: {e:#}"),
+            Err(e) => crate::obs::log!("agent", "blob gc failed: {e:#}"),
         }
+    }
+
+    /// The live snapshot answering a proto-v5 `stats_request`
+    /// (`adpsgd status`): advertised capacity, process-wide in-flight
+    /// runs, session counters, and the full [`crate::obs::metrics`]
+    /// snapshot — an opaque JSON object on the wire, so new fields
+    /// never need a protocol bump.
+    fn stats_snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("slots", Json::num(self.cfg.slots as f64)),
+            ("in_flight", Json::num(self.slots.in_use(self.cfg.slots) as f64)),
+            ("served", Json::num(self.served.load(Ordering::Relaxed) as f64)),
+            ("cache_hits", Json::num(self.cache_hits.load(Ordering::Relaxed) as f64)),
+            ("metrics", crate::obs::metrics().snapshot()),
+        ])
     }
 }
 
@@ -361,7 +383,7 @@ impl Agent {
                 Err(e) => {
                     // transient accept errors (EMFILE under load) must
                     // not kill the daemon
-                    eprintln!("agent: note: accept failed: {e}");
+                    crate::obs::log!("agent", "accept failed: {e}");
                     std::thread::sleep(Duration::from_millis(100));
                 }
             }
@@ -399,7 +421,7 @@ fn announce_loop(registry: &str, advertise: &str, slots: u32) {
             }
             Err(e) => {
                 if !down {
-                    eprintln!("agent: note: announce to registry {registry} failed: {e:#}");
+                    crate::obs::log!("agent", "announce to registry {registry} failed: {e:#}");
                 }
                 down = true;
             }
@@ -433,7 +455,7 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream, peer: SocketAddr) {
     let writer = match stream.try_clone() {
         Ok(w) => Arc::new(Mutex::new(w)),
         Err(e) => {
-            eprintln!("agent: note: could not clone stream for {peer}: {e}");
+            crate::obs::log!("agent", "could not clone stream for {peer}: {e}");
             return;
         }
     };
@@ -445,7 +467,7 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream, peer: SocketAddr) {
     // itself never travels, and a proof captured off the wire is bound
     // to this nonce and useless against the next connection
     if let Err(e) = reader.get_ref().set_read_timeout(Some(super::HANDSHAKE_TIMEOUT)) {
-        eprintln!("agent: note: could not arm handshake timeout for {peer}: {e}");
+        crate::obs::log!("agent", "could not arm handshake timeout for {peer}: {e}");
         return;
     }
     let nonce = fresh_nonce(&peer);
@@ -512,7 +534,7 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream, peer: SocketAddr) {
     let in_flight = Arc::new(AtomicUsize::new(0));
     loop {
         match transport::read_frame(&mut reader) {
-            Ok(Some(Frame::RunRequest { id, cfg })) => {
+            Ok(Some(Frame::RunRequest { id, cfg, trace })) => {
                 if in_flight.fetch_add(1, Ordering::SeqCst) >= shared.cfg.slots {
                     in_flight.fetch_sub(1, Ordering::SeqCst);
                     let _ = send(
@@ -531,7 +553,15 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream, peer: SocketAddr) {
                 let shared = Arc::clone(&shared);
                 let session = Arc::clone(&session);
                 let in_flight = Arc::clone(&in_flight);
-                std::thread::spawn(move || serve_run(shared, session, peer, id, cfg, in_flight));
+                std::thread::spawn(move || {
+                    serve_run(shared, session, peer, id, cfg, trace, in_flight)
+                });
+            }
+            Ok(Some(Frame::StatsRequest { id })) => {
+                // `adpsgd status`: answer from the shared snapshot;
+                // interleaves freely with in-flight runs and never
+                // consumes a run slot
+                let _ = send(&writer, &Frame::Stats { id, stats: shared.stats_snapshot() });
             }
             Ok(Some(Frame::Cancel { id })) => {
                 // the dispatcher no longer wants this run (its campaign
@@ -550,8 +580,9 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream, peer: SocketAddr) {
                     Some(tx) => {
                         let _ = tx.send(frame);
                     }
-                    None => eprintln!(
-                        "agent: note: unsolicited {} frame (id {id}) from {peer}",
+                    None => crate::obs::log!(
+                        "agent",
+                        "unsolicited {} frame (id {id}) from {peer}",
                         frame.kind()
                     ),
                 }
@@ -576,7 +607,7 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream, peer: SocketAddr) {
                     &writer,
                     &Frame::Error { id: 0, message: format!("agent: malformed frame: {e:#}") },
                 );
-                eprintln!("agent: note: closing session with {peer}: {e:#}");
+                crate::obs::log!("agent", "closing session with {peer}: {e:#}");
                 break;
             }
         }
@@ -600,10 +631,16 @@ fn serve_run(
     peer: SocketAddr,
     id: u64,
     cfg: crate::config::ExperimentConfig,
+    trace: Option<String>,
     in_flight: Arc<AtomicUsize>,
 ) {
     let label = cfg.name.clone();
-    println!("agent: run {label:?} started (id {id}, {peer})");
+    // the driver-minted trace id lands on the agent's own stdout, so
+    // one grep follows the run driver journal → agent → worker child
+    match &trace {
+        Some(t) => println!("agent: run {label:?} started (id {id}, {peer}, trace {t})"),
+        None => println!("agent: run {label:?} started (id {id}, {peer})"),
+    }
     let started = Instant::now();
     // when a heartbeat write fails the client is gone (disconnected,
     // lease killed): handlers still queued on the slot semaphore skip
@@ -625,9 +662,10 @@ fn serve_run(
             }
             ok
         });
-        execute(&shared, &session, id, cfg, &client_gone)
+        execute(&shared, &session, id, cfg, trace.as_deref(), &client_gone)
     };
     shared.served.fetch_add(1, Ordering::Relaxed);
+    crate::obs::metrics().counter("agent.runs_served").inc();
     // release the connection's in-flight slot BEFORE the terminal frame
     // goes out: the dispatcher reuses its slot the moment it receives
     // the result, and its next request must never race the decrement
@@ -638,8 +676,9 @@ fn serve_run(
             "agent: run {label:?} {note} in {:.2}s (id {id})",
             started.elapsed().as_secs_f64()
         ),
-        Err(e) => eprintln!(
-            "agent: note: could not answer run {label:?} (client gone?): {e:#}"
+        Err(e) => crate::obs::log!(
+            "agent",
+            "could not answer run {label:?} (client gone?): {e:#}"
         ),
     }
 }
@@ -674,6 +713,9 @@ fn stage_blob(
         Ok(Frame::Blob { bytes, .. }) => match shared.blobs.put(digest, &bytes) {
             Ok(path) => {
                 println!("agent: staged blob {digest} ({} bytes, run id {id})", bytes.len());
+                crate::obs::metrics()
+                    .counter("agent.blob_bytes_staged")
+                    .add(bytes.len() as u64);
                 Ok(path)
             }
             // a digest mismatch here means the dispatcher shipped the
@@ -725,6 +767,7 @@ fn execute(
     session: &Session,
     id: u64,
     mut cfg: crate::config::ExperimentConfig,
+    trace: Option<&str>,
     client_gone: &std::sync::atomic::AtomicBool,
 ) -> (Frame, &'static str) {
     let mut key: Option<(String, String)> = None;
@@ -734,6 +777,7 @@ fn execute(
         match cache.probe(&cfg) {
             Ok((_, _, Some(report))) => {
                 shared.cache_hits.fetch_add(1, Ordering::Relaxed);
+                crate::obs::metrics().counter("agent.cache_hits").inc();
                 return (Frame::RunResult { id, report }, "answered from cache");
             }
             Ok((digest, canonical, None)) => key = Some((digest, canonical)),
@@ -779,13 +823,15 @@ fn execute(
     };
     // register the child for Cancel / orphan kill while it executes
     session.children.lock().expect("agent children").insert(id, client.pid());
-    let outcome = client.run(&cfg, shared.cfg.heartbeat_timeout);
+    // the trace rides into the worker child's run request too (the
+    // third leg of driver → agent → worker tracing)
+    let outcome = client.run(&cfg, trace, shared.cfg.heartbeat_timeout);
     session.children.lock().expect("agent children").remove(&id);
     match outcome {
         Outcome::Done(report) => {
             if let (Some(cache), Some((digest, canonical))) = (&shared.cache, &key) {
                 if let Err(e) = cache.put(digest, canonical, &report) {
-                    eprintln!("agent: note: cache write failed for {:?}: {e:#}", report.name);
+                    crate::obs::log!("agent", "cache write failed for {:?}: {e:#}", report.name);
                 }
             }
             shared.pool.checkin(client);

@@ -198,8 +198,9 @@ impl RemoteAgentClient {
                                     Frame::Heartbeat { .. } => {}
                                     Frame::RunResult { .. }
                                     | Frame::Error { .. }
-                                    | Frame::Crashed { .. } => eprintln!(
-                                        "note: discarding stale {} frame for abandoned \
+                                    | Frame::Crashed { .. } => crate::obs::log!(
+                                        "remote",
+                                        "discarding stale {} frame for abandoned \
                                          request {} from agent {addr}",
                                         frame.kind(),
                                         frame.id()
@@ -211,7 +212,7 @@ impl RemoteAgentClient {
                         Ok(None) => break,
                         Err(e) => {
                             if !dead.load(Ordering::SeqCst) {
-                                eprintln!("note: agent {addr} connection error: {e:#}");
+                                crate::obs::log!("remote", "agent {addr} connection error: {e:#}");
                             }
                             break;
                         }
@@ -253,7 +254,7 @@ impl RemoteAgentClient {
     /// for its own deadline.
     fn kill(&self, why: &str) {
         if !self.dead.swap(true, Ordering::SeqCst) {
-            eprintln!("note: killing lease on agent {} ({why})", self.addr);
+            crate::obs::log!("remote", "killing lease on agent {} ({why})", self.addr);
         }
         self.stream.shutdown(Shutdown::Both).ok();
     }
@@ -286,6 +287,7 @@ impl RemoteAgentClient {
     pub(crate) fn run(
         &self,
         cfg: &crate::config::ExperimentConfig,
+        trace: Option<&str>,
         heartbeat_timeout: Duration,
         blobs: &BlobCatalog,
         aborted: &AtomicBool,
@@ -294,7 +296,12 @@ impl RemoteAgentClient {
             return Outcome::Crashed(anyhow!("agent {} connection already lost", self.addr));
         }
         let id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
-        let bytes = match transport::encode_frame(&Frame::RunRequest { id, cfg: cfg.clone() }) {
+        let frame = Frame::RunRequest {
+            id,
+            cfg: cfg.clone(),
+            trace: trace.map(str::to_string),
+        };
+        let bytes = match transport::encode_frame(&frame) {
             Ok(b) => b,
             // an unserializable config is the run's fault, not the agent's
             Err(e) => return Outcome::RunFailed(e),
@@ -391,6 +398,9 @@ impl RemoteAgentClient {
                                 bytes.len(),
                                 self.addr
                             );
+                            crate::obs::metrics()
+                                .counter("dispatch.blob_bytes_staged")
+                                .add(bytes.len() as u64);
                             Frame::Blob { id, tag: digest.clone(), bytes }
                         }
                         Err(e) => Frame::Error { id, message: format!("{e:#}") },
@@ -420,6 +430,45 @@ impl RemoteAgentClient {
                         self.addr,
                         other.kind()
                     ))
+                }
+            }
+        }
+    }
+
+    /// Ask the agent for its live stats snapshot (`adpsgd status`): a
+    /// proto-v5 [`Frame::StatsRequest`] answered by [`Frame::Stats`]
+    /// carrying an opaque JSON object — advertised slots, in-flight
+    /// runs, cache hit counters, and the agent's full
+    /// [`crate::obs::metrics`] snapshot.  Rides the same demux table as
+    /// run frames, so it can interleave with in-flight runs on the
+    /// shared connection.
+    pub fn stats(&self, timeout: Duration) -> Result<crate::util::json::Json> {
+        if self.is_dead() {
+            bail!("agent {} connection already lost", self.addr);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst) + 1;
+        let (tx, rx) = mpsc::channel();
+        self.pending.lock().expect("remote pending map").insert(id, tx);
+        let _guard = PendingGuard { pending: &*self.pending, id };
+        self.send_frame(&Frame::StatsRequest { id })?;
+        loop {
+            match rx.recv_timeout(timeout) {
+                Ok(Frame::Stats { stats, .. }) => return Ok(stats),
+                Ok(Frame::Heartbeat { .. }) => continue,
+                Ok(Frame::Error { message, .. }) => {
+                    bail!("agent {} refused the stats request: {message}", self.addr)
+                }
+                Ok(other) => bail!(
+                    "agent {} protocol violation: unexpected {} frame for stats request {id}",
+                    self.addr,
+                    other.kind()
+                ),
+                Err(RecvTimeoutError::Timeout) => {
+                    bail!("agent {} did not answer the stats request within {:.1}s",
+                        self.addr, timeout.as_secs_f64())
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    bail!("agent {} connection lost awaiting stats", self.addr)
                 }
             }
         }

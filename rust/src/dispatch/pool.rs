@@ -65,6 +65,7 @@ use super::net::client::RemoteAgentClient;
 use super::runcache::RunCache;
 use crate::coordinator::RunReport;
 use crate::experiment::{Experiment, RunSpec};
+use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::collections::{HashSet, VecDeque};
 use std::io::{BufRead, Write};
@@ -132,6 +133,13 @@ pub struct DispatchOptions {
     /// joining mid-campaign contribute slot threads as they announce,
     /// expired members stop being dialed.  CLI: `--fleet host:port`.
     pub fleet: Option<String>,
+    /// Structured event journal ([`crate::obs::Journal`]) the dispatch
+    /// appends to: per-run trace ids are minted when set, and every
+    /// queue/cache/crash event lands as one JSONL line.  `None`
+    /// disables journaling; results are byte-identical either way —
+    /// the journal is a pure observer.  CLI: on by default for
+    /// `campaign` (`<name>.campaign.jsonl`), off with `--no-journal`.
+    pub journal: Option<crate::obs::Journal>,
 }
 
 impl Default for DispatchOptions {
@@ -146,6 +154,7 @@ impl Default for DispatchOptions {
             remote: Vec::new(),
             remote_token: None,
             fleet: None,
+            journal: None,
         }
     }
 }
@@ -399,6 +408,20 @@ impl Dispatcher {
         };
         let slots: Vec<Mutex<Option<Result<DispatchedRun>>>> =
             (0..n).map(|_| Mutex::new(None)).collect();
+        // one driver-minted trace id per run: it follows the run
+        // through journal lines, agent sessions, and worker children
+        // (proto v5), but never enters the config or the cache digest
+        let traces: Vec<String> = (0..n).map(|_| crate::obs::mint_trace_id()).collect();
+        if let Some(journal) = &self.opts.journal {
+            for (i, spec) in runs.iter().enumerate() {
+                journal.emit(
+                    "run.queued",
+                    Some(&traces[i]),
+                    vec![("run", crate::util::json::Json::str(spec.label.clone()))],
+                );
+            }
+        }
+        crate::obs::metrics().gauge("dispatch.queue_depth").set(n as i64);
         // every run enters the queue; the slots themselves probe the
         // cache, so warm campaigns parse entries in parallel instead of
         // serially before the pool starts
@@ -433,6 +456,7 @@ impl Dispatcher {
             let slots = &slots[..];
             let remaining = &remaining;
             let active = &active_slots;
+            let traces = &traces[..];
             std::thread::scope(|scope| {
                 for _ in 0..local_jobs {
                     active.fetch_add(1, Ordering::SeqCst);
@@ -440,6 +464,7 @@ impl Dispatcher {
                         self.slot_loop(
                             SlotRunner::Local,
                             runs,
+                            traces,
                             cache,
                             blobs,
                             queue,
@@ -461,6 +486,7 @@ impl Dispatcher {
                             self.slot_loop(
                                 SlotRunner::Remote { agent, addr },
                                 runs,
+                                traces,
                                 cache,
                                 blobs,
                                 queue,
@@ -485,6 +511,7 @@ impl Dispatcher {
                             static_slots,
                             known,
                             runs,
+                            traces,
                             cache,
                             blobs,
                             queue,
@@ -497,6 +524,7 @@ impl Dispatcher {
                 }
             });
         }
+        crate::obs::metrics().gauge("dispatch.queue_depth").set(0);
 
         // deterministic merge: declaration order; the lowest-index real
         // failure wins over "skipped" noise
@@ -552,6 +580,7 @@ impl Dispatcher {
         static_slots: bool,
         mut known: HashSet<String>,
         runs: &'scope [RunSpec],
+        traces: &'scope [String],
         cache: Option<&'scope RunCache>,
         blobs: &'scope BlobCatalog,
         queue: &'scope Mutex<VecDeque<(usize, usize)>>,
@@ -571,7 +600,7 @@ impl Dispatcher {
             match fleet::registry::members(registry) {
                 Ok(members) => {
                     if registry_down {
-                        eprintln!("note: fleet registry {registry} reachable again");
+                        crate::obs::log!("fleet", "registry {registry} reachable again");
                     }
                     registry_down = false;
                     for m in members {
@@ -589,6 +618,7 @@ impl Dispatcher {
                                     m.addr,
                                     agent.slots()
                                 );
+                                crate::obs::metrics().counter("fleet.members_joined").inc();
                                 known.insert(m.addr.clone());
                                 ever_any = true;
                                 for _ in 0..agent.slots().min(runs.len()) {
@@ -599,6 +629,7 @@ impl Dispatcher {
                                         self.slot_loop(
                                             SlotRunner::Remote { agent, addr },
                                             runs,
+                                            traces,
                                             cache,
                                             blobs,
                                             queue,
@@ -614,8 +645,9 @@ impl Dispatcher {
                                 // not marked known: a member still
                                 // starting up (or wrongly advertised)
                                 // gets another dial on the next poll
-                                eprintln!(
-                                    "note: fleet member {} not usable yet: {e:#}",
+                                crate::obs::log!(
+                                    "fleet",
+                                    "member {} not usable yet: {e:#}",
                                     m.addr
                                 );
                             }
@@ -624,7 +656,7 @@ impl Dispatcher {
                 }
                 Err(e) => {
                     if !registry_down {
-                        eprintln!("note: fleet registry {registry} poll failed: {e:#}");
+                        crate::obs::log!("fleet", "registry {registry} poll failed: {e:#}");
                     }
                     registry_down = true;
                 }
@@ -670,6 +702,7 @@ impl Dispatcher {
         &self,
         mut runner: SlotRunner,
         runs: &[RunSpec],
+        traces: &[String],
         cache: Option<&RunCache>,
         blobs: &BlobCatalog,
         queue: &Mutex<VecDeque<(usize, usize)>>,
@@ -720,7 +753,10 @@ impl Dispatcher {
                                 // budget exhausted (or the work is done):
                                 // this slot retires; surviving slots —
                                 // and fleet joins — drain the queue
-                                eprintln!("note: slot giving up on agent {addr}: {e:#}");
+                                crate::obs::log!(
+                                    "dispatch",
+                                    "slot giving up on agent {addr}: {e:#}"
+                                );
                                 break;
                             }
                         }
@@ -737,19 +773,37 @@ impl Dispatcher {
                 continue;
             };
             let spec = &runs[i];
+            let trace = &traces[i];
+            let journal = self.opts.journal.as_ref();
+            let metrics = crate::obs::metrics();
+            metrics.gauge("dispatch.queue_depth").add(-1);
             // probe the cache on this slot's own thread: a hit fills
             // the result without touching a worker (RunCache::probe
             // restamps the hit under this run's label)
             let mut key: Option<(String, String)> = None;
             if let Some(cache) = cache {
                 match cache.probe(&spec.cfg) {
-                    Ok((_, _, Some(report))) => {
+                    Ok((digest, _, Some(report))) => {
+                        metrics.counter("dispatch.cache_hits").inc();
+                        if let Some(j) = journal {
+                            j.emit(
+                                "run.cache_hit",
+                                Some(trace),
+                                vec![
+                                    ("run", Json::str(spec.label.clone())),
+                                    ("digest", Json::str(digest)),
+                                ],
+                            );
+                        }
                         *slots[i].lock().expect("dispatch slot") =
                             Some(Ok(DispatchedRun { report, from_cache: true }));
                         remaining.fetch_sub(1, Ordering::SeqCst);
                         continue;
                     }
-                    Ok((digest, canonical, None)) => key = Some((digest, canonical)),
+                    Ok((digest, canonical, None)) => {
+                        metrics.counter("dispatch.cache_misses").inc();
+                        key = Some((digest, canonical));
+                    }
                     Err(e) => {
                         aborted.store(true, Ordering::Relaxed);
                         *slots[i].lock().expect("dispatch slot") =
@@ -759,17 +813,50 @@ impl Dispatcher {
                     }
                 }
             }
+            let slot_kind = match &runner {
+                SlotRunner::Local => match self.opts.workers {
+                    WorkerKind::Subprocess => "subprocess".to_string(),
+                    _ => "thread".to_string(),
+                },
+                SlotRunner::Remote { addr, .. } => format!("remote:{addr}"),
+            };
+            if let Some(j) = journal {
+                j.emit(
+                    "run.start",
+                    Some(trace),
+                    vec![
+                        ("run", Json::str(spec.label.clone())),
+                        ("slot", Json::str(slot_kind)),
+                        ("attempt", Json::num(attempt as f64)),
+                    ],
+                );
+            }
+            metrics.gauge("dispatch.slots_busy").add(1);
             let outcome = match &runner {
                 SlotRunner::Local => match self.opts.workers {
                     WorkerKind::Thread => {
-                        match Experiment::from_config(spec.cfg.clone())
-                            .and_then(Experiment::run)
-                        {
+                        // in-process runs can stream their full typed
+                        // event stream into the journal (sync, eval,
+                        // checkpoint lines); subprocess/remote children
+                        // journal only the dispatch lifecycle because
+                        // the journal lives in this process
+                        match Experiment::from_config(spec.cfg.clone()).and_then(|mut exp| {
+                            if let Some(j) = journal {
+                                exp.observe(Box::new(crate::obs::JournalObserver::new(
+                                    j.clone(),
+                                    trace.clone(),
+                                    spec.label.clone(),
+                                )));
+                            }
+                            exp.run()
+                        }) {
                             Ok(report) => Outcome::Done(report),
                             Err(e) => Outcome::RunFailed(e),
                         }
                     }
-                    WorkerKind::Subprocess => self.subprocess_run(&mut client, &spec.cfg),
+                    WorkerKind::Subprocess => {
+                        self.subprocess_run(&mut client, &spec.cfg, Some(trace))
+                    }
                     WorkerKind::Remote => {
                         unreachable!("remote-only dispatch spawns no local slots")
                     }
@@ -779,24 +866,59 @@ impl Dispatcher {
                     // local config (and the cache key) are untouched
                     agent.run(
                         &blobs.wire_cfg(&spec.cfg),
+                        Some(trace),
                         self.opts.heartbeat_timeout,
                         blobs,
                         aborted,
                     )
                 }
             };
+            metrics.gauge("dispatch.slots_busy").add(-1);
             match outcome {
                 Outcome::Done(report) => {
                     if let (Some(cache), Some((digest, canonical))) = (cache, &key) {
-                        if let Err(e) = cache.put(digest, canonical, &report) {
-                            eprintln!("note: run cache write failed for {:?}: {e:#}", spec.label);
+                        match cache.put(digest, canonical, &report) {
+                            Ok(()) => {
+                                if let Some(j) = journal {
+                                    j.emit(
+                                        "cache.store",
+                                        Some(trace),
+                                        vec![
+                                            ("run", Json::str(spec.label.clone())),
+                                            ("digest", Json::str(digest.clone())),
+                                        ],
+                                    );
+                                }
+                            }
+                            Err(e) => crate::obs::log!(
+                                "dispatch",
+                                "run cache write failed for {:?}: {e:#}",
+                                spec.label
+                            ),
                         }
+                    }
+                    if let Some(j) = journal {
+                        j.emit(
+                            "run.done",
+                            Some(trace),
+                            vec![("run", Json::str(spec.label.clone()))],
+                        );
                     }
                     *slots[i].lock().expect("dispatch slot") =
                         Some(Ok(DispatchedRun { report, from_cache: false }));
                     remaining.fetch_sub(1, Ordering::SeqCst);
                 }
                 Outcome::RunFailed(e) => {
+                    if let Some(j) = journal {
+                        j.emit(
+                            "run.failed",
+                            Some(trace),
+                            vec![
+                                ("run", Json::str(spec.label.clone())),
+                                ("error", Json::str(format!("{e:#}"))),
+                            ],
+                        );
+                    }
                     aborted.store(true, Ordering::Relaxed);
                     *slots[i].lock().expect("dispatch slot") =
                         Some(Err(e.context(format!("run {:?}", spec.label))));
@@ -809,14 +931,29 @@ impl Dispatcher {
                     // run goes back to *any* slot and a fresh child is
                     // checked out lazily on the next pop
                     client = None;
-                    if attempt < self.opts.max_attempts {
+                    let retrying = attempt < self.opts.max_attempts;
+                    if let Some(j) = journal {
+                        j.emit(
+                            "run.crashed",
+                            Some(trace),
+                            vec![
+                                ("run", Json::str(spec.label.clone())),
+                                ("attempt", Json::num(attempt as f64)),
+                                ("retrying", Json::Bool(retrying)),
+                            ],
+                        );
+                    }
+                    if retrying {
                         self.retries.fetch_add(1, Ordering::Relaxed);
-                        eprintln!(
-                            "note: worker crashed during run {:?} (attempt {attempt}); retrying: {e:#}",
+                        metrics.counter("dispatch.crash_requeues").inc();
+                        crate::obs::log!(
+                            "dispatch",
+                            "worker crashed during run {:?} (attempt {attempt}); retrying: {e:#}",
                             spec.label
                         );
                         // requeued, not resolved: `remaining` stays up,
                         // so idle slots keep waiting for this run
+                        metrics.gauge("dispatch.queue_depth").add(1);
                         queue.lock().expect("dispatch queue").push_back((i, attempt + 1));
                     } else {
                         aborted.store(true, Ordering::Relaxed);
@@ -840,6 +977,7 @@ impl Dispatcher {
         &self,
         client: &mut Option<WorkerClient>,
         cfg: &crate::config::ExperimentConfig,
+        trace: Option<&str>,
     ) -> Outcome {
         if client.is_none() {
             match self.pool.checkout(self.opts.worker_exe.as_deref()) {
@@ -848,7 +986,7 @@ impl Dispatcher {
             }
         }
         let c = client.as_mut().expect("worker client just ensured");
-        c.run(cfg, self.opts.heartbeat_timeout)
+        c.run(cfg, trace, self.opts.heartbeat_timeout)
     }
 }
 
@@ -937,11 +1075,17 @@ impl WorkerClient {
     pub(crate) fn run(
         &mut self,
         cfg: &crate::config::ExperimentConfig,
+        trace: Option<&str>,
         heartbeat_timeout: Duration,
     ) -> Outcome {
         self.next_id += 1;
         let id = self.next_id;
-        let line = match (super::proto::Frame::RunRequest { id, cfg: cfg.clone() }).to_line() {
+        let frame = super::proto::Frame::RunRequest {
+            id,
+            cfg: cfg.clone(),
+            trace: trace.map(str::to_string),
+        };
+        let line = match frame.to_line() {
             Ok(l) => l,
             // an unserializable config is the run's fault, not the worker's
             Err(e) => return Outcome::RunFailed(e),
@@ -1003,8 +1147,9 @@ impl WorkerClient {
                     // one that hit the heartbeat deadline before this
                     // client was reused): stale, not a protocol
                     // violation — discard and keep waiting
-                    eprintln!(
-                        "note: discarding stale terminal frame for request {rid} (current {id})"
+                    crate::obs::log!(
+                        "dispatch",
+                        "discarding stale terminal frame for request {rid} (current {id})"
                     );
                     continue;
                 }

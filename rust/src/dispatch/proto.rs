@@ -66,8 +66,11 @@ pub const HEARTBEAT_EVERY: std::time::Duration = std::time::Duration::from_milli
 /// with a `challenge`/proof handshake (the secret never travels — see
 /// [`auth_proof`]) and added the `cancel` and `blob_request` control
 /// frames for mid-run cancellation and content-addressed artifact
-/// staging.
-pub const PROTO_VERSION: u64 = 4;
+/// staging; v5 added the optional `trace` field on `run_request` (the
+/// driver-minted trace id, propagated so one run is greppable driver →
+/// agent → worker child — see [`crate::obs`]) and the
+/// `stats_request`/`stats` frames behind `adpsgd status`.
+pub const PROTO_VERSION: u64 = 5;
 
 /// Typed parse error for a frame whose `"v"` header is missing or does
 /// not match [`PROTO_VERSION`].  Carried through `anyhow` so transports
@@ -102,8 +105,12 @@ impl std::error::Error for VersionSkew {}
 /// One protocol frame.
 #[derive(Debug)]
 pub enum Frame {
-    /// Dispatcher → worker: execute this config.
-    RunRequest { id: u64, cfg: ExperimentConfig },
+    /// Dispatcher → worker: execute this config.  `trace` is the
+    /// driver-minted per-run trace id ([`crate::obs::mint_trace_id`]);
+    /// it rides *beside* the config — never inside it — so it can
+    /// follow the run through agents and worker children without ever
+    /// touching cache digests or stable summaries.
+    RunRequest { id: u64, cfg: ExperimentConfig, trace: Option<String> },
     /// Worker → dispatcher: the run finished.
     RunResult { id: u64, report: RunReport },
     /// Worker → dispatcher: still alive, still training `id`.
@@ -142,6 +149,15 @@ pub enum Frame {
     /// bytes are (receiver-interpreted).  Binary on the TCP transport;
     /// hex-encoded on the JSONL path.
     Blob { id: u64, tag: String, bytes: Vec<u8> },
+    /// Client → agent: report your live stats (`adpsgd status`).
+    /// Rides the normal per-request id space so it multiplexes with
+    /// in-flight runs on the same connection.
+    StatsRequest { id: u64 },
+    /// Agent → client: the answer to a [`Frame::StatsRequest`] — an
+    /// opaque JSON object (advertised slots, in-flight runs, cache
+    /// hit counters, and the agent's [`crate::obs`] metrics snapshot).
+    /// Opaque so new metrics never need a protocol bump.
+    Stats { id: u64, stats: Json },
 }
 
 /// The challenge-response proof: an HMAC-shaped keyed digest of the
@@ -170,7 +186,9 @@ impl Frame {
             | Frame::Crashed { id, .. }
             | Frame::Cancel { id }
             | Frame::BlobRequest { id, .. }
-            | Frame::Blob { id, .. } => *id,
+            | Frame::Blob { id, .. }
+            | Frame::StatsRequest { id }
+            | Frame::Stats { id, .. } => *id,
             Frame::Challenge { .. } | Frame::Hello { .. } | Frame::HelloAck { .. } => 0,
         }
     }
@@ -190,6 +208,8 @@ impl Frame {
             Frame::Cancel { .. } => "cancel",
             Frame::BlobRequest { .. } => "blob_request",
             Frame::Blob { .. } => "blob",
+            Frame::StatsRequest { .. } => "stats_request",
+            Frame::Stats { .. } => "stats",
         }
     }
 
@@ -198,12 +218,18 @@ impl Frame {
     pub fn to_line(&self) -> Result<String> {
         let version = ("v", Json::num(PROTO_VERSION as f64));
         let json = match self {
-            Frame::RunRequest { id, cfg } => Json::obj(vec![
-                ("type", Json::str("run_request")),
-                ("id", Json::num(*id as f64)),
-                ("cfg", Json::str(cfg.to_toml_string()?)),
-                version,
-            ]),
+            Frame::RunRequest { id, cfg, trace } => {
+                let mut pairs = vec![
+                    ("type", Json::str("run_request")),
+                    ("id", Json::num(*id as f64)),
+                    ("cfg", Json::str(cfg.to_toml_string()?)),
+                    version,
+                ];
+                if let Some(t) = trace {
+                    pairs.push(("trace", Json::str(t.clone())));
+                }
+                Json::obj(pairs)
+            }
             Frame::RunResult { id, report } => Json::obj(vec![
                 ("type", Json::str("run_result")),
                 ("id", Json::num(*id as f64)),
@@ -260,6 +286,17 @@ impl Frame {
                 ("hex", Json::str(hex_encode(bytes))),
                 version,
             ]),
+            Frame::StatsRequest { id } => Json::obj(vec![
+                ("type", Json::str("stats_request")),
+                ("id", Json::num(*id as f64)),
+                version,
+            ]),
+            Frame::Stats { id, stats } => Json::obj(vec![
+                ("type", Json::str("stats")),
+                ("id", Json::num(*id as f64)),
+                ("stats", stats.clone()),
+                version,
+            ]),
         };
         Ok(format!("{}\n", json.to_string_compact()))
     }
@@ -296,7 +333,11 @@ impl Frame {
                     .and_then(Json::as_str)
                     .ok_or_else(|| anyhow!("run_request: missing \"cfg\""))?;
                 let doc = TomlDoc::parse(text).map_err(|e| anyhow!("run_request cfg: {e}"))?;
-                Frame::RunRequest { id, cfg: ExperimentConfig::from_doc(&doc)? }
+                Frame::RunRequest {
+                    id,
+                    cfg: ExperimentConfig::from_doc(&doc)?,
+                    trace: v.get("trace").and_then(Json::as_str).map(str::to_string),
+                }
             }
             "run_result" => Frame::RunResult {
                 id: need_id()?,
@@ -333,6 +374,11 @@ impl Frame {
                         .and_then(Json::as_str)
                         .ok_or_else(|| anyhow!("blob: missing \"hex\""))?,
                 )?,
+            },
+            "stats_request" => Frame::StatsRequest { id: need_id()? },
+            "stats" => Frame::Stats {
+                id: need_id()?,
+                stats: v.get("stats").cloned().unwrap_or(Json::Null),
             },
             other => bail!("protocol frame: unknown type {other:?}"),
         })
@@ -438,8 +484,8 @@ pub fn serve(input: impl BufRead, output: impl Write + Send + 'static) -> Result
         if line.trim().is_empty() {
             continue;
         }
-        let (id, cfg) = match Frame::parse(&line) {
-            Ok(Frame::RunRequest { id, cfg }) => (id, cfg),
+        let (id, cfg, trace) = match Frame::parse(&line) {
+            Ok(Frame::RunRequest { id, cfg, trace }) => (id, cfg, trace),
             Ok(other) => {
                 write_frame(&Frame::Error {
                     id: other.id(),
@@ -458,6 +504,11 @@ pub fn serve(input: impl BufRead, output: impl Write + Send + 'static) -> Result
                 continue;
             }
         };
+        // the worker-child leg of the trace: the driver-minted id from
+        // the request frame, timestamped on this process's stderr
+        if let Some(t) = &trace {
+            crate::obs::log!("worker", "run id {id} start (trace {t})");
+        }
         // prove liveness while the (possibly long) run executes; the
         // guard stops and joins the pump before the terminal frame
         let result = {
@@ -490,16 +541,40 @@ mod tests {
         cfg.name = "proto_rt".into();
         cfg.nodes = 3;
         cfg.sync.qsgd_levels = 15;
-        let line = (Frame::RunRequest { id: 7, cfg: cfg.clone() }).to_line().unwrap();
+        let line = (Frame::RunRequest { id: 7, cfg: cfg.clone(), trace: None })
+            .to_line()
+            .unwrap();
         assert!(line.ends_with('\n') && !line[..line.len() - 1].contains('\n'));
+        assert!(!line.contains("trace"), "an absent trace id must not serialize: {line}");
         match Frame::parse(&line).unwrap() {
-            Frame::RunRequest { id, cfg: back } => {
+            Frame::RunRequest { id, cfg: back, trace } => {
                 assert_eq!(id, 7);
                 assert_eq!(back.name, "proto_rt");
                 assert_eq!(back.nodes, 3);
+                assert_eq!(trace, None);
                 // the canonical text is the equality witness: every
                 // result-affecting knob survived the wire
                 assert_eq!(back.to_toml_string().unwrap(), cfg.to_toml_string().unwrap());
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+
+        // the v5 trace id rides beside the config, never inside it
+        let traced = (Frame::RunRequest {
+            id: 8,
+            cfg: cfg.clone(),
+            trace: Some("9f2c41aa03de77b1".into()),
+        })
+        .to_line()
+        .unwrap();
+        match Frame::parse(&traced).unwrap() {
+            Frame::RunRequest { id, cfg: back, trace } => {
+                assert_eq!(id, 8);
+                assert_eq!(trace.as_deref(), Some("9f2c41aa03de77b1"));
+                assert!(
+                    !back.to_toml_string().unwrap().contains("9f2c41aa03de77b1"),
+                    "the trace id must never leak into the config"
+                );
             }
             other => panic!("wrong frame {other:?}"),
         }
@@ -558,6 +633,23 @@ mod tests {
         let missing =
             format!("{{\"type\":\"blob_request\",\"id\":5,\"v\":{PROTO_VERSION}}}");
         assert!(Frame::parse(&missing).unwrap_err().to_string().contains("digest"));
+
+        let sreq = (Frame::StatsRequest { id: 21 }).to_line().unwrap();
+        assert!(matches!(Frame::parse(&sreq).unwrap(), Frame::StatsRequest { id: 21 }));
+        let stats = (Frame::Stats {
+            id: 21,
+            stats: Json::obj(vec![("slots", Json::num(4.0)), ("in_flight", Json::num(1.0))]),
+        })
+        .to_line()
+        .unwrap();
+        match Frame::parse(&stats).unwrap() {
+            Frame::Stats { id, stats } => {
+                assert_eq!(id, 21);
+                assert_eq!(stats.get("slots").unwrap().as_f64(), Some(4.0));
+                assert_eq!(stats.get("in_flight").unwrap().as_f64(), Some(1.0));
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
 
         assert!(Frame::parse(&format!("{{\"type\":\"warp\",\"id\":1,\"v\":{PROTO_VERSION}}}"))
             .is_err());
@@ -654,7 +746,7 @@ mod tests {
              {{\"type\":\"warp\",\"id\":6,\"v\":{v}}}\n\
              {{\"type\":\"run_request\",\"id\":7,\"cfg\":\"\"}}\n\
              {}",
-            (Frame::RunRequest { id: 3, cfg: quick }).to_line().unwrap(),
+            (Frame::RunRequest { id: 3, cfg: quick, trace: None }).to_line().unwrap(),
             v = PROTO_VERSION,
         );
         let out: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
@@ -721,8 +813,8 @@ mod tests {
 
         let input = format!(
             "{}{}",
-            (Frame::RunRequest { id: 1, cfg: quick }).to_line().unwrap(),
-            (Frame::RunRequest { id: 2, cfg: bad }).to_line().unwrap(),
+            (Frame::RunRequest { id: 1, cfg: quick, trace: None }).to_line().unwrap(),
+            (Frame::RunRequest { id: 2, cfg: bad, trace: None }).to_line().unwrap(),
         );
         let out: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
         struct SharedBuf(Arc<Mutex<Vec<u8>>>);

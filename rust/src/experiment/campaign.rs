@@ -135,9 +135,29 @@ impl Campaign {
     /// report rather than an error.
     pub fn execute(&self, opts: &DispatchOptions) -> Result<CampaignReport> {
         let wall = std::time::Instant::now();
+        if let Some(journal) = &opts.journal {
+            journal.emit(
+                "campaign.start",
+                None,
+                vec![
+                    ("campaign", Json::str(self.name.clone())),
+                    ("runs", Json::num(self.runs.len() as f64)),
+                ],
+            );
+        }
         let dispatched = Dispatcher::new(opts.clone())
             .execute(&self.runs)
             .with_context(|| format!("campaign {:?}", self.name))?;
+        if let Some(journal) = &opts.journal {
+            journal.emit(
+                "campaign.end",
+                None,
+                vec![
+                    ("campaign", Json::str(self.name.clone())),
+                    ("wall_secs", Json::num(wall.elapsed().as_secs_f64())),
+                ],
+            );
+        }
         let runs = self
             .runs
             .iter()

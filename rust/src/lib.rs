@@ -167,10 +167,48 @@
 //! float formatting for multi-MB series; control frames stay JSON, and
 //! the stdio worker protocol stays pure JSONL.  v4 adds the
 //! challenge-response handshake, blob staging, and cancel frames for
-//! the fleet layer.  `cargo bench` reports serial-vs-parallel speedup
+//! the fleet layer; v5 adds the optional trace-id field on run
+//! requests and the `stats_request`/`stats` frames behind
+//! `adpsgd status`.  `cargo bench` reports serial-vs-parallel speedup
 //! columns (`bench_tensor`, `bench_quant`, `bench_step`),
-//! JSON-vs-binary wire bytes per run, fleet join latency, and blob
-//! bytes staged per warm-start run (`bench_dispatch`).
+//! JSON-vs-binary wire bytes per run, fleet join latency, blob
+//! bytes staged per warm-start run, and the journal's wall-clock
+//! overhead per run (`bench_dispatch`).
+//!
+//! ## Observability
+//!
+//! The [`obs`] module is the process-wide telemetry layer — metrics,
+//! journal, and logging — spanning coordinator → dispatch → fleet →
+//! agent:
+//!
+//! * **Structured event journal.**  `adpsgd campaign` writes
+//!   `results/<name>.campaign.jsonl` next to the stable summary
+//!   (suppress with `--no-journal`): one self-describing JSON line per
+//!   event — `{"schema":1,"ts":"…Z","event":"run.start","trace":
+//!   "9f2c…",…}` — covering the campaign span (`campaign.start/end`),
+//!   the dispatch fabric (`run.queued`, `run.cache_hit`,
+//!   `cache.store`, `run.crashed`), and the coordinator's
+//!   [`experiment::RunObserver`] events bridged by
+//!   [`obs::JournalObserver`] (`run.sync`, `run.eval`, …; the
+//!   per-iteration `IterEnd` is deliberately skipped).  Every run gets
+//!   a `trace_id` minted at the driver ([`obs::mint_trace_id`]) and
+//!   propagated through proto-v5 run-request frames, so one grep
+//!   follows a run driver → agent → worker child.  Journaling is a
+//!   pure observer: stable campaign summaries are byte-identical with
+//!   it on or off.
+//! * **Metrics registry.**  [`obs::metrics()`] hands out process-wide
+//!   counters/gauges/histograms (queue depth, cache hit/miss,
+//!   crash-requeues, backoff attempts, blob bytes staged, slot
+//!   utilization — glossary in [`obs::metrics`]) that snapshot to
+//!   deterministic JSON.
+//! * **`adpsgd status`.**  Queries a live fleet: registry membership
+//!   with lease ages (`--fleet`), plus each agent's advertised slots,
+//!   in-flight runs, cache hit-rate, and metrics snapshot over a
+//!   proto-v5 `stats_request` (`--remote`, repeatable; `--json` for
+//!   machines).
+//! * **Unified diagnostics.**  Fabric messages funnel through
+//!   `obs::log!` with ISO-8601 timestamps and component tags, so
+//!   interleaved slot/poller/agent output stays attributable.
 //!
 //! (The historical `Trainer::new(cfg)?.run()` front-door is gone; every
 //! caller goes through [`experiment::Experiment`] now.)
@@ -187,6 +225,7 @@ pub mod experiment;
 pub mod figures;
 pub mod metrics;
 pub mod netsim;
+pub mod obs;
 pub mod optim;
 pub mod period;
 pub mod quant;

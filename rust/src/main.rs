@@ -10,6 +10,7 @@
 //! adpsgd agent    --listen 0.0.0.0:7070 [--slots 8] [--token T] [--cache-dir DIR]
 //!                 [--fleet host:7000] [--cache-max-bytes N]
 //! adpsgd registry --listen 0.0.0.0:7000
+//! adpsgd status   [--fleet host:7000] [--remote host:7070[,...]] [--json]
 //! adpsgd cache-gc [--cache-dir DIR] [--max-bytes N] [--max-age-secs S] [--dry-run]
 //! adpsgd models   [--artifacts artifacts]
 //! adpsgd worker
@@ -25,7 +26,9 @@
 //! `agent` serves campaign runs over TCP for `--remote` dispatchers
 //! (the cross-machine end of the worker fabric); `registry` is the
 //! fleet phonebook agents announce themselves to and `--fleet`
-//! dispatchers resolve members from; `models` lists the AOT
+//! dispatchers resolve members from; `status` is the live fleet/agent
+//! view (membership, lease ages, in-flight runs, cache hit-rates over
+//! the proto `Stats` frame); `models` lists the AOT
 //! artifacts the PJRT runtime can load; `worker` is the subprocess end
 //! of the dispatcher's line-delimited JSON protocol (not for
 //! interactive use).
@@ -52,7 +55,7 @@ USAGE:
                     [--remote-token T]
                     [--cache-dir DIR] [--no-cache] [--retries N]
                     [--hang-timeout SECS] [--cache-max-bytes N]
-                    [--quick] [--json] [--out DIR]
+                    [--quick] [--json] [--out DIR] [--no-journal]
     adpsgd figures  [--only LIST] [--quick] [--out DIR]
                     [--jobs N] [--workers thread|subprocess|remote]
                     [--remote HOST:PORT[,...]] [--fleet HOST:PORT]
@@ -64,6 +67,8 @@ USAGE:
                     [--fleet HOST:PORT] [--advertise HOST:PORT]
                     [--hang-timeout SECS]
     adpsgd registry --listen HOST:PORT
+    adpsgd status   [--fleet HOST:PORT] [--remote HOST:PORT[,...]]
+                    [--remote-token T] [--timeout-secs S] [--json]
     adpsgd cache-gc [--cache-dir DIR] [--max-bytes N] [--max-age-secs S]
                     [--tmp-grace-secs S] [--dry-run]
     adpsgd models   [--artifacts DIR]
@@ -239,6 +244,37 @@ PERFORMANCE:
     (bench_tensor/bench_quant/bench_step) and JSON-vs-binary proto bytes
     per run plus fleet join/staging columns (bench_dispatch).
 
+OBSERVABILITY (see the crate docs' Observability section):
+    `campaign` writes a structured event journal next to the stable
+    summary — <out>/<name>.campaign.jsonl, one JSON object per line
+    ({\"schema\":1,\"ts\":\"...\",\"event\":\"run.start\",\"trace\":\"...\",...})
+    covering the whole run lifecycle (campaign.start, run.queued,
+    run.cache_hit, run.start, run.done/failed/crashed, cache.store,
+    campaign.end).  Every run gets a trace id minted at the driver and
+    carried through the proto-v5 RunRequest frame to remote agents and
+    their worker children, so one grep follows a run across machines.
+    The journal is a pure observer: the stable <name>.campaign.json is
+    byte-identical with journaling on or off.
+    --no-journal         do not write the campaign event journal
+    Process-wide metrics (queue depth, cache hit/miss, crash requeues,
+    backoff attempts, blob bytes staged, heartbeat gaps, ...) are kept
+    in an in-process registry; agents snapshot theirs into the `Stats`
+    reply that `adpsgd status` renders.
+
+STATUS (live fleet/agent view):
+    adpsgd status --fleet r.example:7000 --remote-token sesame
+    --fleet HOST:PORT    list registry membership first (address, slots,
+                         remaining lease age), then query every member
+    --remote H:P[,...]   query these agents (in addition to any fleet
+                         members) for slots, in-flight runs, runs
+                         served, cache hit-rate, and metrics
+    --remote-token T     shared secret, as for campaign --remote
+    --timeout-secs S     per-agent dial/reply deadline (default 5)
+    --json               machine-readable: fleet members plus each
+                         agent's raw stats/metrics snapshot
+    An unreachable agent is reported and skipped; status itself only
+    fails when no agent could be queried at all.
+
 CACHE-GC (bound a long-lived run-cache directory):
     --cache-dir DIR      directory to collect ($ADPSGD_RUN_CACHE if omitted)
     --max-bytes N        evict oldest entries until the total fits N bytes
@@ -257,7 +293,15 @@ fn main() {
 }
 
 fn real_main() -> Result<()> {
-    let args = Args::parse_env(&["quick", "quiet", "json", "series", "no-cache", "dry-run"])?;
+    let args = Args::parse_env(&[
+        "quick",
+        "quiet",
+        "json",
+        "series",
+        "no-cache",
+        "dry-run",
+        "no-journal",
+    ])?;
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("campaign") => cmd_campaign(&args),
@@ -273,6 +317,8 @@ fn real_main() -> Result<()> {
         Some("agent") => cmd_agent(&args),
         // the fleet phonebook: agents announce, dispatchers list
         Some("registry") => cmd_registry(&args),
+        // live fleet/agent view: membership, leases, in-flight runs
+        Some("status") => cmd_status(&args),
         Some("help") | None => {
             print!("{HELP}");
             Ok(())
@@ -513,7 +559,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         collective_names.iter().map(|c| c.parse()).collect::<Result<_>>()?;
     builder = builder.collectives(&algos);
 
-    let opts = dispatch_options(args)?;
+    let mut opts = dispatch_options(args)?;
     // validate the post-campaign GC request up front: a bad flag must
     // fail *before* hours of sweep, not after
     let cache_max_bytes: Option<u64> = match args.get("cache-max-bytes") {
@@ -527,6 +573,19 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         None => None,
     };
     let campaign = builder.build()?;
+
+    let out_dir = std::path::PathBuf::from(args.get_or("out", "results"));
+    std::fs::create_dir_all(&out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    // the event journal rides next to the stable summary; it is a pure
+    // observer, so the summary stays byte-identical with or without it
+    if !args.flag("no-journal") {
+        let jpath = out_dir.join(format!("{name}.campaign.jsonl"));
+        opts.journal = Some(
+            adpsgd::obs::Journal::create(&jpath)
+                .with_context(|| format!("creating event journal {}", jpath.display()))?,
+        );
+    }
 
     let json_out = args.flag("json");
     if !json_out {
@@ -566,9 +625,6 @@ fn cmd_campaign(args: &Args) -> Result<()> {
         );
     }
 
-    let out_dir = std::path::PathBuf::from(args.get_or("out", "results"));
-    std::fs::create_dir_all(&out_dir)
-        .with_context(|| format!("creating {}", out_dir.display()))?;
     let path = out_dir.join(format!("{name}.campaign.json"));
     // the stable summary: byte-identical when re-run against a warm cache
     std::fs::write(&path, report.to_json_stable().to_string_compact())
@@ -591,13 +647,13 @@ fn cmd_campaign(args: &Args) -> Result<()> {
 
 fn gc_summary(dir: &std::path::Path, stats: &adpsgd::dispatch::GcStats) -> String {
     format!(
-        "cache-gc {}: {} entries scanned, {} evicted ({} bytes), {} kept ({} bytes), {} orphaned tmp swept",
+        "cache-gc {}: {} entries scanned, {} evicted ({}), {} kept ({}), {} orphaned tmp swept",
         dir.display(),
         stats.scanned,
         stats.evicted,
-        stats.evicted_bytes,
+        adpsgd::util::fmt::bytes(stats.evicted_bytes),
         stats.kept,
-        stats.kept_bytes,
+        adpsgd::util::fmt::bytes(stats.kept_bytes),
         stats.tmp_swept,
     )
 }
@@ -634,29 +690,29 @@ fn cmd_cache_gc(args: &Args) -> Result<()> {
             .with_context(|| format!("planning gc of run cache {}", dir.display()))?;
         for v in &plan.evict {
             println!(
-                "would evict {}  ({} bytes, age {:.0}s)",
+                "would evict {}  ({}, age {:.0}s)",
                 v.path.display(),
-                v.bytes,
+                adpsgd::util::fmt::bytes(v.bytes),
                 v.age.as_secs_f64()
             );
         }
         for v in &plan.tmp_sweep {
             println!(
-                "would sweep {}  ({} bytes, age {:.0}s)",
+                "would sweep {}  ({}, age {:.0}s)",
                 v.path.display(),
-                v.bytes,
+                adpsgd::util::fmt::bytes(v.bytes),
                 v.age.as_secs_f64()
             );
         }
         println!(
-            "cache-gc {} (dry run): {} entries scanned, {} would be evicted ({} bytes), \
-             {} kept ({} bytes), {} orphaned tmp would be swept",
+            "cache-gc {} (dry run): {} entries scanned, {} would be evicted ({}), \
+             {} kept ({}), {} orphaned tmp would be swept",
             dir.display(),
             plan.scanned,
             plan.evict.len(),
-            plan.evicted_bytes(),
+            adpsgd::util::fmt::bytes(plan.evicted_bytes()),
             plan.kept,
-            plan.kept_bytes,
+            adpsgd::util::fmt::bytes(plan.kept_bytes),
             plan.tmp_sweep.len(),
         );
         return Ok(());
@@ -722,6 +778,112 @@ fn cmd_registry(args: &Args) -> Result<()> {
         anyhow::anyhow!("registry needs --listen HOST:PORT (e.g. --listen 0.0.0.0:7000)")
     })?;
     adpsgd::dispatch::Registry::bind(listen)?.serve()
+}
+
+/// `adpsgd status`: the live fleet/agent view.  Lists `--fleet`
+/// registry membership (address, advertised slots, remaining lease),
+/// then queries every member plus any static `--remote` agents over
+/// the proto `Stats` frame for slots, in-flight runs, runs served,
+/// cache hit-rate, and (with `--json`) the agent's full metrics
+/// snapshot.  Unreachable agents are reported and skipped; the command
+/// only fails when no agent could be queried at all.
+fn cmd_status(args: &Args) -> Result<()> {
+    use adpsgd::util::json::Json;
+    reject_unknown_options(args, &["fleet", "remote", "remote-token", "timeout-secs"])?;
+    let secs = args.get_f64("timeout-secs", 5.0).context("--timeout-secs")?;
+    if !secs.is_finite() || secs <= 0.0 || secs > 86_400.0 {
+        bail!("--timeout-secs must be a positive number of seconds (≤ 1 day), got {secs}");
+    }
+    let timeout = std::time::Duration::from_secs_f64(secs);
+    let token = args.get("remote-token");
+    let json_out = args.flag("json");
+
+    let mut endpoints: Vec<String> = Vec::new();
+    if let Some(list) = args.get("remote") {
+        endpoints = list.split(',').map(|a| a.trim().to_string()).collect();
+        adpsgd::dispatch::fleet::validate_endpoints(&endpoints)?;
+    }
+    let mut fleet_members: Vec<Json> = Vec::new();
+    if let Some(registry) = args.get("fleet") {
+        let members = adpsgd::dispatch::fleet::registry::members(registry)
+            .with_context(|| format!("listing fleet registry {registry}"))?;
+        if !json_out {
+            println!("fleet {registry}: {} member(s)", members.len());
+            for m in &members {
+                println!(
+                    "  {}  slots {}  lease {:.1}s",
+                    m.addr,
+                    m.slots,
+                    m.lease_ms as f64 / 1e3
+                );
+            }
+        }
+        for m in &members {
+            fleet_members.push(Json::obj(vec![
+                ("addr", Json::str(m.addr.clone())),
+                ("slots", Json::num(m.slots as f64)),
+                ("lease_ms", Json::num(m.lease_ms as f64)),
+            ]));
+            if !endpoints.contains(&m.addr) {
+                endpoints.push(m.addr.clone());
+            }
+        }
+    }
+    if endpoints.is_empty() {
+        bail!(
+            "status needs at least one agent \
+             (--remote host:port[,host:port...] and/or --fleet host:port)"
+        );
+    }
+
+    let mut agents: Vec<Json> = Vec::new();
+    let mut reached = 0usize;
+    for addr in &endpoints {
+        let stats = adpsgd::dispatch::RemoteAgentClient::connect(addr, token, timeout)
+            .and_then(|client| client.stats(timeout));
+        match stats {
+            Ok(stats) => {
+                reached += 1;
+                if !json_out {
+                    let f = |k: &str| stats.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                    let (served, hits) = (f("served"), f("cache_hits"));
+                    let rate = if served > 0.0 { 100.0 * hits / served } else { 0.0 };
+                    println!(
+                        "agent {addr}: slots {}, in-flight {}, served {}, \
+                         cache hits {} ({rate:.0}%)",
+                        f("slots"),
+                        f("in_flight"),
+                        served,
+                        hits,
+                    );
+                }
+                agents.push(Json::obj(vec![
+                    ("addr", Json::str(addr.clone())),
+                    ("stats", stats),
+                ]));
+            }
+            Err(e) => {
+                if !json_out {
+                    println!("agent {addr}: unreachable ({e:#})");
+                }
+                agents.push(Json::obj(vec![
+                    ("addr", Json::str(addr.clone())),
+                    ("error", Json::str(format!("{e:#}"))),
+                ]));
+            }
+        }
+    }
+    if json_out {
+        let out = Json::obj(vec![
+            ("fleet", Json::Arr(fleet_members)),
+            ("agents", Json::Arr(agents)),
+        ]);
+        println!("{}", out.to_string_compact());
+    }
+    if reached == 0 {
+        bail!("no agent answered a status query ({} tried)", endpoints.len());
+    }
+    Ok(())
 }
 
 fn cmd_figures(args: &Args) -> Result<()> {

@@ -1,0 +1,341 @@
+//! The structured event journal: versioned JSONL spans written next to
+//! the stable campaign summary, plus the trace-id minting that lets one
+//! run be followed driver → agent → worker child.
+//!
+//! Every line is one self-describing JSON object:
+//!
+//! ```json
+//! {"schema":1,"ts":"2026-08-07T12:00:00.123Z","event":"run.start",
+//!  "trace":"9f2c41aa03de77b1","...":"event-specific fields"}
+//! ```
+//!
+//! `schema` is [`JOURNAL_SCHEMA`] and bumps on any incompatible line
+//! shape; `ts` is ISO-8601 UTC; `event` is a dotted component name
+//! (`campaign.*` from the driver, `run.*` from dispatch slots and the
+//! [`JournalObserver`] bridge, `cache.*` from the run cache path).
+//! `trace` is the per-run id minted by [`mint_trace_id`] at the driver
+//! and propagated through proto-v5 run-request frames, so grepping one
+//! id across the journal, an agent's log, and the worker protocol
+//! reconstructs a single run's full path through the fabric.
+//!
+//! The journal is strictly an *observer*: trace ids and journal lines
+//! never enter `ExperimentConfig`, cache digests, or stable summaries,
+//! so summaries are byte-identical with the journal on or off, and a
+//! journal write failure is counted (`obs.journal_write_errors`) but
+//! never fails the run.
+
+use crate::coordinator::observer::{RunEvent, RunObserver};
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Version of the journal line shape.  Bumps on incompatible change;
+/// readers reject lines from a different schema loudly instead of
+/// misreading them.
+pub const JOURNAL_SCHEMA: u64 = 1;
+
+struct JournalInner {
+    w: BufWriter<File>,
+    path: PathBuf,
+}
+
+/// A shared, cloneable handle on one append-only JSONL journal file.
+/// Clones share the writer, so dispatch slots, the fleet poller, and
+/// the driver all append to the same file without interleaving inside
+/// a line.
+#[derive(Clone)]
+pub struct Journal {
+    inner: Arc<Mutex<JournalInner>>,
+}
+
+impl std::fmt::Debug for Journal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let path = self.inner.lock().map(|i| i.path.display().to_string());
+        write!(f, "Journal({})", path.as_deref().unwrap_or("<poisoned>"))
+    }
+}
+
+impl Journal {
+    /// Create (truncating) the journal file at `path`.
+    pub fn create(path: impl Into<PathBuf>) -> Result<Journal> {
+        let path = path.into();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating journal dir {}", dir.display()))?;
+            }
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&path)
+            .with_context(|| format!("creating journal {}", path.display()))?;
+        Ok(Journal { inner: Arc::new(Mutex::new(JournalInner { w: BufWriter::new(file), path })) })
+    }
+
+    /// The journal file's path.
+    pub fn path(&self) -> PathBuf {
+        self.inner.lock().expect("journal lock").path.clone()
+    }
+
+    /// Append one event line.  `trace` attaches the run's trace id when
+    /// the event belongs to a specific run; `fields` carry the
+    /// event-specific payload.  Never fails: an I/O error is counted in
+    /// `obs.journal_write_errors` and the line is dropped.
+    pub fn emit(&self, event: &str, trace: Option<&str>, fields: Vec<(&str, Json)>) {
+        let mut pairs = vec![
+            ("schema", Json::num(JOURNAL_SCHEMA as f64)),
+            ("ts", Json::str(super::now_iso8601())),
+            ("event", Json::str(event)),
+        ];
+        if let Some(t) = trace {
+            pairs.push(("trace", Json::str(t)));
+        }
+        pairs.extend(fields);
+        let line = Json::obj(pairs).to_string_compact();
+        let mut inner = self.inner.lock().expect("journal lock");
+        let wrote = inner
+            .w
+            .write_all(line.as_bytes())
+            .and_then(|()| inner.w.write_all(b"\n"))
+            // flush per line so a crashed campaign still leaves a
+            // readable journal up to the crash point
+            .and_then(|()| inner.w.flush());
+        if wrote.is_err() {
+            super::metrics::metrics().counter("obs.journal_write_errors").inc();
+        }
+    }
+}
+
+/// Parse and validate one journal line against the versioned schema:
+/// it must be a JSON object carrying `schema == JOURNAL_SCHEMA`, an
+/// ISO-8601-shaped `ts` string, and a non-empty `event` name.  Returns
+/// the parsed object so callers can inspect event-specific fields.
+pub fn parse_line(line: &str) -> Result<Json> {
+    let v = Json::parse(line.trim()).map_err(|e| anyhow!("journal line: {e}"))?;
+    match v.get("schema").and_then(Json::as_f64) {
+        Some(s) if s as u64 == JOURNAL_SCHEMA => {}
+        got => {
+            return Err(anyhow!(
+                "journal line schema {:?} (this reader speaks {JOURNAL_SCHEMA})",
+                got.map(|s| s as u64)
+            ))
+        }
+    }
+    let ts = v
+        .get("ts")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("journal line without \"ts\""))?;
+    if ts.len() < 20 || !ts.contains('T') || !ts.ends_with('Z') {
+        return Err(anyhow!("journal line with malformed timestamp {ts:?}"));
+    }
+    match v.get("event").and_then(Json::as_str) {
+        Some(e) if !e.is_empty() => {}
+        _ => return Err(anyhow!("journal line without \"event\"")),
+    }
+    Ok(v)
+}
+
+/// Read every line of a journal file through [`parse_line`], failing on
+/// the first malformed line (test and smoke helper).
+pub fn read_all(path: &Path) -> Result<Vec<Json>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading journal {}", path.display()))?;
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .enumerate()
+        .map(|(i, l)| parse_line(l).with_context(|| format!("journal line {}", i + 1)))
+        .collect()
+}
+
+static TRACE_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Mint a fresh 16-hex-char trace id: wall-clock nanos, pid, and a
+/// process-local counter folded through a splitmix64 finalizer, so ids
+/// are unique across concurrent runs *and* across driver processes
+/// sharing one journal directory.
+pub fn mint_trace_id() -> String {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let ctr = TRACE_COUNTER.fetch_add(1, Ordering::Relaxed);
+    let mut z = nanos
+        ^ ((std::process::id() as u64) << 32)
+        ^ ctr.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    format!("{z:016x}")
+}
+
+/// Bridges the coordinator's [`RunEvent`] stream into the journal:
+/// every event except the per-iteration `IterEnd` (too hot — one line
+/// per training step would dwarf the rest of the journal) becomes a
+/// `run.*` line carrying the run's trace id and label.
+pub struct JournalObserver {
+    journal: Journal,
+    trace: String,
+    label: String,
+}
+
+impl JournalObserver {
+    pub fn new(journal: Journal, trace: impl Into<String>, label: impl Into<String>) -> Self {
+        JournalObserver { journal, trace: trace.into(), label: label.into() }
+    }
+}
+
+impl RunObserver for JournalObserver {
+    fn on_event(&mut self, ev: &RunEvent<'_>) -> Result<()> {
+        let label = ("run", Json::str(self.label.clone()));
+        match ev {
+            RunEvent::RunStart { n_params, resume_iter, .. } => self.journal.emit(
+                "run.start",
+                Some(&self.trace),
+                vec![
+                    label,
+                    ("n_params", Json::num(*n_params as f64)),
+                    ("resume_iter", Json::num(*resume_iter as f64)),
+                ],
+            ),
+            // one line per training iteration would dwarf the journal
+            RunEvent::IterEnd { .. } => {}
+            RunEvent::SyncDone { k, s_k, period, bytes } => self.journal.emit(
+                "run.sync",
+                Some(&self.trace),
+                vec![
+                    label,
+                    ("k", Json::num(*k as f64)),
+                    ("s_k", Json::num(*s_k)),
+                    ("period", Json::num(*period as f64)),
+                    ("bytes", Json::num(*bytes as f64)),
+                ],
+            ),
+            RunEvent::VarProbe { k, var } => self.journal.emit(
+                "run.var_probe",
+                Some(&self.trace),
+                vec![label, ("k", Json::num(*k as f64)), ("var", Json::num(*var))],
+            ),
+            RunEvent::EvalDone { k, loss, acc } => self.journal.emit(
+                "run.eval",
+                Some(&self.trace),
+                vec![
+                    label,
+                    ("k", Json::num(*k as f64)),
+                    ("loss", Json::num(*loss)),
+                    ("acc", Json::num(*acc)),
+                ],
+            ),
+            // metadata only: the parameter snapshot itself never enters
+            // the journal
+            RunEvent::CheckpointDue { iter, mean_loss, .. } => self.journal.emit(
+                "run.checkpoint",
+                Some(&self.trace),
+                vec![
+                    label,
+                    ("iter", Json::num(*iter as f64)),
+                    ("mean_loss", Json::num(*mean_loss)),
+                ],
+            ),
+            RunEvent::RunEnd { iters } => self.journal.emit(
+                "run.end",
+                Some(&self.trace),
+                vec![label, ("iters", Json::num(*iters as f64))],
+            ),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_journal(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("adpsgd_journal_{tag}_{}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn trace_ids_are_hex_and_distinct() {
+        let a = mint_trace_id();
+        let b = mint_trace_id();
+        assert_eq!(a.len(), 16);
+        assert!(a.chars().all(|c| c.is_ascii_hexdigit()), "{a}");
+        assert_ne!(a, b, "two mints must differ");
+    }
+
+    #[test]
+    fn emitted_lines_round_trip_through_the_schema_parser() {
+        let path = tmp_journal("roundtrip");
+        let j = Journal::create(&path).unwrap();
+        let trace = mint_trace_id();
+        j.emit("campaign.start", None, vec![("runs", Json::num(3.0))]);
+        j.emit("run.queued", Some(&trace), vec![("run", Json::str("r0"))]);
+        let lines = read_all(&path).unwrap();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].get("event").unwrap().as_str(), Some("campaign.start"));
+        assert_eq!(lines[0].get("runs").unwrap().as_f64(), Some(3.0));
+        assert!(lines[0].get("trace").is_none(), "campaign events carry no trace");
+        assert_eq!(lines[1].get("trace").unwrap().as_str(), Some(trace.as_str()));
+        assert_eq!(
+            lines[1].get("schema").unwrap().as_f64(),
+            Some(JOURNAL_SCHEMA as f64)
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn parse_line_rejects_alien_and_malformed_lines() {
+        let err = parse_line("{\"schema\":99,\"ts\":\"2026-01-01T00:00:00.000Z\",\
+                              \"event\":\"x\"}")
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("schema"), "{err:#}");
+        assert!(parse_line("not json").is_err());
+        assert!(
+            parse_line("{\"schema\":1,\"event\":\"x\"}").is_err(),
+            "a line without ts must be rejected"
+        );
+        assert!(
+            parse_line("{\"schema\":1,\"ts\":\"yesterday\",\"event\":\"x\"}").is_err(),
+            "a non-ISO timestamp must be rejected"
+        );
+        assert!(
+            parse_line("{\"schema\":1,\"ts\":\"2026-01-01T00:00:00.000Z\"}").is_err(),
+            "a line without event must be rejected"
+        );
+    }
+
+    #[test]
+    fn journal_observer_bridges_events_and_skips_iter_end() {
+        let path = tmp_journal("observer");
+        let j = Journal::create(&path).unwrap();
+        let trace = mint_trace_id();
+        let cfg = crate::config::ExperimentConfig::default();
+        let mut obs = JournalObserver::new(j, &trace, "adaptive/n8");
+        obs.on_event(&RunEvent::RunStart { cfg: &cfg, n_params: 64, resume_iter: 0 }).unwrap();
+        obs.on_event(&RunEvent::IterEnd { k: 0, lr: 0.1, loss: Some(1.0) }).unwrap();
+        obs.on_event(&RunEvent::SyncDone { k: 3, s_k: 0.5, period: 4, bytes: 256 }).unwrap();
+        obs.on_event(&RunEvent::EvalDone { k: 9, loss: 1.5, acc: 0.7 }).unwrap();
+        obs.on_event(&RunEvent::RunEnd { iters: 10 }).unwrap();
+        let lines = read_all(&path).unwrap();
+        let events: Vec<&str> =
+            lines.iter().map(|l| l.get("event").unwrap().as_str().unwrap()).collect();
+        assert_eq!(
+            events,
+            vec!["run.start", "run.sync", "run.eval", "run.end"],
+            "IterEnd must not reach the journal"
+        );
+        for l in &lines {
+            assert_eq!(l.get("trace").unwrap().as_str(), Some(trace.as_str()));
+            assert_eq!(l.get("run").unwrap().as_str(), Some("adaptive/n8"));
+        }
+        assert_eq!(lines[1].get("bytes").unwrap().as_f64(), Some(256.0));
+        std::fs::remove_file(&path).ok();
+    }
+}

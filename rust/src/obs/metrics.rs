@@ -1,0 +1,272 @@
+//! Process-wide metrics registry: named counters, gauges, and
+//! histograms behind a cheap static handle.
+//!
+//! Instrumentation sites call [`metrics()`] once, keep the returned
+//! [`Counter`] / [`Gauge`] / [`Histogram`] handle (an `Arc` around an
+//! atomic), and bump it lock-free on the hot path — the registry lock
+//! is taken only at registration and snapshot time.  Handles for the
+//! same name share one underlying cell, so a counter bumped in the
+//! dispatcher and snapshotted by `adpsgd status` agree without any
+//! plumbing.
+//!
+//! [`Metrics::snapshot`] renders the whole registry as deterministic
+//! JSON (keys sorted — the maps are `BTreeMap`s), which is what the
+//! agent answers a [`crate::dispatch::proto::Frame::StatsRequest`]
+//! with and what `adpsgd status --json` prints.
+//!
+//! Registered names in this crate (the metrics glossary):
+//!
+//! | name                        | kind      | meaning |
+//! |-----------------------------|-----------|---------|
+//! | `dispatch.queue_depth`      | gauge     | runs waiting in the dispatcher queue |
+//! | `dispatch.slots_busy`       | gauge     | slot threads currently executing a run |
+//! | `dispatch.cache_hits`       | counter   | runs answered from the run cache |
+//! | `dispatch.cache_misses`     | counter   | runs that had to execute |
+//! | `dispatch.crash_requeues`   | counter   | crashed runs put back on the queue |
+//! | `dispatch.blob_bytes_staged`| counter   | warm-start snapshot bytes pushed to agents |
+//! | `fleet.backoff_attempts`    | counter   | redial attempts against dropped agents |
+//! | `fleet.members_joined`      | counter   | agents adopted from the registry poll |
+//! | `remote.heartbeat_gap_ms`   | histogram | observed gap between remote liveness signals |
+//! | `agent.runs_served`         | counter   | runs an agent daemon has answered |
+//! | `agent.cache_hits`          | counter   | agent-side runs answered from its cache |
+//! | `agent.blob_bytes_staged`   | counter   | blob bytes an agent accepted from dispatchers |
+//! | `obs.journal_write_errors`  | counter   | journal lines dropped on I/O error |
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A monotonically increasing count.  Cloning shares the cell.
+#[derive(Debug, Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A signed instantaneous level (queue depth, busy slots).
+#[derive(Debug, Clone)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+#[derive(Debug, Default)]
+struct HistoInner {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+/// A value distribution summarized as count/sum/min/max (enough for
+/// mean latency and outlier spotting without bucket bookkeeping).
+#[derive(Debug, Clone)]
+pub struct Histogram(Arc<Mutex<HistoInner>>);
+
+impl Histogram {
+    pub fn observe(&self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let mut h = self.0.lock().expect("histogram lock");
+        if h.count == 0 {
+            h.min = v;
+            h.max = v;
+        } else {
+            h.min = h.min.min(v);
+            h.max = h.max.max(v);
+        }
+        h.count += 1;
+        h.sum += v;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.lock().expect("histogram lock").count
+    }
+}
+
+/// The registry itself.  Obtain the process-wide instance via
+/// [`metrics()`].
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, Counter>>,
+    gauges: Mutex<BTreeMap<String, Gauge>>,
+    histograms: Mutex<BTreeMap<String, Histogram>>,
+}
+
+impl Metrics {
+    /// Get (registering on first use) the counter named `name`.
+    pub fn counter(&self, name: &str) -> Counter {
+        self.counters
+            .lock()
+            .expect("metrics counters lock")
+            .entry(name.to_string())
+            .or_insert_with(|| Counter(Arc::new(AtomicU64::new(0))))
+            .clone()
+    }
+
+    /// Get (registering on first use) the gauge named `name`.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        self.gauges
+            .lock()
+            .expect("metrics gauges lock")
+            .entry(name.to_string())
+            .or_insert_with(|| Gauge(Arc::new(AtomicI64::new(0))))
+            .clone()
+    }
+
+    /// Get (registering on first use) the histogram named `name`.
+    pub fn histogram(&self, name: &str) -> Histogram {
+        self.histograms
+            .lock()
+            .expect("metrics histograms lock")
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram(Arc::new(Mutex::new(HistoInner::default()))))
+            .clone()
+    }
+
+    /// Render every registered metric as deterministic JSON:
+    /// `{"counters":{name:n,…},"gauges":{…},"histograms":{name:
+    /// {"count":…,"sum":…,"min":…,"max":…},…}}`.
+    pub fn snapshot(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .lock()
+            .expect("metrics counters lock")
+            .iter()
+            .map(|(k, c)| (k.clone(), Json::num(c.get() as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> = self
+            .gauges
+            .lock()
+            .expect("metrics gauges lock")
+            .iter()
+            .map(|(k, g)| (k.clone(), Json::num(g.get() as f64)))
+            .collect();
+        let histograms: BTreeMap<String, Json> = self
+            .histograms
+            .lock()
+            .expect("metrics histograms lock")
+            .iter()
+            .map(|(k, h)| {
+                let inner = h.0.lock().expect("histogram lock");
+                (
+                    k.clone(),
+                    Json::obj(vec![
+                        ("count", Json::num(inner.count as f64)),
+                        ("sum", Json::num(inner.sum)),
+                        ("min", Json::num(if inner.count == 0 { 0.0 } else { inner.min })),
+                        ("max", Json::num(if inner.count == 0 { 0.0 } else { inner.max })),
+                    ]),
+                )
+            })
+            .collect();
+        Json::Obj(
+            [
+                ("counters".to_string(), Json::Obj(counters)),
+                ("gauges".to_string(), Json::Obj(gauges)),
+                ("histograms".to_string(), Json::Obj(histograms)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+}
+
+static METRICS: OnceLock<Metrics> = OnceLock::new();
+
+/// The process-wide metrics registry.
+pub fn metrics() -> &'static Metrics {
+    METRICS.get_or_init(Metrics::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_for_the_same_name_share_one_cell() {
+        let m = Metrics::default();
+        let a = m.counter("test.shared");
+        let b = m.counter("test.shared");
+        a.add(3);
+        b.inc();
+        assert_eq!(a.get(), 4);
+        assert_eq!(b.get(), 4);
+    }
+
+    #[test]
+    fn gauge_tracks_level_not_total() {
+        let m = Metrics::default();
+        let g = m.gauge("test.depth");
+        g.add(5);
+        g.add(-2);
+        assert_eq!(g.get(), 3);
+        g.set(0);
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn histogram_summarizes_and_ignores_non_finite() {
+        let m = Metrics::default();
+        let h = m.histogram("test.lat");
+        h.observe(2.0);
+        h.observe(8.0);
+        h.observe(f64::NAN);
+        assert_eq!(h.count(), 2);
+        let snap = m.snapshot();
+        let lat = snap.get("histograms").unwrap().get("test.lat").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_f64(), Some(2.0));
+        assert_eq!(lat.get("sum").unwrap().as_f64(), Some(10.0));
+        assert_eq!(lat.get("min").unwrap().as_f64(), Some(2.0));
+        assert_eq!(lat.get("max").unwrap().as_f64(), Some(8.0));
+    }
+
+    #[test]
+    fn snapshot_is_deterministic_json() {
+        let m = Metrics::default();
+        m.counter("test.b").inc();
+        m.counter("test.a").add(2);
+        m.gauge("test.g").set(-1);
+        let text = m.snapshot().to_string_compact();
+        // keys sorted, one stable rendering
+        assert_eq!(
+            text,
+            "{\"counters\":{\"test.a\":2,\"test.b\":1},\"gauges\":{\"test.g\":-1},\
+             \"histograms\":{}}"
+        );
+        // and it round-trips through the parser
+        assert!(Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn process_wide_handle_is_stable() {
+        let c = metrics().counter("test.process_wide");
+        let before = c.get();
+        metrics().counter("test.process_wide").inc();
+        assert_eq!(c.get(), before + 1);
+    }
+}

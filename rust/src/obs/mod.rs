@@ -1,0 +1,120 @@
+//! # obs — process-wide observability
+//!
+//! One telemetry layer spanning coordinator → dispatch → fleet →
+//! agent, in three pieces:
+//!
+//! * **Metrics** ([`metrics()`], [`Metrics`]) — named counters, gauges,
+//!   and histograms behind a cheap static handle, bumped lock-free on
+//!   hot paths and snapshotted to deterministic JSON on demand.  The
+//!   agent daemon answers `adpsgd status` (a proto-v5 `stats_request`)
+//!   with exactly this snapshot; see the glossary table in
+//!   [`metrics`].
+//! * **Journal** ([`Journal`], [`JournalObserver`]) — a versioned
+//!   JSONL event stream (`<name>.campaign.jsonl`, written next to the
+//!   stable summary) where every dispatch-fabric event (`run.queued`,
+//!   `run.cache_hit`, `cache.store`, `run.crashed`, …) and every
+//!   bridged coordinator [`crate::coordinator::observer::RunEvent`]
+//!   lands as one self-describing line.  Lines carry the
+//!   [`mint_trace_id`] per-run trace id, which also rides proto-v5
+//!   run-request frames so one run is greppable driver → agent →
+//!   worker child.
+//! * **Logging** ([`log!`](crate::obs_log), [`log_line`]) — the one
+//!   diagnostic funnel for the dispatch/fleet fabric: every message
+//!   gets an ISO-8601 UTC timestamp and a `[component]` tag, so
+//!   interleaved output from slot threads, the fleet poller, and agent
+//!   sessions stays attributable.
+//!
+//! Telemetry is strictly an observer of the system: nothing here ever
+//! enters `ExperimentConfig`, cache digests, or stable campaign
+//! summaries, which therefore stay byte-identical with telemetry on or
+//! off.
+
+pub mod journal;
+pub mod metrics;
+
+pub use journal::{mint_trace_id, parse_line, Journal, JournalObserver, JOURNAL_SCHEMA};
+pub use metrics::{metrics, Counter, Gauge, Histogram, Metrics};
+
+/// Timestamped, component-tagged diagnostic line on stderr:
+/// `2026-08-07T12:00:00.123Z [dispatch] message`.  Prefer the
+/// [`log!`](crate::obs_log) macro, which formats inline.
+pub fn log_line(component: &str, msg: &str) {
+    eprintln!("{} [{component}] {msg}", now_iso8601());
+}
+
+/// `obs::log!("component", "format {}", args…)` — the crate's one
+/// diagnostic macro.  Exported at the crate root as `obs_log!` (macro
+/// namespace) and re-exported here as `obs::log!`.
+#[macro_export]
+macro_rules! obs_log {
+    ($component:expr, $($arg:tt)*) => {
+        $crate::obs::log_line($component, &format!($($arg)*))
+    };
+}
+
+pub use crate::obs_log as log;
+
+/// Current wall-clock time as ISO-8601 UTC with millisecond precision.
+pub fn now_iso8601() -> String {
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap_or_default();
+    iso8601_from_epoch(now.as_secs(), now.subsec_millis())
+}
+
+/// Render `secs` (+ `millis`) since the Unix epoch as
+/// `YYYY-MM-DDTHH:MM:SS.mmmZ` — hand-rolled (no chrono in the offline
+/// registry) via the standard civil-from-days date algorithm.
+pub fn iso8601_from_epoch(secs: u64, millis: u32) -> String {
+    let days = (secs / 86_400) as i64;
+    let rem = secs % 86_400;
+    let (h, mi, s) = (rem / 3_600, (rem % 3_600) / 60, rem % 60);
+    let (y, m, d) = civil_from_days(days);
+    format!("{y:04}-{m:02}-{d:02}T{h:02}:{mi:02}:{s:02}.{millis:03}Z")
+}
+
+/// Proleptic-Gregorian date from days since 1970-01-01 (Howard
+/// Hinnant's `civil_from_days`).
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = (z - era * 146_097) as u64; // [0, 146096]
+    let yoe = (doe - doe / 1_460 + doe / 36_524 - doe / 146_096) / 365; // [0, 399]
+    let y = yoe as i64 + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100); // [0, 365]
+    let mp = (5 * doy + 2) / 153; // [0, 11]
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32; // [1, 31]
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32; // [1, 12]
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_epoch_instants_render_correctly() {
+        assert_eq!(iso8601_from_epoch(0, 0), "1970-01-01T00:00:00.000Z");
+        // 2004-02-29 leap day: 12_477 days + 12:34:56.789
+        assert_eq!(iso8601_from_epoch(1_078_058_096, 789), "2004-02-29T12:34:56.789Z");
+        // end-of-year rollover
+        assert_eq!(iso8601_from_epoch(1_767_225_599, 999), "2025-12-31T23:59:59.999Z");
+        assert_eq!(iso8601_from_epoch(1_767_225_600, 0), "2026-01-01T00:00:00.000Z");
+    }
+
+    #[test]
+    fn now_is_iso_shaped() {
+        let ts = now_iso8601();
+        assert_eq!(ts.len(), 24, "{ts}");
+        assert_eq!(&ts[4..5], "-");
+        assert_eq!(&ts[10..11], "T");
+        assert!(ts.ends_with('Z'), "{ts}");
+    }
+
+    #[test]
+    fn log_macro_formats_through_the_funnel() {
+        // smoke: must compile with both plain and formatted arguments
+        crate::obs::log!("test", "plain message");
+        crate::obs::log!("test", "run {} finished in {:.1}s", 7, 1.25);
+    }
+}

@@ -464,7 +464,7 @@ fn stale_terminal_frames_are_discarded_not_protocol_violations() {
         format!(
             "#!/bin/sh\n\
              read -r line\n\
-             printf '{{\"type\":\"error\",\"id\":0,\"message\":\"stale\",\"v\":4}}\\n'\n\
+             printf '{{\"type\":\"error\",\"id\":0,\"message\":\"stale\",\"v\":5}}\\n'\n\
              {{ printf '%s\\n' \"$line\"; cat; }} | {:?} worker\n",
             worker_exe()
         ),
@@ -916,6 +916,128 @@ fn restarted_agent_is_redialed_and_the_campaign_completes() {
     }
 }
 
+/// Spawn a real `adpsgd agent` daemon on `addr` with its stdout teed to
+/// `log`, and wait until it announces its listen address.
+fn spawn_agent_daemon_logged(addr: &str, log: &std::path::Path) -> std::process::Child {
+    let out = std::fs::File::create(log).unwrap();
+    let child = std::process::Command::new(worker_exe())
+        .args(["agent", "--listen", addr, "--slots", "2"])
+        .stdout(std::process::Stdio::from(out))
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawning adpsgd agent");
+    for _ in 0..150 {
+        if std::fs::read_to_string(log)
+            .map(|s| s.contains("agent: listening on"))
+            .unwrap_or(false)
+        {
+            return child;
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    panic!("agent daemon must come up");
+}
+
+#[test]
+fn trace_id_follows_a_remote_run_across_journal_agent_and_cache() {
+    use adpsgd::util::json::Json;
+    let dir = tmpdir("trace");
+    let agent_log = dir.join("agent.log");
+    let addr = reserve_port();
+    let mut agent = spawn_agent_daemon_logged(&addr, &agent_log);
+
+    let cache_dir = dir.join("cache");
+    let journal_path = dir.join("trace.campaign.jsonl");
+    let base = quick_base();
+    let journaled = three_run_campaign(&base)
+        .execute(&DispatchOptions {
+            workers: WorkerKind::Remote,
+            remote: vec![addr.clone()],
+            cache_dir: Some(cache_dir.clone()),
+            journal: Some(adpsgd::obs::Journal::create(&journal_path).unwrap()),
+            ..DispatchOptions::default()
+        })
+        .expect("journaled remote campaign");
+    assert_eq!(journaled.runs.len(), 3);
+    agent.kill().ok();
+    agent.wait().ok();
+
+    // every line parses under the versioned schema, and the campaign
+    // brackets are present
+    let lines = adpsgd::obs::journal::read_all(&journal_path).expect("journal parses");
+    let events: Vec<&str> =
+        lines.iter().filter_map(|l| l.get("event").and_then(Json::as_str)).collect();
+    assert_eq!(events.len(), lines.len(), "every line carries an event");
+    assert_eq!(events.first(), Some(&"campaign.start"));
+    assert_eq!(events.last(), Some(&"campaign.end"));
+
+    // leg 1: the driver journaled a remote run.start with a trace id
+    let start = lines
+        .iter()
+        .find(|l| {
+            l.get("event").and_then(Json::as_str) == Some("run.start")
+                && l.get("slot")
+                    .and_then(Json::as_str)
+                    .is_some_and(|s| s.starts_with("remote:"))
+        })
+        .expect("a remote run.start must be journaled");
+    let trace =
+        start.get("trace").and_then(Json::as_str).expect("run.start carries a trace").to_string();
+
+    // leg 2: the agent logged its handling of the SAME trace (the v5
+    // RunRequest frame carried it across the TCP hop)
+    let agent_out = std::fs::read_to_string(&agent_log).unwrap();
+    assert!(
+        agent_out.contains(&trace),
+        "agent-side handling must name trace {trace}:\n{agent_out}"
+    );
+
+    // leg 3: the cache.store journaled under the same trace names the
+    // digest of the cached RunReport actually sitting on disk
+    let store = lines
+        .iter()
+        .find(|l| {
+            l.get("event").and_then(Json::as_str) == Some("cache.store")
+                && l.get("trace").and_then(Json::as_str) == Some(trace.as_str())
+        })
+        .expect("the traced run's cache.store must be journaled");
+    let digest = store.get("digest").and_then(Json::as_str).unwrap();
+    let cached = cache_dir.join(format!("{digest}.run.json"));
+    assert!(cached.is_file(), "cached RunReport {} must exist", cached.display());
+
+    // and journaling must be a pure observer: the stable summary is
+    // byte-identical with the journal on or off (thread workers attach
+    // the full per-event JournalObserver stream — the strongest case)
+    let onoff_path = dir.join("onoff.campaign.jsonl");
+    let on = three_run_campaign(&base)
+        .execute(&DispatchOptions {
+            jobs: Some(2),
+            cache_dir: None,
+            journal: Some(adpsgd::obs::Journal::create(&onoff_path).unwrap()),
+            ..DispatchOptions::default()
+        })
+        .unwrap();
+    let off = three_run_campaign(&base)
+        .execute(&DispatchOptions {
+            jobs: Some(2),
+            cache_dir: None,
+            ..DispatchOptions::default()
+        })
+        .unwrap();
+    assert_eq!(
+        on.to_json_stable().to_string_compact(),
+        off.to_json_stable().to_string_compact(),
+        "the stable summary must not change when journaling is enabled"
+    );
+    // the detailed stream really was captured for in-process runs
+    let on_lines = adpsgd::obs::journal::read_all(&onoff_path).unwrap();
+    assert!(
+        on_lines.iter().any(|l| l.get("event").and_then(Json::as_str) == Some("run.sync")),
+        "thread workers must journal the typed event stream"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn fleet_member_joining_late_is_discovered_and_serves_the_campaign() {
     use adpsgd::dispatch::Registry;
@@ -1050,7 +1172,7 @@ fn cancel_frame_kills_the_orphaned_run_in_the_agents_worker_child() {
     cfg.iters = 2_000_000;
     cfg.eval_every = 1_000_000;
     cfg.variance_every = 0;
-    write_frame(&mut writer, &Frame::RunRequest { id: 7, cfg }).unwrap();
+    write_frame(&mut writer, &Frame::RunRequest { id: 7, cfg, trace: None }).unwrap();
 
     // the first heartbeat proves the child is training; then cancel
     loop {
