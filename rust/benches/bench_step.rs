@@ -8,12 +8,21 @@
 //! between the two (see `tensor::par`), so the column is pure
 //! throughput.  The final `mlp_wide/d1024h1024` row is the 1e6+ param
 //! geometry where kernel parallelism should pay for its dispatch.
+//!
+//! The closing section prices one whole tiny run under the cluster
+//! model twice — a uniform cluster and a 4x straggler — and emits the
+//! skewed-vs-uniform modeled-wall-clock column to `BENCH_step.json`
+//! (`BENCH_STEP_JSON` on stdout): how much of the injected skew the BSP
+//! barrier absorbs is a perf trajectory number like any other, and the
+//! parameter trajectory is asserted identical between the two runs.
 
-use adpsgd::config::WorkloadConfig;
+use adpsgd::config::{ExperimentConfig, LrSchedule, WorkloadConfig};
 use adpsgd::coordinator::engine::{Engine, NativeEngine};
 use adpsgd::data::SynthClass;
+use adpsgd::experiment::Experiment;
 use adpsgd::tensor::par;
 use adpsgd::util::bench::{Measurement, Runner};
+use adpsgd::util::json::Json;
 use adpsgd::util::rng::Rng;
 use adpsgd::workload::build;
 
@@ -75,4 +84,58 @@ fn main() {
 
     par::set_threads(0);
     r.finish();
+
+    // ------------------------------------------ modeled wall clock
+    // one tiny CPSGD run priced under a uniform cluster and under a 4x
+    // straggler with seeded jitter: modeled_wall_secs is deterministic
+    // (config-declared step_us, never measured time), so the slowdown
+    // column is comparable across hosts and commits
+    let fast = std::env::var("ADPSGD_BENCH_FAST").is_ok();
+    let iters = if fast { 80 } else { 240 };
+    let run_modeled = |skewed: bool| {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = if skewed { "bench_step_skew".into() } else { "bench_step_uniform".into() };
+        cfg.nodes = 4;
+        cfg.iters = iters;
+        cfg.batch_per_node = 16;
+        cfg.eval_every = 0;
+        cfg.variance_every = 0;
+        cfg.workload.input_dim = 48;
+        cfg.workload.hidden = 24;
+        cfg.optim.schedule = LrSchedule::Const;
+        cfg.sync.strategy = adpsgd::period::Strategy::Constant;
+        cfg.sync.period = 4;
+        if skewed {
+            cfg.cluster.skew = "straggler:4.0".into();
+            cfg.cluster.jitter = 0.1;
+        }
+        Experiment::from_config(cfg).expect("bench config").run().expect("bench run")
+    };
+    let uniform = run_modeled(false);
+    let skewed = run_modeled(true);
+    assert_eq!(
+        uniform.final_train_loss, skewed.final_train_loss,
+        "skew must move modeled clocks, never the trajectory"
+    );
+    let slowdown = skewed.modeled_wall_secs / uniform.modeled_wall_secs.max(1e-12);
+    println!(
+        "{:<44} uniform {:>8.3}s  skewed {:>8.3}s  ({:.2}x slowdown)",
+        "step/modeled_wall (cpsgd, 4 nodes)", uniform.modeled_wall_secs, skewed.modeled_wall_secs,
+        slowdown
+    );
+
+    let summary = Json::obj(vec![
+        ("bench", Json::str("step")),
+        ("iters", Json::num(iters as f64)),
+        ("modeled_wall_secs_uniform", Json::num(uniform.modeled_wall_secs)),
+        ("modeled_wall_secs_skewed", Json::num(skewed.modeled_wall_secs)),
+        ("straggler_slowdown", Json::num(slowdown)),
+    ]);
+    let line = summary.to_string_compact();
+    println!("BENCH_STEP_JSON {line}");
+    if let Err(e) = std::fs::write("BENCH_step.json", &line) {
+        eprintln!("warning: could not write BENCH_step.json: {e}");
+    } else {
+        println!("wrote BENCH_step.json");
+    }
 }

@@ -18,7 +18,10 @@
 # an obs smoke (a journaled loopback-fleet campaign must write a
 # schema-valid event journal whose trace ids reach the agent's own log,
 # `adpsgd status` must report the advertised slots, and a --no-journal
-# rerun must write a byte-identical stable summary) +
+# rerun must write a byte-identical stable summary) + a robustness
+# smoke (the 5-strategy heterogeneity sweep — skew, faults, both
+# network presets — must write a byte-identical stable summary across
+# --jobs levels and cold/warm cache) +
 # the campaign/dispatch benches (emit BENCH_campaign.json /
 # BENCH_dispatch.json for the perf trajectory).  Referenced from
 # ROADMAP.md; CI and pre-merge checks should run exactly this.
@@ -261,6 +264,26 @@ cmp "${OBS_DIR}/on/obs_smoke.campaign.json" "${OBS_DIR}/off/obs_smoke.campaign.j
 kill "${OBS_REG_PID}" "${OBS_AGENT_PID}" 2>/dev/null || true
 trap - EXIT
 echo "   obs smoke OK (journal schema'd, trace ${OBS_TRACE} on both ends, status sees the slots)"
+
+echo "== verify: robustness smoke (strategy zoo under a straggler cluster) =="
+# the heterogeneity sweep: 5 strategies (adpsgd/cpsgd/adacomm/prsgd/
+# dasgd) x 2 networks x 3 scenarios (uniform / skew / faults).  Run it
+# cold at --jobs 4, then warm at --jobs 1: modeled clocks are
+# config-declared and all [cluster] randomness is seeded, so the stable
+# summary must be byte-identical across job counts and cache states.
+ROBUST_DIR=/tmp/adpsgd_verify_robust
+ROBUST_CACHE="${ROBUST_DIR}/cache"
+rm -rf "${ROBUST_DIR}"
+mkdir -p "${ROBUST_DIR}/a" "${ROBUST_DIR}/b"
+cargo run --release -- figures --only robustness --quick --jobs 4 \
+    --cache-dir "${ROBUST_CACHE}" --out "${ROBUST_DIR}/a"
+cargo run --release -- figures --only robustness --quick --jobs 1 \
+    --cache-dir "${ROBUST_CACHE}" --out "${ROBUST_DIR}/b"
+cmp "${ROBUST_DIR}/a/robustness.campaign.json" "${ROBUST_DIR}/b/robustness.campaign.json" \
+    || { echo "verify: FAIL — robustness summaries differ across jobs/cache states"; exit 1; }
+grep -q '"label":"dasgd_eth10_faulty"' "${ROBUST_DIR}/a/robustness.campaign.json" \
+    || { echo "verify: FAIL — the robustness sweep is missing its faulty DaSGD cell"; exit 1; }
+echo "   robustness smoke OK (cold jobs=4 == warm jobs=1, byte-identical)"
 
 echo "== verify: campaign scheduler bench (fast) =="
 ADPSGD_BENCH_FAST=1 cargo bench --bench bench_campaign

@@ -114,6 +114,14 @@ pub struct SyncConfig {
     pub easgd_period: Option<usize>,
     /// Top-k sparsification: fraction of gradient components kept.
     pub topk_frac: f64,
+    /// AdaComm: initial (and maximum) averaging period τ0.
+    pub adacomm_tau0: usize,
+    /// PR-SGD / DaSGD periods use the same per-strategy slot discipline
+    /// as `constant_period` / `easgd_period` (None = legacy `period`).
+    pub prsgd_period: Option<usize>,
+    pub dasgd_period: Option<usize>,
+    /// DaSGD: local steps the averaging result lags behind its launch.
+    pub dasgd_delay: usize,
     /// Which collective algorithm executes (and prices) the exchanges:
     /// `ring` (chunked reduce-scatter + all-gather, the default) or
     /// `flat` (leader-serialized reference).  Both produce bit-identical
@@ -140,6 +148,10 @@ impl Default for SyncConfig {
             constant_period: None,
             easgd_period: None,
             topk_frac: 0.03125,
+            adacomm_tau0: 16,
+            prsgd_period: None,
+            dasgd_period: None,
+            dasgd_delay: 2,
             collective: CollectiveAlgo::Ring,
         }
     }
@@ -159,12 +171,102 @@ impl Default for NetConfig {
 }
 
 impl NetConfig {
+    /// Preset names accepted by the `net.preset` config key.
+    pub const PRESETS: [&'static str; 2] = ["infiniband_100g", "ethernet_10g"];
+
     pub fn infiniband_100g() -> Self {
         NetConfig { bandwidth_gbps: 100.0, latency_us: 2.0 }
     }
     /// Paper's throttled-cloud setting (trickle to 5Gbps up/down).
     pub fn ethernet_10g() -> Self {
         NetConfig { bandwidth_gbps: 10.0, latency_us: 25.0 }
+    }
+
+    /// Look up a named preset; unknown names error listing the valid
+    /// set (the parse-time contract of the `net.preset` key).
+    pub fn preset(name: &str) -> Result<Self> {
+        match name {
+            "infiniband_100g" => Ok(Self::infiniband_100g()),
+            "ethernet_10g" => Ok(Self::ethernet_10g()),
+            other => bail!(
+                "net.preset: unknown preset {other:?} (valid presets: {})",
+                Self::PRESETS.join(", ")
+            ),
+        }
+    }
+}
+
+/// Seeded fault-injection schedule declared per run: *how many* node
+/// pauses and packet-delay spikes to place; concrete placement is
+/// derived deterministically by
+/// [`crate::netsim::cluster::FaultSchedule::generate`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// fault-placement seed; 0 = derive from the experiment seed
+    pub seed: u64,
+    /// number of node pauses to inject across the run
+    pub pauses: usize,
+    /// duration of each pause, seconds of modeled time
+    pub pause_secs: f64,
+    /// number of packet-delay spikes to inject
+    pub spikes: usize,
+    /// extra per-message latency while a spike is active, seconds
+    pub spike_secs: f64,
+    /// spike duration, iterations
+    pub spike_len: usize,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0,
+            pauses: 0,
+            pause_secs: 0.5,
+            spikes: 0,
+            spike_secs: 1e-3,
+            spike_len: 8,
+        }
+    }
+}
+
+/// Heterogeneous-cluster model configuration (the `[cluster]` table).
+/// All knobs here shape *modeled* clocks and comm pricing only — they
+/// never touch parameter math, so results stay bit-identical across
+/// every cluster setting of the same seed.  They are still
+/// result-affecting for the run report (modeled wall-clock), so every
+/// key enters the run-cache digest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// per-node compute skew spec: "none", "linear:<spread>" (factors
+    /// ramp 1.0 → 1.0+spread across ranks), or "straggler:<factor>"
+    /// (last rank is factor× slower)
+    pub skew: String,
+    /// explicit per-node compute factors (length = nodes); wins over
+    /// `skew` when non-empty
+    pub factors: Vec<f64>,
+    /// nominal modeled per-step compute time, microseconds
+    pub step_us: f64,
+    /// seeded per-step jitter as a fraction of the node's step time
+    pub jitter: f64,
+    /// per-node uplink bandwidth overrides, Gbps (length = nodes, or
+    /// empty for the uniform `[net]` link)
+    pub link_bw_gbps: Vec<f64>,
+    /// per-node uplink latency overrides, microseconds
+    pub link_latency_us: Vec<f64>,
+    pub faults: FaultConfig,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            skew: "none".into(),
+            factors: Vec::new(),
+            step_us: 1000.0,
+            jitter: 0.0,
+            link_bw_gbps: Vec::new(),
+            link_latency_us: Vec::new(),
+            faults: FaultConfig::default(),
+        }
     }
 }
 
@@ -234,6 +336,7 @@ pub struct ExperimentConfig {
     pub optim: OptimConfig,
     pub sync: SyncConfig,
     pub net: NetConfig,
+    pub cluster: ClusterConfig,
     /// directory with AOT artifacts (HLO backend)
     pub artifacts_dir: String,
     /// write a parameter snapshot every this many iterations (0 = off)
@@ -261,6 +364,7 @@ impl Default for ExperimentConfig {
             optim: OptimConfig::default(),
             sync: SyncConfig::default(),
             net: NetConfig::default(),
+            cluster: ClusterConfig::default(),
             artifacts_dir: "artifacts".into(),
             checkpoint_every: 0,
             checkpoint_dir: "checkpoints".into(),
@@ -317,6 +421,24 @@ impl ExperimentConfig {
         if self.net.bandwidth_gbps <= 0.0 || self.net.latency_us < 0.0 {
             bail!("network parameters must be positive");
         }
+        let cl = &self.cluster;
+        if !(cl.step_us > 0.0) || !cl.step_us.is_finite() {
+            bail!("cluster.step_us must be a positive finite number");
+        }
+        if !(0.0..1.0).contains(&cl.jitter) {
+            bail!("cluster.jitter must be in [0, 1)");
+        }
+        let f = &cl.faults;
+        if !(f.pause_secs >= 0.0 && f.pause_secs.is_finite())
+            || !(f.spike_secs >= 0.0 && f.spike_secs.is_finite())
+        {
+            bail!("cluster.faults durations must be non-negative finite numbers");
+        }
+        // skew grammar, factor/link array shapes, and value ranges are
+        // the cluster model's own build-time checks
+        crate::netsim::cluster::ClusterModel::from_config(
+            cl, &self.net, self.nodes, self.iters, self.seed,
+        )?;
         // per-strategy half: the typed spec validates its own knobs
         self.sync.spec().validate()?;
         Ok(())
@@ -407,7 +529,8 @@ impl ExperimentConfig {
                     // known-key check usually rejects these first
                     bail!(
                         "override --{k}: unknown strategy table \"sync.{table}\" \
-                         (strategies: full|constant|adaptive|decreasing|qsgd|piecewise|easgd|topk)"
+                         (strategies: full|constant|adaptive|decreasing|qsgd|piecewise|easgd|\
+                         topk|adacomm|prsgd|dasgd)"
                     );
                 };
                 if !strategies.contains(&tkind) {
@@ -531,6 +654,28 @@ impl ExperimentConfig {
             TomlValue::Float(self.net.bandwidth_gbps),
         );
         doc.entries.insert("net.latency_us".into(), TomlValue::Float(self.net.latency_us));
+        // `net.preset` is intentionally absent: presets resolve to the
+        // bandwidth/latency values above at parse time, and the resolved
+        // values are the canonical (digest) form.
+
+        // cluster: every knob is result-affecting (modeled clocks enter
+        // the run report), so all of them belong to the digest substrate
+        let farr = |xs: &[f64]| TomlValue::Arr(xs.iter().map(|x| TomlValue::Float(*x)).collect());
+        doc.entries.insert("cluster.skew".into(), TomlValue::Str(self.cluster.skew.clone()));
+        doc.entries.insert("cluster.factors".into(), farr(&self.cluster.factors));
+        doc.entries.insert("cluster.step_us".into(), TomlValue::Float(self.cluster.step_us));
+        doc.entries.insert("cluster.jitter".into(), TomlValue::Float(self.cluster.jitter));
+        doc.entries.insert("cluster.link_bw_gbps".into(), farr(&self.cluster.link_bw_gbps));
+        doc.entries
+            .insert("cluster.link_latency_us".into(), farr(&self.cluster.link_latency_us));
+        let fl = &self.cluster.faults;
+        doc.entries.insert("cluster.faults.seed".into(), TomlValue::Int(fl.seed as i64));
+        doc.entries.insert("cluster.faults.pauses".into(), TomlValue::Int(fl.pauses as i64));
+        doc.entries.insert("cluster.faults.pause_secs".into(), TomlValue::Float(fl.pause_secs));
+        doc.entries.insert("cluster.faults.spikes".into(), TomlValue::Int(fl.spikes as i64));
+        doc.entries.insert("cluster.faults.spike_secs".into(), TomlValue::Float(fl.spike_secs));
+        doc.entries
+            .insert("cluster.faults.spike_len".into(), TomlValue::Int(fl.spike_len as i64));
         doc
     }
 
@@ -553,7 +698,7 @@ impl ExperimentConfig {
                     "unknown config key {key:?} (top-level: name seed nodes iters \
                      batch_per_node eval_every variance_every threads artifacts_dir \
                      checkpoint_every checkpoint_dir init_from; sections: workload optim \
-                     sync net perf; per-strategy tables: [sync.<strategy>] — \
+                     sync net cluster perf; per-strategy tables: [sync.<strategy>] — \
                      run `adpsgd help` for the schema)"
                 );
             }
@@ -665,10 +810,13 @@ impl ExperimentConfig {
             cfg.sync.period = v as usize;
             // the legacy flat key targets the shared carrier: reset the
             // per-strategy slots so this document's value takes effect
-            // (nested [sync.constant]/[sync.easgd] tables in the same
-            // document re-apply below and still win over the flat key)
+            // (nested [sync.constant]/[sync.easgd]/... tables in the
+            // same document re-apply below and still win over the flat
+            // key)
             cfg.sync.constant_period = None;
             cfg.sync.easgd_period = None;
+            cfg.sync.prsgd_period = None;
+            cfg.sync.dasgd_period = None;
         }
         if let Some(v) = gi("sync.p_init") {
             cfg.sync.p_init = v as usize;
@@ -706,16 +854,76 @@ impl ExperimentConfig {
         if let Some(v) = gf("sync.topk_frac") {
             cfg.sync.topk_frac = v;
         }
+        if let Some(v) = gi("sync.adacomm_tau0") {
+            cfg.sync.adacomm_tau0 = v as usize;
+        }
+        if let Some(v) = gi("sync.dasgd_delay") {
+            cfg.sync.dasgd_delay = v as usize;
+        }
         if let Some(v) = gs("sync.collective") {
             cfg.sync.collective = v.parse()?;
         }
 
-        // net
+        // net: the preset resolves first so explicit keys in the same
+        // document refine it
+        if let Some(v) = gs("net.preset") {
+            cfg.net = NetConfig::preset(&v)?;
+        }
         if let Some(v) = gf("net.bandwidth_gbps") {
             cfg.net.bandwidth_gbps = v;
         }
         if let Some(v) = gf("net.latency_us") {
             cfg.net.latency_us = v;
+        }
+
+        // cluster
+        let garr = |k: &str| -> Result<Option<Vec<f64>>> {
+            let Some(v) = doc.get(k) else { return Ok(None) };
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow!("{k}: expected an array of numbers"))?;
+            arr.iter()
+                .map(|x| x.as_f64().ok_or_else(|| anyhow!("{k}: expected an array of numbers")))
+                .collect::<Result<Vec<f64>>>()
+                .map(Some)
+        };
+        if let Some(v) = gs("cluster.skew") {
+            // parse eagerly so a bad spec fails at load, not at run
+            v.parse::<crate::netsim::cluster::Skew>()?;
+            cfg.cluster.skew = v;
+        }
+        if let Some(v) = garr("cluster.factors")? {
+            cfg.cluster.factors = v;
+        }
+        if let Some(v) = gf("cluster.step_us") {
+            cfg.cluster.step_us = v;
+        }
+        if let Some(v) = gf("cluster.jitter") {
+            cfg.cluster.jitter = v;
+        }
+        if let Some(v) = garr("cluster.link_bw_gbps")? {
+            cfg.cluster.link_bw_gbps = v;
+        }
+        if let Some(v) = garr("cluster.link_latency_us")? {
+            cfg.cluster.link_latency_us = v;
+        }
+        if let Some(v) = gi("cluster.faults.seed") {
+            cfg.cluster.faults.seed = v as u64;
+        }
+        if let Some(v) = gi("cluster.faults.pauses") {
+            cfg.cluster.faults.pauses = v as usize;
+        }
+        if let Some(v) = gf("cluster.faults.pause_secs") {
+            cfg.cluster.faults.pause_secs = v;
+        }
+        if let Some(v) = gi("cluster.faults.spikes") {
+            cfg.cluster.faults.spikes = v as usize;
+        }
+        if let Some(v) = gf("cluster.faults.spike_secs") {
+            cfg.cluster.faults.spike_secs = v;
+        }
+        if let Some(v) = gi("cluster.faults.spike_len") {
+            cfg.cluster.faults.spike_len = v as usize;
         }
 
         // nested per-strategy tables: every [sync.<strategy>] table is
@@ -816,9 +1024,24 @@ impl ExperimentConfig {
             "sync.piecewise",
             "sync.easgd_alpha",
             "sync.topk_frac",
+            "sync.adacomm_tau0",
+            "sync.dasgd_delay",
             "sync.collective",
+            "net.preset",
             "net.bandwidth_gbps",
             "net.latency_us",
+            "cluster.skew",
+            "cluster.factors",
+            "cluster.step_us",
+            "cluster.jitter",
+            "cluster.link_bw_gbps",
+            "cluster.link_latency_us",
+            "cluster.faults.seed",
+            "cluster.faults.pauses",
+            "cluster.faults.pause_secs",
+            "cluster.faults.spikes",
+            "cluster.faults.spike_secs",
+            "cluster.faults.spike_len",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -1144,5 +1367,100 @@ latency_us = 25.0
         let overrides = vec![("sync.mesh.levels".to_string(), "15".to_string())];
         let err = ExperimentConfig::from_overrides(&overrides).unwrap_err().to_string();
         assert!(err.contains("unknown"), "{err}");
+    }
+
+    #[test]
+    fn net_preset_resolves_and_rejects_unknown_names() {
+        let doc = TomlDoc::parse("[net]\npreset = \"ethernet_10g\"").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.net, NetConfig::ethernet_10g());
+        // explicit keys in the same document refine the preset
+        let doc =
+            TomlDoc::parse("[net]\npreset = \"ethernet_10g\"\nlatency_us = 40.0").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.net.bandwidth_gbps, 10.0);
+        assert_eq!(cfg.net.latency_us, 40.0);
+        // unknown names fail at parse time, listing the valid set
+        let doc = TomlDoc::parse("[net]\npreset = \"carrier_pigeon\"").unwrap();
+        let err = ExperimentConfig::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("carrier_pigeon"), "{err}");
+        for p in NetConfig::PRESETS {
+            assert!(err.contains(p), "error must list preset {p}: {err}");
+            NetConfig::preset(p).unwrap();
+        }
+        // the preset is resolved, not stored: to_doc carries the values
+        let canon = cfg.to_doc();
+        assert!(canon.get("net.preset").is_none());
+        assert_eq!(canon.get("net.bandwidth_gbps").unwrap().as_f64(), Some(10.0));
+    }
+
+    #[test]
+    fn cluster_table_parses_validates_and_roundtrips() {
+        let doc = TomlDoc::parse(
+            r#"
+nodes = 4
+[cluster]
+skew = "straggler:4.0"
+step_us = 500.0
+jitter = 0.2
+link_bw_gbps = [100.0, 100.0, 10.0, 100.0]
+link_latency_us = [2.0, 2.0, 50.0, 2.0]
+[cluster.faults]
+pauses = 2
+pause_secs = 0.25
+spikes = 1
+spike_secs = 0.002
+spike_len = 6
+"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.cluster.skew, "straggler:4.0");
+        assert_eq!(cfg.cluster.step_us, 500.0);
+        assert_eq!(cfg.cluster.link_bw_gbps.len(), 4);
+        assert_eq!(cfg.cluster.faults.pauses, 2);
+        assert_eq!(cfg.cluster.faults.spike_len, 6);
+        // canonical form carries every cluster key and is idempotent
+        let text = cfg.to_doc().render().unwrap();
+        let back = ExperimentConfig::from_doc(&TomlDoc::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.cluster, cfg.cluster);
+        assert_eq!(back.to_doc().render().unwrap(), text);
+        // bad shapes and specs fail at load time
+        for bad in [
+            "[cluster]\nskew = \"zipf:2\"",
+            "nodes = 4\n[cluster]\nfactors = [1.0, 2.0]",
+            "nodes = 4\n[cluster]\nlink_bw_gbps = [1.0]",
+            "[cluster]\njitter = 1.5",
+            "[cluster]\nstep_us = 0.0",
+            "[cluster]\nfactors = \"fast\"",
+        ] {
+            let doc = TomlDoc::parse(bad).unwrap();
+            assert!(ExperimentConfig::from_doc(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn new_strategy_tables_and_flat_keys_coexist() {
+        // nested tables configure the newcomers...
+        let doc = TomlDoc::parse(
+            "[sync]\nstrategy = \"dasgd\"\n\n[sync.dasgd]\nperiod = 12\ndelay = 3\n\n[sync.adacomm]\ntau0 = 32\n\n[sync.prsgd]\nperiod = 6",
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.sync.spec(), StrategySpec::DaSgd { period: 12, delay: 3 });
+        assert_eq!(cfg.sync.spec_of(Strategy::AdaComm), StrategySpec::AdaComm { tau0: 32 });
+        assert_eq!(cfg.sync.spec_of(Strategy::PrSgd), StrategySpec::PrSgd { period: 6 });
+        // ...the legacy flat period still feeds prsgd/dasgd fallbacks...
+        let doc = TomlDoc::parse("[sync]\nstrategy = \"prsgd\"\nperiod = 7").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.sync.spec(), StrategySpec::PrSgd { period: 7 });
+        // ...and flat adacomm_tau0/dasgd_delay load like other legacy keys
+        let doc = TomlDoc::parse("[sync]\nstrategy = \"adacomm\"\nadacomm_tau0 = 20").unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.sync.spec(), StrategySpec::AdaComm { tau0: 20 });
+        // dasgd validation runs on the composed spec (delay < period)
+        let doc = TomlDoc::parse("[sync]\nstrategy = \"dasgd\"\nperiod = 2\ndasgd_delay = 5")
+            .unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
     }
 }

@@ -33,7 +33,7 @@ use crate::period::Strategy;
 use anyhow::{bail, Result};
 
 /// Every strategy kind, in canonical order (used to enumerate key sets).
-pub const ALL_STRATEGIES: [Strategy; 8] = [
+pub const ALL_STRATEGIES: [Strategy; 11] = [
     Strategy::Full,
     Strategy::Constant,
     Strategy::Adaptive,
@@ -42,6 +42,9 @@ pub const ALL_STRATEGIES: [Strategy; 8] = [
     Strategy::Piecewise,
     Strategy::Easgd,
     Strategy::TopK,
+    Strategy::AdaComm,
+    Strategy::PrSgd,
+    Strategy::DaSgd,
 ];
 
 /// Accepted `[sync.<name>]` table names per strategy (first = canonical;
@@ -56,6 +59,9 @@ pub fn table_names(kind: Strategy) -> &'static [&'static str] {
         Strategy::Piecewise => &["piecewise"],
         Strategy::Easgd => &["easgd"],
         Strategy::TopK => &["topk"],
+        Strategy::AdaComm => &["adacomm"],
+        Strategy::PrSgd => &["prsgd", "pr_sgd"],
+        Strategy::DaSgd => &["dasgd"],
     }
 }
 
@@ -80,6 +86,9 @@ pub fn nested_keys(kind: Strategy) -> &'static [&'static str] {
         Strategy::Piecewise => &["schedule"],
         Strategy::Easgd => &["period", "alpha"],
         Strategy::TopK => &["frac"],
+        Strategy::AdaComm => &["tau0"],
+        Strategy::PrSgd => &["period"],
+        Strategy::DaSgd => &["period", "delay"],
     }
 }
 
@@ -94,6 +103,9 @@ pub fn legacy_fields(kind: Strategy) -> &'static [&'static str] {
         Strategy::Piecewise => &["piecewise"],
         Strategy::Easgd => &["period", "easgd_alpha"],
         Strategy::TopK => &["topk_frac"],
+        Strategy::AdaComm => &["adacomm_tau0"],
+        Strategy::PrSgd => &["period"],
+        Strategy::DaSgd => &["period", "dasgd_delay"],
     }
 }
 
@@ -138,6 +150,24 @@ pub enum StrategySpec {
     /// Top-k sparsification with error feedback, keeping `frac` of the
     /// gradient components.
     TopK { frac: f64 },
+    /// AdaComm (arXiv 1810.08313): error-runtime-optimal decaying
+    /// schedule.  Starts at period `tau0` and re-derives the period at
+    /// each sync from the agreed training loss:
+    /// `τ = ceil(τ0 · sqrt(F(w)/F(w0)))`, clamped to [1, τ0] — sync
+    /// rarely early, often late (the mirror image of ADPSGD's warmup,
+    /// optimal for wall-clock error under variable system speed).
+    AdaComm { tau0: usize },
+    /// Parallel Restarted SGD (arXiv 1807.06629): constant-period
+    /// parameter averaging with *restart* semantics — node-local
+    /// momentum is reset at every averaging point, so each period is an
+    /// independent local-SGD leg from the averaged model.
+    PrSgd { period: usize },
+    /// DaSGD (arXiv 2006.00441): delayed averaging.  The allreduce
+    /// launched at a sync point overlaps with `delay` further local
+    /// steps; its result is applied as `w ← mean + (w − w_snap)`,
+    /// hiding communication (and stragglers) behind compute.
+    /// Requires `delay < period` so deliveries never overlap.
+    DaSgd { period: usize, delay: usize },
 }
 
 impl StrategySpec {
@@ -151,6 +181,9 @@ impl StrategySpec {
             StrategySpec::Piecewise { .. } => Strategy::Piecewise,
             StrategySpec::Easgd { .. } => Strategy::Easgd,
             StrategySpec::TopK { .. } => Strategy::TopK,
+            StrategySpec::AdaComm { .. } => Strategy::AdaComm,
+            StrategySpec::PrSgd { .. } => Strategy::PrSgd,
+            StrategySpec::DaSgd { .. } => Strategy::DaSgd,
         }
     }
 
@@ -223,6 +256,27 @@ impl StrategySpec {
                     bail!("topk: frac must be in (0, 1]");
                 }
             }
+            StrategySpec::AdaComm { tau0 } => {
+                if *tau0 == 0 {
+                    bail!("adacomm: tau0 must be >= 1");
+                }
+            }
+            StrategySpec::PrSgd { period } => {
+                if *period == 0 {
+                    bail!("prsgd: period must be >= 1");
+                }
+            }
+            StrategySpec::DaSgd { period, delay } => {
+                if *period == 0 {
+                    bail!("dasgd: period must be >= 1");
+                }
+                if *delay == 0 || *delay >= *period {
+                    bail!(
+                        "dasgd: delay must satisfy 1 <= delay < period \
+                         (got delay = {delay}, period = {period})"
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -271,6 +325,16 @@ impl StrategySpec {
                 sync.easgd_alpha = *alpha;
             }
             StrategySpec::TopK { frac } => sync.topk_frac = *frac,
+            StrategySpec::AdaComm { tau0 } => sync.adacomm_tau0 = *tau0,
+            StrategySpec::PrSgd { period } => {
+                // same slot discipline as Constant/Easgd: never the
+                // shared legacy `period` carrier
+                sync.prsgd_period = Some(*period);
+            }
+            StrategySpec::DaSgd { period, delay } => {
+                sync.dasgd_period = Some(*period);
+                sync.dasgd_delay = *delay;
+            }
         }
     }
 
@@ -311,6 +375,10 @@ impl StrategySpec {
             (StrategySpec::Easgd { period, .. }, "period") => *period = vu(val)?,
             (StrategySpec::Easgd { alpha, .. }, "alpha") => *alpha = vf(val)?,
             (StrategySpec::TopK { frac }, "frac") => *frac = vf(val)?,
+            (StrategySpec::AdaComm { tau0 }, "tau0") => *tau0 = vu(val)?,
+            (StrategySpec::PrSgd { period }, "period") => *period = vu(val)?,
+            (StrategySpec::DaSgd { period, .. }, "period") => *period = vu(val)?,
+            (StrategySpec::DaSgd { delay, .. }, "delay") => *delay = vu(val)?,
             (spec, _) => bail!(
                 "sync.{}.{key} is not a knob of strategy {} (valid: {})",
                 spec.name(),
@@ -354,6 +422,16 @@ impl StrategySpec {
                 ("alpha", TomlValue::Float(*alpha)),
             ],
             StrategySpec::TopK { frac } => vec![("frac", TomlValue::Float(*frac))],
+            StrategySpec::AdaComm { tau0 } => {
+                vec![("tau0", TomlValue::Int(*tau0 as i64))]
+            }
+            StrategySpec::PrSgd { period } => {
+                vec![("period", TomlValue::Int(*period as i64))]
+            }
+            StrategySpec::DaSgd { period, delay } => vec![
+                ("period", TomlValue::Int(*period as i64)),
+                ("delay", TomlValue::Int(*delay as i64)),
+            ],
         }
     }
 
@@ -387,6 +465,11 @@ impl StrategySpec {
                 format!("period = {period}\nalpha = {alpha}\n")
             }
             StrategySpec::TopK { frac } => format!("frac = {frac}\n"),
+            StrategySpec::AdaComm { tau0 } => format!("tau0 = {tau0}\n"),
+            StrategySpec::PrSgd { period } => format!("period = {period}\n"),
+            StrategySpec::DaSgd { period, delay } => {
+                format!("period = {period}\ndelay = {delay}\n")
+            }
         };
         if !body.is_empty() {
             out.push_str(&format!("\n[sync.{name}]\n{body}"));
@@ -435,6 +518,14 @@ impl SyncConfig {
                 alpha: self.easgd_alpha,
             },
             Strategy::TopK => StrategySpec::TopK { frac: self.topk_frac },
+            Strategy::AdaComm => StrategySpec::AdaComm { tau0: self.adacomm_tau0 },
+            Strategy::PrSgd => StrategySpec::PrSgd {
+                period: self.prsgd_period.unwrap_or(self.period),
+            },
+            Strategy::DaSgd => StrategySpec::DaSgd {
+                period: self.dasgd_period.unwrap_or(self.period),
+                delay: self.dasgd_delay,
+            },
         }
     }
 }
@@ -460,6 +551,9 @@ mod tests {
             StrategySpec::Piecewise { schedule: "0:2,100:9".into() },
             StrategySpec::Easgd { period: 6, alpha: 0.25 },
             StrategySpec::TopK { frac: 0.125 },
+            StrategySpec::AdaComm { tau0: 24 },
+            StrategySpec::PrSgd { period: 9 },
+            StrategySpec::DaSgd { period: 10, delay: 3 },
         ];
         for spec in specs {
             let mut sync = SyncConfig::default();
@@ -497,7 +591,16 @@ mod tests {
         assert!(StrategySpec::Piecewise { schedule: "5:4".into() }.validate().is_err());
         assert!(StrategySpec::Easgd { period: 8, alpha: 0.0 }.validate().is_err());
         assert!(StrategySpec::TopK { frac: 1.5 }.validate().is_err());
+        assert!(StrategySpec::AdaComm { tau0: 0 }.validate().is_err());
+        assert!(StrategySpec::PrSgd { period: 0 }.validate().is_err());
+        assert!(StrategySpec::DaSgd { period: 4, delay: 0 }.validate().is_err());
+        assert!(StrategySpec::DaSgd { period: 4, delay: 4 }.validate().is_err());
+        assert!(StrategySpec::DaSgd { period: 4, delay: 3 }.validate().is_ok());
         assert!(StrategySpec::default_of(Strategy::Adaptive).validate().is_ok());
+        for kind in [Strategy::AdaComm, Strategy::PrSgd, Strategy::DaSgd] {
+            assert!(StrategySpec::default_of(kind).validate().is_ok(), "{kind}");
+            assert!(!StrategySpec::default_of(kind).is_gradient_mode(), "{kind}");
+        }
     }
 
     #[test]

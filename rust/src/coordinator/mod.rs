@@ -81,6 +81,12 @@ pub struct RunReport {
     pub compute_secs: f64,
     /// measured wall-clock of the whole run (this host)
     pub wall_secs: f64,
+    /// end-of-run maximum over the per-node *modeled* clocks (the
+    /// `[cluster]` model: skew × per-iteration step time + faults +
+    /// sync barriers).  Deterministic from config — unlike `wall_secs`
+    /// it is stable across hosts, thread counts, and cache state, so
+    /// campaign summaries may include it.
+    pub modeled_wall_secs: f64,
     pub ledger: CommLedger,
     pub recorder: Recorder,
 }
@@ -111,6 +117,7 @@ impl RunReport {
             ("avg_period", Json::num(self.avg_period)),
             ("compute_secs", Json::num(self.compute_secs)),
             ("wall_secs", Json::num(self.wall_secs)),
+            ("modeled_wall_secs", Json::num(self.modeled_wall_secs)),
             ("wire_bytes", Json::num(self.ledger.total_wire_bytes() as f64)),
             ("comm_secs_model", Json::num(self.ledger.total_secs())),
         ];
@@ -152,6 +159,9 @@ impl RunReport {
 /// What a single worker thread hands back.
 struct WorkerOut {
     compute_secs: f64,
+    /// end-of-run maximum over the worker's replicated cluster clocks
+    /// (identical on every rank — the model is deterministic)
+    modeled_wall_secs: f64,
     /// rank 0 only
     ledger: Option<CommLedger>,
 }
@@ -297,6 +307,7 @@ pub(crate) fn run_experiment(cfg: &ExperimentConfig, hooks: RunHooks) -> Result<
         .map(|o| o.as_ref().unwrap().compute_secs)
         .fold(0.0f64, f64::max);
     let rank0 = outs[0].take().unwrap();
+    let modeled_wall_secs = rank0.modeled_wall_secs;
     let ledger = rank0.ledger.unwrap();
     // the hub (and with it the RecorderObserver's clone) died with the
     // leader thread, so the session holds the only reference now
@@ -332,6 +343,7 @@ pub(crate) fn run_experiment(cfg: &ExperimentConfig, hooks: RunHooks) -> Result<
         avg_period,
         compute_secs,
         wall_secs,
+        modeled_wall_secs,
         ledger,
         recorder,
     })
@@ -354,7 +366,6 @@ fn worker_loop(
     ctrl_factory: Option<Arc<ControllerFactory>>,
 ) -> Result<WorkerOut> {
     let n = cfg.nodes;
-    let net = NetModel::new(&cfg.net);
     let mut ledger = CommLedger::with_algo(n, cfg.sync.collective);
 
     let mut node =
@@ -364,6 +375,19 @@ fn worker_loop(
     // horizon, so Algorithm 2 does not re-run its p=1 warmup epoch or
     // resample C₂ from scratch, and schedule switch points stay global
     let resume = node.resume_iter;
+    // per-node modeled clocks: the cluster model (skew, link asymmetry,
+    // fault schedule) is fully deterministic from config, so every rank
+    // derives the identical cluster timeline with zero communication —
+    // the same replication trick the period controllers use.  It runs on
+    // the global iteration axis, like the controllers.
+    let cluster = crate::netsim::cluster::ClusterModel::from_config(
+        &cfg.cluster,
+        &cfg.net,
+        n,
+        resume + cfg.iters,
+        cfg.seed,
+    )?;
+    let mut clock = crate::netsim::cluster::ClusterClock::new(cluster);
     let mut step = SyncStep::build(cfg, n_params, rank, resume, ctrl_factory.as_deref());
     // version-2 snapshots carry the controller's adaptive state (C₂, p):
     // restoring it makes the resume exact — without it Algorithm 2 would
@@ -394,18 +418,20 @@ fn worker_loop(
                 // FULLSGD / QSGD / TopK: transform + exchange gradients,
                 // then apply the agreed gradient locally
                 node.grad_step(&batch)?;
-                step.exchange_grad(&mut node, comm.as_ref(), &net, &mut ledger)?;
+                clock.step(resume + k);
+                step.exchange_grad(&mut node, comm.as_ref(), &mut clock, &mut ledger, resume + k)?;
                 node.apply_grad(lr)?;
             }
             ExchangeMode::Parameters => {
                 // periodic parameter averaging: local step, then the
                 // gated sync pipeline (see sync.rs for the stage table)
                 node.local_step(&batch, lr)?;
+                clock.step(resume + k);
                 sync_var = None;
                 if let Some(s_k) = step.maybe_sync_params(
                     &mut node,
                     comm.as_ref(),
-                    &net,
+                    &mut clock,
                     &mut ledger,
                     resume + k,
                     lr,
@@ -493,6 +519,7 @@ fn worker_loop(
 
     Ok(WorkerOut {
         compute_secs: node.compute.secs(),
+        modeled_wall_secs: clock.max(),
         ledger: hub.is_some().then_some(ledger),
     })
 }
@@ -848,6 +875,9 @@ mod tests {
             Strategy::Qsgd,
             Strategy::TopK,
             Strategy::Easgd,
+            Strategy::AdaComm,
+            Strategy::PrSgd,
+            Strategy::DaSgd,
         ] {
             let mut fcfg = quick_cfg(strategy);
             fcfg.sync.collective = Algo::Flat;
@@ -869,5 +899,170 @@ mod tests {
                 "{strategy}: flat must never model faster than ring"
             );
         }
+    }
+
+    /// A straggler-heavy cluster for the heterogeneity tests: one node
+    /// 4× slower, jittered step times, a pause and a delay spike.
+    fn stragglerize(cfg: &mut ExperimentConfig) {
+        cfg.cluster.skew = "straggler:4.0".into();
+        cfg.cluster.jitter = 0.1;
+        cfg.cluster.faults.pauses = 2;
+        cfg.cluster.faults.pause_secs = 0.05;
+        cfg.cluster.faults.spikes = 2;
+        cfg.cluster.faults.spike_secs = 2e-3;
+    }
+
+    #[test]
+    fn cluster_model_moves_clocks_never_bytes() {
+        // the ISSUE's core invariant: a straggler-heavy scenario changes
+        // modeled wall-clock per strategy while leaving the training
+        // trajectory bit-identical to the uniform run of the same seed
+        let mut walls = Vec::new();
+        for strategy in [
+            Strategy::Constant,
+            Strategy::Adaptive,
+            Strategy::AdaComm,
+            Strategy::PrSgd,
+            Strategy::DaSgd,
+        ] {
+            let uni = train(quick_cfg(strategy)).unwrap();
+            let mut scfg = quick_cfg(strategy);
+            stragglerize(&mut scfg);
+            let skew = train(scfg).unwrap();
+            assert_eq!(
+                uni.final_train_loss, skew.final_train_loss,
+                "{strategy}: cluster knobs must never touch parameter math"
+            );
+            assert_eq!(
+                uni.recorder.get("train_loss").unwrap().points,
+                skew.recorder.get("train_loss").unwrap().points,
+                "{strategy}"
+            );
+            assert_eq!(uni.syncs, skew.syncs, "{strategy}");
+            assert_eq!(
+                uni.ledger.total_wire_bytes(),
+                skew.ledger.total_wire_bytes(),
+                "{strategy}: wire bytes are topology-, not timing-, dependent"
+            );
+            assert!(
+                skew.modeled_wall_secs > uni.modeled_wall_secs,
+                "{strategy}: stragglers/faults must slow the modeled clock \
+                 (skew {} vs uniform {})",
+                skew.modeled_wall_secs,
+                uni.modeled_wall_secs
+            );
+            walls.push(skew.modeled_wall_secs);
+        }
+        // strategies pay differently for the same cluster: DaSGD's
+        // overlap must beat CPSGD's barrier at the same period
+        assert!(
+            walls[4] < walls[0],
+            "dasgd {} should overlap away barrier time vs cpsgd {}",
+            walls[4],
+            walls[0]
+        );
+    }
+
+    #[test]
+    fn cluster_knobs_leave_checkpointed_parameters_bit_identical() {
+        // strongest form of the invariant: the final averaged parameter
+        // bytes of a skewed/faulted run equal the uniform run's exactly
+        let dir_a = std::env::temp_dir().join(format!("adpsgd_hetero_a_{}", std::process::id()));
+        let dir_b = std::env::temp_dir().join(format!("adpsgd_hetero_b_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+        let mut a = quick_cfg(Strategy::Adaptive);
+        a.checkpoint_every = 120;
+        a.checkpoint_dir = dir_a.to_str().unwrap().into();
+        let mut b = a.clone();
+        b.checkpoint_dir = dir_b.to_str().unwrap().into();
+        stragglerize(&mut b);
+        train(a).unwrap();
+        train(b).unwrap();
+        let load = |dir: &std::path::Path| {
+            let p = crate::checkpoint::Checkpoint::latest(dir).unwrap().expect("snapshot");
+            crate::checkpoint::Checkpoint::load(&p).unwrap()
+        };
+        let (ca, cb) = (load(&dir_a), load(&dir_b));
+        let bits = |w: &[f32]| w.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&ca.w), bits(&cb.w), "parameter bytes must be identical");
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+
+    #[test]
+    fn modeled_wall_clock_is_deterministic_and_thread_invariant() {
+        // modeled time feeds stable campaign summaries, so it must not
+        // depend on kernel thread count or repetition
+        let mut cfg = quick_cfg(Strategy::Adaptive);
+        stragglerize(&mut cfg);
+        cfg.perf.threads = 1;
+        let r1 = train(cfg.clone()).unwrap();
+        let r2 = train({
+            let mut c = cfg.clone();
+            c.perf.threads = 4;
+            c
+        })
+        .unwrap();
+        let r3 = train(cfg).unwrap();
+        assert_eq!(r1.modeled_wall_secs.to_bits(), r2.modeled_wall_secs.to_bits());
+        assert_eq!(r1.modeled_wall_secs.to_bits(), r3.modeled_wall_secs.to_bits());
+        assert!(r1.modeled_wall_secs > 0.0);
+    }
+
+    #[test]
+    fn adacomm_decays_its_period_as_the_loss_falls() {
+        let mut cfg = quick_cfg(Strategy::AdaComm);
+        cfg.iters = 400;
+        cfg.sync.adacomm_tau0 = 8;
+        let report = train(cfg).unwrap();
+        assert!(report.final_train_loss.is_finite());
+        assert!(
+            report.syncs > 50,
+            "τ must decay below τ₀=8 as the loss falls (got {} syncs)",
+            report.syncs
+        );
+        assert!(report.ledger.count(CommKind::ScalarStat) > 0, "loss agreement is charged");
+    }
+
+    #[test]
+    fn prsgd_momentum_restart_changes_the_trajectory() {
+        // PR-SGD at period p is CPSGD + momentum restart: with real
+        // momentum the trajectories must differ, with zero momentum the
+        // restart is a no-op and they must be bit-identical
+        let mut p = quick_cfg(Strategy::PrSgd);
+        p.optim.momentum = 0.9;
+        let mut c = quick_cfg(Strategy::Constant);
+        c.optim.momentum = 0.9;
+        let rp = train(p).unwrap();
+        let rc = train(c).unwrap();
+        assert_eq!(rp.syncs, rc.syncs, "same schedule");
+        assert_ne!(
+            rp.final_train_loss, rc.final_train_loss,
+            "momentum restart must alter training"
+        );
+
+        let mut p0 = quick_cfg(Strategy::PrSgd);
+        p0.optim.momentum = 0.0;
+        let mut c0 = quick_cfg(Strategy::Constant);
+        c0.optim.momentum = 0.0;
+        assert_eq!(
+            train(p0).unwrap().final_train_loss,
+            train(c0).unwrap().final_train_loss,
+            "zero momentum: PR-SGD degenerates to CPSGD"
+        );
+    }
+
+    #[test]
+    fn dasgd_delivers_late_and_still_trains() {
+        let mut cfg = quick_cfg(Strategy::DaSgd);
+        cfg.sync.dasgd_delay = 2;
+        let report = train(cfg).unwrap();
+        assert_eq!(report.syncs, 30, "period-4 launches over 120 iters");
+        assert!(report.final_train_loss.is_finite());
+        assert!(report.final_train_loss < 2.0, "delayed averaging must still learn");
+        // delayed averaging differs from synchronous averaging
+        let cpsgd = train(quick_cfg(Strategy::Constant)).unwrap();
+        assert_ne!(report.final_train_loss, cpsgd.final_train_loss);
     }
 }

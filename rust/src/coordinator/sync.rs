@@ -4,15 +4,18 @@
 //! the loop structure, so [`SyncStep`] composes them explicitly instead
 //! of the historical inlined `if`-chains:
 //!
-//! | stage            | FULLSGD | QSGD | TopK | CPSGD | ADPSGD | EASGD |
-//! |------------------|---------|------|------|-------|--------|-------|
-//! | period gate      |    —    |  —   |  —   |   ✓   |   ✓    |   ✓   |
-//! | payload transform|    —    | QSGD | top-k|   —   |   —    |   —   |
-//! | collective       |  grads  | grads| grads| params| params | params|
-//! | S_k agreement    |    —    |  —   |  —   |   ✓   |   ✓    |   ✓   |
-//! | elastic pull     |    —    |  —   |  —   |   —   |   —    |   ✓   |
-//! | extra ledger stat|    —    |  —   |  —   |   —   |  S_k   |   —   |
-//! | period feedback  |    —    |  —   |  —   | no-op |  Alg. 2| no-op |
+//! | stage            | FULLSGD | QSGD | TopK | CPSGD | ADPSGD | EASGD | ADACOMM | PRSGD | DASGD |
+//! |------------------|---------|------|------|-------|--------|-------|---------|-------|-------|
+//! | period gate      |    —    |  —   |  —   |   ✓   |   ✓    |   ✓   |    ✓    |   ✓   |   ✓   |
+//! | payload transform|    —    | QSGD | top-k|   —   |   —    |   —   |    —    |   —   |   —   |
+//! | collective       |  grads  | grads| grads| params| params | params| params  | params| params|
+//! | S_k agreement    |    —    |  —   |  —   |   ✓   |   ✓    |   ✓   |    ✓    |   ✓   |   ✓   |
+//! | elastic pull     |    —    |  —   |  —   |   —   |   —    |   ✓   |    —    |   —   |   —   |
+//! | momentum restart |    —    |  —   |  —   |   —   |   —    |   —   |    —    |   ✓   |   —   |
+//! | delayed apply    |    —    |  —   |  —   |   —   |   —    |   —   |    —    |   —   |   ✓   |
+//! | loss agreement   |    —    |  —   |  —   |   —   |   —    |   —   |    ✓    |   —   |   —   |
+//! | extra ledger stat|    —    |  —   |  —   |   —   |  S_k   |   —   |  F(w)   |   —   |   —   |
+//! | period feedback  |    —    |  —   |  —   | no-op |  Alg. 2| no-op | τ decay | no-op | no-op |
 //!
 //! Gradient-mode strategies run [`SyncStep::exchange_grad`] every
 //! iteration; parameter-mode strategies run
@@ -28,7 +31,8 @@
 use super::node::Node;
 use crate::collective::{Collective, Poisoned};
 use crate::config::{ExperimentConfig, StrategySpec};
-use crate::netsim::{CommKind, CommLedger, NetModel};
+use crate::netsim::cluster::ClusterClock;
+use crate::netsim::{CommKind, CommLedger};
 use crate::period::{registry, PeriodController};
 use crate::quant::QsgdConfig;
 use crate::sparse::{Residual, TopKConfig};
@@ -106,6 +110,30 @@ pub struct SyncStep {
     elastic_alpha: Option<f32>,
     /// ADPSGD: charge the S_k scalar exchange to the ledger.
     charge_scalar_stat: bool,
+    /// PR-SGD: zero the momentum buffer after adopting the average
+    /// (each averaging point restarts the local SGD phase).
+    reset_momentum: bool,
+    /// DaSGD: delayed-averaging state (`None` for every other strategy).
+    dasgd: Option<DaSgd>,
+}
+
+/// DaSGD's in-flight average.  The allreduce launched at a sync point is
+/// applied `delay` iterations later as `w ← mean + (w − snap)`, crediting
+/// the local progress made while the collective was in flight.  Modeled
+/// time overlaps communication with compute: nothing barriers at launch,
+/// and the delivery only waits until the collective's modeled completion
+/// (`ready_at`).
+struct DaSgd {
+    delay: usize,
+    /// parameters at launch (the in-flight average's reference point)
+    snap: Vec<f32>,
+    /// the agreed mean, held until delivery
+    mean: Vec<f32>,
+    /// global iteration index at which the pending mean lands
+    deliver_at: usize,
+    /// modeled completion time of the in-flight allreduce
+    ready_at: f64,
+    pending: bool,
 }
 
 impl SyncStep {
@@ -159,12 +187,25 @@ impl SyncStep {
             StrategySpec::Easgd { alpha, .. } if *alpha < 1.0 => Some(*alpha as f32),
             _ => None,
         };
+        let dasgd = match &spec {
+            StrategySpec::DaSgd { delay, .. } => Some(DaSgd {
+                delay: *delay,
+                snap: vec![0.0; n_params],
+                mean: vec![0.0; n_params],
+                deliver_at: 0,
+                ready_at: 0.0,
+                pending: false,
+            }),
+            _ => None,
+        };
         SyncStep {
             mode,
             controller,
             transform,
             elastic_alpha,
             charge_scalar_stat: matches!(spec, StrategySpec::Adaptive { .. }),
+            reset_momentum: matches!(spec, StrategySpec::PrSgd { .. }),
+            dasgd,
         }
     }
 
@@ -191,53 +232,102 @@ impl SyncStep {
     }
 
     /// Gradient-mode chain: payload transform (timed as compute) →
-    /// ledger charge → collective exchange.  The averaged gradient lands
-    /// back in `node.g`.
+    /// ledger charge → collective exchange → modeled barrier.  The
+    /// averaged gradient lands back in `node.g`.  The exchange prices
+    /// against the cluster's bottleneck link *at iteration `k`* (delay
+    /// spikes hit whatever exchange is in flight), and every node's
+    /// modeled clock barriers on the slowest participant.
     pub fn exchange_grad(
         &mut self,
         node: &mut Node,
         comm: &dyn Collective,
-        net: &NetModel,
+        clock: &mut ClusterClock,
         ledger: &mut CommLedger,
+        k: usize,
     ) -> Result<(), Poisoned> {
-        match self.transform.as_mut() {
+        let net = clock.net_at(k);
+        let secs = match self.transform.as_mut() {
             Some(t) => {
                 node.compute.start();
                 let wire = t.apply(&mut node.g);
                 node.compute.stop();
-                ledger.record(net, t.kind(), node.n, wire);
+                ledger.record(&net, t.kind(), node.n, wire)
             }
             None => {
-                ledger.record(net, CommKind::GradAllreduce, node.n, (node.g.len() * 4) as u64);
+                ledger.record(&net, CommKind::GradAllreduce, node.n, (node.g.len() * 4) as u64)
             }
-        }
+        };
+        clock.barrier(secs);
         comm.allreduce_mean(node.rank, &mut node.g)
     }
 
-    /// Parameter-mode chain: period gate → pre-sync snapshot → ledger
-    /// charge → collective exchange → S_k agreement → elastic pull →
-    /// extra ledger stat → period feedback.  Returns the agreed S_k when
-    /// a synchronization happened, `None` otherwise.
+    /// Parameter-mode chain: delayed delivery (DaSGD) → period gate →
+    /// pre-sync snapshot → ledger charge → collective exchange → S_k
+    /// agreement → elastic pull → momentum restart → loss agreement →
+    /// extra ledger stat → modeled barrier → period feedback.  Returns
+    /// the agreed S_k when a synchronization happened, `None` otherwise.
     ///
     /// `k` is the *global* iteration index (warm starts pass
     /// `resume_iter + local_k`), matching the [`PeriodController`]
-    /// contract.
+    /// contract; the modeled clock runs on the same axis.
+    ///
+    /// Heterogeneity discipline: the clock and ledger consume the
+    /// cluster model, the parameter math never does — identical configs
+    /// modulo `[cluster]` produce bit-identical parameters.
     pub fn maybe_sync_params(
         &mut self,
         node: &mut Node,
         comm: &dyn Collective,
-        net: &NetModel,
+        clock: &mut ClusterClock,
         ledger: &mut CommLedger,
         k: usize,
         lr: f32,
     ) -> Result<Option<f64>, Poisoned> {
+        // DaSGD delivery runs before the period gate so a landing mean
+        // is never starved by the next trigger: w ← mean + (w − snap)
+        // credits the local progress made while the average was in
+        // flight (arXiv 2006.00441 eq. 4)
+        if let Some(d) = self.dasgd.as_mut() {
+            if d.pending && k >= d.deliver_at {
+                for (wj, (mj, sj)) in
+                    node.w.iter_mut().zip(d.mean.iter().zip(d.snap.iter()))
+                {
+                    *wj = mj + (*wj - sj);
+                }
+                clock.wait_until(d.ready_at);
+                d.pending = false;
+            }
+        }
         let ctrl =
             self.controller.as_mut().expect("parameter mode requires a period controller");
         if !ctrl.should_sync(k) {
             return Ok(None);
         }
+        let net = clock.net_at(k);
+        if let Some(d) = self.dasgd.as_mut() {
+            if d.pending {
+                // the previous average is still in flight (a restored
+                // phase can collide): skip the trigger, don't stack
+                return Ok(None);
+            }
+            d.snap.copy_from_slice(&node.w);
+            d.mean.copy_from_slice(&node.w);
+            let secs =
+                ledger.record(&net, CommKind::ParamAvg, node.n, (node.w.len() * 4) as u64);
+            comm.allreduce_mean(node.rank, &mut d.mean)?;
+            let dev = crate::tensor::sq_deviation(&d.mean, &d.snap);
+            let s_k = comm.allreduce_scalar_sum(node.rank, dev)? / node.n as f64;
+            // overlap: no barrier — the collective completes at
+            // (slowest launcher + transfer), and only the delivery waits
+            d.deliver_at = k + d.delay;
+            d.ready_at = clock.max() + secs;
+            d.pending = true;
+            ctrl.on_sync(k, s_k, lr);
+            return Ok(Some(s_k));
+        }
         node.w_pre.copy_from_slice(&node.w);
-        ledger.record(net, CommKind::ParamAvg, node.n, (node.w.len() * 4) as u64);
+        let mut secs =
+            ledger.record(&net, CommKind::ParamAvg, node.n, (node.w.len() * 4) as u64);
         comm.allreduce_mean(node.rank, &mut node.w)?;
         // S_k = (1/n) sum_i ||w_bar - w_i||^2  (Algorithm 2 line 11)
         let dev = crate::tensor::sq_deviation(&node.w, &node.w_pre);
@@ -247,10 +337,24 @@ impl SyncStep {
             // exactly CPSGD and composes out of the pipeline entirely)
             crate::tensor::elastic_pull(&mut node.w, &node.w_pre, alpha);
         }
+        if self.reset_momentum {
+            node.m.fill(0.0);
+        }
+        if ctrl.wants_loss() {
+            // AdaComm: agree the current loss so every replica derives
+            // the same τ from the same number (priced like S_k)
+            let loss =
+                comm.allreduce_scalar_sum(node.rank, node.mean_local_loss())? / node.n as f64;
+            secs += ledger.record(&net, CommKind::ScalarStat, node.n, 8);
+            ctrl.observe_loss(loss);
+        }
         if self.charge_scalar_stat {
             // the paper's extra scalar exchange (only ADPSGD pays it)
-            ledger.record(net, CommKind::ScalarStat, node.n, 4);
+            secs += ledger.record(&net, CommKind::ScalarStat, node.n, 4);
         }
+        // BSP sync: every node's modeled clock meets the slowest, then
+        // pays the transfer — this is where stragglers hurt
+        clock.barrier(secs);
         ctrl.on_sync(k, s_k, lr);
         Ok(Some(s_k))
     }
@@ -279,6 +383,9 @@ mod tests {
             (Strategy::Easgd, ExchangeMode::Parameters),
             (Strategy::Piecewise, ExchangeMode::Parameters),
             (Strategy::Decreasing, ExchangeMode::Parameters),
+            (Strategy::AdaComm, ExchangeMode::Parameters),
+            (Strategy::PrSgd, ExchangeMode::Parameters),
+            (Strategy::DaSgd, ExchangeMode::Parameters),
         ] {
             let step = SyncStep::build(&cfg_for(s), 64, 0, 0, None);
             assert_eq!(step.mode, mode, "{s}");
@@ -309,6 +416,17 @@ mod tests {
         ecfg.sync.easgd_alpha = 1.0;
         let cpsgd_like = SyncStep::build(&ecfg, 64, 0, 0, None);
         assert_eq!(cpsgd_like.elastic_alpha, None);
+
+        // the newcomers compose their own single extra stage each
+        let prsgd = SyncStep::build(&cfg_for(Strategy::PrSgd), 64, 0, 0, None);
+        assert!(prsgd.reset_momentum && prsgd.dasgd.is_none());
+        let dasgd = SyncStep::build(&cfg_for(Strategy::DaSgd), 64, 0, 0, None);
+        let d = dasgd.dasgd.as_ref().expect("dasgd carries delayed-apply state");
+        assert_eq!(d.delay, ExperimentConfig::default().sync.dasgd_delay);
+        assert_eq!(d.snap.len(), 64);
+        assert!(!d.pending && !dasgd.reset_momentum);
+        let cpsgd = SyncStep::build(&cfg_for(Strategy::Constant), 64, 0, 0, None);
+        assert!(!cpsgd.reset_momentum && cpsgd.dasgd.is_none());
     }
 
     #[test]

@@ -940,6 +940,10 @@ impl Dispatcher {
                                 ("run", Json::str(spec.label.clone())),
                                 ("attempt", Json::num(attempt as f64)),
                                 ("retrying", Json::Bool(retrying)),
+                                // the crash cause rides in the journal so
+                                // fault-injected failures are diagnosable
+                                // from the JSONL alone
+                                ("error", Json::str(format!("{e:#}"))),
                             ],
                         );
                     }

@@ -60,7 +60,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, SystemTime};
 
 /// Cache-entry schema version; bump on any layout change.
-const ENTRY_VERSION: f64 = 1.0;
+/// v2: reports carry `modeled_wall_secs` (the cluster-clock wall time).
+const ENTRY_VERSION: f64 = 2.0;
 
 // ----------------------------------------------------------------- digest
 
@@ -195,6 +196,7 @@ fn report_scalar_pairs(report: &RunReport) -> Vec<(&'static str, Json)> {
         ("syncs", Json::num(report.syncs as f64)),
         ("compute_secs", Json::num(report.compute_secs)),
         ("wall_secs", Json::num(report.wall_secs)),
+        ("modeled_wall_secs", Json::num(report.modeled_wall_secs)),
         ("ledger", report.ledger.to_json()),
     ]
 }
@@ -275,6 +277,7 @@ fn report_from_parts(v: &Json, recorder: Recorder) -> Result<RunReport> {
         avg_period,
         compute_secs: float("compute_secs")?,
         wall_secs: float("wall_secs")?,
+        modeled_wall_secs: float("modeled_wall_secs")?,
         ledger,
         recorder,
     })
@@ -284,7 +287,8 @@ fn report_from_parts(v: &Json, recorder: Recorder) -> Result<RunReport> {
 
 /// Magic + format version prefixing [`report_to_bytes`] output.
 const REPORT_BYTES_MAGIC: &[u8; 4] = b"ADPB";
-const REPORT_BYTES_VERSION: u16 = 1;
+/// v2: the scalar header carries `modeled_wall_secs`.
+const REPORT_BYTES_VERSION: u16 = 2;
 
 /// Binary full-fidelity [`RunReport`] serialization — the proto-v3 bulk
 /// payload.  The scalar summary travels as the same compact JSON header
@@ -725,6 +729,11 @@ mod tests {
             ("bandwidth", Box::new(|c| c.net.bandwidth_gbps = 10.0)),
             ("lr", Box::new(|c| c.optim.lr0 = 0.2)),
             ("workload", Box::new(|c| c.workload.hidden += 1)),
+            // [cluster] knobs shape the modeled clock, which the report
+            // carries — result-affecting by policy
+            ("cluster skew", Box::new(|c| c.cluster.skew = "straggler:3.0".into())),
+            ("cluster step", Box::new(|c| c.cluster.step_us = 2000.0)),
+            ("cluster faults", Box::new(|c| c.cluster.faults.pauses = 1)),
         ];
         for (what, bust) in busts {
             let mut c = base.clone();
@@ -910,6 +919,7 @@ mod tests {
             avg_period: 10.0,
             compute_secs: 1.5,
             wall_secs: 2.0,
+            modeled_wall_secs: 3.25,
             ledger,
             recorder,
         }

@@ -400,7 +400,7 @@ impl CampaignReport {
     pub fn table(&self) -> Table {
         let mut t = Table::new(&[
             "run", "strategy", "nodes", "final loss", "best acc", "syncs", "p̄", "wire MB",
-            "comm(model)",
+            "comm(model)", "wall(model)",
         ]);
         for r in &self.runs {
             let rep = &r.report;
@@ -414,6 +414,7 @@ impl CampaignReport {
                 format!("{:.2}", rep.avg_period),
                 format!("{:.2}", rep.ledger.total_wire_bytes() as f64 / 1e6),
                 crate::util::fmt::secs(rep.ledger.total_secs()),
+                crate::util::fmt::secs(rep.modeled_wall_secs),
             ]);
         }
         t

@@ -17,6 +17,7 @@
 pub mod ablation;
 pub mod convergence;
 pub mod decreasing;
+pub mod robustness;
 pub mod speedup;
 pub mod table1;
 pub mod variance;

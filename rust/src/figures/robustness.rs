@@ -1,0 +1,263 @@
+//! Robustness study: the five synchronization strategies under
+//! heterogeneous clusters — ADPSGD and CPSGD (the paper's pair) against
+//! the related-work zoo (AdaComm, PR-SGD, DaSGD) across a
+//! skew × fault × network grid.
+//!
+//! The sweep is one declarative [`Campaign`] over three axes:
+//!
+//! * **strategy** — adpsgd / cpsgd / adacomm / prsgd / dasgd, each
+//!   projected from the base config's knobs via `spec_of`;
+//! * **network** — `ib100` (100 Gbps InfiniBand) vs `eth10`
+//!   (10 Gbps Ethernet);
+//! * **scenario** — `uniform` (homogeneous baseline), `skew`
+//!   (4× straggler + 10% seeded per-step jitter), `faulty` (the same
+//!   skew plus deterministic node pauses and packet-delay spikes).
+//!
+//! Heterogeneity moves **modeled clocks only** — for a given strategy
+//! and seed, the `skew`/`faulty` runs produce bit-identical parameters
+//! (and therefore identical losses, sync counts, and wire bytes) to the
+//! `uniform` run; what changes is `modeled_wall_secs`. The per-cell
+//! `slowdown` column quantifies how much of the injected heterogeneity
+//! each strategy absorbs: infrequent averagers amortize stragglers over
+//! their local-step windows, and DaSGD's delayed apply overlaps
+//! communication with compute entirely.
+
+use super::{Scale, Sink};
+use crate::config::{ExperimentConfig, NetConfig};
+use crate::experiment::{Campaign, CampaignReport};
+use crate::metrics::Table;
+use crate::period::Strategy;
+use anyhow::{Context, Result};
+
+/// Strategy axis, in presentation order.
+pub const STRATEGIES: [&str; 5] = ["adpsgd", "cpsgd", "adacomm", "prsgd", "dasgd"];
+
+/// Network axis labels.
+pub const NETS: [&str; 2] = ["ib100", "eth10"];
+
+/// Scenario axis labels (`uniform` is the reference for slowdowns).
+pub const SCENARIOS: [&str; 3] = ["uniform", "skew", "faulty"];
+
+/// Apply one scenario's cluster knobs to a config. `uniform` leaves the
+/// default homogeneous model in place; the other two inject the same
+/// 4× straggler so their wall clocks are directly comparable.
+pub fn apply_scenario(cfg: &mut ExperimentConfig, scenario: &str) {
+    match scenario {
+        "uniform" => {}
+        "skew" => {
+            cfg.cluster.skew = "straggler:4.0".into();
+            cfg.cluster.jitter = 0.1;
+        }
+        "faulty" => {
+            cfg.cluster.skew = "straggler:4.0".into();
+            cfg.cluster.jitter = 0.1;
+            cfg.cluster.faults.pauses = 2;
+            cfg.cluster.faults.pause_secs = 0.05;
+            cfg.cluster.faults.spikes = 2;
+            cfg.cluster.faults.spike_secs = 2e-3;
+            cfg.cluster.faults.spike_len = 8;
+        }
+        other => panic!("unknown robustness scenario {other:?}"),
+    }
+}
+
+/// One (strategy, net, scenario) cell of the robustness grid.
+#[derive(Debug, Clone)]
+pub struct RobustnessCell {
+    pub strategy: Strategy,
+    pub label: String,
+    pub net: &'static str,
+    pub scenario: &'static str,
+    pub final_loss: f64,
+    pub syncs: u64,
+    pub wire_mb: f64,
+    pub modeled_wall_secs: f64,
+    /// modeled wall clock relative to the `uniform` scenario of the same
+    /// (strategy, net) pair — 1.0 means the heterogeneity cost nothing
+    pub slowdown: f64,
+}
+
+pub struct Robustness {
+    pub cells: Vec<RobustnessCell>,
+    pub report: CampaignReport,
+}
+
+impl Robustness {
+    pub fn cell(&self, strategy: &str, net: &str, scenario: &str) -> &RobustnessCell {
+        self.cells
+            .iter()
+            .find(|c| c.label == format!("{strategy}_{net}_{scenario}"))
+            .unwrap_or_else(|| panic!("no robustness cell {strategy}_{net}_{scenario}"))
+    }
+}
+
+/// The robustness campaign definition: 5 strategies × 2 networks ×
+/// 3 scenarios = 30 runs, all from one base config.
+pub fn campaign(base: &ExperimentConfig) -> Result<Campaign> {
+    let s = &base.sync;
+    let mut b = Campaign::builder("robustness", base.clone())
+        .strategy("adpsgd", s.spec_of(Strategy::Adaptive))
+        .strategy("cpsgd", s.spec_of(Strategy::Constant))
+        .strategy("adacomm", s.spec_of(Strategy::AdaComm))
+        .strategy("prsgd", s.spec_of(Strategy::PrSgd))
+        .strategy("dasgd", s.spec_of(Strategy::DaSgd))
+        .net("ib100", NetConfig::infiniband_100g())
+        .net("eth10", NetConfig::ethernet_10g());
+    for scenario in SCENARIOS {
+        b = b.variant(scenario, move |cfg| apply_scenario(cfg, scenario));
+    }
+    b.build()
+}
+
+/// Run the robustness sweep, render the grid, and (when the sink has an
+/// out dir) write the byte-stable campaign summary to
+/// `robustness.campaign.json` — re-running against a warm cache, with a
+/// different `--jobs`, or on another host reproduces it byte for byte.
+pub fn robustness(base: &ExperimentConfig, _scale: Scale, sink: &Sink) -> Result<Robustness> {
+    let report = campaign(base)?.run()?;
+
+    let mut cells = Vec::new();
+    for &strategy in &STRATEGIES {
+        for &net in &NETS {
+            let uniform_wall =
+                report.get(&format!("{strategy}_{net}_uniform")).modeled_wall_secs;
+            for &scenario in &SCENARIOS {
+                let label = format!("{strategy}_{net}_{scenario}");
+                let rep = report.get(&label);
+                cells.push(RobustnessCell {
+                    strategy: rep.strategy,
+                    label,
+                    net,
+                    scenario,
+                    final_loss: rep.final_train_loss,
+                    syncs: rep.syncs,
+                    wire_mb: rep.ledger.total_wire_bytes() as f64 / 1e6,
+                    modeled_wall_secs: rep.modeled_wall_secs,
+                    slowdown: rep.modeled_wall_secs / uniform_wall.max(1e-12),
+                });
+            }
+        }
+    }
+
+    let mut t = Table::new(&[
+        "strategy", "net", "scenario", "final loss", "syncs", "wire MB", "wall(model)",
+        "slowdown",
+    ]);
+    for c in &cells {
+        t.row(&[
+            c.strategy.to_string(),
+            c.net.to_string(),
+            c.scenario.to_string(),
+            format!("{:.4}", c.final_loss),
+            c.syncs.to_string(),
+            format!("{:.2}", c.wire_mb),
+            crate::util::fmt::secs(c.modeled_wall_secs),
+            format!("{:.2}x", c.slowdown),
+        ]);
+    }
+    sink.print(&format!(
+        "Robustness — {} strategies × {} nets × {} scenarios (K={}, n={})",
+        STRATEGIES.len(),
+        NETS.len(),
+        SCENARIOS.len(),
+        base.iters,
+        base.nodes,
+    ));
+    sink.print(&t.render());
+
+    if let Some(dir) = sink.dir() {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let path = dir.join("robustness.campaign.json");
+        std::fs::write(&path, report.to_json_stable().to_string_compact())
+            .with_context(|| format!("writing {}", path.display()))?;
+        sink.print(&format!("wrote {}", path.display()));
+    }
+
+    Ok(Robustness { cells, report })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::cifar_base;
+
+    fn tiny_base() -> ExperimentConfig {
+        let mut cfg = cifar_base(Scale::Quick);
+        cfg.nodes = 4;
+        cfg.iters = 120;
+        cfg.batch_per_node = 8;
+        cfg.eval_every = 60;
+        cfg.workload.input_dim = 24;
+        cfg.workload.hidden = 12;
+        cfg.workload.eval_batches = 2;
+        cfg.sync.warmup_iters = 4;
+        cfg
+    }
+
+    #[test]
+    fn campaign_covers_the_full_grid() {
+        let c = campaign(&tiny_base()).unwrap();
+        assert_eq!(c.len(), STRATEGIES.len() * NETS.len() * SCENARIOS.len());
+    }
+
+    #[test]
+    fn heterogeneity_moves_clocks_never_parameters() {
+        let r = robustness(&tiny_base(), Scale::Quick, &Sink::new(None, true)).unwrap();
+        assert_eq!(r.cells.len(), 30);
+        for &strategy in &STRATEGIES {
+            for &net in &NETS {
+                let uni = r.cell(strategy, net, "uniform");
+                for scenario in ["skew", "faulty"] {
+                    let het = r.cell(strategy, net, scenario);
+                    // parameter math is untouched: identical trajectory
+                    assert_eq!(
+                        uni.final_loss.to_bits(),
+                        het.final_loss.to_bits(),
+                        "{strategy}/{net}/{scenario}: loss moved"
+                    );
+                    assert_eq!(uni.syncs, het.syncs, "{strategy}/{net}/{scenario}");
+                    assert_eq!(
+                        uni.wire_mb.to_bits(),
+                        het.wire_mb.to_bits(),
+                        "{strategy}/{net}/{scenario}: wire bytes moved"
+                    );
+                    // ...but the 4x straggler costs modeled time
+                    assert!(
+                        het.slowdown > 1.5,
+                        "{strategy}/{net}/{scenario}: slowdown {} too small",
+                        het.slowdown
+                    );
+                }
+                // the fault schedule adds pauses on top of pure skew
+                let skew = r.cell(strategy, net, "skew");
+                let faulty = r.cell(strategy, net, "faulty");
+                assert!(
+                    faulty.modeled_wall_secs >= skew.modeled_wall_secs,
+                    "{strategy}/{net}: faults must not speed the cluster up"
+                );
+            }
+        }
+        // DaSGD overlaps communication with compute: under the straggler
+        // it must not be slower than the barriered constant-period run
+        let das = r.cell("dasgd", "eth10", "skew");
+        let cps = r.cell("cpsgd", "eth10", "skew");
+        assert!(
+            das.modeled_wall_secs <= cps.modeled_wall_secs,
+            "dasgd {} vs cpsgd {}",
+            das.modeled_wall_secs,
+            cps.modeled_wall_secs
+        );
+    }
+
+    #[test]
+    fn stable_summary_is_reproducible() {
+        let base = tiny_base();
+        let a = robustness(&base, Scale::Quick, &Sink::new(None, true)).unwrap();
+        let b = robustness(&base, Scale::Quick, &Sink::new(None, true)).unwrap();
+        assert_eq!(
+            a.report.to_json_stable().to_string_compact(),
+            b.report.to_json_stable().to_string_compact()
+        );
+    }
+}

@@ -142,6 +142,37 @@
 //! parse failure.  See [`dispatch`] for the experiment → dispatch →
 //! coordinator layering.
 //!
+//! ## Scenarios — heterogeneous clusters
+//!
+//! The homogeneous network model generalizes to a full cluster model:
+//! [`netsim::cluster::ClusterModel`] carries per-node compute
+//! multipliers (`[cluster] skew = "straggler:4.0"` / `"linear:1.5"` or
+//! explicit `factors`), per-link bandwidth/latency asymmetry
+//! (`link_bw_gbps`, `link_latency_us` — collectives bottleneck on the
+//! slowest member), seeded per-step jitter, and a **deterministic fault
+//! schedule** (`[cluster.faults]`: node pauses and packet-delay spikes
+//! concretized from the run seed).  [`netsim::cluster::ClusterClock`]
+//! advances one modeled clock per node — compute steps scale by the
+//! node's factor, BSP syncs barrier every clock to the straggler, and
+//! DaSGD's delayed apply only waits for its in-flight average's modeled
+//! arrival.  Heterogeneity moves **modeled clocks and the ledger
+//! only**: the parameter trajectory is bit-identical with skew/faults
+//! on or off (the invariant the property tests pin), while
+//! `RunReport::modeled_wall_secs` — deterministic, config-declared
+//! `cluster.step_us`, never measured time — shows what each strategy
+//! pays.  Every `[cluster]` knob is result-affecting for the run-cache
+//! digest; `net.preset` names the paper's bandwidth presets with
+//! parse-time validation.
+//!
+//! The strategy zoo covers the related work under these scenarios:
+//! AdaComm (`adacomm`, arXiv 1810.08313 — τ from the loss ratio),
+//! Parallel Restarted SGD (`prsgd`, arXiv 1807.06629 — local SGD with
+//! momentum restarts), and delayed-averaging DaSGD (`dasgd`, arXiv
+//! 2006.00441 — averages applied `delay` iterations late to overlap
+//! communication with compute).  `adpsgd figures --only robustness`
+//! ([`figures::robustness`]) sweeps all five strategies across
+//! skew × fault × network axes and writes a byte-stable summary.
+//!
 //! ## Performance
 //!
 //! The flat-vector kernels in [`tensor`] (dot, norms, axpy, fused

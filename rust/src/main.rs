@@ -77,16 +77,22 @@ USAGE:
 
 RUN OVERRIDES (dotted keys mirror the TOML schema):
     --nodes 16 --iters 4000 --batch_per_node 128 --seed 42
-    --sync.strategy {full|cpsgd|adpsgd|decreasing|qsgd|piecewise|easgd|topk}
+    --sync.strategy {full|cpsgd|adpsgd|decreasing|qsgd|piecewise|easgd|topk|
+                     adacomm|prsgd|dasgd}
     --sync.<strategy>.<knob>        typed per-strategy knobs, e.g.:
         --sync.adaptive.p_init 4 --sync.adaptive.ks_frac 0.25
         --sync.constant.period 8
         --sync.qsgd.levels 255 --sync.qsgd.bucket 512
         --sync.easgd.period 8 --sync.easgd.alpha 0.5
+        --sync.adacomm.tau0 16
+        --sync.prsgd.period 8
+        --sync.dasgd.period 8 --sync.dasgd.delay 2
     --sync.collective {ring|flat}   (allreduce algorithm: chunked-parallel
                                      ring, or the leader-serialized flat)
     --workload.backend {native|hlo} --workload.model mlp_small
     --optim.lr0 0.1 --optim.schedule {const|step|warmup}
+    --net.preset {infiniband_100g|ethernet_10g}   (unknown names are
+                                     rejected with the valid preset list)
     --net.bandwidth_gbps 100 --net.latency_us 2
     Legacy flat keys (--sync.p_init, --sync.qsgd_levels, ...) still load
     (deprecated).  A knob that does not belong to the chosen strategy is
@@ -218,7 +224,8 @@ REGISTRY (the fleet phonebook):
                          schedules nothing and holds no secrets.
 
 FIGURES:
-    --only fig1,fig2,fig4,fig5,fig6,fig7,fig8,table1,sec5b,ablation  (default: all)
+    --only fig1,fig2,fig4,fig5,fig6,fig7,fig8,table1,sec5b,ablation,robustness
+                   (default: all)
     --quick        shrink every axis (seconds instead of minutes)
     --cache-dir DIR  run cache shared by every figure campaign (regenerating
                    a subset of figures reuses the others' finished runs)
@@ -227,6 +234,42 @@ FIGURES:
     (--jobs/--workers/--remote/--fleet/--remote-token/--retries/
     --hang-timeout/--no-cache): the whole figure sweep gets the same
     pool, supervision, and remote/fleet capacity.
+
+SCENARIOS (heterogeneous clusters: the [cluster] TOML table):
+    [cluster] models per-node compute skew, per-link network asymmetry,
+    and a deterministic fault schedule.  Every key moves *modeled clocks
+    and the communication ledger only* — for a fixed seed the trained
+    parameters are bit-identical with heterogeneity on or off, so the
+    run-cache digest includes every [cluster] knob but the trajectory
+    never changes.  Keys (dotted CLI overrides mirror them):
+    --cluster.skew {none|linear:S|straggler:F}
+                         per-node compute multipliers: `linear:1.5`
+                         ramps 1.0→1.5 across ranks, `straggler:4.0`
+                         makes the last rank 4x slower
+    --cluster.factors [1.0,1.0,2.5,...]   explicit multipliers (one per
+                         node; overrides --cluster.skew)
+    --cluster.step_us 1000     modeled per-step compute microseconds at
+                         factor 1.0 (config-declared, never measured —
+                         this keeps summaries byte-stable across hosts)
+    --cluster.jitter 0.1       seeded relative per-step jitter (0..1)
+    --cluster.link_bw_gbps     per-node link bandwidths (one per node;
+                         collectives bottleneck on the slowest member)
+    --cluster.link_latency_us  per-node link latencies
+    [cluster.faults] — deterministic from (seed, nodes, iters):
+    --cluster.faults.seed 0        0 = derive from the run seed
+    --cluster.faults.pauses 2      node pauses (stop-the-world stalls)
+    --cluster.faults.pause_secs 0.05
+    --cluster.faults.spikes 2      packet-delay spikes on the network
+    --cluster.faults.spike_secs 0.002
+    --cluster.faults.spike_len 8   iterations each spike lasts
+    Sweep examples (cluster knobs are campaign axes like any other):
+        adpsgd run --cluster.skew straggler:4.0 --cluster.jitter 0.1
+        adpsgd campaign --strategies cpsgd,adpsgd,dasgd \
+            --cluster.skew straggler:4.0 --cluster.faults.pauses 2
+    Robustness quickstart (5 strategies x 2 networks x 3 scenarios;
+    writes robustness.campaign.json, byte-stable across --jobs levels
+    and cold/warm cache):
+        adpsgd figures --only robustness --quick --out results
 
 PERFORMANCE:
     --perf.threads N     kernel-parallelism width for the tensor/quant hot
@@ -958,6 +1001,10 @@ fn cmd_figures(args: &Args) -> Result<()> {
         let mut base = figures::cifar_base(scale);
         figures::googlenet_role(&mut base, scale);
         figures::ablation::ablation(&base, scale, &sink)?;
+    }
+    if want("robustness") {
+        let base = figures::cifar_base(scale);
+        figures::robustness::robustness(&base, scale, &sink)?;
     }
     Ok(())
 }

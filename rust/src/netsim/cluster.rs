@@ -1,0 +1,532 @@
+//! Heterogeneity-aware cluster model: per-node compute skew, per-link
+//! asymmetry, and deterministic fault injection.
+//!
+//! The homogeneous [`super::ComputeModel`] / [`super::NetModel`] pair
+//! prices every node and every link identically — the paper's testbed
+//! assumption.  This module removes it for the coordinator's *modeled*
+//! time without ever touching parameter math: a [`ClusterModel`] is
+//! built once per run from the typed `[cluster]` config table, and a
+//! [`ClusterClock`] advances one modeled clock per node.  Collectives
+//! are BSP — they complete when the slowest participant arrives — so
+//! stragglers (static skew, seeded jitter, injected pauses) delay the
+//! synchronization barrier every strategy pays for, which is exactly
+//! the regime the related-work strategies (AdaComm / PR-SGD / DaSGD)
+//! were designed around.
+//!
+//! Everything here is deterministic given the config: skew factors are
+//! declared explicitly or derived from a spec string, jitter is a
+//! seeded per-`(node, iteration)` stream, and the fault schedule is
+//! concretized from `(seed, nodes, iters)` at build time.  Modeled
+//! clocks therefore survive the dispatch layer's byte-identity
+//! requirements (same digest ⇒ same report bytes) across thread
+//! counts, job counts, and cache states.  Every rank replicates the
+//! full n-clock vector locally — sync decisions are already replicated,
+//! so the clocks need zero extra communication.
+
+use super::NetModel;
+use crate::config::{ClusterConfig, FaultConfig, NetConfig};
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+// ------------------------------------------------------------------ skew
+
+/// Per-node compute-speed skew, parsed from the `cluster.skew` spec
+/// string.  Factors multiply the nominal per-step compute time, so a
+/// factor of 3.0 means "this node is 3× slower".
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Skew {
+    /// every node at the nominal speed
+    Uniform,
+    /// factors spread linearly from 1.0 (rank 0) to 1.0 + spread
+    /// (last rank)
+    Linear(f64),
+    /// one straggler: the last rank runs `factor`× slower, the rest
+    /// nominal — the classic DaSGD scenario
+    Straggler(f64),
+}
+
+impl std::str::FromStr for Skew {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Skew> {
+        if s == "none" {
+            return Ok(Skew::Uniform);
+        }
+        if let Some(v) = s.strip_prefix("linear:") {
+            let spread: f64 =
+                v.parse().with_context(|| format!("cluster.skew: bad spread in {s:?}"))?;
+            if !spread.is_finite() || spread < 0.0 {
+                bail!("cluster.skew: linear spread must be >= 0, got {spread}");
+            }
+            return Ok(Skew::Linear(spread));
+        }
+        if let Some(v) = s.strip_prefix("straggler:") {
+            let factor: f64 =
+                v.parse().with_context(|| format!("cluster.skew: bad factor in {s:?}"))?;
+            if !factor.is_finite() || factor < 1.0 {
+                bail!("cluster.skew: straggler factor must be >= 1, got {factor}");
+            }
+            return Ok(Skew::Straggler(factor));
+        }
+        bail!(
+            "cluster.skew: unknown spec {s:?} (expected \"none\", \"linear:<spread>\", \
+             or \"straggler:<factor>\")"
+        )
+    }
+}
+
+impl Skew {
+    /// Concrete per-node factors for an n-node cluster.
+    pub fn factors(self, n: usize) -> Vec<f64> {
+        match self {
+            Skew::Uniform => vec![1.0; n],
+            Skew::Linear(spread) => {
+                if n <= 1 {
+                    return vec![1.0; n];
+                }
+                (0..n).map(|i| 1.0 + spread * i as f64 / (n - 1) as f64).collect()
+            }
+            Skew::Straggler(factor) => {
+                let mut v = vec![1.0; n];
+                if let Some(last) = v.last_mut() {
+                    *last = factor;
+                }
+                v
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- faults
+
+/// A concrete, fully deterministic fault schedule: which node pauses at
+/// which iteration, and when network latency spikes.  Generated once
+/// per run from `(fault seed, nodes, iters)`.
+#[derive(Debug, Clone, Default)]
+pub struct FaultSchedule {
+    /// (iteration, node) → extra pause seconds added to that step
+    pauses: BTreeMap<(usize, usize), f64>,
+    /// packet-delay spikes: (start iteration, length, extra latency s)
+    spikes: Vec<(usize, usize, f64)>,
+}
+
+impl FaultSchedule {
+    /// Concretize the declared fault *counts* into scheduled events.
+    /// `seed` is the experiment seed; `faults.seed` overrides it when
+    /// nonzero so fault placement can be swept independently of data.
+    pub fn generate(faults: &FaultConfig, seed: u64, n: usize, iters: usize) -> FaultSchedule {
+        let mut s = FaultSchedule::default();
+        if n == 0 || iters == 0 {
+            return s;
+        }
+        let seed = if faults.seed != 0 { faults.seed } else { seed ^ 0xFA17_5EED };
+        // independent streams so adding spikes never moves pauses
+        let mut pr = Rng::new(seed, 0xFA01);
+        for _ in 0..faults.pauses {
+            let k = pr.below(iters);
+            let node = pr.below(n);
+            *s.pauses.entry((k, node)).or_insert(0.0) += faults.pause_secs;
+        }
+        let mut sr = Rng::new(seed, 0xFA02);
+        for _ in 0..faults.spikes {
+            let k = sr.below(iters);
+            s.spikes.push((k, faults.spike_len.max(1), faults.spike_secs));
+        }
+        s
+    }
+
+    /// Extra pause seconds node `node` suffers at iteration `k`.
+    pub fn pause(&self, node: usize, k: usize) -> f64 {
+        self.pauses.get(&(k, node)).copied().unwrap_or(0.0)
+    }
+
+    /// Extra per-message latency from spikes active at iteration `k`.
+    pub fn spike_alpha(&self, k: usize) -> f64 {
+        self.spikes
+            .iter()
+            .filter(|(start, len, _)| k >= *start && k < start + len)
+            .map(|(_, _, secs)| *secs)
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pauses.is_empty() && self.spikes.is_empty()
+    }
+
+    pub fn pause_events(&self) -> usize {
+        self.pauses.len()
+    }
+
+    pub fn spike_events(&self) -> usize {
+        self.spikes.len()
+    }
+}
+
+// ----------------------------------------------------------------- model
+
+/// The full heterogeneous cluster: per-node compute factors, per-node
+/// uplink models, seeded step jitter, and the fault schedule.
+#[derive(Debug, Clone)]
+pub struct ClusterModel {
+    pub n: usize,
+    /// per-node compute multipliers (1.0 = nominal)
+    pub factors: Vec<f64>,
+    /// nominal modeled per-step compute seconds
+    pub step_secs: f64,
+    /// per-step jitter as a fraction of the node's own step time
+    pub jitter: f64,
+    /// per-node uplink models; a collective is bottlenecked by the
+    /// slowest of them
+    pub links: Vec<NetModel>,
+    pub faults: FaultSchedule,
+    seed: u64,
+}
+
+impl ClusterModel {
+    /// Build from the typed config.  `iters` bounds the fault schedule;
+    /// `seed` is the experiment seed (fault placement derives from it
+    /// unless `cluster.faults.seed` overrides).
+    pub fn from_config(
+        cl: &ClusterConfig,
+        net: &NetConfig,
+        n: usize,
+        iters: usize,
+        seed: u64,
+    ) -> Result<ClusterModel> {
+        let factors = if !cl.factors.is_empty() {
+            if cl.factors.len() != n {
+                bail!("cluster.factors has {} entries for {n} nodes", cl.factors.len());
+            }
+            cl.factors.clone()
+        } else {
+            cl.skew.parse::<Skew>()?.factors(n)
+        };
+        if let Some(f) = factors.iter().find(|f| !f.is_finite() || **f <= 0.0) {
+            bail!("cluster.factors: factor {f} must be a positive finite number");
+        }
+        for (name, arr) in
+            [("cluster.link_bw_gbps", &cl.link_bw_gbps), ("cluster.link_latency_us", &cl.link_latency_us)]
+        {
+            if !arr.is_empty() && arr.len() != n {
+                bail!("{name} has {} entries for {n} nodes", arr.len());
+            }
+            if let Some(v) = arr.iter().find(|v| !v.is_finite() || **v < 0.0) {
+                bail!("{name}: {v} must be a non-negative finite number");
+            }
+        }
+        let base = NetModel::new(net);
+        let links = (0..n)
+            .map(|i| NetModel {
+                bw: cl.link_bw_gbps.get(i).map(|g| g * 1e9 / 8.0).unwrap_or(base.bw),
+                alpha: cl.link_latency_us.get(i).map(|us| us * 1e-6).unwrap_or(base.alpha),
+            })
+            .collect();
+        Ok(ClusterModel {
+            n,
+            factors,
+            step_secs: cl.step_us * 1e-6,
+            jitter: cl.jitter,
+            links,
+            faults: FaultSchedule::generate(&cl.faults, seed, n, iters),
+            seed,
+        })
+    }
+
+    /// A uniform cluster over `net` with the default `[cluster]` table —
+    /// what every run before the cluster model behaved like.
+    pub fn uniform(net: &NetConfig, n: usize) -> ClusterModel {
+        Self::from_config(&ClusterConfig::default(), net, n, 0, 0)
+            .expect("default cluster config is valid")
+    }
+
+    /// Modeled compute seconds node `node` spends on iteration `k`:
+    /// nominal step × skew factor, ± seeded jitter, + injected pauses.
+    pub fn step_secs_at(&self, node: usize, k: usize) -> f64 {
+        let base = self.step_secs * self.factors[node];
+        let jit = if self.jitter > 0.0 {
+            let u = Rng::new(self.seed ^ 0xC10C_0000, ((node as u64) << 40) ^ k as u64).f64();
+            base * self.jitter * (2.0 * u - 1.0)
+        } else {
+            0.0
+        };
+        (base + jit).max(0.0) + self.faults.pause(node, k)
+    }
+
+    /// Effective network model for a collective launched at iteration
+    /// `k`: bottlenecked by the slowest link, plus any active
+    /// packet-delay spike.
+    pub fn net_at(&self, k: usize) -> NetModel {
+        let mut bw = f64::INFINITY;
+        let mut alpha = 0.0f64;
+        for l in &self.links {
+            bw = bw.min(l.bw);
+            alpha = alpha.max(l.alpha);
+        }
+        if !bw.is_finite() {
+            bw = 1.0; // n = 0 never reaches a collective; keep the model sane
+        }
+        NetModel { bw, alpha: alpha + self.faults.spike_alpha(k) }
+    }
+}
+
+// ----------------------------------------------------------------- clock
+
+/// Per-node modeled clocks, advanced in lockstep with the training
+/// loop.  Replicated on every rank (the inputs are config-deterministic
+/// and sync decisions are identical on all ranks), so the coordinator
+/// reads rank 0's copy for the run report.
+#[derive(Debug, Clone)]
+pub struct ClusterClock {
+    model: ClusterModel,
+    t: Vec<f64>,
+}
+
+impl ClusterClock {
+    pub fn new(model: ClusterModel) -> ClusterClock {
+        let t = vec![0.0; model.n];
+        ClusterClock { model, t }
+    }
+
+    pub fn model(&self) -> &ClusterModel {
+        &self.model
+    }
+
+    /// The network a collective launched at iteration `k` sees.
+    pub fn net_at(&self, k: usize) -> NetModel {
+        self.model.net_at(k)
+    }
+
+    /// Advance every node's clock by its modeled compute for
+    /// iteration `k`.
+    pub fn step(&mut self, k: usize) {
+        for (i, t) in self.t.iter_mut().enumerate() {
+            *t += self.model.step_secs_at(i, k);
+        }
+    }
+
+    /// BSP barrier + blocking collective: everyone leaves at the
+    /// slowest arrival plus the modeled communication time.
+    pub fn barrier(&mut self, comm_secs: f64) {
+        let m = self.max() + comm_secs;
+        for t in &mut self.t {
+            *t = m;
+        }
+    }
+
+    /// Deferred completion (DaSGD): a collective launched at modeled
+    /// time `floor - comm_secs` finishes at `floor`; nodes that are
+    /// still computing hide it entirely, nodes that got ahead wait.
+    /// No inter-node barrier — each node only syncs with the wire.
+    pub fn wait_until(&mut self, floor: f64) {
+        for t in &mut self.t {
+            if *t < floor {
+                *t = floor;
+            }
+        }
+    }
+
+    /// Modeled time of node `i`.
+    pub fn node(&self, i: usize) -> f64 {
+        self.t[i]
+    }
+
+    /// Modeled wall-clock so far: the slowest node's clock.
+    pub fn max(&self) -> f64 {
+        self.t.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cl() -> ClusterConfig {
+        ClusterConfig::default()
+    }
+
+    fn net() -> NetConfig {
+        NetConfig::infiniband_100g()
+    }
+
+    #[test]
+    fn skew_spec_parses() {
+        assert_eq!("none".parse::<Skew>().unwrap(), Skew::Uniform);
+        assert_eq!("linear:0.5".parse::<Skew>().unwrap(), Skew::Linear(0.5));
+        assert_eq!("straggler:4".parse::<Skew>().unwrap(), Skew::Straggler(4.0));
+        for bad in ["", "nope", "linear:", "linear:-1", "straggler:0.5", "straggler:x"] {
+            let err = bad.parse::<Skew>().unwrap_err().to_string();
+            assert!(err.contains("cluster.skew"), "{bad:?}: {err}");
+        }
+        // the unknown-name error teaches the valid grammar
+        let err = "zipf:2".parse::<Skew>().unwrap_err().to_string();
+        assert!(err.contains("linear:") && err.contains("straggler:"), "{err}");
+    }
+
+    #[test]
+    fn skew_factor_shapes() {
+        assert_eq!(Skew::Uniform.factors(4), vec![1.0; 4]);
+        let lin = Skew::Linear(1.0).factors(5);
+        assert_eq!(lin[0], 1.0);
+        assert_eq!(lin[4], 2.0);
+        assert!(lin.windows(2).all(|w| w[1] > w[0]), "{lin:?}");
+        let st = Skew::Straggler(3.0).factors(4);
+        assert_eq!(st, vec![1.0, 1.0, 1.0, 3.0]);
+        // degenerate sizes never panic
+        assert_eq!(Skew::Linear(2.0).factors(1), vec![1.0]);
+        assert!(Skew::Straggler(2.0).factors(0).is_empty());
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic_and_counted() {
+        let f = FaultConfig {
+            seed: 0,
+            pauses: 5,
+            pause_secs: 0.5,
+            spikes: 3,
+            spike_secs: 1e-3,
+            spike_len: 4,
+        };
+        let a = FaultSchedule::generate(&f, 42, 8, 400);
+        let b = FaultSchedule::generate(&f, 42, 8, 400);
+        assert_eq!(a.pauses, b.pauses);
+        assert_eq!(a.spikes, b.spikes);
+        assert_eq!(a.spike_events(), 3);
+        assert!(a.pause_events() >= 4, "collisions may merge, most survive");
+        // a different seed moves the schedule
+        let c = FaultSchedule::generate(&f, 43, 8, 400);
+        assert_ne!(a.pauses, c.pauses);
+        // explicit fault seed wins over the experiment seed
+        let f2 = FaultConfig { seed: 99, ..f };
+        let d1 = FaultSchedule::generate(&f2, 42, 8, 400);
+        let d2 = FaultSchedule::generate(&f2, 1234, 8, 400);
+        assert_eq!(d1.pauses, d2.pauses);
+        // zero counts → empty schedule
+        assert!(FaultSchedule::generate(&FaultConfig::default(), 42, 8, 400).is_empty());
+    }
+
+    #[test]
+    fn spike_alpha_active_only_in_window() {
+        let f = FaultConfig {
+            pauses: 0,
+            spikes: 1,
+            spike_secs: 2e-3,
+            spike_len: 5,
+            ..FaultConfig::default()
+        };
+        let s = FaultSchedule::generate(&f, 7, 4, 100);
+        let start = (0..100).find(|&k| s.spike_alpha(k) > 0.0).unwrap();
+        for k in start..start + 5 {
+            assert_eq!(s.spike_alpha(k), 2e-3);
+        }
+        assert_eq!(s.spike_alpha(start + 5), 0.0);
+    }
+
+    #[test]
+    fn model_rejects_bad_shapes() {
+        let mut c = cl();
+        c.factors = vec![1.0, 2.0];
+        assert!(ClusterModel::from_config(&c, &net(), 4, 100, 1).is_err());
+        let mut c = cl();
+        c.link_bw_gbps = vec![100.0; 3];
+        assert!(ClusterModel::from_config(&c, &net(), 4, 100, 1).is_err());
+        let mut c = cl();
+        c.factors = vec![1.0, 0.0, 1.0, 1.0];
+        assert!(ClusterModel::from_config(&c, &net(), 4, 100, 1).is_err());
+        let mut c = cl();
+        c.skew = "bogus".into();
+        assert!(ClusterModel::from_config(&c, &net(), 4, 100, 1).is_err());
+    }
+
+    #[test]
+    fn explicit_factors_win_over_skew() {
+        let mut c = cl();
+        c.skew = "straggler:8".into();
+        c.factors = vec![1.0, 2.0, 3.0, 4.0];
+        let m = ClusterModel::from_config(&c, &net(), 4, 100, 1).unwrap();
+        assert_eq!(m.factors, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn link_overrides_bottleneck_the_collective() {
+        let mut c = cl();
+        c.link_bw_gbps = vec![100.0, 100.0, 10.0, 100.0];
+        c.link_latency_us = vec![2.0, 2.0, 50.0, 2.0];
+        let m = ClusterModel::from_config(&c, &net(), 4, 100, 1).unwrap();
+        let eff = m.net_at(0);
+        assert_eq!(eff.bw, 10.0 * 1e9 / 8.0);
+        assert_eq!(eff.alpha, 50.0 * 1e-6);
+        // uniform links reproduce the base NetModel exactly
+        let u = ClusterModel::uniform(&net(), 4).net_at(0);
+        assert_eq!(u, NetModel::new(&net()));
+    }
+
+    #[test]
+    fn straggler_delays_the_barrier() {
+        let mut c = cl();
+        c.skew = "straggler:4".into();
+        c.step_us = 1000.0;
+        let m = ClusterModel::from_config(&c, &net(), 4, 100, 1).unwrap();
+        let mut skewed = ClusterClock::new(m);
+        let mut uniform = ClusterClock::new(ClusterModel::uniform(&net(), 4));
+        for k in 0..10 {
+            skewed.step(k);
+            uniform.step(k);
+        }
+        // straggler: 10 steps at 4x nominal = 40ms vs 10ms
+        assert!((skewed.max() - 40e-3).abs() < 1e-12, "{}", skewed.max());
+        assert!((uniform.max() - 10e-3).abs() < 1e-12, "{}", uniform.max());
+        // the barrier drags every node to the straggler's clock
+        skewed.barrier(1e-3);
+        for i in 0..4 {
+            assert_eq!(skewed.node(i), 41e-3);
+        }
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_seeded() {
+        let mut c = cl();
+        c.jitter = 0.3;
+        c.step_us = 1000.0;
+        let m = ClusterModel::from_config(&c, &net(), 4, 100, 9).unwrap();
+        for k in 0..50 {
+            for i in 0..4 {
+                let s = m.step_secs_at(i, k);
+                assert!((0.7e-3..=1.3e-3).contains(&s), "step {s}");
+                assert_eq!(s, m.step_secs_at(i, k), "same (node, k) must replay");
+            }
+        }
+        // jitter varies across iterations (not a constant offset)
+        let s0 = m.step_secs_at(0, 0);
+        assert!((0..50).any(|k| m.step_secs_at(0, k) != s0));
+    }
+
+    #[test]
+    fn wait_until_only_lifts_laggards() {
+        let mut clock = ClusterClock::new(ClusterModel::uniform(&net(), 3));
+        clock.step(0);
+        let before = clock.node(0);
+        clock.wait_until(before - 1e-6);
+        assert_eq!(clock.node(0), before, "already past the floor");
+        clock.wait_until(before + 5e-3);
+        for i in 0..3 {
+            assert_eq!(clock.node(i), before + 5e-3);
+        }
+    }
+
+    #[test]
+    fn pauses_hit_exactly_one_node_step() {
+        let f = FaultConfig {
+            pauses: 1,
+            pause_secs: 2.0,
+            ..FaultConfig::default()
+        };
+        let s = FaultSchedule::generate(&f, 5, 4, 50);
+        let hit: Vec<(usize, usize)> = (0..50)
+            .flat_map(|k| (0..4).map(move |i| (k, i)))
+            .filter(|&(k, i)| s.pause(i, k) > 0.0)
+            .collect();
+        assert_eq!(hit.len(), 1);
+        assert_eq!(s.pause(hit[0].1, hit[0].0), 2.0);
+    }
+}

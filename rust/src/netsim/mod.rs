@@ -27,6 +27,8 @@
 //! configured with.  The ledger's algorithm comes from
 //! `cfg.sync.collective` via [`CommLedger::with_algo`].
 
+pub mod cluster;
+
 use crate::collective::Algo;
 use crate::config::NetConfig;
 

@@ -37,6 +37,18 @@ pub enum Strategy {
     /// Top-k gradient sparsification with error feedback (Strom [12] /
     /// Aji & Heafield [53] family, §VI): every iteration, compressed.
     TopK,
+    /// AdaComm (Wang & Joshi, arXiv 1810.08313): error-runtime-optimal
+    /// decaying schedule τ = ceil(τ₀·√(F(w)/F(w₀))) re-derived from the
+    /// current loss at every sync.
+    AdaComm,
+    /// Parallel Restarted SGD (Yu, Yang & Zhu, arXiv 1807.06629):
+    /// constant-period averaging with momentum *restarted* at every
+    /// averaging point.
+    PrSgd,
+    /// DaSGD delayed averaging (Zhu et al., arXiv 2006.00441): the
+    /// allreduce launched at a sync point is applied `delay` iterations
+    /// later, overlapping communication with continued local steps.
+    DaSgd,
 }
 
 impl std::str::FromStr for Strategy {
@@ -51,9 +63,13 @@ impl std::str::FromStr for Strategy {
             "piecewise" => Strategy::Piecewise,
             "easgd" => Strategy::Easgd,
             "topk" => Strategy::TopK,
+            "adacomm" => Strategy::AdaComm,
+            "prsgd" | "pr_sgd" => Strategy::PrSgd,
+            "dasgd" => Strategy::DaSgd,
             other => bail!(
                 "unknown strategy {other:?} \
-                 (full|constant|adaptive|decreasing|qsgd|piecewise|easgd|topk)"
+                 (full|constant|adaptive|decreasing|qsgd|piecewise|easgd|topk|\
+                  adacomm|prsgd|dasgd)"
             ),
         })
     }
@@ -70,6 +86,9 @@ impl std::fmt::Display for Strategy {
             Strategy::Piecewise => "PIECEWISE",
             Strategy::Easgd => "EASGD",
             Strategy::TopK => "TOPK",
+            Strategy::AdaComm => "ADACOMM",
+            Strategy::PrSgd => "PRSGD",
+            Strategy::DaSgd => "DASGD",
         };
         f.write_str(s)
     }
@@ -128,6 +147,19 @@ pub trait PeriodController: Send {
     /// Restore a state previously produced by [`Self::snapshot`] (from a
     /// checkpoint of the same strategy).  The default ignores it.
     fn restore(&mut self, _state: &CtrlState) {}
+
+    /// Does this controller adapt from the (globally agreed) training
+    /// loss?  When true, the coordinator allreduces the mean local loss
+    /// at every sync (charged to the ledger as a scalar stat) and feeds
+    /// it to [`Self::observe_loss`] — so every rank derives the same
+    /// schedule from the same number.  Default: no loss feedback.
+    fn wants_loss(&self) -> bool {
+        false
+    }
+
+    /// Globally agreed loss at a sync point (only called when
+    /// [`Self::wants_loss`] is true).  Default: ignored.
+    fn observe_loss(&mut self, _loss: f64) {}
 }
 
 // ---------------------------------------------------------------- constant
@@ -282,6 +314,99 @@ impl PeriodController for Adaptive {
         self.cnt = state.cnt as usize;
         self.c2 = state.c2;
         self.c2_samples = state.c2_samples;
+    }
+}
+
+// ---------------------------------------------------------------- adacomm
+
+/// AdaComm (Wang & Joshi, arXiv 1810.08313): communication period
+/// derived from the error-runtime trade-off,
+/// `τ(t) = ceil(τ₀ · sqrt(F(w_t) / F(w_0)))`, re-evaluated from the
+/// globally agreed training loss at every sync and clamped to
+/// `[1, τ₀]`.  Loss decays ⇒ the period *decays* toward 1 — the inverse
+/// of ADPSGD's growth, which is exactly why the comparison under skew
+/// is interesting.
+///
+/// Until the first loss observation arrives the controller runs at τ₀.
+/// The reference loss `F(w_0)` is the first observed value; it persists
+/// across warm starts through [`CtrlState`] (`c2` carries `f0`,
+/// `c2_samples` carries the have-reference flag), so a resumed run keeps
+/// the original normalization instead of re-anchoring to the already
+/// decayed loss.
+#[derive(Debug, Clone)]
+pub struct AdaComm {
+    pub tau0: usize,
+    f0: f64,
+    have_f0: bool,
+    p: usize,
+    cnt: usize,
+}
+
+impl AdaComm {
+    pub fn new(tau0: usize) -> Self {
+        assert!(tau0 >= 1);
+        AdaComm { tau0, f0: 0.0, have_f0: false, p: tau0, cnt: 0 }
+    }
+
+    /// The reference loss F(w_0) (for tests / introspection).
+    pub fn f0(&self) -> Option<f64> {
+        self.have_f0.then_some(self.f0)
+    }
+}
+
+impl PeriodController for AdaComm {
+    fn should_sync(&mut self, _k: usize) -> bool {
+        self.cnt += 1;
+        if self.cnt >= self.p {
+            self.cnt = 0;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn on_sync(&mut self, _k: usize, _s_k: f64, _lr: f32) {}
+
+    fn current_period(&self) -> usize {
+        self.p
+    }
+
+    fn name(&self) -> &'static str {
+        "adacomm"
+    }
+
+    fn wants_loss(&self) -> bool {
+        true
+    }
+
+    fn observe_loss(&mut self, loss: f64) {
+        if !loss.is_finite() || loss <= 0.0 {
+            return; // divergence / degenerate loss: hold the period
+        }
+        if !self.have_f0 {
+            self.f0 = loss;
+            self.have_f0 = true;
+            return;
+        }
+        let tau = (self.tau0 as f64) * (loss / self.f0).sqrt();
+        self.p = (tau.ceil() as usize).clamp(1, self.tau0);
+        self.cnt = self.cnt.min(self.p - 1);
+    }
+
+    fn snapshot(&self) -> Option<CtrlState> {
+        Some(CtrlState {
+            period: self.p as u64,
+            cnt: self.cnt as u64,
+            c2: self.f0,
+            c2_samples: self.have_f0 as u64,
+        })
+    }
+
+    fn restore(&mut self, state: &CtrlState) {
+        self.p = (state.period as usize).clamp(1, self.tau0);
+        self.cnt = state.cnt as usize % self.p;
+        self.f0 = state.c2;
+        self.have_f0 = state.c2_samples > 0;
     }
 }
 
@@ -687,7 +812,78 @@ mod tests {
         assert_eq!("full".parse::<Strategy>().unwrap(), Strategy::Full);
         assert_eq!("piecewise".parse::<Strategy>().unwrap(), Strategy::Piecewise);
         assert_eq!("easgd".parse::<Strategy>().unwrap(), Strategy::Easgd);
-        assert!("nope".parse::<Strategy>().is_err());
+        assert_eq!("adacomm".parse::<Strategy>().unwrap(), Strategy::AdaComm);
+        assert_eq!("prsgd".parse::<Strategy>().unwrap(), Strategy::PrSgd);
+        assert_eq!("pr_sgd".parse::<Strategy>().unwrap(), Strategy::PrSgd);
+        assert_eq!("dasgd".parse::<Strategy>().unwrap(), Strategy::DaSgd);
+        let err = "nope".parse::<Strategy>().unwrap_err().to_string();
+        assert!(err.contains("adacomm") && err.contains("dasgd"), "{err}");
+    }
+
+    #[test]
+    fn adacomm_runs_at_tau0_until_first_loss() {
+        let mut a = AdaComm::new(8);
+        assert!(a.wants_loss(), "adacomm consumes loss feedback");
+        let pts = sync_points(&mut a, 24);
+        assert_eq!(pts, vec![7, 15, 23], "no loss seen -> constant tau0");
+        assert_eq!(a.f0(), None);
+    }
+
+    #[test]
+    fn adacomm_period_decays_with_the_loss() {
+        let mut a = AdaComm::new(16);
+        a.observe_loss(2.0); // sets the reference F(w_0)
+        assert_eq!(a.f0(), Some(2.0));
+        assert_eq!(a.current_period(), 16);
+        a.observe_loss(2.0); // F = F0 -> tau = tau0
+        assert_eq!(a.current_period(), 16);
+        a.observe_loss(0.5); // sqrt(0.25) = 0.5 -> ceil(8)
+        assert_eq!(a.current_period(), 8);
+        a.observe_loss(0.02); // sqrt(0.01) = 0.1 -> ceil(1.6) = 2
+        assert_eq!(a.current_period(), 2);
+        a.observe_loss(1e-9); // floor at 1
+        assert_eq!(a.current_period(), 1);
+        a.observe_loss(50.0); // loss spike above F0: clamped to tau0
+        assert_eq!(a.current_period(), 16);
+    }
+
+    #[test]
+    fn adacomm_ignores_degenerate_loss() {
+        let mut a = AdaComm::new(8);
+        a.observe_loss(f64::NAN);
+        a.observe_loss(-1.0);
+        a.observe_loss(0.0);
+        assert_eq!(a.f0(), None, "degenerate values must not anchor F(w_0)");
+        a.observe_loss(1.0);
+        a.observe_loss(f64::INFINITY); // divergence: hold current period
+        assert_eq!(a.current_period(), 8);
+    }
+
+    #[test]
+    fn adacomm_snapshot_restore_keeps_reference_loss() {
+        let mut a = AdaComm::new(16);
+        a.observe_loss(4.0);
+        a.observe_loss(1.0); // tau = 16 * sqrt(1/4) = 8
+        for k in 0..5 {
+            a.should_sync(k);
+        }
+        let st = a.snapshot().unwrap();
+        assert_eq!(st.period, 8);
+        assert_eq!(st.c2, 4.0, "f0 rides in the c2 slot");
+        assert_eq!(st.c2_samples, 1);
+        let mut b = AdaComm::new(16);
+        b.restore(&st);
+        assert_eq!(b.f0(), Some(4.0));
+        assert_eq!(b.current_period(), 8);
+        // the restored controller keeps normalizing against the original
+        // F(w_0), not the loss at resume time
+        b.observe_loss(0.25); // 16 * sqrt(1/16) = 4
+        assert_eq!(b.current_period(), 4);
+        // phase resumed too: 5 iters into p=8 -> next sync 3 iters later
+        let mut c = AdaComm::new(16);
+        c.restore(&st);
+        let first = (0..16).find(|&k| c.should_sync(k));
+        assert_eq!(first, Some(2));
     }
 
     #[test]

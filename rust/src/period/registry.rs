@@ -18,7 +18,7 @@
 //! controller — their builders return `None`, which the sync pipeline
 //! reads as "exchange every iteration".
 
-use super::{Adaptive, Constant, Decreasing, PeriodController, Piecewise};
+use super::{AdaComm, Adaptive, Constant, Decreasing, PeriodController, Piecewise};
 use crate::config::StrategySpec;
 use std::collections::BTreeMap;
 use std::sync::OnceLock;
@@ -91,6 +91,32 @@ fn build_easgd(spec: &StrategySpec, _: &Ctx) -> Option<Box<dyn PeriodController>
     }
 }
 
+fn build_adacomm(spec: &StrategySpec, _: &Ctx) -> Option<Box<dyn PeriodController>> {
+    match spec {
+        StrategySpec::AdaComm { tau0 } => Some(Box::new(AdaComm::new(*tau0))),
+        _ => None,
+    }
+}
+
+fn build_prsgd(spec: &StrategySpec, _: &Ctx) -> Option<Box<dyn PeriodController>> {
+    // PR-SGD schedules like CPSGD; the momentum restart at each
+    // averaging point is a SyncStep pipeline flag, not a schedule
+    match spec {
+        StrategySpec::PrSgd { period } => Some(Box::new(Constant::new(*period))),
+        _ => None,
+    }
+}
+
+fn build_dasgd(spec: &StrategySpec, _: &Ctx) -> Option<Box<dyn PeriodController>> {
+    // DaSGD *launches* an average on a constant period; the delayed
+    // apply lives in the SyncStep pipeline (overlap is a clock/ledger
+    // concern, never a parameter-math concern)
+    match spec {
+        StrategySpec::DaSgd { period, .. } => Some(Box::new(Constant::new(*period))),
+        _ => None,
+    }
+}
+
 impl Registry {
     /// The paper's controllers under their canonical names.
     pub fn with_defaults() -> Registry {
@@ -103,6 +129,9 @@ impl Registry {
         r.register("piecewise", build_piecewise);
         r.register("easgd", build_easgd);
         r.register("topk", build_none);
+        r.register("adacomm", build_adacomm);
+        r.register("prsgd", build_prsgd);
+        r.register("dasgd", build_dasgd);
         r
     }
 
@@ -171,6 +200,22 @@ mod tests {
         }
         assert!(c.current_period() > 4, "period should grow after K_s");
         assert!(syncs > 0);
+    }
+
+    #[test]
+    fn newcomer_builders_map_specs_to_controllers() {
+        let ctx = Ctx { total_iters: 1000 };
+        let a = build(&StrategySpec::AdaComm { tau0: 12 }, &ctx).unwrap();
+        assert_eq!(a.name(), "adacomm");
+        assert_eq!(a.current_period(), 12);
+        assert!(a.wants_loss());
+        let p = build(&StrategySpec::PrSgd { period: 6 }, &ctx).unwrap();
+        assert_eq!(p.name(), "constant", "PR-SGD restarts live in SyncStep");
+        assert_eq!(p.current_period(), 6);
+        assert!(!p.wants_loss());
+        let d = build(&StrategySpec::DaSgd { period: 8, delay: 2 }, &ctx).unwrap();
+        assert_eq!(d.name(), "constant", "DaSGD delay lives in SyncStep");
+        assert_eq!(d.current_period(), 8);
     }
 
     #[test]

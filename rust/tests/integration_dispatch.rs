@@ -179,6 +179,54 @@ fn result_affecting_knobs_bust_the_campaign_cache() {
 }
 
 #[test]
+fn every_cluster_knob_busts_the_campaign_cache() {
+    // [cluster] knobs never move the trained parameters, but they do
+    // move modeled clocks — which reports carry — so each one must be
+    // part of the run-cache key.
+    let cache = tmpdir("cluster_bust");
+    let base = quick_base();
+    let opts = DispatchOptions {
+        jobs: Some(2),
+        cache_dir: Some(cache.clone()),
+        ..DispatchOptions::default()
+    };
+    let campaign = |cfg: &ExperimentConfig| {
+        Campaign::builder("cb", cfg.clone())
+            .strategy("cpsgd", cfg.sync.spec_of(Strategy::Constant))
+            .build()
+            .unwrap()
+    };
+    let seeded = campaign(&base).execute(&opts).unwrap();
+    assert_eq!(seeded.cache_hits(), 0);
+
+    // one mutation per [cluster] key (each valid for the 2-node base)
+    let knobs: Vec<(&str, Box<dyn Fn(&mut ExperimentConfig)>)> = vec![
+        ("cluster.skew", Box::new(|c| c.cluster.skew = "straggler:3.0".into())),
+        ("cluster.factors", Box::new(|c| c.cluster.factors = vec![1.0, 2.5])),
+        ("cluster.step_us", Box::new(|c| c.cluster.step_us = 2000.0)),
+        ("cluster.jitter", Box::new(|c| c.cluster.jitter = 0.2)),
+        ("cluster.link_bw_gbps", Box::new(|c| c.cluster.link_bw_gbps = vec![100.0, 10.0])),
+        ("cluster.link_latency_us", Box::new(|c| c.cluster.link_latency_us = vec![2.0, 50.0])),
+        ("cluster.faults.seed", Box::new(|c| c.cluster.faults.seed = 99)),
+        ("cluster.faults.pauses", Box::new(|c| c.cluster.faults.pauses = 1)),
+        ("cluster.faults.pause_secs", Box::new(|c| c.cluster.faults.pause_secs = 0.25)),
+        ("cluster.faults.spikes", Box::new(|c| c.cluster.faults.spikes = 1)),
+        ("cluster.faults.spike_secs", Box::new(|c| c.cluster.faults.spike_secs = 5e-3)),
+        ("cluster.faults.spike_len", Box::new(|c| c.cluster.faults.spike_len = 16)),
+    ];
+    for (key, mutate) in &knobs {
+        let mut tweaked = base.clone();
+        mutate(&mut tweaked);
+        let r = campaign(&tweaked).execute(&opts).unwrap();
+        assert_eq!(r.cache_hits(), 0, "{key} must be part of the run-cache key");
+    }
+    // the untouched base still hits: the busts were the knobs, not noise
+    let warm = campaign(&base).execute(&opts).unwrap();
+    assert_eq!(warm.cache_hits(), 1);
+    std::fs::remove_dir_all(&cache).ok();
+}
+
+#[test]
 fn corrupted_cache_entry_is_recomputed_not_trusted() {
     let cache = tmpdir("corrupt");
     let base = quick_base();

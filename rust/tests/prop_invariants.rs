@@ -218,6 +218,93 @@ fn prop_netmodel_monotonicity() {
     });
 }
 
+// ------------------------------------------------- heterogeneous clusters
+
+use adpsgd::config::ExperimentConfig;
+use adpsgd::experiment::Experiment;
+use adpsgd::period::Strategy;
+
+/// Train to completion and return the final checkpointed parameter
+/// vector as raw bit patterns.
+fn final_param_bits(mut cfg: ExperimentConfig, tag: &str) -> Vec<u32> {
+    let dir = std::env::temp_dir().join(format!("adpsgd_prop_hetero_{}_{tag}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    cfg.checkpoint_dir = dir.to_string_lossy().into_owned();
+    cfg.name = tag.into();
+    Experiment::from_config(cfg).unwrap().run().unwrap();
+    let snap = adpsgd::checkpoint::Checkpoint::latest(&dir).unwrap().expect("snapshot");
+    let ck = adpsgd::checkpoint::Checkpoint::load(&snap).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    ck.w.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn prop_heterogeneity_never_moves_parameters_under_any_collective() {
+    // THE cluster-model invariant: random skew, jitter, and fault
+    // schedules move modeled clocks only — under both collective
+    // algorithms, for every strategy, the trained parameters are
+    // bitwise-identical to the homogeneous run of the same seed (and
+    // ring == flat, as everywhere else in the tree).
+    forall("cluster-bit-identity", 6, |g: &mut Gen| {
+        let strategies = [
+            Strategy::Constant,
+            Strategy::Adaptive,
+            Strategy::AdaComm,
+            Strategy::PrSgd,
+            Strategy::DaSgd,
+        ];
+        let strat = strategies[g.usize_in(0..strategies.len())];
+        let mut base = ExperimentConfig::default();
+        base.seed = g.seed;
+        base.nodes = g.usize_in(2..4);
+        base.iters = 40;
+        base.batch_per_node = 8;
+        base.eval_every = 0;
+        base.variance_every = 0;
+        base.checkpoint_every = 20;
+        base.workload.input_dim = 16;
+        base.workload.hidden = 8;
+        base.workload.eval_batches = 1;
+        base.optim.momentum = 0.9;
+        base.sync.strategy = strat;
+        base.sync.period = 4;
+        base.sync.p_init = 2;
+        base.sync.warmup_iters = 2;
+        base.sync.adacomm_tau0 = 4;
+
+        // a random heterogeneous cluster
+        let skew = ["linear:2.0", "straggler:3.0"][g.usize_in(0..2)];
+        let jitter = g.f32_in(0.0, 0.3) as f64;
+        let pauses = g.usize_in(0..3);
+        let spikes = g.usize_in(0..3);
+
+        let mut bits: Vec<(String, Vec<u32>)> = Vec::new();
+        for algo in [Algo::Flat, Algo::Ring] {
+            for hetero in [false, true] {
+                let mut cfg = base.clone();
+                cfg.sync.collective = algo;
+                if hetero {
+                    cfg.cluster.skew = skew.into();
+                    cfg.cluster.jitter = jitter;
+                    cfg.cluster.faults.pauses = pauses;
+                    cfg.cluster.faults.pause_secs = 0.05;
+                    cfg.cluster.faults.spikes = spikes;
+                    cfg.cluster.faults.spike_secs = 2e-3;
+                }
+                let tag = format!("{strat}_{algo}_{hetero}_{}", g.seed);
+                bits.push((tag.clone(), final_param_bits(cfg, &tag)));
+            }
+        }
+        let (ref_tag, ref_bits) = &bits[0];
+        for (tag, b) in &bits[1..] {
+            assert_eq!(
+                b, ref_bits,
+                "{tag} diverged from {ref_tag}: skew/faults or the collective moved parameters"
+            );
+        }
+    });
+}
+
 // ----------------------------------------------------------------- collective
 
 use adpsgd::collective::{build, Algo, Collective, Poisoned};
