@@ -16,7 +16,8 @@
 //! latency against a loopback registry, and the blob bytes staged per
 //! warm-start run — content addressing amortizes one snapshot across
 //! every run that references it), plus the per-run cost of the event
-//! journal (which must never change the stable summary).
+//! journal and of the proto-v6 worker event stream (neither of which
+//! may ever change the stable summary).
 
 use adpsgd::collective::Algo;
 use adpsgd::config::{ExperimentConfig, LrSchedule, StrategySpec};
@@ -213,6 +214,46 @@ fn main() {
                 overhead,
             );
             pairs.push(("subprocess_overhead_secs_per_run", Json::num(overhead)));
+
+            // -- event-stream overhead: proto-v6 events frames -------------
+            // the same 2-run subprocess campaign, journaled both times,
+            // with the worker-child event stream off vs on; the delta
+            // prices line rendering + batching + driver-side merging
+            {
+                let jdir = std::env::temp_dir()
+                    .join(format!("adpsgd_bench_dispatch_stream_{}", std::process::id()));
+                std::fs::remove_dir_all(&jdir).ok();
+                std::fs::create_dir_all(&jdir).expect("bench stream dir");
+                let journaled = |tag: &str, stream: bool| {
+                    let journal =
+                        adpsgd::obs::Journal::create(&jdir.join(format!("{tag}.jsonl")))
+                            .expect("bench stream journal");
+                    two(&DispatchOptions {
+                        jobs: Some(2),
+                        workers: WorkerKind::Subprocess,
+                        worker_exe: Some(exe.clone()),
+                        cache_dir: None,
+                        journal: Some(journal),
+                        stream_events: stream,
+                        ..DispatchOptions::default()
+                    })
+                };
+                let off = journaled("off", false);
+                let on = journaled("on", true);
+                assert_eq!(
+                    off.to_json_stable().to_string_compact(),
+                    on.to_json_stable().to_string_compact(),
+                    "event streaming must not change the stable summary"
+                );
+                let overhead = (on.wall_secs - off.wall_secs) / on.runs.len() as f64;
+                println!(
+                    "dispatch/event_stream       off {:>8.2?} vs on {:>8.2?} ({overhead:+.3}s/run)",
+                    std::time::Duration::from_secs_f64(off.wall_secs),
+                    std::time::Duration::from_secs_f64(on.wall_secs),
+                );
+                pairs.push(("event_stream_overhead_secs_per_run", Json::num(overhead)));
+                std::fs::remove_dir_all(&jdir).ok();
+            }
 
             // -- pool reuse vs respawn across sequential campaigns ---------
             // the same 2-run campaign dispatched 3 times in a row: once
@@ -418,6 +459,7 @@ fn main() {
             println!("dispatch/subprocess         skipped (worker binary unavailable)");
             // keep the JSON schema identical to the measured branch
             pairs.push(("subprocess_overhead_secs_per_run", Json::Null));
+            pairs.push(("event_stream_overhead_secs_per_run", Json::Null));
             pairs.push(("pool_reuse_wall_secs", Json::Null));
             pairs.push(("pool_respawn_wall_secs", Json::Null));
             pairs.push(("pool_respawn_overhead_secs_per_campaign", Json::Null));

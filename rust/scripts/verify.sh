@@ -18,7 +18,11 @@
 # an obs smoke (a journaled loopback-fleet campaign must write a
 # schema-valid event journal whose trace ids reach the agent's own log,
 # `adpsgd status` must report the advertised slots, and a --no-journal
-# rerun must write a byte-identical stable summary) + a robustness
+# rerun must write a byte-identical stable summary) + a trace smoke
+# (the agent's streamed observer events must land in the journal tagged
+# with their origin, `adpsgd trace` must name every run of the campaign
+# with a per-node attribution, and its --emit-cluster block must drive
+# a real run as a config overlay) + a robustness
 # smoke (the 5-strategy heterogeneity sweep — skew, faults, both
 # network presets — must write a byte-identical stable summary across
 # --jobs levels and cold/warm cache) +
@@ -264,6 +268,35 @@ cmp "${OBS_DIR}/on/obs_smoke.campaign.json" "${OBS_DIR}/off/obs_smoke.campaign.j
 kill "${OBS_REG_PID}" "${OBS_AGENT_PID}" 2>/dev/null || true
 trap - EXIT
 echo "   obs smoke OK (journal schema'd, trace ${OBS_TRACE} on both ends, status sees the slots)"
+
+echo "== verify: trace smoke (timeline analyzer over the obs journal) =="
+# the campaign above streamed the agent's observer events (proto v6):
+# they must sit in the merged journal tagged with their agent origin
+grep -q '"origin":"agent:' "${JOURNAL}" \
+    || { echo "verify: FAIL — no agent-streamed events in the journal"; exit 1; }
+TRACE_OUT="${OBS_DIR}/trace.txt"
+cargo run --release -- trace "${JOURNAL}" > "${TRACE_OUT}" \
+    || { echo "verify: FAIL — adpsgd trace rejected the campaign journal"; exit 1; }
+# every run label in the stable summary must appear in the timeline,
+# and the streamed events must have produced per-node attributions
+for label in $(grep -o '"label":"[^"]*"' "${OBS_DIR}/on/obs_smoke.campaign.json" \
+                   | cut -d'"' -f4 | sort -u); do
+    grep -qF "\"${label}\"" "${TRACE_OUT}" \
+        || { echo "verify: FAIL — trace timeline is missing run ${label}"; cat "${TRACE_OUT}"; exit 1; }
+done
+grep -q "critical path" "${TRACE_OUT}" \
+    || { echo "verify: FAIL — no run was attributed (agent events not streamed?)"; cat "${TRACE_OUT}"; exit 1; }
+# --emit-cluster harvests the observed skew as a config overlay that the
+# parser must accept unchanged: drive a real (tiny) run with it
+CLUSTER_TOML="${OBS_DIR}/cluster.toml"
+cargo run --release -- trace "${JOURNAL}" --emit-cluster > "${CLUSTER_TOML}"
+grep -q '^\[cluster\]' "${CLUSTER_TOML}" && grep -q '^factors = \[' "${CLUSTER_TOML}" \
+    || { echo "verify: FAIL — --emit-cluster did not print a [cluster] factors block"; cat "${CLUSTER_TOML}"; exit 1; }
+N_FACTORS=$(($(tr -cd ',' < "${CLUSTER_TOML}" | wc -c) + 1))
+cargo run --release -- run --config "${CLUSTER_TOML}" --nodes "${N_FACTORS}" \
+    --iters 20 --batch_per_node 8 --eval_every 20 > /dev/null \
+    || { echo "verify: FAIL — the emitted [cluster] block was rejected as a config overlay"; exit 1; }
+echo "   trace smoke OK (origin-tagged events, all runs attributed, [cluster] factors round-trip)"
 
 echo "== verify: robustness smoke (strategy zoo under a straggler cluster) =="
 # the heterogeneity sweep: 5 strategies (adpsgd/cpsgd/adacomm/prsgd/

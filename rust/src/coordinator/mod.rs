@@ -405,6 +405,10 @@ fn worker_loop(
     // the variance probe must report it instead of the (trivially zero)
     // post-averaging deviation
     let mut sync_var: Option<f64> = None;
+    // scratch for the clock's per-sync wait attribution (leader only
+    // reads it, but every rank laps the clock so the accounting stays
+    // replicated and drained)
+    let mut lap_waits: Vec<f64> = Vec::with_capacity(n);
 
     for k in 0..cfg.iters {
         // the LR schedule runs on the same global clock as the period
@@ -437,12 +441,16 @@ fn worker_loop(
                     lr,
                 )? {
                     sync_var = Some(s_k);
+                    let comm_secs = clock.sync_lap(&mut lap_waits);
                     if let Some(h) = hub.as_mut() {
                         h.emit(&RunEvent::SyncDone {
                             k,
                             s_k,
                             period: step.current_period(),
                             bytes: (node.w.len() * 4) as u64,
+                            comm_secs,
+                            t: clock.max(),
+                            waits: &lap_waits,
                         })?;
                     }
                 }
@@ -514,7 +522,7 @@ fn worker_loop(
     }
 
     if let Some(h) = hub.as_mut() {
-        h.emit(&RunEvent::RunEnd { iters: cfg.iters })?;
+        h.emit(&RunEvent::RunEnd { iters: cfg.iters, node_secs: clock.nodes() })?;
     }
 
     Ok(WorkerOut {

@@ -43,7 +43,21 @@ pub enum RunEvent<'a> {
     IterEnd { k: usize, lr: f32, loss: Option<f64> },
     /// A parameter synchronization completed: the agreed variance `S_k`,
     /// the controller's (post-feedback) period, and the payload bytes.
-    SyncDone { k: usize, s_k: f64, period: usize, bytes: u64 },
+    /// The timing fields come from the replicated
+    /// [`crate::netsim::cluster::ClusterClock`]: `comm_secs` is the
+    /// modeled wire cost of this sync, `t` the post-sync modeled
+    /// cluster time, and `waits` the per-node barrier-wait seconds
+    /// accumulated since the previous sync (rank order) — together the
+    /// raw material `adpsgd trace` attributes per-node time from.
+    SyncDone {
+        k: usize,
+        s_k: f64,
+        period: usize,
+        bytes: u64,
+        comm_secs: f64,
+        t: f64,
+        waits: &'a [f64],
+    },
     /// A variance probe sampled `Var[W_k]` (instrumentation).
     VarProbe { k: usize, var: f64 },
     /// A held-out evaluation completed.
@@ -58,8 +72,10 @@ pub enum RunEvent<'a> {
         w: &'a [f32],
         ctrl: Option<crate::period::CtrlState>,
     },
-    /// Emitted once after the last iteration.
-    RunEnd { iters: usize },
+    /// Emitted once after the last iteration.  `node_secs` is every
+    /// node's final modeled clock (rank order), so consumers can close
+    /// the per-node time attribution without replaying the run.
+    RunEnd { iters: usize, node_secs: &'a [f64] },
 }
 
 /// A consumer of the coordinator's event stream.
@@ -165,7 +181,16 @@ mod tests {
         let mut obs = RecorderObserver::shared(Arc::clone(&rec));
         obs.on_event(&RunEvent::IterEnd { k: 0, lr: 0.1, loss: None }).unwrap();
         obs.on_event(&RunEvent::IterEnd { k: 9, lr: 0.1, loss: Some(2.0) }).unwrap();
-        obs.on_event(&RunEvent::SyncDone { k: 3, s_k: 0.5, period: 4, bytes: 64 }).unwrap();
+        obs.on_event(&RunEvent::SyncDone {
+            k: 3,
+            s_k: 0.5,
+            period: 4,
+            bytes: 64,
+            comm_secs: 1e-3,
+            t: 0.05,
+            waits: &[0.0, 2e-3],
+        })
+        .unwrap();
         obs.on_event(&RunEvent::VarProbe { k: 5, var: 0.25 }).unwrap();
         obs.on_event(&RunEvent::EvalDone { k: 9, loss: 1.5, acc: 0.7 }).unwrap();
         let rec = rec.lock().unwrap();
@@ -209,7 +234,7 @@ mod tests {
             }
         }
         let mut hub = ObserverHub::new(vec![Box::new(Failing)]);
-        let err = hub.emit(&RunEvent::RunEnd { iters: 1 }).unwrap_err();
+        let err = hub.emit(&RunEvent::RunEnd { iters: 1, node_secs: &[] }).unwrap_err();
         assert!(format!("{err:#}").contains("observer exploded"));
     }
 
@@ -240,7 +265,7 @@ mod tests {
             Box::new(Counting(Arc::clone(&seen), Arc::clone(&ends))),
         ]);
         // the error still surfaces (the run must abort)…
-        let err = hub.emit(&RunEvent::RunEnd { iters: 5 }).unwrap_err();
+        let err = hub.emit(&RunEvent::RunEnd { iters: 5, node_secs: &[] }).unwrap_err();
         assert!(format!("{err:#}").contains("first observer exploded"), "{err:#}");
         // …but the observer *after* the failing one still saw the
         // terminal event — a journal or checkpoint sink gets its
@@ -256,7 +281,7 @@ mod tests {
             }
         }
         let mut hub = ObserverHub::new(vec![Box::new(Failing), Box::new(AlsoFailing)]);
-        let err = hub.emit(&RunEvent::RunEnd { iters: 5 }).unwrap_err();
+        let err = hub.emit(&RunEvent::RunEnd { iters: 5, node_secs: &[] }).unwrap_err();
         assert!(format!("{err:#}").contains("first observer exploded"), "{err:#}");
     }
 }

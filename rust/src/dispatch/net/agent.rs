@@ -17,7 +17,11 @@
 //! re-arms the dispatcher's deadline), and executes in a warm
 //! `adpsgd worker` child checked out of a [`WorkerPool`] — the exact
 //! supervision stack local subprocess dispatch uses, including the
-//! heartbeat-deadline hang kill.
+//! heartbeat-deadline hang kill.  A request carrying the proto-v6
+//! `stream` flag additionally has its child's journal-shaped observer
+//! event batches relayed up the session as `events` frames on the same
+//! id — best-effort cargo the dispatcher merges into its campaign
+//! journal tagged with this agent as origin.
 //!
 //! Outcome mapping onto terminal frames: a finished run answers
 //! [`Frame::RunResult`]; a deterministic failure answers
@@ -534,7 +538,7 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream, peer: SocketAddr) {
     let in_flight = Arc::new(AtomicUsize::new(0));
     loop {
         match transport::read_frame(&mut reader) {
-            Ok(Some(Frame::RunRequest { id, cfg, trace })) => {
+            Ok(Some(Frame::RunRequest { id, cfg, trace, stream })) => {
                 if in_flight.fetch_add(1, Ordering::SeqCst) >= shared.cfg.slots {
                     in_flight.fetch_sub(1, Ordering::SeqCst);
                     let _ = send(
@@ -554,7 +558,7 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream, peer: SocketAddr) {
                 let session = Arc::clone(&session);
                 let in_flight = Arc::clone(&in_flight);
                 std::thread::spawn(move || {
-                    serve_run(shared, session, peer, id, cfg, trace, in_flight)
+                    serve_run(shared, session, peer, id, cfg, trace, stream, in_flight)
                 });
             }
             Ok(Some(Frame::StatsRequest { id })) => {
@@ -624,7 +628,10 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream, peer: SocketAddr) {
 
 /// One run request end to end: heartbeat pump from the moment the
 /// request exists, blob staging, slot acquisition, agent-cache probe,
-/// execution in a warm worker child, terminal frame.
+/// execution in a warm worker child, terminal frame.  With `stream`
+/// set the child's proto-v6 `events` frames are relayed up the session
+/// writer on this request's id.
+#[allow(clippy::too_many_arguments)]
 fn serve_run(
     shared: Arc<Shared>,
     session: Arc<Session>,
@@ -632,6 +639,7 @@ fn serve_run(
     id: u64,
     cfg: crate::config::ExperimentConfig,
     trace: Option<String>,
+    stream: bool,
     in_flight: Arc<AtomicUsize>,
 ) {
     let label = cfg.name.clone();
@@ -662,7 +670,7 @@ fn serve_run(
             }
             ok
         });
-        execute(&shared, &session, id, cfg, trace.as_deref(), &client_gone)
+        execute(&shared, &session, id, cfg, trace.as_deref(), stream, &client_gone)
     };
     shared.served.fetch_add(1, Ordering::Relaxed);
     crate::obs::metrics().counter("agent.runs_served").inc();
@@ -768,6 +776,7 @@ fn execute(
     id: u64,
     mut cfg: crate::config::ExperimentConfig,
     trace: Option<&str>,
+    stream: bool,
     client_gone: &std::sync::atomic::AtomicBool,
 ) -> (Frame, &'static str) {
     let mut key: Option<(String, String)> = None;
@@ -824,8 +833,24 @@ fn execute(
     // register the child for Cancel / orphan kill while it executes
     session.children.lock().expect("agent children").insert(id, client.pid());
     // the trace rides into the worker child's run request too (the
-    // third leg of driver → agent → worker tracing)
-    let outcome = client.run(&cfg, trace, shared.cfg.heartbeat_timeout);
+    // third leg of driver → agent → worker tracing); with streaming on,
+    // the child's event batches are relayed up the session on this
+    // request's id — best-effort: a failed relay write only counts a
+    // drop, it never fails the run (the terminal send will notice a
+    // truly dead client on its own)
+    let mut relay;
+    let events: Option<&mut dyn FnMut(Vec<String>)> = if stream {
+        relay = |lines: Vec<String>| {
+            let n = lines.len() as u64;
+            if send(&session.writer, &Frame::Events { id, lines }).is_err() {
+                crate::obs::metrics().counter("obs.event_drops").add(n);
+            }
+        };
+        Some(&mut relay)
+    } else {
+        None
+    };
+    let outcome = client.run(&cfg, trace, shared.cfg.heartbeat_timeout, events);
     session.children.lock().expect("agent children").remove(&id);
     match outcome {
         Outcome::Done(report) => {

@@ -284,6 +284,14 @@ impl RemoteAgentClient {
     /// the slot sends [`Frame::Cancel`] so the agent kills the orphaned
     /// worker child instead of letting it train to completion for a
     /// campaign that no longer exists.
+    ///
+    /// With `journal` set, blob staging lands as `blob.request` /
+    /// `blob.staged` journal events, and `stream` additionally asks the
+    /// agent to relay its worker child's observer event lines back as
+    /// proto-v6 `events` frames — merged into the journal tagged
+    /// `origin:"agent:<addr>"`.  Both are best-effort observers: they
+    /// never change the outcome.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn run(
         &self,
         cfg: &crate::config::ExperimentConfig,
@@ -291,6 +299,8 @@ impl RemoteAgentClient {
         heartbeat_timeout: Duration,
         blobs: &BlobCatalog,
         aborted: &AtomicBool,
+        journal: Option<&crate::obs::Journal>,
+        stream: bool,
     ) -> Outcome {
         if self.is_dead() {
             return Outcome::Crashed(anyhow!("agent {} connection already lost", self.addr));
@@ -300,6 +310,7 @@ impl RemoteAgentClient {
             id,
             cfg: cfg.clone(),
             trace: trace.map(str::to_string),
+            stream: stream && journal.is_some(),
         };
         let bytes = match transport::encode_frame(&frame) {
             Ok(b) => b,
@@ -386,11 +397,37 @@ impl RemoteAgentClient {
             deadline = Instant::now() + heartbeat_timeout;
             match frame {
                 Frame::Heartbeat { .. } => continue,
+                Frame::Events { lines, .. } => {
+                    // relayed observer lines from the agent's worker
+                    // child: merge into the journal with the agent as
+                    // origin; with no journal attached the batch is
+                    // counted as dropped (we asked for nothing, the
+                    // agent streamed anyway)
+                    match journal {
+                        Some(j) => {
+                            j.merge_lines(&lines, &format!("agent:{}", self.addr));
+                        }
+                        None => crate::obs::metrics()
+                            .counter("obs.event_drops")
+                            .add(lines.len() as u64),
+                    }
+                    continue;
+                }
                 Frame::BlobRequest { digest, .. } => {
                     // the agent lacks an artifact this run references:
                     // answer on the same id from the catalog (a digest
                     // we never staged gets an Error the agent surfaces
                     // as the run's own failure)
+                    if let Some(j) = journal {
+                        j.emit(
+                            "blob.request",
+                            trace,
+                            vec![
+                                ("digest", crate::util::json::Json::str(digest.clone())),
+                                ("agent", crate::util::json::Json::str(self.addr.clone())),
+                            ],
+                        );
+                    }
                     let answer = match blobs.read(&digest) {
                         Ok(bytes) => {
                             println!(
@@ -401,6 +438,20 @@ impl RemoteAgentClient {
                             crate::obs::metrics()
                                 .counter("dispatch.blob_bytes_staged")
                                 .add(bytes.len() as u64);
+                            if let Some(j) = journal {
+                                j.emit(
+                                    "blob.staged",
+                                    trace,
+                                    vec![
+                                        ("digest", crate::util::json::Json::str(digest.clone())),
+                                        ("bytes", crate::util::json::Json::num(bytes.len() as f64)),
+                                        (
+                                            "agent",
+                                            crate::util::json::Json::str(self.addr.clone()),
+                                        ),
+                                    ],
+                                );
+                            }
                             Frame::Blob { id, tag: digest.clone(), bytes }
                         }
                         Err(e) => Frame::Error { id, message: format!("{e:#}") },

@@ -140,6 +140,18 @@ pub struct DispatchOptions {
     /// the journal is a pure observer.  CLI: on by default for
     /// `campaign` (`<name>.campaign.jsonl`), off with `--no-journal`.
     pub journal: Option<crate::obs::Journal>,
+    /// Bridge the coordinator's typed observer event stream into the
+    /// journal: thread slots attach a [`crate::obs::JournalObserver`]
+    /// directly, and subprocess/remote executors ship the *same* lines
+    /// back as batched proto-v6 `events` frames, merged with an
+    /// `origin` tag — so the journal is identically shaped across
+    /// local, subprocess, remote, and fleet execution.  Streaming is
+    /// best-effort and never result-affecting: stable summaries are
+    /// byte-identical with it on or off, and dropped batches count in
+    /// the `obs.event_drops` counter.  No-op without
+    /// [`DispatchOptions::journal`].  CLI: on by default for
+    /// `campaign`, off with `--no-stream`.
+    pub stream_events: bool,
 }
 
 impl Default for DispatchOptions {
@@ -155,6 +167,7 @@ impl Default for DispatchOptions {
             remote_token: None,
             fleet: None,
             journal: None,
+            stream_events: true,
         }
     }
 }
@@ -412,16 +425,23 @@ impl Dispatcher {
         // through journal lines, agent sessions, and worker children
         // (proto v5), but never enters the config or the cache digest
         let traces: Vec<String> = (0..n).map(|_| crate::obs::mint_trace_id()).collect();
-        if let Some(journal) = &self.opts.journal {
-            for (i, spec) in runs.iter().enumerate() {
+        // the gauge is bumped *per enqueue* (not set to `n` after the
+        // loop) so every `run.queued` line can stamp the queue depth
+        // that was current when its run entered the queue
+        let depth = crate::obs::metrics().gauge("dispatch.queue_depth");
+        for (i, spec) in runs.iter().enumerate() {
+            depth.set((i + 1) as i64);
+            if let Some(journal) = &self.opts.journal {
                 journal.emit(
                     "run.queued",
                     Some(&traces[i]),
-                    vec![("run", crate::util::json::Json::str(spec.label.clone()))],
+                    vec![
+                        ("run", Json::str(spec.label.clone())),
+                        ("queue_depth", Json::num((i + 1) as f64)),
+                    ],
                 );
             }
         }
-        crate::obs::metrics().gauge("dispatch.queue_depth").set(n as i64);
         // every run enters the queue; the slots themselves probe the
         // cache, so warm campaigns parse entries in parallel instead of
         // serially before the pool starts
@@ -832,16 +852,15 @@ impl Dispatcher {
                 );
             }
             metrics.gauge("dispatch.slots_busy").add(1);
+            // one flag for every worker kind: bridge the typed observer
+            // stream into the journal (directly for thread slots, as
+            // merged proto-v6 `events` frames for subprocess/remote)
+            let stream = journal.is_some() && self.opts.stream_events;
             let outcome = match &runner {
                 SlotRunner::Local => match self.opts.workers {
                     WorkerKind::Thread => {
-                        // in-process runs can stream their full typed
-                        // event stream into the journal (sync, eval,
-                        // checkpoint lines); subprocess/remote children
-                        // journal only the dispatch lifecycle because
-                        // the journal lives in this process
                         match Experiment::from_config(spec.cfg.clone()).and_then(|mut exp| {
-                            if let Some(j) = journal {
+                            if let (Some(j), true) = (journal, stream) {
                                 exp.observe(Box::new(crate::obs::JournalObserver::new(
                                     j.clone(),
                                     trace.clone(),
@@ -855,7 +874,21 @@ impl Dispatcher {
                         }
                     }
                     WorkerKind::Subprocess => {
-                        self.subprocess_run(&mut client, &spec.cfg, Some(trace))
+                        // the child renders the same journal-shaped
+                        // lines the thread path writes directly; they
+                        // arrive as `events` frames and merge here
+                        // tagged `origin:"node"`
+                        let mut sink = journal.filter(|_| stream).map(|j| {
+                            move |lines: Vec<String>| {
+                                j.merge_lines(&lines, "node");
+                            }
+                        });
+                        self.subprocess_run(
+                            &mut client,
+                            &spec.cfg,
+                            Some(trace),
+                            sink.as_mut().map(|f| f as &mut dyn FnMut(Vec<String>)),
+                        )
                     }
                     WorkerKind::Remote => {
                         unreachable!("remote-only dispatch spawns no local slots")
@@ -870,6 +903,8 @@ impl Dispatcher {
                         self.opts.heartbeat_timeout,
                         blobs,
                         aborted,
+                        journal,
+                        stream,
                     )
                 }
             };
@@ -901,7 +936,11 @@ impl Dispatcher {
                         j.emit(
                             "run.done",
                             Some(trace),
-                            vec![("run", Json::str(spec.label.clone()))],
+                            vec![
+                                ("run", Json::str(spec.label.clone())),
+                                ("modeled_wall_secs", Json::num(report.modeled_wall_secs)),
+                                ("syncs", Json::num(report.syncs as f64)),
+                            ],
                         );
                     }
                     *slots[i].lock().expect("dispatch slot") =
@@ -982,6 +1021,7 @@ impl Dispatcher {
         client: &mut Option<WorkerClient>,
         cfg: &crate::config::ExperimentConfig,
         trace: Option<&str>,
+        events: Option<&mut dyn FnMut(Vec<String>)>,
     ) -> Outcome {
         if client.is_none() {
             match self.pool.checkout(self.opts.worker_exe.as_deref()) {
@@ -990,7 +1030,7 @@ impl Dispatcher {
             }
         }
         let c = client.as_mut().expect("worker client just ensured");
-        c.run(cfg, trace, self.opts.heartbeat_timeout)
+        c.run(cfg, trace, self.opts.heartbeat_timeout, events)
     }
 }
 
@@ -1076,11 +1116,19 @@ impl WorkerClient {
     /// (retryable); an `Error` frame for the current id is a
     /// deterministic run failure (fatal), and so is a version-skewed
     /// reply (retrying against the same binary cannot succeed).
+    ///
+    /// `events` opts the request into proto-v6 event streaming: the
+    /// child ships its journal-shaped observer lines back as batched
+    /// `events` frames and every current-id batch is handed to the
+    /// sink (the pool merges into the driver journal; the agent daemon
+    /// relays up its session).  `None` leaves the `stream` flag off —
+    /// the child emits no `events` frames at all.
     pub(crate) fn run(
         &mut self,
         cfg: &crate::config::ExperimentConfig,
         trace: Option<&str>,
         heartbeat_timeout: Duration,
+        mut events: Option<&mut dyn FnMut(Vec<String>)>,
     ) -> Outcome {
         self.next_id += 1;
         let id = self.next_id;
@@ -1088,6 +1136,7 @@ impl WorkerClient {
             id,
             cfg: cfg.clone(),
             trace: trace.map(str::to_string),
+            stream: events.is_some(),
         };
         let line = match frame.to_line() {
             Ok(l) => l,
@@ -1130,6 +1179,19 @@ impl WorkerClient {
             deadline = Instant::now() + heartbeat_timeout;
             match super::proto::Frame::parse(&reply) {
                 Ok(super::proto::Frame::Heartbeat { .. }) => continue,
+                Ok(super::proto::Frame::Events { id: rid, lines }) => {
+                    // streamed observer lines are best-effort cargo,
+                    // never protocol state: current-id batches go to
+                    // the sink, anything else (a stale batch, or a
+                    // batch we never asked for) is counted and dropped
+                    match events.as_mut() {
+                        Some(sink) if rid == id => sink(lines),
+                        _ => crate::obs::metrics()
+                            .counter("obs.event_drops")
+                            .add(lines.len() as u64),
+                    }
+                    continue;
+                }
                 Ok(super::proto::Frame::RunResult { id: rid, report }) if rid == id => {
                     return Outcome::Done(report)
                 }

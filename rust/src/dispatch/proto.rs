@@ -69,8 +69,13 @@ pub const HEARTBEAT_EVERY: std::time::Duration = std::time::Duration::from_milli
 /// staging; v5 added the optional `trace` field on `run_request` (the
 /// driver-minted trace id, propagated so one run is greppable driver →
 /// agent → worker child — see [`crate::obs`]) and the
-/// `stats_request`/`stats` frames behind `adpsgd status`.
-pub const PROTO_VERSION: u64 = 5;
+/// `stats_request`/`stats` frames behind `adpsgd status`; v6 added the
+/// `stream` flag on `run_request` and the batched `events` frame, which
+/// carries the executor's serialized [`crate::obs::JournalObserver`]
+/// event lines back to the driver's journal (best-effort — dropped
+/// batches are counted in `obs.event_drops`, never retried, and never
+/// affect run results).
+pub const PROTO_VERSION: u64 = 6;
 
 /// Typed parse error for a frame whose `"v"` header is missing or does
 /// not match [`PROTO_VERSION`].  Carried through `anyhow` so transports
@@ -109,8 +114,11 @@ pub enum Frame {
     /// driver-minted per-run trace id ([`crate::obs::mint_trace_id`]);
     /// it rides *beside* the config — never inside it — so it can
     /// follow the run through agents and worker children without ever
-    /// touching cache digests or stable summaries.
-    RunRequest { id: u64, cfg: ExperimentConfig, trace: Option<String> },
+    /// touching cache digests or stable summaries.  `stream` asks the
+    /// executor to ship its typed observer events back as
+    /// [`Frame::Events`] batches (the driver only sets it when a
+    /// journal is attached).
+    RunRequest { id: u64, cfg: ExperimentConfig, trace: Option<String>, stream: bool },
     /// Worker → dispatcher: the run finished.
     RunResult { id: u64, report: RunReport },
     /// Worker → dispatcher: still alive, still training `id`.
@@ -158,6 +166,15 @@ pub enum Frame {
     /// hit counters, and the agent's [`crate::obs`] metrics snapshot).
     /// Opaque so new metrics never need a protocol bump.
     Stats { id: u64, stats: Json },
+    /// Executor → dispatcher: a batch of serialized journal event lines
+    /// for run `id` — the worker child's (or agent executor's) bridged
+    /// [`crate::coordinator::observer::RunEvent`] stream, each line
+    /// already in the journal's self-describing JSON shape (see
+    /// [`crate::obs::journal::render_line`]).  Interleaves with
+    /// heartbeats; strictly best-effort and result-inert: the driver
+    /// merges what arrives (tagged with an `origin`) and counts what
+    /// doesn't in `obs.event_drops`.
+    Events { id: u64, lines: Vec<String> },
 }
 
 /// The challenge-response proof: an HMAC-shaped keyed digest of the
@@ -188,7 +205,8 @@ impl Frame {
             | Frame::BlobRequest { id, .. }
             | Frame::Blob { id, .. }
             | Frame::StatsRequest { id }
-            | Frame::Stats { id, .. } => *id,
+            | Frame::Stats { id, .. }
+            | Frame::Events { id, .. } => *id,
             Frame::Challenge { .. } | Frame::Hello { .. } | Frame::HelloAck { .. } => 0,
         }
     }
@@ -210,6 +228,7 @@ impl Frame {
             Frame::Blob { .. } => "blob",
             Frame::StatsRequest { .. } => "stats_request",
             Frame::Stats { .. } => "stats",
+            Frame::Events { .. } => "events",
         }
     }
 
@@ -218,7 +237,7 @@ impl Frame {
     pub fn to_line(&self) -> Result<String> {
         let version = ("v", Json::num(PROTO_VERSION as f64));
         let json = match self {
-            Frame::RunRequest { id, cfg, trace } => {
+            Frame::RunRequest { id, cfg, trace, stream } => {
                 let mut pairs = vec![
                     ("type", Json::str("run_request")),
                     ("id", Json::num(*id as f64)),
@@ -227,6 +246,11 @@ impl Frame {
                 ];
                 if let Some(t) = trace {
                     pairs.push(("trace", Json::str(t.clone())));
+                }
+                // absent-when-false, so v6 requests without streaming
+                // are byte-identical to v5 ones (modulo the header)
+                if *stream {
+                    pairs.push(("stream", Json::Bool(true)));
                 }
                 Json::obj(pairs)
             }
@@ -297,6 +321,15 @@ impl Frame {
                 ("stats", stats.clone()),
                 version,
             ]),
+            Frame::Events { id, lines } => Json::obj(vec![
+                ("type", Json::str("events")),
+                ("id", Json::num(*id as f64)),
+                (
+                    "lines",
+                    Json::Arr(lines.iter().map(|l| Json::str(l.clone())).collect()),
+                ),
+                version,
+            ]),
         };
         Ok(format!("{}\n", json.to_string_compact()))
     }
@@ -337,6 +370,7 @@ impl Frame {
                     id,
                     cfg: ExperimentConfig::from_doc(&doc)?,
                     trace: v.get("trace").and_then(Json::as_str).map(str::to_string),
+                    stream: matches!(v.get("stream"), Some(Json::Bool(true))),
                 }
             }
             "run_result" => Frame::RunResult {
@@ -379,6 +413,16 @@ impl Frame {
             "stats" => Frame::Stats {
                 id: need_id()?,
                 stats: v.get("stats").cloned().unwrap_or(Json::Null),
+            },
+            "events" => Frame::Events {
+                id: need_id()?,
+                lines: v
+                    .get("lines")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("events: missing \"lines\""))?
+                    .iter()
+                    .filter_map(|l| l.as_str().map(str::to_string))
+                    .collect(),
             },
             other => bail!("protocol frame: unknown type {other:?}"),
         })
@@ -450,6 +494,74 @@ impl Drop for HeartbeatPump {
     }
 }
 
+/// How many journal-shaped event lines the worker-side streaming
+/// bridge accumulates before shipping a [`Frame::Events`] batch.
+const EVENT_BATCH: usize = 64;
+
+/// The worker-side half of event streaming (proto v6): bridges the
+/// coordinator's typed observer stream into journal-shaped lines
+/// ([`crate::obs::journal::observer_line`]) and ships them to the
+/// dispatcher as batched [`Frame::Events`] — on batch-full, on the
+/// terminal `RunEnd`, and on drop (so an aborted run still flushes
+/// what it saw).  Strictly best-effort: a batch that fails to encode
+/// or write is counted in `obs.event_drops` and forgotten, and
+/// `on_event` never returns an error, so streaming can never change a
+/// run's result.
+struct StreamObserver<W: Write + Send + 'static> {
+    id: u64,
+    out: Arc<Mutex<W>>,
+    label: String,
+    trace: Option<String>,
+    buf: Vec<String>,
+}
+
+impl<W: Write + Send + 'static> StreamObserver<W> {
+    fn new(id: u64, out: Arc<Mutex<W>>, label: String, trace: Option<String>) -> Self {
+        StreamObserver { id, out, label, trace, buf: Vec::new() }
+    }
+
+    fn flush(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        let lines = std::mem::take(&mut self.buf);
+        let n = lines.len() as u64;
+        let shipped = (Frame::Events { id: self.id, lines }).to_line().ok().is_some_and(
+            |line| {
+                let mut o = self.out.lock().expect("worker stdout lock");
+                o.write_all(line.as_bytes()).and_then(|()| o.flush()).is_ok()
+            },
+        );
+        if !shipped {
+            crate::obs::metrics().counter("obs.event_drops").add(n);
+        }
+    }
+}
+
+impl<W: Write + Send + 'static> crate::coordinator::observer::RunObserver
+    for StreamObserver<W>
+{
+    fn on_event(&mut self, ev: &crate::coordinator::observer::RunEvent<'_>) -> Result<()> {
+        let terminal =
+            matches!(ev, crate::coordinator::observer::RunEvent::RunEnd { .. });
+        if let Some(line) =
+            crate::obs::journal::observer_line(ev, &self.label, self.trace.as_deref())
+        {
+            self.buf.push(line);
+        }
+        if terminal || self.buf.len() >= EVENT_BATCH {
+            self.flush();
+        }
+        Ok(())
+    }
+}
+
+impl<W: Write + Send + 'static> Drop for StreamObserver<W> {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
 /// Best-effort request id of a line that failed [`Frame::parse`], so a
 /// rejection can still be correlated with the request that caused it.
 fn best_effort_id(line: &str) -> u64 {
@@ -484,8 +596,8 @@ pub fn serve(input: impl BufRead, output: impl Write + Send + 'static) -> Result
         if line.trim().is_empty() {
             continue;
         }
-        let (id, cfg, trace) = match Frame::parse(&line) {
-            Ok(Frame::RunRequest { id, cfg, trace }) => (id, cfg, trace),
+        let (id, cfg, trace, stream) = match Frame::parse(&line) {
+            Ok(Frame::RunRequest { id, cfg, trace, stream }) => (id, cfg, trace, stream),
             Ok(other) => {
                 write_frame(&Frame::Error {
                     id: other.id(),
@@ -512,16 +624,28 @@ pub fn serve(input: impl BufRead, output: impl Write + Send + 'static) -> Result
         // prove liveness while the (possibly long) run executes; the
         // guard stops and joins the pump before the terminal frame
         let result = {
-            let out = Arc::clone(&out);
+            let pump_out = Arc::clone(&out);
             let _pump = heartbeat_pump(move || match (Frame::Heartbeat { id }).to_line() {
                 Ok(line) => {
-                    let mut o = out.lock().expect("worker stdout lock");
+                    let mut o = pump_out.lock().expect("worker stdout lock");
                     o.write_all(line.as_bytes()).and_then(|()| o.flush()).is_ok()
                 }
                 Err(_) => true,
             });
-            crate::experiment::Experiment::from_config(cfg)
-                .and_then(crate::experiment::Experiment::run)
+            crate::experiment::Experiment::from_config(cfg).and_then(|mut exp| {
+                if stream {
+                    // bridge the typed observer stream back to the
+                    // dispatcher as batched Events frames (best-effort;
+                    // the run never fails on a streaming problem)
+                    exp.observe(Box::new(StreamObserver::new(
+                        id,
+                        Arc::clone(&out),
+                        exp.config().name.clone(),
+                        trace.clone(),
+                    )));
+                }
+                exp.run()
+            })
         };
         match result {
             Ok(report) => write_frame(&Frame::RunResult { id, report })?,
@@ -541,17 +665,20 @@ mod tests {
         cfg.name = "proto_rt".into();
         cfg.nodes = 3;
         cfg.sync.qsgd_levels = 15;
-        let line = (Frame::RunRequest { id: 7, cfg: cfg.clone(), trace: None })
-            .to_line()
-            .unwrap();
+        let line =
+            (Frame::RunRequest { id: 7, cfg: cfg.clone(), trace: None, stream: false })
+                .to_line()
+                .unwrap();
         assert!(line.ends_with('\n') && !line[..line.len() - 1].contains('\n'));
         assert!(!line.contains("trace"), "an absent trace id must not serialize: {line}");
+        assert!(!line.contains("stream"), "stream=false must not serialize: {line}");
         match Frame::parse(&line).unwrap() {
-            Frame::RunRequest { id, cfg: back, trace } => {
+            Frame::RunRequest { id, cfg: back, trace, stream } => {
                 assert_eq!(id, 7);
                 assert_eq!(back.name, "proto_rt");
                 assert_eq!(back.nodes, 3);
                 assert_eq!(trace, None);
+                assert!(!stream, "absent stream flag parses as off");
                 // the canonical text is the equality witness: every
                 // result-affecting knob survived the wire
                 assert_eq!(back.to_toml_string().unwrap(), cfg.to_toml_string().unwrap());
@@ -559,18 +686,21 @@ mod tests {
             other => panic!("wrong frame {other:?}"),
         }
 
-        // the v5 trace id rides beside the config, never inside it
+        // the v5 trace id rides beside the config, never inside it; the
+        // v6 stream flag asks for Events batches back
         let traced = (Frame::RunRequest {
             id: 8,
             cfg: cfg.clone(),
             trace: Some("9f2c41aa03de77b1".into()),
+            stream: true,
         })
         .to_line()
         .unwrap();
         match Frame::parse(&traced).unwrap() {
-            Frame::RunRequest { id, cfg: back, trace } => {
+            Frame::RunRequest { id, cfg: back, trace, stream } => {
                 assert_eq!(id, 8);
                 assert_eq!(trace.as_deref(), Some("9f2c41aa03de77b1"));
+                assert!(stream, "the stream flag survives the wire");
                 assert!(
                     !back.to_toml_string().unwrap().contains("9f2c41aa03de77b1"),
                     "the trace id must never leak into the config"
@@ -578,6 +708,25 @@ mod tests {
             }
             other => panic!("wrong frame {other:?}"),
         }
+
+        // v6 events: a batch of journal-shaped lines for one run
+        let batch = vec![
+            "{\"schema\":1,\"event\":\"run.sync\"}".to_string(),
+            "{\"schema\":1,\"event\":\"run.end\"}".to_string(),
+        ];
+        let ev = (Frame::Events { id: 8, lines: batch.clone() }).to_line().unwrap();
+        assert!(ev.ends_with('\n') && !ev[..ev.len() - 1].contains('\n'));
+        match Frame::parse(&ev).unwrap() {
+            Frame::Events { id, lines } => {
+                assert_eq!(id, 8);
+                assert_eq!(lines, batch, "lines survive the wire byte-for-byte");
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        assert_eq!((Frame::Events { id: 8, lines: vec![] }).kind(), "events");
+        assert_eq!((Frame::Events { id: 8, lines: vec![] }).id(), 8);
+        let missing = format!("{{\"type\":\"events\",\"id\":8,\"v\":{PROTO_VERSION}}}");
+        assert!(Frame::parse(&missing).unwrap_err().to_string().contains("lines"));
 
         let hb = (Frame::Heartbeat { id: 3 }).to_line().unwrap();
         assert!(
@@ -746,7 +895,9 @@ mod tests {
              {{\"type\":\"warp\",\"id\":6,\"v\":{v}}}\n\
              {{\"type\":\"run_request\",\"id\":7,\"cfg\":\"\"}}\n\
              {}",
-            (Frame::RunRequest { id: 3, cfg: quick, trace: None }).to_line().unwrap(),
+            (Frame::RunRequest { id: 3, cfg: quick, trace: None, stream: false })
+                .to_line()
+                .unwrap(),
             v = PROTO_VERSION,
         );
         let out: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
@@ -813,8 +964,12 @@ mod tests {
 
         let input = format!(
             "{}{}",
-            (Frame::RunRequest { id: 1, cfg: quick, trace: None }).to_line().unwrap(),
-            (Frame::RunRequest { id: 2, cfg: bad, trace: None }).to_line().unwrap(),
+            (Frame::RunRequest { id: 1, cfg: quick, trace: None, stream: true })
+                .to_line()
+                .unwrap(),
+            (Frame::RunRequest { id: 2, cfg: bad, trace: None, stream: false })
+                .to_line()
+                .unwrap(),
         );
         let out: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
         struct SharedBuf(Arc<Mutex<Vec<u8>>>);
@@ -849,5 +1004,28 @@ mod tests {
             })
             .expect("run 2 fails deterministically");
         assert!(msg.contains("injected failure"), "{msg}");
+
+        // run 1 asked for streaming: its Events batches carry
+        // journal-shaped run.* lines ending with the terminal run.end
+        let streamed: Vec<crate::util::json::Json> = frames
+            .iter()
+            .filter_map(|f| match f {
+                Frame::Events { id: 1, lines } => Some(lines.clone()),
+                _ => None,
+            })
+            .flatten()
+            .map(|l| {
+                crate::obs::journal::parse_line(&l).expect("streamed lines are journal-shaped")
+            })
+            .collect();
+        assert!(!streamed.is_empty(), "stream=true must produce Events batches");
+        assert!(streamed
+            .iter()
+            .any(|l| l.get("event").unwrap().as_str() == Some("run.end")));
+        assert!(streamed
+            .iter()
+            .all(|l| l.get("run").unwrap().as_str() == Some("serve_ok")));
+        // run 2 left the flag off: no Events frames for it
+        assert!(!frames.iter().any(|f| matches!(f, Frame::Events { id: 2, .. })));
     }
 }

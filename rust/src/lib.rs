@@ -200,11 +200,13 @@
 //! challenge-response handshake, blob staging, and cancel frames for
 //! the fleet layer; v5 adds the optional trace-id field on run
 //! requests and the `stats_request`/`stats` frames behind
-//! `adpsgd status`.  `cargo bench` reports serial-vs-parallel speedup
+//! `adpsgd status`; v6 adds the batched `events` frames that stream
+//! worker/agent observer events back into the driver's campaign
+//! journal.  `cargo bench` reports serial-vs-parallel speedup
 //! columns (`bench_tensor`, `bench_quant`, `bench_step`),
 //! JSON-vs-binary wire bytes per run, fleet join latency, blob
-//! bytes staged per warm-start run, and the journal's wall-clock
-//! overhead per run (`bench_dispatch`).
+//! bytes staged per warm-start run, and the journal's and event
+//! stream's wall-clock overhead per run (`bench_dispatch`).
 //!
 //! ## Observability
 //!
@@ -223,20 +225,40 @@
 //!   [`obs::JournalObserver`] (`run.sync`, `run.eval`, …; the
 //!   per-iteration `IterEnd` is deliberately skipped).  Every run gets
 //!   a `trace_id` minted at the driver ([`obs::mint_trace_id`]) and
-//!   propagated through proto-v5 run-request frames, so one grep
+//!   propagated through proto run-request frames, so one grep
 //!   follows a run driver → agent → worker child.  Journaling is a
 //!   pure observer: stable campaign summaries are byte-identical with
 //!   it on or off.
+//! * **Event streaming.**  Since proto v6 those same observer lines
+//!   also stream *back* from subprocess worker children (stdio) and
+//!   remote agents (TCP, interleaved with heartbeats) as batched
+//!   `events` frames; [`obs::Journal::merge_line`] validates each and
+//!   splices in an `origin` tag (`"node"` / `"agent:<addr>"`), so the
+//!   one campaign journal is identically shaped across local,
+//!   subprocess, remote, and fleet execution.  Streaming is
+//!   best-effort — dropped or stale batches only bump the
+//!   `obs.event_drops` counter — and never result-affecting
+//!   (`--no-stream` turns it off; summaries stay byte-identical
+//!   either way).
+//! * **Timeline analysis.**  `adpsgd trace <name>.campaign.jsonl`
+//!   ([`obs::trace`]) groups journal lines per run and attributes each
+//!   run's `modeled_wall_secs` into per-node compute / barrier-wait /
+//!   comm buckets from the streamed `run.sync`/`run.end` events, with
+//!   the critical path and per-round straggler counts;
+//!   `--emit-cluster` harvests the observed skew as a paste-ready
+//!   `[cluster] factors` block validated against the config parser
+//!   (closing the loop into [`netsim::cluster`]'s replay model).
 //! * **Metrics registry.**  [`obs::metrics()`] hands out process-wide
 //!   counters/gauges/histograms (queue depth, cache hit/miss,
 //!   crash-requeues, backoff attempts, blob bytes staged, slot
 //!   utilization — glossary in [`obs::metrics`]) that snapshot to
-//!   deterministic JSON.
+//!   deterministic JSON; histogram snapshots carry count/sum/min/max
+//!   plus p50/p95/p99 estimated from fixed log2 buckets.
 //! * **`adpsgd status`.**  Queries a live fleet: registry membership
 //!   with lease ages (`--fleet`), plus each agent's advertised slots,
 //!   in-flight runs, cache hit-rate, and metrics snapshot over a
-//!   proto-v5 `stats_request` (`--remote`, repeatable; `--json` for
-//!   machines).
+//!   proto `stats_request` (`--remote`, repeatable; `--json` for
+//!   machines; byte-valued metrics humanized in the table view).
 //! * **Unified diagnostics.**  Fabric messages funnel through
 //!   `obs::log!` with ISO-8601 timestamps and component tags, so
 //!   interleaved slot/poller/agent output stays attributable.

@@ -11,6 +11,7 @@
 //!                 [--fleet host:7000] [--cache-max-bytes N]
 //! adpsgd registry --listen 0.0.0.0:7000
 //! adpsgd status   [--fleet host:7000] [--remote host:7070[,...]] [--json]
+//! adpsgd trace    results/name.campaign.jsonl [--json | --emit-cluster]
 //! adpsgd cache-gc [--cache-dir DIR] [--max-bytes N] [--max-age-secs S] [--dry-run]
 //! adpsgd models   [--artifacts artifacts]
 //! adpsgd worker
@@ -28,7 +29,10 @@
 //! fleet phonebook agents announce themselves to and `--fleet`
 //! dispatchers resolve members from; `status` is the live fleet/agent
 //! view (membership, lease ages, in-flight runs, cache hit-rates over
-//! the proto `Stats` frame); `models` lists the AOT
+//! the proto `Stats` frame); `trace` reconstructs per-run timelines
+//! (per-node compute/wait/comm attribution, critical path, straggler
+//! counts, `--emit-cluster` skew harvesting) from a written campaign
+//! journal; `models` lists the AOT
 //! artifacts the PJRT runtime can load; `worker` is the subprocess end
 //! of the dispatcher's line-delimited JSON protocol (not for
 //! interactive use).
@@ -55,7 +59,7 @@ USAGE:
                     [--remote-token T]
                     [--cache-dir DIR] [--no-cache] [--retries N]
                     [--hang-timeout SECS] [--cache-max-bytes N]
-                    [--quick] [--json] [--out DIR] [--no-journal]
+                    [--quick] [--json] [--out DIR] [--no-journal] [--no-stream]
     adpsgd figures  [--only LIST] [--quick] [--out DIR]
                     [--jobs N] [--workers thread|subprocess|remote]
                     [--remote HOST:PORT[,...]] [--fleet HOST:PORT]
@@ -69,6 +73,7 @@ USAGE:
     adpsgd registry --listen HOST:PORT
     adpsgd status   [--fleet HOST:PORT] [--remote HOST:PORT[,...]]
                     [--remote-token T] [--timeout-secs S] [--json]
+    adpsgd trace    DIR/NAME.campaign.jsonl [--json | --emit-cluster]
     adpsgd cache-gc [--cache-dir DIR] [--max-bytes N] [--max-age-secs S]
                     [--tmp-grace-secs S] [--dry-run]
     adpsgd models   [--artifacts DIR]
@@ -293,16 +298,46 @@ OBSERVABILITY (see the crate docs' Observability section):
     ({\"schema\":1,\"ts\":\"...\",\"event\":\"run.start\",\"trace\":\"...\",...})
     covering the whole run lifecycle (campaign.start, run.queued,
     run.cache_hit, run.start, run.done/failed/crashed, cache.store,
-    campaign.end).  Every run gets a trace id minted at the driver and
-    carried through the proto-v5 RunRequest frame to remote agents and
-    their worker children, so one grep follows a run across machines.
-    The journal is a pure observer: the stable <name>.campaign.json is
-    byte-identical with journaling on or off.
+    blob.request/blob.staged, campaign.end).  Every run gets a trace id
+    minted at the driver and carried through the proto RunRequest frame
+    to remote agents and their worker children, so one grep follows a
+    run across machines.
+    Since proto v6 the per-run coordinator events (run.start, run.sync
+    with per-node barrier waits, run.eval, run.end with per-node
+    clocks, ...) *stream back* from subprocess workers and remote
+    agents as batched Events frames and merge into the same journal,
+    tagged with an origin (\"node\" / \"agent:HOST:PORT\") — the journal
+    is identically shaped whether a run executed in-process, in a
+    child, or on a remote agent.  Streaming is best-effort (dropped
+    batches count in the obs.event_drops metric) and never
+    result-affecting: the stable <name>.campaign.json is byte-identical
+    with journaling/streaming on or off.
     --no-journal         do not write the campaign event journal
+    --no-stream          keep the journal but do not stream observer
+                         events back from subprocess/remote executors
     Process-wide metrics (queue depth, cache hit/miss, crash requeues,
     backoff attempts, blob bytes staged, heartbeat gaps, ...) are kept
     in an in-process registry; agents snapshot theirs into the `Stats`
-    reply that `adpsgd status` renders.
+    reply that `adpsgd status` renders (histograms with count/sum/
+    min/max and estimated p50/p95/p99).
+
+TRACE (reconstruct run timelines from a campaign journal):
+    adpsgd trace results/sweep.campaign.jsonl
+    Groups journal lines per run (by trace id) and attributes each
+    run's modeled_wall_secs into per-node compute / barrier-wait / comm
+    buckets from the streamed run.sync + run.end events, with the
+    critical path and a per-node straggler count (which node arrived at
+    each barrier last).  Runs that executed without streamed events
+    fall back to the dispatch summary line (wall clock only).
+    --json               machine-readable report
+    --emit-cluster       harvest the observed per-node skew as a
+                         paste-ready [cluster] config block, validated
+                         against the config parser before printing:
+        adpsgd trace results/sweep.campaign.jsonl --emit-cluster
+          [cluster]
+          factors = [1.0000, 1.1873, 2.9941, 1.0438]
+        append it to a config file (or pass --cluster.factors ...) and
+        the next campaign replays the measured heterogeneity.
 
 STATUS (live fleet/agent view):
     adpsgd status --fleet r.example:7000 --remote-token sesame
@@ -344,6 +379,8 @@ fn real_main() -> Result<()> {
         "no-cache",
         "dry-run",
         "no-journal",
+        "no-stream",
+        "emit-cluster",
     ])?;
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
@@ -362,6 +399,8 @@ fn real_main() -> Result<()> {
         Some("registry") => cmd_registry(&args),
         // live fleet/agent view: membership, leases, in-flight runs
         Some("status") => cmd_status(&args),
+        // timeline analysis of a written campaign journal
+        Some("trace") => cmd_trace(&args),
         Some("help") | None => {
             print!("{HELP}");
             Ok(())
@@ -629,6 +668,7 @@ fn cmd_campaign(args: &Args) -> Result<()> {
                 .with_context(|| format!("creating event journal {}", jpath.display()))?,
         );
     }
+    opts.stream_events = !args.flag("no-stream");
 
     let json_out = args.flag("json");
     if !json_out {
@@ -899,6 +939,7 @@ fn cmd_status(args: &Args) -> Result<()> {
                         served,
                         hits,
                     );
+                    print_agent_metrics(&stats);
                 }
                 agents.push(Json::obj(vec![
                     ("addr", Json::str(addr.clone())),
@@ -925,6 +966,66 @@ fn cmd_status(args: &Args) -> Result<()> {
     }
     if reached == 0 {
         bail!("no agent answered a status query ({} tried)", endpoints.len());
+    }
+    Ok(())
+}
+
+/// Human rendering of an agent's metrics snapshot: byte-valued
+/// counters/gauges humanized via [`adpsgd::util::fmt::bytes`], and each
+/// non-empty histogram summarized as mean plus the estimated
+/// p50/p95/p99.
+fn print_agent_metrics(stats: &adpsgd::util::json::Json) {
+    use adpsgd::util::json::Json;
+    let Some(metrics) = stats.get("metrics") else { return };
+    for kind in ["counters", "gauges"] {
+        let Some(map) = metrics.get(kind).and_then(Json::as_obj) else { continue };
+        for (name, v) in map {
+            let Some(v) = v.as_f64() else { continue };
+            if v == 0.0 {
+                continue;
+            }
+            // byte-valued metrics are named *_bytes_* by convention
+            if name.contains("bytes") {
+                println!("  {name} = {}", adpsgd::util::fmt::bytes(v as u64));
+            } else {
+                println!("  {name} = {v}");
+            }
+        }
+    }
+    let Some(histos) = metrics.get("histograms").and_then(Json::as_obj) else { return };
+    for (name, h) in histos {
+        let f = |k: &str| h.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let count = f("count");
+        if count == 0.0 {
+            continue;
+        }
+        println!(
+            "  {name}: n={count} mean={:.3} p50={:.3} p95={:.3} p99={:.3}",
+            f("sum") / count,
+            f("p50"),
+            f("p95"),
+            f("p99"),
+        );
+    }
+}
+
+/// `adpsgd trace`: reconstruct per-run timelines from a campaign event
+/// journal (see the TRACE section of HELP).
+fn cmd_trace(args: &Args) -> Result<()> {
+    reject_unknown_options(args, &[])?;
+    let [path] = args.positional.as_slice() else {
+        bail!(
+            "trace expects exactly one journal path: \
+             adpsgd trace <out>/<name>.campaign.jsonl"
+        );
+    };
+    let report = adpsgd::obs::trace::analyze_file(std::path::Path::new(path))?;
+    if args.flag("emit-cluster") {
+        print!("{}", report.emit_cluster()?);
+    } else if args.flag("json") {
+        println!("{}", report.to_json().to_string_compact());
+    } else {
+        print!("{}", report.render());
     }
     Ok(())
 }

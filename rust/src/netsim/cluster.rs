@@ -280,12 +280,19 @@ impl ClusterModel {
 pub struct ClusterClock {
     model: ClusterModel,
     t: Vec<f64>,
+    /// per-node barrier-wait seconds accumulated since the last
+    /// [`ClusterClock::sync_lap`] — how long each node idled for the
+    /// slowest arrival (plus DaSGD wire waits)
+    lap_waits: Vec<f64>,
+    /// modeled communication seconds accumulated since the last lap
+    lap_comm: f64,
 }
 
 impl ClusterClock {
     pub fn new(model: ClusterModel) -> ClusterClock {
         let t = vec![0.0; model.n];
-        ClusterClock { model, t }
+        let lap_waits = vec![0.0; model.n];
+        ClusterClock { model, t, lap_waits, lap_comm: 0.0 }
     }
 
     pub fn model(&self) -> &ClusterModel {
@@ -308,22 +315,47 @@ impl ClusterClock {
     /// BSP barrier + blocking collective: everyone leaves at the
     /// slowest arrival plus the modeled communication time.
     pub fn barrier(&mut self, comm_secs: f64) {
-        let m = self.max() + comm_secs;
-        for t in &mut self.t {
-            *t = m;
+        let m0 = self.max();
+        for i in 0..self.t.len() {
+            self.lap_waits[i] += m0 - self.t[i];
+            self.t[i] = m0 + comm_secs;
         }
+        self.lap_comm += comm_secs;
     }
 
     /// Deferred completion (DaSGD): a collective launched at modeled
     /// time `floor - comm_secs` finishes at `floor`; nodes that are
     /// still computing hide it entirely, nodes that got ahead wait.
-    /// No inter-node barrier — each node only syncs with the wire.
+    /// No inter-node barrier — each node only syncs with the wire, so
+    /// the lap accounting books a node's wire wait as wait time, not
+    /// communication (DaSGD's whole point is that overlap hides it).
     pub fn wait_until(&mut self, floor: f64) {
-        for t in &mut self.t {
-            if *t < floor {
-                *t = floor;
+        for i in 0..self.t.len() {
+            self.lap_waits[i] += (floor - self.t[i]).max(0.0);
+            if self.t[i] < floor {
+                self.t[i] = floor;
             }
         }
+    }
+
+    /// Drain the wait/comm accounting accumulated since the previous
+    /// lap: copies per-node barrier-wait seconds into `waits` (resized
+    /// to `n`) and returns the modeled communication seconds, then
+    /// resets both.  The coordinator laps the clock once per completed
+    /// sync, which is what gives [`crate::coordinator::observer::
+    /// RunEvent::SyncDone`] its per-node attribution.
+    pub fn sync_lap(&mut self, waits: &mut Vec<f64>) -> f64 {
+        waits.clear();
+        waits.extend_from_slice(&self.lap_waits);
+        for w in &mut self.lap_waits {
+            *w = 0.0;
+        }
+        std::mem::replace(&mut self.lap_comm, 0.0)
+    }
+
+    /// Every node's modeled clock (rank order).
+    pub fn nodes(&self) -> &[f64] {
+        &self.t
     }
 
     /// Modeled time of node `i`.
@@ -512,6 +544,32 @@ mod tests {
         for i in 0..3 {
             assert_eq!(clock.node(i), before + 5e-3);
         }
+    }
+
+    #[test]
+    fn sync_lap_attributes_waits_and_comm() {
+        let mut c = cl();
+        c.skew = "straggler:4".into();
+        c.step_us = 1000.0;
+        let m = ClusterModel::from_config(&c, &net(), 4, 100, 1).unwrap();
+        let mut clock = ClusterClock::new(m);
+        clock.step(0); // fast nodes at 1ms, straggler at 4ms
+        clock.barrier(1e-3);
+        let mut waits = Vec::new();
+        let comm = clock.sync_lap(&mut waits);
+        assert_eq!(comm, 1e-3);
+        assert_eq!(waits.len(), 4);
+        assert!((waits[0] - 3e-3).abs() < 1e-12, "{waits:?}");
+        assert_eq!(waits[3], 0.0, "the straggler never waits");
+        // the lap drains: a second lap with no sync reports zeros
+        assert_eq!(clock.sync_lap(&mut waits), 0.0);
+        assert!(waits.iter().all(|w| *w == 0.0), "{waits:?}");
+        // nodes() exposes the flattened post-barrier clocks
+        assert!(clock.nodes().iter().all(|t| (*t - 5e-3).abs() < 1e-12));
+        // deferred completion books wire waits, never comm
+        clock.wait_until(6e-3);
+        assert_eq!(clock.sync_lap(&mut waits), 0.0);
+        assert!(waits.iter().all(|w| (*w - 1e-3).abs() < 1e-12), "{waits:?}");
     }
 
     #[test]

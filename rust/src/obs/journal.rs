@@ -23,6 +23,15 @@
 //! so summaries are byte-identical with the journal on or off, and a
 //! journal write failure is counted (`obs.journal_write_errors`) but
 //! never fails the run.
+//!
+//! Since proto v6 the same `run.*` lines also arrive *streamed* from
+//! subprocess worker children and remote agents (batched
+//! `Frame::Events`); [`Journal::merge_line`] validates each one and
+//! splices in an `origin` field (`"node"` / `"agent:<addr>"`) so the
+//! merged journal is identically shaped across local, subprocess,
+//! remote, and fleet execution — lines without `origin` were bridged
+//! in-process at the driver.  Invalid or undeliverable streamed lines
+//! are counted in `obs.event_drops`, never retried.
 
 use crate::coordinator::observer::{RunEvent, RunObserver};
 use crate::util::json::Json;
@@ -88,16 +97,38 @@ impl Journal {
     /// event-specific payload.  Never fails: an I/O error is counted in
     /// `obs.journal_write_errors` and the line is dropped.
     pub fn emit(&self, event: &str, trace: Option<&str>, fields: Vec<(&str, Json)>) {
-        let mut pairs = vec![
-            ("schema", Json::num(JOURNAL_SCHEMA as f64)),
-            ("ts", Json::str(super::now_iso8601())),
-            ("event", Json::str(event)),
-        ];
-        if let Some(t) = trace {
-            pairs.push(("trace", Json::str(t)));
+        self.write_line(&render_line(event, trace, fields));
+    }
+
+    /// Merge one already-rendered journal line streamed from another
+    /// executor, tagging it with `origin` (`"node"` for a subprocess
+    /// worker child, `"agent:<addr>"` for a remote agent's executor).
+    /// The line is validated against the schema first; an invalid line
+    /// is dropped and counted in `obs.event_drops`.  Returns whether
+    /// the line was merged.
+    pub fn merge_line(&self, line: &str, origin: &str) -> bool {
+        let trimmed = line.trim();
+        if parse_line(trimmed).is_err() {
+            super::metrics::metrics().counter("obs.event_drops").inc();
+            return false;
         }
-        pairs.extend(fields);
-        let line = Json::obj(pairs).to_string_compact();
+        // parse_line proved this is a JSON object, so it ends with '}':
+        // splice the origin tag in before it, keeping every byte the
+        // executor rendered (timestamps are the *executor's* clock)
+        let body = &trimmed[..trimmed.len() - 1];
+        let tagged =
+            format!("{body},\"origin\":{}}}", Json::str(origin).to_string_compact());
+        self.write_line(&tagged);
+        true
+    }
+
+    /// Merge a streamed batch via [`Journal::merge_line`]; returns how
+    /// many lines survived validation.
+    pub fn merge_lines(&self, lines: &[String], origin: &str) -> usize {
+        lines.iter().filter(|l| self.merge_line(l, origin)).count()
+    }
+
+    fn write_line(&self, line: &str) {
         let mut inner = self.inner.lock().expect("journal lock");
         let wrote = inner
             .w
@@ -110,6 +141,24 @@ impl Journal {
             super::metrics::metrics().counter("obs.journal_write_errors").inc();
         }
     }
+}
+
+/// Render one journal line (no trailing newline): the exact
+/// self-describing shape [`Journal::emit`] writes.  Public so the
+/// worker-side streaming bridge ([`crate::dispatch::proto`]) renders
+/// lines that are indistinguishable from locally-emitted ones before
+/// they ever cross a pipe or socket.
+pub fn render_line(event: &str, trace: Option<&str>, fields: Vec<(&str, Json)>) -> String {
+    let mut pairs = vec![
+        ("schema", Json::num(JOURNAL_SCHEMA as f64)),
+        ("ts", Json::str(super::now_iso8601())),
+        ("event", Json::str(event)),
+    ];
+    if let Some(t) = trace {
+        pairs.push(("trace", Json::str(t)));
+    }
+    pairs.extend(fields);
+    Json::obj(pairs).to_string_compact()
 }
 
 /// Parse and validate one journal line against the versioned schema:
@@ -193,64 +242,81 @@ impl JournalObserver {
 
 impl RunObserver for JournalObserver {
     fn on_event(&mut self, ev: &RunEvent<'_>) -> Result<()> {
-        let label = ("run", Json::str(self.label.clone()));
-        match ev {
-            RunEvent::RunStart { n_params, resume_iter, .. } => self.journal.emit(
-                "run.start",
-                Some(&self.trace),
-                vec![
-                    label,
-                    ("n_params", Json::num(*n_params as f64)),
-                    ("resume_iter", Json::num(*resume_iter as f64)),
-                ],
-            ),
-            // one line per training iteration would dwarf the journal
-            RunEvent::IterEnd { .. } => {}
-            RunEvent::SyncDone { k, s_k, period, bytes } => self.journal.emit(
-                "run.sync",
-                Some(&self.trace),
-                vec![
-                    label,
-                    ("k", Json::num(*k as f64)),
-                    ("s_k", Json::num(*s_k)),
-                    ("period", Json::num(*period as f64)),
-                    ("bytes", Json::num(*bytes as f64)),
-                ],
-            ),
-            RunEvent::VarProbe { k, var } => self.journal.emit(
-                "run.var_probe",
-                Some(&self.trace),
-                vec![label, ("k", Json::num(*k as f64)), ("var", Json::num(*var))],
-            ),
-            RunEvent::EvalDone { k, loss, acc } => self.journal.emit(
-                "run.eval",
-                Some(&self.trace),
-                vec![
-                    label,
-                    ("k", Json::num(*k as f64)),
-                    ("loss", Json::num(*loss)),
-                    ("acc", Json::num(*acc)),
-                ],
-            ),
-            // metadata only: the parameter snapshot itself never enters
-            // the journal
-            RunEvent::CheckpointDue { iter, mean_loss, .. } => self.journal.emit(
-                "run.checkpoint",
-                Some(&self.trace),
-                vec![
-                    label,
-                    ("iter", Json::num(*iter as f64)),
-                    ("mean_loss", Json::num(*mean_loss)),
-                ],
-            ),
-            RunEvent::RunEnd { iters } => self.journal.emit(
-                "run.end",
-                Some(&self.trace),
-                vec![label, ("iters", Json::num(*iters as f64))],
-            ),
+        if let Some((event, fields)) = event_fields(ev, &self.label) {
+            self.journal.emit(event, Some(&self.trace), fields);
         }
         Ok(())
     }
+}
+
+/// The `run.*` journal projection of one coordinator event: its event
+/// name and payload fields (including the `run` label), or `None` for
+/// events the journal skips (the per-iteration `IterEnd` — one line
+/// per training step would dwarf the rest of the journal).  Shared by
+/// [`JournalObserver`] (driver-side thread runs) and the worker-side
+/// streaming bridge, so a streamed line carries exactly the fields a
+/// locally-bridged one does.
+pub fn event_fields(ev: &RunEvent<'_>, label: &str) -> Option<(&'static str, Vec<(&'static str, Json)>)> {
+    let label = ("run", Json::str(label));
+    let arr = |xs: &[f64]| Json::Arr(xs.iter().map(|x| Json::num(*x)).collect());
+    Some(match ev {
+        RunEvent::RunStart { n_params, resume_iter, .. } => (
+            "run.start",
+            vec![
+                label,
+                ("n_params", Json::num(*n_params as f64)),
+                ("resume_iter", Json::num(*resume_iter as f64)),
+            ],
+        ),
+        RunEvent::IterEnd { .. } => return None,
+        RunEvent::SyncDone { k, s_k, period, bytes, comm_secs, t, waits } => (
+            "run.sync",
+            vec![
+                label,
+                ("k", Json::num(*k as f64)),
+                ("s_k", Json::num(*s_k)),
+                ("period", Json::num(*period as f64)),
+                ("bytes", Json::num(*bytes as f64)),
+                ("comm_secs", Json::num(*comm_secs)),
+                ("t", Json::num(*t)),
+                ("waits", arr(waits)),
+            ],
+        ),
+        RunEvent::VarProbe { k, var } => (
+            "run.var_probe",
+            vec![label, ("k", Json::num(*k as f64)), ("var", Json::num(*var))],
+        ),
+        RunEvent::EvalDone { k, loss, acc } => (
+            "run.eval",
+            vec![
+                label,
+                ("k", Json::num(*k as f64)),
+                ("loss", Json::num(*loss)),
+                ("acc", Json::num(*acc)),
+            ],
+        ),
+        // metadata only: the parameter snapshot itself never enters
+        // the journal
+        RunEvent::CheckpointDue { iter, mean_loss, .. } => (
+            "run.checkpoint",
+            vec![
+                label,
+                ("iter", Json::num(*iter as f64)),
+                ("mean_loss", Json::num(*mean_loss)),
+            ],
+        ),
+        RunEvent::RunEnd { iters, node_secs } => (
+            "run.end",
+            vec![label, ("iters", Json::num(*iters as f64)), ("node_secs", arr(node_secs))],
+        ),
+    })
+}
+
+/// Render one coordinator event as a ready-to-merge journal line — the
+/// worker-side streaming bridge's unit of work ([`crate::dispatch::
+/// proto::Frame::Events`] carries batches of these).
+pub fn observer_line(ev: &RunEvent<'_>, label: &str, trace: Option<&str>) -> Option<String> {
+    event_fields(ev, label).map(|(event, fields)| render_line(event, trace, fields))
 }
 
 #[cfg(test)]
@@ -320,9 +386,18 @@ mod tests {
         let mut obs = JournalObserver::new(j, &trace, "adaptive/n8");
         obs.on_event(&RunEvent::RunStart { cfg: &cfg, n_params: 64, resume_iter: 0 }).unwrap();
         obs.on_event(&RunEvent::IterEnd { k: 0, lr: 0.1, loss: Some(1.0) }).unwrap();
-        obs.on_event(&RunEvent::SyncDone { k: 3, s_k: 0.5, period: 4, bytes: 256 }).unwrap();
+        obs.on_event(&RunEvent::SyncDone {
+            k: 3,
+            s_k: 0.5,
+            period: 4,
+            bytes: 256,
+            comm_secs: 2e-3,
+            t: 0.05,
+            waits: &[0.0, 3e-3],
+        })
+        .unwrap();
         obs.on_event(&RunEvent::EvalDone { k: 9, loss: 1.5, acc: 0.7 }).unwrap();
-        obs.on_event(&RunEvent::RunEnd { iters: 10 }).unwrap();
+        obs.on_event(&RunEvent::RunEnd { iters: 10, node_secs: &[0.06, 0.055] }).unwrap();
         let lines = read_all(&path).unwrap();
         let events: Vec<&str> =
             lines.iter().map(|l| l.get("event").unwrap().as_str().unwrap()).collect();
@@ -336,6 +411,55 @@ mod tests {
             assert_eq!(l.get("run").unwrap().as_str(), Some("adaptive/n8"));
         }
         assert_eq!(lines[1].get("bytes").unwrap().as_f64(), Some(256.0));
+        // the sync line carries the per-node attribution raw material
+        assert_eq!(lines[1].get("comm_secs").unwrap().as_f64(), Some(2e-3));
+        assert_eq!(lines[1].get("t").unwrap().as_f64(), Some(0.05));
+        let waits = lines[1].get("waits").unwrap().as_arr().unwrap();
+        assert_eq!(waits.len(), 2);
+        assert_eq!(waits[1].as_f64(), Some(3e-3));
+        let ends = lines[3].get("node_secs").unwrap().as_arr().unwrap();
+        assert_eq!(ends[0].as_f64(), Some(0.06));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn streamed_lines_merge_with_origin_and_drops_are_counted() {
+        let path = tmp_journal("merge");
+        let j = Journal::create(&path).unwrap();
+        let trace = mint_trace_id();
+        // what a worker child would render and ship in an Events frame
+        let streamed = observer_line(
+            &RunEvent::RunEnd { iters: 10, node_secs: &[0.5] },
+            "adaptive/n4",
+            Some(&trace),
+        )
+        .expect("RunEnd is journaled");
+        let drops = crate::obs::metrics().counter("obs.event_drops");
+        let before = drops.get();
+        assert!(j.merge_line(&streamed, "node"));
+        assert!(!j.merge_line("not a journal line", "node"), "garbage must not merge");
+        assert_eq!(
+            j.merge_lines(&[streamed.clone(), "{}".into()], "agent:127.0.0.1:7070"),
+            1
+        );
+        assert_eq!(drops.get(), before + 2, "both rejects counted");
+        let lines = read_all(&path).unwrap();
+        assert_eq!(lines.len(), 2, "merged lines still parse under the schema");
+        assert_eq!(lines[0].get("origin").unwrap().as_str(), Some("node"));
+        assert_eq!(lines[0].get("event").unwrap().as_str(), Some("run.end"));
+        assert_eq!(lines[0].get("trace").unwrap().as_str(), Some(trace.as_str()));
+        assert_eq!(lines[0].get("run").unwrap().as_str(), Some("adaptive/n4"));
+        assert_eq!(
+            lines[1].get("origin").unwrap().as_str(),
+            Some("agent:127.0.0.1:7070")
+        );
+        // IterEnd stays unjournaled on the streaming path too
+        assert!(observer_line(
+            &RunEvent::IterEnd { k: 1, lr: 0.1, loss: None },
+            "x",
+            None
+        )
+        .is_none());
         std::fs::remove_file(&path).ok();
     }
 }

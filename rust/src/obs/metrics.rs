@@ -31,6 +31,7 @@
 //! | `agent.cache_hits`          | counter   | agent-side runs answered from its cache |
 //! | `agent.blob_bytes_staged`   | counter   | blob bytes an agent accepted from dispatchers |
 //! | `obs.journal_write_errors`  | counter   | journal lines dropped on I/O error |
+//! | `obs.event_drops`           | counter   | streamed observer-event lines dropped (send failure, stale id, failed validation) |
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -73,16 +74,67 @@ impl Gauge {
     }
 }
 
-#[derive(Debug, Default)]
+/// Quantile resolution: fixed log2-spaced buckets.  Bucket 0 holds
+/// everything at or below `2^MIN_EXP` (including zero and negatives),
+/// bucket `i` holds `(2^(MIN_EXP+i-1), 2^(MIN_EXP+i)]`, and the last
+/// bucket is open-ended above.  48 buckets starting at `2^-16` span
+/// ~1.5e-5 through ~4e9 — microseconds to hours whether a site
+/// observes seconds or milliseconds.
+const BUCKETS: usize = 48;
+const MIN_EXP: i32 = -16;
+
+fn bucket_of(v: f64) -> usize {
+    if v <= (2f64).powi(MIN_EXP) {
+        return 0;
+    }
+    // v ∈ (2^(e-1), 2^e]  ⇒  ceil(log2 v) = e
+    let e = v.log2().ceil() as i32;
+    ((e - MIN_EXP) as usize).min(BUCKETS - 1)
+}
+
+#[derive(Debug)]
 struct HistoInner {
     count: u64,
     sum: f64,
     min: f64,
     max: f64,
+    buckets: [u64; BUCKETS],
 }
 
-/// A value distribution summarized as count/sum/min/max (enough for
-/// mean latency and outlier spotting without bucket bookkeeping).
+impl Default for HistoInner {
+    fn default() -> Self {
+        HistoInner { count: 0, sum: 0.0, min: 0.0, max: 0.0, buckets: [0; BUCKETS] }
+    }
+}
+
+impl HistoInner {
+    /// Estimate the `q`-quantile from the cumulative bucket counts: the
+    /// upper edge of the bucket where the cumulative count crosses the
+    /// target rank, clamped into the exactly-tracked `[min, max]`.
+    /// Resolution is the factor-2 bucket width — plenty for the "is p99
+    /// an order of magnitude off the median?" question snapshots exist
+    /// to answer.
+    fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                let upper =
+                    if i == 0 { self.min } else { (2f64).powi(MIN_EXP + i as i32) };
+                return upper.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+/// A value distribution summarized as count/sum/min/max plus
+/// p50/p95/p99 estimated from fixed log2-spaced buckets (factor-2
+/// resolution, clamped to the exact observed range).
 #[derive(Debug, Clone)]
 pub struct Histogram(Arc<Mutex<HistoInner>>);
 
@@ -101,6 +153,7 @@ impl Histogram {
         }
         h.count += 1;
         h.sum += v;
+        h.buckets[bucket_of(v)] += 1;
     }
 
     pub fn count(&self) -> u64 {
@@ -150,7 +203,7 @@ impl Metrics {
 
     /// Render every registered metric as deterministic JSON:
     /// `{"counters":{name:n,…},"gauges":{…},"histograms":{name:
-    /// {"count":…,"sum":…,"min":…,"max":…},…}}`.
+    /// {"count":…,"sum":…,"min":…,"max":…,"p50":…,"p95":…,"p99":…},…}}`.
     pub fn snapshot(&self) -> Json {
         let counters: BTreeMap<String, Json> = self
             .counters
@@ -180,6 +233,9 @@ impl Metrics {
                         ("sum", Json::num(inner.sum)),
                         ("min", Json::num(if inner.count == 0 { 0.0 } else { inner.min })),
                         ("max", Json::num(if inner.count == 0 { 0.0 } else { inner.max })),
+                        ("p50", Json::num(inner.quantile(0.50))),
+                        ("p95", Json::num(inner.quantile(0.95))),
+                        ("p99", Json::num(inner.quantile(0.99))),
                     ]),
                 )
             })
@@ -243,6 +299,30 @@ mod tests {
         assert_eq!(lat.get("sum").unwrap().as_f64(), Some(10.0));
         assert_eq!(lat.get("min").unwrap().as_f64(), Some(2.0));
         assert_eq!(lat.get("max").unwrap().as_f64(), Some(8.0));
+    }
+
+    #[test]
+    fn quantiles_estimate_from_log2_buckets_clamped_to_range() {
+        let m = Metrics::default();
+        let h = m.histogram("test.q");
+        for v in 1..=100 {
+            h.observe(v as f64);
+        }
+        let snap = m.snapshot();
+        let q = snap.get("histograms").unwrap().get("test.q").unwrap();
+        // rank 50 lands in the (32, 64] bucket → its upper edge
+        assert_eq!(q.get("p50").unwrap().as_f64(), Some(64.0));
+        // ranks 95 and 99 land in (64, 128] whose edge clamps to max
+        assert_eq!(q.get("p95").unwrap().as_f64(), Some(100.0));
+        assert_eq!(q.get("p99").unwrap().as_f64(), Some(100.0));
+        // a single observation reports itself at every quantile
+        let one = m.histogram("test.one");
+        one.observe(0.25);
+        let snap = m.snapshot();
+        let q = snap.get("histograms").unwrap().get("test.one").unwrap();
+        for p in ["p50", "p95", "p99"] {
+            assert_eq!(q.get(p).unwrap().as_f64(), Some(0.25), "{p}");
+        }
     }
 
     #[test]

@@ -18,6 +18,16 @@
 //!   [`mint_trace_id`] per-run trace id, which also rides proto-v5
 //!   run-request frames so one run is greppable driver → agent →
 //!   worker child.
+//!   Since proto v6 the same bridged lines stream back from subprocess
+//!   workers and remote agents as batched `events` frames and merge —
+//!   tagged with an `origin` — into the one journal, so it is
+//!   identically shaped across local, subprocess, remote, and fleet
+//!   execution.
+//! * **Trace analysis** ([`trace`], `adpsgd trace`) — reconstructs
+//!   per-run timelines from a campaign journal: per-node compute /
+//!   comm / barrier-wait attribution of `modeled_wall_secs`, critical
+//!   path, straggler histogram, and a ready-to-paste
+//!   `[cluster] factors` block harvested from observed node timings.
 //! * **Logging** ([`log!`](crate::obs_log), [`log_line`]) — the one
 //!   diagnostic funnel for the dispatch/fleet fabric: every message
 //!   gets an ISO-8601 UTC timestamp and a `[component]` tag, so
@@ -31,9 +41,11 @@
 
 pub mod journal;
 pub mod metrics;
+pub mod trace;
 
 pub use journal::{mint_trace_id, parse_line, Journal, JournalObserver, JOURNAL_SCHEMA};
 pub use metrics::{metrics, Counter, Gauge, Histogram, Metrics};
+pub use trace::{TraceReport, TraceRun};
 
 /// Timestamped, component-tagged diagnostic line on stderr:
 /// `2026-08-07T12:00:00.123Z [dispatch] message`.  Prefer the

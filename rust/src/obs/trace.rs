@@ -1,0 +1,678 @@
+//! `adpsgd trace` — reconstruct per-run timelines from a campaign
+//! journal.
+//!
+//! The proto-v6 streaming path (see [`super::journal`]) lands every
+//! run's bridged observer events in the one `<name>.campaign.jsonl`
+//! regardless of where the run executed.  Two of those events carry the
+//! raw material for a full time attribution:
+//!
+//! * `run.sync` — per completed sync: the modeled wire cost
+//!   `comm_secs`, the post-sync cluster clock `t`, and the per-node
+//!   barrier-wait seconds `waits` accumulated since the previous sync
+//!   (all from the replicated
+//!   [`crate::netsim::cluster::ClusterClock`]);
+//! * `run.end` — every node's final modeled clock `node_secs`.
+//!
+//! From these, each run's `modeled_wall_secs` decomposes *exactly* into
+//! per-node compute / barrier-wait / comm buckets: over sync round `j`
+//! (clock interval `t_{j-1} → t_j`) node `i` computed
+//! `(t_j − comm_j − waits_ij) − t_{j-1}` seconds, waited `waits_ij`,
+//! and spent `comm_j` communicating; the tail after the last sync is
+//! pure compute (`node_secs_i − t_last`).  The round's *straggler* is
+//! the node that arrived at the barrier last — the one with the
+//! smallest wait — and the critical path is the chain of straggler
+//! compute plus wire time that actually bounds the modeled wall clock.
+//!
+//! [`TraceReport::emit_cluster`] closes the loop back into config: the
+//! observed per-node compute totals, normalized so the fastest node is
+//! `1.0`, are exactly the `[cluster] factors` table
+//! ([`crate::netsim::cluster::ClusterModel`]) that would *replay* the
+//! observed skew — harvested factors are validated through the real
+//! config parser before they are printed, so the block is
+//! paste-ready.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeSet;
+use std::path::Path;
+
+/// One sync round reconstructed from a `run.sync` line.
+#[derive(Debug, Clone)]
+struct SyncRound {
+    /// iteration index the sync fired at (ordering key)
+    k: f64,
+    comm_secs: f64,
+    /// post-sync modeled cluster clock
+    t: f64,
+    /// per-node barrier-wait seconds accumulated since the last sync
+    waits: Vec<f64>,
+}
+
+/// One run's reconstructed timeline.
+#[derive(Debug, Clone)]
+pub struct TraceRun {
+    pub label: String,
+    pub trace: Option<String>,
+    /// distinct `origin` tags seen on this run's lines (empty = every
+    /// line was bridged in-process at the driver)
+    pub origins: Vec<String>,
+    /// dispatch slot that executed the run (`thread`, `subprocess`,
+    /// `remote:<addr>`), from the dispatch-side `run.start` line
+    pub slot: Option<String>,
+    /// answered from the run cache — no training, no timeline
+    pub from_cache: bool,
+    /// queue depth stamped on this run's `run.queued` line
+    pub queue_depth: Option<f64>,
+    /// completed syncs seen (`run.sync` lines)
+    pub syncs: usize,
+    /// nodes, from the `run.end` clock vector (0 = no timeline)
+    pub nodes: usize,
+    /// max over nodes of the final modeled clock; falls back to the
+    /// `run.done` summary field for runs without streamed events
+    pub modeled_wall_secs: f64,
+    /// per-node compute seconds (sync intervals + post-sync tail)
+    pub node_compute: Vec<f64>,
+    /// per-node barrier-wait seconds
+    pub node_wait: Vec<f64>,
+    /// total modeled wire seconds (shared by all nodes)
+    pub comm_secs: f64,
+    /// straggler-chain compute + wire time — what actually bounds the
+    /// modeled wall clock
+    pub critical_path_secs: f64,
+    /// per node: rounds where it arrived at the barrier last
+    pub straggler_rounds: Vec<usize>,
+}
+
+impl TraceRun {
+    fn new(label: String, trace: Option<String>) -> TraceRun {
+        TraceRun {
+            label,
+            trace,
+            origins: Vec::new(),
+            slot: None,
+            from_cache: false,
+            queue_depth: None,
+            syncs: 0,
+            nodes: 0,
+            modeled_wall_secs: 0.0,
+            node_compute: Vec::new(),
+            node_wait: Vec::new(),
+            comm_secs: 0.0,
+            critical_path_secs: 0.0,
+            straggler_rounds: Vec::new(),
+        }
+    }
+
+    /// Whether the journal carried enough streamed events to attribute
+    /// this run's time per node.
+    pub fn attributed(&self) -> bool {
+        self.nodes > 0
+    }
+
+    /// Observed per-node relative compute factors, fastest node = 1.0
+    /// (`None` when the run has no timeline or a zero-compute node).
+    pub fn observed_factors(&self) -> Option<Vec<f64>> {
+        if !self.attributed() {
+            return None;
+        }
+        let min = self.node_compute.iter().cloned().fold(f64::INFINITY, f64::min);
+        if !min.is_finite() || min <= 0.0 {
+            return None;
+        }
+        Some(self.node_compute.iter().map(|c| c / min).collect())
+    }
+
+    fn to_json(&self) -> Json {
+        let arr = |xs: &[f64]| Json::Arr(xs.iter().map(|x| Json::num(*x)).collect());
+        let mut pairs = vec![
+            ("run", Json::str(self.label.clone())),
+            (
+                "trace",
+                self.trace.as_ref().map(|t| Json::str(t.clone())).unwrap_or(Json::Null),
+            ),
+            (
+                "origins",
+                Json::Arr(self.origins.iter().map(|o| Json::str(o.clone())).collect()),
+            ),
+            (
+                "slot",
+                self.slot.as_ref().map(|s| Json::str(s.clone())).unwrap_or(Json::Null),
+            ),
+            ("from_cache", Json::Bool(self.from_cache)),
+            (
+                "queue_depth",
+                self.queue_depth.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("syncs", Json::num(self.syncs as f64)),
+            ("modeled_wall_secs", Json::num(self.modeled_wall_secs)),
+        ];
+        if self.attributed() {
+            pairs.push(("nodes", Json::num(self.nodes as f64)));
+            pairs.push(("node_compute_secs", arr(&self.node_compute)));
+            pairs.push(("node_wait_secs", arr(&self.node_wait)));
+            pairs.push(("comm_secs", Json::num(self.comm_secs)));
+            pairs.push(("critical_path_secs", Json::num(self.critical_path_secs)));
+            pairs.push((
+                "straggler_rounds",
+                Json::Arr(
+                    self.straggler_rounds.iter().map(|r| Json::num(*r as f64)).collect(),
+                ),
+            ));
+            if let Some(f) = self.observed_factors() {
+                pairs.push(("observed_factors", arr(&f)));
+            }
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// The analyzed timeline of one campaign journal.
+#[derive(Debug, Clone)]
+pub struct TraceReport {
+    /// campaign name, from `campaign.start`
+    pub campaign: Option<String>,
+    /// runs in journal (queue) order
+    pub runs: Vec<TraceRun>,
+}
+
+/// Per-run accumulator while scanning journal lines.
+struct RunAcc {
+    run: TraceRun,
+    rounds: Vec<SyncRound>,
+    node_secs: Vec<f64>,
+    /// `run.done` summary fallback for cache hits / unstreamed runs
+    done_wall: Option<f64>,
+}
+
+/// Analyze a campaign journal file (see [`analyze`]).
+pub fn analyze_file(path: &Path) -> Result<TraceReport> {
+    let lines = super::journal::read_all(path)
+        .with_context(|| format!("reading campaign journal {}", path.display()))?;
+    analyze(&lines)
+}
+
+/// Group a journal's lines per run (by trace id, falling back to the
+/// run label), reconstruct each run's sync rounds, and attribute its
+/// modeled wall clock into per-node compute / wait / comm buckets.
+pub fn analyze(lines: &[Json]) -> Result<TraceReport> {
+    let mut campaign = None;
+    let mut accs: Vec<RunAcc> = Vec::new();
+    for line in lines {
+        let event = line.get("event").and_then(Json::as_str).unwrap_or("");
+        if event == "campaign.start" {
+            if let Some(name) = line.get("campaign").and_then(Json::as_str) {
+                campaign = Some(name.to_string());
+            }
+            continue;
+        }
+        let Some(label) = line.get("run").and_then(Json::as_str) else { continue };
+        let trace = line.get("trace").and_then(Json::as_str).map(str::to_string);
+        // the trace id is the run's identity when present (two sweep
+        // points can share a label across re-runs); label otherwise
+        let idx = accs
+            .iter()
+            .position(|a| match (&a.run.trace, &trace) {
+                (Some(a), Some(b)) => a == b,
+                _ => a.run.label == label,
+            })
+            .unwrap_or_else(|| {
+                accs.push(RunAcc {
+                    run: TraceRun::new(label.to_string(), trace.clone()),
+                    rounds: Vec::new(),
+                    node_secs: Vec::new(),
+                    done_wall: None,
+                });
+                accs.len() - 1
+            });
+        let acc = &mut accs[idx];
+        if let Some(origin) = line.get("origin").and_then(Json::as_str) {
+            if !acc.run.origins.iter().any(|o| o == origin) {
+                acc.run.origins.push(origin.to_string());
+            }
+        }
+        match event {
+            "run.queued" => {
+                acc.run.queue_depth = line.get("queue_depth").and_then(Json::as_f64);
+            }
+            "run.start" => {
+                // two events share this name: the dispatch lifecycle
+                // line (has `slot`) and the bridged observer line (has
+                // `n_params`); only the former names the executor
+                if let Some(slot) = line.get("slot").and_then(Json::as_str) {
+                    acc.run.slot = Some(slot.to_string());
+                }
+            }
+            "run.cache_hit" => acc.run.from_cache = true,
+            "run.sync" => {
+                let waits = line
+                    .get("waits")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                    .unwrap_or_default();
+                acc.rounds.push(SyncRound {
+                    k: line.get("k").and_then(Json::as_f64).unwrap_or(0.0),
+                    comm_secs: line.get("comm_secs").and_then(Json::as_f64).unwrap_or(0.0),
+                    t: line.get("t").and_then(Json::as_f64).unwrap_or(0.0),
+                    waits,
+                });
+            }
+            "run.end" => {
+                if let Some(ns) = line.get("node_secs").and_then(Json::as_arr) {
+                    acc.node_secs = ns.iter().filter_map(Json::as_f64).collect();
+                }
+            }
+            "run.done" => {
+                acc.done_wall = line.get("modeled_wall_secs").and_then(Json::as_f64);
+            }
+            _ => {}
+        }
+    }
+    let runs = accs.into_iter().map(attribute).collect();
+    Ok(TraceReport { campaign, runs })
+}
+
+/// Close one run's books: walk its sync rounds in clock order and
+/// split every node's final clock into compute, barrier wait, and
+/// comm.
+fn attribute(mut acc: RunAcc) -> TraceRun {
+    let run = &mut acc.run;
+    run.syncs = acc.rounds.len();
+    let n = acc.node_secs.len();
+    if n == 0 {
+        // no streamed run.end: only the dispatch summary is available
+        run.modeled_wall_secs = acc.done_wall.unwrap_or(0.0);
+        return acc.run;
+    }
+    run.nodes = n;
+    run.node_compute = vec![0.0; n];
+    run.node_wait = vec![0.0; n];
+    run.straggler_rounds = vec![0; n];
+    acc.rounds.sort_by(|a, b| {
+        a.k.partial_cmp(&b.k).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut prev_t = 0.0;
+    for round in &acc.rounds {
+        run.comm_secs += round.comm_secs;
+        run.critical_path_secs += round.comm_secs;
+        let mut slowest = 0usize;
+        let mut slowest_wait = f64::INFINITY;
+        let mut max_compute: f64 = 0.0;
+        for i in 0..n {
+            let wait = round.waits.get(i).copied().unwrap_or(0.0);
+            // node i reached this barrier at (t − comm − wait): the
+            // clock interval minus its wait and the wire time is what
+            // it spent computing
+            let compute = ((round.t - round.comm_secs - wait) - prev_t).max(0.0);
+            run.node_compute[i] += compute;
+            run.node_wait[i] += wait;
+            max_compute = max_compute.max(compute);
+            if wait < slowest_wait {
+                slowest_wait = wait;
+                slowest = i;
+            }
+        }
+        // the straggler — smallest wait — is the arrival the barrier
+        // (and therefore the wall clock) actually waited for
+        run.straggler_rounds[slowest] += 1;
+        run.critical_path_secs += max_compute;
+        prev_t = round.t;
+    }
+    // tail after the last sync is pure compute
+    let mut max_tail: f64 = 0.0;
+    for i in 0..n {
+        let tail = (acc.node_secs[i] - prev_t).max(0.0);
+        run.node_compute[i] += tail;
+        max_tail = max_tail.max(tail);
+    }
+    run.critical_path_secs += max_tail;
+    run.modeled_wall_secs =
+        acc.node_secs.iter().cloned().fold(0.0, f64::max);
+    acc.run
+}
+
+impl TraceReport {
+    /// Machine-readable form (`adpsgd trace --json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "campaign",
+                self.campaign
+                    .as_ref()
+                    .map(|c| Json::str(c.clone()))
+                    .unwrap_or(Json::Null),
+            ),
+            ("runs", Json::Arr(self.runs.iter().map(TraceRun::to_json).collect())),
+        ])
+    }
+
+    /// The human table: one block per run, with the per-node breakdown
+    /// for every run the journal carried streamed events for.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        match &self.campaign {
+            Some(c) => out.push_str(&format!(
+                "== trace: campaign {c:?} ({} runs) ==\n",
+                self.runs.len()
+            )),
+            None => out.push_str(&format!("== trace: {} runs ==\n", self.runs.len())),
+        }
+        for run in &self.runs {
+            out.push('\n');
+            out.push_str(&format!("run {:?}", run.label));
+            if let Some(t) = &run.trace {
+                out.push_str(&format!("  trace {t}"));
+            }
+            if let Some(s) = &run.slot {
+                out.push_str(&format!("  slot {s}"));
+            }
+            if !run.origins.is_empty() {
+                out.push_str(&format!("  origin {}", run.origins.join(",")));
+            }
+            out.push('\n');
+            if run.from_cache {
+                out.push_str("  answered from cache (no timeline)\n");
+                continue;
+            }
+            out.push_str(&format!(
+                "  modeled wall {:>10.6}s  comm {:>10.6}s  syncs {:>4}",
+                run.modeled_wall_secs, run.comm_secs, run.syncs
+            ));
+            if let Some(d) = run.queue_depth {
+                out.push_str(&format!("  queued at depth {d:.0}"));
+            }
+            out.push('\n');
+            if !run.attributed() {
+                out.push_str("  (no streamed run.sync/run.end events: per-node attribution unavailable)\n");
+                continue;
+            }
+            out.push_str(&format!(
+                "  critical path {:.6}s ({:.1}% of wall)\n",
+                run.critical_path_secs,
+                100.0 * run.critical_path_secs / run.modeled_wall_secs.max(f64::MIN_POSITIVE),
+            ));
+            let factors = run.observed_factors();
+            out.push_str("  node   compute(s)     wait(s)   factor  straggled\n");
+            for i in 0..run.nodes {
+                out.push_str(&format!(
+                    "  {:>4}  {:>11.6} {:>11.6}  {}  {:>3} of {} rounds\n",
+                    i,
+                    run.node_compute[i],
+                    run.node_wait[i],
+                    factors
+                        .as_ref()
+                        .map(|f| format!("{:>7.2}", f[i]))
+                        .unwrap_or_else(|| "      -".into()),
+                    run.straggler_rounds[i],
+                    run.syncs,
+                ));
+            }
+        }
+        out
+    }
+
+    /// Harvest the observed per-node skew as a paste-ready
+    /// `[cluster] factors` TOML block ([`crate::netsim::cluster`]):
+    /// per-rank mean of each attributed run's observed factors
+    /// (fastest node = 1.0), over the runs with the journal's modal
+    /// node count.  The block is round-tripped through the real config
+    /// parser and [`crate::netsim::cluster::ClusterModel::from_config`]
+    /// before it is returned — what this prints, a config file
+    /// accepts.
+    pub fn emit_cluster(&self) -> Result<String> {
+        let observed: Vec<(usize, Vec<f64>)> = self
+            .runs
+            .iter()
+            .filter_map(|r| r.observed_factors().map(|f| (r.nodes, f)))
+            .collect();
+        if observed.is_empty() {
+            bail!(
+                "no run in this journal carried streamed run.sync/run.end events \
+                 (re-run the campaign with event streaming on, without --no-stream)"
+            );
+        }
+        // modal node count wins: a sweep mixing cluster sizes harvests
+        // the size most of its runs used
+        let counts: BTreeSet<usize> = observed.iter().map(|(n, _)| *n).collect();
+        let n = counts
+            .iter()
+            .copied()
+            .max_by_key(|n| observed.iter().filter(|(m, _)| m == n).count())
+            .expect("nonempty observed");
+        let picked: Vec<&Vec<f64>> =
+            observed.iter().filter(|(m, _)| *m == n).map(|(_, f)| f).collect();
+        let mut mean = vec![0.0f64; n];
+        for f in &picked {
+            for i in 0..n {
+                mean[i] += f[i] / picked.len() as f64;
+            }
+        }
+        // re-normalize after averaging so the fastest rank is exactly 1
+        let min = mean.iter().cloned().fold(f64::INFINITY, f64::min);
+        let factors: Vec<String> =
+            mean.iter().map(|f| format!("{:.4}", f / min)).collect();
+        let block = format!("[cluster]\nfactors = [{}]\n", factors.join(", "));
+        // round-trip: the emitted block must be accepted verbatim by
+        // the config layer and build a valid cluster model for n nodes
+        let doc = crate::config::toml::TomlDoc::parse(&block)
+            .map_err(|e| anyhow!("emitted cluster block does not parse: {e}"))?;
+        let mut cfg = crate::config::ExperimentConfig::default();
+        cfg.nodes = n;
+        cfg.apply_doc(&doc).context("emitted cluster block rejected by the config layer")?;
+        crate::netsim::cluster::ClusterModel::from_config(
+            &cfg.cluster,
+            &cfg.net,
+            n,
+            1,
+            0,
+        )
+        .context("emitted factors rejected by the cluster model")?;
+        Ok(block)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::journal::render_line;
+
+    /// Journal lines for one synthetic 2-node run: one sync round at
+    /// t=0.005 (comm 1ms; node 0 waited 3ms, node 1 arrived last),
+    /// final clocks 0.006 / 0.007.  Hand-checked attribution:
+    /// compute = [0.002, 0.006], wait = [0.003, 0.0], comm 0.001.
+    fn synthetic_run(label: &str, trace: &str, origin: Option<&str>) -> Vec<Json> {
+        let lines = vec![
+            render_line(
+                "run.queued",
+                Some(trace),
+                vec![("run", Json::str(label)), ("queue_depth", Json::num(2.0))],
+            ),
+            render_line(
+                "run.start",
+                Some(trace),
+                vec![
+                    ("run", Json::str(label)),
+                    ("slot", Json::str("thread")),
+                    ("attempt", Json::num(1.0)),
+                ],
+            ),
+            render_line(
+                "run.sync",
+                Some(trace),
+                vec![
+                    ("run", Json::str(label)),
+                    ("k", Json::num(3.0)),
+                    ("s_k", Json::num(0.5)),
+                    ("period", Json::num(4.0)),
+                    ("bytes", Json::num(256.0)),
+                    ("comm_secs", Json::num(1e-3)),
+                    ("t", Json::num(5e-3)),
+                    ("waits", Json::Arr(vec![Json::num(3e-3), Json::num(0.0)])),
+                ],
+            ),
+            render_line(
+                "run.end",
+                Some(trace),
+                vec![
+                    ("run", Json::str(label)),
+                    ("iters", Json::num(10.0)),
+                    (
+                        "node_secs",
+                        Json::Arr(vec![Json::num(6e-3), Json::num(7e-3)]),
+                    ),
+                ],
+            ),
+            render_line(
+                "run.done",
+                Some(trace),
+                vec![
+                    ("run", Json::str(label)),
+                    ("modeled_wall_secs", Json::num(7e-3)),
+                    ("syncs", Json::num(1.0)),
+                ],
+            ),
+        ];
+        lines
+            .into_iter()
+            .map(|l| match origin {
+                Some(o) => {
+                    let body = &l[..l.len() - 1];
+                    Json::parse(&format!(
+                        "{body},\"origin\":{}}}",
+                        Json::str(o).to_string_compact()
+                    ))
+                    .unwrap()
+                }
+                None => Json::parse(&l).unwrap(),
+            })
+            .collect()
+    }
+
+    fn close(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+    }
+
+    #[test]
+    fn attribution_decomposes_the_modeled_wall_clock() {
+        let mut lines = vec![Json::parse(&render_line(
+            "campaign.start",
+            None,
+            vec![("campaign", Json::str("bench")), ("runs", Json::num(1.0))],
+        ))
+        .unwrap()];
+        lines.extend(synthetic_run("skew/n2", "aaaa000011112222", Some("node")));
+        let report = analyze(&lines).unwrap();
+        assert_eq!(report.campaign.as_deref(), Some("bench"));
+        assert_eq!(report.runs.len(), 1);
+        let run = &report.runs[0];
+        assert_eq!(run.label, "skew/n2");
+        assert_eq!(run.trace.as_deref(), Some("aaaa000011112222"));
+        assert_eq!(run.origins, vec!["node".to_string()]);
+        assert_eq!(run.slot.as_deref(), Some("thread"));
+        assert_eq!(run.queue_depth, Some(2.0));
+        assert_eq!(run.syncs, 1);
+        assert_eq!(run.nodes, 2);
+        close(run.modeled_wall_secs, 7e-3);
+        close(run.comm_secs, 1e-3);
+        // round 1: node 0 computed (5−1−3)=1ms, node 1 (5−1−0)=4ms;
+        // tail: 1ms / 2ms
+        close(run.node_compute[0], 2e-3);
+        close(run.node_compute[1], 6e-3);
+        close(run.node_wait[0], 3e-3);
+        close(run.node_wait[1], 0.0);
+        // node 1 arrived last (zero wait) → it straggled the round
+        assert_eq!(run.straggler_rounds, vec![0, 1]);
+        // critical path = straggler compute 4ms + comm 1ms + max tail
+        // 2ms = the wall clock exactly (barrier model)
+        close(run.critical_path_secs, 7e-3);
+        // per-node books close: compute + wait + comm = final clock
+        for i in 0..2 {
+            close(
+                run.node_compute[i] + run.node_wait[i] + run.comm_secs,
+                [6e-3, 7e-3][i],
+            );
+        }
+        let factors = run.observed_factors().unwrap();
+        close(factors[0], 1.0);
+        close(factors[1], 3.0);
+        // both render paths mention the run
+        assert!(report.render().contains("skew/n2"));
+        let js = report.to_json().to_string_compact();
+        assert!(js.contains("\"critical_path_secs\""), "{js}");
+    }
+
+    #[test]
+    fn unstreamed_runs_fall_back_to_the_dispatch_summary() {
+        let trace = "bbbb000011112222";
+        let lines: Vec<Json> = [
+            render_line(
+                "run.queued",
+                Some(trace),
+                vec![("run", Json::str("plain")), ("queue_depth", Json::num(1.0))],
+            ),
+            render_line(
+                "run.done",
+                Some(trace),
+                vec![
+                    ("run", Json::str("plain")),
+                    ("modeled_wall_secs", Json::num(0.25)),
+                    ("syncs", Json::num(4.0)),
+                ],
+            ),
+        ]
+        .iter()
+        .map(|l| Json::parse(l).unwrap())
+        .collect();
+        let report = analyze(&lines).unwrap();
+        let run = &report.runs[0];
+        assert!(!run.attributed());
+        close(run.modeled_wall_secs, 0.25);
+        assert!(report.render().contains("attribution unavailable"));
+        // cache hits render as such
+        let hit = Json::parse(&render_line(
+            "run.cache_hit",
+            Some("cccc000011112222"),
+            vec![("run", Json::str("warm")), ("digest", Json::str("d"))],
+        ))
+        .unwrap();
+        let report = analyze(&[hit]).unwrap();
+        assert!(report.runs[0].from_cache);
+        assert!(report.render().contains("answered from cache"));
+    }
+
+    #[test]
+    fn emit_cluster_round_trips_through_the_config_parser() {
+        let mut lines = synthetic_run("a", "aaaa000011112222", Some("node"));
+        lines.extend(synthetic_run("b", "dddd000011112222", None));
+        let report = analyze(&lines).unwrap();
+        let block = report.emit_cluster().unwrap();
+        assert!(block.starts_with("[cluster]\n"), "{block}");
+        assert!(block.contains("factors = [1.0000, 3.0000]"), "{block}");
+        // and the printed block really is accepted by the config layer
+        let doc = crate::config::toml::TomlDoc::parse(&block).unwrap();
+        let mut cfg = crate::config::ExperimentConfig::default();
+        cfg.nodes = 2;
+        cfg.apply_doc(&doc).unwrap();
+        assert_eq!(cfg.cluster.factors, vec![1.0, 3.0]);
+        let model = crate::netsim::cluster::ClusterModel::from_config(
+            &cfg.cluster,
+            &cfg.net,
+            2,
+            1,
+            0,
+        )
+        .unwrap();
+        assert_eq!(model.factors, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn emit_cluster_without_streamed_events_is_a_clear_error() {
+        let line = Json::parse(&render_line(
+            "run.done",
+            Some("eeee000011112222"),
+            vec![("run", Json::str("x")), ("modeled_wall_secs", Json::num(1.0))],
+        ))
+        .unwrap();
+        let err = analyze(&[line]).unwrap().emit_cluster().unwrap_err();
+        assert!(format!("{err:#}").contains("streamed"), "{err:#}");
+    }
+}

@@ -1087,6 +1087,165 @@ fn trace_id_follows_a_remote_run_across_journal_agent_and_cache() {
 }
 
 #[test]
+fn streamed_events_carry_one_trace_across_all_four_legs() {
+    use adpsgd::util::json::Json;
+    let dir = tmpdir("stream_legs");
+    let base = quick_base();
+
+    // follow one run: driver journal → worker child → (remote agent) →
+    // merged journal line tagged with its origin.  First the stdio leg:
+    // subprocess children render the observer lines themselves
+    // (StreamObserver) and the driver merges them with origin "node".
+    let sub_path = dir.join("sub.campaign.jsonl");
+    three_run_campaign(&base)
+        .execute(&DispatchOptions {
+            jobs: Some(2),
+            workers: WorkerKind::Subprocess,
+            worker_exe: Some(worker_exe()),
+            cache_dir: None,
+            journal: Some(adpsgd::obs::Journal::create(&sub_path).unwrap()),
+            ..DispatchOptions::default()
+        })
+        .expect("journaled subprocess campaign");
+    let lines = adpsgd::obs::journal::read_all(&sub_path).expect("merged journal parses");
+    let ev = |l: &Json| l.get("event").and_then(Json::as_str).unwrap_or("").to_string();
+    let origin = |l: &Json| l.get("origin").and_then(Json::as_str).map(str::to_string);
+    let trace_of = |l: &Json| l.get("trace").and_then(Json::as_str).unwrap().to_string();
+
+    // leg 1: the driver's own lifecycle line, no origin
+    let queued = lines
+        .iter()
+        .find(|l| ev(l) == "run.queued")
+        .expect("driver journals run.queued");
+    assert_eq!(origin(queued), None, "driver-side lines carry no origin");
+    let trace = trace_of(queued);
+    // legs 2+4: the worker child rendered typed coordinator events for
+    // the SAME trace, and they merged back tagged origin "node"
+    for event in ["run.sync", "run.end"] {
+        let streamed = lines
+            .iter()
+            .find(|l| ev(l) == event && trace_of(l) == trace)
+            .unwrap_or_else(|| panic!("{event} must be streamed for trace {trace}"));
+        assert_eq!(origin(streamed).as_deref(), Some("node"), "{event}");
+    }
+    // the driver's terminal line closes the same trace, unmerged
+    let done = lines
+        .iter()
+        .find(|l| ev(l) == "run.done" && trace_of(l) == trace)
+        .expect("run.done under the same trace");
+    assert_eq!(origin(done), None);
+
+    // leg 3: over TCP — a loopback agent relays its worker child's
+    // events interleaved with heartbeats; merged origin is the agent
+    let addr = spawn_agent(2, None, None);
+    let rem_path = dir.join("rem.campaign.jsonl");
+    three_run_campaign(&base)
+        .execute(&DispatchOptions {
+            workers: WorkerKind::Remote,
+            remote: vec![addr.clone()],
+            cache_dir: None,
+            journal: Some(adpsgd::obs::Journal::create(&rem_path).unwrap()),
+            ..DispatchOptions::default()
+        })
+        .expect("journaled remote campaign");
+    let lines = adpsgd::obs::journal::read_all(&rem_path).unwrap();
+    let start = lines
+        .iter()
+        .find(|l| {
+            ev(l) == "run.start"
+                && l.get("slot").and_then(Json::as_str).is_some_and(|s| s.starts_with("remote:"))
+        })
+        .expect("a remote run.start must be journaled");
+    let trace = trace_of(start);
+    let agent_origin = format!("agent:{addr}");
+    for event in ["run.sync", "run.end"] {
+        let streamed = lines
+            .iter()
+            .find(|l| ev(l) == event && trace_of(l) == trace)
+            .unwrap_or_else(|| panic!("{event} must be relayed for trace {trace}"));
+        assert_eq!(origin(streamed).as_deref(), Some(agent_origin.as_str()), "{event}");
+    }
+
+    // and the merged journal is exactly what `adpsgd trace` consumes:
+    // every run reconstructs with a full per-node attribution whose
+    // books close against the run.done wall clock
+    let report = adpsgd::obs::trace::analyze_file(&rem_path).expect("trace analysis");
+    assert_eq!(report.runs.len(), 3);
+    for run in &report.runs {
+        assert!(run.attributed(), "{}: needs streamed run.sync/run.end", run.label);
+        assert_eq!(run.nodes, base.nodes);
+        assert_eq!(run.origins, vec![agent_origin.clone()]);
+        let done = lines
+            .iter()
+            .find(|l| ev(l) == "run.done" && trace_of(l) == run.trace.clone().unwrap())
+            .unwrap();
+        let wall = done.get("modeled_wall_secs").and_then(Json::as_f64).unwrap();
+        assert!(
+            (run.modeled_wall_secs - wall).abs() < 1e-9,
+            "{}: reconstructed wall {} vs dispatched {wall}",
+            run.label,
+            run.modeled_wall_secs
+        );
+    }
+    // the harvested skew block round-trips through the config parser
+    let block = report.emit_cluster().expect("emit-cluster");
+    assert!(block.starts_with("[cluster]\nfactors = ["), "{block}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn event_streaming_never_changes_the_stable_summary() {
+    use adpsgd::util::json::Json;
+    let dir = tmpdir("stream_onoff");
+    let base = quick_base();
+    let agent_addr = spawn_agent(2, None, None);
+    // property: for every executor the stable summary is byte-identical
+    // with event streaming on or off — streaming is a pure observer
+    let execute = |tag: &str, workers: WorkerKind, stream: bool| {
+        let journal_path = dir.join(format!("{tag}.campaign.jsonl"));
+        let report = three_run_campaign(&base)
+            .execute(&DispatchOptions {
+                jobs: Some(2),
+                workers,
+                worker_exe: matches!(workers, WorkerKind::Subprocess)
+                    .then(worker_exe),
+                remote: match workers {
+                    WorkerKind::Remote => vec![agent_addr.clone()],
+                    _ => vec![],
+                },
+                cache_dir: None,
+                journal: Some(adpsgd::obs::Journal::create(&journal_path).unwrap()),
+                stream_events: stream,
+                ..DispatchOptions::default()
+            })
+            .unwrap_or_else(|e| panic!("{tag}: {e:#}"));
+        let streamed = adpsgd::obs::journal::read_all(&journal_path)
+            .unwrap()
+            .iter()
+            .any(|l| l.get("event").and_then(Json::as_str) == Some("run.sync"));
+        (report.to_json_stable().to_string_compact(), streamed)
+    };
+    let mut summaries = Vec::new();
+    for (tag, workers) in [
+        ("thread", WorkerKind::Thread),
+        ("sub", WorkerKind::Subprocess),
+        ("remote", WorkerKind::Remote),
+    ] {
+        let (on, on_streamed) = execute(&format!("{tag}_on"), workers, true);
+        let (off, off_streamed) = execute(&format!("{tag}_off"), workers, false);
+        assert_eq!(on, off, "{tag}: streaming must not change the stable summary");
+        assert!(on_streamed, "{tag}: typed events must reach the journal when on");
+        assert!(!off_streamed, "{tag}: no typed events when streaming is off");
+        summaries.push(on);
+    }
+    assert!(
+        summaries.windows(2).all(|w| w[0] == w[1]),
+        "every executor must produce one identical stable summary"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn fleet_member_joining_late_is_discovered_and_serves_the_campaign() {
     use adpsgd::dispatch::Registry;
     let registry = Registry::spawn("127.0.0.1:0").expect("registry binds").to_string();
@@ -1220,7 +1379,8 @@ fn cancel_frame_kills_the_orphaned_run_in_the_agents_worker_child() {
     cfg.iters = 2_000_000;
     cfg.eval_every = 1_000_000;
     cfg.variance_every = 0;
-    write_frame(&mut writer, &Frame::RunRequest { id: 7, cfg, trace: None }).unwrap();
+    write_frame(&mut writer, &Frame::RunRequest { id: 7, cfg, trace: None, stream: false })
+        .unwrap();
 
     // the first heartbeat proves the child is training; then cancel
     loop {
